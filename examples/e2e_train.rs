@@ -1,0 +1,91 @@
+//! End-to-end driver (the DESIGN.md validation run): pretrain the ~100M
+//! parameter `opt-base` model on the synthetic corpus with the FO substrate,
+//! logging the LM loss curve, then ZO fine-tune it on a downstream task and
+//! evaluate — proving all three layers (Pallas kernel, JAX model, Rust
+//! coordinator) compose on a real workload.
+//!
+//! ```bash
+//! cd python && python -m compile.aot --sizes opt-base   # once (~minutes)
+//! cargo run --release --example e2e_train [pretrain_steps] [zo_steps]
+//! ```
+//!
+//! Defaults (300 pretrain + 300 ZO steps) take tens of minutes on CPU; the
+//! recorded run lives in EXPERIMENTS.md §E2E.
+
+use anyhow::{Context, Result};
+use lezo::config::{Method, RunConfig};
+use lezo::coordinator::{trainer, Trainer};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let pretrain_steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(300);
+    let zo_steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(300);
+    let dir = Path::new("artifacts/opt-base");
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "opt-base artifacts missing: cd python && python -m compile.aot --sizes opt-base"
+    );
+
+    // --- Phase 1: pretraining (~100M params, FO-Adam, synthetic corpus) ----
+    let m = lezo::model::Manifest::load(dir)?;
+    println!(
+        "opt-base: {} params, {} layers, d_model {}",
+        m.param_count, m.n_layers, m.d_model
+    );
+    if dir.join("pretrained.ckpt").exists() {
+        println!("pretrained.ckpt exists — skipping phase 1");
+    } else {
+        println!("\n== phase 1: pretraining for {pretrain_steps} steps ==");
+        let (first, last) = trainer::pretrain(dir, pretrain_steps, 6e-4, 0, 20)
+            .context("pretraining opt-base")?;
+        println!("LM loss: {first:.3} -> {last:.3}");
+        anyhow::ensure!(last < first, "pretraining must reduce LM loss");
+    }
+
+    // --- Phase 2: ZO fine-tuning on SST-2-like, LeZO vs MeZO ---------------
+    println!("\n== phase 2: ZO fine-tuning ({zo_steps} steps each) ==");
+    let mut cfg = RunConfig::default();
+    cfg.model = "opt-base".into();
+    cfg.task = "sst2".into();
+    cfg.steps = zo_steps;
+    cfg.eval_every = (zo_steps / 4).max(1);
+    cfg.eval_examples = 50;
+    cfg.mu = 1e-3;
+
+    let mut mezo = cfg.clone();
+    mezo.method = Method::Mezo;
+    mezo.lr = 5e-5;
+    let rm = Trainer::new(mezo).run()?;
+
+    let mut lezo = cfg.clone();
+    lezo.method = Method::Lezo;
+    lezo.drop_layers = 9; // 75% of opt-base's 12 blocks
+    lezo.lr = 1.25e-4;
+    let rl = Trainer::new(lezo).run()?;
+
+    println!("\n== results ==");
+    println!("{:<10}{:>10}{:>12}{:>14}", "method", "best acc", "ms/step", "non-forward");
+    for (name, r) in [("MeZO", &rm), ("LeZO", &rl)] {
+        println!(
+            "{:<10}{:>9.1}%{:>12.0}{:>13.0}%",
+            name,
+            100.0 * r.best_metric,
+            r.per_step_ms(),
+            100.0 * r.stage_times.non_forward_fraction()
+        );
+    }
+    println!(
+        "\ncomputation speedup LeZO/MeZO: {:.2}x",
+        rm.per_step_ms() / rl.per_step_ms()
+    );
+    println!("\nloss curves (first/last 5 steps):");
+    for (name, r) in [("MeZO", &rm), ("LeZO", &rl)] {
+        let n = r.losses.len();
+        let head: Vec<String> = r.losses.iter().take(5).map(|l| format!("{l:.3}")).collect();
+        let tail: Vec<String> =
+            r.losses.iter().skip(n.saturating_sub(5)).map(|l| format!("{l:.3}")).collect();
+        println!("  {name}: {} ... {}", head.join(" "), tail.join(" "));
+    }
+    Ok(())
+}

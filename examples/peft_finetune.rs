@@ -1,0 +1,72 @@
+//! ZO + PEFT (the paper's Table 4): fine-tune only LoRA adapters or prefix
+//! KV positions with the ZO optimizer, with LeZO's layer-wise sparsity over
+//! the per-block adapter units.
+//!
+//! ```bash
+//! cargo run --release --example peft_finetune [lora|prefix] [steps]
+//! ```
+
+use anyhow::Result;
+use lezo::config::{Method, RunConfig};
+use lezo::coordinator::Trainer;
+use lezo::model::Manifest;
+use lezo::peft::PeftMode;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mode: PeftMode = args.first().map(|s| s.as_str()).unwrap_or("lora").parse()?;
+    let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(600);
+
+    let model = "opt-micro";
+    let manifest = Manifest::load(std::path::Path::new(&format!("artifacts/{model}")))?;
+    let unit = match mode {
+        PeftMode::Lora => manifest.lora_unit_len.expect("re-run make artifacts for PEFT"),
+        PeftMode::Prefix => manifest.prefix_unit_len.expect("re-run make artifacts for PEFT"),
+        PeftMode::Full => unreachable!(),
+    };
+    println!(
+        "{model} + {mode}: {} tunable params ({} per block x {} blocks) vs {} total — {:.2}% of the model",
+        unit * manifest.n_layers,
+        unit,
+        manifest.n_layers,
+        manifest.param_count,
+        100.0 * (unit * manifest.n_layers) as f64 / manifest.param_count as f64
+    );
+
+    let mut cfg = RunConfig::default();
+    cfg.model = model.into();
+    cfg.task = "sst2".into();
+    cfg.peft = mode;
+    cfg.steps = steps;
+    cfg.eval_every = (steps / 4).max(1);
+    cfg.eval_examples = 100;
+    // Table-5 PEFT scales: much larger lr/mu than full-parameter ZO
+    (cfg.lr, cfg.mu) = match mode {
+        PeftMode::Lora => (5e-3, 1e-2),
+        PeftMode::Prefix => (1e-2, 1e-1),
+        PeftMode::Full => unreachable!(),
+    };
+
+    let mut mezo = cfg.clone();
+    mezo.method = Method::Mezo;
+    println!("\n== MeZO ({mode}) ==");
+    let rm = Trainer::new(mezo).run()?;
+
+    let mut lezo = cfg.clone();
+    lezo.method = Method::Lezo;
+    lezo.drop_layers = manifest.n_layers / 2; // Table 4: 50% for LoRA
+    lezo.lr = cfg.lr * 2.0;
+    println!("\n== LeZO ({mode}, drop {}/{}) ==", lezo.drop_layers, manifest.n_layers);
+    let rl = Trainer::new(lezo).run()?;
+
+    println!("\n{:<22}{:>10}{:>12}", "", "best acc", "ms/step");
+    for (name, r) in [("MeZO", &rm), ("LeZO", &rl)] {
+        println!("{:<22}{:>9.1}%{:>12.1}", name, 100.0 * r.best_metric, r.per_step_ms());
+    }
+    println!(
+        "\nZO memory = base params + adapters only; adapters are {:.2}% of the model,\n\
+         so perturb/update cost is negligible and the forward pass dominates.",
+        100.0 * (unit * manifest.n_layers) as f64 / manifest.param_count as f64
+    );
+    Ok(())
+}

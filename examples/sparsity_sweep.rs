@@ -1,0 +1,54 @@
+//! Sparsity sweep: how the dropout number (the paper's core knob) trades
+//! per-step cost against accuracy — a miniature of Figs. 3 and 4.
+//!
+//! ```bash
+//! cargo run --release --example sparsity_sweep [model] [steps]
+//! ```
+
+use anyhow::Result;
+use lezo::config::{Method, RunConfig};
+use lezo::coordinator::Trainer;
+use lezo::model::Manifest;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().cloned().unwrap_or_else(|| "opt-micro".into());
+    let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(400);
+
+    let manifest = Manifest::load(std::path::Path::new(&format!("artifacts/{model}")))?;
+    let nl = manifest.n_layers;
+    println!("{model}: {} params, {nl} blocks, sweeping drop = 0..={nl}", manifest.param_count);
+    println!(
+        "\n{:>6} {:>8} {:>10} {:>10} {:>10} {:>8}",
+        "drop", "rho", "active%", "ms/step", "saved%", "best%"
+    );
+
+    let mut base_ms = 0.0f64;
+    for drop in 0..=nl {
+        let mut cfg = RunConfig::default();
+        cfg.model = model.clone();
+        cfg.task = "sst2".into();
+        cfg.method = if drop == 0 { Method::Mezo } else { Method::Lezo };
+        cfg.drop_layers = drop;
+        cfg.steps = steps;
+        cfg.eval_every = steps;
+        cfg.eval_examples = 60;
+        // larger LR under heavier sparsity (Fig. 3's diagonal)
+        cfg.lr = 1e-4 * (1.0 + 2.0 * drop as f64 / nl as f64);
+        let r = Trainer::new(cfg).run()?;
+        if drop == 0 {
+            base_ms = r.per_step_ms();
+        }
+        println!(
+            "{:>6} {:>8.2} {:>9.0}% {:>10.1} {:>9.0}% {:>8.1}",
+            format!("{drop}/{nl}"),
+            drop as f64 / nl as f64,
+            100.0 * r.active_param_fraction,
+            r.per_step_ms(),
+            100.0 * (1.0 - r.per_step_ms() / base_ms),
+            100.0 * r.best_metric,
+        );
+    }
+    println!("\nthe last row tunes only embedding+head — the paper's rho=1 collapse.");
+    Ok(())
+}

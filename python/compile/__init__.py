@@ -1,0 +1,4 @@
+"""Build-time compile path: JAX model + Pallas kernels -> AOT HLO artifacts.
+
+Never imported at runtime; the rust coordinator only sees artifacts/*.hlo.txt.
+"""

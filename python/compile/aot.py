@@ -1,0 +1,229 @@
+"""AOT exporter: lower every executable the rust runtime needs to HLO text.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(proto.id() <= INT_MAX); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Per model size this writes into artifacts/<size>/:
+    zo_axpy_<len>.hlo.txt            one per distinct layer-unit length
+    forward_loss_s<S>.hlo.txt        scalar ZO objective,    per seq bucket
+    example_losses_s<S>.hlo.txt      eval option scoring,    per seq bucket
+    predict_s<S>.hlo.txt             greedy decode,          per seq bucket
+    forward_backward_s<S>.hlo.txt    FO substrate (tuple),   per seq bucket
+    params_init.bin                  concatenated f32 init for all units
+    manifest.json                    everything rust needs to wire it up
+
+Python runs once at build time; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import peft as P
+from .configs import SIZES, ModelConfig, param_count
+from .kernels.zo_axpy import zo_axpy
+from .kernels.zo_axpy_masked import zo_axpy_masked
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_size(cfg: ModelConfig, out_dir: str, use_pallas: bool, verbose: bool = True,
+                with_peft: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    lens = M.unit_lens(cfg)
+    names = [n for n, _ in M.unit_specs(cfg)]
+    k = len(lens)
+    f32, i32 = jnp.float32, jnp.int32
+    unit_specs = [_spec((n,), f32) for n in lens]
+    files: dict[str, str] = {}
+
+    def emit(fname: str, lowered, return_tuple: bool):
+        text = to_hlo_text(lowered, return_tuple)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        files[fname.removesuffix(".hlo.txt")] = fname
+        if verbose:
+            print(f"  wrote {fname} ({len(text) // 1024} KiB)")
+
+    # --- L1 kernel: one zo_axpy executable per distinct unit length --------
+    axpy_lens = sorted(set(lens))
+    if with_peft:
+        axpy_lens = sorted(set(axpy_lens + [P.lora_unit_len(cfg), P.prefix_unit_len(cfg)]))
+    for n in axpy_lens:
+        low = jax.jit(lambda p, s, c: zo_axpy(p, s, c)).lower(
+            _spec((n,), f32), _spec((), i32), _spec((), f32)
+        )
+        emit(f"zo_axpy_{n}.hlo.txt", low, return_tuple=False)
+        # Sparse-MeZO comparison kernel (element-wise magnitude mask)
+        low_m = jax.jit(lambda p, r, t, s, c: zo_axpy_masked(p, r, t, s, c)).lower(
+            _spec((n,), f32), _spec((n,), f32), _spec((), f32), _spec((), i32), _spec((), f32)
+        )
+        emit(f"zo_axpy_masked_{n}.hlo.txt", low_m, return_tuple=False)
+
+    # --- L2 model executables, one per sequence bucket ---------------------
+    for s in cfg.seq_buckets:
+        bt, be = cfg.train_batch, cfg.eval_batch
+        tok_t = _spec((bt, s), i32)
+        tgt_t = _spec((bt, s), i32)
+        msk_t = _spec((bt, s), f32)
+        tok_e = _spec((be, s), i32)
+        tgt_e = _spec((be, s), i32)
+        msk_e = _spec((be, s), f32)
+
+        def loss_fn(*args):
+            return M.mean_loss(list(args[:k]), args[k], args[k + 1], args[k + 2], cfg, use_pallas)
+
+        emit(
+            f"forward_loss_s{s}.hlo.txt",
+            jax.jit(loss_fn).lower(*unit_specs, tok_t, tgt_t, msk_t),
+            return_tuple=False,
+        )
+
+        def exloss_fn(*args):
+            return M.example_losses(
+                list(args[:k]), args[k], args[k + 1], args[k + 2], cfg, use_pallas
+            )
+
+        emit(
+            f"example_losses_s{s}.hlo.txt",
+            jax.jit(exloss_fn).lower(*unit_specs, tok_e, tgt_e, msk_e),
+            return_tuple=False,
+        )
+
+        def predict_fn(*args):
+            return M.predict_tokens(list(args[:k]), args[k], cfg, use_pallas)
+
+        emit(
+            f"predict_s{s}.hlo.txt",
+            jax.jit(predict_fn).lower(*unit_specs, tok_e),
+            return_tuple=False,
+        )
+
+        def fb_fn(*args):
+            # ref attention path: leaner reverse-mode HLO (see model.loss_and_grads)
+            return M.loss_and_grads(list(args[:k]), args[k], args[k + 1], args[k + 2], cfg)
+
+        emit(
+            f"forward_backward_s{s}.hlo.txt",
+            jax.jit(fb_fn).lower(*unit_specs, tok_t, tgt_t, msk_t),
+            return_tuple=True,
+        )
+
+        # --- PEFT executables (Table 4): adapter units follow base units ---
+        if with_peft:
+            for mode, ulen in (("lora", P.lora_unit_len(cfg)), ("prefix", P.prefix_unit_len(cfg))):
+                peft_specs = [_spec((ulen,), f32) for _ in range(cfg.n_layers)]
+                kp = k + cfg.n_layers
+
+                def peft_loss(*args, _mode=mode):
+                    return P.mean_loss_peft(
+                        list(args[:k]), list(args[k:kp]),
+                        args[kp], args[kp + 1], args[kp + 2], cfg, _mode,
+                    )
+
+                emit(
+                    f"forward_loss_{mode}_s{s}.hlo.txt",
+                    jax.jit(peft_loss).lower(*unit_specs, *peft_specs, tok_t, tgt_t, msk_t),
+                    return_tuple=False,
+                )
+
+                def peft_exloss(*args, _mode=mode):
+                    return P.example_losses_peft(
+                        list(args[:k]), list(args[k:kp]),
+                        args[kp], args[kp + 1], args[kp + 2], cfg, _mode,
+                    )
+
+                emit(
+                    f"example_losses_{mode}_s{s}.hlo.txt",
+                    jax.jit(peft_exloss).lower(*unit_specs, *peft_specs, tok_e, tgt_e, msk_e),
+                    return_tuple=False,
+                )
+
+                def peft_predict(*args, _mode=mode):
+                    return P.predict_tokens_peft(
+                        list(args[:k]), list(args[k:kp]), args[kp], cfg, _mode,
+                    )
+
+                emit(
+                    f"predict_{mode}_s{s}.hlo.txt",
+                    jax.jit(peft_predict).lower(*unit_specs, *peft_specs, tok_e),
+                    return_tuple=False,
+                )
+
+    # --- initial parameters (rust never re-implements init) ----------------
+    units = M.init_units(cfg, seed=0)
+    with open(os.path.join(out_dir, "params_init.bin"), "wb") as f:
+        for u in units:
+            f.write(u.astype("<f4").tobytes())
+
+    manifest = {
+        "name": cfg.name,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "max_seq": cfg.max_seq,
+        "seq_buckets": list(cfg.seq_buckets),
+        "train_batch": cfg.train_batch,
+        "eval_batch": cfg.eval_batch,
+        "unit_names": names,
+        "unit_lens": lens,
+        "axpy_lens": axpy_lens,
+        "param_count": param_count(cfg),
+        "use_pallas_forward": bool(use_pallas),
+        "init_file": "params_init.bin",
+        "files": files,
+    }
+    if with_peft:
+        manifest["lora_unit_len"] = P.lora_unit_len(cfg)
+        manifest["prefix_unit_len"] = P.prefix_unit_len(cfg)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"  manifest.json ({param_count(cfg):,} params, {k} units)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="opt-micro,opt-tiny,opt-small",
+                    help="comma-separated size names (see configs.SIZES), or 'all'")
+    ap.add_argument("--out-root", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--no-peft", action="store_true",
+                    help="skip the Table-4 LoRA/prefix executables")
+    ap.add_argument("--no-pallas-forward", action="store_true",
+                    help="lower the forward pass with the jnp reference ops instead of "
+                         "the Pallas kernels (perf-pass ablation; zo_axpy stays Pallas)")
+    args = ap.parse_args()
+    sizes = list(SIZES) if args.sizes == "all" else args.sizes.split(",")
+    for s in sizes:
+        cfg = SIZES[s]
+        print(f"[aot] exporting {s} -> {args.out_root}/{s}")
+        export_size(cfg, os.path.join(args.out_root, s), use_pallas=not args.no_pallas_forward,
+                    with_peft=not args.no_peft)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Model-size presets, shared by model.py / aot.py / tests.
+
+The sizes stand in for the paper's OPT-1.3b / 13b / 30b family (see
+DESIGN.md substitution table): they scale the transformer-block count so the
+layer-wise sparsity axis (the paper's core knob) stays meaningful, while
+remaining runnable on CPU PJRT.
+
+``seq_buckets`` drive sequence-length bucketing in the rust runtime: one
+forward executable is exported per bucket, and the trainer picks the smallest
+bucket that fits the batch. This is how the fixed-shape XLA world reproduces
+the paper's "shorter inputs -> less forward compute" behaviour (Fig. 6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    max_seq: int
+    seq_buckets: tuple[int, ...]
+    train_batch: int
+    eval_batch: int
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+SIZES: dict[str, ModelConfig] = {
+    # test-scale model: fast enough for cargo-test integration runs
+    "opt-micro": ModelConfig(
+        name="opt-micro", vocab=512, d_model=64, n_layers=4, n_heads=4,
+        max_seq=64, seq_buckets=(16, 32, 64), train_batch=8, eval_batch=16,
+    ),
+    # stands in for OPT-1.3b (Table 2: 11 tasks)
+    "opt-tiny": ModelConfig(
+        name="opt-tiny", vocab=2048, d_model=128, n_layers=6, n_heads=8,
+        max_seq=64, seq_buckets=(16, 32, 64), train_batch=8, eval_batch=16,
+    ),
+    # stands in for OPT-13b (Table 1: the headline grid)
+    "opt-small": ModelConfig(
+        name="opt-small", vocab=4096, d_model=256, n_layers=8, n_heads=8,
+        max_seq=64, seq_buckets=(16, 32, 64), train_batch=8, eval_batch=16,
+    ),
+    # stands in for OPT-30b (Table 3) and the ~100M-param e2e driver
+    "opt-base": ModelConfig(
+        name="opt-base", vocab=16384, d_model=768, n_layers=12, n_heads=12,
+        max_seq=64, seq_buckets=(32, 64), train_batch=4, eval_batch=8,
+    ),
+}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total parameter count (embeddings tied with the LM head, OPT-style)."""
+    d, f = cfg.d_model, cfg.d_ff
+    block = 4 * d * d + 4 * d + 2 * d * f + f + d + 4 * d  # attn + mlp + 2 LN
+    return (cfg.vocab + cfg.max_seq) * d + cfg.n_layers * block + 2 * d

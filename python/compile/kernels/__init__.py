@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for LeZO's compute hot spots.
+
+- zo_axpy: the paper's contribution - fused seeded-Gaussian perturb/update.
+- attention / layernorm: forward-pass hot spots.
+- philox: the counter-based RNG shared by kernel and references.
+"""
+
+from .attention import mha_causal
+from .layernorm import layernorm
+from .philox import gauss_from_index, philox4x32
+from .zo_axpy import zo_axpy
+
+__all__ = ["zo_axpy", "mha_causal", "layernorm", "gauss_from_index", "philox4x32"]

@@ -1,0 +1,88 @@
+"""Causal multi-head attention as a Pallas kernel (flash-attention style).
+
+The forward pass is the other half of a ZO step's cost; this kernel is the
+forward hot spot. Structure follows the flash-attention HBM<->VMEM schedule,
+re-thought for TPU per DESIGN.md:
+
+  grid = (batch*heads, q_blocks); each grid step holds one (Bq, Dh) query
+  tile in VMEM and loops over (Bk, Dh) key/value tiles with an online-softmax
+  accumulator (m, l, acc). The two contractions (q k^T and p v) are MXU-shaped
+  matmuls; on real TPU they would run in bf16 on the systolic array.
+
+interpret=True for CPU PJRT; the same code lowers to Mosaic on real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = np.float32(-1e30)
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int, seq: int, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0] * np.float32(scale)  # [Bq, Dh]
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(ki, carry):
+        m_prev, l_prev, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], ki * block_k, block_k, axis=0)  # [Bk, Dh]
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], ki * block_k, block_k, axis=0)
+        s = q @ k.T  # [Bq, Bk] - MXU contraction
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)  # causal mask
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v  # [Bq, Dh] - MXU contraction
+        return m_new, l_new, acc
+
+    dh = q_ref.shape[-1]
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    # Causality: key blocks strictly after this query block are fully masked,
+    # so the loop stops early (dynamic fori bound lowers to a while loop).
+    last_kb = (qi * block_q + block_q - 1) // block_k + 1
+    m, l, acc = jax.lax.fori_loop(0, last_kb, body, (m0, l0, acc0))
+    o_ref[0] = acc / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def mha_causal(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, block_q: int = 32, block_k: int = 32):
+    """Causal MHA over [BH, S, Dh] tensors (batch and heads pre-merged).
+
+    Returns f32[BH, S, Dh].
+    """
+    bh, seq, dh = q.shape
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    assert seq % block_q == 0 and seq % block_k == 0, (seq, block_q, block_k)
+    scale = 1.0 / float(np.sqrt(dh))
+    kernel = functools.partial(
+        _mha_kernel, block_q=block_q, block_k=block_k, seq=seq, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, seq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def mha_vmem_bytes(seq: int, dh: int, block_q: int = 32, block_k: int = 32) -> int:
+    """VMEM estimate per grid step (perf notes): q tile + full k/v + acc."""
+    return 4 * (block_q * dh + 2 * seq * dh + block_q * block_k + 2 * block_q * dh)

@@ -1,0 +1,44 @@
+"""Row-wise LayerNorm as a Pallas kernel.
+
+Small but on the forward hot path (2 per block + final). Tiled over rows:
+each grid step normalizes a [BLOCK_ROWS, D] tile held in VMEM; gamma/beta
+are broadcast into every step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+EPS = np.float32(1e-5)
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) * jax.lax.rsqrt(var + EPS) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, block_rows: int = 64):
+    """LayerNorm over the last axis of f32[rows, d]."""
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0, (rows, block_rows)
+    return pl.pallas_call(
+        _ln_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)

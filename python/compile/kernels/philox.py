@@ -1,0 +1,120 @@
+"""Counter-based Philox-4x32-10 RNG + Box-Muller, in pure jnp uint32 ops.
+
+This is the numerical core of LeZO's memory trick: the perturbation vector
+``z ~ N(0, I)`` is *regenerated* from ``(seed, element_index)`` instead of
+being stored, so perturb (+mu), flip (-2mu), restore (+mu), and update
+(-eta*g) all see bit-identical ``z`` without any extra memory.
+
+Everything here is plain elementwise uint32/f32 arithmetic so it lowers
+cleanly both inside a Pallas kernel (interpret=True) and in ordinary jitted
+jax code, and it round-trips through HLO text to the rust runtime.
+
+Reference: Salmon et al., "Parallel random numbers: as easy as 1, 2, 3"
+(SC'11). Constants are the canonical Philox-4x32 constants.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Canonical Philox-4x32 round constants.
+PHILOX_M0 = np.uint32(0xD2511F53)
+PHILOX_M1 = np.uint32(0xCD9E8D57)
+PHILOX_W0 = np.uint32(0x9E3779B9)  # golden ratio
+PHILOX_W1 = np.uint32(0xBB67AE85)  # sqrt(3) - 1
+
+# Key word 1 is a domain separator ("LeZO") so the perturbation stream can
+# never collide with any other Philox user keyed on the same seed.
+LEZO_KEY1 = np.uint32(0x4C655A4F)
+
+ROUNDS = 10
+
+
+def _u32(x) -> jnp.ndarray:
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def mulhilo32(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full 32x32 -> 64 bit product as (hi, lo) uint32 words.
+
+    Implemented with 16-bit partial products so it needs no 64-bit integer
+    support (jax defaults to 32-bit ints; XLA CPU handles this fine).
+    All intermediate products fit in uint32: (2^16-1)^2 < 2^32.
+    """
+    a = _u32(a)
+    b = _u32(b)
+    lo = a * b  # wraps mod 2^32, which is exactly the low word
+    ah = a >> np.uint32(16)
+    al = a & np.uint32(0xFFFF)
+    bh = b >> np.uint32(16)
+    bl = b & np.uint32(0xFFFF)
+    mid1 = ah * bl
+    mid2 = al * bh
+    carry = (
+        ((al * bl) >> np.uint32(16))
+        + (mid1 & np.uint32(0xFFFF))
+        + (mid2 & np.uint32(0xFFFF))
+    )
+    hi = ah * bh + (mid1 >> np.uint32(16)) + (mid2 >> np.uint32(16)) + (carry >> np.uint32(16))
+    return hi, lo
+
+
+def philox4x32(
+    c0: jnp.ndarray,
+    c1: jnp.ndarray,
+    c2: jnp.ndarray,
+    c3: jnp.ndarray,
+    k0: jnp.ndarray,
+    k1: jnp.ndarray,
+    rounds: int = ROUNDS,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Philox-4x32 block cipher over counter words c0..c3 with key (k0, k1).
+
+    Vectorized: every argument may be an array; shapes broadcast.
+    Returns four uint32 words of high-quality pseudo-random bits.
+    """
+    c0, c1, c2, c3 = _u32(c0), _u32(c1), _u32(c2), _u32(c3)
+    k0, k1 = _u32(k0), _u32(k1)
+    for _ in range(rounds):
+        hi0, lo0 = mulhilo32(PHILOX_M0, c0)
+        hi1, lo1 = mulhilo32(PHILOX_M1, c2)
+        c0, c1, c2, c3 = hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+        k0 = k0 + PHILOX_W0
+        k1 = k1 + PHILOX_W1
+    return c0, c1, c2, c3
+
+
+def uniform01(bits: jnp.ndarray) -> jnp.ndarray:
+    """Map uint32 bits -> f32 uniform in the *open* interval (0, 1).
+
+    Top 23 bits scaled by 2^-23, plus a 2^-24 offset: every value is exactly
+    representable in f32, the max is 1 - 2^-24 < 1 and the min is 2^-24 > 0,
+    so log(u) stays finite (no rounding-to-1.0 as with a 24-bit mantissa).
+    """
+    return (bits >> np.uint32(9)).astype(jnp.float32) * np.float32(1.0 / (1 << 23)) + np.float32(
+        1.0 / (1 << 24)
+    )
+
+
+def boxmuller(r0: jnp.ndarray, r1: jnp.ndarray) -> jnp.ndarray:
+    """One standard normal per (r0, r1) pair of uint32 words (cosine branch)."""
+    u1 = uniform01(r0)
+    u2 = uniform01(r1)
+    radius = jnp.sqrt(np.float32(-2.0) * jnp.log(u1))
+    theta = np.float32(2.0 * np.pi) * u2
+    return radius * jnp.cos(theta)
+
+
+def gauss_from_index(idx: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """z[i] ~ N(0, 1), a pure function of (seed, i).
+
+    ``idx`` is the *global* element index (uint32) of each parameter inside
+    its layer unit; ``seed`` is the per-(step, layer) seed chosen by the rust
+    coordinator. Counter = (idx, 0, 0, 0), key = (seed, LEZO_KEY1).
+    """
+    idx = _u32(idx)
+    seed = _u32(seed)
+    zero = jnp.zeros_like(idx)
+    r0, r1, _, _ = philox4x32(idx, zero, zero, zero, seed, jnp.broadcast_to(LEZO_KEY1, seed.shape))
+    return boxmuller(r0, r1)

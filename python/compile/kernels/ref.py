@@ -1,0 +1,83 @@
+"""Pure oracles for every kernel, independent of the Pallas implementations.
+
+- Philox / Box-Muller: re-implemented in *numpy* uint64 arithmetic (masked to
+  32 bits), so a bug in the 16-bit-partial-product trick in philox.py cannot
+  hide: the integer streams must match bit-exactly.
+- attention / layernorm / axpy: straightforward jnp math (softmax attention,
+  textbook LN), compared with allclose tolerances.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PHILOX_M0 = np.uint64(0xD2511F53)
+PHILOX_M1 = np.uint64(0xCD9E8D57)
+PHILOX_W0 = np.uint64(0x9E3779B9)
+PHILOX_W1 = np.uint64(0xBB67AE85)
+LEZO_KEY1 = np.uint64(0x4C655A4F)
+MASK32 = np.uint64(0xFFFFFFFF)
+
+
+def philox4x32_np(counter: np.ndarray, key: np.ndarray, rounds: int = 10) -> np.ndarray:
+    """Reference Philox-4x32 on uint64-masked arithmetic.
+
+    counter: uint array [..., 4]; key: uint array [..., 2].
+    Returns uint32 array [..., 4].
+    """
+    c = [counter[..., i].astype(np.uint64) & MASK32 for i in range(4)]
+    k0 = key[..., 0].astype(np.uint64) & MASK32
+    k1 = key[..., 1].astype(np.uint64) & MASK32
+    for _ in range(rounds):
+        prod0 = PHILOX_M0 * c[0]
+        prod1 = PHILOX_M1 * c[2]
+        hi0, lo0 = prod0 >> np.uint64(32), prod0 & MASK32
+        hi1, lo1 = prod1 >> np.uint64(32), prod1 & MASK32
+        c = [hi1 ^ c[1] ^ k0, lo1, hi0 ^ c[3] ^ k1, lo0]
+        k0 = (k0 + PHILOX_W0) & MASK32
+        k1 = (k1 + PHILOX_W1) & MASK32
+    return np.stack([w.astype(np.uint32) for w in c], axis=-1)
+
+
+def gauss_from_index_np(idx: np.ndarray, seed: int) -> np.ndarray:
+    """Reference for philox.gauss_from_index (mirrors its f32 arithmetic)."""
+    idx = np.asarray(idx, dtype=np.uint64) & MASK32
+    counter = np.zeros(idx.shape + (4,), dtype=np.uint64)
+    counter[..., 0] = idx
+    key = np.empty(idx.shape + (2,), dtype=np.uint64)
+    key[..., 0] = np.uint64(seed) & MASK32
+    key[..., 1] = LEZO_KEY1
+    r = philox4x32_np(counter, key)
+    u1 = (r[..., 0] >> np.uint32(9)).astype(np.float32) * np.float32(1.0 / (1 << 23)) + np.float32(
+        1.0 / (1 << 24)
+    )
+    u2 = (r[..., 1] >> np.uint32(9)).astype(np.float32) * np.float32(1.0 / (1 << 23)) + np.float32(
+        1.0 / (1 << 24)
+    )
+    radius = np.sqrt(np.float32(-2.0) * np.log(u1), dtype=np.float32)
+    theta = np.float32(2.0 * np.pi) * u2
+    return (radius * np.cos(theta, dtype=np.float32)).astype(np.float32)
+
+
+def zo_axpy_np(p: np.ndarray, seed: int, coeff: float) -> np.ndarray:
+    """Reference for the fused perturb/update kernel."""
+    idx = np.arange(p.shape[0], dtype=np.uint64)
+    return (p + np.float32(coeff) * gauss_from_index_np(idx, seed)).astype(np.float32)
+
+
+def mha_causal_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Dense causal softmax attention oracle over [BH, S, Dh]."""
+    _, seq, dh = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def layernorm_ref(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + 1e-5) * gamma + beta

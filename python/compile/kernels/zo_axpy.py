@@ -1,0 +1,88 @@
+"""The LeZO perturb/update Pallas kernel: fused seeded-Gaussian axpy.
+
+    out[i] = p[i] + coeff * z(seed, i),   z(seed, i) ~ N(0, 1)
+
+One kernel serves all four uses in Algorithm 1 of the paper, because the
+Gaussian stream is a pure function of (seed, i):
+
+    perturb   coeff = +mu
+    flip      coeff = -2 mu
+    restore   coeff = +mu
+    update    coeff = -eta * projected_grad
+
+TPU mapping (see DESIGN.md "Hardware adaptation"): the flat parameter vector
+is tiled into BLOCK-sized VMEM blocks via BlockSpec; each grid step streams
+one block HBM->VMEM, regenerates its slice of the Philox stream from the
+global element index (no inter-block state), and writes one block back.
+Traffic is 1 load + 1 store per element - bandwidth-bound, the arithmetic
+(Philox + Box-Muller, ~60 flops/elem) hides under the DMA on real hardware.
+
+We lower with interpret=True (CPU PJRT cannot execute Mosaic custom-calls);
+interpret mode emits plain vectorized HLO for the same computation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .philox import gauss_from_index
+
+# Default block: 64K f32 = 256 KiB in, 256 KiB out -> comfortably inside a
+# 16 MiB VMEM even with double buffering. Swept in the perf pass.
+DEFAULT_BLOCK = 65536
+
+
+def _zo_axpy_kernel(seed_ref, coeff_ref, p_ref, o_ref, *, block: int):
+    """One grid step: perturb one BLOCK-slice of the parameter vector."""
+    start = pl.program_id(0) * block
+    # Global element indices for this block; uint32 arithmetic is exact for
+    # any realistic layer-unit size (< 2^32 elements).
+    idx = jnp.uint32(start) + jnp.arange(block, dtype=jnp.uint32)
+    z = gauss_from_index(idx, seed_ref[0])
+    o_ref[...] = p_ref[...] + coeff_ref[0] * z
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def zo_axpy(p: jnp.ndarray, seed: jnp.ndarray, coeff: jnp.ndarray, block: int = DEFAULT_BLOCK):
+    """Fused seeded-Gaussian axpy over a flat f32 parameter vector.
+
+    Args:
+      p:     f32[n] flat parameter (layer-unit) vector.
+      seed:  i32 scalar - per-(step, layer) seed from the coordinator.
+      coeff: f32 scalar - +mu / -2mu / +mu / -eta*g.
+      block: VMEM tile size (elements).
+
+    Returns: f32[n] = p + coeff * z(seed).
+    """
+    n = p.shape[0]
+    block = min(block, max(256, 1 << (n - 1).bit_length()))  # no oversized tiles
+    n_pad = ((n + block - 1) // block) * block
+    p_pad = jnp.pad(p, (0, n_pad - n)) if n_pad != n else p
+    seed_arr = jnp.reshape(seed, (1,)).astype(jnp.int32)
+    coeff_arr = jnp.reshape(coeff, (1,)).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_zo_axpy_kernel, block=block),
+        grid=(n_pad // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # seed: broadcast
+            pl.BlockSpec((1,), lambda i: (0,)),  # coeff: broadcast
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=True,
+    )(seed_arr, coeff_arr, p_pad)
+    return out[:n] if n_pad != n else out
+
+
+def zo_axpy_vmem_bytes(block: int = DEFAULT_BLOCK) -> int:
+    """Estimated VMEM footprint of one grid step (for DESIGN.md S8 perf notes)."""
+    in_block = block * 4  # p tile
+    out_block = block * 4  # o tile
+    scratch = block * 4 * 6  # philox words + boxmuller temps (upper bound)
+    return 2 * (in_block + out_block) + scratch  # x2: double buffering

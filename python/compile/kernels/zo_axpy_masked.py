@@ -1,0 +1,81 @@
+"""Masked seeded-Gaussian axpy — the Sparse-MeZO (Liu et al., 2024) baseline.
+
+    out[i] = p[i] + coeff * z(seed, i) * [ |p_ref[i]| <= tau ]
+
+Sparse-MeZO perturbs/updates only *small-magnitude* parameters. Unlike LeZO's
+structural layer skip, the mask is element-wise: every element is still
+loaded and a predicate evaluated, so the perturb/update *memory traffic does
+not shrink* — 2 loads + 1 store per element versus LeZO skipping whole units.
+That asymmetry is the paper's criticism, and exporting this kernel lets the
+bench measure it rather than assert it.
+
+``p_ref`` is the unperturbed parameter vector at step start (the coordinator
+passes the pre-step buffer), so the mask is stable across the perturb / flip
+/ restore / update phases of a step — required for the restore identity. The
+threshold ``tau`` is computed per unit by the coordinator (a magnitude
+quantile — Sparse-MeZO's ranking step, whose cost the bench also reports).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .philox import gauss_from_index
+from .zo_axpy import DEFAULT_BLOCK
+
+
+def _masked_kernel(seed_ref, coeff_ref, tau_ref, p_ref, ref_ref, o_ref, *, block: int):
+    start = pl.program_id(0) * block
+    idx = jnp.uint32(start) + jnp.arange(block, dtype=jnp.uint32)
+    z = gauss_from_index(idx, seed_ref[0])
+    mask = (jnp.abs(ref_ref[...]) <= tau_ref[0]).astype(jnp.float32)
+    o_ref[...] = p_ref[...] + coeff_ref[0] * z * mask
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def zo_axpy_masked(
+    p: jnp.ndarray,
+    p_ref: jnp.ndarray,
+    tau: jnp.ndarray,
+    seed: jnp.ndarray,
+    coeff: jnp.ndarray,
+    block: int = DEFAULT_BLOCK,
+):
+    """out = p + coeff * z(seed) * (|p_ref| <= tau), elementwise."""
+    n = p.shape[0]
+    block = min(block, max(256, 1 << (n - 1).bit_length()))
+    n_pad = ((n + block - 1) // block) * block
+    pad = lambda x: jnp.pad(x, (0, n_pad - n)) if n_pad != n else x
+    seed_arr = jnp.reshape(seed, (1,)).astype(jnp.int32)
+    coeff_arr = jnp.reshape(coeff, (1,)).astype(jnp.float32)
+    tau_arr = jnp.reshape(tau, (1,)).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_masked_kernel, block=block),
+        grid=(n_pad // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # seed: broadcast
+            pl.BlockSpec((1,), lambda i: (0,)),  # coeff: broadcast
+            pl.BlockSpec((1,), lambda i: (0,)),  # tau: broadcast
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(seed_arr, coeff_arr, tau_arr, pad(p), pad(p_ref))
+    return out[:n]
+
+
+def zo_axpy_masked_np(p, p_ref, tau, seed, coeff):
+    """Pure-numpy oracle (mirrors ref.zo_axpy_np)."""
+    import numpy as np
+
+    from .ref import gauss_from_index_np
+
+    z = gauss_from_index_np(np.arange(p.shape[0], dtype=np.uint32), seed)
+    mask = (np.abs(p_ref) <= tau).astype(np.float32)
+    return (p + coeff * z * mask).astype(np.float32)

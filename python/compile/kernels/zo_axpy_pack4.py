@@ -1,0 +1,108 @@
+"""pack4 variant of the zo_axpy kernel — the §Perf L1 iteration.
+
+``zo_axpy`` (the baseline) runs one full Philox-4x32-10 block cipher per
+element and keeps one Box-Muller normal from it, discarding half the entropy
+(words r2, r3) and the sine branch. Philox yields 4 words = 2 Box-Muller
+pairs = 4 normals (cos+sin per pair), so the cipher — ~80% of the kernel's
+arithmetic — can be amortized over 4 elements:
+
+    group g = i // 4 runs Philox once on counter (g, 0, 0, 0);
+    element i gets normal  [cos(p01), sin(p01), cos(p23), sin(p23)][i % 4].
+
+The stream is still a pure function of (seed, i) — all four phases of
+Algorithm 1 regenerate identical z — it is simply a *different* stream than
+the baseline kernel's, so the two variants must not be mixed within one
+fine-tuning run (the aot exporter emits one or the other for all units).
+
+Measured on CPU PJRT this cuts the perturb stage by ~3x (EXPERIMENTS.md
+§Perf); on TPU the kernel is DMA-bound so the win is headroom, not latency.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .philox import LEZO_KEY1, philox4x32, uniform01
+from .zo_axpy import DEFAULT_BLOCK
+
+
+def _gauss4_from_group(group: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """f32[n, 4] standard normals for n counter groups (one Philox each)."""
+    zero = jnp.zeros_like(group)
+    r0, r1, r2, r3 = philox4x32(
+        group, zero, zero, zero, seed, jnp.broadcast_to(LEZO_KEY1, seed.shape)
+    )
+
+    def bm_pair(a, b):
+        u1 = uniform01(a)
+        u2 = uniform01(b)
+        radius = jnp.sqrt(np.float32(-2.0) * jnp.log(u1))
+        theta = np.float32(2.0 * np.pi) * u2
+        return radius * jnp.cos(theta), radius * jnp.sin(theta)
+
+    n0, n1 = bm_pair(r0, r1)
+    n2, n3 = bm_pair(r2, r3)
+    return jnp.stack([n0, n1, n2, n3], axis=-1)
+
+
+def gauss_from_index_pack4(idx: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """z[i] ~ N(0,1) as a pure function of (seed, i), 4 elements per cipher.
+
+    ``idx`` must be a contiguous, 4-aligned range for the packed layout to be
+    exact (the Pallas grid guarantees this; the generic fallback handles any
+    index vector at 4x cost).
+    """
+    idx = jnp.asarray(idx, dtype=jnp.uint32)
+    group = idx >> np.uint32(2)
+    slot = (idx & np.uint32(3)).astype(jnp.int32)
+    quad = _gauss4_from_group(group, seed)
+    return jnp.take_along_axis(quad, slot[:, None], axis=-1)[:, 0]
+
+
+def _pack4_kernel(seed_ref, coeff_ref, p_ref, o_ref, *, block: int):
+    start = pl.program_id(0) * block
+    # block is a multiple of 4: run block//4 ciphers, get (block//4, 4)
+    groups = (jnp.uint32(start) >> np.uint32(2)) + jnp.arange(
+        block // 4, dtype=jnp.uint32
+    )
+    z = _gauss4_from_group(groups, seed_ref[0]).reshape(block)
+    o_ref[...] = p_ref[...] + coeff_ref[0] * z
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def zo_axpy_pack4(
+    p: jnp.ndarray, seed: jnp.ndarray, coeff: jnp.ndarray, block: int = DEFAULT_BLOCK
+):
+    """out = p + coeff * z_pack4(seed); 4 normals per Philox call."""
+    n = p.shape[0]
+    block = min(block, max(256, 1 << (n - 1).bit_length()))
+    block = max(4, (block // 4) * 4)
+    n_pad = ((n + block - 1) // block) * block
+    p_pad = jnp.pad(p, (0, n_pad - n)) if n_pad != n else p
+    seed_arr = jnp.reshape(seed, (1,)).astype(jnp.int32)
+    coeff_arr = jnp.reshape(coeff, (1,)).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_pack4_kernel, block=block),
+        grid=(n_pad // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # seed: broadcast
+            pl.BlockSpec((1,), lambda i: (0,)),  # coeff: broadcast
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=True,
+    )(seed_arr, coeff_arr, p_pad)
+    return out[:n]
+
+
+def zo_axpy_pack4_np(p: np.ndarray, seed: int, coeff: float) -> np.ndarray:
+    """Pure-numpy oracle for the pack4 stream."""
+    idx = np.arange(p.shape[0], dtype=np.uint32)
+    z = np.asarray(gauss_from_index_pack4(jnp.asarray(idx), jnp.uint32(seed)))
+    return (p + np.float32(coeff) * z).astype(np.float32)

@@ -1,0 +1,213 @@
+"""L2: OPT-style decoder-only LM over *flat per-layer parameter vectors*.
+
+The flat vectors are the whole point: a "layer unit" (embedding table, one
+transformer block, final LN) is the unit of LeZO's sparsity, so the model is
+written to consume one f32[len] vector per unit and un-flatten internally.
+The rust coordinator then stores parameters as a Vec<PjRtBuffer> and skips
+whole buffers during perturbation/update - the paper's computation saving,
+made structural.
+
+Unit layout (index order = executable argument order):
+    unit 0:            embedding  = [tok_emb (V,D) | pos_emb (S,D)]
+    units 1..n_layers: block      = [ln1_g, ln1_b, Wq, bq, Wk, bk, Wv, bv,
+                                     Wo, bo, ln2_g, ln2_b, W1, b1, W2, b2]
+    unit n_layers+1:   final LN   = [lnf_g, lnf_b]
+LM head is tied to tok_emb (OPT-style).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.attention import mha_causal
+from .kernels.layernorm import layernorm
+
+# ---------------------------------------------------------------------------
+# Unit specs: (name, shape) lists defining the flat layout.
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    return [("tok_emb", (cfg.vocab, cfg.d_model)), ("pos_emb", (cfg.max_seq, cfg.d_model))]
+
+
+def block_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    d, f = cfg.d_model, cfg.d_ff
+    return [
+        ("ln1_g", (d,)), ("ln1_b", (d,)),
+        ("wq", (d, d)), ("bq", (d,)),
+        ("wk", (d, d)), ("bk", (d,)),
+        ("wv", (d, d)), ("bv", (d,)),
+        ("wo", (d, d)), ("bo", (d,)),
+        ("ln2_g", (d,)), ("ln2_b", (d,)),
+        ("w1", (d, f)), ("b1", (f,)),
+        ("w2", (f, d)), ("b2", (d,)),
+    ]
+
+
+def final_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    d = cfg.d_model
+    return [("lnf_g", (d,)), ("lnf_b", (d,))]
+
+
+def spec_len(spec: Sequence[tuple[str, tuple[int, ...]]]) -> int:
+    return int(sum(np.prod(s) for _, s in spec))
+
+
+def unit_specs(cfg: ModelConfig) -> list[tuple[str, list[tuple[str, tuple[int, ...]]]]]:
+    """All layer units in argument order: [(unit_name, field_spec), ...]."""
+    units = [("embed", embed_spec(cfg))]
+    units += [(f"block_{i}", block_spec(cfg)) for i in range(cfg.n_layers)]
+    units += [("final_ln", final_spec(cfg))]
+    return units
+
+
+def unit_lens(cfg: ModelConfig) -> list[int]:
+    return [spec_len(s) for _, s in unit_specs(cfg)]
+
+
+def unflatten(vec: jnp.ndarray, spec: Sequence[tuple[str, tuple[int, ...]]]) -> dict:
+    """Split one flat unit vector into named arrays (differentiable)."""
+    out = {}
+    off = 0
+    for name, shape in spec:
+        n = int(np.prod(shape))
+        out[name] = vec[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Initialization (written to artifacts as raw f32; rust never re-implements it)
+# ---------------------------------------------------------------------------
+
+
+def init_units(cfg: ModelConfig, seed: int = 0) -> list[np.ndarray]:
+    """GPT-2/OPT-style init: N(0, 0.02) weights, zero biases, unit gammas,
+    residual-out projections scaled by 1/sqrt(2*n_layers)."""
+    rng = np.random.RandomState(seed)
+    resid_scale = 1.0 / np.sqrt(2.0 * cfg.n_layers)
+
+    def init_field(name: str, shape: tuple[int, ...]) -> np.ndarray:
+        if name.endswith("_g"):
+            return np.ones(shape, dtype=np.float32)
+        if name.endswith("_b") or name.startswith("b"):
+            return np.zeros(shape, dtype=np.float32)
+        w = rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+        if name in ("wo", "w2"):
+            w *= resid_scale
+        return w
+
+    units = []
+    for _, spec in unit_specs(cfg):
+        flat = np.concatenate([init_field(n, s).reshape(-1) for n, s in spec])
+        units.append(flat.astype(np.float32))
+    return units
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return 0.5 * x * (1.0 + jnp.tanh(np.float32(np.sqrt(2.0 / np.pi)) * (x + 0.044715 * x**3)))
+
+
+def _attention(h: jnp.ndarray, p: dict, cfg: ModelConfig, use_pallas: bool) -> jnp.ndarray:
+    b, s, d = h.shape
+    nh, dh = cfg.n_heads, cfg.d_head
+    q = h @ p["wq"] + p["bq"]
+    k = h @ p["wk"] + p["bk"]
+    v = h @ p["wv"] + p["bv"]
+    # [B,S,D] -> [B*H, S, Dh]
+    def split(x):
+        return x.reshape(b, s, nh, dh).transpose(0, 2, 1, 3).reshape(b * nh, s, dh)
+
+    q, k, v = split(q), split(k), split(v)
+    if use_pallas:
+        o = mha_causal(q, k, v)
+    else:
+        from .kernels.ref import mha_causal_ref
+
+        o = mha_causal_ref(q, k, v)
+    o = o.reshape(b, nh, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ p["wo"] + p["bo"]
+
+
+def _layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    if use_pallas:
+        rows = x.shape[0] * x.shape[1]
+        return layernorm(x.reshape(rows, x.shape[2]), g, b).reshape(x.shape)
+    from .kernels.ref import layernorm_ref
+
+    return layernorm_ref(x, g, b)
+
+
+def forward_logits(
+    units: Sequence[jnp.ndarray],
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """tokens i32[B,S] -> logits f32[B,S,V]."""
+    emb = unflatten(units[0], embed_spec(cfg))
+    s = tokens.shape[1]
+    h = emb["tok_emb"][tokens] + emb["pos_emb"][:s][None]
+    for i in range(cfg.n_layers):
+        p = unflatten(units[1 + i], block_spec(cfg))
+        h = h + _attention(_layernorm(h, p["ln1_g"], p["ln1_b"], use_pallas), p, cfg, use_pallas)
+        hm = _layernorm(h, p["ln2_g"], p["ln2_b"], use_pallas)
+        h = h + (_gelu(hm @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"])
+    fin = unflatten(units[-1], final_spec(cfg))
+    h = _layernorm(h, fin["lnf_g"], fin["lnf_b"], use_pallas)
+    return h @ unflatten(units[0], embed_spec(cfg))["tok_emb"].T
+
+
+def _position_xent(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Per-position cross-entropy, f32[B,S]."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def mean_loss(units, tokens, targets, mask, cfg: ModelConfig, use_pallas: bool = True):
+    """Mean LM loss over masked positions - the ZO objective (scalar f32).
+
+    mask f32[B,S]: 1.0 where the position's target participates in the loss
+    (for classification tasks this is just the verbalizer position)."""
+    logits = forward_logits(units, tokens, cfg, use_pallas)
+    xent = _position_xent(logits, targets)
+    return jnp.sum(xent * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def example_losses(units, tokens, targets, mask, cfg: ModelConfig, use_pallas: bool = True):
+    """Per-example mean masked loss, f32[B] - used for option scoring in eval."""
+    logits = forward_logits(units, tokens, cfg, use_pallas)
+    xent = _position_xent(logits, targets)
+    per = jnp.sum(xent * mask, axis=-1) / jnp.maximum(jnp.sum(mask, axis=-1), 1.0)
+    return per
+
+
+def predict_tokens(units, tokens, cfg: ModelConfig, use_pallas: bool = True):
+    """Greedy next-token prediction at every position, i32[B,S] - used for
+    teacher-forced generation eval (span-F1 on SQuAD/DROP-like tasks)."""
+    logits = forward_logits(units, tokens, cfg, use_pallas)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def loss_and_grads(units, tokens, targets, mask, cfg: ModelConfig, use_pallas: bool = False):
+    """FO substrate: (loss, grads-per-unit). Used by the FT baseline and for
+    in-repo pretraining. Pallas kernels default off here: interpret-mode
+    pallas has no custom VJP and the ref path lowers to leaner HLO."""
+    def f(us):
+        return mean_loss(us, tokens, targets, mask, cfg, use_pallas)
+
+    loss, grads = jax.value_and_grad(f)(list(units))
+    return (loss, *grads)

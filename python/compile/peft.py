@@ -1,0 +1,188 @@
+"""PEFT forward passes for the paper's Table 4: LoRA and prefix tuning.
+
+Under PEFT the ZO optimizer perturbs/updates only small per-block adapter
+units; the frozen base units stay forward arguments. One adapter unit per
+transformer block is the unit of LeZO's layer-wise sparsity, mirroring the
+paper's LeZO(LoRA)/LeZO(prefix) rows.
+
+Flat adapter layouts (kept in sync with rust/src/peft/mod.rs):
+    LoRA unit   = [A_q (D,R) | B_q (R,D) | A_v (D,R) | B_v (R,D)]  (4*D*R)
+    prefix unit = [K_pre (P,D) | V_pre (P,D)]                      (2*P*D)
+
+LoRA (Hu et al. 2022): W_q' = W_q + (alpha/r) * A_q @ B_q, same for W_v;
+B = 0 at init so the initial delta is exactly zero.
+
+Prefix tuning (Li & Liang 2021): P learned key/value positions prepended to
+every block's attention; all queries may attend the prefix (no causal
+restriction on prefix positions).
+
+PEFT executables lower through the jnp reference attention: interpret-mode
+Pallas brings no benefit at build time and the prefix path needs a
+rectangular (S x (P+S)) mask the square-causal kernel does not model.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.ref import layernorm_ref
+from .model import (
+    _gelu,
+    _position_xent,
+    block_spec,
+    embed_spec,
+    final_spec,
+    unflatten,
+)
+
+LORA_RANK = 8
+LORA_ALPHA = 16.0
+PREFIX_TOKENS = 5
+
+
+def lora_unit_len(cfg: ModelConfig) -> int:
+    return 4 * cfg.d_model * LORA_RANK
+
+
+def prefix_unit_len(cfg: ModelConfig) -> int:
+    return 2 * PREFIX_TOKENS * cfg.d_model
+
+
+def _split_lora(unit: jnp.ndarray, d: int) -> tuple[jnp.ndarray, ...]:
+    r = LORA_RANK
+    q = d * r
+    a_q = unit[0 * q : 1 * q].reshape(d, r)
+    b_q = unit[1 * q : 2 * q].reshape(r, d)
+    a_v = unit[2 * q : 3 * q].reshape(d, r)
+    b_v = unit[3 * q : 4 * q].reshape(r, d)
+    return a_q, b_q, a_v, b_v
+
+
+def _split_prefix(unit: jnp.ndarray, d: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    p = PREFIX_TOKENS
+    k_pre = unit[: p * d].reshape(p, d)
+    v_pre = unit[p * d :].reshape(p, d)
+    return k_pre, v_pre
+
+
+def _heads(x: jnp.ndarray, nh: int, dh: int) -> jnp.ndarray:
+    """[B,S,D] -> [B*H, S, Dh]."""
+    b, s, _ = x.shape
+    return x.reshape(b, s, nh, dh).transpose(0, 2, 1, 3).reshape(b * nh, s, dh)
+
+
+def _unheads(x: jnp.ndarray, b: int, nh: int, dh: int) -> jnp.ndarray:
+    s = x.shape[1]
+    return x.reshape(b, nh, s, dh).transpose(0, 2, 1, 3).reshape(b, s, nh * dh)
+
+
+def _attention_peft(
+    h: jnp.ndarray,
+    p: dict,
+    cfg: ModelConfig,
+    lora: tuple[jnp.ndarray, ...] | None,
+    prefix: tuple[jnp.ndarray, jnp.ndarray] | None,
+) -> jnp.ndarray:
+    b, s, d = h.shape
+    nh, dh = cfg.n_heads, cfg.d_head
+    q = h @ p["wq"] + p["bq"]
+    k = h @ p["wk"] + p["bk"]
+    v = h @ p["wv"] + p["bv"]
+    if lora is not None:
+        a_q, b_q, a_v, b_v = lora
+        scale = np.float32(LORA_ALPHA / LORA_RANK)
+        q = q + scale * ((h @ a_q) @ b_q)
+        v = v + scale * ((h @ a_v) @ b_v)
+    qh, kh, vh = _heads(q, nh, dh), _heads(k, nh, dh), _heads(v, nh, dh)
+
+    n_pre = 0
+    if prefix is not None:
+        k_pre, v_pre = prefix
+        n_pre = k_pre.shape[0]
+        # [P,D] -> [1,P,H,Dh] -> broadcast over batch -> [B*H, P, Dh]
+        def pre_heads(x):
+            xh = x.reshape(1, n_pre, nh, dh).transpose(0, 2, 1, 3)
+            xh = jnp.broadcast_to(xh, (b, nh, n_pre, dh))
+            return xh.reshape(b * nh, n_pre, dh)
+
+        kh = jnp.concatenate([pre_heads(k_pre), kh], axis=1)
+        vh = jnp.concatenate([pre_heads(v_pre), vh], axis=1)
+
+    scores = jnp.einsum("bqd,bkd->bqk", qh, kh) / np.float32(np.sqrt(dh))
+    # causal over real positions; prefix positions always visible
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(n_pre + s)[None, :]
+    mask = ki < (qi + n_pre + 1)
+    scores = jnp.where(mask[None], scores, np.float32(-1e30))
+    attn = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bqk,bkd->bqd", attn, vh)
+    o = _unheads(o, b, nh, dh)
+    return o @ p["wo"] + p["bo"]
+
+
+def forward_logits_peft(
+    units: Sequence[jnp.ndarray],
+    peft_units: Sequence[jnp.ndarray],
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    mode: str,
+) -> jnp.ndarray:
+    """tokens i32[B,S] -> logits f32[B,S,V] with per-block adapters."""
+    assert mode in ("lora", "prefix")
+    assert len(peft_units) == cfg.n_layers
+    emb = unflatten(units[0], embed_spec(cfg))
+    s = tokens.shape[1]
+    h = emb["tok_emb"][tokens] + emb["pos_emb"][:s][None]
+    for i in range(cfg.n_layers):
+        p = unflatten(units[1 + i], block_spec(cfg))
+        lora = _split_lora(peft_units[i], cfg.d_model) if mode == "lora" else None
+        prefix = _split_prefix(peft_units[i], cfg.d_model) if mode == "prefix" else None
+        hn = layernorm_ref(h, p["ln1_g"], p["ln1_b"])
+        h = h + _attention_peft(hn, p, cfg, lora, prefix)
+        hm = layernorm_ref(h, p["ln2_g"], p["ln2_b"])
+        h = h + (_gelu(hm @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"])
+    fin = unflatten(units[-1], final_spec(cfg))
+    h = layernorm_ref(h, fin["lnf_g"], fin["lnf_b"])
+    return h @ unflatten(units[0], embed_spec(cfg))["tok_emb"].T
+
+
+def mean_loss_peft(units, peft_units, tokens, targets, mask, cfg: ModelConfig, mode: str):
+    logits = forward_logits_peft(units, peft_units, tokens, cfg, mode)
+    xent = _position_xent(logits, targets)
+    return jnp.sum(xent * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def example_losses_peft(units, peft_units, tokens, targets, mask, cfg: ModelConfig, mode: str):
+    logits = forward_logits_peft(units, peft_units, tokens, cfg, mode)
+    xent = _position_xent(logits, targets)
+    return jnp.sum(xent * mask, axis=-1) / jnp.maximum(jnp.sum(mask, axis=-1), 1.0)
+
+
+def predict_tokens_peft(units, peft_units, tokens, cfg: ModelConfig, mode: str):
+    logits = forward_logits_peft(units, peft_units, tokens, cfg, mode)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def init_peft_units(cfg: ModelConfig, mode: str, seed: int = 0) -> list[np.ndarray]:
+    """Reference init (rust re-implements this deterministically on its own
+    RNG; the python version exists for the pytest oracle)."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for _ in range(cfg.n_layers):
+        if mode == "lora":
+            d, r = cfg.d_model, LORA_RANK
+            a_q = rng.normal(0.0, 0.02, size=(d, r)).astype(np.float32)
+            b_q = np.zeros((r, d), dtype=np.float32)
+            a_v = rng.normal(0.0, 0.02, size=(d, r)).astype(np.float32)
+            b_v = np.zeros((r, d), dtype=np.float32)
+            out.append(np.concatenate([x.reshape(-1) for x in (a_q, b_q, a_v, b_v)]))
+        else:
+            out.append(
+                rng.normal(0.0, 0.02, size=(prefix_unit_len(cfg),)).astype(np.float32)
+            )
+    return out

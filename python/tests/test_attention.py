@@ -1,0 +1,100 @@
+"""Pallas causal attention + layernorm kernels vs dense jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import mha_causal, mha_vmem_bytes
+from compile.kernels.layernorm import layernorm
+
+
+def _qkv(bh, s, dh, seed=0):
+    rs = np.random.RandomState(seed)
+    return [jnp.asarray(rs.randn(bh, s, dh).astype(np.float32)) for _ in range(3)]
+
+
+@pytest.mark.parametrize("bh,s,dh", [(1, 16, 8), (4, 32, 16), (8, 64, 32), (2, 64, 64)])
+def test_matches_dense_oracle(bh, s, dh):
+    q, k, v = _qkv(bh, s, dh, seed=s + dh)
+    got = mha_causal(q, k, v)
+    want = ref.mha_causal_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@given(
+    bh=st.integers(1, 4),
+    s_pow=st.integers(4, 6),  # seq 16..64
+    dh=st.sampled_from([8, 16, 32]),
+    bq=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+)
+@settings(max_examples=20, deadline=None)
+def test_block_shapes_do_not_change_result(bh, s_pow, dh, bq, bk):
+    s = 1 << s_pow
+    q, k, v = _qkv(bh, s, dh, seed=s_pow)
+    got = mha_causal(q, k, v, block_q=min(bq, s), block_k=min(bk, s))
+    want = ref.mha_causal_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_causality_future_kv_irrelevant():
+    """Changing k/v at positions > t must not change the output at t."""
+    q, k, v = _qkv(2, 32, 16, seed=9)
+    out1 = np.asarray(mha_causal(q, k, v))
+    k2 = k.at[:, 20:].set(99.0)
+    v2 = v.at[:, 20:].set(-99.0)
+    out2 = np.asarray(mha_causal(q, k2, v2))
+    np.testing.assert_allclose(out1[:, :20], out2[:, :20], rtol=1e-6, atol=1e-6)
+    assert np.abs(out1[:, 20:] - out2[:, 20:]).max() > 1.0
+
+
+def test_first_position_attends_only_to_itself():
+    q, k, v = _qkv(1, 16, 8, seed=11)
+    out = np.asarray(mha_causal(q, k, v))
+    np.testing.assert_allclose(out[0, 0], np.asarray(v)[0, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_uniform_values_softmax_mean():
+    """With constant v, output must equal v regardless of scores."""
+    q, k, _ = _qkv(2, 32, 16, seed=13)
+    v = jnp.ones((2, 32, 16), dtype=jnp.float32) * 3.5
+    out = np.asarray(mha_causal(q, k, v))
+    np.testing.assert_allclose(out, 3.5, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_estimate_under_budget():
+    assert mha_vmem_bytes(seq=2048, dh=64) < 16 * 1024 * 1024
+
+
+# --- layernorm ------------------------------------------------------------
+
+
+@given(
+    rows_pow=st.integers(0, 7),
+    d=st.sampled_from([8, 64, 256]),
+    block=st.sampled_from([1, 16, 64]),
+)
+@settings(max_examples=20, deadline=None)
+def test_layernorm_matches_ref(rows_pow, d, block):
+    rows = 1 << rows_pow
+    block = min(block, rows)
+    if rows % block != 0:
+        block = 1
+    rs = np.random.RandomState(rows + d)
+    x = jnp.asarray(rs.randn(rows, d).astype(np.float32))
+    g = jnp.asarray(rs.randn(d).astype(np.float32))
+    b = jnp.asarray(rs.randn(d).astype(np.float32))
+    got = layernorm(x, g, b, block_rows=block)
+    want = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_statistics():
+    """With gamma=1, beta=0 each row is zero-mean unit-variance."""
+    x = jnp.asarray(np.random.RandomState(0).randn(64, 128).astype(np.float32) * 5 + 3)
+    out = np.asarray(layernorm(x, jnp.ones(128), jnp.zeros(128)))
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-2)

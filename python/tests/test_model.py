@@ -1,0 +1,156 @@
+"""L2 model: shapes, losses, gradients, and the flat-unit contract with rust."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import SIZES, param_count
+
+CFG = SIZES["opt-micro"]
+
+
+@pytest.fixture(scope="module")
+def units():
+    return [jnp.asarray(u) for u in M.init_units(CFG, seed=0)]
+
+
+def _batch(b=2, s=16, seed=0):
+    rs = np.random.RandomState(seed)
+    tokens = jnp.asarray(rs.randint(0, CFG.vocab, size=(b, s)), jnp.int32)
+    targets = jnp.asarray(rs.randint(0, CFG.vocab, size=(b, s)), jnp.int32)
+    mask = jnp.asarray((rs.rand(b, s) > 0.3).astype(np.float32))
+    return tokens, targets, mask
+
+
+def test_unit_lens_match_param_count():
+    assert sum(M.unit_lens(CFG)) == param_count(CFG)
+
+
+def test_unit_count_is_layers_plus_two():
+    assert len(M.unit_specs(CFG)) == CFG.n_layers + 2
+
+
+def test_unflatten_round_trip():
+    spec = M.block_spec(CFG)
+    n = M.spec_len(spec)
+    vec = jnp.arange(n, dtype=jnp.float32)
+    parts = M.unflatten(vec, spec)
+    flat_again = jnp.concatenate([parts[name].reshape(-1) for name, _ in spec])
+    np.testing.assert_array_equal(np.asarray(flat_again), np.asarray(vec))
+
+
+def test_logits_shape(units):
+    tokens, _, _ = _batch()
+    logits = M.forward_logits(units, tokens, CFG, use_pallas=False)
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_pallas_and_ref_forward_agree(units):
+    """The Pallas forward (attention + LN kernels) must equal the jnp path."""
+    tokens, targets, mask = _batch(seed=5)
+    a = M.mean_loss(units, tokens, targets, mask, CFG, use_pallas=True)
+    b = M.mean_loss(units, tokens, targets, mask, CFG, use_pallas=False)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-4)
+
+
+def test_initial_loss_near_uniform(units):
+    """At init a tied-embedding LM should put loss near ln(V)."""
+    tokens, targets, mask = _batch(b=4, s=32, seed=1)
+    loss = float(M.mean_loss(units, tokens, targets, mask, CFG, use_pallas=False))
+    assert abs(loss - np.log(CFG.vocab)) < 1.0, loss
+
+
+def test_example_losses_consistent_with_mean(units):
+    tokens, targets, mask = _batch(b=4, s=16, seed=2)
+    per = M.example_losses(units, tokens, targets, mask, CFG, use_pallas=False)
+    assert per.shape == (4,)
+    # mean over positions (mask-weighted) vs per-example means
+    total = float(M.mean_loss(units, tokens, targets, mask, CFG, use_pallas=False))
+    weights = np.asarray(mask.sum(axis=-1))
+    recombined = float((np.asarray(per) * weights).sum() / weights.sum())
+    np.testing.assert_allclose(recombined, total, rtol=1e-5)
+
+
+def test_mask_excludes_positions(units):
+    """Loss must ignore masked-out positions entirely."""
+    tokens, targets, mask = _batch(b=2, s=16, seed=3)
+    t2 = targets.at[:, 0].set((targets[:, 0] + 1) % CFG.vocab)
+    m0 = mask.at[:, 0].set(0.0)
+    a = float(M.mean_loss(units, tokens, targets, m0, CFG, use_pallas=False))
+    b = float(M.mean_loss(units, tokens, t2, m0, CFG, use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_grads_match_finite_differences(units):
+    """FO substrate check: directional derivative vs central finite diff."""
+    tokens, targets, mask = _batch(b=2, s=16, seed=4)
+    outs = M.loss_and_grads(units, tokens, targets, mask, CFG)
+    grads = outs[1:]
+    rs = np.random.RandomState(0)
+    # probe the final-LN unit (small, well-conditioned)
+    u = len(units) - 1
+    direction = jnp.asarray(rs.randn(units[u].shape[0]).astype(np.float32))
+    direction = direction / jnp.linalg.norm(direction)
+    eps = 1e-2
+    def loss_at(t):
+        us = list(units)
+        us[u] = units[u] + t * direction
+        return float(M.mean_loss(us, tokens, targets, mask, CFG, use_pallas=False))
+    fd = (loss_at(eps) - loss_at(-eps)) / (2 * eps)
+    analytic = float(jnp.dot(grads[u], direction))
+    np.testing.assert_allclose(analytic, fd, rtol=2e-2, atol=1e-4)
+
+
+def test_sgd_steps_decrease_loss(units):
+    """A few FO steps on a fixed batch must reduce the loss."""
+    tokens, targets, mask = _batch(b=4, s=16, seed=6)
+    us = list(units)
+    first = None
+    for _ in range(5):
+        outs = M.loss_and_grads(us, tokens, targets, mask, CFG)
+        loss, grads = float(outs[0]), outs[1:]
+        if first is None:
+            first = loss
+        us = [u - 0.5 * g for u, g in zip(us, grads)]
+    last = float(M.mean_loss(us, tokens, targets, mask, CFG, use_pallas=False))
+    assert last < first - 0.05, (first, last)
+
+
+def test_predict_tokens_shape_dtype(units):
+    tokens, _, _ = _batch(b=2, s=16)
+    pred = M.predict_tokens(units, tokens, CFG, use_pallas=False)
+    assert pred.shape == (2, 16) and pred.dtype == jnp.int32
+    assert int(pred.min()) >= 0 and int(pred.max()) < CFG.vocab
+
+
+def test_zo_spsa_step_decreases_loss_in_expectation(units):
+    """End-to-end ZO sanity at the L2 level: averaged over seeds, the SPSA
+    update direction correlates with the true gradient (Lemma 1)."""
+    from compile.kernels.ref import gauss_from_index_np
+
+    tokens, targets, mask = _batch(b=4, s=16, seed=7)
+    us = [np.asarray(u) for u in units]
+    mu, eta = 1e-2, 2e-2
+
+    def loss_of(np_units):
+        return float(
+            M.mean_loss([jnp.asarray(u) for u in np_units], tokens, targets, mask, CFG, False)
+        )
+
+    base = loss_of(us)
+    improved = 0
+    trials = 6
+    for seed in range(trials):
+        plus = [u + mu * gauss_from_index_np(np.arange(u.size, dtype=np.uint64), seed * 31 + i)
+                for i, u in enumerate(us)]
+        minus = [u - mu * gauss_from_index_np(np.arange(u.size, dtype=np.uint64), seed * 31 + i)
+                 for i, u in enumerate(us)]
+        g = (loss_of(plus) - loss_of(minus)) / (2 * mu)
+        stepped = [u - eta * g * gauss_from_index_np(np.arange(u.size, dtype=np.uint64), seed * 31 + i)
+                   for i, u in enumerate(us)]
+        if loss_of(stepped) < base:
+            improved += 1
+    assert improved >= trials // 2, f"only {improved}/{trials} SPSA steps improved"

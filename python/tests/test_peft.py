@@ -1,0 +1,102 @@
+"""L2 PEFT tests: LoRA/prefix forward passes vs the base model oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import peft as P
+from compile.configs import SIZES
+
+CFG = SIZES["opt-micro"]
+
+
+@pytest.fixture(scope="module")
+def units():
+    return [jnp.asarray(u) for u in M.init_units(CFG, seed=0)]
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.RandomState(1)
+    return jnp.asarray(rng.randint(10, CFG.vocab, size=(2, 16)), dtype=jnp.int32)
+
+
+def test_lora_zero_init_equals_base(units, tokens):
+    # B = 0 at init -> adapter delta is exactly zero
+    peft_units = [jnp.asarray(u) for u in P.init_peft_units(CFG, "lora", seed=0)]
+    base = M.forward_logits(units, tokens, CFG, use_pallas=False)
+    lora = P.forward_logits_peft(units, peft_units, tokens, CFG, "lora")
+    np.testing.assert_allclose(np.asarray(base), np.asarray(lora), atol=1e-4)
+
+
+def test_lora_nonzero_b_changes_logits(units, tokens):
+    peft_units = [jnp.asarray(u) for u in P.init_peft_units(CFG, "lora", seed=0)]
+    # set B_q of block 0 nonzero
+    u0 = np.asarray(peft_units[0]).copy()
+    q = CFG.d_model * P.LORA_RANK
+    u0[q : 2 * q] = 0.05
+    peft_units[0] = jnp.asarray(u0)
+    base = M.forward_logits(units, tokens, CFG, use_pallas=False)
+    lora = P.forward_logits_peft(units, peft_units, tokens, CFG, "lora")
+    assert not np.allclose(np.asarray(base), np.asarray(lora), atol=1e-5)
+
+
+def test_prefix_changes_logits_everywhere(units, tokens):
+    peft_units = [jnp.asarray(u) for u in P.init_peft_units(CFG, "prefix", seed=3)]
+    base = M.forward_logits(units, tokens, CFG, use_pallas=False)
+    pre = P.forward_logits_peft(units, peft_units, tokens, CFG, "prefix")
+    assert pre.shape == base.shape
+    # prefixes attend into every position, so logits shift broadly
+    diff = np.abs(np.asarray(pre) - np.asarray(base)).mean()
+    assert diff > 1e-6
+
+
+def test_prefix_zero_prefix_is_not_identity(units, tokens):
+    # zero K/V prefix still contributes softmax mass (score 0 -> weight>0),
+    # so it must NOT equal the base model: guards against silently dropping
+    # the prefix path
+    zero_units = [jnp.zeros(P.prefix_unit_len(CFG)) for _ in range(CFG.n_layers)]
+    base = M.forward_logits(units, tokens, CFG, use_pallas=False)
+    pre = P.forward_logits_peft(units, zero_units, tokens, CFG, "prefix")
+    assert not np.allclose(np.asarray(base), np.asarray(pre), atol=1e-6)
+
+
+def test_causality_preserved_under_peft(units):
+    # changing a late token must not affect earlier positions' logits
+    rng = np.random.RandomState(2)
+    t1 = rng.randint(10, CFG.vocab, size=(1, 12)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 7) % CFG.vocab
+    for mode in ("lora", "prefix"):
+        peft_units = [jnp.asarray(u) for u in P.init_peft_units(CFG, mode, seed=1)]
+        l1 = P.forward_logits_peft(units, peft_units, jnp.asarray(t1), CFG, mode)
+        l2 = P.forward_logits_peft(units, peft_units, jnp.asarray(t2), CFG, mode)
+        np.testing.assert_allclose(
+            np.asarray(l1)[0, :-1], np.asarray(l2)[0, :-1], atol=1e-4,
+            err_msg=f"{mode}: future token leaked into the past",
+        )
+
+
+def test_example_losses_match_mean_loss(units, tokens):
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones(tokens.shape, dtype=jnp.float32)
+    for mode in ("lora", "prefix"):
+        peft_units = [jnp.asarray(u) for u in P.init_peft_units(CFG, mode, seed=2)]
+        per = P.example_losses_peft(units, peft_units, tokens, targets, mask, CFG, mode)
+        mean = P.mean_loss_peft(units, peft_units, tokens, targets, mask, CFG, mode)
+        assert per.shape == (tokens.shape[0],)
+        np.testing.assert_allclose(float(jnp.mean(per)), float(mean), rtol=1e-5)
+
+
+def test_unit_len_contract_with_rust():
+    # must match rust/src/peft/mod.rs
+    assert P.lora_unit_len(CFG) == 4 * CFG.d_model * P.LORA_RANK
+    assert P.prefix_unit_len(CFG) == 2 * P.PREFIX_TOKENS * CFG.d_model
+
+
+def test_predict_tokens_peft_shape(units, tokens):
+    peft_units = [jnp.asarray(u) for u in P.init_peft_units(CFG, "lora", seed=0)]
+    preds = P.predict_tokens_peft(units, peft_units, tokens, CFG, "lora")
+    assert preds.shape == tokens.shape
+    assert preds.dtype == jnp.int32

@@ -1,0 +1,114 @@
+"""Philox RNG: bit-exactness vs the numpy oracle + statistical quality.
+
+This is the correctness keystone of the whole system: the rust coordinator
+relies on perturb(+mu) / flip(-2mu) / restore(+mu) / update(-eta*g) all
+regenerating *identical* z from (seed, index).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.philox import (
+    LEZO_KEY1,
+    boxmuller,
+    gauss_from_index,
+    mulhilo32,
+    philox4x32,
+    uniform01,
+)
+
+U32 = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+@given(U32, U32)
+@settings(max_examples=200, deadline=None)
+def test_mulhilo32_matches_u64_product(a, b):
+    hi, lo = mulhilo32(jnp.uint32(a), jnp.uint32(b))
+    prod = (a * b) & ((1 << 64) - 1)
+    assert int(lo) == prod & 0xFFFFFFFF
+    assert int(hi) == prod >> 32
+
+
+@given(U32, U32, U32, U32, U32, U32)
+@settings(max_examples=50, deadline=None)
+def test_philox_scalar_matches_numpy_oracle(c0, c1, c2, c3, k0, k1):
+    got = philox4x32(
+        jnp.uint32(c0), jnp.uint32(c1), jnp.uint32(c2), jnp.uint32(c3),
+        jnp.uint32(k0), jnp.uint32(k1),
+    )
+    counter = np.array([c0, c1, c2, c3], dtype=np.uint64)
+    key = np.array([k0, k1], dtype=np.uint64)
+    want = ref.philox4x32_np(counter, key)
+    assert [int(w) for w in got] == [int(w) for w in want]
+
+
+def test_philox_known_vector():
+    """Canonical test vector from the Random123 distribution:
+    philox4x32-10 of counter=ffffffff^4, key=ffffffff^2."""
+    ff = jnp.uint32(0xFFFFFFFF)
+    got = philox4x32(ff, ff, ff, ff, ff, ff)
+    assert [hex(int(w)) for w in got] == ["0x408f276d", "0x41c83b0e", "0xa20bc7c6", "0x6d5451fd"]
+
+
+def test_philox_zero_vector():
+    """Canonical test vector: all-zero counter and key."""
+    z = jnp.uint32(0)
+    got = philox4x32(z, z, z, z, z, z)
+    assert [hex(int(w)) for w in got] == ["0x6627e8d5", "0xe169c58d", "0xbc57ac4c", "0x9b00dbd8"]
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**20))
+@settings(max_examples=50, deadline=None)
+def test_gauss_deterministic_and_matches_ref(seed, start):
+    idx = np.arange(start, start + 64, dtype=np.uint64)
+    a = np.asarray(gauss_from_index(jnp.asarray(idx, jnp.uint32), jnp.uint32(seed)))
+    b = np.asarray(gauss_from_index(jnp.asarray(idx, jnp.uint32), jnp.uint32(seed)))
+    c = ref.gauss_from_index_np(idx, seed)
+    np.testing.assert_array_equal(a, b)  # bit-identical across calls
+    np.testing.assert_allclose(a, c, rtol=0, atol=5e-7)
+
+
+def test_gauss_streams_differ_across_seeds():
+    idx = jnp.arange(256, dtype=jnp.uint32)
+    a = np.asarray(gauss_from_index(idx, jnp.uint32(1)))
+    b = np.asarray(gauss_from_index(idx, jnp.uint32(2)))
+    assert np.abs(a - b).max() > 0.1
+
+
+def test_uniform01_open_interval():
+    bits = jnp.asarray([0, 1, 2**32 - 1, 2**31], dtype=jnp.uint32)
+    u = np.asarray(uniform01(bits))
+    assert (u > 0).all() and (u < 1).all()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 12345, 2**31 - 1])
+def test_gauss_moments(seed):
+    n = 200_000
+    z = np.asarray(gauss_from_index(jnp.arange(n, dtype=jnp.uint32), jnp.uint32(seed)))
+    assert abs(z.mean()) < 4.0 / np.sqrt(n), z.mean()
+    assert abs(z.std() - 1.0) < 0.01, z.std()
+    # excess kurtosis of N(0,1) is 0; sampling std ~ sqrt(24/n)
+    kurt = ((z - z.mean()) ** 4).mean() / z.var() ** 2 - 3.0
+    assert abs(kurt) < 6 * np.sqrt(24.0 / n), kurt
+
+
+def test_gauss_no_correlation_between_adjacent():
+    n = 100_000
+    z = np.asarray(gauss_from_index(jnp.arange(n, dtype=jnp.uint32), jnp.uint32(7)))
+    r = np.corrcoef(z[:-1], z[1:])[0, 1]
+    assert abs(r) < 0.02, r
+
+
+def test_domain_separator_is_lezo():
+    assert int(LEZO_KEY1) == int.from_bytes(b"LeZO", "big")
+
+
+def test_boxmuller_range_sane():
+    r = np.random.RandomState(3).randint(0, 2**32, size=(10000, 2), dtype=np.uint64)
+    z = np.asarray(boxmuller(jnp.asarray(r[:, 0], jnp.uint32), jnp.asarray(r[:, 1], jnp.uint32)))
+    assert np.isfinite(z).all()
+    assert np.abs(z).max() < 8.0  # 24-bit uniforms bound the tail

@@ -1,0 +1,67 @@
+"""pack4 ablation kernel (EXPERIMENTS.md §Perf iteration 2 — measured,
+reverted on CPU, kept in-tree as the TPU-oriented variant)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.zo_axpy_pack4 import (
+    gauss_from_index_pack4,
+    zo_axpy_pack4,
+    zo_axpy_pack4_np,
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    coeff=st.floats(min_value=-1.0, max_value=1.0, allow_nan=False),
+)
+def test_matches_oracle(n, seed, coeff):
+    p = np.random.RandomState(n % 997).randn(n).astype(np.float32)
+    out = np.asarray(zo_axpy_pack4(jnp.asarray(p), jnp.int32(seed), jnp.float32(coeff)))
+    ref = zo_axpy_pack4_np(p, seed, coeff)
+    np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+def test_deterministic_and_seed_sensitive():
+    p = jnp.zeros(1024, dtype=jnp.float32)
+    a = np.asarray(zo_axpy_pack4(p, jnp.int32(7), jnp.float32(1.0)))
+    b = np.asarray(zo_axpy_pack4(p, jnp.int32(7), jnp.float32(1.0)))
+    c = np.asarray(zo_axpy_pack4(p, jnp.int32(8), jnp.float32(1.0)))
+    np.testing.assert_array_equal(a, b)
+    assert not np.allclose(a, c)
+
+
+def test_gaussian_moments():
+    idx = jnp.arange(200_000, dtype=jnp.uint32)
+    z = np.asarray(gauss_from_index_pack4(idx, jnp.uint32(3)))
+    assert abs(z.mean()) < 0.01
+    assert abs(z.var() - 1.0) < 0.02
+    # all four slots individually standard normal (the packing is sound)
+    for s in range(4):
+        zs = z[s::4]
+        assert abs(zs.mean()) < 0.02, f"slot {s}"
+        assert abs(zs.var() - 1.0) < 0.03, f"slot {s}"
+
+
+def test_perturb_flip_restore_identity():
+    p0 = np.random.RandomState(5).randn(2000).astype(np.float32)
+    mu = 1e-3
+    p = jnp.asarray(p0)
+    p = zo_axpy_pack4(p, jnp.int32(11), jnp.float32(+mu))
+    p = zo_axpy_pack4(p, jnp.int32(11), jnp.float32(-2 * mu))
+    p = zo_axpy_pack4(p, jnp.int32(11), jnp.float32(+mu))
+    np.testing.assert_allclose(np.asarray(p), p0, atol=1e-6)
+
+
+def test_stream_differs_from_baseline():
+    # pack4 is a *different* stream than the baseline kernel — the exporter
+    # must never mix them within one artifact set
+    from compile.kernels.zo_axpy import zo_axpy
+
+    p = jnp.zeros(512, dtype=jnp.float32)
+    a = np.asarray(zo_axpy(p, jnp.int32(3), jnp.float32(1.0)))
+    b = np.asarray(zo_axpy_pack4(p, jnp.int32(3), jnp.float32(1.0)))
+    assert not np.allclose(a, b)

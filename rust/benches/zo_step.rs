@@ -1,0 +1,138 @@
+//! `cargo bench` — microbenchmarks of the ZO hot path (hand-rolled harness;
+//! criterion is not vendored in this offline image).
+//!
+//! Covers: per-unit zo_axpy latency, forward-pass latency per bucket, and a
+//! full MeZO-vs-LeZO step comparison — the raw numbers behind Figs. 2 and 4.
+//! For the full table/figure regeneration use `lezo bench <id>`.
+
+use lezo::coordinator::metrics::StageTimes;
+use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
+use lezo::data::batch::Batch;
+use lezo::model::{Manifest, ParamStore};
+use lezo::runtime::exes::{ExeRegistry, Family};
+use lezo::runtime::{run1, Runtime};
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn art(model: &str) -> PathBuf {
+    let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    PathBuf::from(root).join(model)
+}
+
+fn time_ms<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    1e3 * t.elapsed().as_secs_f64() / iters as f64
+}
+
+fn bench_model(model: &str) {
+    let dir = art(model);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[skip] {model}: no artifacts");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let reg = ExeRegistry::new(m.clone());
+    reg.warm_zo(&rt).unwrap();
+    let store = ParamStore::load_init(&rt, &m).unwrap();
+    println!("\n== {model} ({} params, {} blocks) ==", m.param_count, m.n_layers);
+
+    // --- zo_axpy per unit length ---
+    for &n in &m.axpy_lens {
+        if !m.unit_lens.contains(&n) {
+            continue; // PEFT-only lengths: skip in the full-model bench
+        }
+        let exe = reg.get(&rt, Family::ZoAxpy, n).unwrap();
+        let p = rt.vec_f32(&vec![0.1f32; n]).unwrap();
+        let seed = rt.scalar_i32(1).unwrap();
+        let c = rt.scalar_f32(1e-3).unwrap();
+        let ms = time_ms(20, || {
+            let _ = run1(&exe, &[&p, &seed, &c]).unwrap();
+        });
+        let gbs = (8.0 * n as f64) / (ms / 1e3) / 1e9; // 1 load + 1 store, f32
+        println!("  zo_axpy[{n:>9}] {ms:>8.3} ms  ({gbs:.2} GB/s effective)");
+    }
+
+    // --- forward per bucket ---
+    let units = store.unit_refs();
+    for &s in &m.seq_buckets {
+        let exe = reg.get(&rt, Family::ForwardLoss, s).unwrap();
+        let seqs: Vec<Vec<u32>> = (0..m.train_batch)
+            .map(|r| (0..s as u32).map(|i| 20 + (r as u32 + i) % 100).collect())
+            .collect();
+        let b = Batch::lm_batch(&seqs, m.train_batch, s).unwrap();
+        let tok = rt.mat_i32(&b.tokens, b.rows, s).unwrap();
+        let tgt = rt.mat_i32(&b.targets, b.rows, s).unwrap();
+        let msk = rt.mat_f32(&b.mask, b.rows, s).unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = units.clone();
+        args.push(&tok);
+        args.push(&tgt);
+        args.push(&msk);
+        let ms = time_ms(10, || {
+            let _ = run1(&exe, &args).unwrap();
+        });
+        println!("  forward_loss[s{s:>3}] {ms:>7.2} ms (batch {})", m.train_batch);
+    }
+
+    // --- full ZO step: MeZO vs LeZO(75%) ---
+    let seqs: Vec<Vec<u32>> = (0..m.train_batch)
+        .map(|r| (0..32u32).map(|i| 20 + (r as u32 + i) % 100).collect())
+        .collect();
+    let b = Batch::lm_batch(&seqs, m.train_batch, 32).unwrap();
+    let tok = rt.mat_i32(&b.tokens, b.rows, 32).unwrap();
+    let tgt = rt.mat_i32(&b.targets, b.rows, 32).unwrap();
+    let msk = rt.mat_f32(&b.mask, b.rows, 32).unwrap();
+    let fwd = reg.get(&rt, Family::ForwardLoss, 32).unwrap();
+    let drop = (3 * m.n_layers) / 4;
+    for (name, active) in [
+        ("MeZO step      ", (0..m.n_units()).collect::<Vec<_>>()),
+        (
+            "LeZO step (75%)",
+            (0..m.n_units()).filter(|&k| k == 0 || k > drop).collect::<Vec<_>>(),
+        ),
+    ] {
+        let eng = SpsaEngine::new(&rt, &reg, 1e-3, 1).unwrap();
+        let bufs = (0..store.n_units())
+            .map(|k| rt.vec_f32(&rt.read_vec_f32(store.unit(k)).unwrap()).unwrap())
+            .collect();
+        let mut tun = TunableUnits { bufs, lens: m.unit_lens.clone() };
+        let mut times = StageTimes::default();
+        let mut loss = |u: &TunableUnits| -> anyhow::Result<f32> {
+            let mut args: Vec<&xla::PjRtBuffer> = u.bufs.iter().collect();
+            args.push(&tok);
+            args.push(&tgt);
+            args.push(&msk);
+            rt.read_scalar_f32(&run1(&fwd, &args)?)
+        };
+        let t = Instant::now();
+        let iters = 15;
+        for step in 0..iters {
+            eng.zo_step(step, &mut tun, &active, 1e-5, &mut loss, &mut times).unwrap();
+        }
+        let ms = 1e3 * t.elapsed().as_secs_f64() / iters as f64;
+        let (p, f, u, _) = times.per_step_ms();
+        println!(
+            "  {name} {ms:>7.1} ms/step (perturb {p:.1} + forward {f:.1} + update {u:.1}), non-forward {:.0}%",
+            100.0 * times.non_forward_fraction()
+        );
+    }
+}
+
+fn main() {
+    // honor `cargo bench -- <model>`
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let models: Vec<String> = if args.is_empty() {
+        vec!["opt-micro".into(), "opt-tiny".into(), "opt-small".into()]
+    } else {
+        args
+    };
+    println!("ZO hot-path microbenchmarks (PJRT CPU)");
+    for m in &models {
+        bench_model(m);
+    }
+}

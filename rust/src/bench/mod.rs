@@ -1,0 +1,146 @@
+//! Bench harness (DESIGN.md S15): regenerates every table and figure of the
+//! paper's evaluation on this testbed. Each entry prints the paper-shaped
+//! rows/series and writes them under `bench_results/`.
+
+pub mod ablation;
+pub mod figures;
+pub mod lemma;
+pub mod tables;
+
+use crate::config::RunConfig;
+use crate::coordinator::{TrainReport, Trainer};
+use crate::stats;
+use anyhow::{bail, Result};
+use std::io::Write;
+
+/// All bench ids, in paper order, plus the design-choice ablations.
+pub const ALL_BENCHES: [&str; 13] = [
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
+    "table1", "table2", "table3", "table4", "table5",
+    "lemma3", "ablation",
+];
+
+/// Run one bench by id. `overrides` are config `key=value`s applied to every
+/// run in the sweep (e.g. `steps=200` for a quick pass).
+pub fn run_bench(id: &str, overrides: &[String]) -> Result<()> {
+    let out = match id {
+        "fig1" => figures::fig1(overrides)?,
+        "fig2" => figures::fig2(overrides)?,
+        "fig3" => figures::fig3(overrides)?,
+        "fig4" => figures::fig4(overrides)?,
+        "fig5" => figures::fig5(overrides)?,
+        "fig6" => figures::fig6(overrides)?,
+        "table1" => tables::table1(overrides)?,
+        "table2" => tables::table2(overrides)?,
+        "table3" => tables::table3(overrides)?,
+        "table4" => tables::table4(overrides)?,
+        "table5" => tables::table5()?,
+        "lemma3" => lemma::lemma3(overrides)?,
+        "ablation" => ablation::selector_policies(overrides)?,
+        "all" => {
+            for b in ALL_BENCHES {
+                run_bench(b, overrides)?;
+            }
+            return Ok(());
+        }
+        _ => bail!("unknown bench '{id}' (one of {ALL_BENCHES:?} or 'all')"),
+    };
+    println!("{out}");
+    save(id, &out)?;
+    Ok(())
+}
+
+/// Persist bench output under bench_results/<id>.txt.
+pub fn save(id: &str, text: &str) -> Result<()> {
+    let dir = std::path::Path::new("bench_results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{id}.txt"));
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(text.as_bytes())?;
+    crate::info!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Run a config across seeds; returns per-seed reports.
+pub fn run_seeds(base: &RunConfig, seeds: &[u64]) -> Result<Vec<TrainReport>> {
+    seeds
+        .iter()
+        .map(|&s| {
+            let mut cfg = base.clone();
+            cfg.seed = s;
+            Trainer::new(cfg).run()
+        })
+        .collect()
+}
+
+/// `mean±std` of the percentage metric across seed reports (best-checkpoint
+/// selection, as in the paper).
+pub fn agg_pct(reports: &[TrainReport]) -> (f64, f64) {
+    let vals: Vec<f64> = reports.iter().map(|r| 100.0 * r.best_metric).collect();
+    (stats::mean(&vals), stats::std(&vals))
+}
+
+pub fn fmt_pm(mean: f64, std: f64) -> String {
+    if std > 0.0 {
+        format!("{mean:.1}±{std:.1}")
+    } else {
+        format!("{mean:.1}")
+    }
+}
+
+/// Default bench config: the Table-1 testbed (`opt-small` standing in for
+/// OPT-13B) with a budget small enough for CPU sweeps. Overrides can scale
+/// it up (`steps=2000 eval_every=500 ...`).
+pub fn bench_config(overrides: &[String]) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    cfg.model = "opt-small".into();
+    cfg.steps = 1500;
+    cfg.eval_every = 300;
+    cfg.eval_examples = 100;
+    cfg.train_examples = 512;
+    cfg.lr = 1e-4; // MeZO base LR at this scale (grid-searched; see Table 5)
+    cfg.mu = 1e-3;
+    cfg.apply_overrides(overrides)?;
+    Ok(cfg)
+}
+
+/// The paper's sparsity preset: 75% of blocks dropped.
+pub fn paper_drop(n_layers: usize) -> usize {
+    (3 * n_layers) / 4
+}
+
+/// Per-model LR defaults mirroring Table 5's "LeZO needs a larger LR" rule.
+pub fn lezo_lr(mezo_lr: f64) -> f64 {
+    2.5 * mezo_lr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_pm_shapes() {
+        assert_eq!(fmt_pm(91.23, 0.456), "91.2±0.5");
+        assert_eq!(fmt_pm(88.0, 0.0), "88.0");
+    }
+
+    #[test]
+    fn bench_ids_dispatch() {
+        assert!(run_bench("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn paper_drop_matches_tables() {
+        assert_eq!(paper_drop(40), 30); // OPT-13B: 30 of 40
+        assert_eq!(paper_drop(24), 18); // Table 2 caption: 18 of 24
+        assert_eq!(paper_drop(48), 36); // OPT-30B: 36 of 48
+        assert_eq!(paper_drop(8), 6); // opt-small here
+    }
+
+    #[test]
+    fn bench_config_overrides() {
+        let cfg = bench_config(&["steps=10".into(), "model=opt-micro".into()]).unwrap();
+        assert_eq!(cfg.steps, 10);
+        assert_eq!(cfg.model, "opt-micro");
+    }
+}

@@ -1,0 +1,323 @@
+//! Run configuration: every knob of a fine-tuning run, plus the paper's
+//! hyper-parameter grids (Table 5) as presets.
+//!
+//! Configs are built from CLI `key=value` overrides on top of a preset, and
+//! can be round-tripped through a simple `key = value` config-file format
+//! (no serde offline; the format is intentionally trivial).
+
+use crate::coordinator::policy::Policy;
+use crate::peft::PeftMode;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
+
+/// Which optimizer drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// No training: score options with the pretrained model.
+    ZeroShot,
+    /// No training: k demonstrations concatenated in-context.
+    Icl,
+    /// First-order fine-tuning (Adam), the paper's "FT" baseline.
+    Ft,
+    /// MeZO (Malladi et al. 2023) == LeZO with 0 dropped layers.
+    Mezo,
+    /// LeZO: layer-wise sparse ZO (the paper's contribution).
+    Lezo,
+    /// Sparse-MeZO (Liu et al. 2024): element-wise magnitude-masked ZO —
+    /// the related-work comparator the paper argues against (extra ranking
+    /// work + mask state; perturb/update traffic does not shrink).
+    Smezo,
+}
+
+impl FromStr for Method {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "zero-shot" | "zeroshot" => Method::ZeroShot,
+            "icl" => Method::Icl,
+            "ft" => Method::Ft,
+            "mezo" => Method::Mezo,
+            "lezo" => Method::Lezo,
+            "smezo" | "sparse-mezo" => Method::Smezo,
+            _ => bail!("unknown method '{s}' (zero-shot|icl|ft|mezo|lezo|smezo)"),
+        })
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Method::ZeroShot => "zero-shot",
+            Method::Icl => "icl",
+            Method::Ft => "ft",
+            Method::Mezo => "mezo",
+            Method::Lezo => "lezo",
+            Method::Smezo => "smezo",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Full description of one run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,        // artifact size name, e.g. "opt-micro"
+    pub artifacts_root: String,
+    pub task: String,         // task name, e.g. "sst2"
+    pub method: Method,
+    pub peft: PeftMode,
+    /// Number of transformer blocks *dropped* (skipped) per ZO step — the
+    /// paper's "Dropout Number" n. Sparsity rho = n / N over sparsifiable
+    /// units. 0 == MeZO.
+    pub drop_layers: usize,
+    pub lr: f64,
+    /// SPSA perturbation scale (the paper's mu / epsilon).
+    pub mu: f64,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_examples: usize,
+    pub train_examples: usize,
+    pub seed: u64,
+    /// Demonstrations for ICL.
+    pub icl_shots: usize,
+    /// Mean content length of generated examples (tokens); tasks clamp to
+    /// their bucket budget. Drives the Fig. 6 sweep.
+    pub mean_len: usize,
+    /// Adam hyper-parameters for the FT baseline.
+    pub adam_beta1: f64,
+    pub adam_beta2: f64,
+    pub adam_eps: f64,
+    /// Load pretrained weights from this checkpoint (empty = params_init.bin).
+    pub checkpoint: String,
+    /// Whether embedding / final-LN units are sparsifiable too (the paper
+    /// sparsifies transformer blocks only; rho=1 in Fig. 3 drops all blocks
+    /// and tunes only embedding+head, which is exactly this policy).
+    pub blocks_only: bool,
+    /// Layer-selection policy (the paper uses uniform; the others are the
+    /// `lezo bench ablation` axis).
+    pub policy: Policy,
+    /// Sparse-MeZO: fraction of each unit's smallest-|w| elements that stay
+    /// tunable (the magnitude mask).
+    pub smezo_keep: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "opt-micro".into(),
+            artifacts_root: "artifacts".into(),
+            task: "sst2".into(),
+            method: Method::Lezo,
+            peft: PeftMode::Full,
+            drop_layers: 0,
+            lr: 1e-6,
+            mu: 1e-3,
+            steps: 2000,
+            eval_every: 500,
+            eval_examples: 200,
+            train_examples: 1000,
+            seed: 0,
+            icl_shots: 4,
+            mean_len: 24,
+            adam_beta1: 0.9,
+            adam_beta2: 0.999,
+            adam_eps: 1e-8,
+            checkpoint: String::new(),
+            blocks_only: true,
+            policy: Policy::Uniform,
+            smezo_keep: 0.5,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn artifact_dir(&self) -> String {
+        format!("{}/{}", self.artifacts_root, self.model)
+    }
+
+    /// Apply one `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        macro_rules! parse {
+            () => {
+                value.parse().map_err(|e| anyhow!("bad value for {key}: {e}"))?
+            };
+        }
+        match key {
+            "model" => self.model = value.to_string(),
+            "artifacts" | "artifacts_root" => self.artifacts_root = value.to_string(),
+            "task" => self.task = value.to_string(),
+            "method" => self.method = parse!(),
+            "peft" => self.peft = parse!(),
+            "drop_layers" | "n" => self.drop_layers = parse!(),
+            "lr" => self.lr = parse!(),
+            "mu" | "eps" => self.mu = parse!(),
+            "steps" => self.steps = parse!(),
+            "eval_every" => self.eval_every = parse!(),
+            "eval_examples" => self.eval_examples = parse!(),
+            "train_examples" => self.train_examples = parse!(),
+            "seed" => self.seed = parse!(),
+            "icl_shots" => self.icl_shots = parse!(),
+            "mean_len" => self.mean_len = parse!(),
+            "checkpoint" => self.checkpoint = value.to_string(),
+            "blocks_only" => self.blocks_only = parse!(),
+            "policy" => self.policy = parse!(),
+            "smezo_keep" => self.smezo_keep = parse!(),
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Apply a list of `key=value` strings.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .ok_or_else(|| anyhow!("override '{ov}' is not key=value"))?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Parse a `key = value` config file (comments with '#').
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read config {path}: {e}"))?;
+        let mut cfg = RunConfig::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("{path}:{}: not key=value", lineno + 1))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_file_format(&self) -> String {
+        format!(
+            "model = {}\ntask = {}\nmethod = {}\npeft = {}\ndrop_layers = {}\nlr = {}\n\
+             mu = {}\nsteps = {}\neval_every = {}\neval_examples = {}\ntrain_examples = {}\n\
+             seed = {}\nicl_shots = {}\nmean_len = {}\nblocks_only = {}\n",
+            self.model, self.task, self.method, self.peft, self.drop_layers, self.lr,
+            self.mu, self.steps, self.eval_every, self.eval_examples, self.train_examples,
+            self.seed, self.icl_shots, self.mean_len, self.blocks_only,
+        )
+    }
+}
+
+/// The paper's Table-5 hyper-parameter grids, scaled to this testbed.
+/// Grid search in the bench harness walks these.
+pub fn grids() -> BTreeMap<&'static str, Vec<(&'static str, Vec<f64>)>> {
+    let mut g = BTreeMap::new();
+    g.insert(
+        "lezo",
+        vec![("lr", vec![5e-4, 2.5e-4, 1e-4]), ("mu", vec![1e-3])],
+    );
+    g.insert(
+        "mezo",
+        vec![("lr", vec![2e-4, 1e-4, 5e-5]), ("mu", vec![1e-3])],
+    );
+    g.insert(
+        "lezo-prefix",
+        vec![("lr", vec![3e-2, 1e-2]), ("mu", vec![1e-1])],
+    );
+    g.insert(
+        "mezo-prefix",
+        vec![("lr", vec![1e-2, 1e-3]), ("mu", vec![1e-1])],
+    );
+    g.insert(
+        "lezo-lora",
+        vec![("lr", vec![1e-2, 5e-3, 3e-3]), ("mu", vec![1e-2])],
+    );
+    g.insert(
+        "mezo-lora",
+        vec![("lr", vec![5e-3, 3e-3]), ("mu", vec![1e-2])],
+    );
+    g.insert("ft", vec![("lr", vec![1e-3, 3e-4, 1e-4])]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.method, Method::Lezo);
+        assert_eq!(c.drop_layers, 0);
+        assert!(c.blocks_only);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = RunConfig::default();
+        c.apply_overrides(&[
+            "method=mezo".into(),
+            "lr=1e-5".into(),
+            "drop_layers=3".into(),
+            "task=boolq".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.method, Method::Mezo);
+        assert_eq!(c.lr, 1e-5);
+        assert_eq!(c.drop_layers, 3);
+        assert_eq!(c.task, "boolq");
+    }
+
+    #[test]
+    fn bad_override_rejected() {
+        let mut c = RunConfig::default();
+        assert!(c.apply_overrides(&["nope=1".into()]).is_err());
+        assert!(c.apply_overrides(&["lr".into()]).is_err());
+        assert!(c.apply_overrides(&["method=sgd".into()]).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let c0 = {
+            let mut c = RunConfig::default();
+            c.apply_overrides(&["method=ft".into(), "steps=77".into(), "mu=0.5".into()])
+                .unwrap();
+            c
+        };
+        let path = std::env::temp_dir().join("lezo_cfg_test.conf");
+        std::fs::write(&path, c0.to_file_format()).unwrap();
+        let c1 = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c1.method, Method::Ft);
+        assert_eq!(c1.steps, 77);
+        assert_eq!(c1.mu, 0.5);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn config_file_comments_and_blanks() {
+        let path = std::env::temp_dir().join("lezo_cfg_test2.conf");
+        std::fs::write(&path, "# comment\n\nmethod = mezo # inline\nsteps=5\n").unwrap();
+        let c = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.method, Method::Mezo);
+        assert_eq!(c.steps, 5);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn method_parse_display_round_trip() {
+        for m in ["zero-shot", "icl", "ft", "mezo", "lezo", "smezo"] {
+            let parsed: Method = m.parse().unwrap();
+            assert_eq!(parsed.to_string(), m);
+        }
+    }
+
+    #[test]
+    fn grids_contain_paper_methods() {
+        let g = grids();
+        for k in ["lezo", "mezo", "lezo-prefix", "mezo-prefix", "lezo-lora", "mezo-lora", "ft"] {
+            assert!(g.contains_key(k), "{k}");
+        }
+    }
+}

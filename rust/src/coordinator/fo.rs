@@ -1,0 +1,217 @@
+//! First-order substrate: SGD + Adam over the AOT'd `forward_backward`
+//! executable. This is the paper's "FT (12x memory)" baseline and the
+//! in-repo pretraining path (DESIGN.md S11).
+//!
+//! Unlike the ZO hot loop, FO deliberately round-trips gradients through the
+//! host: Adam moments live in Rust, mirroring the paper's point that FO
+//! fine-tuning pays for gradients + optimizer state + activations while ZO
+//! pays for parameters only (`metrics::MemoryModel`).
+
+use crate::data::batch::Batch;
+use crate::model::ParamStore;
+use crate::runtime::exes::{ExeRegistry, Family};
+use crate::runtime::{run1, Runtime};
+use anyhow::{ensure, Context, Result};
+
+/// Which FO update rule to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FoRule {
+    Sgd,
+    Adam,
+}
+
+/// Adam state (one moment pair per unit), plus plain-SGD as the degenerate
+/// case. Host-resident by design (see module docs).
+pub struct FoOptimizer {
+    rule: FoRule,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u64,
+    m: Vec<Vec<f64>>,
+    v: Vec<Vec<f64>>,
+}
+
+impl FoOptimizer {
+    pub fn sgd() -> FoOptimizer {
+        FoOptimizer { rule: FoRule::Sgd, beta1: 0.0, beta2: 0.0, eps: 0.0, t: 0, m: vec![], v: vec![] }
+    }
+
+    pub fn adam(beta1: f64, beta2: f64, eps: f64) -> FoOptimizer {
+        FoOptimizer { rule: FoRule::Adam, beta1, beta2, eps, t: 0, m: vec![], v: vec![] }
+    }
+
+    /// Bytes of optimizer state currently held (memory accounting).
+    pub fn state_bytes(&self) -> usize {
+        8 * (self.m.iter().map(Vec::len).sum::<usize>()
+            + self.v.iter().map(Vec::len).sum::<usize>())
+    }
+
+    /// Apply one update in place: `params[k][i] -= lr * step(g)`.
+    pub fn update(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f64) {
+        debug_assert_eq!(params.len(), grads.len());
+        match self.rule {
+            FoRule::Sgd => {
+                for (p, g) in params.iter_mut().zip(grads) {
+                    for (pi, gi) in p.iter_mut().zip(g) {
+                        *pi -= (lr * *gi as f64) as f32;
+                    }
+                }
+            }
+            FoRule::Adam => {
+                if self.m.is_empty() {
+                    self.m = params.iter().map(|p| vec![0.0; p.len()]).collect();
+                    self.v = params.iter().map(|p| vec![0.0; p.len()]).collect();
+                }
+                self.t += 1;
+                let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+                let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+                for k in 0..params.len() {
+                    let (p, g) = (&mut params[k], &grads[k]);
+                    let (m, v) = (&mut self.m[k], &mut self.v[k]);
+                    for i in 0..p.len() {
+                        let gi = g[i] as f64;
+                        m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
+                        v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gi * gi;
+                        let mhat = m[i] / bc1;
+                        let vhat = v[i] / bc2;
+                        p[i] -= (lr * mhat / (vhat.sqrt() + self.eps)) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// FO engine: runs forward_backward and applies the optimizer. Parameters
+/// are mirrored on the host between steps (uploaded once per step).
+pub struct FoEngine<'r> {
+    rt: &'r Runtime,
+    reg: &'r ExeRegistry,
+}
+
+impl<'r> FoEngine<'r> {
+    pub fn new(rt: &'r Runtime, reg: &'r ExeRegistry) -> FoEngine<'r> {
+        FoEngine { rt, reg }
+    }
+
+    /// Compute (loss, grads) for a batch against host-side parameters.
+    pub fn loss_and_grads(
+        &self,
+        host_params: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let exe = self.reg.get(self.rt, Family::ForwardBackward, batch.seq)?;
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(host_params.len() + 3);
+        for u in host_params {
+            args.push(self.rt.vec_f32(u)?);
+        }
+        args.push(self.rt.mat_i32(&batch.tokens, batch.rows, batch.seq)?);
+        args.push(self.rt.mat_i32(&batch.targets, batch.rows, batch.seq)?);
+        args.push(self.rt.mat_f32(&batch.mask, batch.rows, batch.seq)?);
+        let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        let out = run1(&exe, &refs).context("forward_backward")?;
+        let parts = self.rt.read_tuple(&out)?;
+        ensure!(
+            parts.len() == host_params.len() + 1,
+            "forward_backward returned {} outputs, expected {}",
+            parts.len(),
+            host_params.len() + 1
+        );
+        let loss = parts[0].get_first_element::<f32>()?;
+        let grads = parts[1..]
+            .iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    /// One FO step over a host parameter mirror.
+    pub fn fo_step(
+        &self,
+        host_params: &mut Vec<Vec<f32>>,
+        batch: &Batch,
+        opt: &mut FoOptimizer,
+        lr: f64,
+    ) -> Result<f32> {
+        let (loss, grads) = self.loss_and_grads(host_params, batch)?;
+        opt.update(host_params, &grads, lr);
+        Ok(loss)
+    }
+
+    /// Upload a host mirror into a fresh ParamStore (after FO training).
+    pub fn to_store(
+        &self,
+        manifest: &crate::model::Manifest,
+        host_params: &[Vec<f32>],
+    ) -> Result<ParamStore> {
+        ParamStore::from_host(self.rt, manifest, host_params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+    use std::path::PathBuf;
+
+    fn art() -> PathBuf {
+        let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        PathBuf::from(root).join("opt-micro")
+    }
+
+    fn have() -> bool {
+        art().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn adam_moves_toward_minimum() {
+        // pure optimizer math: minimize (x-3)^2 elementwise
+        let mut opt = FoOptimizer::adam(0.9, 0.999, 1e-8);
+        let mut p = vec![vec![0.0f32; 4]];
+        for _ in 0..200 {
+            let g: Vec<f32> = p[0].iter().map(|&x| 2.0 * (x - 3.0)).collect();
+            opt.update(&mut p, &[g], 0.1);
+        }
+        for &x in &p[0] {
+            assert!((x - 3.0).abs() < 0.1, "x={x}");
+        }
+        assert!(opt.state_bytes() > 0);
+    }
+
+    #[test]
+    fn sgd_matches_hand_rule() {
+        let mut opt = FoOptimizer::sgd();
+        let mut p = vec![vec![1.0f32, 2.0]];
+        opt.update(&mut p, &[vec![0.5, -1.0]], 0.1);
+        assert!((p[0][0] - 0.95).abs() < 1e-6);
+        assert!((p[0][1] - 2.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grads_decrease_loss() {
+        if !have() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let m = Manifest::load(&art()).unwrap();
+        let reg = ExeRegistry::new(m.clone());
+        let eng = FoEngine::new(&rt, &reg);
+        let mut params = m.read_init_params().unwrap();
+        // toy LM batch
+        let seqs: Vec<Vec<u32>> = (0..m.train_batch)
+            .map(|r| (0..12u32).map(|i| 10 + ((r as u32 + i) % 50)).collect())
+            .collect();
+        let batch = Batch::lm_batch(&seqs, m.train_batch, 16).unwrap();
+        let (l0, grads) = eng.loss_and_grads(&params, &batch).unwrap();
+        assert!(l0.is_finite() && l0 > 0.0);
+        assert_eq!(grads.len(), params.len());
+        let mut opt = FoOptimizer::sgd();
+        for _ in 0..5 {
+            eng.fo_step(&mut params, &batch, &mut opt, 0.5).unwrap();
+        }
+        let (l1, _) = eng.loss_and_grads(&params, &batch).unwrap();
+        assert!(l1 < l0, "loss must decrease: {l0} -> {l1}");
+    }
+}

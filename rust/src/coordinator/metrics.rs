@@ -1,0 +1,157 @@
+//! Stage-level timing (Fig. 2 / 4 / 5 / 6 instrumentation) and the memory
+//! accounting model behind the paper's "FT costs 12x" comparison.
+
+use std::time::Instant;
+
+/// Cumulative wall time per ZO-step stage.
+#[derive(Debug, Clone, Default)]
+pub struct StageTimes {
+    pub perturb_secs: f64,
+    pub forward_secs: f64,
+    pub update_secs: f64,
+    pub other_secs: f64,
+    pub steps: u64,
+}
+
+impl StageTimes {
+    pub fn total(&self) -> f64 {
+        self.perturb_secs + self.forward_secs + self.update_secs + self.other_secs
+    }
+
+    pub fn per_step_ms(&self) -> (f64, f64, f64, f64) {
+        let n = self.steps.max(1) as f64;
+        (
+            1e3 * self.perturb_secs / n,
+            1e3 * self.forward_secs / n,
+            1e3 * self.update_secs / n,
+            1e3 * self.other_secs / n,
+        )
+    }
+
+    /// Fraction of step time spent outside the forward pass — the paper's
+    /// headline observation is that this exceeds 0.5 for MeZO.
+    pub fn non_forward_fraction(&self) -> f64 {
+        let t = self.total();
+        if t <= 0.0 {
+            0.0
+        } else {
+            (t - self.forward_secs) / t
+        }
+    }
+
+    pub fn merge(&mut self, other: &StageTimes) {
+        self.perturb_secs += other.perturb_secs;
+        self.forward_secs += other.forward_secs;
+        self.update_secs += other.update_secs;
+        self.other_secs += other.other_secs;
+        self.steps += other.steps;
+    }
+}
+
+/// Scoped stage timer.
+pub struct StageTimer {
+    start: Instant,
+}
+
+impl StageTimer {
+    pub fn start() -> StageTimer {
+        StageTimer { start: Instant::now() }
+    }
+
+    pub fn lap(&mut self) -> f64 {
+        let t = self.start.elapsed().as_secs_f64();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Analytic fine-tuning memory model (bytes), mirroring the paper's Table-1
+/// "FT (12x memory)" comparison. ZO keeps parameters only; FO-Adam keeps
+/// parameters + gradients + two moment buffers + activations.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    pub params: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+}
+
+impl MemoryModel {
+    pub fn zo_bytes(&self) -> usize {
+        4 * self.params // fp32 weights; z is regenerated, never stored
+    }
+
+    pub fn adam_bytes(&self) -> usize {
+        // weights + grads + m + v
+        let opt = 4 * 4 * self.params;
+        opt + self.activation_bytes()
+    }
+
+    pub fn activation_bytes(&self) -> usize {
+        // per layer: ~ (attn scores + 4 residual-width tensors + mlp 4x)
+        let per_layer = self.batch * self.seq * (self.d_model * 10 + self.seq);
+        4 * per_layer * self.n_layers
+    }
+
+    pub fn ft_over_zo(&self) -> f64 {
+        self.adam_bytes() as f64 / self.zo_bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sane() {
+        let s = StageTimes {
+            perturb_secs: 3.0,
+            forward_secs: 4.0,
+            update_secs: 2.0,
+            other_secs: 1.0,
+            steps: 10,
+        };
+        assert!((s.total() - 10.0).abs() < 1e-12);
+        assert!((s.non_forward_fraction() - 0.6).abs() < 1e-12);
+        let (p, f, u, o) = s.per_step_ms();
+        assert_eq!((p, f, u, o), (300.0, 400.0, 200.0, 100.0));
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = StageTimes { perturb_secs: 1.0, steps: 2, ..Default::default() };
+        let b = StageTimes { perturb_secs: 2.0, forward_secs: 5.0, steps: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.perturb_secs, 3.0);
+        assert_eq!(a.forward_secs, 5.0);
+        assert_eq!(a.steps, 5);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = StageTimes::default();
+        assert_eq!(s.non_forward_fraction(), 0.0);
+    }
+
+    #[test]
+    fn memory_model_ft_multiple() {
+        // at small batch the Adam-state 4x dominates; activations push the
+        // multiple toward the paper's ~12x as batch*seq grows vs params
+        let m = MemoryModel { params: 237_000, batch: 16, seq: 64, d_model: 64, n_layers: 4 };
+        let r = m.ft_over_zo();
+        assert!(r > 4.0, "{r}");
+        let big_batch = MemoryModel { batch: 64, ..m };
+        assert!(big_batch.ft_over_zo() > r);
+    }
+
+    #[test]
+    fn timer_laps() {
+        let mut t = StageTimer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let a = t.lap();
+        assert!(a >= 0.001);
+        let b = t.lap();
+        assert!(b < a + 0.05);
+    }
+}

@@ -1,0 +1,25 @@
+//! The L3 coordinator — the paper's system contribution.
+//!
+//! - [`selector`]: dynamic layer-wise sparsity (which units are perturbed +
+//!   updated each step; MeZO is the `n_drop = 0` special case).
+//! - [`spsa`]: the ZO engine — seeded perturbation via the AOT'd `zo_axpy`
+//!   kernel, two forward passes, projected-gradient update (Algorithm 1).
+//! - [`fo`]: the first-order substrate (SGD / Adam over the AOT'd
+//!   `forward_backward` executable) — the paper's "FT" baseline and the
+//!   in-repo pretraining path.
+//! - [`trainer`]: the training loop gluing data, engine, eval and
+//!   checkpointing together.
+//! - [`metrics`]: per-stage wall-time accounting (Figs. 2/4/5/6) and the
+//!   analytic memory model (the "FT = 12x memory" comparison).
+
+pub mod fo;
+pub mod metrics;
+pub mod policy;
+pub mod selector;
+pub mod spsa;
+pub mod trainer;
+
+pub use policy::{Policy, PolicySelector};
+pub use selector::LayerSelector;
+pub use spsa::SpsaEngine;
+pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,274 @@
+//! Layer-selection policies — the ablation axis behind the paper's §4.1
+//! design choice ("we employ a simple and efficient random selection
+//! strategy, avoiding the need for new parameter modules").
+//!
+//! The paper picks uniform random per step. Plausible alternatives that
+//! other work uses (LISA's importance sampling, round-robin freezing
+//! schedules) are implemented here so `lezo bench ablation` can show what
+//! the choice costs or buys:
+//!
+//! - [`Policy::Uniform`]   — the paper: fresh uniform sample per step.
+//! - [`Policy::RoundRobin`] — deterministic rotation; every block is active
+//!   exactly `keep` out of every `N` steps (FreezeOut/AutoFreeze-shaped).
+//! - [`Policy::Stratified`] — random but coverage-balanced: a reshuffled
+//!   permutation is consumed in windows, so within each epoch of
+//!   ceil(N/keep) steps every block is active at least once.
+//! - [`Policy::Weighted`]  — importance-proportional sampling from running
+//!   per-block scores fed back by the trainer (|projected grad| credit, the
+//!   LISA-like variant). Costs O(N) state — still negligible.
+
+use crate::rng::{derive, purpose, Rng};
+use anyhow::Result;
+use std::str::FromStr;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Uniform,
+    RoundRobin,
+    Stratified,
+    Weighted,
+}
+
+impl FromStr for Policy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "uniform" | "random" => Policy::Uniform,
+            "round-robin" | "roundrobin" | "rr" => Policy::RoundRobin,
+            "stratified" => Policy::Stratified,
+            "weighted" | "importance" => Policy::Weighted,
+            _ => anyhow::bail!("unknown policy '{s}' (uniform|round-robin|stratified|weighted)"),
+        })
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Policy::Uniform => "uniform",
+            Policy::RoundRobin => "round-robin",
+            Policy::Stratified => "stratified",
+            Policy::Weighted => "weighted",
+        })
+    }
+}
+
+/// Stateful selector generalizing [`super::selector::LayerSelector`] to the
+/// ablation policies. `Uniform` reproduces the paper's selector exactly
+/// (same seed derivation), so the default path is unchanged.
+#[derive(Debug, Clone)]
+pub struct PolicySelector {
+    sparsifiable: Vec<usize>,
+    always_active: Vec<usize>,
+    n_drop: usize,
+    run_seed: u64,
+    policy: Policy,
+    /// Weighted policy: running importance score per sparsifiable slot.
+    scores: Vec<f64>,
+    /// Stratified policy: current permutation + cursor.
+    perm: Vec<usize>,
+    cursor: usize,
+}
+
+impl PolicySelector {
+    pub fn new(
+        sparsifiable: Vec<usize>,
+        always_active: Vec<usize>,
+        n_drop: usize,
+        run_seed: u64,
+        policy: Policy,
+    ) -> Result<PolicySelector> {
+        anyhow::ensure!(n_drop <= sparsifiable.len(), "cannot drop more units than exist");
+        let n = sparsifiable.len();
+        Ok(PolicySelector {
+            sparsifiable,
+            always_active,
+            n_drop,
+            run_seed,
+            policy,
+            scores: vec![1.0; n],
+            perm: (0..n).collect(),
+            cursor: 0,
+        })
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    fn keep(&self) -> usize {
+        self.sparsifiable.len() - self.n_drop
+    }
+
+    /// Active units for `step`. Unlike the paper's stateless uniform
+    /// selector, some policies advance internal state — call exactly once
+    /// per step (the trainer does).
+    pub fn next_active(&mut self, step: u64) -> Vec<usize> {
+        let n = self.sparsifiable.len();
+        let keep = self.keep();
+        let kept_slots: Vec<usize> = match self.policy {
+            Policy::Uniform => {
+                let mut rng = Rng::new(derive(self.run_seed, purpose::SELECTOR, step));
+                rng.sample_indices(n, keep)
+            }
+            Policy::RoundRobin => {
+                (0..keep).map(|i| ((step as usize * keep) + i) % n.max(1)).collect()
+            }
+            Policy::Stratified => {
+                let mut out = Vec::with_capacity(keep);
+                for _ in 0..keep {
+                    if self.cursor == 0 {
+                        let mut rng =
+                            Rng::new(derive(self.run_seed, purpose::SELECTOR, step ^ 0x57A7));
+                        rng.shuffle(&mut self.perm);
+                    }
+                    out.push(self.perm[self.cursor]);
+                    self.cursor = (self.cursor + 1) % n.max(1);
+                }
+                out
+            }
+            Policy::Weighted => {
+                // weighted sampling without replacement (Efraimidis-Spirakis
+                // keys: u^(1/w) ranking)
+                let mut rng = Rng::new(derive(self.run_seed, purpose::SELECTOR, step));
+                let mut keyed: Vec<(f64, usize)> = self
+                    .scores
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &w)| {
+                        let u = rng.f64().max(1e-12);
+                        (u.powf(1.0 / w.max(1e-9)), i)
+                    })
+                    .collect();
+                keyed.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                keyed.into_iter().take(keep).map(|(_, i)| i).collect()
+            }
+        };
+        let mut active: Vec<usize> = self.always_active.clone();
+        active.extend(kept_slots.into_iter().map(|i| self.sparsifiable[i]));
+        active.sort_unstable();
+        active.dedup();
+        active
+    }
+
+    /// Feedback for the Weighted policy: credit the units that were active
+    /// for a step with the magnitude of its projected gradient (EMA).
+    pub fn feedback(&mut self, active: &[usize], projected_grad: f32) {
+        if self.policy != Policy::Weighted {
+            return;
+        }
+        let g = (projected_grad.abs() as f64).min(1e3);
+        for (slot, &unit) in self.sparsifiable.iter().enumerate() {
+            if active.contains(&unit) {
+                self.scores[slot] = 0.9 * self.scores[slot] + 0.1 * (g + 1e-3);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn sel(policy: Policy, n_drop: usize) -> PolicySelector {
+        PolicySelector::new((1..=8).collect(), vec![0, 9], n_drop, 42, policy).unwrap()
+    }
+
+    #[test]
+    fn parse_display_round_trip() {
+        for p in ["uniform", "round-robin", "stratified", "weighted"] {
+            let parsed: Policy = p.parse().unwrap();
+            assert_eq!(parsed.to_string(), p);
+        }
+        assert!("nope".parse::<Policy>().is_err());
+    }
+
+    #[test]
+    fn uniform_matches_paper_selector() {
+        // exact-match against the paper's LayerSelector: same derivation
+        let paper =
+            crate::coordinator::LayerSelector::new((1..=8).collect(), vec![0, 9], 5, 42).unwrap();
+        let mut ours = sel(Policy::Uniform, 5);
+        for t in 0..20 {
+            assert_eq!(ours.next_active(t), paper.active_units(t), "step {t}");
+        }
+    }
+
+    #[test]
+    fn all_policies_respect_drop_count() {
+        for p in [Policy::Uniform, Policy::RoundRobin, Policy::Stratified, Policy::Weighted] {
+            let mut s = sel(p, 6);
+            for t in 0..30 {
+                let a = s.next_active(t);
+                assert_eq!(a.len(), 2 + 2, "{p}: {a:?}");
+                assert!(a.contains(&0) && a.contains(&9));
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_covers_exactly_per_cycle() {
+        let mut s = sel(Policy::RoundRobin, 6); // keep 2 of 8 -> cycle 4 steps
+        let mut counts = vec![0usize; 11];
+        for t in 0..4 {
+            for u in s.next_active(t) {
+                counts[u] += 1;
+            }
+        }
+        for b in 1..=8 {
+            assert_eq!(counts[b], 1, "block {b} must appear exactly once per cycle");
+        }
+    }
+
+    #[test]
+    fn stratified_covers_every_epoch() {
+        let mut s = sel(Policy::Stratified, 6); // keep 2/8 -> epoch 4 steps
+        for epoch in 0..5u64 {
+            let mut seen = HashSet::new();
+            for t in epoch * 4..(epoch + 1) * 4 {
+                for u in s.next_active(t) {
+                    seen.insert(u);
+                }
+            }
+            assert_eq!(seen.len(), 10, "epoch {epoch} must touch all units");
+        }
+    }
+
+    #[test]
+    fn weighted_prefers_high_score_blocks() {
+        let mut s = sel(Policy::Weighted, 4); // keep 4 of 8
+        // boost block 3's score via feedback
+        for t in 0..2000u64 {
+            let a = s.next_active(t);
+            let g = if a.contains(&3) { 5.0 } else { 0.01 };
+            s.feedback(&a, g);
+        }
+        let mut counts = vec![0usize; 11];
+        let mut probe = s.clone();
+        for t in 2000..4000u64 {
+            for u in probe.next_active(t) {
+                counts[u] += 1;
+            }
+        }
+        let block3 = counts[3] as f64;
+        let others =
+            (1..=8).filter(|&b| b != 3).map(|b| counts[b] as f64).sum::<f64>() / 7.0;
+        assert!(block3 > others, "credited block must be sampled more: {block3} vs {others}");
+    }
+
+    #[test]
+    fn weighted_without_feedback_is_roughly_uniform() {
+        let mut s = sel(Policy::Weighted, 4);
+        let mut counts = vec![0usize; 11];
+        for t in 0..4000u64 {
+            for u in s.next_active(t) {
+                counts[u] += 1;
+            }
+        }
+        for b in 1..=8 {
+            let frac = counts[b] as f64 / 4000.0;
+            assert!((frac - 0.5).abs() < 0.05, "block {b}: {frac}");
+        }
+    }
+}

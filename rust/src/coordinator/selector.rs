@@ -1,0 +1,175 @@
+//! LayerSelector: the core of LeZO (Section 4.1 of the paper).
+//!
+//! Each step, `n_drop` of the sparsifiable units (transformer blocks) are
+//! randomly *dropped*: they are skipped during perturbation and updating,
+//! never during the forward pass. Over many steps every layer is visited,
+//! so the procedure remains full-parameter fine-tuning. MeZO is exactly
+//! `n_drop = 0`.
+
+use crate::rng::{derive, purpose, Rng};
+
+#[derive(Debug, Clone)]
+pub struct LayerSelector {
+    /// Unit indices eligible for dropping (the paper: transformer blocks).
+    sparsifiable: Vec<usize>,
+    /// Unit indices always perturbed+updated (embedding, final LN — unless
+    /// the run sparsifies those too).
+    always_active: Vec<usize>,
+    n_drop: usize,
+    run_seed: u64,
+}
+
+impl LayerSelector {
+    pub fn new(
+        sparsifiable: Vec<usize>,
+        always_active: Vec<usize>,
+        n_drop: usize,
+        run_seed: u64,
+    ) -> anyhow::Result<LayerSelector> {
+        anyhow::ensure!(
+            n_drop <= sparsifiable.len(),
+            "cannot drop {n_drop} of {} sparsifiable units",
+            sparsifiable.len()
+        );
+        Ok(LayerSelector { sparsifiable, always_active, n_drop, run_seed })
+    }
+
+    pub fn n_drop(&self) -> usize {
+        self.n_drop
+    }
+
+    /// Sparsity rho over the sparsifiable pool.
+    pub fn rho(&self) -> f64 {
+        if self.sparsifiable.is_empty() {
+            0.0
+        } else {
+            self.n_drop as f64 / self.sparsifiable.len() as f64
+        }
+    }
+
+    /// Active (perturbed + updated) unit indices for a step. Deterministic
+    /// per (run_seed, step): re-invoking for the same step returns the same
+    /// set — the update phase relies on this.
+    pub fn active_units(&self, step: u64) -> Vec<usize> {
+        let mut rng = Rng::new(derive(self.run_seed, purpose::SELECTOR, step));
+        let keep = self.sparsifiable.len() - self.n_drop;
+        let kept = rng.sample_indices(self.sparsifiable.len(), keep);
+        let mut active: Vec<usize> = self.always_active.clone();
+        active.extend(kept.into_iter().map(|i| self.sparsifiable[i]));
+        active.sort_unstable();
+        active
+    }
+
+    /// Fraction of *parameters* active at a step (for the computation-saving
+    /// accounting in the benches).
+    pub fn active_param_fraction(&self, unit_lens: &[usize], step: u64) -> f64 {
+        let total: usize = self
+            .always_active
+            .iter()
+            .chain(self.sparsifiable.iter())
+            .map(|&k| unit_lens[k])
+            .sum();
+        let active: usize = self.active_units(step).iter().map(|&k| unit_lens[k]).sum();
+        active as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn sel(n_drop: usize) -> LayerSelector {
+        LayerSelector::new((1..=8).collect(), vec![0, 9], n_drop, 42).unwrap()
+    }
+
+    #[test]
+    fn deterministic_per_step() {
+        let s = sel(6);
+        assert_eq!(s.active_units(7), s.active_units(7));
+        // different steps usually differ
+        let distinct: HashSet<Vec<usize>> = (0..20).map(|t| s.active_units(t)).collect();
+        assert!(distinct.len() > 10);
+    }
+
+    #[test]
+    fn mezo_special_case_keeps_everything() {
+        let s = sel(0);
+        for t in 0..5 {
+            assert_eq!(s.active_units(t), (0..=9).collect::<Vec<_>>());
+        }
+        assert_eq!(s.rho(), 0.0);
+    }
+
+    #[test]
+    fn drop_count_respected() {
+        for n in 0..=8 {
+            let s = sel(n);
+            for t in 0..10 {
+                let active = s.active_units(t);
+                assert_eq!(active.len(), 2 + (8 - n), "n={n}");
+                // always-active present
+                assert!(active.contains(&0) && active.contains(&9));
+            }
+        }
+    }
+
+    #[test]
+    fn full_drop_leaves_always_active_only() {
+        let s = sel(8);
+        assert_eq!(s.active_units(3), vec![0, 9]);
+        assert_eq!(s.rho(), 1.0);
+    }
+
+    #[test]
+    fn over_drop_rejected() {
+        assert!(LayerSelector::new(vec![1, 2], vec![0], 3, 0).is_err());
+    }
+
+    #[test]
+    fn coverage_over_steps_every_block_visited() {
+        // property (paper §4.1): dynamic selection achieves full-parameter
+        // tuning over multiple steps
+        let s = sel(6); // keep only 2 of 8 per step
+        let mut seen: HashSet<usize> = HashSet::new();
+        for t in 0..200 {
+            for u in s.active_units(t) {
+                seen.insert(u);
+            }
+        }
+        assert_eq!(seen.len(), 10, "all units eventually active");
+    }
+
+    #[test]
+    fn selection_is_uniform_over_blocks() {
+        let s = sel(4); // keep 4 of 8
+        let mut counts = vec![0usize; 11];
+        let trials = 4000;
+        for t in 0..trials {
+            for u in s.active_units(t) {
+                counts[u] += 1;
+            }
+        }
+        for b in 1..=8 {
+            let frac = counts[b] as f64 / trials as f64;
+            assert!((frac - 0.5).abs() < 0.05, "block {b}: {frac}");
+        }
+    }
+
+    #[test]
+    fn active_param_fraction_tracks_rho() {
+        let lens = vec![100, 50, 50, 50, 50, 50, 50, 50, 50, 10]; // emb=100, blocks=50x8, ln=10
+        let s = sel(4);
+        let f = s.active_param_fraction(&lens, 0);
+        // active = 110 + 4*50 = 310 of 510
+        assert!((f - 310.0 / 510.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn different_run_seeds_give_different_schedules() {
+        let a = LayerSelector::new((1..=8).collect(), vec![0], 4, 1).unwrap();
+        let b = LayerSelector::new((1..=8).collect(), vec![0], 4, 2).unwrap();
+        let same = (0..20).filter(|&t| a.active_units(t) == b.active_units(t)).count();
+        assert!(same < 10);
+    }
+}

@@ -1,0 +1,552 @@
+//! The training loop: data sampling, the ZO/FO engines, periodic evaluation,
+//! checkpointing, and run reporting. One [`Trainer::run`] call reproduces one
+//! cell of the paper's tables; the bench harness sweeps it.
+
+use crate::config::{Method, RunConfig};
+use crate::coordinator::fo::{FoEngine, FoOptimizer};
+use crate::coordinator::metrics::StageTimes;
+use crate::coordinator::policy::PolicySelector;
+use crate::coordinator::spsa::{SpsaEngine, TunableUnits};
+use crate::data::batch::{bucket_for_instances, Batch};
+use crate::data::corpus::CorpusGen;
+use crate::eval::{icl, EvalMetric, Evaluator};
+use crate::model::{checkpoint, Manifest, ParamStore};
+use crate::peft::PeftMode;
+use crate::rng::{derive, purpose, Rng};
+use crate::runtime::exes::{ExeRegistry, Family};
+use crate::runtime::{run1, Runtime};
+use crate::tasks::{eval_set, make_task, Example, TaskKind};
+use anyhow::{bail, Context, Result};
+
+/// One point on the convergence curve (Fig. 1): metric after `step` steps
+/// and `train_secs` of *training* wall time (eval time excluded).
+#[derive(Debug, Clone, Copy)]
+pub struct EvalPoint {
+    pub step: u64,
+    pub train_secs: f64,
+    pub metric: f64,
+    pub train_loss: f32,
+}
+
+/// Everything a finished run reports; the bench harness consumes this.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub task: String,
+    pub method: Method,
+    pub metric_kind: &'static str,
+    /// Final-checkpoint metric (paper: best-validation checkpoint; we keep
+    /// both final and best).
+    pub final_metric: f64,
+    pub best_metric: f64,
+    pub history: Vec<EvalPoint>,
+    pub losses: Vec<f32>,
+    pub stage_times: StageTimes,
+    pub train_secs: f64,
+    /// Mean fraction of parameters perturbed+updated per step (1.0 = MeZO).
+    pub active_param_fraction: f64,
+    /// Mean prompt token length of the training batches (Fig. 6 axis).
+    pub mean_input_len: f64,
+}
+
+impl TrainReport {
+    /// First training time at which the metric reached `target` (None if
+    /// never) — the convergence-speedup measurement of Figs. 1 and 5.
+    pub fn time_to_metric(&self, target: f64) -> Option<f64> {
+        self.history.iter().find(|p| p.metric >= target).map(|p| p.train_secs)
+    }
+
+    pub fn steps_to_metric(&self, target: f64) -> Option<u64> {
+        self.history.iter().find(|p| p.metric >= target).map(|p| p.step)
+    }
+
+    pub fn per_step_ms(&self) -> f64 {
+        1e3 * self.stage_times.total() / self.stage_times.steps.max(1) as f64
+    }
+}
+
+/// Trainer: configured once, `run()` executes the whole fine-tuning run.
+pub struct Trainer {
+    pub cfg: RunConfig,
+}
+
+impl Trainer {
+    pub fn new(cfg: RunConfig) -> Trainer {
+        Trainer { cfg }
+    }
+
+    /// Execute the configured run end to end.
+    pub fn run(&self) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir()))?;
+        let reg = ExeRegistry::new(manifest.clone());
+        let task = make_task(&cfg.task)?;
+        let evals = eval_set(task.as_ref(), cfg.seed, cfg.eval_examples, cfg.mean_len);
+
+        let (host_init, source) = checkpoint::resolve_initial(&manifest, &cfg.checkpoint)?;
+        crate::info!(
+            "run: model={} task={} method={} peft={} n_drop={} lr={} mu={} steps={} seed={} init={}",
+            cfg.model, cfg.task, cfg.method, cfg.peft, cfg.drop_layers,
+            cfg.lr, cfg.mu, cfg.steps, cfg.seed, source
+        );
+
+        match cfg.method {
+            Method::ZeroShot => self.run_no_train(&rt, &reg, &manifest, task.kind(), &evals, &host_init, false, task.as_ref()),
+            Method::Icl => self.run_no_train(&rt, &reg, &manifest, task.kind(), &evals, &host_init, true, task.as_ref()),
+            Method::Ft => self.run_fo(&rt, &reg, &manifest, task.as_ref(), &evals, host_init),
+            Method::Mezo | Method::Lezo | Method::Smezo => {
+                self.run_zo(&rt, &reg, &manifest, task.as_ref(), &evals, host_init)
+            }
+        }
+    }
+
+    // ---- no-training baselines ---------------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_no_train(
+        &self,
+        rt: &Runtime,
+        reg: &ExeRegistry,
+        manifest: &Manifest,
+        kind: TaskKind,
+        evals: &[Example],
+        host_init: &[Vec<f32>],
+        use_icl: bool,
+        task: &dyn crate::tasks::Task,
+    ) -> Result<TrainReport> {
+        let store = ParamStore::from_host(rt, manifest, host_init)?;
+        let ev = Evaluator::new(rt, reg);
+        let examples = if use_icl {
+            let budget = *manifest.seq_buckets.iter().max().unwrap();
+            icl::icl_eval_set(task, self.cfg.seed, self.cfg.icl_shots, evals, budget)
+        } else {
+            evals.to_vec()
+        };
+        let metric = ev.evaluate(kind, &store.unit_refs(), &examples)?;
+        Ok(TrainReport {
+            task: self.cfg.task.clone(),
+            method: self.cfg.method,
+            metric_kind: metric.kind,
+            final_metric: metric.value,
+            best_metric: metric.value,
+            history: vec![EvalPoint { step: 0, train_secs: 0.0, metric: metric.value, train_loss: 0.0 }],
+            losses: vec![],
+            stage_times: StageTimes::default(),
+            train_secs: 0.0,
+            active_param_fraction: 0.0,
+            mean_input_len: crate::stats::mean(
+                &examples.iter().map(|e| e.prompt.len() as f64).collect::<Vec<_>>(),
+            ),
+        })
+    }
+
+    // ---- shared loop plumbing ----------------------------------------------
+
+    /// Deterministic training pool + per-step batch sampler.
+    fn train_pool(&self, task: &dyn crate::tasks::Task) -> Vec<Example> {
+        let mut rng = Rng::new(derive(self.cfg.seed, purpose::DATA, 1));
+        (0..self.cfg.train_examples.max(self.cfg.steps.min(64)))
+            .map(|_| task.gen(&mut rng, self.cfg.mean_len))
+            .collect()
+    }
+
+    fn sample_batch(
+        &self,
+        pool: &[Example],
+        rng: &mut Rng,
+        manifest: &Manifest,
+    ) -> Result<(Batch, f64)> {
+        let rows = manifest.train_batch;
+        let instances: Vec<_> =
+            (0..rows).map(|_| rng.choice(pool).train_instance()).collect();
+        let mean_prompt = crate::stats::mean(
+            &instances.iter().map(|i| i.prompt.len() as f64).collect::<Vec<_>>(),
+        );
+        let seq = bucket_for_instances(&manifest.seq_buckets, &instances)?;
+        Ok((Batch::from_instances(&instances, rows, seq)?, mean_prompt))
+    }
+
+    // ---- ZO (MeZO / LeZO) ---------------------------------------------------
+
+    fn run_zo(
+        &self,
+        rt: &Runtime,
+        reg: &ExeRegistry,
+        manifest: &Manifest,
+        task: &dyn crate::tasks::Task,
+        evals: &[Example],
+        host_init: Vec<Vec<f32>>,
+    ) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        if cfg.method == Method::Mezo && cfg.drop_layers != 0 {
+            bail!("MeZO is LeZO with drop_layers=0; got drop_layers={}", cfg.drop_layers);
+        }
+        if cfg.method == Method::Smezo {
+            anyhow::ensure!(cfg.drop_layers == 0, "Sparse-MeZO masks elements, not layers");
+            anyhow::ensure!(cfg.peft == PeftMode::Full, "Sparse-MeZO baseline is full-parameter");
+        }
+        let store = ParamStore::from_host(rt, manifest, &host_init)?;
+
+        // Sparse-MeZO: per-unit magnitude thresholds (the ranking step whose
+        // cost the paper criticizes — timed into `other_secs`).
+        let mut times = StageTimes::default();
+        let taus: Vec<xla::PjRtBuffer> = if cfg.method == Method::Smezo {
+            let sw = crate::util::Stopwatch::start();
+            let t = host_init
+                .iter()
+                .map(|u| {
+                    let mut mags: Vec<f32> = u.iter().map(|x| x.abs()).collect();
+                    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    let idx = ((mags.len() as f64 - 1.0) * cfg.smezo_keep) as usize;
+                    rt.scalar_f32(mags[idx])
+                })
+                .collect::<Result<Vec<_>>>()?;
+            times.other_secs += sw.secs();
+            crate::info!("smezo: ranked {} units in {:.2}s", t.len(), times.other_secs);
+            t
+        } else {
+            vec![]
+        };
+
+        // Tunable space + forward families, by PEFT mode.
+        let (mut tunable, base_refs_needed, fwd_fam, ev_fams) = self.tunable_space(rt, manifest, &store)?;
+        let mut selector = self.selector(manifest, &tunable)?;
+        let engine = SpsaEngine::new(rt, reg, cfg.mu as f32, cfg.seed)?;
+        let evaluator = match ev_fams {
+            Some((el, pr)) => Evaluator::with_families(rt, reg, el, pr),
+            None => Evaluator::new(rt, reg),
+        };
+
+        let pool = self.train_pool(task);
+        let mut data_rng = Rng::new(derive(cfg.seed, purpose::DATA, 2));
+        let mut history = Vec::new();
+        let mut losses = Vec::with_capacity(cfg.steps);
+        let mut train_secs = 0.0f64;
+        let mut best = f64::MIN;
+        let mut frac_acc = 0.0f64;
+        let mut len_acc = 0.0f64;
+
+        reg.warm_zo(rt).ok(); // exclude compilation from step timing
+
+        let eval_now = |tun: &TunableUnits| -> Result<EvalMetric> {
+            let mut units: Vec<&xla::PjRtBuffer> = Vec::new();
+            if base_refs_needed {
+                units.extend(store.unit_refs());
+            }
+            units.extend(tun.bufs.iter());
+            evaluator.evaluate(task.kind(), &units, evals)
+        };
+
+        let m0 = eval_now(&tunable)?;
+        history.push(EvalPoint { step: 0, train_secs: 0.0, metric: m0.value, train_loss: 0.0 });
+        best = best.max(m0.value);
+
+        for step in 0..cfg.steps as u64 {
+            let sw = crate::util::Stopwatch::start();
+            let (batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, manifest)?;
+            let tok = rt.mat_i32(&batch.tokens, batch.rows, batch.seq)?;
+            let tgt = rt.mat_i32(&batch.targets, batch.rows, batch.seq)?;
+            let msk = rt.mat_f32(&batch.mask, batch.rows, batch.seq)?;
+            let fwd_exe = reg.get(rt, fwd_fam, batch.seq)?;
+            let active = selector.next_active(step);
+            frac_acc += active.iter().map(|&k| tunable.lens[k]).sum::<usize>() as f64
+                / tunable.param_count() as f64;
+            len_acc += mean_prompt;
+
+            let mut loss_fn = |tun: &TunableUnits| -> Result<f32> {
+                let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+                if base_refs_needed {
+                    args.extend(store.unit_refs());
+                }
+                args.extend(tun.bufs.iter());
+                args.push(&tok);
+                args.push(&tgt);
+                args.push(&msk);
+                let out = run1(&fwd_exe, &args)?;
+                rt.read_scalar_f32(&out)
+            };
+
+            let zs = if cfg.method == Method::Smezo {
+                engine.zo_step_masked(step, &mut tunable, &taus, cfg.lr as f32, &mut loss_fn, &mut times)?
+            } else {
+                engine.zo_step(step, &mut tunable, &active, cfg.lr as f32, &mut loss_fn, &mut times)?
+            };
+            selector.feedback(&active, zs.projected_grad);
+            losses.push(zs.loss());
+            train_secs += sw.secs();
+
+            let s1 = step + 1;
+            if s1 % cfg.eval_every as u64 == 0 || s1 == cfg.steps as u64 {
+                let m = eval_now(&tunable)?;
+                best = best.max(m.value);
+                history.push(EvalPoint {
+                    step: s1,
+                    train_secs,
+                    metric: m.value,
+                    train_loss: zs.loss(),
+                });
+                crate::info!(
+                    "step {s1}: loss={:.4} {}={:.1}% ({:.1}s train)",
+                    zs.loss(), m.kind, m.pct(), train_secs
+                );
+            }
+        }
+
+        let final_metric = history.last().map(|p| p.metric).unwrap_or(m0.value);
+        Ok(TrainReport {
+            task: cfg.task.clone(),
+            method: cfg.method,
+            metric_kind: if task.kind() == TaskKind::Generation { "f1" } else { "acc" },
+            final_metric,
+            best_metric: best,
+            history,
+            losses,
+            stage_times: times,
+            train_secs,
+            active_param_fraction: frac_acc / cfg.steps.max(1) as f64,
+            mean_input_len: len_acc / cfg.steps.max(1) as f64,
+        })
+    }
+
+    /// The tunable parameter space: the model units (full fine-tuning) or
+    /// the per-block adapter units (PEFT). Returns (tunable, whether the
+    /// frozen base units prefix every forward call, forward family,
+    /// optional PEFT eval families).
+    fn tunable_space(
+        &self,
+        rt: &Runtime,
+        manifest: &Manifest,
+        store: &ParamStore,
+    ) -> Result<(TunableUnits, bool, Family, Option<(Family, Family)>)> {
+        match self.cfg.peft {
+            PeftMode::Full => {
+                // clone the store's buffers as the tunable set (the store
+                // itself stays the canonical base for checkpointing)
+                let bufs = (0..store.n_units())
+                    .map(|k| {
+                        let host = rt.read_vec_f32(store.unit(k))?;
+                        rt.vec_f32(&host)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((
+                    TunableUnits { bufs, lens: manifest.unit_lens.clone() },
+                    false,
+                    Family::ForwardLoss,
+                    None,
+                ))
+            }
+            PeftMode::Lora => {
+                let len = manifest
+                    .lora_unit_len
+                    .context("artifacts lack LoRA executables (re-run `make artifacts`)")?;
+                let host = crate::peft::init_peft_units(
+                    PeftMode::Lora,
+                    manifest.n_layers,
+                    manifest.d_model,
+                    self.cfg.seed,
+                );
+                let bufs = host.iter().map(|u| rt.vec_f32(u)).collect::<Result<Vec<_>>>()?;
+                Ok((
+                    TunableUnits { bufs, lens: vec![len; manifest.n_layers] },
+                    true,
+                    Family::ForwardLossLora,
+                    Some((Family::ExampleLossesLora, Family::PredictLora)),
+                ))
+            }
+            PeftMode::Prefix => {
+                let len = manifest
+                    .prefix_unit_len
+                    .context("artifacts lack prefix executables (re-run `make artifacts`)")?;
+                let host = crate::peft::init_peft_units(
+                    PeftMode::Prefix,
+                    manifest.n_layers,
+                    manifest.d_model,
+                    self.cfg.seed,
+                );
+                let bufs = host.iter().map(|u| rt.vec_f32(u)).collect::<Result<Vec<_>>>()?;
+                Ok((
+                    TunableUnits { bufs, lens: vec![len; manifest.n_layers] },
+                    true,
+                    Family::ForwardLossPrefix,
+                    Some((Family::ExampleLossesPrefix, Family::PredictPrefix)),
+                ))
+            }
+        }
+    }
+
+    /// The layer selector over the tunable space (paper §4.1). Under full
+    /// fine-tuning, blocks are sparsifiable and embedding/final-LN are
+    /// always active (unless blocks_only=false). Under PEFT every per-block
+    /// adapter unit is sparsifiable.
+    fn selector(&self, manifest: &Manifest, tunable: &TunableUnits) -> Result<PolicySelector> {
+        let cfg = &self.cfg;
+        match cfg.peft {
+            PeftMode::Full => {
+                let (sparsifiable, always) = if cfg.blocks_only {
+                    (
+                        manifest.block_unit_indices(),
+                        vec![0, manifest.n_units() - 1],
+                    )
+                } else {
+                    ((0..manifest.n_units()).collect(), vec![])
+                };
+                PolicySelector::new(sparsifiable, always, cfg.drop_layers, cfg.seed, cfg.policy)
+            }
+            _ => PolicySelector::new(
+                (0..tunable.n_units()).collect(),
+                vec![],
+                cfg.drop_layers,
+                cfg.seed,
+                cfg.policy,
+            ),
+        }
+    }
+
+    // ---- FO (the paper's FT baseline) ---------------------------------------
+
+    fn run_fo(
+        &self,
+        rt: &Runtime,
+        reg: &ExeRegistry,
+        manifest: &Manifest,
+        task: &dyn crate::tasks::Task,
+        evals: &[Example],
+        mut host_params: Vec<Vec<f32>>,
+    ) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let engine = FoEngine::new(rt, reg);
+        let mut opt = FoOptimizer::adam(cfg.adam_beta1, cfg.adam_beta2, cfg.adam_eps);
+        let evaluator = Evaluator::new(rt, reg);
+        let pool = self.train_pool(task);
+        let mut data_rng = Rng::new(derive(cfg.seed, purpose::DATA, 2));
+        let mut history = Vec::new();
+        let mut losses = Vec::with_capacity(cfg.steps);
+        let mut train_secs = 0.0f64;
+        let mut best = f64::MIN;
+        let mut len_acc = 0.0f64;
+        let mut times = StageTimes::default();
+
+        for step in 0..cfg.steps as u64 {
+            let sw = crate::util::Stopwatch::start();
+            let (batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, manifest)?;
+            len_acc += mean_prompt;
+            let loss = engine.fo_step(&mut host_params, &batch, &mut opt, cfg.lr)?;
+            losses.push(loss);
+            times.forward_secs += sw.secs(); // FO has no perturb/update split
+            times.steps += 1;
+            train_secs += sw.secs();
+
+            let s1 = step + 1;
+            if s1 % cfg.eval_every as u64 == 0 || s1 == cfg.steps as u64 {
+                let store = ParamStore::from_host(rt, manifest, &host_params)?;
+                let m = evaluator.evaluate(task.kind(), &store.unit_refs(), evals)?;
+                best = best.max(m.value);
+                history.push(EvalPoint { step: s1, train_secs, metric: m.value, train_loss: loss });
+                crate::info!("FT step {s1}: loss={loss:.4} {}={:.1}%", m.kind, m.pct());
+            }
+        }
+
+        let final_metric = history.last().map(|p| p.metric).unwrap_or(0.0);
+        Ok(TrainReport {
+            task: cfg.task.clone(),
+            method: cfg.method,
+            metric_kind: if task.kind() == TaskKind::Generation { "f1" } else { "acc" },
+            final_metric,
+            best_metric: best,
+            history,
+            losses,
+            stage_times: times,
+            train_secs,
+            active_param_fraction: 1.0,
+            mean_input_len: len_acc / cfg.steps.max(1) as f64,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pretraining (in-repo substitute for OPT's pretrained weights)
+// ---------------------------------------------------------------------------
+
+/// Pretrain a model on the synthetic corpus with FO-Adam and write
+/// `<artifact_dir>/pretrained.ckpt`. All fine-tuning runs then start from
+/// this checkpoint (checkpoint::resolve_initial picks it up automatically).
+pub fn pretrain(
+    artifact_dir: &std::path::Path,
+    steps: usize,
+    lr: f64,
+    seed: u64,
+    log_every: usize,
+) -> Result<(f32, f32)> {
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(artifact_dir)?;
+    let reg = ExeRegistry::new(manifest.clone());
+    let engine = FoEngine::new(&rt, &reg);
+    let mut params = manifest.read_init_params()?;
+    let mut opt = FoOptimizer::adam(0.9, 0.999, 1e-8);
+    let corpus = CorpusGen::new(manifest.vocab, manifest.max_seq);
+    let mut rng = Rng::new(derive(seed, purpose::DATA, 0xC0));
+    let seq = *manifest.seq_buckets.iter().max().unwrap();
+    let mut first_loss = 0.0f32;
+    let mut last_loss = 0.0f32;
+    for step in 0..steps {
+        let docs: Vec<Vec<u32>> = (0..manifest.train_batch)
+            .map(|_| {
+                let mut d = corpus.doc(&mut rng);
+                d.truncate(seq);
+                d
+            })
+            .collect();
+        let batch = Batch::lm_batch(&docs, manifest.train_batch, seq)?;
+        let loss = engine.fo_step(&mut params, &batch, &mut opt, lr)?;
+        if step == 0 {
+            first_loss = loss;
+        }
+        last_loss = loss;
+        if log_every > 0 && (step + 1) % log_every == 0 {
+            crate::info!("pretrain step {}: loss={loss:.4}", step + 1);
+        }
+    }
+    checkpoint::save(&artifact_dir.join("pretrained.ckpt"), steps as u64, &params)?;
+    crate::info!(
+        "pretrained {} for {steps} steps: loss {first_loss:.3} -> {last_loss:.3}",
+        manifest.name
+    );
+    Ok((first_loss, last_loss))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_time_to_metric() {
+        let mk = |step, t, m| EvalPoint { step, train_secs: t, metric: m, train_loss: 0.0 };
+        let r = TrainReport {
+            task: "sst2".into(),
+            method: Method::Lezo,
+            metric_kind: "acc",
+            final_metric: 0.9,
+            best_metric: 0.92,
+            history: vec![mk(0, 0.0, 0.5), mk(100, 10.0, 0.8), mk(200, 20.0, 0.92)],
+            losses: vec![],
+            stage_times: StageTimes::default(),
+            train_secs: 20.0,
+            active_param_fraction: 0.5,
+            mean_input_len: 20.0,
+        };
+        assert_eq!(r.time_to_metric(0.8), Some(10.0));
+        assert_eq!(r.steps_to_metric(0.9), Some(200));
+        assert_eq!(r.time_to_metric(0.95), None);
+    }
+
+    #[test]
+    fn mezo_rejects_nonzero_drop() {
+        let mut cfg = RunConfig::default();
+        cfg.method = Method::Mezo;
+        cfg.drop_layers = 3;
+        cfg.steps = 1;
+        // fails before touching the runtime only if artifacts exist; if they
+        // don't, the manifest error fires first — both are errors.
+        assert!(Trainer::new(cfg).run().is_err());
+    }
+}

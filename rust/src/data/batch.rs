@@ -1,0 +1,171 @@
+//! Batch assembly: (tokens, targets, mask) triples shaped for the AOT'd
+//! executables, with next-token-shift targets, right padding, and
+//! sequence-length bucketing.
+//!
+//! Layout contract with L2 (model.py): targets[i] = token that position i
+//! must predict (i.e. tokens[i+1] of the unpadded stream); mask[i] = 1.0
+//! where the prediction participates in the loss.
+
+use crate::data::vocab::PAD;
+use anyhow::{ensure, Result};
+
+/// One training/scoring instance before padding: the prompt and the
+/// continuation whose tokens are predicted (loss-masked).
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub prompt: Vec<u32>,
+    pub continuation: Vec<u32>,
+}
+
+impl Instance {
+    pub fn total_len(&self) -> usize {
+        self.prompt.len() + self.continuation.len()
+    }
+}
+
+/// A padded batch ready for upload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub rows: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    /// Build a batch of `rows` from up to `rows` instances (rows beyond the
+    /// instance count are fully padded/masked-out). `seq` is the bucket.
+    pub fn from_instances(instances: &[Instance], rows: usize, seq: usize) -> Result<Batch> {
+        ensure!(instances.len() <= rows, "too many instances for batch");
+        let mut tokens = vec![PAD as i32; rows * seq];
+        let mut targets = vec![PAD as i32; rows * seq];
+        let mut mask = vec![0.0f32; rows * seq];
+        for (r, inst) in instances.iter().enumerate() {
+            let total = inst.total_len();
+            ensure!(total <= seq, "instance length {total} exceeds bucket {seq}");
+            ensure!(!inst.prompt.is_empty(), "empty prompt");
+            let stream: Vec<u32> =
+                inst.prompt.iter().chain(inst.continuation.iter()).copied().collect();
+            for (i, &t) in stream.iter().enumerate() {
+                tokens[r * seq + i] = t as i32;
+            }
+            // next-token targets over the real stream
+            for i in 0..total - 1 {
+                targets[r * seq + i] = stream[i + 1] as i32;
+            }
+            // loss over continuation predictions: positions P-1 .. P+C-2
+            let p = inst.prompt.len();
+            for i in 0..inst.continuation.len() {
+                mask[r * seq + (p - 1 + i)] = 1.0;
+            }
+        }
+        Ok(Batch { tokens, targets, mask, rows, seq })
+    }
+
+    /// Full-LM batch (pretraining): every next-token prediction counts.
+    pub fn lm_batch(seqs: &[Vec<u32>], rows: usize, seq: usize) -> Result<Batch> {
+        ensure!(seqs.len() <= rows, "too many sequences for batch");
+        let mut tokens = vec![PAD as i32; rows * seq];
+        let mut targets = vec![PAD as i32; rows * seq];
+        let mut mask = vec![0.0f32; rows * seq];
+        for (r, s) in seqs.iter().enumerate() {
+            ensure!(s.len() <= seq, "sequence too long for bucket");
+            for (i, &t) in s.iter().enumerate() {
+                tokens[r * seq + i] = t as i32;
+            }
+            for i in 0..s.len().saturating_sub(1) {
+                targets[r * seq + i] = s[i + 1] as i32;
+                mask[r * seq + i] = 1.0;
+            }
+        }
+        Ok(Batch { tokens, targets, mask, rows, seq })
+    }
+
+    /// Count of loss-participating positions.
+    pub fn active_positions(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+}
+
+/// Pick the smallest bucket fitting the longest instance.
+pub fn bucket_for_instances(buckets: &[usize], instances: &[Instance]) -> Result<usize> {
+    let need = instances.iter().map(Instance::total_len).max().unwrap_or(1);
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= need)
+        .min()
+        .ok_or_else(|| anyhow::anyhow!("instances need {need} tokens, larger than any bucket"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(p: &[u32], c: &[u32]) -> Instance {
+        Instance { prompt: p.to_vec(), continuation: c.to_vec() }
+    }
+
+    #[test]
+    fn shift_targets_and_mask() {
+        let b = Batch::from_instances(&[inst(&[1, 10, 2], &[16])], 1, 8).unwrap();
+        assert_eq!(&b.tokens[..4], &[1, 10, 2, 16]);
+        // targets: position i predicts tokens[i+1]
+        assert_eq!(&b.targets[..3], &[10, 2, 16]);
+        // only the SEP position (index 2 = prompt_len-1) predicts the verbalizer
+        assert_eq!(b.mask[2], 1.0);
+        assert_eq!(b.active_positions(), 1);
+    }
+
+    #[test]
+    fn multi_token_continuation_mask() {
+        let b = Batch::from_instances(&[inst(&[1, 5], &[7, 8, 3])], 1, 8).unwrap();
+        // positions 1, 2, 3 predict 7, 8, 3
+        assert_eq!(b.mask[1], 1.0);
+        assert_eq!(b.mask[2], 1.0);
+        assert_eq!(b.mask[3], 1.0);
+        assert_eq!(b.active_positions(), 3);
+        assert_eq!(b.targets[1], 7);
+        assert_eq!(b.targets[2], 8);
+        assert_eq!(b.targets[3], 3);
+    }
+
+    #[test]
+    fn padding_rows_are_masked_out() {
+        let b = Batch::from_instances(&[inst(&[1, 2], &[3])], 4, 8).unwrap();
+        assert_eq!(b.rows, 4);
+        for r in 1..4 {
+            for i in 0..8 {
+                assert_eq!(b.mask[r * 8 + i], 0.0);
+                assert_eq!(b.tokens[r * 8 + i], PAD as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_oversize() {
+        let long = inst(&[1; 10], &[2; 10]);
+        assert!(Batch::from_instances(&[long], 1, 16).is_err());
+        assert!(Batch::from_instances(&vec![inst(&[1], &[2]); 3], 2, 8).is_err());
+    }
+
+    #[test]
+    fn lm_batch_masks_everything_but_padding() {
+        let b = Batch::lm_batch(&[vec![1, 2, 3, 4]], 2, 8).unwrap();
+        assert_eq!(b.active_positions(), 3); // 3 next-token predictions
+        assert_eq!(&b.targets[..3], &[2, 3, 4]);
+        assert_eq!(b.mask[3], 0.0); // last real token predicts nothing
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        let buckets = [16, 32, 64];
+        let short = [inst(&[1; 4], &[1])];
+        assert_eq!(bucket_for_instances(&buckets, &short).unwrap(), 16);
+        let medium = [inst(&[1; 20], &[1; 5])];
+        assert_eq!(bucket_for_instances(&buckets, &medium).unwrap(), 32);
+        let too_long = [inst(&[1; 70], &[1])];
+        assert!(bucket_for_instances(&buckets, &too_long).is_err());
+    }
+}

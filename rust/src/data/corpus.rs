@@ -1,0 +1,151 @@
+//! Synthetic pretraining corpus.
+//!
+//! Stands in for OPT's pretraining data (DESIGN.md substitution table): a
+//! mixture of (a) plain filler sentences with a planted bigram structure
+//! (so the LM objective has learnable signal) and (b) task-formatted
+//! documents whose labels follow each task's rule only with its
+//! `pretrain_hint` probability. This mirrors the real mechanism that makes
+//! MeZO-style fine-tuning work — the pretrained model already almost knows
+//! the task format, and fine-tuning sharpens it.
+
+use crate::data::vocab as v;
+use crate::rng::Rng;
+use crate::tasks::{make_task, Task, ALL_TASKS};
+
+pub struct CorpusGen {
+    vocab: usize,
+    max_seq: usize,
+    tasks: Vec<Box<dyn Task>>,
+    /// fraction of documents that are task-formatted (vs plain filler)
+    task_frac: f64,
+}
+
+impl CorpusGen {
+    pub fn new(vocab: usize, max_seq: usize) -> CorpusGen {
+        let tasks = ALL_TASKS.iter().map(|n| make_task(n).unwrap()).collect();
+        CorpusGen { vocab, max_seq, tasks, task_frac: 0.7 }
+    }
+
+    /// One document (token sequence, <= max_seq).
+    pub fn doc(&self, rng: &mut Rng) -> Vec<u32> {
+        if rng.bool(self.task_frac) {
+            self.task_doc(rng)
+        } else {
+            self.filler_doc(rng)
+        }
+    }
+
+    /// Task-formatted document with a hint-strength-noisy label.
+    fn task_doc(&self, rng: &mut Rng) -> Vec<u32> {
+        let task = &self.tasks[rng.below(self.tasks.len())];
+        // keep room for the continuation
+        let mean = (self.max_seq / 2).max(8);
+        let mut ex = task.gen(rng, mean);
+        if !ex.options.is_empty() && !rng.bool(task.pretrain_hint()) {
+            // corrupt the label: pick a wrong option
+            let wrong = (ex.gold + 1 + rng.below(ex.options.len() - 1)) % ex.options.len();
+            ex.gold = wrong;
+        }
+        let inst = ex.train_instance();
+        let mut doc = inst.prompt;
+        doc.extend(&inst.continuation);
+        if *doc.last().unwrap() != v::EOS {
+            doc.push(v::EOS);
+        }
+        doc.truncate(self.max_seq);
+        doc
+    }
+
+    /// Plain sentence with bigram structure: each filler token prefers a
+    /// successor in a fixed window (deterministic function of the token), so
+    /// the LM can reduce loss below uniform.
+    fn filler_doc(&self, rng: &mut Rng) -> Vec<u32> {
+        let len = rng.range(8, self.max_seq - 2);
+        let range = v::filler_range(self.vocab);
+        let width = (range.end - range.start) as usize;
+        let mut doc = vec![v::BOS];
+        let mut cur = range.start + rng.below(width) as u32;
+        for _ in 0..len {
+            doc.push(cur);
+            cur = if rng.bool(0.8) {
+                // planted bigram: successor within a small window of f(cur)
+                let base = ((cur as u64).wrapping_mul(2654435761) % width as u64) as usize;
+                range.start + ((base + rng.below(4)) % width) as u32
+            } else {
+                range.start + rng.below(width) as u32
+            };
+        }
+        doc.push(v::EOS);
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn docs_fit_and_are_in_vocab() {
+        let g = CorpusGen::new(512, 64);
+        let mut rng = Rng::new(1);
+        for _ in 0..300 {
+            let d = g.doc(&mut rng);
+            assert!(d.len() <= 64);
+            assert!(d.len() >= 3);
+            assert!(d.iter().all(|&t| (t as usize) < 512));
+            assert_eq!(d[0], v::BOS);
+        }
+    }
+
+    #[test]
+    fn mixture_contains_both_kinds() {
+        let g = CorpusGen::new(512, 64);
+        let mut rng = Rng::new(2);
+        let mut with_sep = 0;
+        let n = 300;
+        for _ in 0..n {
+            let d = g.doc(&mut rng);
+            if d.contains(&v::SEP) || d.contains(&v::ANS) {
+                with_sep += 1;
+            }
+        }
+        // ~70% task docs
+        assert!((0.5..0.9).contains(&(with_sep as f64 / n as f64)), "{with_sep}/{n}");
+    }
+
+    #[test]
+    fn bigram_structure_is_predictable() {
+        // the most frequent successor of a filler token should dominate
+        let g = CorpusGen::new(512, 64);
+        let mut rng = Rng::new(3);
+        let mut next_counts: std::collections::HashMap<u32, std::collections::HashMap<u32, usize>> =
+            Default::default();
+        for _ in 0..2000 {
+            let d = g.filler_doc(&mut rng);
+            for w in d.windows(2) {
+                if v::filler_range(512).contains(&w[0]) && v::filler_range(512).contains(&w[1]) {
+                    *next_counts.entry(w[0]).or_default().entry(w[1]).or_insert(0) += 1;
+                }
+            }
+        }
+        // aggregate: for tokens with >= 20 observations, the top-4 successor
+        // mass should be well above uniform (4/192 = 2%)
+        let mut dominated = 0;
+        let mut total = 0;
+        for (_, succ) in next_counts.iter() {
+            let n: usize = succ.values().sum();
+            if n < 20 {
+                continue;
+            }
+            total += 1;
+            let mut counts: Vec<usize> = succ.values().copied().collect();
+            counts.sort_unstable_by(|a, b| b.cmp(a));
+            let top4: usize = counts.iter().take(4).sum();
+            if top4 as f64 / n as f64 > 0.5 {
+                dominated += 1;
+            }
+        }
+        assert!(total > 20, "need data");
+        assert!(dominated as f64 / total as f64 > 0.8, "{dominated}/{total}");
+    }
+}

@@ -1,0 +1,5 @@
+//! Data substrate: vocabulary layout, batch assembly, pretraining corpus.
+
+pub mod batch;
+pub mod corpus;
+pub mod vocab;

@@ -1,0 +1,151 @@
+//! Synthetic vocabulary layout shared by every model size (min vocab 512).
+//!
+//! Token-id space is partitioned into fixed regions: special tokens,
+//! verbalizers (the single-token "answers" MeZO-style classification
+//! predicts), lexicons with planted semantics (positive/negative sentiment,
+//! entities, word-sense cues, topics) and filler. The filler region scales
+//! with the model's vocab so bigger models see a richer distribution.
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const SEP: u32 = 2;
+pub const EOS: u32 = 3;
+pub const Q: u32 = 4; // question marker
+pub const ANS: u32 = 5; // answer marker (generation tasks)
+pub const PRON: u32 = 6; // pronoun marker (WSC-like)
+pub const MARK: u32 = 7; // countable marker (DROP-like)
+pub const NEG: u32 = 8; // negation marker (CB-like contradiction)
+pub const AGREE: u32 = 9; // agreement marker (WSC-like rule)
+
+// Verbalizers: single-token answers.
+pub const V_YES: u32 = 16;
+pub const V_NO: u32 = 17;
+pub const V_MAYBE: u32 = 18;
+pub const V_POS: u32 = 19;
+pub const V_NEG: u32 = 20;
+pub const V_TRUE: u32 = 21;
+pub const V_FALSE: u32 = 22;
+
+/// Digit verbalizers d0..d9 (DROP-like counting answers).
+pub const DIGIT_BASE: u32 = 32;
+pub fn digit(n: usize) -> u32 {
+    debug_assert!(n < 10);
+    DIGIT_BASE + n as u32
+}
+
+// Lexicons with planted semantics.
+pub const LEX_POS: std::ops::Range<u32> = 48..80; // "positive sentiment" words
+pub const LEX_NEG: std::ops::Range<u32> = 80..112; // "negative sentiment" words
+pub const ENTITIES: std::ops::Range<u32> = 112..176; // named entities
+pub const SENSE_A: std::ops::Range<u32> = 176..192; // sense-A cue words (WiC)
+pub const SENSE_B: std::ops::Range<u32> = 192..208; // sense-B cue words
+pub const POLYSEMOUS: std::ops::Range<u32> = 208..224; // ambiguous words (WiC)
+
+/// Topic groups (Copa-like causal continuity): N_TOPICS groups of
+/// TOPIC_WIDTH consecutive tokens each.
+pub const TOPIC_BASE: u32 = 224;
+pub const N_TOPICS: usize = 16;
+pub const TOPIC_WIDTH: usize = 6;
+
+pub fn topic_tokens(topic: usize) -> std::ops::Range<u32> {
+    debug_assert!(topic < N_TOPICS);
+    let start = TOPIC_BASE + (topic * TOPIC_WIDTH) as u32;
+    start..start + TOPIC_WIDTH as u32
+}
+
+/// First filler id; filler extends to the model's vocab size.
+pub const FILLER_BASE: u32 = TOPIC_BASE + (N_TOPICS * TOPIC_WIDTH) as u32; // 320
+
+pub fn filler_range(vocab: usize) -> std::ops::Range<u32> {
+    debug_assert!(vocab >= 512, "vocab must be >= 512");
+    FILLER_BASE..vocab as u32
+}
+
+/// Human-readable rendering for debugging / example dumps.
+pub fn render(tok: u32) -> String {
+    match tok {
+        PAD => "<pad>".into(),
+        BOS => "<bos>".into(),
+        SEP => "<sep>".into(),
+        EOS => "<eos>".into(),
+        Q => "<q>".into(),
+        ANS => "<ans>".into(),
+        PRON => "<pron>".into(),
+        MARK => "<mark>".into(),
+        NEG => "<not>".into(),
+        AGREE => "<agr>".into(),
+        V_YES => "yes".into(),
+        V_NO => "no".into(),
+        V_MAYBE => "maybe".into(),
+        V_POS => "positive".into(),
+        V_NEG => "negative".into(),
+        V_TRUE => "true".into(),
+        V_FALSE => "false".into(),
+        t if (DIGIT_BASE..DIGIT_BASE + 10).contains(&t) => format!("{}", t - DIGIT_BASE),
+        t if LEX_POS.contains(&t) => format!("good{}", t - LEX_POS.start),
+        t if LEX_NEG.contains(&t) => format!("bad{}", t - LEX_NEG.start),
+        t if ENTITIES.contains(&t) => format!("Ent{}", t - ENTITIES.start),
+        t if SENSE_A.contains(&t) => format!("cueA{}", t - SENSE_A.start),
+        t if SENSE_B.contains(&t) => format!("cueB{}", t - SENSE_B.start),
+        t if POLYSEMOUS.contains(&t) => format!("poly{}", t - POLYSEMOUS.start),
+        t if t >= TOPIC_BASE && t < FILLER_BASE => {
+            let rel = (t - TOPIC_BASE) as usize;
+            format!("t{}w{}", rel / TOPIC_WIDTH, rel % TOPIC_WIDTH)
+        }
+        t => format!("w{t}"),
+    }
+}
+
+pub fn render_seq(toks: &[u32]) -> String {
+    toks.iter().map(|&t| render(t)).collect::<Vec<_>>().join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_disjoint_and_ordered() {
+        // every named region must be disjoint; check boundaries
+        assert!(LEX_POS.end <= LEX_NEG.start);
+        assert!(LEX_NEG.end <= ENTITIES.start);
+        assert!(ENTITIES.end <= SENSE_A.start);
+        assert!(SENSE_A.end <= SENSE_B.start);
+        assert!(SENSE_B.end <= POLYSEMOUS.start);
+        assert!(POLYSEMOUS.end <= TOPIC_BASE);
+        assert_eq!(FILLER_BASE, TOPIC_BASE + (N_TOPICS * TOPIC_WIDTH) as u32);
+        assert!(FILLER_BASE < 512, "layout must fit the smallest vocab");
+    }
+
+    #[test]
+    fn digits_map() {
+        assert_eq!(digit(0), DIGIT_BASE);
+        assert_eq!(digit(9), DIGIT_BASE + 9);
+    }
+
+    #[test]
+    fn topics_within_bounds() {
+        for t in 0..N_TOPICS {
+            let r = topic_tokens(t);
+            assert!(r.end <= FILLER_BASE);
+            assert_eq!(r.len(), TOPIC_WIDTH);
+        }
+    }
+
+    #[test]
+    fn filler_nonempty_for_min_vocab() {
+        let r = filler_range(512);
+        assert!(r.len() >= 100);
+    }
+
+    #[test]
+    fn render_round_trips_visually() {
+        assert_eq!(render(PAD), "<pad>");
+        assert_eq!(render(V_YES), "yes");
+        assert_eq!(render(digit(3)), "3");
+        assert_eq!(render(LEX_POS.start), "good0");
+        assert!(render(FILLER_BASE + 5).starts_with('w'));
+        let s = render_seq(&[BOS, V_YES, EOS]);
+        assert_eq!(s, "<bos> yes <eos>");
+    }
+}

@@ -1,0 +1,161 @@
+//! In-context learning (ICL) baseline: k demonstrations concatenated in
+//! front of the query prompt, scored with the same option-scoring
+//! executables as everything else — no parameter updates (DESIGN.md S18).
+//!
+//! The paper uses 32 shots on 2048-token contexts; our buckets top out at 64
+//! tokens, so demos are generated short and we pack *as many of the
+//! requested shots as fit* (documented substitution, same mechanism).
+
+use crate::data::vocab::EOS;
+use crate::rng::Rng;
+use crate::tasks::{Example, Task};
+
+/// Mean content length used when generating demonstrations (kept short so
+/// several fit a bucket).
+pub const DEMO_MEAN_LEN: usize = 6;
+
+/// Build the demonstration pool for a task (deterministic per seed).
+pub fn demo_pool(task: &dyn Task, seed: u64, n: usize) -> Vec<Example> {
+    let mut rng = Rng::new(crate::rng::derive(seed, crate::rng::purpose::DATA, 0xC1)); // icl tag
+    (0..n).map(|_| task.gen(&mut rng, DEMO_MEAN_LEN)).collect()
+}
+
+/// Prefix tokens for up to `shots` demonstrations, greedily packed so that
+/// `prefix + longest_continuation(query)` still fits `budget` tokens.
+/// Demonstration format: `demo_prompt demo_gold <eos>` (without the BOS of
+/// subsequent demos — the query keeps its own BOS at the front).
+pub fn icl_prefix(demos: &[Example], shots: usize, query: &Example, budget: usize) -> Vec<u32> {
+    let query_len = query.prompt.len()
+        + query
+            .options
+            .iter()
+            .map(Vec::len)
+            .chain(std::iter::once(query.answer.len()))
+            .max()
+            .unwrap_or(0);
+    let mut prefix: Vec<u32> = Vec::new();
+    for demo in demos.iter().take(shots) {
+        let inst = demo.train_instance();
+        // strip the demo's BOS; keep the rest, then an EOS separator
+        let demo_toks: Vec<u32> = inst
+            .prompt
+            .iter()
+            .skip(1)
+            .chain(inst.continuation.iter())
+            .copied()
+            .chain(std::iter::once(EOS))
+            .collect();
+        if 1 + prefix.len() + demo_toks.len() + (query_len - 1) > budget {
+            break;
+        }
+        prefix.extend(demo_toks);
+    }
+    prefix
+}
+
+/// The query example with the ICL prefix spliced in after its BOS.
+pub fn with_prefix(query: &Example, prefix: &[u32]) -> Example {
+    let mut prompt = Vec::with_capacity(1 + prefix.len() + query.prompt.len() - 1);
+    prompt.push(query.prompt[0]); // BOS
+    prompt.extend_from_slice(prefix);
+    prompt.extend_from_slice(&query.prompt[1..]);
+    Example {
+        prompt,
+        options: query.options.clone(),
+        gold: query.gold,
+        answer: query.answer.clone(),
+    }
+}
+
+/// Apply ICL packing to a whole eval set.
+pub fn icl_eval_set(
+    task: &dyn Task,
+    seed: u64,
+    shots: usize,
+    eval: &[Example],
+    budget: usize,
+) -> Vec<Example> {
+    let demos = demo_pool(task, seed, shots.max(1));
+    eval.iter()
+        .map(|ex| {
+            let prefix = icl_prefix(&demos, shots, ex, budget);
+            with_prefix(ex, &prefix)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab::BOS;
+    use crate::tasks::{eval_set, make_task};
+
+    #[test]
+    fn prefix_respects_budget() {
+        let task = make_task("sst2").unwrap();
+        let demos = demo_pool(task.as_ref(), 1, 8);
+        let mut rng = Rng::new(2);
+        let query = task.gen(&mut rng, 10);
+        for budget in [16usize, 32, 64] {
+            let prefix = icl_prefix(&demos, 8, &query, budget);
+            let packed = with_prefix(&query, &prefix);
+            let longest = packed
+                .options
+                .iter()
+                .map(Vec::len)
+                .max()
+                .unwrap_or(packed.answer.len());
+            assert!(
+                packed.prompt.len() + longest <= budget,
+                "budget {budget}: {} tokens",
+                packed.prompt.len() + longest
+            );
+        }
+    }
+
+    #[test]
+    fn zero_shots_is_identity_prompt() {
+        let task = make_task("boolq").unwrap();
+        let mut rng = Rng::new(3);
+        let query = task.gen(&mut rng, 12);
+        let packed = with_prefix(&query, &[]);
+        assert_eq!(packed.prompt, query.prompt);
+        assert_eq!(packed.gold, query.gold);
+    }
+
+    #[test]
+    fn packed_prompt_keeps_bos_and_tail() {
+        let task = make_task("sst2").unwrap();
+        let demos = demo_pool(task.as_ref(), 1, 4);
+        let mut rng = Rng::new(4);
+        let query = task.gen(&mut rng, 8);
+        let prefix = icl_prefix(&demos, 4, &query, 64);
+        assert!(!prefix.is_empty(), "64-token budget must fit at least one short demo");
+        let packed = with_prefix(&query, &prefix);
+        assert_eq!(packed.prompt[0], BOS);
+        // tail of the packed prompt is the original query (minus BOS)
+        let tail = &packed.prompt[packed.prompt.len() - (query.prompt.len() - 1)..];
+        assert_eq!(tail, &query.prompt[1..]);
+    }
+
+    #[test]
+    fn icl_eval_set_is_deterministic_and_aligned() {
+        let task = make_task("copa").unwrap();
+        let ev = eval_set(task.as_ref(), 5, 10, 12);
+        let a = icl_eval_set(task.as_ref(), 5, 4, &ev, 64);
+        let b = icl_eval_set(task.as_ref(), 5, 4, &ev, 64);
+        assert_eq!(a.len(), ev.len());
+        for ((x, y), orig) in a.iter().zip(&b).zip(&ev) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.gold, orig.gold, "labels must be preserved");
+        }
+    }
+
+    #[test]
+    fn demos_are_short() {
+        let task = make_task("rte").unwrap();
+        for d in demo_pool(task.as_ref(), 7, 20) {
+            assert!(d.train_instance().total_len() <= 24, "demo too long");
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Evaluation harness (DESIGN.md S13): MeZO-style option scoring for
+//! classification and multiple choice (argmin of per-option LM loss via the
+//! `example_losses` executable) and teacher-forced token-F1 for the
+//! generation tasks (via the `predict` executable).
+
+pub mod icl;
+
+use crate::data::batch::{Batch, Instance};
+use crate::model::Manifest;
+use crate::runtime::exes::{ExeRegistry, Family};
+use crate::runtime::{run1, Runtime};
+use crate::tasks::{Example, TaskKind};
+use anyhow::{ensure, Result};
+
+/// One evaluation outcome: the metric value in [0, 1] plus its name
+/// ("acc" or "f1", matching the paper's tables).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalMetric {
+    pub value: f64,
+    pub kind: &'static str,
+    pub n_examples: usize,
+}
+
+impl EvalMetric {
+    /// Percentage, as printed in the paper's tables.
+    pub fn pct(&self) -> f64 {
+        100.0 * self.value
+    }
+}
+
+/// Evaluator bound to one model's runtime/artifacts. The `peft` families
+/// route scoring through the adapter-aware executables when fine-tuning
+/// with LoRA / prefix (Table 4).
+pub struct Evaluator<'r> {
+    rt: &'r Runtime,
+    reg: &'r ExeRegistry,
+    example_losses: Family,
+    predict: Family,
+}
+
+impl<'r> Evaluator<'r> {
+    pub fn new(rt: &'r Runtime, reg: &'r ExeRegistry) -> Evaluator<'r> {
+        Evaluator { rt, reg, example_losses: Family::ExampleLosses, predict: Family::Predict }
+    }
+
+    /// Route scoring through the PEFT executables (arguments = base units
+    /// followed by adapter units).
+    pub fn with_families(
+        rt: &'r Runtime,
+        reg: &'r ExeRegistry,
+        example_losses: Family,
+        predict: Family,
+    ) -> Evaluator<'r> {
+        Evaluator { rt, reg, example_losses, predict }
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.reg.manifest()
+    }
+
+    /// Per-instance mean masked LM loss, batched over the eval executable.
+    /// `units` is the full argument prefix (base units, then adapters under
+    /// PEFT).
+    pub fn instance_losses(
+        &self,
+        units: &[&xla::PjRtBuffer],
+        instances: &[Instance],
+    ) -> Result<Vec<f32>> {
+        let m = self.manifest();
+        let rows = m.eval_batch;
+        let mut losses = Vec::with_capacity(instances.len());
+        for chunk in instances.chunks(rows) {
+            let seq = crate::data::batch::bucket_for_instances(&m.seq_buckets, chunk)?;
+            let batch = Batch::from_instances(chunk, rows, seq)?;
+            let exe = self.reg.get(self.rt, self.example_losses, seq)?;
+            let tok = self.rt.mat_i32(&batch.tokens, rows, seq)?;
+            let tgt = self.rt.mat_i32(&batch.targets, rows, seq)?;
+            let msk = self.rt.mat_f32(&batch.mask, rows, seq)?;
+            let mut args: Vec<&xla::PjRtBuffer> = units.to_vec();
+            args.push(&tok);
+            args.push(&tgt);
+            args.push(&msk);
+            let out = run1(&exe, &args)?;
+            let per = self.rt.read_vec_f32(&out)?;
+            ensure!(per.len() == rows, "example_losses returned {} rows", per.len());
+            losses.extend_from_slice(&per[..chunk.len()]);
+        }
+        Ok(losses)
+    }
+
+    /// Classification / multiple choice: predict = argmin option loss.
+    pub fn option_accuracy(
+        &self,
+        units: &[&xla::PjRtBuffer],
+        examples: &[Example],
+    ) -> Result<EvalMetric> {
+        ensure!(!examples.is_empty(), "empty eval set");
+        // flatten all options, remember example boundaries
+        let mut instances = Vec::new();
+        let mut spans = Vec::with_capacity(examples.len());
+        for ex in examples {
+            ensure!(!ex.options.is_empty(), "option_accuracy on a generation example");
+            let start = instances.len();
+            instances.extend(ex.option_instances());
+            spans.push(start..instances.len());
+        }
+        let losses = self.instance_losses(units, &instances)?;
+        let mut correct = 0usize;
+        for (ex, span) in examples.iter().zip(spans) {
+            let opt_losses = &losses[span];
+            let pred = opt_losses
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if pred == ex.gold {
+                correct += 1;
+            }
+        }
+        Ok(EvalMetric {
+            value: correct as f64 / examples.len() as f64,
+            kind: "acc",
+            n_examples: examples.len(),
+        })
+    }
+
+    /// Generation: teacher-forced greedy prediction over the answer span,
+    /// scored by token-level F1 (the SQuAD/DROP metric shape).
+    pub fn generation_f1(
+        &self,
+        units: &[&xla::PjRtBuffer],
+        examples: &[Example],
+    ) -> Result<EvalMetric> {
+        ensure!(!examples.is_empty(), "empty eval set");
+        let m = self.manifest();
+        let rows = m.eval_batch;
+        let mut f1s = Vec::with_capacity(examples.len());
+        for chunk in examples.chunks(rows) {
+            let instances: Vec<Instance> =
+                chunk.iter().map(|ex| ex.train_instance()).collect();
+            let seq = crate::data::batch::bucket_for_instances(&m.seq_buckets, &instances)?;
+            let batch = Batch::from_instances(&instances, rows, seq)?;
+            let exe = self.reg.get(self.rt, self.predict, seq)?;
+            let tok = self.rt.mat_i32(&batch.tokens, rows, seq)?;
+            let mut args: Vec<&xla::PjRtBuffer> = units.to_vec();
+            args.push(&tok);
+            let out = run1(&exe, &args)?;
+            let preds = self.rt.read_vec_i32(&out)?;
+            ensure!(preds.len() == rows * seq);
+            for (r, ex) in chunk.iter().enumerate() {
+                let p = ex.prompt.len();
+                let gold = &ex.answer;
+                // position p-1+i predicts answer token i
+                let predicted: Vec<u32> = (0..gold.len())
+                    .map(|i| preds[r * seq + p - 1 + i] as u32)
+                    .collect();
+                f1s.push(token_f1(&predicted, gold));
+            }
+        }
+        Ok(EvalMetric {
+            value: crate::stats::mean(&f1s),
+            kind: "f1",
+            n_examples: examples.len(),
+        })
+    }
+
+    /// Dispatch on task kind.
+    pub fn evaluate(
+        &self,
+        kind: TaskKind,
+        units: &[&xla::PjRtBuffer],
+        examples: &[Example],
+    ) -> Result<EvalMetric> {
+        match kind {
+            TaskKind::Classification | TaskKind::MultipleChoice => {
+                self.option_accuracy(units, examples)
+            }
+            TaskKind::Generation => self.generation_f1(units, examples),
+        }
+    }
+}
+
+/// Token-multiset F1 between predicted and gold answers (SQuAD metric over
+/// token ids instead of whitespace words).
+pub fn token_f1(pred: &[u32], gold: &[u32]) -> f64 {
+    if pred.is_empty() && gold.is_empty() {
+        return 1.0;
+    }
+    if pred.is_empty() || gold.is_empty() {
+        return 0.0;
+    }
+    let mut gold_counts = std::collections::HashMap::new();
+    for &g in gold {
+        *gold_counts.entry(g).or_insert(0usize) += 1;
+    }
+    let mut overlap = 0usize;
+    for &p in pred {
+        if let Some(c) = gold_counts.get_mut(&p) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / pred.len() as f64;
+    let recall = overlap as f64 / gold.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f1_exact_match_is_one() {
+        assert_eq!(token_f1(&[1, 2, 3], &[1, 2, 3]), 1.0);
+    }
+
+    #[test]
+    fn f1_no_overlap_is_zero() {
+        assert_eq!(token_f1(&[1, 2], &[3, 4]), 0.0);
+    }
+
+    #[test]
+    fn f1_partial_overlap() {
+        // pred {1,2}, gold {2,3}: overlap 1, p=r=0.5, f1=0.5
+        assert!((token_f1(&[1, 2], &[2, 3]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_multiset_semantics() {
+        // duplicated token only counts as many times as gold has it
+        let f1 = token_f1(&[5, 5, 5], &[5]);
+        // overlap=1, p=1/3, r=1, f1=0.5
+        assert!((f1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_empty_cases() {
+        assert_eq!(token_f1(&[], &[]), 1.0);
+        assert_eq!(token_f1(&[1], &[]), 0.0);
+        assert_eq!(token_f1(&[], &[1]), 0.0);
+    }
+
+    #[test]
+    fn f1_order_invariant() {
+        assert_eq!(token_f1(&[1, 2, 3], &[3, 2, 1]), 1.0);
+    }
+
+    // Runtime-backed Evaluator tests live in rust/tests/integration.rs.
+}

@@ -1,0 +1,30 @@
+//! # LeZO — layer-wise sparse, computation- and memory-efficient zeroth-order fine-tuning
+//!
+//! Rust + JAX + Pallas (three-layer, AOT via XLA/PJRT) reproduction of
+//! *"Simultaneous Computation and Memory Efficient Zeroth-Order Optimizer for
+//! Fine-Tuning Large Language Models"* (Wang et al., 2024).
+//!
+//! Layering (see DESIGN.md):
+//! - **L3 (this crate)**: the coordinator — layer selection ([`coordinator::selector`]),
+//!   the SPSA/ZO-SGD engine ([`coordinator::spsa`]), the FO substrate
+//!   ([`coordinator::fo`]), the trainer ([`coordinator::trainer`]), evaluation
+//!   ([`eval`]) and the bench harness ([`bench`]).
+//! - **Runtime**: [`runtime`] wraps the PJRT CPU client; AOT HLO-text artifacts
+//!   from `python/compile/aot.py` are compiled once and executed many times.
+//! - **L2/L1** live in `python/compile/` and never run on the request path.
+//!
+//! The crate is `anyhow + xla` only; everything else (JSON, RNG, stats,
+//! CLI parsing, table rendering) is implemented in-repo for offline builds.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod peft;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod tasks;
+pub mod util;

@@ -1,0 +1,195 @@
+//! `lezo` — the launcher CLI (DESIGN.md S17).
+//!
+//! ```text
+//! lezo train   [--config FILE] [key=value ...]   run one fine-tuning run
+//! lezo pretrain model=<size> [steps=N lr=X seed=S]
+//! lezo bench   <id|all> [key=value ...]          regenerate a paper table/figure
+//! lezo info    [model=<size>]                    show artifact manifest
+//! lezo render  task=<name> [n=K seed=S]          dump synthetic examples
+//! ```
+//!
+//! Offline constraint: no clap; overrides are `key=value` tokens parsed by
+//! `RunConfig::set` plus a few global flags (`-q`, `-v`, `--config`).
+
+use anyhow::{bail, Context, Result};
+use lezo::config::RunConfig;
+use lezo::coordinator::{trainer, Trainer};
+use lezo::bench;
+
+fn usage() -> ! {
+    eprintln!(
+        "lezo — layer-wise sparse zeroth-order fine-tuning\n\n\
+         USAGE:\n  lezo train   [--config FILE] [key=value ...]\n  \
+         lezo pretrain model=<size> [steps=N] [lr=X] [seed=S]\n  \
+         lezo bench   <id|all> [key=value ...]    ids: {}\n  \
+         lezo info    [model=<size>]\n  lezo render  task=<name> [n=K] [seed=S]\n\n\
+         Common keys: model task method peft drop_layers lr mu steps eval_every\n\
+         eval_examples train_examples seed icl_shots mean_len checkpoint\n\
+         Flags: -q quiet, -v verbose",
+        bench::ALL_BENCHES.join(" ")
+    );
+    std::process::exit(2);
+}
+
+fn split_flags(args: &[String]) -> (Vec<String>, Option<String>) {
+    let mut rest = Vec::new();
+    let mut config_file = None;
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "-q" => lezo::util::set_log_level(0),
+            "-v" => lezo::util::set_log_level(2),
+            "--config" => {
+                config_file = it.next().cloned();
+                if config_file.is_none() {
+                    eprintln!("--config needs a file");
+                    usage();
+                }
+            }
+            _ => rest.push(a.clone()),
+        }
+    }
+    (rest, config_file)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let (overrides, config_file) = split_flags(args);
+    let mut cfg = match config_file {
+        Some(f) => RunConfig::from_file(&f)?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_overrides(&overrides)?;
+    let report = Trainer::new(cfg).run()?;
+    println!("task           : {}", report.task);
+    println!("method         : {}", report.method);
+    println!("final {:>3}      : {:.1}%", report.metric_kind, 100.0 * report.final_metric);
+    println!("best  {:>3}      : {:.1}%", report.metric_kind, 100.0 * report.best_metric);
+    println!("train time     : {:.1}s", report.train_secs);
+    if report.stage_times.steps > 0 {
+        let (p, f, u, o) = report.stage_times.per_step_ms();
+        println!(
+            "per-step       : {:.1} ms (perturb {p:.1} / forward {f:.1} / update {u:.1} / other {o:.1})",
+            p + f + u + o
+        );
+        println!("non-forward    : {:.0}%", 100.0 * report.stage_times.non_forward_fraction());
+        println!("active params  : {:.0}%/step", 100.0 * report.active_param_fraction);
+    }
+    println!("\nconvergence (step, train_s, {}%):", report.metric_kind);
+    for p in &report.history {
+        println!("  {:>6}  {:>8.1}s  {:>5.1}", p.step, p.train_secs, 100.0 * p.metric);
+    }
+    Ok(())
+}
+
+fn cmd_pretrain(args: &[String]) -> Result<()> {
+    let (overrides, _) = split_flags(args);
+    let mut model = "opt-micro".to_string();
+    let mut root = "artifacts".to_string();
+    let mut steps = 300usize;
+    let mut lr = 1e-3f64;
+    let mut seed = 0u64;
+    let mut log_every = 50usize;
+    for ov in &overrides {
+        let (k, v) = ov.split_once('=').with_context(|| format!("'{ov}' is not key=value"))?;
+        match k {
+            "model" => model = v.into(),
+            "artifacts" | "artifacts_root" => root = v.into(),
+            "steps" => steps = v.parse()?,
+            "lr" => lr = v.parse()?,
+            "seed" => seed = v.parse()?,
+            "log_every" => log_every = v.parse()?,
+            _ => bail!("unknown pretrain key '{k}'"),
+        }
+    }
+    let dir = std::path::PathBuf::from(root).join(&model);
+    let (first, last) = trainer::pretrain(&dir, steps, lr, seed, log_every)?;
+    println!("pretrained {model}: LM loss {first:.3} -> {last:.3} over {steps} steps");
+    println!("checkpoint: {}", dir.join("pretrained.ckpt").display());
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let (rest, _) = split_flags(args);
+    let Some((id, overrides)) = rest.split_first() else { usage() };
+    bench::run_bench(id, overrides)
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let (overrides, _) = split_flags(args);
+    let mut cfg = RunConfig::default();
+    cfg.apply_overrides(&overrides)?;
+    let m = lezo::model::Manifest::load(std::path::Path::new(&cfg.artifact_dir()))?;
+    println!("model       : {}", m.name);
+    println!("params      : {} ({} units)", m.param_count, m.n_units());
+    println!("dims        : d_model={} layers={} heads={} vocab={}", m.d_model, m.n_layers, m.n_heads, m.vocab);
+    println!("seq buckets : {:?} (max {})", m.seq_buckets, m.max_seq);
+    println!("batch       : train={} eval={}", m.train_batch, m.eval_batch);
+    println!("pallas fwd  : {}", m.use_pallas_forward);
+    println!("units:");
+    for (name, len) in m.unit_names.iter().zip(&m.unit_lens) {
+        println!("  {name:<12} {len:>10}");
+    }
+    if let Some(l) = m.lora_unit_len {
+        println!("lora unit   : {l}");
+    }
+    if let Some(l) = m.prefix_unit_len {
+        println!("prefix unit : {l}");
+    }
+    let pretrained = m.dir.join("pretrained.ckpt");
+    println!("pretrained  : {}", if pretrained.exists() { "yes" } else { "no (runs start from params_init.bin)" });
+    Ok(())
+}
+
+fn cmd_render(args: &[String]) -> Result<()> {
+    let (overrides, _) = split_flags(args);
+    let mut task_name = "sst2".to_string();
+    let mut n = 5usize;
+    let mut seed = 0u64;
+    let mut mean_len = 24usize;
+    for ov in &overrides {
+        let (k, v) = ov.split_once('=').with_context(|| format!("'{ov}' is not key=value"))?;
+        match k {
+            "task" => task_name = v.into(),
+            "n" => n = v.parse()?,
+            "seed" => seed = v.parse()?,
+            "mean_len" => mean_len = v.parse()?,
+            _ => bail!("unknown render key '{k}'"),
+        }
+    }
+    let task = lezo::tasks::make_task(&task_name)?;
+    let examples = lezo::tasks::eval_set(task.as_ref(), seed, n, mean_len);
+    for (i, ex) in examples.iter().enumerate() {
+        println!("--- {task_name} #{i}");
+        println!("prompt : {}", lezo::data::vocab::render_seq(&ex.prompt));
+        if ex.options.is_empty() {
+            println!("answer : {}", lezo::data::vocab::render_seq(&ex.answer));
+        } else {
+            for (oi, opt) in ex.options.iter().enumerate() {
+                let mark = if oi == ex.gold { "*" } else { " " };
+                println!("opt {oi}{mark} : {}", lezo::data::vocab::render_seq(opt));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else { usage() };
+    let result = match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "pretrain" => cmd_pretrain(rest),
+        "bench" => cmd_bench(rest),
+        "info" => cmd_info(rest),
+        "render" => cmd_render(rest),
+        "help" | "--help" | "-h" => usage(),
+        _ => {
+            eprintln!("unknown command '{cmd}'");
+            usage()
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

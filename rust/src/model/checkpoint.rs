@@ -1,0 +1,199 @@
+//! Checkpoint I/O: own binary format (no serde offline).
+//!
+//! Layout (little-endian):
+//!   magic  [8]  b"LEZOCKPT"
+//!   version u32 (= 1)
+//!   step    u64
+//!   n_units u32
+//!   lens    [n_units] u64
+//!   data    concat of f32 unit vectors
+//!   crc     u32 (crc32 of data bytes)
+
+use anyhow::{anyhow, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"LEZOCKPT";
+const VERSION: u32 = 1;
+
+/// CRC-32 (IEEE), bit-reflected, table-free (fine for checkpoint sizes).
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub units: Vec<Vec<f32>>,
+}
+
+pub fn save(path: &Path, step: u64, units: &[Vec<f32>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut data_bytes = Vec::new();
+    for u in units {
+        for &x in u {
+            data_bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&step.to_le_bytes())?;
+    f.write_all(&(units.len() as u32).to_le_bytes())?;
+    for u in units {
+        f.write_all(&(u.len() as u64).to_le_bytes())?;
+    }
+    f.write_all(&data_bytes)?;
+    f.write_all(&crc32(&data_bytes).to_le_bytes())?;
+    f.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "{}: not a LeZO checkpoint", path.display());
+    let mut u32b = [0u8; 4];
+    let mut u64b = [0u8; 8];
+    f.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    f.read_exact(&mut u64b)?;
+    let step = u64::from_le_bytes(u64b);
+    f.read_exact(&mut u32b)?;
+    let n_units = u32::from_le_bytes(u32b) as usize;
+    ensure!(n_units < 10_000, "implausible unit count {n_units}");
+    let mut lens = Vec::with_capacity(n_units);
+    for _ in 0..n_units {
+        f.read_exact(&mut u64b)?;
+        lens.push(u64::from_le_bytes(u64b) as usize);
+    }
+    let total: usize = lens.iter().sum();
+    let mut data_bytes = vec![0u8; total * 4];
+    f.read_exact(&mut data_bytes)?;
+    f.read_exact(&mut u32b)?;
+    let want_crc = u32::from_le_bytes(u32b);
+    let got_crc = crc32(&data_bytes);
+    ensure!(
+        want_crc == got_crc,
+        "{}: checksum mismatch (corrupt checkpoint)",
+        path.display()
+    );
+    let mut units = Vec::with_capacity(n_units);
+    let mut off = 0usize;
+    for len in lens {
+        let mut v = Vec::with_capacity(len);
+        for i in 0..len {
+            let b = &data_bytes[4 * (off + i)..4 * (off + i) + 4];
+            v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        off += len;
+        units.push(v);
+    }
+    Ok(Checkpoint { step, units })
+}
+
+/// Resolve initial parameters for a run: explicit checkpoint if configured,
+/// else `<artifact_dir>/pretrained.ckpt` if present, else params_init.bin.
+pub fn resolve_initial(
+    manifest: &crate::model::Manifest,
+    explicit: &str,
+) -> Result<(Vec<Vec<f32>>, String)> {
+    if !explicit.is_empty() {
+        let ck = load(Path::new(explicit))?;
+        ensure!(
+            ck.units.len() == manifest.n_units(),
+            "checkpoint {} has {} units, model has {}",
+            explicit,
+            ck.units.len(),
+            manifest.n_units()
+        );
+        for (u, &len) in ck.units.iter().zip(&manifest.unit_lens) {
+            ensure!(u.len() == len, "checkpoint unit length mismatch");
+        }
+        return Ok((ck.units, explicit.to_string()));
+    }
+    let pretrained = manifest.dir.join("pretrained.ckpt");
+    if pretrained.exists() {
+        let ck = load(&pretrained)?;
+        if ck.units.len() == manifest.n_units()
+            && ck.units.iter().zip(&manifest.unit_lens).all(|(u, &l)| u.len() == l)
+        {
+            return Ok((ck.units, pretrained.display().to_string()));
+        }
+        return Err(anyhow!("{} exists but does not match the model", pretrained.display()));
+    }
+    Ok((manifest.read_init_params()?, "params_init.bin".to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("lezo_ckpt_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip() {
+        let units = vec![vec![1.0f32, -2.5, 3.25], vec![0.0; 100], (0..7).map(|i| i as f32).collect()];
+        let path = tmp("rt");
+        save(&path, 42, &units).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.step, 42);
+        assert_eq!(ck.units, units);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let units = vec![vec![1.0f32; 64]];
+        let path = tmp("corrupt");
+        save(&path, 1, &units).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 10] ^= 0xFF; // flip a data byte
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = tmp("magic");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxx").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn crc32_known_value() {
+        // IEEE CRC-32 of "123456789" is 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn empty_units_ok() {
+        let path = tmp("empty");
+        save(&path, 0, &[]).unwrap();
+        let ck = load(&path).unwrap();
+        assert!(ck.units.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,221 @@
+//! Parsed form of artifacts/<size>/manifest.json — the contract between the
+//! python compile path and the rust runtime.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub seq_buckets: Vec<usize>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub unit_names: Vec<String>,
+    pub unit_lens: Vec<usize>,
+    pub axpy_lens: Vec<usize>,
+    pub param_count: usize,
+    pub use_pallas_forward: bool,
+    pub init_file: String,
+    pub files: BTreeMap<String, String>,
+    /// PEFT extension (present when aot exported --peft): per-block lora and
+    /// prefix unit lengths.
+    pub lora_unit_len: Option<usize>,
+    pub prefix_unit_len: Option<usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let files = match j.get("files") {
+            Some(Json::Obj(m)) => m
+                .iter()
+                .map(|(k, v)| {
+                    v.as_str()
+                        .map(|s| (k.clone(), s.to_string()))
+                        .ok_or_else(|| anyhow!("non-string file entry {k}"))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?,
+            _ => return Err(anyhow!("manifest missing files object")),
+        };
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            name: j.req_str("name")?,
+            vocab: j.req_usize("vocab")?,
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            max_seq: j.req_usize("max_seq")?,
+            seq_buckets: j.req_usize_arr("seq_buckets")?,
+            train_batch: j.req_usize("train_batch")?,
+            eval_batch: j.req_usize("eval_batch")?,
+            unit_names: j.req_str_arr("unit_names")?,
+            unit_lens: j.req_usize_arr("unit_lens")?,
+            axpy_lens: j.req_usize_arr("axpy_lens")?,
+            param_count: j.req_usize("param_count")?,
+            use_pallas_forward: j
+                .get("use_pallas_forward")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            init_file: j.req_str("init_file")?,
+            files,
+            lora_unit_len: j.get("lora_unit_len").and_then(Json::as_usize),
+            prefix_unit_len: j.get("prefix_unit_len").and_then(Json::as_usize),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.unit_names.len() != self.unit_lens.len() {
+            return Err(anyhow!("unit_names/unit_lens length mismatch"));
+        }
+        if self.unit_lens.iter().sum::<usize>() != self.param_count {
+            return Err(anyhow!("unit_lens do not sum to param_count"));
+        }
+        if self.unit_names.len() != self.n_layers + 2 {
+            return Err(anyhow!("expected n_layers+2 units"));
+        }
+        for n in &self.axpy_lens {
+            if !self.files.contains_key(&format!("zo_axpy_{n}")) {
+                return Err(anyhow!("manifest missing zo_axpy_{n}"));
+            }
+        }
+        for s in &self.seq_buckets {
+            for stem in ["forward_loss", "example_losses", "predict", "forward_backward"] {
+                if !self.files.contains_key(&format!("{stem}_s{s}")) {
+                    return Err(anyhow!("manifest missing {stem}_s{s}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.unit_lens.len()
+    }
+
+    /// Indices of transformer-block units (the sparsifiable set under the
+    /// paper's policy; unit 0 is the embedding, the last unit the final LN).
+    pub fn block_unit_indices(&self) -> Vec<usize> {
+        (1..=self.n_layers).collect()
+    }
+
+    pub fn file_path(&self, key: &str) -> Result<PathBuf> {
+        let f = self
+            .files
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest has no executable '{key}'"))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Smallest exported bucket that fits `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Result<usize> {
+        self.seq_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= len)
+            .min()
+            .ok_or_else(|| anyhow!("sequence length {len} exceeds largest bucket"))
+    }
+
+    /// Read the initial parameters (concatenated little-endian f32).
+    pub fn read_init_params(&self) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(&self.init_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != 4 * self.param_count {
+            return Err(anyhow!(
+                "{}: expected {} bytes, got {}",
+                path.display(),
+                4 * self.param_count,
+                bytes.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(self.n_units());
+        let mut off = 0usize;
+        for &len in &self.unit_lens {
+            let mut v = Vec::with_capacity(len);
+            for i in 0..len {
+                let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += 4 * len;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Path::new(&root).join("opt-micro")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.name, "opt-micro");
+        assert_eq!(m.n_units(), m.n_layers + 2);
+        assert_eq!(m.block_unit_indices().len(), m.n_layers);
+        assert_eq!(m.unit_lens.iter().sum::<usize>(), m.param_count);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.bucket_for(1).unwrap(), 16);
+        assert_eq!(m.bucket_for(16).unwrap(), 16);
+        assert_eq!(m.bucket_for(17).unwrap(), 32);
+        assert_eq!(m.bucket_for(64).unwrap(), 64);
+        assert!(m.bucket_for(65).is_err());
+    }
+
+    #[test]
+    fn init_params_match_lens() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        let units = m.read_init_params().unwrap();
+        assert_eq!(units.len(), m.n_units());
+        for (u, &len) in units.iter().zip(&m.unit_lens) {
+            assert_eq!(u.len(), len);
+        }
+        // embedding init is N(0, 0.02): sane statistics
+        let emb = &units[0];
+        let mean = emb.iter().map(|&x| x as f64).sum::<f64>() / emb.len() as f64;
+        assert!(mean.abs() < 1e-3);
+    }
+
+    #[test]
+    fn missing_dir_is_contextual_error() {
+        let err = Manifest::load(Path::new("/nonexistent/xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

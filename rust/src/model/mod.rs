@@ -1,0 +1,9 @@
+//! Model state: the manifest contract, the device-resident parameter store,
+//! and checkpoint I/O.
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod store;
+
+pub use manifest::Manifest;
+pub use store::ParamStore;

@@ -1,0 +1,153 @@
+//! ParamStore: model parameters as device-resident PjRtBuffers, one flat
+//! f32 vector per layer unit (the unit of LeZO sparsity).
+//!
+//! The ZO hot loop mutates units by *replacing* buffers with executable
+//! outputs (PJRT buffers are immutable); parameters never round-trip through
+//! the host during training. Host copies exist only for checkpointing and
+//! the FO baseline.
+
+use crate::model::manifest::Manifest;
+use crate::runtime::Runtime;
+use anyhow::{ensure, Result};
+
+pub struct ParamStore {
+    units: Vec<xla::PjRtBuffer>,
+    lens: Vec<usize>,
+    names: Vec<String>,
+}
+
+impl ParamStore {
+    /// Upload host vectors (one per unit) to the device.
+    pub fn from_host(rt: &Runtime, manifest: &Manifest, host: &[Vec<f32>]) -> Result<ParamStore> {
+        ensure!(host.len() == manifest.n_units(), "unit count mismatch");
+        let mut units = Vec::with_capacity(host.len());
+        for (u, &len) in host.iter().zip(&manifest.unit_lens) {
+            ensure!(u.len() == len, "unit length mismatch: {} vs {}", u.len(), len);
+            units.push(rt.vec_f32(u)?);
+        }
+        Ok(ParamStore {
+            units,
+            lens: manifest.unit_lens.clone(),
+            names: manifest.unit_names.clone(),
+        })
+    }
+
+    /// Load the python-side initialization (params_init.bin).
+    pub fn load_init(rt: &Runtime, manifest: &Manifest) -> Result<ParamStore> {
+        let host = manifest.read_init_params()?;
+        Self::from_host(rt, manifest, &host)
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn unit_len(&self, k: usize) -> usize {
+        self.lens[k]
+    }
+
+    pub fn unit_name(&self, k: usize) -> &str {
+        &self.names[k]
+    }
+
+    pub fn unit(&self, k: usize) -> &xla::PjRtBuffer {
+        &self.units[k]
+    }
+
+    /// All unit buffers in argument order (prefix of every model call).
+    pub fn unit_refs(&self) -> Vec<&xla::PjRtBuffer> {
+        self.units.iter().collect()
+    }
+
+    /// Replace a unit with an executable output (the ZO perturb/update path).
+    pub fn replace_unit(&mut self, k: usize, buf: xla::PjRtBuffer) {
+        self.units[k] = buf;
+    }
+
+    /// Download all units (checkpointing, FO baseline).
+    pub fn to_host(&self, rt: &Runtime) -> Result<Vec<Vec<f32>>> {
+        self.units.iter().map(|b| rt.read_vec_f32(b)).collect()
+    }
+
+    /// Total parameters.
+    pub fn param_count(&self) -> usize {
+        self.lens.iter().sum()
+    }
+
+    /// L2 norm of all parameters (diagnostics; one device->host pass).
+    pub fn global_norm(&self, rt: &Runtime) -> Result<f64> {
+        let mut acc = 0.0f64;
+        for b in &self.units {
+            let v = rt.read_vec_f32(b)?;
+            acc += v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        }
+        Ok(acc.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn art() -> PathBuf {
+        let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        PathBuf::from(root).join("opt-micro")
+    }
+
+    fn have() -> bool {
+        art().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn init_round_trip() {
+        if !have() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let m = Manifest::load(&art()).unwrap();
+        let store = ParamStore::load_init(&rt, &m).unwrap();
+        assert_eq!(store.n_units(), m.n_units());
+        assert_eq!(store.param_count(), m.param_count);
+        let host = store.to_host(&rt).unwrap();
+        let orig = m.read_init_params().unwrap();
+        assert_eq!(host, orig, "device round-trip must be lossless");
+    }
+
+    #[test]
+    fn replace_unit_changes_only_that_unit() {
+        if !have() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let m = Manifest::load(&art()).unwrap();
+        let mut store = ParamStore::load_init(&rt, &m).unwrap();
+        let before = store.to_host(&rt).unwrap();
+        let k = 1;
+        let new_data = vec![0.5f32; store.unit_len(k)];
+        let buf = rt.vec_f32(&new_data).unwrap();
+        store.replace_unit(k, buf);
+        let after = store.to_host(&rt).unwrap();
+        assert_eq!(after[k], new_data);
+        for i in 0..store.n_units() {
+            if i != k {
+                assert_eq!(after[i], before[i], "unit {i} must be untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_host_shape_rejected() {
+        if !have() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let m = Manifest::load(&art()).unwrap();
+        let mut host = m.read_init_params().unwrap();
+        host[0].pop();
+        assert!(ParamStore::from_host(&rt, &m, &host).is_err());
+        host.pop();
+        assert!(ParamStore::from_host(&rt, &m, &host).is_err());
+    }
+}

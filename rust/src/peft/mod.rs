@@ -1,0 +1,164 @@
+//! PEFT parameter spaces for ZO fine-tuning (the paper's Table 4).
+//!
+//! With LoRA or prefix tuning, the ZO optimizer perturbs/updates only the
+//! small per-block PEFT units; the frozen base units are still forward
+//! arguments. LeZO's layer-wise sparsity then drops whole per-block PEFT
+//! units, mirroring the paper's LeZO(LoRA)/LeZO(prefix) rows.
+//!
+//! The PEFT forward executables (forward_loss_lora_s*, ...) are exported by
+//! `python -m compile.aot --peft`; their argument order is
+//! [base units..., peft units (one per block)..., tokens, targets, mask].
+
+use anyhow::{bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeftMode {
+    /// Full-parameter fine-tuning (the default LeZO setting).
+    Full,
+    /// LoRA adapters on Wq and Wv (rank r = 8, alpha = 16 as in the paper).
+    Lora,
+    /// Prefix tuning: 5 virtual KV positions per layer.
+    Prefix,
+}
+
+impl FromStr for PeftMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "full" | "none" => PeftMode::Full,
+            "lora" => PeftMode::Lora,
+            "prefix" => PeftMode::Prefix,
+            _ => bail!("unknown peft mode '{s}' (full|lora|prefix)"),
+        })
+    }
+}
+
+impl fmt::Display for PeftMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            PeftMode::Full => "full",
+            PeftMode::Lora => "lora",
+            PeftMode::Prefix => "prefix",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// LoRA dimensions used by the aot exporter (kept in sync with aot.py).
+pub const LORA_RANK: usize = 8;
+pub const LORA_ALPHA: f64 = 16.0;
+pub const PREFIX_TOKENS: usize = 5;
+
+/// Flat length of one per-block LoRA unit: A_q (d x r) + B_q (r x d) +
+/// A_v + B_v.
+pub fn lora_unit_len(d_model: usize) -> usize {
+    4 * d_model * LORA_RANK
+}
+
+/// Flat length of one per-block prefix unit: K and V prefixes, each
+/// (PREFIX_TOKENS x d_model).
+pub fn prefix_unit_len(d_model: usize) -> usize {
+    2 * PREFIX_TOKENS * d_model
+}
+
+/// Host-side init of PEFT units (mirrors aot.py's peft_init): LoRA A is
+/// N(0, 0.02), B zero (so the initial delta is exactly zero); prefixes are
+/// N(0, 0.02).
+pub fn init_peft_units(
+    mode: PeftMode,
+    n_layers: usize,
+    d_model: usize,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let mut rng = crate::rng::Rng::new(crate::rng::derive(seed, crate::rng::purpose::INIT, 77));
+    match mode {
+        PeftMode::Full => vec![],
+        PeftMode::Lora => (0..n_layers)
+            .map(|_| {
+                let half = 2 * d_model * LORA_RANK; // A_q then B_q then A_v then B_v
+                let mut u = Vec::with_capacity(lora_unit_len(d_model));
+                // A_q
+                for _ in 0..d_model * LORA_RANK {
+                    u.push((rng.gaussian() * 0.02) as f32);
+                }
+                // B_q = 0
+                u.resize(half, 0.0);
+                // A_v
+                for _ in 0..d_model * LORA_RANK {
+                    u.push((rng.gaussian() * 0.02) as f32);
+                }
+                // B_v = 0
+                u.resize(lora_unit_len(d_model), 0.0);
+                u
+            })
+            .collect(),
+        PeftMode::Prefix => (0..n_layers)
+            .map(|_| {
+                (0..prefix_unit_len(d_model)).map(|_| (rng.gaussian() * 0.02) as f32).collect()
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_round_trip() {
+        for s in ["full", "lora", "prefix"] {
+            let m: PeftMode = s.parse().unwrap();
+            assert_eq!(m.to_string(), s);
+        }
+        assert!("adapterx".parse::<PeftMode>().is_err());
+    }
+
+    #[test]
+    fn unit_lens_match_exporter_contract() {
+        assert_eq!(lora_unit_len(64), 4 * 64 * 8);
+        assert_eq!(prefix_unit_len(64), 2 * 5 * 64);
+    }
+
+    #[test]
+    fn lora_init_delta_is_zero() {
+        let units = init_peft_units(PeftMode::Lora, 4, 64, 0);
+        assert_eq!(units.len(), 4);
+        for u in &units {
+            assert_eq!(u.len(), lora_unit_len(64));
+            // B_q block (second quarter) and B_v block (fourth quarter) zero
+            let q = u.len() / 4;
+            assert!(u[q..2 * q].iter().all(|&x| x == 0.0));
+            assert!(u[3 * q..].iter().all(|&x| x == 0.0));
+            // A blocks non-zero
+            assert!(u[..q].iter().any(|&x| x != 0.0));
+        }
+    }
+
+    #[test]
+    fn prefix_init_shape_and_scale() {
+        let units = init_peft_units(PeftMode::Prefix, 6, 128, 1);
+        assert_eq!(units.len(), 6);
+        for u in &units {
+            assert_eq!(u.len(), prefix_unit_len(128));
+            let std = {
+                let m: f32 = u.iter().sum::<f32>() / u.len() as f32;
+                (u.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / u.len() as f32).sqrt()
+            };
+            assert!((std - 0.02).abs() < 0.01, "std={std}");
+        }
+    }
+
+    #[test]
+    fn full_mode_has_no_units() {
+        assert!(init_peft_units(PeftMode::Full, 4, 64, 0).is_empty());
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = init_peft_units(PeftMode::Prefix, 2, 64, 5);
+        let b = init_peft_units(PeftMode::Prefix, 2, 64, 5);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,254 @@
+//! Deterministic RNG for the coordinator: layer selection, data generation,
+//! and seed derivation. SplitMix64 core (Steele et al. 2014) — tiny, fast,
+//! and good enough for everything that is *not* the perturbation stream
+//! (which is Philox inside the L1 kernel; see python/compile/kernels).
+//!
+//! Everything the system samples flows through here so runs are exactly
+//! reproducible from a single `run_seed`.
+
+/// SplitMix64 PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zeros fixed point neighbourhood by pre-mixing
+        let mut r = Rng { state: seed ^ 0x9E3779B97F4A7C15 };
+        r.next_u64();
+        r
+    }
+
+    /// Derive an independent child stream (for subsystem isolation).
+    pub fn child(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xBF58476D1CE4E5B9))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, n) without modulo bias (rejection).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        let n = n as u64;
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (data-gen only; the perturbation
+    /// stream lives in the L1 kernel).
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose one element.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Sample k distinct indices from 0..n (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.range(i, n - 1);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Stable seed derivation for (run, step, purpose) triples. The ZO step seed
+/// handed to the zo_axpy executable is `derive(run_seed, step, PURPOSE_ZO)`
+/// truncated to a non-negative i32 (the kernel's seed input type).
+pub fn derive(run_seed: u64, a: u64, b: u64) -> u64 {
+    let mut r = Rng::new(run_seed ^ a.rotate_left(17) ^ b.rotate_left(41));
+    r.next_u64()
+}
+
+/// Seed for the perturbation stream of (step, layer-unit). Must be stable:
+/// the update phase regenerates the exact stream the perturb phase used.
+pub fn zo_seed(run_seed: u64, step: u64, unit: usize) -> i32 {
+    (derive(run_seed, step, unit as u64) & 0x7FFF_FFFF) as i32
+}
+
+pub mod purpose {
+    pub const DATA: u64 = 0xDA7A;
+    pub const SELECTOR: u64 = 0x5E1E;
+    pub const EVAL: u64 = 0xE7A1;
+    pub const INIT: u64 = 0x1217;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn uniformity_chi_square_rough() {
+        let mut r = Rng::new(11);
+        let mut counts = [0usize; 16];
+        let n = 16_000;
+        for _ in 0..n {
+            counts[r.below(16)] += 1;
+        }
+        let expect = (n / 16) as f64;
+        let chi2: f64 = counts.iter().map(|&c| (c as f64 - expect).powi(2) / expect).sum();
+        assert!(chi2 < 50.0, "chi2={chi2}"); // df=15, p<1e-5 threshold
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Rng::new(13);
+        for _ in 0..100 {
+            let k = r.range(0, 20);
+            let s = r.sample_indices(20, k);
+            assert_eq!(s.len(), k);
+            let mut dedup = s.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), k);
+            assert!(s.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn sample_indices_uniform_coverage() {
+        // property: each index appears ~k/n of the time
+        let mut r = Rng::new(17);
+        let (n, k, trials) = (10, 3, 10_000);
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            for i in r.sample_indices(n, k) {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials * k / n;
+        for (i, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect as f64).abs() / expect as f64;
+            assert!(dev < 0.1, "index {i}: {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn zo_seed_stable_and_nonnegative() {
+        let a = zo_seed(123, 45, 6);
+        let b = zo_seed(123, 45, 6);
+        assert_eq!(a, b);
+        assert!(a >= 0);
+        assert_ne!(zo_seed(123, 45, 6), zo_seed(123, 45, 7));
+        assert_ne!(zo_seed(123, 45, 6), zo_seed(123, 46, 6));
+    }
+
+    #[test]
+    fn child_streams_independent() {
+        let mut root = Rng::new(1);
+        let mut a = root.child(1);
+        let mut b = root.child(2);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

@@ -1,0 +1,140 @@
+//! Executable registry: manifest-driven, lazily compiled, cached.
+//!
+//! One compiled executable per (family, shape-key): zo_axpy is keyed by the
+//! flat unit length, model executables by sequence bucket. Lazy compilation
+//! keeps startup fast — a pure-ZO run never compiles forward_backward.
+
+use crate::model::manifest::Manifest;
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Family {
+    ZoAxpy,
+    ZoAxpyMasked,
+    ForwardLoss,
+    ExampleLosses,
+    Predict,
+    ForwardBackward,
+    // PEFT variants (exported with aot --peft)
+    ForwardLossLora,
+    ExampleLossesLora,
+    PredictLora,
+    ForwardLossPrefix,
+    ExampleLossesPrefix,
+    PredictPrefix,
+}
+
+impl Family {
+    fn key(self, shape: usize) -> String {
+        match self {
+            Family::ZoAxpy => format!("zo_axpy_{shape}"),
+            Family::ZoAxpyMasked => format!("zo_axpy_masked_{shape}"),
+            Family::ForwardLoss => format!("forward_loss_s{shape}"),
+            Family::ExampleLosses => format!("example_losses_s{shape}"),
+            Family::Predict => format!("predict_s{shape}"),
+            Family::ForwardBackward => format!("forward_backward_s{shape}"),
+            Family::ForwardLossLora => format!("forward_loss_lora_s{shape}"),
+            Family::ExampleLossesLora => format!("example_losses_lora_s{shape}"),
+            Family::PredictLora => format!("predict_lora_s{shape}"),
+            Family::ForwardLossPrefix => format!("forward_loss_prefix_s{shape}"),
+            Family::ExampleLossesPrefix => format!("example_losses_prefix_s{shape}"),
+            Family::PredictPrefix => format!("predict_prefix_s{shape}"),
+        }
+    }
+}
+
+/// Lazily compiled executable cache for one model's artifact directory.
+pub struct ExeRegistry {
+    manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// compile count, for perf accounting / tests
+    compiles: RefCell<usize>,
+}
+
+impl ExeRegistry {
+    pub fn new(manifest: Manifest) -> Self {
+        ExeRegistry { manifest, cache: RefCell::new(BTreeMap::new()), compiles: RefCell::new(0) }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn compiles(&self) -> usize {
+        *self.compiles.borrow()
+    }
+
+    /// Fetch (compiling on first use) the executable for (family, shape).
+    pub fn get(
+        &self,
+        rt: &Runtime,
+        family: Family,
+        shape: usize,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = family.key(shape);
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.file_path(&key)?;
+        let t = std::time::Instant::now();
+        let exe = Rc::new(rt.load_exe(&path)?);
+        *self.compiles.borrow_mut() += 1;
+        crate::debug!("compiled {key} in {:.2}s", t.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile everything a ZO run needs (axpy for all unit lengths +
+    /// forward_loss for all buckets), so step timing excludes compilation.
+    pub fn warm_zo(&self, rt: &Runtime) -> Result<()> {
+        for &n in &self.manifest.axpy_lens.clone() {
+            self.get(rt, Family::ZoAxpy, n)?;
+        }
+        for &s in &self.manifest.seq_buckets.clone() {
+            self.get(rt, Family::ForwardLoss, s)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn art() -> PathBuf {
+        let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        PathBuf::from(root).join("opt-micro")
+    }
+
+    #[test]
+    fn lazy_compile_and_cache() {
+        if !art().join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let reg = ExeRegistry::new(Manifest::load(&art()).unwrap());
+        assert_eq!(reg.compiles(), 0);
+        let n = reg.manifest().axpy_lens[0];
+        let a = reg.get(&rt, Family::ZoAxpy, n).unwrap();
+        assert_eq!(reg.compiles(), 1);
+        let b = reg.get(&rt, Family::ZoAxpy, n).unwrap();
+        assert_eq!(reg.compiles(), 1, "second fetch must hit the cache");
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn unknown_shape_is_error() {
+        if !art().join("manifest.json").exists() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let reg = ExeRegistry::new(Manifest::load(&art()).unwrap());
+        assert!(reg.get(&rt, Family::ZoAxpy, 123456789).is_err());
+    }
+}

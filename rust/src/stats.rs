@@ -1,0 +1,211 @@
+//! Small statistics toolkit used by eval and the bench harness.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator; 0.0 for n < 2).
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Accuracy over (prediction, gold) pairs.
+pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Token-level (bag-of-tokens) F1 between predicted and gold token lists —
+/// the SQuAD/DROP metric.
+pub fn token_f1(pred: &[u32], gold: &[u32]) -> f64 {
+    if pred.is_empty() && gold.is_empty() {
+        return 1.0;
+    }
+    if pred.is_empty() || gold.is_empty() {
+        return 0.0;
+    }
+    // multiset intersection
+    let mut gold_counts = std::collections::HashMap::new();
+    for &g in gold {
+        *gold_counts.entry(g).or_insert(0usize) += 1;
+    }
+    let mut overlap = 0usize;
+    for &p in pred {
+        if let Some(c) = gold_counts.get_mut(&p) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / pred.len() as f64;
+    let recall = overlap as f64 / gold.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Exact match between token lists.
+pub fn exact_match(pred: &[u32], gold: &[u32]) -> f64 {
+    if pred == gold {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Online mean/std accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Format "mean±std" with one decimal, matching the paper's tables.
+pub fn fmt_mean_std(values: &[f64]) -> String {
+    format!("{:.1}±{:.1}", 100.0 * mean(values), 100.0 * std(values))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_median() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - 1.2909944487).abs() < 1e-9);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slices_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[0], &[0]), 1.0);
+    }
+
+    #[test]
+    fn f1_identical() {
+        assert_eq!(token_f1(&[1, 2, 3], &[1, 2, 3]), 1.0);
+    }
+
+    #[test]
+    fn f1_disjoint() {
+        assert_eq!(token_f1(&[1, 2], &[3, 4]), 0.0);
+    }
+
+    #[test]
+    fn f1_partial_overlap() {
+        // pred {1,2}, gold {2,3}: overlap 1, p=0.5, r=0.5, f1=0.5
+        assert!((token_f1(&[1, 2], &[2, 3]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_multiset_semantics() {
+        // pred has 2 copies of token 7, gold has 1: overlap is 1, not 2
+        let f1 = token_f1(&[7, 7], &[7]);
+        let p = 0.5;
+        let r = 1.0;
+        assert!((f1 - 2.0 * p * r / (p + r)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_empty_conventions() {
+        assert_eq!(token_f1(&[], &[]), 1.0);
+        assert_eq!(token_f1(&[1], &[]), 0.0);
+        assert_eq!(token_f1(&[], &[1]), 0.0);
+    }
+
+    #[test]
+    fn exact_match_works() {
+        assert_eq!(exact_match(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(exact_match(&[1, 2], &[2, 1]), 0.0);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [0.5, 1.5, 2.5, 9.0, -3.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn fmt_matches_paper_style() {
+        assert_eq!(fmt_mean_std(&[0.914, 0.912, 0.910]), "91.2±0.2");
+    }
+}

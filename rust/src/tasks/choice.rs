@@ -1,0 +1,177 @@
+//! Multiple-choice tasks: Copa-like (continuation plausibility) and
+//! ReCoRD-like (cloze over passage entities). Options are multi-token
+//! continuations scored by per-option mean LM loss, exactly as MeZO
+//! evaluates multiple-choice SuperGLUE tasks.
+
+use super::{content_len, filler, Example, Task, TaskKind};
+use crate::data::vocab as v;
+use crate::rng::Rng;
+
+const VOCAB: usize = 512;
+
+/// Copa: premise drawn from one topic group; the correct continuation
+/// shares the topic, the distractor comes from another topic.
+pub struct CopaLike;
+
+impl Task for CopaLike {
+    fn name(&self) -> &'static str {
+        "copa"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::MultipleChoice
+    }
+    fn chance(&self) -> f64 {
+        0.5
+    }
+    fn pretrain_hint(&self) -> f64 {
+        0.75
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 40).max(6);
+        let topic = rng.below(v::N_TOPICS);
+        let wrong_topic = (topic + 1 + rng.below(v::N_TOPICS - 1)) % v::N_TOPICS;
+        let topic_tok = |rng: &mut Rng, t: usize| {
+            let r = v::topic_tokens(t);
+            r.start + rng.below(v::TOPIC_WIDTH) as u32
+        };
+        // premise: half topic tokens, half filler
+        let k_topic = (len / 2).clamp(2, 8);
+        let mut premise: Vec<u32> = (0..k_topic).map(|_| topic_tok(rng, topic)).collect();
+        premise.extend(filler(rng, len - k_topic, VOCAB));
+        rng.shuffle(&mut premise);
+        // continuations: 4 tokens topic-pure + EOS
+        let cont = |rng: &mut Rng, t: usize| -> Vec<u32> {
+            let mut c: Vec<u32> = (0..4).map(|_| topic_tok(rng, t)).collect();
+            c.push(v::EOS);
+            c
+        };
+        let good = cont(rng, topic);
+        let bad = cont(rng, wrong_topic);
+        let gold = rng.below(2);
+        let options = if gold == 0 { vec![good, bad] } else { vec![bad, good] };
+        let mut prompt = vec![v::BOS];
+        prompt.extend(&premise);
+        prompt.push(v::SEP);
+        Example { prompt, options, gold, answer: vec![] }
+    }
+}
+
+/// ReCoRD: passage mentions several entities; exactly one is adjacent to
+/// the MARK token. Cloze: which entity was marked? Options are the
+/// passage's entities.
+pub struct RecordLike;
+
+impl Task for RecordLike {
+    fn name(&self) -> &'static str {
+        "record"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::MultipleChoice
+    }
+    fn chance(&self) -> f64 {
+        0.25
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 48).max(12);
+        let n_ents = 4usize;
+        let mut ents = Vec::with_capacity(n_ents);
+        while ents.len() < n_ents {
+            let e = v::ENTITIES.start + rng.below((v::ENTITIES.end - v::ENTITIES.start) as usize) as u32;
+            if !ents.contains(&e) {
+                ents.push(e);
+            }
+        }
+        let starred = rng.below(n_ents);
+        // passage: each entity embedded in filler; the starred one gets MARK
+        let seg = (len / n_ents).max(2);
+        let mut passage = Vec::with_capacity(len + n_ents * 2);
+        for (i, &e) in ents.iter().enumerate() {
+            passage.extend(filler(rng, seg.saturating_sub(2), VOCAB));
+            if i == starred {
+                passage.push(v::MARK);
+            }
+            passage.push(e);
+        }
+        let mut prompt = vec![v::BOS];
+        prompt.extend(&passage);
+        prompt.push(v::Q);
+        prompt.push(v::MARK);
+        prompt.push(v::SEP);
+        let options: Vec<Vec<u32>> = ents.iter().map(|&e| vec![e]).collect();
+        Example { prompt, options, gold: starred, answer: vec![] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copa_gold_shares_topic_with_premise() {
+        let t = CopaLike;
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let ex = t.gen(&mut rng, 20);
+            assert_eq!(ex.options.len(), 2);
+            // find the premise's dominant topic
+            let topic_of = |tok: u32| -> Option<usize> {
+                if (v::TOPIC_BASE..v::FILLER_BASE).contains(&tok) {
+                    Some(((tok - v::TOPIC_BASE) as usize) / v::TOPIC_WIDTH)
+                } else {
+                    None
+                }
+            };
+            let mut counts = [0usize; v::N_TOPICS];
+            for &tok in &ex.prompt {
+                if let Some(t) = topic_of(tok) {
+                    counts[t] += 1;
+                }
+            }
+            let premise_topic = counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0;
+            let gold_topic = topic_of(ex.options[ex.gold][0]).unwrap();
+            let other_topic = topic_of(ex.options[1 - ex.gold][0]).unwrap();
+            assert_eq!(gold_topic, premise_topic);
+            assert_ne!(other_topic, premise_topic);
+        }
+    }
+
+    #[test]
+    fn copa_options_end_with_eos() {
+        let t = CopaLike;
+        let mut rng = Rng::new(2);
+        let ex = t.gen(&mut rng, 16);
+        for o in &ex.options {
+            assert_eq!(*o.last().unwrap(), v::EOS);
+        }
+    }
+
+    #[test]
+    fn record_marked_entity_is_gold() {
+        let t = RecordLike;
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let ex = t.gen(&mut rng, 24);
+            assert_eq!(ex.options.len(), 4);
+            // the entity right after MARK inside the passage is the answer
+            let body = &ex.prompt[..ex.prompt.len() - 3]; // strip Q MARK SEP
+            let mpos = body.iter().position(|&t| t == v::MARK).unwrap();
+            let marked = body[mpos + 1];
+            assert_eq!(vec![marked], ex.options[ex.gold]);
+        }
+    }
+
+    #[test]
+    fn record_gold_uniform_over_positions() {
+        let t = RecordLike;
+        let mut rng = Rng::new(4);
+        let mut counts = [0usize; 4];
+        for _ in 0..400 {
+            counts[t.gen(&mut rng, 20).gold] += 1;
+        }
+        for c in counts {
+            assert!(c > 60, "{counts:?}");
+        }
+    }
+}

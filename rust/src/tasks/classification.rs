@@ -1,0 +1,520 @@
+//! Classification tasks (verbalizer-scored): the SuperGLUE stand-ins.
+//!
+//! Every task plants a decodable rule over data::vocab's semantic regions.
+//! Budget discipline: each generator keeps prompt + continuation <= 64
+//! tokens at any mean_len (content length is clamped).
+
+use super::{content_len, filler, Example, Task, TaskKind};
+use crate::data::vocab as v;
+use crate::rng::Rng;
+
+const VOCAB: usize = 512; // generators only use the always-present id space
+
+fn lex_tok(rng: &mut Rng, r: &std::ops::Range<u32>) -> u32 {
+    r.start + rng.below((r.end - r.start) as usize) as u32
+}
+
+/// SST-2: sentence contains positive- and negative-lexicon words; the label
+/// follows the majority sentiment.
+pub struct Sst2Like;
+
+impl Task for Sst2Like {
+    fn name(&self) -> &'static str {
+        "sst2"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::Classification
+    }
+    fn chance(&self) -> f64 {
+        0.5
+    }
+    fn pretrain_hint(&self) -> f64 {
+        0.75
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 58);
+        let positive = rng.bool(0.5);
+        let k_sent = (len / 4).clamp(2, 10);
+        let k_major = (k_sent * 2).div_ceil(3).max(k_sent / 2 + 1);
+        let (maj, min_) = if positive {
+            (&v::LEX_POS, &v::LEX_NEG)
+        } else {
+            (&v::LEX_NEG, &v::LEX_POS)
+        };
+        let mut sent = Vec::with_capacity(len);
+        for _ in 0..k_major {
+            sent.push(lex_tok(rng, maj));
+        }
+        for _ in k_major..k_sent {
+            sent.push(lex_tok(rng, min_));
+        }
+        sent.extend(filler(rng, len - k_sent, VOCAB));
+        rng.shuffle(&mut sent);
+        let mut prompt = vec![v::BOS];
+        prompt.extend(sent);
+        prompt.push(v::SEP);
+        Example {
+            prompt,
+            options: vec![vec![v::V_POS], vec![v::V_NEG]],
+            gold: if positive { 0 } else { 1 },
+            answer: vec![],
+        }
+    }
+}
+
+/// RTE: premise + hypothesis; entailment iff every hypothesis content token
+/// occurs in the premise.
+pub struct RteLike;
+
+impl Task for RteLike {
+    fn name(&self) -> &'static str {
+        "rte"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::Classification
+    }
+    fn chance(&self) -> f64 {
+        0.5
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 48);
+        let premise = filler(rng, len, VOCAB);
+        let entail = rng.bool(0.5);
+        let hyp_len = 3.min(premise.len());
+        let hyp: Vec<u32> = if entail {
+            // subset of the premise
+            let idx = rng.sample_indices(premise.len(), hyp_len);
+            idx.into_iter().map(|i| premise[i]).collect()
+        } else {
+            // at least 2 novel tokens (filler is wide enough that collisions
+            // are rare; we re-roll collisions explicitly)
+            let mut h = Vec::with_capacity(hyp_len);
+            h.push(premise[rng.below(premise.len())]); // one shared is fine
+            while h.len() < hyp_len {
+                let t = filler(rng, 1, VOCAB)[0];
+                if !premise.contains(&t) {
+                    h.push(t);
+                }
+            }
+            h
+        };
+        let mut prompt = vec![v::BOS];
+        prompt.extend(&premise);
+        prompt.push(v::Q);
+        prompt.extend(&hyp);
+        prompt.push(v::SEP);
+        Example {
+            prompt,
+            options: vec![vec![v::V_YES], vec![v::V_NO]],
+            gold: if entail { 0 } else { 1 },
+            answer: vec![],
+        }
+    }
+}
+
+/// CB: 3-way: entail (hyp ⊂ premise), contradiction (hyp ⊂ premise but
+/// negated with the NEG marker), neutral (hyp disjoint).
+pub struct CbLike;
+
+impl Task for CbLike {
+    fn name(&self) -> &'static str {
+        "cb"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::Classification
+    }
+    fn chance(&self) -> f64 {
+        1.0 / 3.0
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 46);
+        let premise = filler(rng, len, VOCAB);
+        let class = rng.below(3); // 0 entail, 1 contradict, 2 neutral
+        let hyp_len = 3.min(premise.len());
+        let mut hyp = Vec::new();
+        match class {
+            0 | 1 => {
+                let idx = rng.sample_indices(premise.len(), hyp_len);
+                if class == 1 {
+                    hyp.push(v::NEG);
+                }
+                hyp.extend(idx.into_iter().map(|i| premise[i]));
+            }
+            _ => {
+                while hyp.len() < hyp_len {
+                    let t = filler(rng, 1, VOCAB)[0];
+                    if !premise.contains(&t) {
+                        hyp.push(t);
+                    }
+                }
+            }
+        }
+        let mut prompt = vec![v::BOS];
+        prompt.extend(&premise);
+        prompt.push(v::Q);
+        prompt.extend(&hyp);
+        prompt.push(v::SEP);
+        Example {
+            prompt,
+            options: vec![vec![v::V_YES], vec![v::V_NO], vec![v::V_MAYBE]],
+            gold: class,
+            answer: vec![],
+        }
+    }
+}
+
+/// BoolQ: passage + entity query; yes iff the queried entity occurs in the
+/// passage.
+pub struct BoolqLike;
+
+impl Task for BoolqLike {
+    fn name(&self) -> &'static str {
+        "boolq"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::Classification
+    }
+    fn chance(&self) -> f64 {
+        0.5
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 54);
+        let mut passage = filler(rng, len, VOCAB);
+        // sprinkle 2-4 entities into the passage
+        let n_ents = rng.range(2, 4).min(passage.len());
+        let mut present = Vec::new();
+        for i in rng.sample_indices(passage.len(), n_ents) {
+            let e = lex_tok(rng, &v::ENTITIES);
+            passage[i] = e;
+            present.push(e);
+        }
+        let yes = rng.bool(0.5);
+        let query = if yes {
+            *rng.choice(&present)
+        } else {
+            loop {
+                let e = lex_tok(rng, &v::ENTITIES);
+                if !present.contains(&e) {
+                    break e;
+                }
+            }
+        };
+        let mut prompt = vec![v::BOS];
+        prompt.extend(&passage);
+        prompt.push(v::Q);
+        prompt.push(query);
+        prompt.push(v::SEP);
+        Example {
+            prompt,
+            options: vec![vec![v::V_YES], vec![v::V_NO]],
+            gold: if yes { 0 } else { 1 },
+            answer: vec![],
+        }
+    }
+}
+
+/// WSC: two entities; the AGREE marker follows the pronoun's true referent.
+/// Query: does the pronoun refer to the queried entity?
+pub struct WscLike;
+
+impl Task for WscLike {
+    fn name(&self) -> &'static str {
+        "wsc"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::Classification
+    }
+    fn chance(&self) -> f64 {
+        0.5
+    }
+    fn pretrain_hint(&self) -> f64 {
+        0.65
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 44).max(6);
+        let e1 = lex_tok(rng, &v::ENTITIES);
+        let e2 = loop {
+            let e = lex_tok(rng, &v::ENTITIES);
+            if e != e1 {
+                break e;
+            }
+        };
+        let referent_is_e1 = rng.bool(0.5);
+        let gap1 = len / 3;
+        let gap2 = len / 3;
+        let mut sent = vec![e1];
+        if referent_is_e1 {
+            sent.push(v::AGREE);
+        }
+        sent.extend(filler(rng, gap1, VOCAB));
+        sent.push(e2);
+        if !referent_is_e1 {
+            sent.push(v::AGREE);
+        }
+        sent.extend(filler(rng, gap2, VOCAB));
+        sent.push(v::PRON);
+        let query_e1 = rng.bool(0.5);
+        let query = if query_e1 { e1 } else { e2 };
+        let yes = query_e1 == referent_is_e1;
+        let mut prompt = vec![v::BOS];
+        prompt.extend(&sent);
+        prompt.push(v::Q);
+        prompt.push(query);
+        prompt.push(v::SEP);
+        Example {
+            prompt,
+            options: vec![vec![v::V_YES], vec![v::V_NO]],
+            gold: if yes { 0 } else { 1 },
+            answer: vec![],
+        }
+    }
+}
+
+/// WiC: a polysemous word appears in two contexts, each with a sense cue;
+/// yes iff both cues come from the same sense class.
+pub struct WicLike;
+
+impl Task for WicLike {
+    fn name(&self) -> &'static str {
+        "wic"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::Classification
+    }
+    fn chance(&self) -> f64 {
+        0.5
+    }
+    fn pretrain_hint(&self) -> f64 {
+        0.65
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 44).max(8);
+        let half = len / 2;
+        let w = lex_tok(rng, &v::POLYSEMOUS);
+        let same = rng.bool(0.5);
+        let sense1_a = rng.bool(0.5);
+        let sense2_a = if same { sense1_a } else { !sense1_a };
+        let cue = |rng: &mut Rng, is_a: bool| {
+            if is_a {
+                lex_tok(rng, &v::SENSE_A)
+            } else {
+                lex_tok(rng, &v::SENSE_B)
+            }
+        };
+        let ctx = |rng: &mut Rng, is_a: bool, budget: usize| {
+            let mut c = filler(rng, budget.saturating_sub(2), VOCAB);
+            let pos = if c.is_empty() { 0 } else { rng.below(c.len() + 1) };
+            c.insert(pos, w);
+            c.insert(pos + 1, cue(rng, is_a));
+            c
+        };
+        let c1 = ctx(rng, sense1_a, half);
+        let c2 = ctx(rng, sense2_a, half);
+        let mut prompt = vec![v::BOS];
+        prompt.extend(&c1);
+        prompt.push(v::SEP);
+        prompt.extend(&c2);
+        prompt.push(v::SEP);
+        Example {
+            prompt,
+            options: vec![vec![v::V_YES], vec![v::V_NO]],
+            gold: if same { 0 } else { 1 },
+            answer: vec![],
+        }
+    }
+}
+
+/// MultiRC: passage of (entity, attribute) adjacent pairs; question asks
+/// whether candidate attribute a is paired with entity e.
+pub struct MultircLike;
+
+impl Task for MultircLike {
+    fn name(&self) -> &'static str {
+        "multirc"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::Classification
+    }
+    fn chance(&self) -> f64 {
+        0.5
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 50).max(8);
+        let n_pairs = (len / 6).clamp(2, 5);
+        let mut ents = Vec::new();
+        let mut attrs = Vec::new();
+        for _ in 0..n_pairs {
+            loop {
+                let e = lex_tok(rng, &v::ENTITIES);
+                if !ents.contains(&e) {
+                    ents.push(e);
+                    break;
+                }
+            }
+            loop {
+                let a = lex_tok(rng, &v::LEX_POS); // attributes drawn from a lexicon
+                if !attrs.contains(&a) {
+                    attrs.push(a);
+                    break;
+                }
+            }
+        }
+        // passage: filler with (e_i, a_i) pairs embedded adjacently
+        let fill_total = len.saturating_sub(2 * n_pairs);
+        let mut passage = Vec::with_capacity(len);
+        for i in 0..n_pairs {
+            passage.extend(filler(rng, fill_total / n_pairs, VOCAB));
+            passage.push(ents[i]);
+            passage.push(attrs[i]);
+        }
+        let yes = rng.bool(0.5);
+        let qi = rng.below(n_pairs);
+        let (qe, qa) = if yes {
+            (ents[qi], attrs[qi])
+        } else {
+            // mismatched pair (attribute from a different pair)
+            let mut aj = rng.below(n_pairs);
+            if aj == qi {
+                aj = (aj + 1) % n_pairs;
+            }
+            (ents[qi], attrs[aj])
+        };
+        let mut prompt = vec![v::BOS];
+        prompt.extend(&passage);
+        prompt.push(v::Q);
+        prompt.push(qe);
+        prompt.push(qa);
+        prompt.push(v::SEP);
+        Example {
+            prompt,
+            options: vec![vec![v::V_YES], vec![v::V_NO]],
+            gold: if yes { 0 } else { 1 },
+            answer: vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Verify the planted rules are actually decodable from the tokens —
+    /// i.e. a perfect model could reach 100%.
+    #[test]
+    fn sst2_rule_is_decodable() {
+        let t = Sst2Like;
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let ex = t.gen(&mut rng, 24);
+            let pos = ex.prompt.iter().filter(|t| v::LEX_POS.contains(t)).count();
+            let neg = ex.prompt.iter().filter(|t| v::LEX_NEG.contains(t)).count();
+            let decoded = if pos > neg { 0 } else { 1 };
+            assert_eq!(decoded, ex.gold, "pos={pos} neg={neg}");
+        }
+    }
+
+    #[test]
+    fn rte_rule_is_decodable() {
+        let t = RteLike;
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let ex = t.gen(&mut rng, 24);
+            let qpos = ex.prompt.iter().position(|&t| t == v::Q).unwrap();
+            let premise = &ex.prompt[1..qpos];
+            let hyp = &ex.prompt[qpos + 1..ex.prompt.len() - 1];
+            let subset = hyp.iter().all(|h| premise.contains(h));
+            assert_eq!(if subset { 0 } else { 1 }, ex.gold);
+        }
+    }
+
+    #[test]
+    fn boolq_rule_is_decodable() {
+        let t = BoolqLike;
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let ex = t.gen(&mut rng, 24);
+            let n = ex.prompt.len();
+            let query = ex.prompt[n - 2];
+            let passage = &ex.prompt[1..n - 3];
+            let present = passage.contains(&query);
+            assert_eq!(if present { 0 } else { 1 }, ex.gold);
+        }
+    }
+
+    #[test]
+    fn wsc_rule_is_decodable() {
+        let t = WscLike;
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let ex = t.gen(&mut rng, 24);
+            let n = ex.prompt.len();
+            let query = ex.prompt[n - 2];
+            // referent = entity immediately followed by AGREE
+            let agree_pos = ex.prompt.iter().position(|&t| t == v::AGREE).unwrap();
+            let referent = ex.prompt[agree_pos - 1];
+            assert_eq!(if query == referent { 0 } else { 1 }, ex.gold);
+        }
+    }
+
+    #[test]
+    fn wic_rule_is_decodable() {
+        let t = WicLike;
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let ex = t.gen(&mut rng, 24);
+            let cues: Vec<bool> = ex
+                .prompt
+                .iter()
+                .filter(|t| v::SENSE_A.contains(t) || v::SENSE_B.contains(t))
+                .map(|t| v::SENSE_A.contains(t))
+                .collect();
+            assert_eq!(cues.len(), 2, "exactly two cues");
+            assert_eq!(if cues[0] == cues[1] { 0 } else { 1 }, ex.gold);
+        }
+    }
+
+    #[test]
+    fn multirc_rule_is_decodable() {
+        let t = MultircLike;
+        let mut rng = Rng::new(6);
+        for _ in 0..200 {
+            let ex = t.gen(&mut rng, 24);
+            let n = ex.prompt.len();
+            let (qe, qa) = (ex.prompt[n - 3], ex.prompt[n - 2]);
+            let passage = &ex.prompt[1..n - 4];
+            let paired = passage.windows(2).any(|w| w[0] == qe && w[1] == qa);
+            assert_eq!(if paired { 0 } else { 1 }, ex.gold);
+        }
+    }
+
+    #[test]
+    fn cb_three_classes_all_emitted() {
+        let t = CbLike;
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 3];
+        for _ in 0..300 {
+            counts[t.gen(&mut rng, 20).gold] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert!(*c > 50, "class {i}: {c}");
+        }
+    }
+
+    #[test]
+    fn wsc_agree_marker_present_exactly_once() {
+        let t = WscLike;
+        let mut rng = Rng::new(8);
+        for _ in 0..100 {
+            let ex = t.gen(&mut rng, 16);
+            let n = ex.prompt.iter().filter(|&&t| t == v::AGREE).count();
+            assert_eq!(n, 1);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Generation tasks: SQuAD-like extraction (copy the marked span) and
+//! DROP-like discrete reasoning (count the markers). Teacher-forced
+//! evaluation: the model predicts the answer tokens after the ANS marker;
+//! the metric is token F1 (and exact match).
+
+use super::{content_len, filler, Example, Task, TaskKind};
+use crate::data::vocab as v;
+use crate::rng::Rng;
+
+const VOCAB: usize = 512;
+
+/// SQuAD: the passage embeds `MARK` followed by a 1-3 token span; the
+/// question asks for that span (pure extraction — an attention copy task).
+pub struct SquadLike;
+
+impl Task for SquadLike {
+    fn name(&self) -> &'static str {
+        "squad"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::Generation
+    }
+    fn chance(&self) -> f64 {
+        0.0
+    }
+    fn pretrain_hint(&self) -> f64 {
+        0.8
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 48).max(8);
+        let span_len = rng.range(1, 3);
+        let span: Vec<u32> = (0..span_len)
+            .map(|_| v::ENTITIES.start + rng.below((v::ENTITIES.end - v::ENTITIES.start) as usize) as u32)
+            .collect();
+        let mut passage = filler(rng, len.saturating_sub(span_len + 1), VOCAB);
+        let pos = rng.below(passage.len() + 1);
+        let mut with_span = passage.split_off(pos);
+        passage.push(v::MARK);
+        passage.extend(&span);
+        passage.append(&mut with_span);
+        let mut prompt = vec![v::BOS];
+        prompt.extend(&passage);
+        prompt.push(v::Q);
+        prompt.push(v::MARK);
+        prompt.push(v::ANS);
+        let mut answer = span;
+        answer.push(v::EOS);
+        Example { prompt, options: vec![], gold: 0, answer }
+    }
+}
+
+/// DROP: the passage contains 1..=5 MARK tokens; the answer is the count as
+/// a digit verbalizer.
+pub struct DropLike;
+
+impl Task for DropLike {
+    fn name(&self) -> &'static str {
+        "drop"
+    }
+    fn kind(&self) -> TaskKind {
+        TaskKind::Generation
+    }
+    fn chance(&self) -> f64 {
+        0.0
+    }
+    fn pretrain_hint(&self) -> f64 {
+        0.7
+    }
+
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example {
+        let len = content_len(rng, mean_len, 50).max(10);
+        let count = rng.range(1, 5);
+        let mut passage = filler(rng, len.saturating_sub(count), VOCAB);
+        for i in rng.sample_indices(passage.len(), count.min(passage.len())) {
+            passage[i] = v::MARK;
+        }
+        let mut prompt = vec![v::BOS];
+        prompt.extend(&passage);
+        prompt.push(v::Q);
+        prompt.push(v::MARK);
+        prompt.push(v::ANS);
+        Example { prompt, options: vec![], gold: 0, answer: vec![v::digit(count), v::EOS] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squad_answer_is_the_marked_span() {
+        let t = SquadLike;
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let ex = t.gen(&mut rng, 24);
+            // find MARK inside the passage (not the one in the question tail)
+            let body = &ex.prompt[..ex.prompt.len() - 3];
+            let mpos = body.iter().position(|&t| t == v::MARK).unwrap();
+            let span_len = ex.answer.len() - 1; // strip EOS
+            let span = &body[mpos + 1..mpos + 1 + span_len];
+            assert_eq!(span, &ex.answer[..span_len]);
+            assert_eq!(*ex.answer.last().unwrap(), v::EOS);
+            assert!(span.iter().all(|t| v::ENTITIES.contains(t)));
+        }
+    }
+
+    #[test]
+    fn drop_answer_counts_marks() {
+        let t = DropLike;
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let ex = t.gen(&mut rng, 24);
+            let body = &ex.prompt[..ex.prompt.len() - 3];
+            let count = body.iter().filter(|&&t| t == v::MARK).count();
+            assert!(count >= 1);
+            assert_eq!(ex.answer[0], v::digit(count));
+        }
+    }
+
+    #[test]
+    fn generation_examples_have_no_options() {
+        let mut rng = Rng::new(3);
+        for task in [&SquadLike as &dyn Task, &DropLike] {
+            let ex = task.gen(&mut rng, 16);
+            assert!(ex.options.is_empty());
+            assert!(!ex.answer.is_empty());
+            // train instance predicts the answer tokens
+            let ti = ex.train_instance();
+            assert_eq!(ti.continuation, ex.answer);
+        }
+    }
+
+    #[test]
+    fn drop_count_distribution_covers_range() {
+        let t = DropLike;
+        let mut rng = Rng::new(4);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..300 {
+            let ex = t.gen(&mut rng, 30);
+            seen.insert(ex.answer[0]);
+        }
+        assert!(seen.len() >= 4, "count diversity: {seen:?}");
+    }
+}

@@ -1,0 +1,245 @@
+//! Synthetic task suite mirroring the paper's evaluation: SuperGLUE-shaped
+//! classification, multiple choice, and extractive/counting generation.
+//!
+//! Each task plants a latent rule in token space (see data::vocab for the
+//! semantic regions) and exposes the MeZO-style interface: a prompt whose
+//! continuation is scored by LM loss. Task difficulty and mean input length
+//! are controlled so the paper's axes (Fig. 3 sparsity, Fig. 6 length) can
+//! be swept causally.
+
+pub mod choice;
+pub mod classification;
+pub mod generation;
+
+use crate::data::batch::Instance;
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Fixed verbalizer set; metric = accuracy.
+    Classification,
+    /// Example-specific candidate continuations; metric = accuracy.
+    MultipleChoice,
+    /// Free-form answer; metric = token F1 (teacher-forced).
+    Generation,
+}
+
+/// One evaluation example.
+#[derive(Debug, Clone)]
+pub struct Example {
+    /// Tokens up to (and including) the position whose continuation is
+    /// predicted (ends with SEP / ANS marker).
+    pub prompt: Vec<u32>,
+    /// Candidate continuations (classification: verbalizers; choice:
+    /// multi-token endings; generation: empty).
+    pub options: Vec<Vec<u32>>,
+    /// Index of the correct option (classification / choice).
+    pub gold: usize,
+    /// Gold answer tokens (generation only).
+    pub answer: Vec<u32>,
+}
+
+impl Example {
+    /// Training instance: prompt + gold continuation.
+    pub fn train_instance(&self) -> Instance {
+        let continuation = if self.options.is_empty() {
+            self.answer.clone()
+        } else {
+            self.options[self.gold].clone()
+        };
+        Instance { prompt: self.prompt.clone(), continuation }
+    }
+
+    /// Scoring instances, one per option.
+    pub fn option_instances(&self) -> Vec<Instance> {
+        self.options
+            .iter()
+            .map(|opt| Instance { prompt: self.prompt.clone(), continuation: opt.clone() })
+            .collect()
+    }
+}
+
+pub trait Task {
+    fn name(&self) -> &'static str;
+    fn kind(&self) -> TaskKind;
+    /// Generate one example with ~mean_len content tokens.
+    fn gen(&self, rng: &mut Rng, mean_len: usize) -> Example;
+    /// Chance accuracy (for sanity assertions and table context).
+    fn chance(&self) -> f64;
+    /// How strongly the pretraining corpus hints at the rule (0.5 = none).
+    fn pretrain_hint(&self) -> f64 {
+        0.70
+    }
+}
+
+/// Names of all tasks, in the paper's Table-2 order.
+pub const ALL_TASKS: [&str; 11] = [
+    "sst2", "rte", "cb", "boolq", "wsc", "wic", "multirc", "copa", "record", "squad", "drop",
+];
+
+/// The Table-1 subset (8 tasks).
+pub const TABLE1_TASKS: [&str; 8] =
+    ["sst2", "rte", "cb", "boolq", "wsc", "wic", "copa", "squad"];
+
+pub fn make_task(name: &str) -> Result<Box<dyn Task>> {
+    Ok(match name {
+        "sst2" => Box::new(classification::Sst2Like),
+        "rte" => Box::new(classification::RteLike),
+        "cb" => Box::new(classification::CbLike),
+        "boolq" => Box::new(classification::BoolqLike),
+        "wsc" => Box::new(classification::WscLike),
+        "wic" => Box::new(classification::WicLike),
+        "multirc" => Box::new(classification::MultircLike),
+        "copa" => Box::new(choice::CopaLike),
+        "record" => Box::new(choice::RecordLike),
+        "squad" => Box::new(generation::SquadLike),
+        "drop" => Box::new(generation::DropLike),
+        _ => bail!("unknown task '{name}' (one of {:?})", ALL_TASKS),
+    })
+}
+
+/// Deterministic eval set for (task, seed): same examples for every method,
+/// as in the paper's fixed test extraction.
+pub fn eval_set(task: &dyn Task, seed: u64, n: usize, mean_len: usize) -> Vec<Example> {
+    let mut rng = Rng::new(crate::rng::derive(seed, crate::rng::purpose::EVAL, 0));
+    (0..n).map(|_| task.gen(&mut rng, mean_len)).collect()
+}
+
+/// Sample a content length around the mean (uniform ±25%, floor 4).
+pub(crate) fn content_len(rng: &mut Rng, mean_len: usize, max: usize) -> usize {
+    let lo = (mean_len * 3 / 4).max(4);
+    let hi = (mean_len * 5 / 4).max(lo + 1).min(max);
+    rng.range(lo.min(max), hi)
+}
+
+/// Fill with random filler tokens.
+pub(crate) fn filler(rng: &mut Rng, n: usize, vocab: usize) -> Vec<u32> {
+    let r = crate::data::vocab::filler_range(vocab);
+    (0..n).map(|_| r.start + rng.below((r.end - r.start) as usize) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab;
+
+    const VOCAB: usize = 512;
+    const MAX_TOTAL: usize = 64;
+
+    #[test]
+    fn registry_covers_all_tasks() {
+        for name in ALL_TASKS {
+            let t = make_task(name).unwrap();
+            assert_eq!(t.name(), name);
+        }
+        assert!(make_task("nope").is_err());
+    }
+
+    #[test]
+    fn examples_fit_the_largest_bucket() {
+        // property sweep: every task, several lengths/seeds, must fit 64 tokens
+        for name in ALL_TASKS {
+            let t = make_task(name).unwrap();
+            let mut rng = Rng::new(1);
+            for mean_len in [8, 16, 24, 40] {
+                for _ in 0..50 {
+                    let ex = t.gen(&mut rng, mean_len);
+                    let ti = ex.train_instance();
+                    assert!(
+                        ti.total_len() <= MAX_TOTAL,
+                        "{name} mean={mean_len}: train len {}",
+                        ti.total_len()
+                    );
+                    for oi in ex.option_instances() {
+                        assert!(oi.total_len() <= MAX_TOTAL, "{name}: option too long");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gold_indices_valid_and_tokens_in_vocab() {
+        for name in ALL_TASKS {
+            let t = make_task(name).unwrap();
+            let mut rng = Rng::new(2);
+            for _ in 0..100 {
+                let ex = t.gen(&mut rng, 20);
+                if !ex.options.is_empty() {
+                    assert!(ex.gold < ex.options.len(), "{name}");
+                } else {
+                    assert!(!ex.answer.is_empty(), "{name}: generation needs an answer");
+                }
+                for &tok in ex
+                    .prompt
+                    .iter()
+                    .chain(ex.options.iter().flatten())
+                    .chain(ex.answer.iter())
+                {
+                    assert!((tok as usize) < VOCAB, "{name}: token {tok} out of vocab");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        // classification tasks should emit each class a reasonable fraction
+        for name in ["sst2", "rte", "boolq", "wsc", "wic", "multirc"] {
+            let t = make_task(name).unwrap();
+            let mut rng = Rng::new(3);
+            let n = 600;
+            let ones = (0..n).filter(|_| t.gen(&mut rng, 20).gold == 1).count();
+            let frac = ones as f64 / n as f64;
+            assert!((0.3..=0.7).contains(&frac), "{name}: class-1 frac {frac}");
+        }
+    }
+
+    #[test]
+    fn eval_set_is_deterministic() {
+        let t = make_task("sst2").unwrap();
+        let a = eval_set(t.as_ref(), 9, 20, 16);
+        let b = eval_set(t.as_ref(), 9, 20, 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.gold, y.gold);
+        }
+        let c = eval_set(t.as_ref(), 10, 20, 16);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn mean_length_is_controlled() {
+        // Fig. 6 axis: generated prompt length must track mean_len
+        let t = make_task("sst2").unwrap();
+        let mut rng = Rng::new(4);
+        let mut lens = vec![];
+        for _ in 0..200 {
+            lens.push(t.gen(&mut rng, 32).prompt.len() as f64);
+        }
+        let m = crate::stats::mean(&lens);
+        assert!((28.0..=44.0).contains(&m), "mean prompt len {m}");
+        let mut rng = Rng::new(4);
+        let mut short = vec![];
+        for _ in 0..200 {
+            short.push(t.gen(&mut rng, 10).prompt.len() as f64);
+        }
+        assert!(crate::stats::mean(&short) < m - 10.0);
+    }
+
+    #[test]
+    fn prompts_end_with_separator_or_ans() {
+        for name in ALL_TASKS {
+            let t = make_task(name).unwrap();
+            let mut rng = Rng::new(5);
+            let ex = t.gen(&mut rng, 16);
+            let last = *ex.prompt.last().unwrap();
+            assert!(
+                last == vocab::SEP || last == vocab::ANS,
+                "{name}: prompt ends with {last}"
+            );
+            assert_eq!(ex.prompt[0], vocab::BOS, "{name}: prompt starts with BOS");
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Shared utilities: JSON parsing, logging, timing.
+
+pub mod json;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1); // 0 = quiet, 1 = info, 2 = debug
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(1) { eprintln!("[lezo] {}", format!($($arg)*)); }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(2) { eprintln!("[lezo:debug] {}", format!($($arg)*)); }
+    };
+}
+
+/// Wall-clock stopwatch returning seconds.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let t = self.secs();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Render an aligned text table (used by the bench harness to print the
+/// paper's tables).
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push_str("  ");
+            }
+            line.push_str(&format!("{:width$}", c, width = widths[i]));
+        }
+        line.trim_end().to_string()
+    };
+    let head: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.secs() >= 0.004);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["task", "acc"],
+            &[vec!["sst2".into(), "91.2±0.3".into()], vec!["boolq-like".into(), "65.0".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("task"));
+        assert!(lines[2].starts_with("sst2"));
+        // columns aligned: "acc" column starts at same offset in all rows
+        let col = lines[0].find("acc").unwrap();
+        assert_eq!(&lines[2][col..col + 2], "91");
+    }
+}

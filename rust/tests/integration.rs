@@ -1,0 +1,399 @@
+//! Integration tests over the real PJRT runtime and the opt-micro artifacts.
+//!
+//! These exercise the full L3 -> runtime -> (AOT'd L2/L1) stack: algorithm
+//! invariants that only hold if every layer composes correctly. Tests skip
+//! (with a note) when `make artifacts` has not been run.
+
+use lezo::config::{Method, RunConfig};
+use lezo::coordinator::metrics::StageTimes;
+use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
+use lezo::coordinator::{LayerSelector, Trainer};
+use lezo::data::batch::Batch;
+use lezo::eval::Evaluator;
+use lezo::model::{Manifest, ParamStore};
+use lezo::peft::PeftMode;
+use lezo::runtime::exes::{ExeRegistry, Family};
+use lezo::runtime::{run1, Runtime};
+use lezo::tasks::{eval_set, make_task};
+use std::path::PathBuf;
+
+fn art() -> PathBuf {
+    let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    PathBuf::from(root).join("opt-micro")
+}
+
+fn have() -> bool {
+    let ok = art().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+fn micro_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "opt-micro".into();
+    cfg.artifacts_root = art().parent().unwrap().to_str().unwrap().into();
+    cfg.steps = 8;
+    cfg.eval_every = 8;
+    cfg.eval_examples = 16;
+    cfg.train_examples = 32;
+    cfg.lr = 1e-4;
+    cfg
+}
+
+fn tunable_from_store(rt: &Runtime, m: &Manifest) -> TunableUnits {
+    let store = ParamStore::load_init(rt, m).unwrap();
+    let bufs = (0..store.n_units())
+        .map(|k| rt.vec_f32(&rt.read_vec_f32(store.unit(k)).unwrap()).unwrap())
+        .collect();
+    TunableUnits { bufs, lens: m.unit_lens.clone() }
+}
+
+// ---------------------------------------------------------------------------
+// ZO-step invariants across the FFI
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mezo_equals_lezo_with_zero_drop() {
+    // MeZO is the drop=0 special case: identical trajectories, bit-for-bit.
+    if !have() {
+        return;
+    }
+    let mut a = micro_cfg();
+    a.method = Method::Mezo;
+    a.drop_layers = 0;
+    let mut b = a.clone();
+    b.method = Method::Lezo;
+    let ra = Trainer::new(a).run().unwrap();
+    let rb = Trainer::new(b).run().unwrap();
+    assert_eq!(ra.losses, rb.losses, "loss trajectories must match exactly");
+    assert_eq!(ra.final_metric, rb.final_metric);
+}
+
+#[test]
+fn run_is_reproducible_across_processes_worth_of_state() {
+    if !have() {
+        return;
+    }
+    let mut cfg = micro_cfg();
+    cfg.method = Method::Lezo;
+    cfg.drop_layers = 2;
+    let r1 = Trainer::new(cfg.clone()).run().unwrap();
+    let r2 = Trainer::new(cfg).run().unwrap();
+    assert_eq!(r1.losses, r2.losses);
+    assert_eq!(r1.final_metric, r2.final_metric);
+}
+
+#[test]
+fn different_seeds_different_trajectories() {
+    if !have() {
+        return;
+    }
+    let mut cfg = micro_cfg();
+    cfg.method = Method::Mezo;
+    let r1 = Trainer::new(cfg.clone()).run().unwrap();
+    cfg.seed = 99;
+    let r2 = Trainer::new(cfg).run().unwrap();
+    assert_ne!(r1.losses, r2.losses);
+}
+
+#[test]
+fn spsa_probe_losses_bracket_base_loss() {
+    // l+ and l- must both be finite and straddle the unperturbed loss in
+    // expectation; at tiny mu they should be within O(mu) of each other.
+    if !have() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let m = Manifest::load(&art()).unwrap();
+    let reg = ExeRegistry::new(m.clone());
+    let eng = SpsaEngine::new(&rt, &reg, 1e-4, 3).unwrap();
+    let mut units = tunable_from_store(&rt, &m);
+    let active: Vec<usize> = (0..units.n_units()).collect();
+    let seqs: Vec<Vec<u32>> = (0..m.train_batch)
+        .map(|r| (0..16u32).map(|i| 20 + (r as u32 * 7 + i) % 90).collect())
+        .collect();
+    let batch = Batch::lm_batch(&seqs, m.train_batch, 16).unwrap();
+    let tok = rt.mat_i32(&batch.tokens, batch.rows, batch.seq).unwrap();
+    let tgt = rt.mat_i32(&batch.targets, batch.rows, batch.seq).unwrap();
+    let msk = rt.mat_f32(&batch.mask, batch.rows, batch.seq).unwrap();
+    let exe = reg.get(&rt, Family::ForwardLoss, 16).unwrap();
+    let mut loss = |u: &TunableUnits| -> anyhow::Result<f32> {
+        let mut args: Vec<&xla::PjRtBuffer> = u.bufs.iter().collect();
+        args.push(&tok);
+        args.push(&tgt);
+        args.push(&msk);
+        rt.read_scalar_f32(&run1(&exe, &args)?)
+    };
+    let base = loss(&units).unwrap();
+    let mut times = StageTimes::default();
+    let step = eng.zo_step(0, &mut units, &active, 0.0, &mut loss, &mut times).unwrap();
+    assert!(step.loss_plus.is_finite() && step.loss_minus.is_finite());
+    assert!((step.loss_plus - base).abs() < 0.1, "mu=1e-4 probe moved too far");
+    assert!((step.loss_minus - base).abs() < 0.1);
+    // lr = 0: parameters must be exactly restored
+    let after = loss(&units).unwrap();
+    assert!((after - base).abs() < 1e-4, "{base} vs {after}");
+}
+
+#[test]
+fn lezo_step_timing_is_cheaper_than_mezo() {
+    // the paper's computation claim at the step level: dropping layers
+    // shrinks perturb+update wall time
+    if !have() {
+        return;
+    }
+    let mut mezo = micro_cfg();
+    mezo.method = Method::Mezo;
+    mezo.steps = 30;
+    mezo.eval_every = 30;
+    mezo.eval_examples = 8;
+    let mut lezo = mezo.clone();
+    lezo.method = Method::Lezo;
+    lezo.drop_layers = 3;
+    let rm = Trainer::new(mezo).run().unwrap();
+    let rl = Trainer::new(lezo).run().unwrap();
+    let (pm, _, um, _) = rm.stage_times.per_step_ms();
+    let (pl, _, ul, _) = rl.stage_times.per_step_ms();
+    assert!(
+        pl + ul < pm + um,
+        "LeZO perturb+update {:.1}ms must beat MeZO {:.1}ms",
+        pl + ul,
+        pm + um
+    );
+    assert!(rl.active_param_fraction < rm.active_param_fraction);
+}
+
+// ---------------------------------------------------------------------------
+// Evaluator over the real executables
+// ---------------------------------------------------------------------------
+
+#[test]
+fn evaluator_scores_all_task_kinds() {
+    if !have() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let m = Manifest::load(&art()).unwrap();
+    let reg = ExeRegistry::new(m.clone());
+    let store = ParamStore::load_init(&rt, &m).unwrap();
+    let ev = Evaluator::new(&rt, &reg);
+    for task_name in ["sst2", "copa", "squad"] {
+        let task = make_task(task_name).unwrap();
+        let examples = eval_set(task.as_ref(), 11, 24, 12);
+        let metric = ev.evaluate(task.kind(), &store.unit_refs(), &examples).unwrap();
+        assert!(
+            (0.0..=1.0).contains(&metric.value),
+            "{task_name}: {}",
+            metric.value
+        );
+        assert_eq!(metric.n_examples, 24);
+    }
+}
+
+#[test]
+fn untrained_model_scores_near_chance() {
+    // params_init (not the pretrained ckpt) must sit near the task's chance
+    // level — guards against leakage through the scoring path
+    if !have() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let m = Manifest::load(&art()).unwrap();
+    let reg = ExeRegistry::new(m.clone());
+    let host = m.read_init_params().unwrap();
+    let store = ParamStore::from_host(&rt, &m, &host).unwrap();
+    let ev = Evaluator::new(&rt, &reg);
+    let task = make_task("sst2").unwrap();
+    let examples = eval_set(task.as_ref(), 123, 80, 12);
+    let metric = ev.option_accuracy(&store.unit_refs(), &examples).unwrap();
+    assert!(
+        (0.3..=0.7).contains(&metric.value),
+        "untrained sst2 acc {} should be near 0.5",
+        metric.value
+    );
+}
+
+// ---------------------------------------------------------------------------
+// PEFT path (needs the peft executables; skipped on older artifacts)
+// ---------------------------------------------------------------------------
+
+fn have_peft() -> bool {
+    have() && Manifest::load(&art()).map(|m| m.lora_unit_len.is_some()).unwrap_or(false)
+}
+
+#[test]
+fn lora_zero_init_matches_base_loss() {
+    // LoRA B=0 at init: the adapter forward must equal the base forward.
+    if !have_peft() {
+        eprintln!("skipping: artifacts lack PEFT executables");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let m = Manifest::load(&art()).unwrap();
+    let reg = ExeRegistry::new(m.clone());
+    let store = ParamStore::load_init(&rt, &m).unwrap();
+    let peft_host = lezo::peft::init_peft_units(PeftMode::Lora, m.n_layers, m.d_model, 0);
+    let peft_bufs: Vec<xla::PjRtBuffer> =
+        peft_host.iter().map(|u| rt.vec_f32(u).unwrap()).collect();
+
+    let seqs: Vec<Vec<u32>> = (0..m.train_batch)
+        .map(|r| (0..16u32).map(|i| 30 + (r as u32 * 3 + i) % 80).collect())
+        .collect();
+    let batch = Batch::lm_batch(&seqs, m.train_batch, 16).unwrap();
+    let tok = rt.mat_i32(&batch.tokens, batch.rows, batch.seq).unwrap();
+    let tgt = rt.mat_i32(&batch.targets, batch.rows, batch.seq).unwrap();
+    let msk = rt.mat_f32(&batch.mask, batch.rows, batch.seq).unwrap();
+
+    let base_exe = reg.get(&rt, Family::ForwardLoss, 16).unwrap();
+    let mut base_args: Vec<&xla::PjRtBuffer> = store.unit_refs();
+    base_args.push(&tok);
+    base_args.push(&tgt);
+    base_args.push(&msk);
+    let base_loss = rt.read_scalar_f32(&run1(&base_exe, &base_args).unwrap()).unwrap();
+
+    let lora_exe = reg.get(&rt, Family::ForwardLossLora, 16).unwrap();
+    let mut args: Vec<&xla::PjRtBuffer> = store.unit_refs();
+    args.extend(peft_bufs.iter());
+    args.push(&tok);
+    args.push(&tgt);
+    args.push(&msk);
+    let lora_loss = rt.read_scalar_f32(&run1(&lora_exe, &args).unwrap()).unwrap();
+    assert!(
+        (base_loss - lora_loss).abs() < 1e-4,
+        "zero-init LoRA must be a no-op: {base_loss} vs {lora_loss}"
+    );
+}
+
+#[test]
+fn peft_training_runs_and_moves_loss() {
+    if !have_peft() {
+        return;
+    }
+    for peft in [PeftMode::Lora, PeftMode::Prefix] {
+        let mut cfg = micro_cfg();
+        cfg.method = Method::Lezo;
+        cfg.peft = peft;
+        cfg.drop_layers = 2;
+        cfg.lr = 1e-3;
+        cfg.mu = 1e-2;
+        cfg.steps = 6;
+        cfg.eval_every = 6;
+        let r = Trainer::new(cfg).run().unwrap();
+        assert_eq!(r.losses.len(), 6);
+        assert!(r.losses.iter().all(|l| l.is_finite()), "{peft:?}");
+        // perturbed params per step < full model (the whole point of PEFT)
+        assert!(r.active_param_fraction <= 1.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selector / batching properties against the real manifest
+// ---------------------------------------------------------------------------
+
+#[test]
+fn selector_covers_all_blocks_on_real_manifest() {
+    if !have() {
+        return;
+    }
+    let m = Manifest::load(&art()).unwrap();
+    let sel = LayerSelector::new(
+        m.block_unit_indices(),
+        vec![0, m.n_units() - 1],
+        m.n_layers - 1, // keep exactly one block per step
+        7,
+    )
+    .unwrap();
+    let mut seen = std::collections::HashSet::new();
+    for t in 0..100 {
+        for u in sel.active_units(t) {
+            seen.insert(u);
+        }
+    }
+    assert_eq!(seen.len(), m.n_units(), "every unit must eventually be active");
+}
+
+#[test]
+fn zero_shot_and_icl_run_end_to_end() {
+    if !have() {
+        return;
+    }
+    for method in [Method::ZeroShot, Method::Icl] {
+        let mut cfg = micro_cfg();
+        cfg.method = method;
+        let r = Trainer::new(cfg).run().unwrap();
+        assert!((0.0..=1.0).contains(&r.final_metric), "{method}");
+        assert_eq!(r.stage_times.steps, 0, "no training steps for {method}");
+    }
+}
+
+#[test]
+fn ft_beats_zo_in_few_steps() {
+    // FO with Adam must make visible progress in 30 steps where ZO cannot —
+    // the paper's accuracy-vs-memory trade
+    if !have() {
+        return;
+    }
+    let mut cfg = micro_cfg();
+    cfg.method = Method::Ft;
+    cfg.steps = 30;
+    cfg.eval_every = 30;
+    cfg.eval_examples = 50;
+    cfg.lr = 1e-3;
+    let r = Trainer::new(cfg).run().unwrap();
+    let first = r.losses.first().copied().unwrap();
+    let last = r.losses.last().copied().unwrap();
+    assert!(last < first, "FT loss must drop: {first} -> {last}");
+}
+
+#[test]
+fn smezo_step_slower_but_converging_path_runs() {
+    // Sparse-MeZO baseline: runs, restores correctly, and its step is NOT
+    // cheaper than MeZO's (the paper's criticism, as an executable assert)
+    if !have() {
+        return;
+    }
+    let m = Manifest::load(&art()).unwrap();
+    if !m.files.contains_key(&format!("zo_axpy_masked_{}", m.unit_lens[0])) {
+        eprintln!("skipping: artifacts lack masked kernels");
+        return;
+    }
+    let mut mezo = micro_cfg();
+    mezo.method = Method::Mezo;
+    mezo.steps = 20;
+    mezo.eval_every = 20;
+    mezo.eval_examples = 8;
+    let mut smezo = mezo.clone();
+    smezo.method = Method::Smezo;
+    let rm = Trainer::new(mezo).run().unwrap();
+    let rs = Trainer::new(smezo).run().unwrap();
+    assert!(rs.losses.iter().all(|l| l.is_finite()));
+    let (pm, _, um, _) = rm.stage_times.per_step_ms();
+    let (ps, _, us, _) = rs.stage_times.per_step_ms();
+    assert!(
+        ps + us > pm + um,
+        "element-wise masking must not beat dense perturb+update: {:.1} vs {:.1}",
+        ps + us,
+        pm + um
+    );
+}
+
+#[test]
+fn selection_policies_all_train() {
+    if !have() {
+        return;
+    }
+    for policy in ["uniform", "round-robin", "stratified", "weighted"] {
+        let mut cfg = micro_cfg();
+        cfg.method = Method::Lezo;
+        cfg.drop_layers = 3;
+        cfg.steps = 6;
+        cfg.eval_every = 6;
+        cfg.eval_examples = 8;
+        cfg.set("policy", policy).unwrap();
+        let r = Trainer::new(cfg).run().unwrap();
+        assert_eq!(r.losses.len(), 6, "{policy}");
+        assert!(r.losses.iter().all(|l| l.is_finite()), "{policy}");
+    }
+}
