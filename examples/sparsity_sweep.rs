@@ -8,16 +8,19 @@
 use anyhow::Result;
 use lezo::config::{Method, RunConfig};
 use lezo::coordinator::Trainer;
-use lezo::model::Manifest;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let model = args.first().cloned().unwrap_or_else(|| "opt-micro".into());
     let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(400);
 
-    let manifest = Manifest::load(std::path::Path::new(&format!("artifacts/{model}")))?;
-    let nl = manifest.n_layers;
-    println!("{model}: {} params, {nl} blocks, sweeping drop = 0..={nl}", manifest.param_count);
+    // artifact manifest when exported, else the native preset — the sweep
+    // runs end-to-end on the pure-Rust backend with zero artifacts
+    let mut probe = RunConfig::default();
+    probe.model = model.clone();
+    let spec = lezo::bench::model_spec_for(&probe)?;
+    let nl = spec.n_layers;
+    println!("{model}: {} params, {nl} blocks, sweeping drop = 0..={nl}", spec.param_count());
     println!(
         "\n{:>6} {:>8} {:>10} {:>10} {:>10} {:>8}",
         "drop", "rho", "active%", "ms/step", "saved%", "best%"

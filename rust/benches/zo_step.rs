@@ -3,21 +3,21 @@
 //!
 //! Covers: per-unit zo_axpy latency, forward-pass latency per bucket, and a
 //! full MeZO-vs-LeZO step comparison — the raw numbers behind Figs. 2 and 4.
-//! For the full table/figure regeneration use `lezo bench <id>`.
+//! Backend-generic: the native backend runs with zero artifacts on any
+//! machine; with `--features pjrt` and exported artifacts the same harness
+//! times the PJRT runtime. For the full table/figure regeneration use
+//! `lezo bench <id>`.
+//!
+//! Usage: `cargo bench -- [native:MODEL|pjrt:MODEL ...]`
+//! (default: `native:opt-micro`, plus every pjrt model with artifacts).
 
 use lezo::coordinator::metrics::StageTimes;
 use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
 use lezo::data::batch::Batch;
-use lezo::model::{Manifest, ParamStore};
-use lezo::runtime::exes::{ExeRegistry, Family};
-use lezo::runtime::{run1, Runtime};
-use std::path::PathBuf;
+use lezo::peft::PeftMode;
+use lezo::runtime::backend::Backend;
+use lezo::runtime::NativeBackend;
 use std::time::Instant;
-
-fn art(model: &str) -> PathBuf {
-    let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    PathBuf::from(root).join(model)
-}
 
 fn time_ms<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     // warmup
@@ -29,89 +29,67 @@ fn time_ms<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     1e3 * t.elapsed().as_secs_f64() / iters as f64
 }
 
-fn bench_model(model: &str) {
-    let dir = art(model);
-    if !dir.join("manifest.json").exists() {
-        eprintln!("[skip] {model}: no artifacts");
-        return;
-    }
-    let rt = Runtime::cpu().unwrap();
-    let m = Manifest::load(&dir).unwrap();
-    let reg = ExeRegistry::new(m.clone());
-    reg.warm_zo(&rt).unwrap();
-    let store = ParamStore::load_init(&rt, &m).unwrap();
-    println!("\n== {model} ({} params, {} blocks) ==", m.param_count, m.n_layers);
+fn lm_batch(spec: &lezo::model::ModelSpec, seq: usize) -> Batch {
+    let seqs: Vec<Vec<u32>> = (0..spec.train_batch)
+        .map(|r| (0..seq as u32).map(|i| 20 + (r as u32 + i) % 100).collect())
+        .collect();
+    Batch::lm_batch(&seqs, spec.train_batch, seq).unwrap()
+}
+
+fn bench_backend<B: Backend>(backend: &B, iters: usize) {
+    let spec = backend.spec().clone();
+    println!(
+        "\n== {} [{}] ({} params, {} blocks) ==",
+        spec.name,
+        backend.name(),
+        spec.param_count(),
+        spec.n_layers
+    );
+    backend.warm_zo().unwrap();
+    let host = backend.initial_params("").unwrap().0;
 
     // --- zo_axpy per unit length ---
-    for &n in &m.axpy_lens {
-        if !m.unit_lens.contains(&n) {
-            continue; // PEFT-only lengths: skip in the full-model bench
-        }
-        let exe = reg.get(&rt, Family::ZoAxpy, n).unwrap();
-        let p = rt.vec_f32(&vec![0.1f32; n]).unwrap();
-        let seed = rt.scalar_i32(1).unwrap();
-        let c = rt.scalar_f32(1e-3).unwrap();
-        let ms = time_ms(20, || {
-            let _ = run1(&exe, &[&p, &seed, &c]).unwrap();
+    let mut seen = std::collections::BTreeSet::new();
+    for &n in spec.unit_lens().iter().filter(|&&n| seen.insert(n)) {
+        let p = backend.upload(&vec![0.1f32; n]).unwrap();
+        let ms = time_ms(iters, || {
+            let _ = backend.zo_axpy(&p, n, 1, 1e-3).unwrap();
         });
         let gbs = (8.0 * n as f64) / (ms / 1e3) / 1e9; // 1 load + 1 store, f32
         println!("  zo_axpy[{n:>9}] {ms:>8.3} ms  ({gbs:.2} GB/s effective)");
     }
 
     // --- forward per bucket ---
-    let units = store.unit_refs();
-    for &s in &m.seq_buckets {
-        let exe = reg.get(&rt, Family::ForwardLoss, s).unwrap();
-        let seqs: Vec<Vec<u32>> = (0..m.train_batch)
-            .map(|r| (0..s as u32).map(|i| 20 + (r as u32 + i) % 100).collect())
-            .collect();
-        let b = Batch::lm_batch(&seqs, m.train_batch, s).unwrap();
-        let tok = rt.mat_i32(&b.tokens, b.rows, s).unwrap();
-        let tgt = rt.mat_i32(&b.targets, b.rows, s).unwrap();
-        let msk = rt.mat_f32(&b.mask, b.rows, s).unwrap();
-        let mut args: Vec<&xla::PjRtBuffer> = units.clone();
-        args.push(&tok);
-        args.push(&tgt);
-        args.push(&msk);
-        let ms = time_ms(10, || {
-            let _ = run1(&exe, &args).unwrap();
+    let units = TunableUnits::<B>::from_host(backend, &host).unwrap();
+    for &s in &spec.seq_buckets {
+        let batch = lm_batch(&spec, s);
+        let prepared = backend.prepare_batch(&batch).unwrap();
+        let refs = units.unit_refs();
+        let ms = time_ms((iters + 1) / 2, || {
+            let _ = backend.forward_loss(PeftMode::Full, &refs, &prepared).unwrap();
         });
-        println!("  forward_loss[s{s:>3}] {ms:>7.2} ms (batch {})", m.train_batch);
+        println!("  forward_loss[s{s:>3}] {ms:>7.2} ms (batch {})", spec.train_batch);
     }
 
     // --- full ZO step: MeZO vs LeZO(75%) ---
-    let seqs: Vec<Vec<u32>> = (0..m.train_batch)
-        .map(|r| (0..32u32).map(|i| 20 + (r as u32 + i) % 100).collect())
-        .collect();
-    let b = Batch::lm_batch(&seqs, m.train_batch, 32).unwrap();
-    let tok = rt.mat_i32(&b.tokens, b.rows, 32).unwrap();
-    let tgt = rt.mat_i32(&b.targets, b.rows, 32).unwrap();
-    let msk = rt.mat_f32(&b.mask, b.rows, 32).unwrap();
-    let fwd = reg.get(&rt, Family::ForwardLoss, 32).unwrap();
-    let drop = (3 * m.n_layers) / 4;
+    let batch = lm_batch(&spec, 32);
+    let prepared = backend.prepare_batch(&batch).unwrap();
+    let drop = (3 * spec.n_layers) / 4;
     for (name, active) in [
-        ("MeZO step      ", (0..m.n_units()).collect::<Vec<_>>()),
+        ("MeZO step      ", (0..spec.n_units()).collect::<Vec<_>>()),
         (
             "LeZO step (75%)",
-            (0..m.n_units()).filter(|&k| k == 0 || k > drop).collect::<Vec<_>>(),
+            (0..spec.n_units()).filter(|&k| k == 0 || k > drop).collect::<Vec<_>>(),
         ),
     ] {
-        let eng = SpsaEngine::new(&rt, &reg, 1e-3, 1).unwrap();
-        let bufs = (0..store.n_units())
-            .map(|k| rt.vec_f32(&rt.read_vec_f32(store.unit(k)).unwrap()).unwrap())
-            .collect();
-        let mut tun = TunableUnits { bufs, lens: m.unit_lens.clone() };
+        let eng = SpsaEngine::new(backend, 1e-3, 1).unwrap();
+        let mut tun = TunableUnits::<B>::from_host(backend, &host).unwrap();
         let mut times = StageTimes::default();
-        let mut loss = |u: &TunableUnits| -> anyhow::Result<f32> {
-            let mut args: Vec<&xla::PjRtBuffer> = u.bufs.iter().collect();
-            args.push(&tok);
-            args.push(&tgt);
-            args.push(&msk);
-            rt.read_scalar_f32(&run1(&fwd, &args)?)
+        let mut loss = |u: &TunableUnits<B>| -> anyhow::Result<f32> {
+            backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
         };
         let t = Instant::now();
-        let iters = 15;
-        for step in 0..iters {
+        for step in 0..iters as u64 {
             eng.zo_step(step, &mut tun, &active, 1e-5, &mut loss, &mut times).unwrap();
         }
         let ms = 1e3 * t.elapsed().as_secs_f64() / iters as f64;
@@ -123,16 +101,53 @@ fn bench_model(model: &str) {
     }
 }
 
+fn run_target(target: &str, iters: usize) {
+    match target.split_once(':') {
+        Some(("native", model)) => match NativeBackend::preset(model) {
+            Ok(b) => bench_backend(&b, iters),
+            Err(e) => eprintln!("[skip] {target}: {e}"),
+        },
+        Some(("pjrt", model)) => {
+            #[cfg(feature = "pjrt")]
+            {
+                let dir = lezo::runtime::backend::default_artifact_dir(model);
+                if !lezo::runtime::backend::artifacts_available(&dir) {
+                    eprintln!("[skip] {target}: no artifacts");
+                    return;
+                }
+                match lezo::runtime::PjrtBackend::open(&dir) {
+                    Ok(b) => bench_backend(&b, iters),
+                    Err(e) => eprintln!("[skip] {target}: {e}"),
+                }
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = model;
+                eprintln!("[skip] {target}: built without the pjrt feature");
+            }
+        }
+        _ => eprintln!("[skip] {target}: use native:MODEL or pjrt:MODEL"),
+    }
+}
+
 fn main() {
-    // honor `cargo bench -- <model>`
+    // honor `cargo bench -- <backend:model>`
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let models: Vec<String> = if args.is_empty() {
-        vec!["opt-micro".into(), "opt-tiny".into(), "opt-small".into()]
+    let targets: Vec<String> = if args.is_empty() {
+        let mut t = vec!["native:opt-micro".to_string()];
+        if cfg!(feature = "pjrt") {
+            for m in ["opt-micro", "opt-tiny", "opt-small"] {
+                t.push(format!("pjrt:{m}"));
+            }
+        }
+        t
     } else {
         args
     };
-    println!("ZO hot-path microbenchmarks (PJRT CPU)");
-    for m in &models {
-        bench_model(m);
+    let iters: usize =
+        std::env::var("LEZO_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
+    println!("ZO hot-path microbenchmarks");
+    for t in &targets {
+        run_target(t, iters);
     }
 }

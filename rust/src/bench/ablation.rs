@@ -2,12 +2,11 @@
 //! "simple uniform random" layer selection costs or buys against
 //! round-robin, coverage-stratified, and importance-weighted policies.
 
-use super::{bench_config, lezo_lr, paper_drop};
+use super::{bench_config, lezo_lr, model_spec_for, paper_drop};
 use crate::config::Method;
 use crate::coordinator::metrics::MemoryModel;
 use crate::coordinator::policy::Policy;
 use crate::coordinator::Trainer;
-use crate::model::Manifest;
 use crate::util::render_table;
 use anyhow::Result;
 use std::fmt::Write as _;
@@ -15,7 +14,7 @@ use std::fmt::Write as _;
 /// Compare selection policies at the paper's 75% sparsity on SST-2.
 pub fn selector_policies(overrides: &[String]) -> Result<String> {
     let base = bench_config(overrides)?;
-    let nl = Manifest::load(std::path::Path::new(&base.artifact_dir()))?.n_layers;
+    let nl = model_spec_for(&base)?.n_layers;
     let mut out = String::from(
         "Ablation — layer-selection policy at 75% sparsity (paper: uniform)\n\n",
     );
@@ -52,8 +51,8 @@ pub fn selector_policies(overrides: &[String]) -> Result<String> {
 /// units) — so its step is *slower* than MeZO's, not faster.
 pub fn sparse_mezo(overrides: &[String]) -> Result<String> {
     let base = bench_config(overrides)?;
-    let manifest = Manifest::load(std::path::Path::new(&base.artifact_dir()))?;
-    let nl = manifest.n_layers;
+    let spec = model_spec_for(&base)?;
+    let nl = spec.n_layers;
     let mut out = String::from("Ablation — LeZO vs Sparse-MeZO (element-wise masking)\n\n");
     let mut rows = Vec::new();
     for (label, method, drop, lr_mult) in [
@@ -80,11 +79,11 @@ pub fn sparse_mezo(overrides: &[String]) -> Result<String> {
         &rows,
     ));
     let mm = MemoryModel {
-        params: manifest.param_count,
-        batch: manifest.train_batch,
+        params: spec.param_count(),
+        batch: spec.train_batch,
         seq: 32,
-        d_model: manifest.d_model,
-        n_layers: manifest.n_layers,
+        d_model: spec.d_model,
+        n_layers: spec.n_layers,
     };
     writeln!(
         out,

@@ -3,13 +3,12 @@
 use super::{bench_config, lezo_lr, paper_drop};
 use crate::config::Method;
 use crate::coordinator::{TrainReport, Trainer};
-use crate::model::Manifest;
 use crate::util::render_table;
 use anyhow::Result;
 use std::fmt::Write as _;
 
-fn n_layers(model_dir: &str) -> Result<usize> {
-    Ok(Manifest::load(std::path::Path::new(model_dir))?.n_layers)
+fn n_layers(cfg: &crate::config::RunConfig) -> Result<usize> {
+    Ok(super::model_spec_for(cfg)?.n_layers)
 }
 
 fn run_one(cfg: &crate::config::RunConfig) -> Result<TrainReport> {
@@ -20,7 +19,7 @@ fn run_one(cfg: &crate::config::RunConfig) -> Result<TrainReport> {
 /// headline 3.4x wall-clock speedup plot.
 pub fn fig1(overrides: &[String]) -> Result<String> {
     let base = bench_config(overrides)?;
-    let nl = n_layers(&base.artifact_dir())?;
+    let nl = n_layers(&base)?;
     let mut mezo = base.clone();
     mezo.method = Method::Mezo;
     mezo.drop_layers = 0;
@@ -69,15 +68,23 @@ pub fn fig2(overrides: &[String]) -> Result<String> {
     let models: Vec<String> = if overrides.iter().any(|o| o.starts_with("model=")) {
         vec![base.model.clone()]
     } else {
-        ["opt-micro", "opt-tiny", "opt-small"]
+        // with artifacts: every exported size; without: the configured
+        // model only (each extra size would retrain natively)
+        let all: Vec<String> = ["opt-micro", "opt-tiny", "opt-small"]
             .iter()
             .map(|s| s.to_string())
             .filter(|m| {
-                std::path::Path::new(&format!("{}/{}", base.artifacts_root, m))
-                    .join("manifest.json")
-                    .exists()
+                crate::runtime::backend::artifacts_available(std::path::Path::new(&format!(
+                    "{}/{}",
+                    base.artifacts_root, m
+                )))
             })
-            .collect()
+            .collect();
+        if all.is_empty() {
+            vec![base.model.clone()]
+        } else {
+            all
+        }
     };
     let mut out = String::from(
         "Fig. 2 — MeZO per-step stage split (paper: perturb+update > 50%)\n\n",
@@ -115,7 +122,7 @@ pub fn fig2(overrides: &[String]) -> Result<String> {
 /// collapses.
 pub fn fig3(overrides: &[String]) -> Result<String> {
     let base = bench_config(overrides)?;
-    let nl = n_layers(&base.artifact_dir())?;
+    let nl = n_layers(&base)?;
     let drops: Vec<usize> = vec![0, nl / 4, nl / 2, 3 * nl / 4, nl];
     let lrs = [5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3]; // testbed scale (DESIGN.md §9)
     let mut out = String::from(
@@ -145,7 +152,7 @@ pub fn fig3(overrides: &[String]) -> Result<String> {
 /// Fig. 4: per-step runtime and best accuracy vs sparsity.
 pub fn fig4(overrides: &[String]) -> Result<String> {
     let base = bench_config(overrides)?;
-    let nl = n_layers(&base.artifact_dir())?;
+    let nl = n_layers(&base)?;
     let mut out = String::from("Fig. 4 — sparsity vs per-step runtime and accuracy\n\n");
     let mut rows = Vec::new();
     for drop in 0..=nl {
@@ -174,7 +181,7 @@ pub fn fig4(overrides: &[String]) -> Result<String> {
 /// Fig. 5: per-task computation and convergence speedups of LeZO over MeZO.
 pub fn fig5(overrides: &[String]) -> Result<String> {
     let base = bench_config(overrides)?;
-    let nl = n_layers(&base.artifact_dir())?;
+    let nl = n_layers(&base)?;
     let tasks = crate::tasks::TABLE1_TASKS;
     let mut out = String::from("Fig. 5 — per-task speedups (LeZO / MeZO)\n\n");
     let mut rows = Vec::new();
@@ -214,7 +221,7 @@ pub fn fig5(overrides: &[String]) -> Result<String> {
 /// dilute the perturb/update saving.
 pub fn fig6(overrides: &[String]) -> Result<String> {
     let base = bench_config(overrides)?;
-    let nl = n_layers(&base.artifact_dir())?;
+    let nl = n_layers(&base)?;
     let lens = [8usize, 16, 24, 32, 40];
     let mut out = String::from("Fig. 6 — input length vs computational speedup\n\n");
     let mut rows = Vec::new();
@@ -253,11 +260,12 @@ mod tests {
     use super::*;
 
     #[test]
-    fn n_layers_reads_manifest() {
-        let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        let dir = format!("{root}/opt-micro");
-        if std::path::Path::new(&dir).join("manifest.json").exists() {
-            assert_eq!(n_layers(&dir).unwrap(), 4);
-        }
+    fn n_layers_resolves_without_artifacts() {
+        // falls back to the native preset when no manifest exists
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.model = "opt-micro".into();
+        assert_eq!(n_layers(&cfg).unwrap(), 4);
+        cfg.model = "opt-small".into();
+        assert_eq!(n_layers(&cfg).unwrap(), 8);
     }
 }

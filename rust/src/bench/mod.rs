@@ -9,6 +9,7 @@ pub mod tables;
 
 use crate::config::RunConfig;
 use crate::coordinator::{TrainReport, Trainer};
+use crate::model::ModelSpec;
 use crate::stats;
 use anyhow::{bail, Result};
 use std::io::Write;
@@ -102,6 +103,15 @@ pub fn bench_config(overrides: &[String]) -> Result<RunConfig> {
     cfg.mu = 1e-3;
     cfg.apply_overrides(overrides)?;
     Ok(cfg)
+}
+
+/// Architecture spec for a bench config: the artifact manifest when one
+/// exists, else the native preset — so every bench also runs artifact-free
+/// on the native backend. One shared rule with the trainer and CLI
+/// (`runtime::backend::resolve_model`).
+pub fn model_spec_for(cfg: &RunConfig) -> Result<ModelSpec> {
+    let dir = std::path::PathBuf::from(cfg.artifact_dir());
+    Ok(crate::runtime::backend::resolve_model(&cfg.model, &dir)?.0)
 }
 
 /// The paper's sparsity preset: 75% of blocks dropped.

@@ -4,9 +4,8 @@
 //! opt-tiny ↔ OPT-1.3B (Table 2), opt-base ↔ OPT-30B (Table 3). The paper's
 //! 75% layer sparsity becomes `drop = 3N/4` blocks of each model.
 
-use super::{agg_pct, bench_config, fmt_pm, lezo_lr, paper_drop, run_seeds};
+use super::{agg_pct, bench_config, fmt_pm, lezo_lr, model_spec_for, paper_drop, run_seeds};
 use crate::config::{grids, Method, RunConfig};
-use crate::model::Manifest;
 use crate::peft::PeftMode;
 use crate::tasks::{ALL_TASKS, TABLE1_TASKS};
 use crate::util::render_table;
@@ -33,7 +32,7 @@ fn strip_meta(overrides: &[String]) -> Vec<String> {
 }
 
 fn n_layers_of(cfg: &RunConfig) -> Result<usize> {
-    Ok(Manifest::load(std::path::Path::new(&cfg.artifact_dir()))?.n_layers)
+    Ok(model_spec_for(cfg)?.n_layers)
 }
 
 /// Configure a method on top of a base config (Table-5 LR conventions).

@@ -7,6 +7,7 @@
 
 use crate::coordinator::policy::Policy;
 use crate::peft::PeftMode;
+use crate::runtime::backend::BackendKind;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::fmt;
@@ -63,8 +64,12 @@ impl fmt::Display for Method {
 /// Full description of one run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
-    pub model: String,        // artifact size name, e.g. "opt-micro"
+    pub model: String,        // model size name, e.g. "opt-micro"
     pub artifacts_root: String,
+    /// Runtime backend: `auto` (PJRT when artifacts exist in a pjrt build,
+    /// else the pure-Rust native backend), `native`, or `pjrt`. The
+    /// `LEZO_BACKEND` env var steers `auto`; an explicit setting here wins.
+    pub backend: BackendKind,
     pub task: String,         // task name, e.g. "sst2"
     pub method: Method,
     pub peft: PeftMode,
@@ -108,6 +113,7 @@ impl Default for RunConfig {
         RunConfig {
             model: "opt-micro".into(),
             artifacts_root: "artifacts".into(),
+            backend: BackendKind::Auto,
             task: "sst2".into(),
             method: Method::Lezo,
             peft: PeftMode::Full,
@@ -147,6 +153,7 @@ impl RunConfig {
         match key {
             "model" => self.model = value.to_string(),
             "artifacts" | "artifacts_root" => self.artifacts_root = value.to_string(),
+            "backend" => self.backend = parse!(),
             "task" => self.task = value.to_string(),
             "method" => self.method = parse!(),
             "peft" => self.peft = parse!(),
@@ -276,6 +283,17 @@ mod tests {
         assert!(c.apply_overrides(&["nope=1".into()]).is_err());
         assert!(c.apply_overrides(&["lr".into()]).is_err());
         assert!(c.apply_overrides(&["method=sgd".into()]).is_err());
+        assert!(c.apply_overrides(&["backend=gpu".into()]).is_err());
+    }
+
+    #[test]
+    fn backend_key_parses() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.backend, BackendKind::Auto);
+        c.apply_overrides(&["backend=native".into()]).unwrap();
+        assert_eq!(c.backend, BackendKind::Native);
+        c.apply_overrides(&["backend=pjrt".into()]).unwrap();
+        assert_eq!(c.backend, BackendKind::Pjrt);
     }
 
     #[test]

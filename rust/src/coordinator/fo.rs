@@ -1,17 +1,17 @@
-//! First-order substrate: SGD + Adam over the AOT'd `forward_backward`
-//! executable. This is the paper's "FT (12x memory)" baseline and the
-//! in-repo pretraining path (DESIGN.md S11).
+//! First-order substrate: SGD + Adam over the backend's `forward_backward`
+//! family. This is the paper's "FT (12x memory)" baseline and the in-repo
+//! pretraining path (DESIGN.md S11).
 //!
 //! Unlike the ZO hot loop, FO deliberately round-trips gradients through the
 //! host: Adam moments live in Rust, mirroring the paper's point that FO
 //! fine-tuning pays for gradients + optimizer state + activations while ZO
-//! pays for parameters only (`metrics::MemoryModel`).
+//! pays for parameters only (`metrics::MemoryModel`). Backends without
+//! autodiff (the native backend) report `supports_fo() == false` and the
+//! trainer refuses `method=ft` up front.
 
 use crate::data::batch::Batch;
-use crate::model::ParamStore;
-use crate::runtime::exes::{ExeRegistry, Family};
-use crate::runtime::{run1, Runtime};
-use anyhow::{ensure, Context, Result};
+use crate::runtime::backend::Backend;
+use anyhow::Result;
 
 /// Which FO update rule to apply.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,16 +83,15 @@ impl FoOptimizer {
     }
 }
 
-/// FO engine: runs forward_backward and applies the optimizer. Parameters
-/// are mirrored on the host between steps (uploaded once per step).
-pub struct FoEngine<'r> {
-    rt: &'r Runtime,
-    reg: &'r ExeRegistry,
+/// FO engine: runs the backend's forward_backward and applies the optimizer.
+/// Parameters are mirrored on the host between steps.
+pub struct FoEngine<'b, B: Backend> {
+    backend: &'b B,
 }
 
-impl<'r> FoEngine<'r> {
-    pub fn new(rt: &'r Runtime, reg: &'r ExeRegistry) -> FoEngine<'r> {
-        FoEngine { rt, reg }
+impl<'b, B: Backend> FoEngine<'b, B> {
+    pub fn new(backend: &'b B) -> FoEngine<'b, B> {
+        FoEngine { backend }
     }
 
     /// Compute (loss, grads) for a batch against host-side parameters.
@@ -101,29 +100,7 @@ impl<'r> FoEngine<'r> {
         host_params: &[Vec<f32>],
         batch: &Batch,
     ) -> Result<(f32, Vec<Vec<f32>>)> {
-        let exe = self.reg.get(self.rt, Family::ForwardBackward, batch.seq)?;
-        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(host_params.len() + 3);
-        for u in host_params {
-            args.push(self.rt.vec_f32(u)?);
-        }
-        args.push(self.rt.mat_i32(&batch.tokens, batch.rows, batch.seq)?);
-        args.push(self.rt.mat_i32(&batch.targets, batch.rows, batch.seq)?);
-        args.push(self.rt.mat_f32(&batch.mask, batch.rows, batch.seq)?);
-        let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
-        let out = run1(&exe, &refs).context("forward_backward")?;
-        let parts = self.rt.read_tuple(&out)?;
-        ensure!(
-            parts.len() == host_params.len() + 1,
-            "forward_backward returned {} outputs, expected {}",
-            parts.len(),
-            host_params.len() + 1
-        );
-        let loss = parts[0].get_first_element::<f32>()?;
-        let grads = parts[1..]
-            .iter()
-            .map(|l| Ok(l.to_vec::<f32>()?))
-            .collect::<Result<Vec<_>>>()?;
-        Ok((loss, grads))
+        self.backend.forward_backward(host_params, batch)
     }
 
     /// One FO step over a host parameter mirror.
@@ -138,31 +115,11 @@ impl<'r> FoEngine<'r> {
         opt.update(host_params, &grads, lr);
         Ok(loss)
     }
-
-    /// Upload a host mirror into a fresh ParamStore (after FO training).
-    pub fn to_store(
-        &self,
-        manifest: &crate::model::Manifest,
-        host_params: &[Vec<f32>],
-    ) -> Result<ParamStore> {
-        ParamStore::from_host(self.rt, manifest, host_params)
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::Manifest;
-    use std::path::PathBuf;
-
-    fn art() -> PathBuf {
-        let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        PathBuf::from(root).join("opt-micro")
-    }
-
-    fn have() -> bool {
-        art().join("manifest.json").exists()
-    }
 
     #[test]
     fn adam_moves_toward_minimum() {
@@ -189,15 +146,24 @@ mod tests {
     }
 
     #[test]
+    fn native_backend_rejects_fo() {
+        use crate::runtime::NativeBackend;
+        let b = NativeBackend::preset("opt-nano").unwrap();
+        let eng = FoEngine::new(&b);
+        let batch = Batch::lm_batch(&[vec![1, 2, 3]], 1, 8).unwrap();
+        let params = vec![vec![0.0f32; 4]];
+        assert!(eng.loss_and_grads(&params, &batch).is_err());
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
     fn grads_decrease_loss() {
-        if !have() {
-            eprintln!("skipping: no artifacts");
-            return;
-        }
-        let rt = Runtime::cpu().unwrap();
-        let m = Manifest::load(&art()).unwrap();
-        let reg = ExeRegistry::new(m.clone());
-        let eng = FoEngine::new(&rt, &reg);
+        use crate::runtime::backend::default_artifact_dir;
+        use crate::runtime::PjrtBackend;
+        crate::require_artifacts!();
+        let b = PjrtBackend::open(&default_artifact_dir("opt-micro")).unwrap();
+        let m = b.manifest().clone();
+        let eng = FoEngine::new(&b);
         let mut params = m.read_init_params().unwrap();
         // toy LM batch
         let seqs: Vec<Vec<u32>> = (0..m.train_batch)

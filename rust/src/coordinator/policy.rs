@@ -122,6 +122,18 @@ impl PolicySelector {
                             Rng::new(derive(self.run_seed, purpose::SELECTOR, step ^ 0x57A7));
                         rng.shuffle(&mut self.perm);
                     }
+                    // A mid-call reshuffle (keep not dividing n) can
+                    // re-surface a slot already taken this step; swap the
+                    // first fresh slot forward so the active set keeps its
+                    // exact size. perm stays a permutation, so the epoch
+                    // coverage guarantee is unaffected.
+                    if out.contains(&self.perm[self.cursor]) {
+                        if let Some(j) =
+                            (self.cursor + 1..n).find(|&j| !out.contains(&self.perm[j]))
+                        {
+                            self.perm.swap(self.cursor, j);
+                        }
+                    }
                     out.push(self.perm[self.cursor]);
                     self.cursor = (self.cursor + 1) % n.max(1);
                 }
@@ -269,6 +281,103 @@ mod tests {
         for b in 1..=8 {
             let frac = counts[b] as f64 / 4000.0;
             assert!((frac - 0.5).abs() < 0.05, "block {b}: {frac}");
+        }
+    }
+
+    const ALL_POLICIES: [Policy; 4] =
+        [Policy::Uniform, Policy::RoundRobin, Policy::Stratified, Policy::Weighted];
+
+    // ---- property sweep: random configurations, all policies ----------------
+
+    #[test]
+    fn property_active_set_size_matches_sparsity_ratio_all_policies() {
+        let mut rng = crate::rng::Rng::new(0xD44);
+        for policy in ALL_POLICIES {
+            for _ in 0..50 {
+                let n_sparse = rng.range(1, 16);
+                let n_always = rng.range(0, 2);
+                let n_drop = rng.range(0, n_sparse);
+                let mut s = PolicySelector::new(
+                    (n_always..n_always + n_sparse).collect(),
+                    (0..n_always).collect(),
+                    n_drop,
+                    rng.next_u64(),
+                    policy,
+                )
+                .unwrap();
+                for t in 0..6 {
+                    let active = s.next_active(t);
+                    assert_eq!(
+                        active.len(),
+                        n_always + n_sparse - n_drop,
+                        "{policy} n={n_sparse} drop={n_drop}"
+                    );
+                    assert!(active.windows(2).all(|w| w[0] < w[1]), "{policy}: not sorted/deduped");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_every_unit_touched_over_a_window_all_policies() {
+        // full-parameter coverage holds for every policy as long as at
+        // least one sparsifiable unit is kept per step
+        let mut rng = crate::rng::Rng::new(0xE55);
+        for policy in ALL_POLICIES {
+            for _ in 0..10 {
+                let n_sparse = rng.range(2, 12);
+                let n_drop = rng.range(0, n_sparse - 1);
+                let keep = n_sparse - n_drop;
+                let mut s = PolicySelector::new(
+                    (0..n_sparse).collect(),
+                    vec![],
+                    n_drop,
+                    rng.next_u64(),
+                    policy,
+                )
+                .unwrap();
+                let window =
+                    (40.0 * (n_sparse as f64 / keep as f64) * (n_sparse as f64).ln().max(1.0))
+                        .ceil() as u64
+                        + 16;
+                let mut seen = HashSet::new();
+                for t in 0..window {
+                    for u in s.next_active(t) {
+                        seen.insert(u);
+                    }
+                }
+                assert_eq!(
+                    seen.len(),
+                    n_sparse,
+                    "{policy} n={n_sparse} drop={n_drop} window={window}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn property_zero_sparsity_reduces_to_mezo_all_policies() {
+        // sparsity 0.0: every policy must activate all units every step
+        let mut rng = crate::rng::Rng::new(0xF66);
+        for policy in ALL_POLICIES {
+            for _ in 0..20 {
+                let n_sparse = rng.range(1, 12);
+                let mut s = PolicySelector::new(
+                    (1..=n_sparse).collect(),
+                    vec![0],
+                    0,
+                    rng.next_u64(),
+                    policy,
+                )
+                .unwrap();
+                for t in 0..4 {
+                    assert_eq!(
+                        s.next_active(t),
+                        (0..=n_sparse).collect::<Vec<_>>(),
+                        "{policy} must reduce to MeZO at drop 0"
+                    );
+                }
+            }
         }
     }
 }

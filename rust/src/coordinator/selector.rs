@@ -172,4 +172,90 @@ mod tests {
         let same = (0..20).filter(|&t| a.active_units(t) == b.active_units(t)).count();
         assert!(same < 10);
     }
+
+    // ---- property sweep: random (n_units, n_drop, seed) configurations ----
+
+    #[test]
+    fn property_active_set_size_matches_sparsity_ratio() {
+        // for ANY configuration, |active| == always + (sparsifiable - drop)
+        // and rho == drop / sparsifiable — the sparsity accounting the bench
+        // relies on
+        let mut rng = crate::rng::Rng::new(0xA11);
+        for _ in 0..200 {
+            let n_sparse = rng.range(1, 24);
+            let n_always = rng.range(0, 3);
+            let n_drop = rng.range(0, n_sparse);
+            let sparsifiable: Vec<usize> = (n_always..n_always + n_sparse).collect();
+            let always: Vec<usize> = (0..n_always).collect();
+            let s =
+                LayerSelector::new(sparsifiable, always, n_drop, rng.next_u64()).unwrap();
+            assert!((s.rho() - n_drop as f64 / n_sparse as f64).abs() < 1e-12);
+            for t in 0..8 {
+                let active = s.active_units(t);
+                assert_eq!(active.len(), n_always + n_sparse - n_drop);
+                // sorted, deduped, in range
+                assert!(active.windows(2).all(|w| w[0] < w[1]));
+                assert!(active.iter().all(|&u| u < n_always + n_sparse));
+                // always-active present
+                for u in 0..n_always {
+                    assert!(active.contains(&u));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_every_unit_touched_over_a_window() {
+        // full-parameter coverage (paper §4.1): over a window of steps every
+        // sparsifiable unit is active at least once — for any drop < n
+        let mut rng = crate::rng::Rng::new(0xB22);
+        for _ in 0..30 {
+            let n_sparse = rng.range(2, 16);
+            let n_drop = rng.range(0, n_sparse - 1); // keep >= 1
+            let keep = n_sparse - n_drop;
+            let s = LayerSelector::new(
+                (0..n_sparse).collect(),
+                vec![],
+                n_drop,
+                rng.next_u64(),
+            )
+            .unwrap();
+            // coupon-collector bound with margin: ~ (n/keep) * ln(n) * 8
+            let window = (8.0 * (n_sparse as f64 / keep as f64)
+                * (n_sparse as f64).ln().max(1.0))
+            .ceil() as u64
+                * 4
+                + 16;
+            let mut seen = HashSet::new();
+            for t in 0..window {
+                for u in s.active_units(t) {
+                    seen.insert(u);
+                }
+            }
+            assert_eq!(
+                seen.len(),
+                n_sparse,
+                "n={n_sparse} drop={n_drop} window={window}: coverage incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn property_zero_sparsity_reduces_to_mezo() {
+        // drop = 0 (sparsity 0.0) must activate EVERY unit EVERY step
+        let mut rng = crate::rng::Rng::new(0xC33);
+        for _ in 0..50 {
+            let n_sparse = rng.range(1, 20);
+            let s = LayerSelector::new(
+                (1..=n_sparse).collect(),
+                vec![0],
+                0,
+                rng.next_u64(),
+            )
+            .unwrap();
+            for t in 0..5 {
+                assert_eq!(s.active_units(t), (0..=n_sparse).collect::<Vec<_>>());
+            }
+        }
+    }
 }

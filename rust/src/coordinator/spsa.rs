@@ -1,4 +1,5 @@
-//! The ZO engine: layer-wise sparse SPSA + ZO-SGD (Algorithm 1 of the paper).
+//! The ZO engine: layer-wise sparse SPSA + ZO-SGD (Algorithm 1 of the paper),
+//! generic over the runtime [`Backend`].
 //!
 //! One optimization step is
 //! ```text
@@ -10,36 +11,53 @@
 //!   g = (l+ - l-) / (2 mu)
 //!   update    P[l] -= lr * g * z_l    for l in active      (zo_axpy, c=-lr*g)
 //! ```
-//! The perturbation `z_l` is *regenerated* inside the AOT'd Pallas kernel
-//! from `(seed, element index)` — MeZO's memory trick, made structural: the
-//! same `(step, unit)` seed re-derives the identical Gaussian stream in all
-//! four phases, so `z` is never materialized host- or device-side.
+//! The perturbation `z_l` is *regenerated* inside the backend's zo_axpy
+//! kernel from `(seed, element index)` — MeZO's memory trick, made
+//! structural: the same `(step, unit)` seed re-derives the identical
+//! Gaussian stream in all four phases, so `z` is never materialized.
 //!
 //! LeZO's computation saving is the `active` set: dropped units are skipped
 //! in all four axpy phases (but never in the forward pass). MeZO is the
-//! `active = all units` special case.
+//! `active = all units` special case. The engine itself never touches
+//! PJRT or host floats — it only routes unit handles through the backend,
+//! so the identical code path runs natively and on-device.
 
 use crate::coordinator::metrics::{StageTimer, StageTimes};
 use crate::rng::zo_seed;
-use crate::runtime::exes::{ExeRegistry, Family};
-use crate::runtime::{run1, Runtime};
+use crate::runtime::backend::Backend;
 use anyhow::Result;
 
-/// A set of tunable flat units living on the device. For full-parameter
+/// A set of tunable flat units living on the backend. For full-parameter
 /// fine-tuning these are the model's layer units; under PEFT they are the
 /// per-block adapter units (the base model stays frozen).
-pub struct TunableUnits {
-    pub bufs: Vec<xla::PjRtBuffer>,
+pub struct TunableUnits<B: Backend> {
+    pub bufs: Vec<B::Buffer>,
     pub lens: Vec<usize>,
 }
 
-impl TunableUnits {
+impl<B: Backend> TunableUnits<B> {
+    /// Upload host vectors (one per unit).
+    pub fn from_host(backend: &B, host: &[Vec<f32>]) -> Result<TunableUnits<B>> {
+        let bufs = host.iter().map(|u| backend.upload(u)).collect::<Result<Vec<_>>>()?;
+        Ok(TunableUnits { bufs, lens: host.iter().map(Vec::len).collect() })
+    }
+
+    /// Download every unit (checkpointing, tests).
+    pub fn to_host(&self, backend: &B) -> Result<Vec<Vec<f32>>> {
+        self.bufs.iter().map(|b| backend.download(b)).collect()
+    }
+
     pub fn n_units(&self) -> usize {
         self.bufs.len()
     }
 
     pub fn param_count(&self) -> usize {
         self.lens.iter().sum()
+    }
+
+    /// Unit handles in forward-argument order.
+    pub fn unit_refs(&self) -> Vec<&B::Buffer> {
+        self.bufs.iter().collect()
     }
 }
 
@@ -62,54 +80,33 @@ impl ZoStep {
     }
 }
 
-/// The SPSA/ZO-SGD engine. Stateless across steps apart from the registry
-/// caches; all step-dependent randomness derives from `(run_seed, step)`.
-pub struct SpsaEngine<'r> {
-    rt: &'r Runtime,
-    reg: &'r ExeRegistry,
+/// The SPSA/ZO-SGD engine. Stateless across steps; all step-dependent
+/// randomness derives from `(run_seed, step)`.
+pub struct SpsaEngine<'b, B: Backend> {
+    backend: &'b B,
     pub mu: f32,
     pub run_seed: u64,
-    /// Cached device scalars for the two constant coefficients (+mu, -2mu);
-    /// avoids two host->device uploads per unit per step.
-    c_plus: xla::PjRtBuffer,
-    c_flip: xla::PjRtBuffer,
 }
 
-impl<'r> SpsaEngine<'r> {
-    pub fn new(rt: &'r Runtime, reg: &'r ExeRegistry, mu: f32, run_seed: u64) -> Result<Self> {
+impl<'b, B: Backend> SpsaEngine<'b, B> {
+    pub fn new(backend: &'b B, mu: f32, run_seed: u64) -> Result<Self> {
         anyhow::ensure!(mu > 0.0, "perturbation scale mu must be positive");
-        Ok(SpsaEngine {
-            rt,
-            reg,
-            mu,
-            run_seed,
-            c_plus: rt.scalar_f32(mu)?,
-            c_flip: rt.scalar_f32(-2.0 * mu)?,
-        })
+        Ok(SpsaEngine { backend, mu, run_seed })
     }
 
     /// `unit <- unit + c * z(seed)` for one flat unit (in-place replace).
-    fn axpy(
-        &self,
-        units: &mut TunableUnits,
-        k: usize,
-        seed: i32,
-        c: &xla::PjRtBuffer,
-    ) -> Result<()> {
-        let exe = self.reg.get(self.rt, Family::ZoAxpy, units.lens[k])?;
-        let seed_b = self.rt.scalar_i32(seed)?;
-        let out = run1(&exe, &[&units.bufs[k], &seed_b, c])?;
-        units.bufs[k] = out;
+    fn axpy(&self, units: &mut TunableUnits<B>, k: usize, seed: i32, c: f32) -> Result<()> {
+        units.bufs[k] = self.backend.zo_axpy(&units.bufs[k], units.lens[k], seed, c)?;
         Ok(())
     }
 
     /// Apply `c * z` to every active unit.
     fn sweep(
         &self,
-        units: &mut TunableUnits,
+        units: &mut TunableUnits<B>,
         active: &[usize],
         step: u64,
-        c: &xla::PjRtBuffer,
+        c: f32,
     ) -> Result<()> {
         for &k in active {
             let seed = zo_seed(self.run_seed, step, k);
@@ -125,35 +122,34 @@ impl<'r> SpsaEngine<'r> {
     pub fn zo_step(
         &self,
         step: u64,
-        units: &mut TunableUnits,
+        units: &mut TunableUnits<B>,
         active: &[usize],
         lr: f32,
-        loss: &mut dyn FnMut(&TunableUnits) -> Result<f32>,
+        loss: &mut dyn FnMut(&TunableUnits<B>) -> Result<f32>,
         times: &mut StageTimes,
     ) -> Result<ZoStep> {
         debug_assert!(active.iter().all(|&k| k < units.n_units()));
         let mut t = StageTimer::start();
 
         // perturb +mu
-        self.sweep(units, active, step, &self.c_plus)?;
+        self.sweep(units, active, step, self.mu)?;
         times.perturb_secs += t.lap();
         let loss_plus = loss(units)?;
         times.forward_secs += t.lap();
 
         // flip to -mu
-        self.sweep(units, active, step, &self.c_flip)?;
+        self.sweep(units, active, step, -2.0 * self.mu)?;
         times.perturb_secs += t.lap();
         let loss_minus = loss(units)?;
         times.forward_secs += t.lap();
 
         // restore to theta
-        self.sweep(units, active, step, &self.c_plus)?;
+        self.sweep(units, active, step, self.mu)?;
         times.perturb_secs += t.lap();
 
         // ZO-SGD update with the regenerated stream
         let projected_grad = (loss_plus - loss_minus) / (2.0 * self.mu);
-        let coeff = self.rt.scalar_f32(-lr * projected_grad)?;
-        self.sweep(units, active, step, &coeff)?;
+        self.sweep(units, active, step, -lr * projected_grad)?;
         times.update_secs += t.lap();
         times.steps += 1;
 
@@ -168,17 +164,22 @@ impl<'r> SpsaEngine<'r> {
     /// mask stays identical across the four phases.
     fn masked_sweep(
         &self,
-        units: &mut TunableUnits,
-        pref: &[xla::PjRtBuffer],
-        taus: &[xla::PjRtBuffer],
+        units: &mut TunableUnits<B>,
+        pref: &[B::Buffer],
+        taus: &[f32],
         step: u64,
-        c: &xla::PjRtBuffer,
+        c: f32,
     ) -> Result<()> {
         for k in 0..units.n_units() {
-            let exe = self.reg.get(self.rt, Family::ZoAxpyMasked, units.lens[k])?;
-            let seed_b = self.rt.scalar_i32(zo_seed(self.run_seed, step, k))?;
-            let out = run1(&exe, &[&units.bufs[k], &pref[k], &taus[k], &seed_b, c])?;
-            units.bufs[k] = out;
+            let seed = zo_seed(self.run_seed, step, k);
+            units.bufs[k] = self.backend.zo_axpy_masked(
+                &units.bufs[k],
+                &pref[k],
+                taus[k],
+                units.lens[k],
+                seed,
+                c,
+            )?;
         }
         Ok(())
     }
@@ -192,41 +193,46 @@ impl<'r> SpsaEngine<'r> {
     pub fn zo_step_masked(
         &self,
         step: u64,
-        units: &mut TunableUnits,
-        taus: &[xla::PjRtBuffer],
+        units: &mut TunableUnits<B>,
+        taus: &[f32],
         lr: f32,
-        loss: &mut dyn FnMut(&TunableUnits) -> Result<f32>,
+        loss: &mut dyn FnMut(&TunableUnits<B>) -> Result<f32>,
         times: &mut StageTimes,
     ) -> Result<ZoStep> {
         anyhow::ensure!(taus.len() == units.n_units(), "one tau per unit");
         let mut t = StageTimer::start();
 
-        // snapshot: PJRT buffers are immutable, so the pre-step handles ARE
-        // the reference; the first perturb replaces them in `units` while we
-        // keep them alive here (Sparse-MeZO's extra state, held one step).
-        let mut pref: Vec<xla::PjRtBuffer> = Vec::with_capacity(units.n_units());
+        // snapshot: buffers are replaced (never mutated in place), so the
+        // pre-step handles ARE the reference; the first perturb replaces
+        // them in `units` while we keep them alive here (Sparse-MeZO's
+        // extra state, held one step).
+        let mut pref: Vec<B::Buffer> = Vec::with_capacity(units.n_units());
         for k in 0..units.n_units() {
-            let exe = self.reg.get(self.rt, Family::ZoAxpyMasked, units.lens[k])?;
-            let seed_b = self.rt.scalar_i32(zo_seed(self.run_seed, step, k))?;
-            let out =
-                run1(&exe, &[&units.bufs[k], &units.bufs[k], &taus[k], &seed_b, &self.c_plus])?;
+            let seed = zo_seed(self.run_seed, step, k);
+            let out = self.backend.zo_axpy_masked(
+                &units.bufs[k],
+                &units.bufs[k],
+                taus[k],
+                units.lens[k],
+                seed,
+                self.mu,
+            )?;
             pref.push(std::mem::replace(&mut units.bufs[k], out));
         }
         times.perturb_secs += t.lap();
         let loss_plus = loss(units)?;
         times.forward_secs += t.lap();
 
-        self.masked_sweep(units, &pref, taus, step, &self.c_flip)?;
+        self.masked_sweep(units, &pref, taus, step, -2.0 * self.mu)?;
         times.perturb_secs += t.lap();
         let loss_minus = loss(units)?;
         times.forward_secs += t.lap();
 
-        self.masked_sweep(units, &pref, taus, step, &self.c_plus)?;
+        self.masked_sweep(units, &pref, taus, step, self.mu)?;
         times.perturb_secs += t.lap();
 
         let projected_grad = (loss_plus - loss_minus) / (2.0 * self.mu);
-        let coeff = self.rt.scalar_f32(-lr * projected_grad)?;
-        self.masked_sweep(units, &pref, taus, step, &coeff)?;
+        self.masked_sweep(units, &pref, taus, step, -lr * projected_grad)?;
         times.update_secs += t.lap();
         times.steps += 1;
 
@@ -244,127 +250,140 @@ impl<'r> SpsaEngine<'r> {
     pub fn apply(
         &self,
         step: u64,
-        units: &mut TunableUnits,
+        units: &mut TunableUnits<B>,
         active: &[usize],
         c: f32,
     ) -> Result<()> {
-        let cb = self.rt.scalar_f32(c)?;
-        self.sweep(units, active, step, &cb)
+        self.sweep(units, active, step, c)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{Manifest, ParamStore};
-    use std::path::PathBuf;
+    use crate::model::spec::ModelSpec;
+    use crate::runtime::NativeBackend;
 
-    fn art() -> PathBuf {
-        let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        PathBuf::from(root).join("opt-micro")
+    // All engine invariants run hermetically on the native backend; the
+    // identical code path executes on PJRT (rust/tests/integration.rs).
+
+    fn setup() -> (NativeBackend, ModelSpec) {
+        let b = NativeBackend::preset("opt-nano").unwrap();
+        let spec = b.spec().clone();
+        (b, spec)
     }
 
-    fn have() -> bool {
-        art().join("manifest.json").exists()
-    }
-
-    fn setup() -> (Runtime, Manifest) {
-        (Runtime::cpu().unwrap(), Manifest::load(&art()).unwrap())
-    }
-
-    fn tunable(rt: &Runtime, m: &Manifest) -> TunableUnits {
-        let store = ParamStore::load_init(rt, m).unwrap();
-        let lens = m.unit_lens.clone();
-        let bufs = (0..store.n_units())
-            .map(|k| {
-                let host = rt.read_vec_f32(store.unit(k)).unwrap();
-                rt.vec_f32(&host).unwrap()
-            })
-            .collect();
-        TunableUnits { bufs, lens }
+    fn tunable(b: &NativeBackend, spec: &ModelSpec) -> TunableUnits<NativeBackend> {
+        TunableUnits::from_host(b, &spec.init_units(0)).unwrap()
     }
 
     #[test]
     fn perturb_then_inverse_is_identity() {
-        if !have() {
-            eprintln!("skipping: no artifacts");
-            return;
-        }
-        let (rt, m) = setup();
-        let reg = ExeRegistry::new(m.clone());
-        let eng = SpsaEngine::new(&rt, &reg, 1e-3, 7).unwrap();
-        let mut units = tunable(&rt, &m);
-        let orig: Vec<Vec<f32>> =
-            units.bufs.iter().map(|b| rt.read_vec_f32(b).unwrap()).collect();
+        let (b, spec) = setup();
+        let eng = SpsaEngine::new(&b, 1e-3, 7).unwrap();
+        let mut units = tunable(&b, &spec);
+        let orig = units.to_host(&b).unwrap();
         let active: Vec<usize> = (0..units.n_units()).collect();
         eng.apply(3, &mut units, &active, 0.5).unwrap();
         eng.apply(3, &mut units, &active, -0.5).unwrap();
-        for (k, o) in orig.iter().enumerate() {
-            let now = rt.read_vec_f32(&units.bufs[k]).unwrap();
-            for (a, b) in now.iter().zip(o) {
-                assert!((a - b).abs() < 1e-4, "unit {k}: {a} vs {b}");
+        let now = units.to_host(&b).unwrap();
+        for (k, (a, o)) in now.iter().zip(&orig).enumerate() {
+            for (x, y) in a.iter().zip(o) {
+                assert!((x - y).abs() < 1e-4, "unit {k}: {x} vs {y}");
             }
         }
     }
 
     #[test]
     fn zo_step_restores_inactive_and_moves_active() {
-        if !have() {
-            return;
-        }
-        let (rt, m) = setup();
-        let reg = ExeRegistry::new(m.clone());
-        let eng = SpsaEngine::new(&rt, &reg, 1e-2, 11).unwrap();
-        let mut units = tunable(&rt, &m);
-        let orig: Vec<Vec<f32>> =
-            units.bufs.iter().map(|b| rt.read_vec_f32(b).unwrap()).collect();
+        let (b, spec) = setup();
+        let eng = SpsaEngine::new(&b, 1e-2, 11).unwrap();
+        let mut units = tunable(&b, &spec);
+        let orig = units.to_host(&b).unwrap();
         // drop unit 2: it must come back bit-comparable after the step
         let active: Vec<usize> = (0..units.n_units()).filter(|&k| k != 2).collect();
         let mut times = StageTimes::default();
         // a loss with a real gradient signal: distance of unit 1 to zero
-        let mut loss = |u: &TunableUnits| -> Result<f32> {
-            let v = rt.read_vec_f32(&u.bufs[1])?;
+        let mut loss = |u: &TunableUnits<NativeBackend>| -> Result<f32> {
+            let v = b.download(&u.bufs[1])?;
             Ok(v.iter().map(|x| x * x).sum::<f32>())
         };
-        let step =
-            eng.zo_step(0, &mut units, &active, 1e-3, &mut loss, &mut times).unwrap();
+        let step = eng.zo_step(0, &mut units, &active, 1e-3, &mut loss, &mut times).unwrap();
         assert!(step.projected_grad.is_finite());
         assert_eq!(
             step.active_params,
-            active.iter().map(|&k| m.unit_lens[k]).sum::<usize>()
+            active.iter().map(|&k| spec.unit_lens()[k]).sum::<usize>()
         );
-        let u2 = rt.read_vec_f32(&units.bufs[2]).unwrap();
-        assert_eq!(u2, orig[2], "dropped unit must be untouched");
-        let u1 = rt.read_vec_f32(&units.bufs[1]).unwrap();
-        assert_ne!(u1, orig[1], "active unit must be updated");
-        // restore invariant: theta' = theta - lr*g*z, so theta' - theta is
-        // proportional to z; re-applying +lr*g*z recovers theta
+        let after = units.to_host(&b).unwrap();
+        assert_eq!(after[2], orig[2], "dropped unit must be untouched");
+        assert_ne!(after[1], orig[1], "active unit must be updated");
         assert_eq!(times.steps, 1);
-        assert!(times.perturb_secs > 0.0 && times.forward_secs > 0.0);
+        assert!(times.perturb_secs >= 0.0 && times.forward_secs >= 0.0);
+    }
+
+    #[test]
+    fn lr_zero_step_is_an_exact_restore_of_every_unit() {
+        let (b, spec) = setup();
+        let eng = SpsaEngine::new(&b, 1e-3, 5).unwrap();
+        let mut units = tunable(&b, &spec);
+        let orig = units.to_host(&b).unwrap();
+        let active: Vec<usize> = (0..units.n_units()).collect();
+        let mut times = StageTimes::default();
+        let mut loss = |_: &TunableUnits<NativeBackend>| -> Result<f32> { Ok(1.0) };
+        eng.zo_step(0, &mut units, &active, 0.0, &mut loss, &mut times).unwrap();
+        let after = units.to_host(&b).unwrap();
+        for (k, (a, o)) in after.iter().zip(&orig).enumerate() {
+            for (x, y) in a.iter().zip(o) {
+                assert!((x - y).abs() < 1e-5, "unit {k}: {x} vs {y}");
+            }
+        }
     }
 
     #[test]
     fn same_seed_same_trajectory() {
-        if !have() {
-            return;
-        }
-        let (rt, m) = setup();
-        let reg = ExeRegistry::new(m.clone());
+        let (b, spec) = setup();
         let mut final_states = vec![];
         for _ in 0..2 {
-            let eng = SpsaEngine::new(&rt, &reg, 1e-3, 42).unwrap();
-            let mut units = tunable(&rt, &m);
+            let eng = SpsaEngine::new(&b, 1e-3, 42).unwrap();
+            let mut units = tunable(&b, &spec);
             let active: Vec<usize> = (0..units.n_units()).collect();
             let mut times = StageTimes::default();
-            let mut loss = |u: &TunableUnits| -> Result<f32> {
-                let v = rt.read_vec_f32(&u.bufs[0])?;
+            let mut loss = |u: &TunableUnits<NativeBackend>| -> Result<f32> {
+                let v = b.download(&u.bufs[0])?;
                 Ok(v.iter().take(100).sum::<f32>())
             };
             for t in 0..3 {
                 eng.zo_step(t, &mut units, &active, 1e-4, &mut loss, &mut times).unwrap();
             }
-            final_states.push(rt.read_vec_f32(&units.bufs[0]).unwrap());
+            final_states.push(b.download(&units.bufs[0]).unwrap());
         }
         assert_eq!(final_states[0], final_states[1], "run must be reproducible");
+    }
+
+    #[test]
+    fn masked_step_with_lr_zero_restores_exactly() {
+        let (b, spec) = setup();
+        let eng = SpsaEngine::new(&b, 1e-3, 9).unwrap();
+        let mut units = tunable(&b, &spec);
+        let orig = units.to_host(&b).unwrap();
+        // mask in roughly the small half of each unit
+        let taus: Vec<f32> = orig
+            .iter()
+            .map(|u| {
+                let mut mags: Vec<f32> = u.iter().map(|x| x.abs()).collect();
+                mags.sort_by(|a, c| a.partial_cmp(c).unwrap());
+                mags[mags.len() / 2]
+            })
+            .collect();
+        let mut times = StageTimes::default();
+        let mut loss = |_: &TunableUnits<NativeBackend>| -> Result<f32> { Ok(0.5) };
+        let zs = eng.zo_step_masked(0, &mut units, &taus, 0.0, &mut loss, &mut times).unwrap();
+        assert_eq!(zs.active_params, units.param_count());
+        let after = units.to_host(&b).unwrap();
+        for (a, o) in after.iter().zip(&orig) {
+            for (x, y) in a.iter().zip(o) {
+                assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+            }
+        }
     }
 }

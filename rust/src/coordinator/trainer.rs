@@ -1,6 +1,13 @@
 //! The training loop: data sampling, the ZO/FO engines, periodic evaluation,
 //! checkpointing, and run reporting. One [`Trainer::run`] call reproduces one
 //! cell of the paper's tables; the bench harness sweeps it.
+//!
+//! The loop is generic over the runtime [`Backend`]: `run()` resolves the
+//! configured backend (config key `backend` / env `LEZO_BACKEND`; `auto`
+//! picks PJRT when artifacts exist in a pjrt-enabled build, else the native
+//! pure-Rust backend) and hands it to [`Trainer::run_with`], so the full
+//! perturb -> forward -> flip -> forward -> restore -> update loop runs
+//! end-to-end on any machine with zero external artifacts.
 
 use crate::config::{Method, RunConfig};
 use crate::coordinator::fo::{FoEngine, FoOptimizer};
@@ -8,15 +15,14 @@ use crate::coordinator::metrics::StageTimes;
 use crate::coordinator::policy::PolicySelector;
 use crate::coordinator::spsa::{SpsaEngine, TunableUnits};
 use crate::data::batch::{bucket_for_instances, Batch};
-use crate::data::corpus::CorpusGen;
 use crate::eval::{icl, EvalMetric, Evaluator};
-use crate::model::{checkpoint, Manifest, ParamStore};
+use crate::model::spec::ModelSpec;
 use crate::peft::PeftMode;
 use crate::rng::{derive, purpose, Rng};
-use crate::runtime::exes::{ExeRegistry, Family};
-use crate::runtime::{run1, Runtime};
+use crate::runtime::backend::{Backend, BackendKind};
+use crate::runtime::NativeBackend;
 use crate::tasks::{eval_set, make_task, Example, TaskKind};
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Result};
 
 /// One point on the convergence curve (Fig. 1): metric after `step` steps
 /// and `train_secs` of *training* wall time (eval time excluded).
@@ -33,6 +39,8 @@ pub struct EvalPoint {
 pub struct TrainReport {
     pub task: String,
     pub method: Method,
+    /// Which backend executed the run ("native" / "pjrt").
+    pub backend: &'static str,
     pub metric_kind: &'static str,
     /// Final-checkpoint metric (paper: best-validation checkpoint; we keep
     /// both final and best).
@@ -64,6 +72,82 @@ impl TrainReport {
     }
 }
 
+/// A concrete backend instance chosen for a run.
+pub enum ResolvedBackend {
+    Native(NativeBackend),
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::PjrtBackend),
+}
+
+impl ResolvedBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResolvedBackend::Native(_) => "native",
+            #[cfg(feature = "pjrt")]
+            ResolvedBackend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// The backend a config asks for. Precedence: an explicit (non-`auto`)
+/// `cfg.backend` wins; otherwise the `LEZO_BACKEND` env var steers the
+/// `auto` default. Env never overrides a programmatic/CLI choice — that
+/// keeps test outcomes independent of the caller's environment.
+pub fn requested_backend_kind(cfg: &RunConfig) -> Result<BackendKind> {
+    if cfg.backend != BackendKind::Auto {
+        return Ok(cfg.backend);
+    }
+    match std::env::var("LEZO_BACKEND") {
+        Ok(s) if !s.is_empty() => s.parse(),
+        _ => Ok(BackendKind::Auto),
+    }
+}
+
+/// Resolve the backend for a run. `auto` prefers PJRT when the build has
+/// the `pjrt` feature and the artifact dir exists, else falls back to the
+/// native pure-Rust backend (preset looked up by `cfg.model`).
+pub fn resolve_backend(cfg: &RunConfig) -> Result<ResolvedBackend> {
+    let artifact_dir = std::path::PathBuf::from(cfg.artifact_dir());
+    // native runs adopt the artifact dir when it exists: the spec comes
+    // from its manifest (so exported sizes outside the preset list still
+    // run natively) and initial params from params_init.bin /
+    // pretrained.ckpt — results match across build flavors
+    let native = |dir: std::path::PathBuf| -> Result<ResolvedBackend> {
+        let (spec, manifest) = crate::runtime::backend::resolve_model(&cfg.model, &dir)?;
+        let mut backend = NativeBackend::new(spec)?;
+        if let Some(manifest) = manifest {
+            backend = backend.with_artifacts(manifest)?;
+        }
+        Ok(ResolvedBackend::Native(backend))
+    };
+    match requested_backend_kind(cfg)? {
+        BackendKind::Native => native(artifact_dir),
+        BackendKind::Pjrt => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(ResolvedBackend::Pjrt(crate::runtime::PjrtBackend::open(&artifact_dir)?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = artifact_dir;
+                bail!(
+                    "backend=pjrt requested but this binary was built without the `pjrt` \
+                     feature; rebuild with `cargo build --features pjrt` or use backend=native"
+                )
+            }
+        }
+        BackendKind::Auto => {
+            #[cfg(feature = "pjrt")]
+            if crate::runtime::backend::artifacts_available(&artifact_dir) {
+                return Ok(ResolvedBackend::Pjrt(crate::runtime::PjrtBackend::open(
+                    &artifact_dir,
+                )?));
+            }
+            native(artifact_dir)
+        }
+    }
+}
+
 /// Trainer: configured once, `run()` executes the whole fine-tuning run.
 pub struct Trainer {
     pub cfg: RunConfig,
@@ -74,58 +158,66 @@ impl Trainer {
         Trainer { cfg }
     }
 
-    /// Execute the configured run end to end.
+    /// Execute the configured run end to end on the resolved backend.
     pub fn run(&self) -> Result<TrainReport> {
+        match resolve_backend(&self.cfg)? {
+            ResolvedBackend::Native(b) => self.run_with(&b),
+            #[cfg(feature = "pjrt")]
+            ResolvedBackend::Pjrt(b) => self.run_with(&b),
+        }
+    }
+
+    /// Execute the configured run on a caller-supplied backend.
+    pub fn run_with<B: Backend>(&self, backend: &B) -> Result<TrainReport> {
         let cfg = &self.cfg;
-        let rt = Runtime::cpu()?;
-        let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir()))?;
-        let reg = ExeRegistry::new(manifest.clone());
+        let spec = backend.spec().clone();
         let task = make_task(&cfg.task)?;
         let evals = eval_set(task.as_ref(), cfg.seed, cfg.eval_examples, cfg.mean_len);
-
-        let (host_init, source) = checkpoint::resolve_initial(&manifest, &cfg.checkpoint)?;
+        let (host_init, source) = backend.initial_params(&cfg.checkpoint)?;
         crate::info!(
-            "run: model={} task={} method={} peft={} n_drop={} lr={} mu={} steps={} seed={} init={}",
-            cfg.model, cfg.task, cfg.method, cfg.peft, cfg.drop_layers,
+            "run: backend={} model={} task={} method={} peft={} n_drop={} lr={} mu={} steps={} seed={} init={}",
+            backend.name(), spec.name, cfg.task, cfg.method, cfg.peft, cfg.drop_layers,
             cfg.lr, cfg.mu, cfg.steps, cfg.seed, source
         );
 
         match cfg.method {
-            Method::ZeroShot => self.run_no_train(&rt, &reg, &manifest, task.kind(), &evals, &host_init, false, task.as_ref()),
-            Method::Icl => self.run_no_train(&rt, &reg, &manifest, task.kind(), &evals, &host_init, true, task.as_ref()),
-            Method::Ft => self.run_fo(&rt, &reg, &manifest, task.as_ref(), &evals, host_init),
+            Method::ZeroShot => {
+                self.run_no_train(backend, &spec, task.as_ref(), &evals, &host_init, false)
+            }
+            Method::Icl => {
+                self.run_no_train(backend, &spec, task.as_ref(), &evals, &host_init, true)
+            }
+            Method::Ft => self.run_fo(backend, &spec, task.as_ref(), &evals, host_init),
             Method::Mezo | Method::Lezo | Method::Smezo => {
-                self.run_zo(&rt, &reg, &manifest, task.as_ref(), &evals, host_init)
+                self.run_zo(backend, &spec, task.as_ref(), &evals, host_init)
             }
         }
     }
 
     // ---- no-training baselines ---------------------------------------------
 
-    #[allow(clippy::too_many_arguments)]
-    fn run_no_train(
+    fn run_no_train<B: Backend>(
         &self,
-        rt: &Runtime,
-        reg: &ExeRegistry,
-        manifest: &Manifest,
-        kind: TaskKind,
+        backend: &B,
+        spec: &ModelSpec,
+        task: &dyn crate::tasks::Task,
         evals: &[Example],
         host_init: &[Vec<f32>],
         use_icl: bool,
-        task: &dyn crate::tasks::Task,
     ) -> Result<TrainReport> {
-        let store = ParamStore::from_host(rt, manifest, host_init)?;
-        let ev = Evaluator::new(rt, reg);
+        let units = TunableUnits::from_host(backend, host_init)?;
+        let ev = Evaluator::new(backend);
         let examples = if use_icl {
-            let budget = *manifest.seq_buckets.iter().max().unwrap();
+            let budget = *spec.seq_buckets.iter().max().unwrap();
             icl::icl_eval_set(task, self.cfg.seed, self.cfg.icl_shots, evals, budget)
         } else {
             evals.to_vec()
         };
-        let metric = ev.evaluate(kind, &store.unit_refs(), &examples)?;
+        let metric = ev.evaluate(task.kind(), &units.unit_refs(), &examples)?;
         Ok(TrainReport {
             task: self.cfg.task.clone(),
             method: self.cfg.method,
+            backend: backend.name(),
             metric_kind: metric.kind,
             final_metric: metric.value,
             best_metric: metric.value,
@@ -154,25 +246,24 @@ impl Trainer {
         &self,
         pool: &[Example],
         rng: &mut Rng,
-        manifest: &Manifest,
+        spec: &ModelSpec,
     ) -> Result<(Batch, f64)> {
-        let rows = manifest.train_batch;
+        let rows = spec.train_batch;
         let instances: Vec<_> =
             (0..rows).map(|_| rng.choice(pool).train_instance()).collect();
         let mean_prompt = crate::stats::mean(
             &instances.iter().map(|i| i.prompt.len() as f64).collect::<Vec<_>>(),
         );
-        let seq = bucket_for_instances(&manifest.seq_buckets, &instances)?;
+        let seq = bucket_for_instances(&spec.seq_buckets, &instances)?;
         Ok((Batch::from_instances(&instances, rows, seq)?, mean_prompt))
     }
 
-    // ---- ZO (MeZO / LeZO) ---------------------------------------------------
+    // ---- ZO (MeZO / LeZO / Sparse-MeZO) -------------------------------------
 
-    fn run_zo(
+    fn run_zo<B: Backend>(
         &self,
-        rt: &Runtime,
-        reg: &ExeRegistry,
-        manifest: &Manifest,
+        backend: &B,
+        spec: &ModelSpec,
         task: &dyn crate::tasks::Task,
         evals: &[Example],
         host_init: Vec<Vec<f32>>,
@@ -182,25 +273,24 @@ impl Trainer {
             bail!("MeZO is LeZO with drop_layers=0; got drop_layers={}", cfg.drop_layers);
         }
         if cfg.method == Method::Smezo {
-            anyhow::ensure!(cfg.drop_layers == 0, "Sparse-MeZO masks elements, not layers");
-            anyhow::ensure!(cfg.peft == PeftMode::Full, "Sparse-MeZO baseline is full-parameter");
+            ensure!(cfg.drop_layers == 0, "Sparse-MeZO masks elements, not layers");
+            ensure!(cfg.peft == PeftMode::Full, "Sparse-MeZO baseline is full-parameter");
         }
-        let store = ParamStore::from_host(rt, manifest, &host_init)?;
 
         // Sparse-MeZO: per-unit magnitude thresholds (the ranking step whose
         // cost the paper criticizes — timed into `other_secs`).
         let mut times = StageTimes::default();
-        let taus: Vec<xla::PjRtBuffer> = if cfg.method == Method::Smezo {
+        let taus: Vec<f32> = if cfg.method == Method::Smezo {
             let sw = crate::util::Stopwatch::start();
-            let t = host_init
+            let t: Vec<f32> = host_init
                 .iter()
                 .map(|u| {
                     let mut mags: Vec<f32> = u.iter().map(|x| x.abs()).collect();
                     mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
                     let idx = ((mags.len() as f64 - 1.0) * cfg.smezo_keep) as usize;
-                    rt.scalar_f32(mags[idx])
+                    mags[idx]
                 })
-                .collect::<Result<Vec<_>>>()?;
+                .collect();
             times.other_secs += sw.secs();
             crate::info!("smezo: ranked {} units in {:.2}s", t.len(), times.other_secs);
             t
@@ -208,14 +298,12 @@ impl Trainer {
             vec![]
         };
 
-        // Tunable space + forward families, by PEFT mode.
-        let (mut tunable, base_refs_needed, fwd_fam, ev_fams) = self.tunable_space(rt, manifest, &store)?;
-        let mut selector = self.selector(manifest, &tunable)?;
-        let engine = SpsaEngine::new(rt, reg, cfg.mu as f32, cfg.seed)?;
-        let evaluator = match ev_fams {
-            Some((el, pr)) => Evaluator::with_families(rt, reg, el, pr),
-            None => Evaluator::new(rt, reg),
-        };
+        // Tunable space: model units (full fine-tuning) or per-block adapter
+        // units over frozen base units (PEFT).
+        let (mut tunable, base) = self.tunable_space(backend, spec, &host_init)?;
+        let mut selector = self.selector(spec, &tunable)?;
+        let engine = SpsaEngine::new(backend, cfg.mu as f32, cfg.seed)?;
+        let evaluator = Evaluator::with_peft(backend, cfg.peft);
 
         let pool = self.train_pool(task);
         let mut data_rng = Rng::new(derive(cfg.seed, purpose::DATA, 2));
@@ -226,12 +314,12 @@ impl Trainer {
         let mut frac_acc = 0.0f64;
         let mut len_acc = 0.0f64;
 
-        reg.warm_zo(rt).ok(); // exclude compilation from step timing
+        backend.warm_zo().ok(); // exclude one-time setup from step timing
 
-        let eval_now = |tun: &TunableUnits| -> Result<EvalMetric> {
-            let mut units: Vec<&xla::PjRtBuffer> = Vec::new();
-            if base_refs_needed {
-                units.extend(store.unit_refs());
+        let eval_now = |tun: &TunableUnits<B>| -> Result<EvalMetric> {
+            let mut units: Vec<&B::Buffer> = Vec::new();
+            if let Some(base) = &base {
+                units.extend(base.iter());
             }
             units.extend(tun.bufs.iter());
             evaluator.evaluate(task.kind(), &units, evals)
@@ -243,27 +331,20 @@ impl Trainer {
 
         for step in 0..cfg.steps as u64 {
             let sw = crate::util::Stopwatch::start();
-            let (batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, manifest)?;
-            let tok = rt.mat_i32(&batch.tokens, batch.rows, batch.seq)?;
-            let tgt = rt.mat_i32(&batch.targets, batch.rows, batch.seq)?;
-            let msk = rt.mat_f32(&batch.mask, batch.rows, batch.seq)?;
-            let fwd_exe = reg.get(rt, fwd_fam, batch.seq)?;
+            let (batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, spec)?;
+            let prepared = backend.prepare_batch(&batch)?;
             let active = selector.next_active(step);
             frac_acc += active.iter().map(|&k| tunable.lens[k]).sum::<usize>() as f64
                 / tunable.param_count() as f64;
             len_acc += mean_prompt;
 
-            let mut loss_fn = |tun: &TunableUnits| -> Result<f32> {
-                let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
-                if base_refs_needed {
-                    args.extend(store.unit_refs());
+            let mut loss_fn = |tun: &TunableUnits<B>| -> Result<f32> {
+                let mut args: Vec<&B::Buffer> = Vec::new();
+                if let Some(base) = &base {
+                    args.extend(base.iter());
                 }
                 args.extend(tun.bufs.iter());
-                args.push(&tok);
-                args.push(&tgt);
-                args.push(&msk);
-                let out = run1(&fwd_exe, &args)?;
-                rt.read_scalar_f32(&out)
+                backend.forward_loss(cfg.peft, &args, &prepared)
             };
 
             let zs = if cfg.method == Method::Smezo {
@@ -296,6 +377,7 @@ impl Trainer {
         Ok(TrainReport {
             task: cfg.task.clone(),
             method: cfg.method,
+            backend: backend.name(),
             metric_kind: if task.kind() == TaskKind::Generation { "f1" } else { "acc" },
             final_metric,
             best_metric: best,
@@ -309,66 +391,41 @@ impl Trainer {
     }
 
     /// The tunable parameter space: the model units (full fine-tuning) or
-    /// the per-block adapter units (PEFT). Returns (tunable, whether the
-    /// frozen base units prefix every forward call, forward family,
-    /// optional PEFT eval families).
-    fn tunable_space(
+    /// the per-block adapter units (PEFT). Returns (tunable, frozen base
+    /// units when they must prefix every forward call).
+    #[allow(clippy::type_complexity)]
+    fn tunable_space<B: Backend>(
         &self,
-        rt: &Runtime,
-        manifest: &Manifest,
-        store: &ParamStore,
-    ) -> Result<(TunableUnits, bool, Family, Option<(Family, Family)>)> {
+        backend: &B,
+        spec: &ModelSpec,
+        host_init: &[Vec<f32>],
+    ) -> Result<(TunableUnits<B>, Option<Vec<B::Buffer>>)> {
         match self.cfg.peft {
-            PeftMode::Full => {
-                // clone the store's buffers as the tunable set (the store
-                // itself stays the canonical base for checkpointing)
-                let bufs = (0..store.n_units())
-                    .map(|k| {
-                        let host = rt.read_vec_f32(store.unit(k))?;
-                        rt.vec_f32(&host)
-                    })
+            PeftMode::Full => Ok((TunableUnits::from_host(backend, host_init)?, None)),
+            mode => {
+                ensure!(
+                    backend.supports_peft(mode),
+                    "the {} backend cannot run peft={mode} for this model \
+                     (PJRT needs artifacts exported with `aot --peft`)",
+                    backend.name()
+                );
+                // backend-authoritative: PJRT cross-checks the manifest's
+                // exported adapter length against the in-crate layout
+                let len = backend.peft_unit_len(mode)?;
+                let host = crate::peft::init_peft_units(
+                    mode,
+                    spec.n_layers,
+                    spec.d_model,
+                    self.cfg.seed,
+                );
+                let bufs = host.iter().map(|u| backend.upload(u)).collect::<Result<Vec<_>>>()?;
+                let base = host_init
+                    .iter()
+                    .map(|u| backend.upload(u))
                     .collect::<Result<Vec<_>>>()?;
                 Ok((
-                    TunableUnits { bufs, lens: manifest.unit_lens.clone() },
-                    false,
-                    Family::ForwardLoss,
-                    None,
-                ))
-            }
-            PeftMode::Lora => {
-                let len = manifest
-                    .lora_unit_len
-                    .context("artifacts lack LoRA executables (re-run `make artifacts`)")?;
-                let host = crate::peft::init_peft_units(
-                    PeftMode::Lora,
-                    manifest.n_layers,
-                    manifest.d_model,
-                    self.cfg.seed,
-                );
-                let bufs = host.iter().map(|u| rt.vec_f32(u)).collect::<Result<Vec<_>>>()?;
-                Ok((
-                    TunableUnits { bufs, lens: vec![len; manifest.n_layers] },
-                    true,
-                    Family::ForwardLossLora,
-                    Some((Family::ExampleLossesLora, Family::PredictLora)),
-                ))
-            }
-            PeftMode::Prefix => {
-                let len = manifest
-                    .prefix_unit_len
-                    .context("artifacts lack prefix executables (re-run `make artifacts`)")?;
-                let host = crate::peft::init_peft_units(
-                    PeftMode::Prefix,
-                    manifest.n_layers,
-                    manifest.d_model,
-                    self.cfg.seed,
-                );
-                let bufs = host.iter().map(|u| rt.vec_f32(u)).collect::<Result<Vec<_>>>()?;
-                Ok((
-                    TunableUnits { bufs, lens: vec![len; manifest.n_layers] },
-                    true,
-                    Family::ForwardLossPrefix,
-                    Some((Family::ExampleLossesPrefix, Family::PredictPrefix)),
+                    TunableUnits { bufs, lens: vec![len; spec.n_layers] },
+                    Some(base),
                 ))
             }
         }
@@ -378,17 +435,18 @@ impl Trainer {
     /// fine-tuning, blocks are sparsifiable and embedding/final-LN are
     /// always active (unless blocks_only=false). Under PEFT every per-block
     /// adapter unit is sparsifiable.
-    fn selector(&self, manifest: &Manifest, tunable: &TunableUnits) -> Result<PolicySelector> {
+    fn selector<B: Backend>(
+        &self,
+        spec: &ModelSpec,
+        tunable: &TunableUnits<B>,
+    ) -> Result<PolicySelector> {
         let cfg = &self.cfg;
         match cfg.peft {
             PeftMode::Full => {
                 let (sparsifiable, always) = if cfg.blocks_only {
-                    (
-                        manifest.block_unit_indices(),
-                        vec![0, manifest.n_units() - 1],
-                    )
+                    (spec.block_unit_indices(), vec![0, spec.n_units() - 1])
                 } else {
-                    ((0..manifest.n_units()).collect(), vec![])
+                    ((0..spec.n_units()).collect(), vec![])
                 };
                 PolicySelector::new(sparsifiable, always, cfg.drop_layers, cfg.seed, cfg.policy)
             }
@@ -404,19 +462,24 @@ impl Trainer {
 
     // ---- FO (the paper's FT baseline) ---------------------------------------
 
-    fn run_fo(
+    fn run_fo<B: Backend>(
         &self,
-        rt: &Runtime,
-        reg: &ExeRegistry,
-        manifest: &Manifest,
+        backend: &B,
+        spec: &ModelSpec,
         task: &dyn crate::tasks::Task,
         evals: &[Example],
         mut host_params: Vec<Vec<f32>>,
     ) -> Result<TrainReport> {
         let cfg = &self.cfg;
-        let engine = FoEngine::new(rt, reg);
+        ensure!(
+            backend.supports_fo(),
+            "method=ft needs a first-order-capable backend (pjrt with forward_backward \
+             artifacts); the {} backend has no autodiff",
+            backend.name()
+        );
+        let engine = FoEngine::new(backend);
         let mut opt = FoOptimizer::adam(cfg.adam_beta1, cfg.adam_beta2, cfg.adam_eps);
-        let evaluator = Evaluator::new(rt, reg);
+        let evaluator = Evaluator::new(backend);
         let pool = self.train_pool(task);
         let mut data_rng = Rng::new(derive(cfg.seed, purpose::DATA, 2));
         let mut history = Vec::new();
@@ -428,7 +491,7 @@ impl Trainer {
 
         for step in 0..cfg.steps as u64 {
             let sw = crate::util::Stopwatch::start();
-            let (batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, manifest)?;
+            let (batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, spec)?;
             len_acc += mean_prompt;
             let loss = engine.fo_step(&mut host_params, &batch, &mut opt, cfg.lr)?;
             losses.push(loss);
@@ -438,8 +501,8 @@ impl Trainer {
 
             let s1 = step + 1;
             if s1 % cfg.eval_every as u64 == 0 || s1 == cfg.steps as u64 {
-                let store = ParamStore::from_host(rt, manifest, &host_params)?;
-                let m = evaluator.evaluate(task.kind(), &store.unit_refs(), evals)?;
+                let units = TunableUnits::from_host(backend, &host_params)?;
+                let m = evaluator.evaluate(task.kind(), &units.unit_refs(), evals)?;
                 best = best.max(m.value);
                 history.push(EvalPoint { step: s1, train_secs, metric: m.value, train_loss: loss });
                 crate::info!("FT step {s1}: loss={loss:.4} {}={:.1}%", m.kind, m.pct());
@@ -450,6 +513,7 @@ impl Trainer {
         Ok(TrainReport {
             task: cfg.task.clone(),
             method: cfg.method,
+            backend: backend.name(),
             metric_kind: if task.kind() == TaskKind::Generation { "f1" } else { "acc" },
             final_metric,
             best_metric: best,
@@ -470,6 +534,9 @@ impl Trainer {
 /// Pretrain a model on the synthetic corpus with FO-Adam and write
 /// `<artifact_dir>/pretrained.ckpt`. All fine-tuning runs then start from
 /// this checkpoint (checkpoint::resolve_initial picks it up automatically).
+/// FO needs the forward_backward artifacts, so this is a PJRT-only path;
+/// builds without the `pjrt` feature fail at run time with a clear error.
+#[cfg(not(feature = "pjrt"))]
 pub fn pretrain(
     artifact_dir: &std::path::Path,
     steps: usize,
@@ -477,10 +544,28 @@ pub fn pretrain(
     seed: u64,
     log_every: usize,
 ) -> Result<(f32, f32)> {
-    let rt = Runtime::cpu()?;
-    let manifest = Manifest::load(artifact_dir)?;
-    let reg = ExeRegistry::new(manifest.clone());
-    let engine = FoEngine::new(&rt, &reg);
+    let _ = (artifact_dir, steps, lr, seed, log_every);
+    bail!(
+        "pretrain drives the FO substrate over forward_backward artifacts, which needs the \
+         pjrt backend; rebuild with `cargo build --features pjrt`"
+    )
+}
+
+/// See the `not(feature = "pjrt")` twin for the rationale.
+#[cfg(feature = "pjrt")]
+pub fn pretrain(
+    artifact_dir: &std::path::Path,
+    steps: usize,
+    lr: f64,
+    seed: u64,
+    log_every: usize,
+) -> Result<(f32, f32)> {
+    use crate::data::corpus::CorpusGen;
+    use crate::model::checkpoint;
+
+    let backend = crate::runtime::PjrtBackend::open(artifact_dir)?;
+    let manifest = backend.manifest().clone();
+    let engine = FoEngine::new(&backend);
     let mut params = manifest.read_init_params()?;
     let mut opt = FoOptimizer::adam(0.9, 0.999, 1e-8);
     let corpus = CorpusGen::new(manifest.vocab, manifest.max_seq);
@@ -524,6 +609,7 @@ mod tests {
         let r = TrainReport {
             task: "sst2".into(),
             method: Method::Lezo,
+            backend: "native",
             metric_kind: "acc",
             final_metric: 0.9,
             best_metric: 0.92,
@@ -542,11 +628,41 @@ mod tests {
     #[test]
     fn mezo_rejects_nonzero_drop() {
         let mut cfg = RunConfig::default();
+        cfg.model = "opt-nano".into();
         cfg.method = Method::Mezo;
         cfg.drop_layers = 3;
         cfg.steps = 1;
-        // fails before touching the runtime only if artifacts exist; if they
-        // don't, the manifest error fires first — both are errors.
+        assert!(Trainer::new(cfg).run().is_err());
+    }
+
+    #[test]
+    fn ft_on_native_backend_is_a_clear_error() {
+        let mut cfg = RunConfig::default();
+        cfg.model = "opt-nano".into();
+        cfg.backend = BackendKind::Native;
+        cfg.method = Method::Ft;
+        cfg.steps = 1;
+        let err = Trainer::new(cfg).run().unwrap_err();
+        assert!(err.to_string().contains("first-order"), "{err}");
+    }
+
+    #[test]
+    fn peft_on_native_backend_is_a_clear_error() {
+        let mut cfg = RunConfig::default();
+        cfg.model = "opt-nano".into();
+        cfg.backend = BackendKind::Native;
+        cfg.method = Method::Lezo;
+        cfg.peft = PeftMode::Lora;
+        cfg.steps = 1;
+        let err = Trainer::new(cfg).run().unwrap_err();
+        assert!(err.to_string().contains("peft"), "{err}");
+    }
+
+    #[test]
+    fn unknown_preset_without_artifacts_errors() {
+        let mut cfg = RunConfig::default();
+        cfg.model = "opt-giga".into();
+        cfg.backend = BackendKind::Native;
         assert!(Trainer::new(cfg).run().is_err());
     }
 }

@@ -1,14 +1,13 @@
-//! Evaluation harness (DESIGN.md S13): MeZO-style option scoring for
-//! classification and multiple choice (argmin of per-option LM loss via the
-//! `example_losses` executable) and teacher-forced token-F1 for the
-//! generation tasks (via the `predict` executable).
+//! Evaluation harness (DESIGN.md S13), generic over the runtime backend:
+//! MeZO-style option scoring for classification and multiple choice (argmin
+//! of per-option LM loss via the `example_losses` family) and teacher-forced
+//! token-F1 for the generation tasks (via the `predict` family).
 
 pub mod icl;
 
 use crate::data::batch::{Batch, Instance};
-use crate::model::Manifest;
-use crate::runtime::exes::{ExeRegistry, Family};
-use crate::runtime::{run1, Runtime};
+use crate::peft::PeftMode;
+use crate::runtime::backend::Backend;
 use crate::tasks::{Example, TaskKind};
 use anyhow::{ensure, Result};
 
@@ -28,60 +27,38 @@ impl EvalMetric {
     }
 }
 
-/// Evaluator bound to one model's runtime/artifacts. The `peft` families
-/// route scoring through the adapter-aware executables when fine-tuning
-/// with LoRA / prefix (Table 4).
-pub struct Evaluator<'r> {
-    rt: &'r Runtime,
-    reg: &'r ExeRegistry,
-    example_losses: Family,
-    predict: Family,
+/// Evaluator bound to one backend. `peft` routes scoring through the
+/// adapter-aware executable families when fine-tuning with LoRA / prefix
+/// (Table 4); `units` is then base units followed by adapter units.
+pub struct Evaluator<'b, B: Backend> {
+    backend: &'b B,
+    peft: PeftMode,
 }
 
-impl<'r> Evaluator<'r> {
-    pub fn new(rt: &'r Runtime, reg: &'r ExeRegistry) -> Evaluator<'r> {
-        Evaluator { rt, reg, example_losses: Family::ExampleLosses, predict: Family::Predict }
+impl<'b, B: Backend> Evaluator<'b, B> {
+    pub fn new(backend: &'b B) -> Evaluator<'b, B> {
+        Evaluator { backend, peft: PeftMode::Full }
     }
 
-    /// Route scoring through the PEFT executables (arguments = base units
-    /// followed by adapter units).
-    pub fn with_families(
-        rt: &'r Runtime,
-        reg: &'r ExeRegistry,
-        example_losses: Family,
-        predict: Family,
-    ) -> Evaluator<'r> {
-        Evaluator { rt, reg, example_losses, predict }
+    /// Route scoring through the PEFT families.
+    pub fn with_peft(backend: &'b B, peft: PeftMode) -> Evaluator<'b, B> {
+        Evaluator { backend, peft }
     }
 
-    fn manifest(&self) -> &Manifest {
-        self.reg.manifest()
-    }
-
-    /// Per-instance mean masked LM loss, batched over the eval executable.
-    /// `units` is the full argument prefix (base units, then adapters under
-    /// PEFT).
+    /// Per-instance mean masked LM loss, batched over the eval family.
     pub fn instance_losses(
         &self,
-        units: &[&xla::PjRtBuffer],
+        units: &[&B::Buffer],
         instances: &[Instance],
     ) -> Result<Vec<f32>> {
-        let m = self.manifest();
-        let rows = m.eval_batch;
+        let spec = self.backend.spec();
+        let rows = spec.eval_batch;
         let mut losses = Vec::with_capacity(instances.len());
         for chunk in instances.chunks(rows) {
-            let seq = crate::data::batch::bucket_for_instances(&m.seq_buckets, chunk)?;
+            let seq = crate::data::batch::bucket_for_instances(&spec.seq_buckets, chunk)?;
             let batch = Batch::from_instances(chunk, rows, seq)?;
-            let exe = self.reg.get(self.rt, self.example_losses, seq)?;
-            let tok = self.rt.mat_i32(&batch.tokens, rows, seq)?;
-            let tgt = self.rt.mat_i32(&batch.targets, rows, seq)?;
-            let msk = self.rt.mat_f32(&batch.mask, rows, seq)?;
-            let mut args: Vec<&xla::PjRtBuffer> = units.to_vec();
-            args.push(&tok);
-            args.push(&tgt);
-            args.push(&msk);
-            let out = run1(&exe, &args)?;
-            let per = self.rt.read_vec_f32(&out)?;
+            let prepared = self.backend.prepare_batch(&batch)?;
+            let per = self.backend.example_losses(self.peft, units, &prepared)?;
             ensure!(per.len() == rows, "example_losses returned {} rows", per.len());
             losses.extend_from_slice(&per[..chunk.len()]);
         }
@@ -91,7 +68,7 @@ impl<'r> Evaluator<'r> {
     /// Classification / multiple choice: predict = argmin option loss.
     pub fn option_accuracy(
         &self,
-        units: &[&xla::PjRtBuffer],
+        units: &[&B::Buffer],
         examples: &[Example],
     ) -> Result<EvalMetric> {
         ensure!(!examples.is_empty(), "empty eval set");
@@ -129,24 +106,20 @@ impl<'r> Evaluator<'r> {
     /// scored by token-level F1 (the SQuAD/DROP metric shape).
     pub fn generation_f1(
         &self,
-        units: &[&xla::PjRtBuffer],
+        units: &[&B::Buffer],
         examples: &[Example],
     ) -> Result<EvalMetric> {
         ensure!(!examples.is_empty(), "empty eval set");
-        let m = self.manifest();
-        let rows = m.eval_batch;
+        let spec = self.backend.spec();
+        let rows = spec.eval_batch;
         let mut f1s = Vec::with_capacity(examples.len());
         for chunk in examples.chunks(rows) {
             let instances: Vec<Instance> =
                 chunk.iter().map(|ex| ex.train_instance()).collect();
-            let seq = crate::data::batch::bucket_for_instances(&m.seq_buckets, &instances)?;
+            let seq = crate::data::batch::bucket_for_instances(&spec.seq_buckets, &instances)?;
             let batch = Batch::from_instances(&instances, rows, seq)?;
-            let exe = self.reg.get(self.rt, self.predict, seq)?;
-            let tok = self.rt.mat_i32(&batch.tokens, rows, seq)?;
-            let mut args: Vec<&xla::PjRtBuffer> = units.to_vec();
-            args.push(&tok);
-            let out = run1(&exe, &args)?;
-            let preds = self.rt.read_vec_i32(&out)?;
+            let prepared = self.backend.prepare_batch(&batch)?;
+            let preds = self.backend.predict(self.peft, units, &prepared)?;
             ensure!(preds.len() == rows * seq);
             for (r, ex) in chunk.iter().enumerate() {
                 let p = ex.prompt.len();
@@ -169,7 +142,7 @@ impl<'r> Evaluator<'r> {
     pub fn evaluate(
         &self,
         kind: TaskKind,
-        units: &[&xla::PjRtBuffer],
+        units: &[&B::Buffer],
         examples: &[Example],
     ) -> Result<EvalMetric> {
         match kind {
@@ -251,5 +224,44 @@ mod tests {
         assert_eq!(token_f1(&[1, 2, 3], &[3, 2, 1]), 1.0);
     }
 
-    // Runtime-backed Evaluator tests live in rust/tests/integration.rs.
+    #[test]
+    fn evaluator_scores_all_task_kinds_natively() {
+        // full scoring stack over the native backend — no artifacts needed
+        use crate::runtime::{Backend, NativeBackend};
+        use crate::tasks::{eval_set, make_task};
+        let b = NativeBackend::preset("opt-nano").unwrap();
+        let host = b.initial_params("").unwrap().0;
+        let bufs: Vec<Vec<f32>> = host;
+        let units: Vec<&Vec<f32>> = bufs.iter().collect();
+        let ev = Evaluator::new(&b);
+        for task_name in ["sst2", "copa", "squad"] {
+            let task = make_task(task_name).unwrap();
+            let examples = eval_set(task.as_ref(), 11, 12, 10);
+            let metric = ev.evaluate(task.kind(), &units, &examples).unwrap();
+            assert!(
+                (0.0..=1.0).contains(&metric.value),
+                "{task_name}: {}",
+                metric.value
+            );
+            assert_eq!(metric.n_examples, 12);
+        }
+    }
+
+    #[test]
+    fn untrained_model_scores_near_chance_natively() {
+        use crate::runtime::{Backend, NativeBackend};
+        use crate::tasks::{eval_set, make_task};
+        let b = NativeBackend::preset("opt-nano").unwrap();
+        let bufs = b.initial_params("").unwrap().0;
+        let units: Vec<&Vec<f32>> = bufs.iter().collect();
+        let ev = Evaluator::new(&b);
+        let task = make_task("sst2").unwrap();
+        let examples = eval_set(task.as_ref(), 123, 60, 10);
+        let metric = ev.option_accuracy(&units, &examples).unwrap();
+        assert!(
+            (0.25..=0.75).contains(&metric.value),
+            "untrained sst2 acc {} should be near 0.5",
+            metric.value
+        );
+    }
 }

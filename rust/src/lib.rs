@@ -4,17 +4,51 @@
 //! *"Simultaneous Computation and Memory Efficient Zeroth-Order Optimizer for
 //! Fine-Tuning Large Language Models"* (Wang et al., 2024).
 //!
-//! Layering (see DESIGN.md):
-//! - **L3 (this crate)**: the coordinator — layer selection ([`coordinator::selector`]),
-//!   the SPSA/ZO-SGD engine ([`coordinator::spsa`]), the FO substrate
-//!   ([`coordinator::fo`]), the trainer ([`coordinator::trainer`]), evaluation
-//!   ([`eval`]) and the bench harness ([`bench`]).
-//! - **Runtime**: [`runtime`] wraps the PJRT CPU client; AOT HLO-text artifacts
-//!   from `python/compile/aot.py` are compiled once and executed many times.
+//! ## Layering
+//!
+//! ```text
+//!   L3  coordinator (this crate): layer selection, SPSA/ZO-SGD engine,
+//!       FO substrate, trainer, eval, bench harness
+//!        |
+//!        |  generic over runtime::backend::Backend
+//!        v
+//!   +--------------------------+   +----------------------------------+
+//!   | NativeBackend            |   | PjrtBackend   (feature "pjrt")   |
+//!   |  pure Rust, zero deps    |   |  PJRT CPU client                 |
+//!   |  philox z-regeneration   |   |  AOT HLO artifacts from          |
+//!   |  reference transformer   |   |  python/compile/aot.py (L2/L1)   |
+//!   +--------------------------+   +----------------------------------+
+//! ```
+//!
+//! - **L3 (this crate)**: the coordinator — layer selection
+//!   ([`coordinator::selector`]), the SPSA/ZO engine ([`coordinator::spsa`]),
+//!   the FO substrate ([`coordinator::fo`]), the trainer
+//!   ([`coordinator::trainer`]), evaluation ([`eval`]) and the bench harness
+//!   ([`bench`]) — all generic over the [`runtime::Backend`] trait.
+//! - **Runtime**: [`runtime::native`] is a pure-Rust CPU backend (Philox
+//!   Gaussian regeneration bit-compatible with the Pallas kernel, native
+//!   (masked) zo_axpy, a reference transformer forward). [`runtime::pjrt`]
+//!   (feature `pjrt`) executes the AOT HLO artifacts instead.
 //! - **L2/L1** live in `python/compile/` and never run on the request path.
 //!
-//! The crate is `anyhow + xla` only; everything else (JSON, RNG, stats,
-//! CLI parsing, table rendering) is implemented in-repo for offline builds.
+//! ## Selecting a backend
+//!
+//! Config key `backend=auto|native|pjrt`; the `LEZO_BACKEND` env var
+//! steers the `auto` default (an explicit config setting always wins).
+//! `auto` uses PJRT when `<artifacts_root>/<model>/manifest.json` exists in
+//! a pjrt-enabled build, else the native backend with the `<model>` preset.
+//!
+//! ## Testing
+//!
+//! `cargo test -q` is hermetic: every algorithm invariant (perturb/flip/
+//! restore identity, seed reproducibility, selector coverage, end-to-end
+//! convergence) runs on the native backend with zero artifacts. Tests that
+//! exercise the PJRT runtime are compiled only with `--features pjrt` and
+//! skip (visibly, via [`require_artifacts!`]) unless AOT artifacts exist.
+//!
+//! The crate is `anyhow + xla` only — both vendored under `rust/vendor/`
+//! for offline builds; everything else (JSON, RNG, stats, CLI parsing,
+//! table rendering) is implemented in-repo.
 
 pub mod bench;
 pub mod config;
@@ -28,3 +62,29 @@ pub mod runtime;
 pub mod stats;
 pub mod tasks;
 pub mod util;
+
+/// Skip (with a visible note) a test that needs AOT artifacts.
+///
+/// Replaces the ad-hoc `if !have() { return }` early-outs: every
+/// artifact-dependent test calls this first, so `cargo test -q` passes
+/// hermetically and skipped tests announce themselves on stderr.
+/// Default model is `opt-micro`; pass a model name to require another set.
+#[macro_export]
+macro_rules! require_artifacts {
+    ($model:expr) => {
+        if !$crate::runtime::backend::artifacts_available(
+            &$crate::runtime::backend::default_artifact_dir($model),
+        ) {
+            eprintln!(
+                "SKIPPED {}: requires AOT artifacts for '{}' (run `make artifacts` in python/, \
+                 or point LEZO_ARTIFACTS at an artifact root)",
+                module_path!(),
+                $model
+            );
+            return;
+        }
+    };
+    () => {
+        $crate::require_artifacts!("opt-micro")
+    };
+}

@@ -13,7 +13,7 @@
 
 use anyhow::{bail, Context, Result};
 use lezo::config::RunConfig;
-use lezo::coordinator::{trainer, Trainer};
+use lezo::coordinator::Trainer;
 use lezo::bench;
 
 fn usage() -> ! {
@@ -23,8 +23,9 @@ fn usage() -> ! {
          lezo pretrain model=<size> [steps=N] [lr=X] [seed=S]\n  \
          lezo bench   <id|all> [key=value ...]    ids: {}\n  \
          lezo info    [model=<size>]\n  lezo render  task=<name> [n=K] [seed=S]\n\n\
-         Common keys: model task method peft drop_layers lr mu steps eval_every\n\
-         eval_examples train_examples seed icl_shots mean_len checkpoint\n\
+         Common keys: model backend task method peft drop_layers lr mu steps\n\
+         eval_every eval_examples train_examples seed icl_shots mean_len checkpoint\n\
+         (backend: auto|native|pjrt — native needs no artifacts)\n\
          Flags: -q quiet, -v verbose",
         bench::ALL_BENCHES.join(" ")
     );
@@ -62,6 +63,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let report = Trainer::new(cfg).run()?;
     println!("task           : {}", report.task);
     println!("method         : {}", report.method);
+    println!("backend        : {}", report.backend);
     println!("final {:>3}      : {:.1}%", report.metric_kind, 100.0 * report.final_metric);
     println!("best  {:>3}      : {:.1}%", report.metric_kind, 100.0 * report.best_metric);
     println!("train time     : {:.1}s", report.train_secs);
@@ -82,6 +84,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
 }
 
 fn cmd_pretrain(args: &[String]) -> Result<()> {
+    use lezo::coordinator::trainer;
     let (overrides, _) = split_flags(args);
     let mut model = "opt-micro".to_string();
     let mut root = "artifacts".to_string();
@@ -118,25 +121,40 @@ fn cmd_info(args: &[String]) -> Result<()> {
     let (overrides, _) = split_flags(args);
     let mut cfg = RunConfig::default();
     cfg.apply_overrides(&overrides)?;
-    let m = lezo::model::Manifest::load(std::path::Path::new(&cfg.artifact_dir()))?;
-    println!("model       : {}", m.name);
-    println!("params      : {} ({} units)", m.param_count, m.n_units());
-    println!("dims        : d_model={} layers={} heads={} vocab={}", m.d_model, m.n_layers, m.n_heads, m.vocab);
-    println!("seq buckets : {:?} (max {})", m.seq_buckets, m.max_seq);
-    println!("batch       : train={} eval={}", m.train_batch, m.eval_batch);
-    println!("pallas fwd  : {}", m.use_pallas_forward);
+    let dir = std::path::PathBuf::from(cfg.artifact_dir());
+    // one shared summary for both sources: manifest when exported, preset
+    // otherwise (same rule as the trainer and bench harness)
+    let (s, manifest) = lezo::runtime::backend::resolve_model(&cfg.model, &dir)?;
+    let origin = if manifest.is_some() { "AOT artifacts" } else { "native preset; no AOT artifacts" };
+    println!("model       : {} ({origin})", s.name);
+    println!("params      : {} ({} units)", s.param_count(), s.n_units());
+    println!(
+        "dims        : d_model={} layers={} heads={} vocab={}",
+        s.d_model, s.n_layers, s.n_heads, s.vocab
+    );
+    println!("seq buckets : {:?} (max {})", s.seq_buckets, s.max_seq);
+    println!("batch       : train={} eval={}", s.train_batch, s.eval_batch);
     println!("units:");
-    for (name, len) in m.unit_names.iter().zip(&m.unit_lens) {
+    for (name, len) in s.unit_names().iter().zip(s.unit_lens()) {
         println!("  {name:<12} {len:>10}");
     }
-    if let Some(l) = m.lora_unit_len {
-        println!("lora unit   : {l}");
+    match &manifest {
+        Some(m) => {
+            println!("pallas fwd  : {}", m.use_pallas_forward);
+            if let Some(l) = m.lora_unit_len {
+                println!("lora unit   : {l}");
+            }
+            if let Some(l) = m.prefix_unit_len {
+                println!("prefix unit : {l}");
+            }
+            let pretrained = m.dir.join("pretrained.ckpt");
+            println!(
+                "pretrained  : {}",
+                if pretrained.exists() { "yes" } else { "no (runs start from params_init.bin)" }
+            );
+        }
+        None => println!("backend     : native (run `make artifacts` in python/ for pjrt)"),
     }
-    if let Some(l) = m.prefix_unit_len {
-        println!("prefix unit : {l}");
-    }
-    let pretrained = m.dir.join("pretrained.ckpt");
-    println!("pretrained  : {}", if pretrained.exists() { "yes" } else { "no (runs start from params_init.bin)" });
     Ok(())
 }
 

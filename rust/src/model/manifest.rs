@@ -160,34 +160,29 @@ impl Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::backend::default_artifact_dir;
 
     fn art_dir() -> PathBuf {
-        let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Path::new(&root).join("opt-micro")
-    }
-
-    fn have_artifacts() -> bool {
-        art_dir().join("manifest.json").exists()
+        default_artifact_dir("opt-micro")
     }
 
     #[test]
     fn loads_real_manifest() {
-        if !have_artifacts() {
-            eprintln!("skipping: no artifacts");
-            return;
-        }
+        crate::require_artifacts!();
         let m = Manifest::load(&art_dir()).unwrap();
         assert_eq!(m.name, "opt-micro");
         assert_eq!(m.n_units(), m.n_layers + 2);
         assert_eq!(m.block_unit_indices().len(), m.n_layers);
         assert_eq!(m.unit_lens.iter().sum::<usize>(), m.param_count);
+        // manifest-derived spec agrees with the in-crate preset
+        let spec = crate::model::ModelSpec::from_manifest(&m);
+        assert_eq!(spec, crate::model::ModelSpec::preset("opt-micro").unwrap());
+        assert_eq!(spec.unit_lens(), m.unit_lens, "spec layout must match the exporter");
     }
 
     #[test]
     fn bucket_selection() {
-        if !have_artifacts() {
-            return;
-        }
+        crate::require_artifacts!();
         let m = Manifest::load(&art_dir()).unwrap();
         assert_eq!(m.bucket_for(1).unwrap(), 16);
         assert_eq!(m.bucket_for(16).unwrap(), 16);
@@ -198,9 +193,7 @@ mod tests {
 
     #[test]
     fn init_params_match_lens() {
-        if !have_artifacts() {
-            return;
-        }
+        crate::require_artifacts!();
         let m = Manifest::load(&art_dir()).unwrap();
         let units = m.read_init_params().unwrap();
         assert_eq!(units.len(), m.n_units());

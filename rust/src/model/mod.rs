@@ -1,9 +1,13 @@
-//! Model state: the manifest contract, the device-resident parameter store,
-//! and checkpoint I/O.
+//! Model state: the architecture spec, the manifest contract, checkpoint
+//! I/O, and (under the `pjrt` feature) the device-resident parameter store.
 
 pub mod checkpoint;
 pub mod manifest;
+pub mod spec;
+#[cfg(feature = "pjrt")]
 pub mod store;
 
 pub use manifest::Manifest;
+pub use spec::ModelSpec;
+#[cfg(feature = "pjrt")]
 pub use store::ParamStore;

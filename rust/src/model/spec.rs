@@ -1,0 +1,277 @@
+//! ModelSpec: the architecture contract, independent of any artifact dir.
+//!
+//! Mirrors `python/compile/configs.py` (size presets) and the flat unit
+//! layout of `python/compile/model.py`:
+//!
+//! ```text
+//!   unit 0:            embedding  = [tok_emb (V,D) | pos_emb (S,D)]
+//!   units 1..n_layers: block      = [ln1_g, ln1_b, Wq, bq, Wk, bk, Wv, bv,
+//!                                    Wo, bo, ln2_g, ln2_b, W1, b1, W2, b2]
+//!   unit n_layers+1:   final LN   = [lnf_g, lnf_b]
+//! ```
+//!
+//! The PJRT backend derives its spec from the artifact manifest; the native
+//! backend builds it from a preset — both feed the same backend-generic
+//! trainer, so shape logic lives here exactly once.
+
+use crate::rng::{derive, purpose, Rng};
+use anyhow::{bail, ensure, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub seq_buckets: Vec<usize>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl ModelSpec {
+    /// Size presets, kept in sync with `python/compile/configs.py`.
+    /// `opt-nano` is a rust-side extra: small enough for debug-mode tests.
+    pub fn preset(name: &str) -> Result<ModelSpec> {
+        let (vocab, d_model, n_layers, n_heads, train_batch, eval_batch) = match name {
+            "opt-nano" => (512, 32, 2, 2, 4, 8),
+            "opt-micro" => (512, 64, 4, 4, 8, 16),
+            "opt-tiny" => (2048, 128, 6, 8, 8, 16),
+            "opt-small" => (4096, 256, 8, 8, 8, 16),
+            "opt-base" => (16384, 768, 12, 12, 4, 8),
+            _ => bail!(
+                "unknown model preset '{name}' (opt-nano|opt-micro|opt-tiny|opt-small|opt-base)"
+            ),
+        };
+        let seq_buckets =
+            if name == "opt-base" { vec![32, 64] } else { vec![16, 32, 64] };
+        let spec = ModelSpec {
+            name: name.to_string(),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            max_seq: 64,
+            seq_buckets,
+            train_batch,
+            eval_batch,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Derive the spec from a loaded artifact manifest (PJRT path).
+    pub fn from_manifest(m: &crate::model::Manifest) -> ModelSpec {
+        ModelSpec {
+            name: m.name.clone(),
+            vocab: m.vocab,
+            d_model: m.d_model,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            max_seq: m.max_seq,
+            seq_buckets: m.seq_buckets.clone(),
+            train_batch: m.train_batch,
+            eval_batch: m.eval_batch,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.vocab >= 512, "vocab must be >= 512 (vocab layout contract)");
+        ensure!(self.n_heads > 0 && self.d_model % self.n_heads == 0, "heads must divide d_model");
+        ensure!(self.n_layers > 0, "need at least one block");
+        ensure!(!self.seq_buckets.is_empty(), "need at least one sequence bucket");
+        ensure!(
+            self.seq_buckets.iter().all(|&b| b <= self.max_seq),
+            "seq bucket exceeds max_seq"
+        );
+        Ok(())
+    }
+
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.n_layers + 2
+    }
+
+    /// Flat length of the embedding unit: tok_emb (V,D) | pos_emb (S,D).
+    pub fn embed_len(&self) -> usize {
+        (self.vocab + self.max_seq) * self.d_model
+    }
+
+    /// Flat length of one transformer-block unit.
+    pub fn block_len(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ff();
+        // 2 LN (g+b), 4 attn mats + biases, 2 MLP mats + biases
+        4 * d * d + 2 * d * f + f + 9 * d
+    }
+
+    /// Flat length of the final-LN unit.
+    pub fn final_len(&self) -> usize {
+        2 * self.d_model
+    }
+
+    pub fn unit_lens(&self) -> Vec<usize> {
+        let mut lens = Vec::with_capacity(self.n_units());
+        lens.push(self.embed_len());
+        lens.extend(std::iter::repeat(self.block_len()).take(self.n_layers));
+        lens.push(self.final_len());
+        lens
+    }
+
+    pub fn unit_names(&self) -> Vec<String> {
+        let mut names = Vec::with_capacity(self.n_units());
+        names.push("embed".to_string());
+        names.extend((0..self.n_layers).map(|i| format!("block_{i}")));
+        names.push("final_ln".to_string());
+        names
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.unit_lens().iter().sum()
+    }
+
+    /// Indices of transformer-block units (the sparsifiable set under the
+    /// paper's policy; unit 0 is the embedding, the last unit the final LN).
+    pub fn block_unit_indices(&self) -> Vec<usize> {
+        (1..=self.n_layers).collect()
+    }
+
+    /// Smallest bucket that fits `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Result<usize> {
+        self.seq_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= len)
+            .min()
+            .ok_or_else(|| anyhow::anyhow!("sequence length {len} exceeds largest bucket"))
+    }
+
+    /// GPT-2/OPT-style init, mirroring `model.py::init_units`: N(0, 0.02)
+    /// weights, zero biases, unit gammas, residual-out projections (wo, w2)
+    /// scaled by 1/sqrt(2*n_layers). Deterministic per (spec, seed); drawn
+    /// from the coordinator RNG, so native-backend runs need no artifacts.
+    pub fn init_units(&self, seed: u64) -> Vec<Vec<f32>> {
+        let d = self.d_model;
+        let f = self.d_ff();
+        let resid_scale = 1.0 / (2.0 * self.n_layers as f64).sqrt();
+        let mut rng = Rng::new(derive(seed, purpose::INIT, 0x11A7));
+        let mut gauss = |n: usize, scale: f64, out: &mut Vec<f32>| {
+            out.extend((0..n).map(|_| (rng.gaussian() * 0.02 * scale) as f32));
+        };
+
+        let mut units = Vec::with_capacity(self.n_units());
+
+        // embedding: tok_emb then pos_emb, both N(0, 0.02)
+        let mut emb = Vec::with_capacity(self.embed_len());
+        gauss(self.embed_len(), 1.0, &mut emb);
+        units.push(emb);
+
+        for _ in 0..self.n_layers {
+            let mut u = Vec::with_capacity(self.block_len());
+            u.extend(std::iter::repeat(1.0f32).take(d)); // ln1_g
+            u.extend(std::iter::repeat(0.0f32).take(d)); // ln1_b
+            gauss(d * d, 1.0, &mut u); // wq
+            u.extend(std::iter::repeat(0.0f32).take(d)); // bq
+            gauss(d * d, 1.0, &mut u); // wk
+            u.extend(std::iter::repeat(0.0f32).take(d)); // bk
+            gauss(d * d, 1.0, &mut u); // wv
+            u.extend(std::iter::repeat(0.0f32).take(d)); // bv
+            gauss(d * d, resid_scale, &mut u); // wo
+            u.extend(std::iter::repeat(0.0f32).take(d)); // bo
+            u.extend(std::iter::repeat(1.0f32).take(d)); // ln2_g
+            u.extend(std::iter::repeat(0.0f32).take(d)); // ln2_b
+            gauss(d * f, 1.0, &mut u); // w1
+            u.extend(std::iter::repeat(0.0f32).take(f)); // b1
+            gauss(f * d, resid_scale, &mut u); // w2
+            u.extend(std::iter::repeat(0.0f32).take(d)); // b2
+            debug_assert_eq!(u.len(), self.block_len());
+            units.push(u);
+        }
+
+        let mut fin = Vec::with_capacity(self.final_len());
+        fin.extend(std::iter::repeat(1.0f32).take(d)); // lnf_g
+        fin.extend(std::iter::repeat(0.0f32).take(d)); // lnf_b
+        units.push(fin);
+        units
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist_and_validate() {
+        for name in ["opt-nano", "opt-micro", "opt-tiny", "opt-small", "opt-base"] {
+            let s = ModelSpec::preset(name).unwrap();
+            assert_eq!(s.name, name);
+            assert_eq!(s.n_units(), s.n_layers + 2);
+            assert_eq!(s.unit_lens().len(), s.n_units());
+            assert_eq!(s.unit_names().len(), s.n_units());
+        }
+        assert!(ModelSpec::preset("opt-giga").is_err());
+    }
+
+    #[test]
+    fn param_count_matches_configs_py_formula() {
+        // configs.py: block = 4dd + 4d + 2df + f + d + 4d; total =
+        // (V + S) * d + n_layers * block + 2d
+        for name in ["opt-micro", "opt-tiny", "opt-small", "opt-base"] {
+            let s = ModelSpec::preset(name).unwrap();
+            let (d, f) = (s.d_model, s.d_ff());
+            let block = 4 * d * d + 4 * d + 2 * d * f + f + d + 4 * d;
+            let want = (s.vocab + s.max_seq) * d + s.n_layers * block + 2 * d;
+            assert_eq!(s.param_count(), want, "{name}");
+        }
+    }
+
+    #[test]
+    fn micro_matches_manifest_scale() {
+        // opt-micro dims pinned to configs.py
+        let s = ModelSpec::preset("opt-micro").unwrap();
+        assert_eq!((s.vocab, s.d_model, s.n_layers, s.n_heads), (512, 64, 4, 4));
+        assert_eq!(s.seq_buckets, vec![16, 32, 64]);
+        assert_eq!(s.bucket_for(17).unwrap(), 32);
+        assert!(s.bucket_for(65).is_err());
+    }
+
+    #[test]
+    fn init_units_layout_and_statistics() {
+        let s = ModelSpec::preset("opt-nano").unwrap();
+        let units = s.init_units(0);
+        assert_eq!(units.len(), s.n_units());
+        for (u, len) in units.iter().zip(s.unit_lens()) {
+            assert_eq!(u.len(), len);
+        }
+        // ln gammas are exactly 1, biases exactly 0
+        let d = s.d_model;
+        let block = &units[1];
+        assert!(block[..d].iter().all(|&x| x == 1.0), "ln1_g");
+        assert!(block[d..2 * d].iter().all(|&x| x == 0.0), "ln1_b");
+        // final unit: gammas then betas
+        let fin = units.last().unwrap();
+        assert!(fin[..d].iter().all(|&x| x == 1.0));
+        assert!(fin[d..].iter().all(|&x| x == 0.0));
+        // embedding is N(0, 0.02): sane statistics
+        let emb = &units[0];
+        let mean = emb.iter().map(|&x| x as f64).sum::<f64>() / emb.len() as f64;
+        let var = emb.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / emb.len() as f64;
+        assert!(mean.abs() < 2e-3, "mean={mean}");
+        assert!((var.sqrt() - 0.02).abs() < 2e-3, "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let s = ModelSpec::preset("opt-nano").unwrap();
+        assert_eq!(s.init_units(1), s.init_units(1));
+        assert_ne!(s.init_units(1)[0], s.init_units(2)[0]);
+    }
+}

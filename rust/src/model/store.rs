@@ -88,23 +88,16 @@ impl ParamStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::backend::default_artifact_dir;
     use std::path::PathBuf;
 
     fn art() -> PathBuf {
-        let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        PathBuf::from(root).join("opt-micro")
-    }
-
-    fn have() -> bool {
-        art().join("manifest.json").exists()
+        default_artifact_dir("opt-micro")
     }
 
     #[test]
     fn init_round_trip() {
-        if !have() {
-            eprintln!("skipping: no artifacts");
-            return;
-        }
+        crate::require_artifacts!();
         let rt = Runtime::cpu().unwrap();
         let m = Manifest::load(&art()).unwrap();
         let store = ParamStore::load_init(&rt, &m).unwrap();
@@ -117,9 +110,7 @@ mod tests {
 
     #[test]
     fn replace_unit_changes_only_that_unit() {
-        if !have() {
-            return;
-        }
+        crate::require_artifacts!();
         let rt = Runtime::cpu().unwrap();
         let m = Manifest::load(&art()).unwrap();
         let mut store = ParamStore::load_init(&rt, &m).unwrap();
@@ -139,9 +130,7 @@ mod tests {
 
     #[test]
     fn wrong_host_shape_rejected() {
-        if !have() {
-            return;
-        }
+        crate::require_artifacts!();
         let rt = Runtime::cpu().unwrap();
         let m = Manifest::load(&art()).unwrap();
         let mut host = m.read_init_params().unwrap();

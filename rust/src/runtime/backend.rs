@@ -1,0 +1,220 @@
+//! The pluggable `Backend` abstraction: tensor storage, host transfer, and
+//! the executable families (`ZoAxpy`, `ZoAxpyMasked`, `ForwardLoss`,
+//! `ExampleLosses`, `Predict`, `ForwardBackward`) behind one trait.
+//!
+//! Two implementations ship in-tree:
+//!
+//! - [`crate::runtime::native::NativeBackend`] — pure Rust: Philox-seeded
+//!   Gaussian regeneration ([`crate::runtime::philox`]), native (masked)
+//!   zo_axpy, and a reference transformer forward. Zero external artifacts;
+//!   this is what the hermetic test suite runs on.
+//! - `PjrtBackend` (feature `pjrt`) — the PJRT runtime executing AOT HLO
+//!   artifacts exported by `python/compile/aot.py`.
+//!
+//! The coordinator (`SpsaEngine`, `Trainer`, `Evaluator`, `FoEngine`) is
+//! generic over this trait, so every algorithm invariant can be exercised
+//! end-to-end on any machine, and future GPU / sharded runtimes slot in as
+//! further implementations.
+
+use crate::data::batch::Batch;
+use crate::model::spec::ModelSpec;
+use crate::peft::PeftMode;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+
+/// One tensor/executable substrate. `Buffer` is the device-resident flat
+/// f32 tensor handle (a plain `Vec<f32>` natively, a `PjRtBuffer` under
+/// PJRT); `PreparedBatch` is an uploaded (tokens, targets, mask) triple so
+/// the two forward probes of a ZO step share one upload.
+pub trait Backend {
+    type Buffer;
+    type PreparedBatch;
+
+    fn name(&self) -> &'static str;
+
+    /// The architecture this backend instance serves.
+    fn spec(&self) -> &ModelSpec;
+
+    // ---- host <-> device ---------------------------------------------------
+
+    fn upload(&self, data: &[f32]) -> Result<Self::Buffer>;
+    fn download(&self, buf: &Self::Buffer) -> Result<Vec<f32>>;
+
+    // ---- ZO kernels --------------------------------------------------------
+
+    /// `out[i] = unit[i] + coeff * z(seed, i)` over one flat unit of `len`
+    /// elements, with `z` regenerated from the Philox stream (never stored).
+    fn zo_axpy(&self, unit: &Self::Buffer, len: usize, seed: i32, coeff: f32)
+        -> Result<Self::Buffer>;
+
+    /// Sparse-MeZO variant: `out[i] = unit[i] + coeff * z(seed, i) *
+    /// [|pref[i]| <= tau]`. `pref` is the unperturbed step-start snapshot so
+    /// the mask is stable across all four phases.
+    fn zo_axpy_masked(
+        &self,
+        unit: &Self::Buffer,
+        pref: &Self::Buffer,
+        tau: f32,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<Self::Buffer>;
+
+    // ---- model executables -------------------------------------------------
+
+    fn prepare_batch(&self, batch: &Batch) -> Result<Self::PreparedBatch>;
+
+    /// Mean masked LM loss (the ZO objective). `units` is the full argument
+    /// prefix: model units, then adapter units under PEFT.
+    fn forward_loss(
+        &self,
+        peft: PeftMode,
+        units: &[&Self::Buffer],
+        batch: &Self::PreparedBatch,
+    ) -> Result<f32>;
+
+    /// Per-example mean masked loss (option scoring), one entry per batch row.
+    fn example_losses(
+        &self,
+        peft: PeftMode,
+        units: &[&Self::Buffer],
+        batch: &Self::PreparedBatch,
+    ) -> Result<Vec<f32>>;
+
+    /// Greedy next-token prediction at every position, row-major `[rows*seq]`.
+    fn predict(
+        &self,
+        peft: PeftMode,
+        units: &[&Self::Buffer],
+        batch: &Self::PreparedBatch,
+    ) -> Result<Vec<i32>>;
+
+    /// First-order substrate: (loss, per-unit grads) for the FT baseline and
+    /// pretraining. Backends without autodiff leave the default.
+    fn forward_backward(
+        &self,
+        host_units: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let _ = (host_units, batch);
+        anyhow::bail!("the {} backend does not support first-order training", self.name())
+    }
+
+    // ---- run bootstrap -----------------------------------------------------
+
+    /// Initial parameters for a run plus a human-readable source tag.
+    /// `explicit_checkpoint` (config key `checkpoint`) overrides defaults.
+    fn initial_params(&self, explicit_checkpoint: &str) -> Result<(Vec<Vec<f32>>, String)>;
+
+    fn supports_peft(&self, mode: PeftMode) -> bool {
+        mode == PeftMode::Full
+    }
+
+    /// Flat length of one per-block adapter unit for `mode`. Backends with
+    /// an artifact contract must cross-check this against their manifest so
+    /// exporter drift fails loudly up front, not as an opaque shape error
+    /// inside an executable.
+    fn peft_unit_len(&self, mode: PeftMode) -> Result<usize> {
+        Ok(match mode {
+            PeftMode::Full => 0,
+            PeftMode::Lora => crate::peft::lora_unit_len(self.spec().d_model),
+            PeftMode::Prefix => crate::peft::prefix_unit_len(self.spec().d_model),
+        })
+    }
+
+    fn supports_fo(&self) -> bool {
+        false
+    }
+
+    /// Pre-warm whatever a ZO run needs (e.g. compile executables) so step
+    /// timing excludes one-time setup.
+    fn warm_zo(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Which backend a run asks for (config key `backend`, env `LEZO_BACKEND`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT when artifacts exist (and the build has the `pjrt` feature),
+    /// native otherwise.
+    #[default]
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl FromStr for BackendKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => BackendKind::Auto,
+            "native" => BackendKind::Native,
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            _ => anyhow::bail!("unknown backend '{s}' (auto|native|pjrt)"),
+        })
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        })
+    }
+}
+
+/// Does `dir` hold an AOT artifact set (manifest.json)?
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists()
+}
+
+/// Resolve the architecture for `(model, artifact dir)`: the manifest when
+/// `dir` holds one (returned alongside, so callers parse it exactly once),
+/// else the in-crate preset. This is the single definition of the fallback
+/// rule — trainer, bench harness, and CLI all route through it.
+pub fn resolve_model(
+    model: &str,
+    dir: &Path,
+) -> Result<(ModelSpec, Option<crate::model::Manifest>)> {
+    if artifacts_available(dir) {
+        let manifest = crate::model::Manifest::load(dir)?;
+        Ok((ModelSpec::from_manifest(&manifest), Some(manifest)))
+    } else {
+        Ok((ModelSpec::preset(model)?, None))
+    }
+}
+
+/// Conventional artifact directory for a model size: `$LEZO_ARTIFACTS`
+/// (default `artifacts`) joined with the size name. Tests and the
+/// `require_artifacts!` macro route through here.
+pub fn default_artifact_dir(model: &str) -> PathBuf {
+    let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    PathBuf::from(root).join(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse_display_round_trip() {
+        for s in ["auto", "native", "pjrt"] {
+            let k: BackendKind = s.parse().unwrap();
+            assert_eq!(k.to_string(), s);
+        }
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("gpu".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+    }
+
+    #[test]
+    fn artifact_dir_convention() {
+        let d = default_artifact_dir("opt-micro");
+        assert!(d.ends_with("opt-micro"));
+        assert!(!artifacts_available(Path::new("/nonexistent/nowhere")));
+    }
+}

@@ -1,0 +1,192 @@
+//! PJRT client plumbing: load AOT HLO-text artifacts, compile once, execute
+//! many (feature `pjrt`).
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto ->
+//! XlaComputation -> PjRtLoadedExecutable. All hot-path calls use
+//! `execute_b` over device-resident `PjRtBuffer`s; literals only appear at
+//! the host boundary (batch upload, scalar readback).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into an executable.
+    pub fn load_exe(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    // ---- host -> device uploads -------------------------------------------
+
+    pub fn scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    pub fn scalar_f32(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    pub fn vec_f32(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, &[data.len()], None)?)
+    }
+
+    pub fn mat_i32(&self, data: &[i32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+        debug_assert_eq!(data.len(), rows * cols);
+        Ok(self.client.buffer_from_host_buffer(data, &[rows, cols], None)?)
+    }
+
+    pub fn mat_f32(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+        debug_assert_eq!(data.len(), rows * cols);
+        Ok(self.client.buffer_from_host_buffer(data, &[rows, cols], None)?)
+    }
+
+    // ---- device -> host readback -------------------------------------------
+
+    pub fn read_scalar_f32(&self, buf: &xla::PjRtBuffer) -> Result<f32> {
+        Ok(buf.to_literal_sync()?.get_first_element::<f32>()?)
+    }
+
+    pub fn read_vec_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    pub fn read_vec_i32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<i32>> {
+        Ok(buf.to_literal_sync()?.to_vec::<i32>()?)
+    }
+
+    /// Read a tuple-rooted output (the forward_backward executable) into its
+    /// component literals.
+    pub fn read_tuple(&self, buf: &xla::PjRtBuffer) -> Result<Vec<xla::Literal>> {
+        Ok(buf.to_literal_sync()?.to_tuple()?)
+    }
+}
+
+/// Execute with a borrowed argument list (hot-path helper): takes the
+/// executable and `&[&PjRtBuffer]`, returns the first replica's outputs.
+pub fn run(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<Vec<xla::PjRtBuffer>> {
+    let mut out = exe.execute_b(args)?;
+    anyhow::ensure!(!out.is_empty(), "executable produced no replicas");
+    Ok(out.swap_remove(0))
+}
+
+/// Execute expecting exactly one output buffer.
+pub fn run1(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<xla::PjRtBuffer> {
+    let mut outs = run(exe, args)?;
+    anyhow::ensure!(outs.len() == 1, "expected 1 output, got {}", outs.len());
+    Ok(outs.swap_remove(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::default_artifact_dir;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        crate::require_artifacts!();
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn scalar_round_trip() {
+        crate::require_artifacts!();
+        let rt = Runtime::cpu().unwrap();
+        let b = rt.scalar_f32(3.25).unwrap();
+        assert_eq!(rt.read_scalar_f32(&b).unwrap(), 3.25);
+    }
+
+    #[test]
+    fn vec_round_trip() {
+        crate::require_artifacts!();
+        let rt = Runtime::cpu().unwrap();
+        let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        let b = rt.vec_f32(&data).unwrap();
+        assert_eq!(rt.read_vec_f32(&b).unwrap(), data);
+    }
+
+    #[test]
+    fn axpy_exe_runs_and_is_deterministic() {
+        crate::require_artifacts!();
+        let rt = Runtime::cpu().unwrap();
+        let m = crate::model::Manifest::load(&default_artifact_dir("opt-micro")).unwrap();
+        let n = m.axpy_lens[0];
+        let exe = rt.load_exe(&m.file_path(&format!("zo_axpy_{n}")).unwrap()).unwrap();
+        let p = rt.vec_f32(&vec![0.0; n]).unwrap();
+        let seed = rt.scalar_i32(42).unwrap();
+        let one = rt.scalar_f32(1.0).unwrap();
+        let za = rt.read_vec_f32(&run1(&exe, &[&p, &seed, &one]).unwrap()).unwrap();
+        let zb = rt.read_vec_f32(&run1(&exe, &[&p, &seed, &one]).unwrap()).unwrap();
+        assert_eq!(za, zb, "same seed must regenerate the same z");
+        // z is standard normal
+        let mean: f32 = za.iter().sum::<f32>() / n as f32;
+        let var: f32 = za.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.2, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.3, "var={var}");
+    }
+
+    #[test]
+    fn pallas_stream_matches_native_philox() {
+        // cross-backend contract: the AOT'd kernel's z stream must agree
+        // with the native Philox port to float tolerance
+        crate::require_artifacts!();
+        let rt = Runtime::cpu().unwrap();
+        let m = crate::model::Manifest::load(&default_artifact_dir("opt-micro")).unwrap();
+        let n = m.axpy_lens[0];
+        let exe = rt.load_exe(&m.file_path(&format!("zo_axpy_{n}")).unwrap()).unwrap();
+        let p = rt.vec_f32(&vec![0.0; n]).unwrap();
+        let seed = rt.scalar_i32(1234).unwrap();
+        let one = rt.scalar_f32(1.0).unwrap();
+        let z = rt.read_vec_f32(&run1(&exe, &[&p, &seed, &one]).unwrap()).unwrap();
+        for (i, &zi) in z.iter().take(4096).enumerate() {
+            let want = crate::runtime::philox::gauss_from_index(i as u32, 1234);
+            assert!((zi - want).abs() < 3e-5, "idx {i}: pallas {zi} vs native {want}");
+        }
+    }
+
+    #[test]
+    fn axpy_perturb_restore_identity() {
+        crate::require_artifacts!();
+        let rt = Runtime::cpu().unwrap();
+        let m = crate::model::Manifest::load(&default_artifact_dir("opt-micro")).unwrap();
+        let n = m.axpy_lens[0];
+        let exe = rt.load_exe(&m.file_path(&format!("zo_axpy_{n}")).unwrap()).unwrap();
+        let orig: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        let p0 = rt.vec_f32(&orig).unwrap();
+        let seed = rt.scalar_i32(7).unwrap();
+        let mu = 1e-3f32;
+        let p1 = run1(&exe, &[&p0, &seed, &rt.scalar_f32(mu).unwrap()]).unwrap();
+        let p2 = run1(&exe, &[&p1, &seed, &rt.scalar_f32(-2.0 * mu).unwrap()]).unwrap();
+        let p3 = run1(&exe, &[&p2, &seed, &rt.scalar_f32(mu).unwrap()]).unwrap();
+        let back = rt.read_vec_f32(&p3).unwrap();
+        for (a, b) in back.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -104,19 +104,16 @@ impl ExeRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::backend::default_artifact_dir;
     use std::path::PathBuf;
 
     fn art() -> PathBuf {
-        let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        PathBuf::from(root).join("opt-micro")
+        default_artifact_dir("opt-micro")
     }
 
     #[test]
     fn lazy_compile_and_cache() {
-        if !art().join("manifest.json").exists() {
-            eprintln!("skipping: no artifacts");
-            return;
-        }
+        crate::require_artifacts!();
         let rt = Runtime::cpu().unwrap();
         let reg = ExeRegistry::new(Manifest::load(&art()).unwrap());
         assert_eq!(reg.compiles(), 0);
@@ -130,9 +127,7 @@ mod tests {
 
     #[test]
     fn unknown_shape_is_error() {
-        if !art().join("manifest.json").exists() {
-            return;
-        }
+        crate::require_artifacts!();
         let rt = Runtime::cpu().unwrap();
         let reg = ExeRegistry::new(Manifest::load(&art()).unwrap());
         assert!(reg.get(&rt, Family::ZoAxpy, 123456789).is_err());

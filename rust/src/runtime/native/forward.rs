@@ -1,0 +1,420 @@
+//! Pure-Rust reference forward for the flat-unit transformer — the native
+//! twin of `python/compile/model.py`.
+//!
+//! Consumes one flat f32 vector per layer unit (the unit of LeZO sparsity)
+//! and un-flattens internally, exactly like the AOT'd model executables:
+//!
+//! ```text
+//!   unit 0:            embedding  = [tok_emb (V,D) | pos_emb (S,D)]
+//!   units 1..n_layers: block      = [ln1_g, ln1_b, Wq, bq, Wk, bk, Wv, bv,
+//!                                    Wo, bo, ln2_g, ln2_b, W1, b1, W2, b2]
+//!   unit n_layers+1:   final LN   = [lnf_g, lnf_b]
+//! ```
+//!
+//! Same math as the Pallas/jnp path: pre-LN blocks, causal softmax
+//! attention scaled by 1/sqrt(d_head), tanh-approximated GELU, LN eps 1e-5,
+//! LM head tied to tok_emb. Numerics are plain f32 with f64 reductions, so
+//! losses agree with the XLA path to float tolerance, not bit-for-bit —
+//! every *algorithmic* invariant (restore identity, seed reproducibility,
+//! MeZO == LeZO at drop 0) is exact on either backend.
+
+use crate::model::spec::ModelSpec;
+use anyhow::{ensure, Result};
+
+const LN_EPS: f32 = 1e-5;
+
+/// Named views into one flat block unit.
+struct BlockParams<'a> {
+    ln1_g: &'a [f32],
+    ln1_b: &'a [f32],
+    wq: &'a [f32],
+    bq: &'a [f32],
+    wk: &'a [f32],
+    bk: &'a [f32],
+    wv: &'a [f32],
+    bv: &'a [f32],
+    wo: &'a [f32],
+    bo: &'a [f32],
+    ln2_g: &'a [f32],
+    ln2_b: &'a [f32],
+    w1: &'a [f32],
+    b1: &'a [f32],
+    w2: &'a [f32],
+    b2: &'a [f32],
+}
+
+fn split_block<'a>(spec: &ModelSpec, mut p: &'a [f32]) -> BlockParams<'a> {
+    let d = spec.d_model;
+    let f = spec.d_ff();
+    let mut take = |n: usize| -> &'a [f32] {
+        let (head, rest) = p.split_at(n);
+        p = rest;
+        head
+    };
+    BlockParams {
+        ln1_g: take(d),
+        ln1_b: take(d),
+        wq: take(d * d),
+        bq: take(d),
+        wk: take(d * d),
+        bk: take(d),
+        wv: take(d * d),
+        bv: take(d),
+        wo: take(d * d),
+        bo: take(d),
+        ln2_g: take(d),
+        ln2_b: take(d),
+        w1: take(d * f),
+        b1: take(f),
+        w2: take(f * d),
+        b2: take(d),
+    }
+}
+
+/// Row-wise LayerNorm (eps matches kernels/layernorm.py).
+fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], n_rows: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n_rows * d];
+    for r in 0..n_rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var = row.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>()
+            / d as f64;
+        let inv = 1.0 / (var as f32 + LN_EPS).sqrt();
+        let o = &mut out[r * d..(r + 1) * d];
+        for j in 0..d {
+            o[j] = (row[j] - mean as f32) * inv * gamma[j] + beta[j];
+        }
+    }
+    out
+}
+
+/// `out[r, o] = b[o] + sum_i x[r, i] * w[i, o]` (w row-major (din, dout)).
+fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], n_rows: usize, din: usize, dout: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n_rows * dout];
+    for r in 0..n_rows {
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        orow.copy_from_slice(b);
+        let xrow = &x[r * din..(r + 1) * din];
+        for (i, &xi) in xrow.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * dout..(i + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xi * wv;
+            }
+        }
+    }
+    out
+}
+
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Causal multi-head attention + output projection, added into `h`.
+fn attention_into(
+    h: &mut [f32],
+    x: &[f32],
+    p: &BlockParams<'_>,
+    spec: &ModelSpec,
+    rows: usize,
+    seq: usize,
+) {
+    let d = spec.d_model;
+    let (nh, dh) = (spec.n_heads, spec.d_head());
+    let n = rows * seq;
+    let q = matmul_bias(x, p.wq, p.bq, n, d, d);
+    let k = matmul_bias(x, p.wk, p.bk, n, d, d);
+    let v = matmul_bias(x, p.wv, p.bv, n, d, d);
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let mut ctx = vec![0.0f32; n * d]; // concatenated head outputs
+    let mut scores = vec![0.0f32; seq];
+    for r in 0..rows {
+        for head in 0..nh {
+            let hoff = head * dh;
+            for s1 in 0..seq {
+                let qrow = &q[(r * seq + s1) * d + hoff..(r * seq + s1) * d + hoff + dh];
+                // causal scores over s2 <= s1
+                let mut max = f32::NEG_INFINITY;
+                for s2 in 0..=s1 {
+                    let krow = &k[(r * seq + s2) * d + hoff..(r * seq + s2) * d + hoff + dh];
+                    let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                    let s = dot * scale;
+                    scores[s2] = s;
+                    max = max.max(s);
+                }
+                let mut denom = 0.0f32;
+                for s2 in 0..=s1 {
+                    scores[s2] = (scores[s2] - max).exp();
+                    denom += scores[s2];
+                }
+                let orow = &mut ctx[(r * seq + s1) * d + hoff..(r * seq + s1) * d + hoff + dh];
+                for s2 in 0..=s1 {
+                    let w = scores[s2] / denom;
+                    let vrow = &v[(r * seq + s2) * d + hoff..(r * seq + s2) * d + hoff + dh];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+    }
+    let proj = matmul_bias(&ctx, p.wo, p.bo, n, d, d);
+    for (hv, pv) in h.iter_mut().zip(&proj) {
+        *hv += pv;
+    }
+}
+
+/// `tokens i32[rows, seq] -> logits f32[rows, seq, vocab]` (row-major).
+pub fn forward_logits(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+) -> Result<Vec<f32>> {
+    let d = spec.d_model;
+    let v = spec.vocab;
+    let n = rows * seq;
+    ensure!(units.len() == spec.n_units(), "expected {} units, got {}", spec.n_units(), units.len());
+    for (k, (u, len)) in units.iter().zip(spec.unit_lens()).enumerate() {
+        ensure!(u.len() == len, "unit {k}: expected {len} elements, got {}", u.len());
+    }
+    ensure!(tokens.len() == n, "tokens shape mismatch");
+    ensure!(seq <= spec.max_seq, "seq {seq} exceeds max_seq {}", spec.max_seq);
+    ensure!(
+        tokens.iter().all(|&t| t >= 0 && (t as usize) < v),
+        "token id out of vocab range"
+    );
+
+    let emb = units[0];
+    let tok_emb = &emb[..v * d];
+    let pos_emb = &emb[v * d..];
+
+    // embed
+    let mut h = vec![0.0f32; n * d];
+    for r in 0..rows {
+        for s in 0..seq {
+            let t = tokens[r * seq + s] as usize;
+            let hrow = &mut h[(r * seq + s) * d..(r * seq + s + 1) * d];
+            let te = &tok_emb[t * d..(t + 1) * d];
+            let pe = &pos_emb[s * d..(s + 1) * d];
+            for j in 0..d {
+                hrow[j] = te[j] + pe[j];
+            }
+        }
+    }
+
+    // blocks
+    for l in 0..spec.n_layers {
+        let p = split_block(spec, units[1 + l]);
+        let x = layernorm(&h, p.ln1_g, p.ln1_b, n, d);
+        attention_into(&mut h, &x, &p, spec, rows, seq);
+        let hm = layernorm(&h, p.ln2_g, p.ln2_b, n, d);
+        let mut a = matmul_bias(&hm, p.w1, p.b1, n, d, spec.d_ff());
+        for av in a.iter_mut() {
+            *av = gelu(*av);
+        }
+        let m = matmul_bias(&a, p.w2, p.b2, n, spec.d_ff(), d);
+        for (hv, mv) in h.iter_mut().zip(&m) {
+            *hv += mv;
+        }
+    }
+
+    // final LN + tied LM head
+    let fin = units[spec.n_units() - 1];
+    let hf = layernorm(&h, &fin[..d], &fin[d..], n, d);
+    let mut logits = vec![0.0f32; n * v];
+    for r in 0..n {
+        let hrow = &hf[r * d..(r + 1) * d];
+        let lrow = &mut logits[r * v..(r + 1) * v];
+        for (t, lv) in lrow.iter_mut().enumerate() {
+            let erow = &tok_emb[t * d..(t + 1) * d];
+            *lv = hrow.iter().zip(erow).map(|(a, b)| a * b).sum();
+        }
+    }
+    Ok(logits)
+}
+
+/// Per-position cross-entropy `f32[rows*seq]` (stable logsumexp).
+fn position_xent(logits: &[f32], targets: &[i32], n: usize, vocab: usize) -> Vec<f32> {
+    let mut xent = vec![0.0f32; n];
+    for r in 0..n {
+        let row = &logits[r * vocab..(r + 1) * vocab];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f64 = row.iter().map(|&l| ((l - max) as f64).exp()).sum();
+        let logz = max as f64 + sum.ln();
+        let gold = row[targets[r].clamp(0, vocab as i32 - 1) as usize] as f64;
+        xent[r] = (logz - gold) as f32;
+    }
+    xent
+}
+
+/// Mean LM loss over masked positions — the ZO objective (scalar).
+pub fn mean_loss(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &[f32],
+    rows: usize,
+    seq: usize,
+) -> Result<f32> {
+    let logits = forward_logits(spec, units, tokens, rows, seq)?;
+    let xent = position_xent(&logits, targets, rows * seq, spec.vocab);
+    let num: f64 = xent.iter().zip(mask).map(|(&x, &m)| x as f64 * m as f64).sum();
+    let den: f64 = mask.iter().map(|&m| m as f64).sum::<f64>().max(1.0);
+    Ok((num / den) as f32)
+}
+
+/// Per-example mean masked loss, `f32[rows]` — option scoring in eval.
+pub fn example_losses(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &[f32],
+    rows: usize,
+    seq: usize,
+) -> Result<Vec<f32>> {
+    let logits = forward_logits(spec, units, tokens, rows, seq)?;
+    let xent = position_xent(&logits, targets, rows * seq, spec.vocab);
+    let mut per = vec![0.0f32; rows];
+    for r in 0..rows {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for s in 0..seq {
+            num += xent[r * seq + s] as f64 * mask[r * seq + s] as f64;
+            den += mask[r * seq + s] as f64;
+        }
+        per[r] = (num / den.max(1.0)) as f32;
+    }
+    Ok(per)
+}
+
+/// Greedy next-token prediction at every position, `i32[rows*seq]`.
+pub fn predict(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+) -> Result<Vec<i32>> {
+    let logits = forward_logits(spec, units, tokens, rows, seq)?;
+    let v = spec.vocab;
+    let mut preds = vec![0i32; rows * seq];
+    for r in 0..rows * seq {
+        let row = &logits[r * v..(r + 1) * v];
+        let mut best = 0usize;
+        for t in 1..v {
+            if row[t] > row[best] {
+                best = t;
+            }
+        }
+        preds[r] = best as i32;
+    }
+    Ok(preds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec::preset("opt-nano").unwrap()
+    }
+
+    fn units_of(spec: &ModelSpec, host: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let _ = spec;
+        host.to_vec()
+    }
+
+    fn refs(host: &[Vec<f32>]) -> Vec<&[f32]> {
+        host.iter().map(|u| u.as_slice()).collect()
+    }
+
+    #[test]
+    fn logits_shape_and_finiteness() {
+        let s = spec();
+        let host = units_of(&s, &s.init_units(0));
+        let (rows, seq) = (2, 8);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| (i % 100) as i32).collect();
+        let logits = forward_logits(&s, &refs(&host), &tokens, rows, seq).unwrap();
+        assert_eq!(logits.len(), rows * seq * s.vocab);
+        assert!(logits.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn loss_near_uniform_at_init() {
+        // N(0, 0.02) init: logits are near-uniform, so masked xent must sit
+        // close to ln(vocab) — the same sanity the python tests assert.
+        let s = spec();
+        let host = s.init_units(0);
+        let (rows, seq) = (2, 8);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| 20 + (i % 90) as i32).collect();
+        let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % s.vocab as i32).collect();
+        let mask = vec![1.0f32; rows * seq];
+        let loss =
+            mean_loss(&s, &refs(&host), &tokens, &targets, &mask, rows, seq).unwrap();
+        let uniform = (s.vocab as f32).ln();
+        assert!((loss - uniform).abs() < 0.5, "loss {loss} vs ln(V) {uniform}");
+    }
+
+    #[test]
+    fn causality_future_tokens_do_not_change_past_logits() {
+        let s = spec();
+        let host = s.init_units(3);
+        let (rows, seq) = (1, 8);
+        let mut tokens: Vec<i32> = (0..seq as i32).map(|i| 30 + i).collect();
+        let a = forward_logits(&s, &refs(&host), &tokens, rows, seq).unwrap();
+        tokens[7] = 400; // change only the last token
+        let b = forward_logits(&s, &refs(&host), &tokens, rows, seq).unwrap();
+        // positions 0..7 must be bit-identical; position 7 must change
+        let v = s.vocab;
+        assert_eq!(&a[..7 * v], &b[..7 * v], "past positions leaked the future");
+        assert_ne!(&a[7 * v..], &b[7 * v..]);
+    }
+
+    #[test]
+    fn example_losses_match_mean_loss_for_uniform_mask() {
+        let s = spec();
+        let host = s.init_units(1);
+        let (rows, seq) = (3, 8);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| 20 + (i % 64) as i32).collect();
+        let targets: Vec<i32> = tokens.iter().map(|&t| (t + 3) % 512).collect();
+        let mask = vec![1.0f32; rows * seq];
+        let per = example_losses(&s, &refs(&host), &tokens, &targets, &mask, rows, seq).unwrap();
+        let mean = mean_loss(&s, &refs(&host), &tokens, &targets, &mask, rows, seq).unwrap();
+        let agg = per.iter().sum::<f32>() / rows as f32;
+        assert!((agg - mean).abs() < 1e-4, "{agg} vs {mean}");
+    }
+
+    #[test]
+    fn predict_is_argmax_of_logits() {
+        let s = spec();
+        let host = s.init_units(2);
+        let (rows, seq) = (1, 4);
+        let tokens = vec![10, 11, 12, 13];
+        let logits = forward_logits(&s, &refs(&host), &tokens, rows, seq).unwrap();
+        let preds = predict(&s, &refs(&host), &tokens, rows, seq).unwrap();
+        for r in 0..seq {
+            let row = &logits[r * s.vocab..(r + 1) * s.vocab];
+            let best = preds[r] as usize;
+            assert!(row.iter().all(|&l| l <= row[best]));
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_rejected() {
+        let s = spec();
+        let host = s.init_units(0);
+        let mut bad = host.clone();
+        bad[1].pop();
+        assert!(forward_logits(&s, &refs(&bad), &[1, 2], 1, 2).is_err());
+        assert!(forward_logits(&s, &refs(&host), &[1, 2, 3], 1, 2).is_err());
+        assert!(forward_logits(&s, &refs(&host), &[1, 600], 1, 2).is_err(), "oov token");
+    }
+}

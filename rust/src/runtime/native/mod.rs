@@ -1,0 +1,309 @@
+//! NativeBackend: the pure-Rust CPU implementation of [`Backend`].
+//!
+//! Buffers are host `Vec<f32>`; the ZO kernels regenerate the perturbation
+//! stream with the in-crate Philox port ([`crate::runtime::philox`],
+//! bit-compatible with the Pallas kernel's integer stream); the forward
+//! families run the reference transformer in [`forward`]. Everything is
+//! derived from a [`ModelSpec`] preset — no AOT artifacts, no PJRT plugin,
+//! no Python. This is the substrate the hermetic test suite and the
+//! no-artifacts bench path run on, and the reference semantics future
+//! GPU/sharded backends are checked against.
+
+pub mod forward;
+
+use crate::data::batch::Batch;
+use crate::model::spec::ModelSpec;
+use crate::peft::PeftMode;
+use crate::runtime::backend::Backend;
+use crate::runtime::philox::gauss_from_index;
+use anyhow::{ensure, Context, Result};
+
+/// Seed for the deterministic native initialization (runs start identical
+/// across machines; override with the `checkpoint` config key).
+pub const NATIVE_INIT_SEED: u64 = 0;
+
+pub struct NativeBackend {
+    spec: ModelSpec,
+    /// Optional adopted artifact manifest: runs then start from its
+    /// params_init.bin / pretrained.ckpt (same initial state as the PJRT
+    /// backend) instead of the synthetic native init — so results don't
+    /// silently diverge between build flavors.
+    manifest: Option<crate::model::Manifest>,
+}
+
+impl NativeBackend {
+    pub fn new(spec: ModelSpec) -> Result<NativeBackend> {
+        spec.validate()?;
+        Ok(NativeBackend { spec, manifest: None })
+    }
+
+    pub fn preset(name: &str) -> Result<NativeBackend> {
+        NativeBackend::new(ModelSpec::preset(name)?)
+    }
+
+    /// Adopt exported initial parameters via an already-loaded manifest
+    /// (see the `manifest` field). A manifest that does not match the
+    /// spec's unit layout is a hard error, not a silent fallback.
+    pub fn with_artifacts(mut self, manifest: crate::model::Manifest) -> Result<NativeBackend> {
+        ensure!(
+            manifest.unit_lens == self.spec.unit_lens(),
+            "artifacts in {} do not match the {} layout",
+            manifest.dir.display(),
+            self.spec.name
+        );
+        self.manifest = Some(manifest);
+        Ok(self)
+    }
+
+    fn unit_slices<'a>(&self, units: &[&'a Vec<f32>]) -> Result<Vec<&'a [f32]>> {
+        ensure!(
+            units.len() == self.spec.n_units(),
+            "native forward takes {} model units, got {} (PEFT adapters are a PJRT-only \
+             argument layout)",
+            self.spec.n_units(),
+            units.len()
+        );
+        Ok(units.iter().map(|u| u.as_slice()).collect())
+    }
+
+    fn check_peft(&self, peft: PeftMode) -> Result<()> {
+        ensure!(
+            peft == PeftMode::Full,
+            "the native backend supports full-parameter tuning only (peft={peft}); \
+             use the pjrt backend with PEFT artifacts"
+        );
+        Ok(())
+    }
+}
+
+impl Backend for NativeBackend {
+    type Buffer = Vec<f32>;
+    type PreparedBatch = Batch;
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn upload(&self, data: &[f32]) -> Result<Vec<f32>> {
+        Ok(data.to_vec())
+    }
+
+    fn download(&self, buf: &Vec<f32>) -> Result<Vec<f32>> {
+        Ok(buf.clone())
+    }
+
+    fn zo_axpy(&self, unit: &Vec<f32>, len: usize, seed: i32, coeff: f32) -> Result<Vec<f32>> {
+        ensure!(unit.len() == len, "zo_axpy: unit has {} elements, expected {len}", unit.len());
+        let seed = seed as u32;
+        let mut out = Vec::with_capacity(len);
+        out.extend(
+            unit.iter()
+                .enumerate()
+                .map(|(i, &p)| p + coeff * gauss_from_index(i as u32, seed)),
+        );
+        Ok(out)
+    }
+
+    fn zo_axpy_masked(
+        &self,
+        unit: &Vec<f32>,
+        pref: &Vec<f32>,
+        tau: f32,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<Vec<f32>> {
+        ensure!(unit.len() == len && pref.len() == len, "zo_axpy_masked: shape mismatch");
+        let seed = seed as u32;
+        let mut out = Vec::with_capacity(len);
+        out.extend(unit.iter().zip(pref).enumerate().map(|(i, (&p, &q))| {
+            if q.abs() <= tau {
+                p + coeff * gauss_from_index(i as u32, seed)
+            } else {
+                p
+            }
+        }));
+        Ok(out)
+    }
+
+    fn prepare_batch(&self, batch: &Batch) -> Result<Batch> {
+        Ok(batch.clone())
+    }
+
+    fn forward_loss(
+        &self,
+        peft: PeftMode,
+        units: &[&Vec<f32>],
+        batch: &Batch,
+    ) -> Result<f32> {
+        self.check_peft(peft)?;
+        let slices = self.unit_slices(units)?;
+        forward::mean_loss(
+            &self.spec,
+            &slices,
+            &batch.tokens,
+            &batch.targets,
+            &batch.mask,
+            batch.rows,
+            batch.seq,
+        )
+    }
+
+    fn example_losses(
+        &self,
+        peft: PeftMode,
+        units: &[&Vec<f32>],
+        batch: &Batch,
+    ) -> Result<Vec<f32>> {
+        self.check_peft(peft)?;
+        let slices = self.unit_slices(units)?;
+        forward::example_losses(
+            &self.spec,
+            &slices,
+            &batch.tokens,
+            &batch.targets,
+            &batch.mask,
+            batch.rows,
+            batch.seq,
+        )
+    }
+
+    fn predict(&self, peft: PeftMode, units: &[&Vec<f32>], batch: &Batch) -> Result<Vec<i32>> {
+        self.check_peft(peft)?;
+        let slices = self.unit_slices(units)?;
+        forward::predict(&self.spec, &slices, &batch.tokens, batch.rows, batch.seq)
+    }
+
+    fn initial_params(&self, explicit_checkpoint: &str) -> Result<(Vec<Vec<f32>>, String)> {
+        if !explicit_checkpoint.is_empty() {
+            let ck = crate::model::checkpoint::load(std::path::Path::new(explicit_checkpoint))
+                .with_context(|| format!("loading checkpoint {explicit_checkpoint}"))?;
+            let lens = self.spec.unit_lens();
+            ensure!(
+                ck.units.len() == lens.len()
+                    && ck.units.iter().zip(&lens).all(|(u, &l)| u.len() == l),
+                "checkpoint {explicit_checkpoint} does not match model {}",
+                self.spec.name
+            );
+            return Ok((ck.units, explicit_checkpoint.to_string()));
+        }
+        if let Some(manifest) = &self.manifest {
+            return crate::model::checkpoint::resolve_initial(manifest, "");
+        }
+        Ok((self.spec.init_units(NATIVE_INIT_SEED), "native-init".to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::preset("opt-nano").unwrap()
+    }
+
+    #[test]
+    fn axpy_is_deterministic_and_standard_normal() {
+        let b = backend();
+        let n = 4096;
+        let p = vec![0.0f32; n];
+        let za = b.zo_axpy(&p, n, 42, 1.0).unwrap();
+        let zb = b.zo_axpy(&p, n, 42, 1.0).unwrap();
+        assert_eq!(za, zb, "same seed must regenerate the same z");
+        let mean: f32 = za.iter().sum::<f32>() / n as f32;
+        let var: f32 = za.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.1, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn axpy_perturb_restore_identity() {
+        let b = backend();
+        let n = 1000;
+        let orig: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        let mu = 1e-3f32;
+        let p1 = b.zo_axpy(&orig, n, 7, mu).unwrap();
+        let p2 = b.zo_axpy(&p1, n, 7, -2.0 * mu).unwrap();
+        let p3 = b.zo_axpy(&p2, n, 7, mu).unwrap();
+        for (a, o) in p3.iter().zip(&orig) {
+            assert!((a - o).abs() < 1e-5, "{a} vs {o}");
+        }
+    }
+
+    #[test]
+    fn masked_axpy_touches_only_small_magnitudes() {
+        let b = backend();
+        let pref = vec![0.0f32, 10.0, 0.1, 5.0];
+        let p = vec![1.0f32; 4];
+        let out = b.zo_axpy_masked(&p, &pref, 0.5, 4, 3, 1.0).unwrap();
+        assert_ne!(out[0], 1.0, "|0.0| <= tau must be perturbed");
+        assert_eq!(out[1], 1.0, "|10| > tau must be untouched");
+        assert_ne!(out[2], 1.0);
+        assert_eq!(out[3], 1.0);
+    }
+
+    #[test]
+    fn masked_matches_dense_at_infinite_tau() {
+        let b = backend();
+        let p: Vec<f32> = (0..256).map(|i| i as f32 * 0.1).collect();
+        let dense = b.zo_axpy(&p, 256, 11, 0.5).unwrap();
+        let masked = b.zo_axpy_masked(&p, &p, f32::INFINITY, 256, 11, 0.5).unwrap();
+        assert_eq!(dense, masked);
+    }
+
+    #[test]
+    fn forward_loss_runs_without_artifacts() {
+        let b = backend();
+        let host = b.initial_params("").unwrap().0;
+        let units: Vec<&Vec<f32>> = host.iter().collect();
+        let seqs: Vec<Vec<u32>> = (0..b.spec().train_batch)
+            .map(|r| (0..12u32).map(|i| 20 + ((r as u32 + i) % 50)).collect())
+            .collect();
+        let batch = Batch::lm_batch(&seqs, b.spec().train_batch, 16).unwrap();
+        let prepared = b.prepare_batch(&batch).unwrap();
+        let loss = b.forward_loss(PeftMode::Full, &units, &prepared).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        let per = b.example_losses(PeftMode::Full, &units, &prepared).unwrap();
+        assert_eq!(per.len(), b.spec().train_batch);
+        let preds = b.predict(PeftMode::Full, &units, &prepared).unwrap();
+        assert_eq!(preds.len(), b.spec().train_batch * 16);
+    }
+
+    #[test]
+    fn peft_and_fo_are_rejected_clearly() {
+        let b = backend();
+        let host = b.initial_params("").unwrap().0;
+        let units: Vec<&Vec<f32>> = host.iter().collect();
+        let batch = Batch::lm_batch(&[vec![1, 2, 3]], 1, 16).unwrap();
+        let prepared = b.prepare_batch(&batch).unwrap();
+        let err = b.forward_loss(PeftMode::Lora, &units, &prepared).unwrap_err();
+        assert!(err.to_string().contains("native"), "{err}");
+        assert!(!b.supports_fo());
+        assert!(b.supports_peft(PeftMode::Full));
+        assert!(!b.supports_peft(PeftMode::Lora));
+        assert!(b.forward_backward(&host, &batch).is_err());
+    }
+
+    #[test]
+    fn initial_params_checkpoint_round_trip() {
+        let b = backend();
+        let (init, source) = b.initial_params("").unwrap();
+        assert_eq!(source, "native-init");
+        let path = std::env::temp_dir().join(format!("lezo_native_ck_{}", std::process::id()));
+        crate::model::checkpoint::save(&path, 5, &init).unwrap();
+        let (loaded, src2) = b.initial_params(path.to_str().unwrap()).unwrap();
+        assert_eq!(loaded, init);
+        assert!(src2.contains("lezo_native_ck"));
+        std::fs::remove_file(&path).ok();
+        // mismatched checkpoint rejected
+        let other = NativeBackend::preset("opt-micro").unwrap();
+        let path2 = std::env::temp_dir().join(format!("lezo_native_ck2_{}", std::process::id()));
+        crate::model::checkpoint::save(&path2, 0, &other.initial_params("").unwrap().0).unwrap();
+        assert!(b.initial_params(path2.to_str().unwrap()).is_err());
+        std::fs::remove_file(&path2).ok();
+    }
+}

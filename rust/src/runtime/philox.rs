@@ -1,0 +1,254 @@
+//! Counter-based Philox-4x32-10 RNG + Box-Muller — the pure-Rust twin of
+//! `python/compile/kernels/philox.py`.
+//!
+//! This is the numerical core of LeZO's memory trick: the perturbation
+//! vector `z ~ N(0, I)` is *regenerated* from `(seed, element_index)`
+//! instead of being stored, so perturb (+mu), flip (-2mu), restore (+mu)
+//! and update (-eta*g) all see the identical `z` with zero extra memory.
+//! The native backend runs this implementation directly; the PJRT backend
+//! runs the Pallas kernel lowered from the Python twin. Both follow the
+//! same integer semantics: the u32 Philox words are bit-identical across
+//! implementations (pinned by the known-answer tests below), and the f32
+//! Gaussian mapping agrees to float rounding (|diff| < 3e-5 observed).
+//!
+//! Reference: Salmon et al., "Parallel random numbers: as easy as 1, 2, 3"
+//! (SC'11). Constants are the canonical Philox-4x32 constants.
+
+/// Canonical Philox-4x32 round constants.
+pub const PHILOX_M0: u32 = 0xD251_1F53;
+pub const PHILOX_M1: u32 = 0xCD9E_8D57;
+pub const PHILOX_W0: u32 = 0x9E37_79B9; // golden ratio
+pub const PHILOX_W1: u32 = 0xBB67_AE85; // sqrt(3) - 1
+
+/// Key word 1 is a domain separator (b"LeZO") so the perturbation stream
+/// can never collide with any other Philox user keyed on the same seed.
+pub const LEZO_KEY1: u32 = 0x4C65_5A4F;
+
+pub const ROUNDS: usize = 10;
+
+/// Full 32x32 -> 64 bit product as (hi, lo) words.
+#[inline(always)]
+fn mulhilo32(a: u32, b: u32) -> (u32, u32) {
+    let p = (a as u64) * (b as u64);
+    ((p >> 32) as u32, p as u32)
+}
+
+/// Philox-4x32 block cipher over counter words c0..c3 with key (k0, k1).
+#[inline]
+pub fn philox4x32(counter: [u32; 4], key: [u32; 2]) -> [u32; 4] {
+    let [mut c0, mut c1, mut c2, mut c3] = counter;
+    let [mut k0, mut k1] = key;
+    for _ in 0..ROUNDS {
+        let (hi0, lo0) = mulhilo32(PHILOX_M0, c0);
+        let (hi1, lo1) = mulhilo32(PHILOX_M1, c2);
+        c0 = hi1 ^ c1 ^ k0;
+        c1 = lo1;
+        c2 = hi0 ^ c3 ^ k1;
+        c3 = lo0;
+        k0 = k0.wrapping_add(PHILOX_W0);
+        k1 = k1.wrapping_add(PHILOX_W1);
+    }
+    [c0, c1, c2, c3]
+}
+
+/// Map u32 bits -> f32 uniform in the *open* interval (0, 1).
+///
+/// Top 23 bits scaled by 2^-23 plus a 2^-24 offset: every value is exactly
+/// representable in f32, max is 1 - 2^-24 < 1 and min is 2^-24 > 0, so
+/// `ln(u)` stays finite. Bit-identical to the kernel's `uniform01`.
+#[inline(always)]
+pub fn uniform01(bits: u32) -> f32 {
+    const TWO_NEG_23: f32 = 1.0 / (1u32 << 23) as f32;
+    const TWO_NEG_24: f32 = 1.0 / (1u32 << 24) as f32;
+    (bits >> 9) as f32 * TWO_NEG_23 + TWO_NEG_24
+}
+
+/// One standard normal per (r0, r1) pair of u32 words (cosine branch).
+#[inline]
+pub fn boxmuller(r0: u32, r1: u32) -> f32 {
+    let u1 = uniform01(r0);
+    let u2 = uniform01(r1);
+    let radius = (-2.0f32 * u1.ln()).sqrt();
+    let theta = 2.0f32 * std::f32::consts::PI * u2;
+    radius * theta.cos()
+}
+
+/// `z[i] ~ N(0, 1)`, a pure function of `(seed, i)`.
+///
+/// `idx` is the global element index of the parameter inside its layer
+/// unit; `seed` is the per-(step, layer) seed chosen by the coordinator.
+/// Counter = (idx, 0, 0, 0), key = (seed, LEZO_KEY1) — identical to
+/// `gauss_from_index` in the Pallas kernel.
+#[inline]
+pub fn gauss_from_index(idx: u32, seed: u32) -> f32 {
+    let [r0, r1, _, _] = philox4x32([idx, 0, 0, 0], [seed, LEZO_KEY1]);
+    boxmuller(r0, r1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mulhilo_matches_u64_product() {
+        for &(a, b) in &[
+            (0u32, 0u32),
+            (1, 1),
+            (0xFFFF_FFFF, 0xFFFF_FFFF),
+            (PHILOX_M0, 0x1234_5678),
+            (PHILOX_M1, 0xDEAD_BEEF),
+        ] {
+            let (hi, lo) = mulhilo32(a, b);
+            let p = (a as u64) * (b as u64);
+            assert_eq!(lo as u64, p & 0xFFFF_FFFF);
+            assert_eq!(hi as u64, p >> 32);
+        }
+    }
+
+    #[test]
+    fn philox_random123_known_vectors() {
+        // Canonical vectors from the Random123 distribution (and pinned by
+        // python/tests/test_philox.py).
+        let ff = 0xFFFF_FFFFu32;
+        assert_eq!(
+            philox4x32([ff, ff, ff, ff], [ff, ff]),
+            [0x408F_276D, 0x41C8_3B0E, 0xA20B_C7C6, 0x6D54_51FD]
+        );
+        assert_eq!(
+            philox4x32([0, 0, 0, 0], [0, 0]),
+            [0x6627_E8D5, 0xE169_C58D, 0xBC57_AC4C, 0x9B00_DBD8]
+        );
+    }
+
+    #[test]
+    fn philox_matches_pallas_kernel_stream() {
+        // Known-answer vectors generated from the repo's own Python kernel
+        // (compile.kernels.philox.philox4x32) with key1 = LEZO_KEY1, i.e.
+        // the exact counter/key layout the zo_axpy kernels use.
+        let cases: [(u32, u32, [u32; 4]); 4] = [
+            (0, 0, [0xDC55_1D05, 0xB1B0_0326, 0xFDAF_5693, 0x15B1_F4F9]),
+            (1, 42, [0x8ED4_BE03, 0x20EC_A53E, 0x2308_A71B, 0xF4FD_A200]),
+            (12345, 7, [0xE450_752A, 0x6E7B_E0D0, 0x31A2_0DD8, 0x8510_56EF]),
+            (
+                0xFFFF_FFFF,
+                0xFFFF_FFFF,
+                [0x4791_F463, 0xD04B_CF9A, 0xFFEB_905D, 0x4384_8387],
+            ),
+        ];
+        for (c0, k0, want) in cases {
+            assert_eq!(philox4x32([c0, 0, 0, 0], [k0, LEZO_KEY1]), want, "c0={c0} k0={k0}");
+        }
+    }
+
+    #[test]
+    fn gauss_matches_pallas_kernel_values() {
+        // Known-answer values generated from the Python kernel:
+        // gauss_from_index(arange(8), seed) for several seeds, plus large
+        // indices. The integer stream is bit-identical; the f32 Box-Muller
+        // (ln/cos) may differ by float-library rounding, hence the 3e-5
+        // tolerance (observed diffs are ~1e-7).
+        let kat: [(u32, [f32; 8]); 4] = [
+            (
+                0,
+                [
+                    -0.188496381, 0.148865700, 1.820809007, -1.438824773,
+                    -1.344397187, -0.957285702, 1.930997729, -0.818839848,
+                ],
+            ),
+            (
+                1,
+                [
+                    0.479184955, 0.896658242, -0.718323648, -0.562424064,
+                    0.126851946, -0.854853392, 1.299600720, -0.639966130,
+                ],
+            ),
+            (
+                42,
+                [
+                    3.577432871, 0.746355414, 0.515587270, 0.478834301,
+                    0.710283756, -0.230724618, -0.662807763, -2.121771574,
+                ],
+            ),
+            (
+                2_147_483_647,
+                [
+                    -0.649245739, -1.413566113, -0.022017676, -0.300866276,
+                    -0.902329266, 0.612480938, 0.339282870, -0.033580218,
+                ],
+            ),
+        ];
+        for (seed, want) in kat {
+            for (i, &w) in want.iter().enumerate() {
+                let got = gauss_from_index(i as u32, seed);
+                assert!((got - w).abs() < 3e-5, "seed={seed} idx={i}: {got} vs {w}");
+            }
+        }
+        // large / wrap-around indices
+        for (idx, want) in [
+            (1_000_000u32, -0.756159604f32),
+            (123_456_789, -0.523046255),
+            (4_294_967_295, -0.716007948),
+        ] {
+            let got = gauss_from_index(idx, 7);
+            assert!((got - want).abs() < 3e-5, "idx={idx}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn uniform01_open_interval_and_known_values() {
+        for bits in [0u32, 1, 511, 512, u32::MAX, 1 << 31] {
+            let u = uniform01(bits);
+            assert!(u > 0.0 && u < 1.0, "bits={bits}: {u}");
+        }
+        // exact values from the Python kernel
+        assert_eq!(uniform01(0), 5.960_464_5e-8);
+        assert_eq!(uniform01(511), 5.960_464_5e-8); // low 9 bits dropped
+        assert_eq!(uniform01(512), 1.788_139_3e-7);
+        assert_eq!(uniform01(u32::MAX), 0.999_999_94);
+        assert_eq!(uniform01(1 << 31), 0.500_000_06);
+    }
+
+    #[test]
+    fn same_seed_index_regenerates_identically_across_phases() {
+        // The whole ZO schedule relies on this: four separate "phases"
+        // re-deriving z from the same (seed, idx) must agree bit-for-bit.
+        for seed in [0u32, 3, 0x7FFF_FFFF] {
+            for idx in [0u32, 1, 999, 1 << 20] {
+                let a = gauss_from_index(idx, seed);
+                let b = gauss_from_index(idx, seed);
+                let c = gauss_from_index(idx, seed);
+                assert_eq!(a.to_bits(), b.to_bits());
+                assert_eq!(a.to_bits(), c.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn streams_differ_across_seeds_and_indices() {
+        let a: Vec<f32> = (0..256).map(|i| gauss_from_index(i, 1)).collect();
+        let b: Vec<f32> = (0..256).map(|i| gauss_from_index(i, 2)).collect();
+        let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(max_diff > 0.1, "distinct seeds must give distinct streams");
+    }
+
+    #[test]
+    fn gauss_moments_are_standard_normal() {
+        let n = 100_000u32;
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for i in 0..n {
+            let z = gauss_from_index(i, 12345) as f64;
+            sum += z;
+            sumsq += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn domain_separator_is_lezo() {
+        assert_eq!(LEZO_KEY1.to_be_bytes(), *b"LeZO");
+    }
+}

@@ -1,0 +1,304 @@
+//! PjrtBackend: the PJRT implementation of [`Backend`] (feature `pjrt`).
+//!
+//! Wraps the PJRT CPU client plus the manifest-driven executable registry:
+//! buffers are device-resident `PjRtBuffer`s, the ZO kernels and forward
+//! families execute AOT HLO artifacts exported by `python/compile/aot.py`.
+//! Scalar coefficients are cached device-side so the four axpy phases of a
+//! step do not re-upload `+mu` / `-2mu` per unit.
+
+use crate::data::batch::Batch;
+use crate::model::spec::ModelSpec;
+use crate::model::{checkpoint, Manifest};
+use crate::peft::PeftMode;
+use crate::runtime::backend::Backend;
+use crate::runtime::exes::{ExeRegistry, Family};
+use crate::runtime::{run1, Runtime};
+use anyhow::{ensure, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+pub struct PjrtBackend {
+    rt: Runtime,
+    reg: ExeRegistry,
+    spec: ModelSpec,
+    /// Device scalars keyed by f32 bit pattern (coefficients, taus), at
+    /// most 64 resident. Promotion requires a *non-consecutive* repeat —
+    /// i.e. the value recurs across sweeps (+mu, -2mu, taus) — so a
+    /// per-step update coefficient (-lr*g), which only repeats within its
+    /// own sweep, never occupies a permanent slot.
+    scalars: RefCell<BTreeMap<u32, Rc<xla::PjRtBuffer>>>,
+    /// Most recent upload: serves the within-sweep reuse (one upload per
+    /// sweep for the update coefficient, matching the pre-refactor engine).
+    last_scalar: RefCell<Option<(u32, Rc<xla::PjRtBuffer>)>>,
+    /// Bit patterns seen before (promotion log for `scalars`).
+    seen_once: RefCell<std::collections::BTreeSet<u32>>,
+}
+
+/// One uploaded (tokens, targets, mask) triple.
+pub struct PjrtBatch {
+    pub tok: xla::PjRtBuffer,
+    pub tgt: xla::PjRtBuffer,
+    pub msk: xla::PjRtBuffer,
+    pub rows: usize,
+    pub seq: usize,
+}
+
+impl PjrtBackend {
+    /// Open the artifact directory (manifest + lazily compiled executables).
+    pub fn open(artifact_dir: &Path) -> Result<PjrtBackend> {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(artifact_dir)?;
+        let spec = ModelSpec::from_manifest(&manifest);
+        Ok(PjrtBackend {
+            rt,
+            reg: ExeRegistry::new(manifest),
+            spec,
+            scalars: RefCell::new(BTreeMap::new()),
+            last_scalar: RefCell::new(None),
+            seen_once: RefCell::new(std::collections::BTreeSet::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.reg.manifest()
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn registry(&self) -> &ExeRegistry {
+        &self.reg
+    }
+
+    fn scalar_cached(&self, v: f32) -> Result<Rc<xla::PjRtBuffer>> {
+        let key = v.to_bits();
+        if let Some(b) = self.scalars.borrow().get(&key) {
+            return Ok(b.clone());
+        }
+        if let Some((k, b)) = &*self.last_scalar.borrow() {
+            if *k == key {
+                // consecutive reuse: the same coefficient swept across units
+                return Ok(b.clone());
+            }
+        }
+        let b = Rc::new(self.rt.scalar_f32(v)?);
+        let first_sighting = {
+            let mut seen = self.seen_once.borrow_mut();
+            if seen.len() >= 4096 {
+                seen.clear(); // bound the sighting log, not the hot cache
+            }
+            seen.insert(key)
+        };
+        if !first_sighting {
+            // a NON-consecutive repeat (the MRU slot above absorbed the
+            // within-sweep ones): this value recurs across sweeps
+            // (mu, -2mu, tau) — keep it device-resident for the run. Hard
+            // cap so pathological coefficient recurrence cannot grow the
+            // resident set unboundedly; hot values are promoted within the
+            // first steps, so a full cache just stops admitting newcomers.
+            let mut cache = self.scalars.borrow_mut();
+            if cache.len() < 64 {
+                cache.insert(key, b.clone());
+            }
+        }
+        *self.last_scalar.borrow_mut() = Some((key, b.clone()));
+        Ok(b)
+    }
+
+    fn families(&self, peft: PeftMode) -> (Family, Family, Family) {
+        match peft {
+            PeftMode::Full => (Family::ForwardLoss, Family::ExampleLosses, Family::Predict),
+            PeftMode::Lora => {
+                (Family::ForwardLossLora, Family::ExampleLossesLora, Family::PredictLora)
+            }
+            PeftMode::Prefix => {
+                (Family::ForwardLossPrefix, Family::ExampleLossesPrefix, Family::PredictPrefix)
+            }
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    type Buffer = xla::PjRtBuffer;
+    type PreparedBatch = PjrtBatch;
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn upload(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.rt.vec_f32(data)
+    }
+
+    fn download(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        self.rt.read_vec_f32(buf)
+    }
+
+    fn zo_axpy(
+        &self,
+        unit: &xla::PjRtBuffer,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<xla::PjRtBuffer> {
+        let exe = self.reg.get(&self.rt, Family::ZoAxpy, len)?;
+        let seed_b = self.rt.scalar_i32(seed)?;
+        let c = self.scalar_cached(coeff)?;
+        run1(&exe, &[unit, &seed_b, c.as_ref()])
+    }
+
+    fn zo_axpy_masked(
+        &self,
+        unit: &xla::PjRtBuffer,
+        pref: &xla::PjRtBuffer,
+        tau: f32,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<xla::PjRtBuffer> {
+        let exe = self.reg.get(&self.rt, Family::ZoAxpyMasked, len)?;
+        let seed_b = self.rt.scalar_i32(seed)?;
+        let tau_b = self.scalar_cached(tau)?;
+        let c = self.scalar_cached(coeff)?;
+        run1(&exe, &[unit, pref, tau_b.as_ref(), &seed_b, c.as_ref()])
+    }
+
+    fn prepare_batch(&self, batch: &Batch) -> Result<PjrtBatch> {
+        Ok(PjrtBatch {
+            tok: self.rt.mat_i32(&batch.tokens, batch.rows, batch.seq)?,
+            tgt: self.rt.mat_i32(&batch.targets, batch.rows, batch.seq)?,
+            msk: self.rt.mat_f32(&batch.mask, batch.rows, batch.seq)?,
+            rows: batch.rows,
+            seq: batch.seq,
+        })
+    }
+
+    fn forward_loss(
+        &self,
+        peft: PeftMode,
+        units: &[&xla::PjRtBuffer],
+        batch: &PjrtBatch,
+    ) -> Result<f32> {
+        let (fam, _, _) = self.families(peft);
+        let exe = self.reg.get(&self.rt, fam, batch.seq)?;
+        let mut args: Vec<&xla::PjRtBuffer> = units.to_vec();
+        args.push(&batch.tok);
+        args.push(&batch.tgt);
+        args.push(&batch.msk);
+        let out = run1(&exe, &args)?;
+        self.rt.read_scalar_f32(&out)
+    }
+
+    fn example_losses(
+        &self,
+        peft: PeftMode,
+        units: &[&xla::PjRtBuffer],
+        batch: &PjrtBatch,
+    ) -> Result<Vec<f32>> {
+        let (_, fam, _) = self.families(peft);
+        let exe = self.reg.get(&self.rt, fam, batch.seq)?;
+        let mut args: Vec<&xla::PjRtBuffer> = units.to_vec();
+        args.push(&batch.tok);
+        args.push(&batch.tgt);
+        args.push(&batch.msk);
+        let out = run1(&exe, &args)?;
+        let per = self.rt.read_vec_f32(&out)?;
+        ensure!(per.len() == batch.rows, "example_losses returned {} rows", per.len());
+        Ok(per)
+    }
+
+    fn predict(
+        &self,
+        peft: PeftMode,
+        units: &[&xla::PjRtBuffer],
+        batch: &PjrtBatch,
+    ) -> Result<Vec<i32>> {
+        let (_, _, fam) = self.families(peft);
+        let exe = self.reg.get(&self.rt, fam, batch.seq)?;
+        let mut args: Vec<&xla::PjRtBuffer> = units.to_vec();
+        args.push(&batch.tok);
+        let out = run1(&exe, &args)?;
+        let preds = self.rt.read_vec_i32(&out)?;
+        ensure!(preds.len() == batch.rows * batch.seq, "predict shape mismatch");
+        Ok(preds)
+    }
+
+    fn forward_backward(
+        &self,
+        host_units: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let exe = self.reg.get(&self.rt, Family::ForwardBackward, batch.seq)?;
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(host_units.len() + 3);
+        for u in host_units {
+            args.push(self.rt.vec_f32(u)?);
+        }
+        args.push(self.rt.mat_i32(&batch.tokens, batch.rows, batch.seq)?);
+        args.push(self.rt.mat_i32(&batch.targets, batch.rows, batch.seq)?);
+        args.push(self.rt.mat_f32(&batch.mask, batch.rows, batch.seq)?);
+        let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        let out = run1(&exe, &refs)?;
+        let parts = self.rt.read_tuple(&out)?;
+        ensure!(
+            parts.len() == host_units.len() + 1,
+            "forward_backward returned {} outputs, expected {}",
+            parts.len(),
+            host_units.len() + 1
+        );
+        let loss = parts[0].get_first_element::<f32>()?;
+        let grads = parts[1..]
+            .iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    fn initial_params(&self, explicit_checkpoint: &str) -> Result<(Vec<Vec<f32>>, String)> {
+        checkpoint::resolve_initial(self.manifest(), explicit_checkpoint)
+    }
+
+    fn supports_peft(&self, mode: PeftMode) -> bool {
+        match mode {
+            PeftMode::Full => true,
+            PeftMode::Lora => self.manifest().lora_unit_len.is_some(),
+            PeftMode::Prefix => self.manifest().prefix_unit_len.is_some(),
+        }
+    }
+
+    fn peft_unit_len(&self, mode: PeftMode) -> Result<usize> {
+        let computed = match mode {
+            PeftMode::Full => return Ok(0),
+            PeftMode::Lora => crate::peft::lora_unit_len(self.spec.d_model),
+            PeftMode::Prefix => crate::peft::prefix_unit_len(self.spec.d_model),
+        };
+        let exported = match mode {
+            PeftMode::Full => unreachable!(),
+            PeftMode::Lora => self.manifest().lora_unit_len,
+            PeftMode::Prefix => self.manifest().prefix_unit_len,
+        };
+        let exported = exported.with_context(|| {
+            format!("artifacts lack {mode} executables (re-run `aot --peft`)")
+        })?;
+        ensure!(
+            exported == computed,
+            "manifest {mode} unit length {exported} != in-crate adapter layout {computed} \
+             (exporter drift: re-sync python/compile/peft.py with rust/src/peft/mod.rs)"
+        );
+        Ok(exported)
+    }
+
+    fn supports_fo(&self) -> bool {
+        true
+    }
+
+    fn warm_zo(&self) -> Result<()> {
+        self.reg.warm_zo(&self.rt)
+    }
+}

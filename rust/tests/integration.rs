@@ -1,8 +1,13 @@
-//! Integration tests over the real PJRT runtime and the opt-micro artifacts.
+//! Integration tests over the real PJRT runtime and the opt-micro artifacts
+//! (feature `pjrt`).
 //!
 //! These exercise the full L3 -> runtime -> (AOT'd L2/L1) stack: algorithm
-//! invariants that only hold if every layer composes correctly. Tests skip
-//! (with a note) when `make artifacts` has not been run.
+//! invariants that only hold if every layer composes correctly. The same
+//! invariants run hermetically on the native backend in
+//! rust/tests/native_backend.rs; this file checks the PJRT implementation
+//! agrees. Tests skip (visibly, via `require_artifacts!`) when
+//! `make artifacts` has not been run.
+#![cfg(feature = "pjrt")]
 
 use lezo::config::{Method, RunConfig};
 use lezo::coordinator::metrics::StageTimes;
@@ -10,24 +15,19 @@ use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
 use lezo::coordinator::{LayerSelector, Trainer};
 use lezo::data::batch::Batch;
 use lezo::eval::Evaluator;
-use lezo::model::{Manifest, ParamStore};
+use lezo::model::Manifest;
 use lezo::peft::PeftMode;
-use lezo::runtime::exes::{ExeRegistry, Family};
-use lezo::runtime::{run1, Runtime};
-use lezo::tasks::{eval_set, make_task};
+use lezo::require_artifacts;
+use lezo::runtime::backend::{default_artifact_dir, Backend};
+use lezo::runtime::PjrtBackend;
 use std::path::PathBuf;
 
 fn art() -> PathBuf {
-    let root = std::env::var("LEZO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    PathBuf::from(root).join("opt-micro")
+    default_artifact_dir("opt-micro")
 }
 
-fn have() -> bool {
-    let ok = art().join("manifest.json").exists();
-    if !ok {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
-    }
-    ok
+fn open() -> PjrtBackend {
+    PjrtBackend::open(&art()).unwrap()
 }
 
 fn micro_cfg() -> RunConfig {
@@ -42,12 +42,21 @@ fn micro_cfg() -> RunConfig {
     cfg
 }
 
-fn tunable_from_store(rt: &Runtime, m: &Manifest) -> TunableUnits {
-    let store = ParamStore::load_init(rt, m).unwrap();
-    let bufs = (0..store.n_units())
-        .map(|k| rt.vec_f32(&rt.read_vec_f32(store.unit(k)).unwrap()).unwrap())
+fn tunable(backend: &PjrtBackend) -> TunableUnits<PjrtBackend> {
+    let host = backend.initial_params("").unwrap().0;
+    TunableUnits::from_host(backend, &host).unwrap()
+}
+
+fn lm_prepared(
+    backend: &PjrtBackend,
+    seq: usize,
+) -> <PjrtBackend as Backend>::PreparedBatch {
+    let m = backend.manifest();
+    let seqs: Vec<Vec<u32>> = (0..m.train_batch)
+        .map(|r| (0..seq as u32).map(|i| 20 + (r as u32 * 7 + i) % 90).collect())
         .collect();
-    TunableUnits { bufs, lens: m.unit_lens.clone() }
+    let batch = Batch::lm_batch(&seqs, m.train_batch, seq).unwrap();
+    backend.prepare_batch(&batch).unwrap()
 }
 
 // ---------------------------------------------------------------------------
@@ -57,9 +66,7 @@ fn tunable_from_store(rt: &Runtime, m: &Manifest) -> TunableUnits {
 #[test]
 fn mezo_equals_lezo_with_zero_drop() {
     // MeZO is the drop=0 special case: identical trajectories, bit-for-bit.
-    if !have() {
-        return;
-    }
+    require_artifacts!();
     let mut a = micro_cfg();
     a.method = Method::Mezo;
     a.drop_layers = 0;
@@ -67,15 +74,14 @@ fn mezo_equals_lezo_with_zero_drop() {
     b.method = Method::Lezo;
     let ra = Trainer::new(a).run().unwrap();
     let rb = Trainer::new(b).run().unwrap();
+    assert_eq!(ra.backend, "pjrt");
     assert_eq!(ra.losses, rb.losses, "loss trajectories must match exactly");
     assert_eq!(ra.final_metric, rb.final_metric);
 }
 
 #[test]
 fn run_is_reproducible_across_processes_worth_of_state() {
-    if !have() {
-        return;
-    }
+    require_artifacts!();
     let mut cfg = micro_cfg();
     cfg.method = Method::Lezo;
     cfg.drop_layers = 2;
@@ -87,9 +93,7 @@ fn run_is_reproducible_across_processes_worth_of_state() {
 
 #[test]
 fn different_seeds_different_trajectories() {
-    if !have() {
-        return;
-    }
+    require_artifacts!();
     let mut cfg = micro_cfg();
     cfg.method = Method::Mezo;
     let r1 = Trainer::new(cfg.clone()).run().unwrap();
@@ -102,29 +106,14 @@ fn different_seeds_different_trajectories() {
 fn spsa_probe_losses_bracket_base_loss() {
     // l+ and l- must both be finite and straddle the unperturbed loss in
     // expectation; at tiny mu they should be within O(mu) of each other.
-    if !have() {
-        return;
-    }
-    let rt = Runtime::cpu().unwrap();
-    let m = Manifest::load(&art()).unwrap();
-    let reg = ExeRegistry::new(m.clone());
-    let eng = SpsaEngine::new(&rt, &reg, 1e-4, 3).unwrap();
-    let mut units = tunable_from_store(&rt, &m);
+    require_artifacts!();
+    let backend = open();
+    let eng = SpsaEngine::new(&backend, 1e-4, 3).unwrap();
+    let mut units = tunable(&backend);
     let active: Vec<usize> = (0..units.n_units()).collect();
-    let seqs: Vec<Vec<u32>> = (0..m.train_batch)
-        .map(|r| (0..16u32).map(|i| 20 + (r as u32 * 7 + i) % 90).collect())
-        .collect();
-    let batch = Batch::lm_batch(&seqs, m.train_batch, 16).unwrap();
-    let tok = rt.mat_i32(&batch.tokens, batch.rows, batch.seq).unwrap();
-    let tgt = rt.mat_i32(&batch.targets, batch.rows, batch.seq).unwrap();
-    let msk = rt.mat_f32(&batch.mask, batch.rows, batch.seq).unwrap();
-    let exe = reg.get(&rt, Family::ForwardLoss, 16).unwrap();
-    let mut loss = |u: &TunableUnits| -> anyhow::Result<f32> {
-        let mut args: Vec<&xla::PjRtBuffer> = u.bufs.iter().collect();
-        args.push(&tok);
-        args.push(&tgt);
-        args.push(&msk);
-        rt.read_scalar_f32(&run1(&exe, &args)?)
+    let prepared = lm_prepared(&backend, 16);
+    let mut loss = |u: &TunableUnits<PjrtBackend>| -> anyhow::Result<f32> {
+        backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
     };
     let base = loss(&units).unwrap();
     let mut times = StageTimes::default();
@@ -141,9 +130,7 @@ fn spsa_probe_losses_bracket_base_loss() {
 fn lezo_step_timing_is_cheaper_than_mezo() {
     // the paper's computation claim at the step level: dropping layers
     // shrinks perturb+update wall time
-    if !have() {
-        return;
-    }
+    require_artifacts!();
     let mut mezo = micro_cfg();
     mezo.method = Method::Mezo;
     mezo.steps = 30;
@@ -171,18 +158,14 @@ fn lezo_step_timing_is_cheaper_than_mezo() {
 
 #[test]
 fn evaluator_scores_all_task_kinds() {
-    if !have() {
-        return;
-    }
-    let rt = Runtime::cpu().unwrap();
-    let m = Manifest::load(&art()).unwrap();
-    let reg = ExeRegistry::new(m.clone());
-    let store = ParamStore::load_init(&rt, &m).unwrap();
-    let ev = Evaluator::new(&rt, &reg);
+    require_artifacts!();
+    let backend = open();
+    let units = tunable(&backend);
+    let ev = Evaluator::new(&backend);
     for task_name in ["sst2", "copa", "squad"] {
-        let task = make_task(task_name).unwrap();
-        let examples = eval_set(task.as_ref(), 11, 24, 12);
-        let metric = ev.evaluate(task.kind(), &store.unit_refs(), &examples).unwrap();
+        let task = lezo::tasks::make_task(task_name).unwrap();
+        let examples = lezo::tasks::eval_set(task.as_ref(), 11, 24, 12);
+        let metric = ev.evaluate(task.kind(), &units.unit_refs(), &examples).unwrap();
         assert!(
             (0.0..=1.0).contains(&metric.value),
             "{task_name}: {}",
@@ -196,18 +179,14 @@ fn evaluator_scores_all_task_kinds() {
 fn untrained_model_scores_near_chance() {
     // params_init (not the pretrained ckpt) must sit near the task's chance
     // level — guards against leakage through the scoring path
-    if !have() {
-        return;
-    }
-    let rt = Runtime::cpu().unwrap();
-    let m = Manifest::load(&art()).unwrap();
-    let reg = ExeRegistry::new(m.clone());
-    let host = m.read_init_params().unwrap();
-    let store = ParamStore::from_host(&rt, &m, &host).unwrap();
-    let ev = Evaluator::new(&rt, &reg);
-    let task = make_task("sst2").unwrap();
-    let examples = eval_set(task.as_ref(), 123, 80, 12);
-    let metric = ev.option_accuracy(&store.unit_refs(), &examples).unwrap();
+    require_artifacts!();
+    let backend = open();
+    let host = backend.manifest().read_init_params().unwrap();
+    let units = TunableUnits::from_host(&backend, &host).unwrap();
+    let ev = Evaluator::new(&backend);
+    let task = lezo::tasks::make_task("sst2").unwrap();
+    let examples = lezo::tasks::eval_set(task.as_ref(), 123, 80, 12);
+    let metric = ev.option_accuracy(&units.unit_refs(), &examples).unwrap();
     assert!(
         (0.3..=0.7).contains(&metric.value),
         "untrained sst2 acc {} should be near 0.5",
@@ -220,46 +199,32 @@ fn untrained_model_scores_near_chance() {
 // ---------------------------------------------------------------------------
 
 fn have_peft() -> bool {
-    have() && Manifest::load(&art()).map(|m| m.lora_unit_len.is_some()).unwrap_or(false)
+    let ok = Manifest::load(&art()).map(|m| m.lora_unit_len.is_some()).unwrap_or(false);
+    if !ok {
+        eprintln!("SKIPPED: artifacts lack PEFT executables");
+    }
+    ok
 }
 
 #[test]
 fn lora_zero_init_matches_base_loss() {
     // LoRA B=0 at init: the adapter forward must equal the base forward.
+    require_artifacts!();
     if !have_peft() {
-        eprintln!("skipping: artifacts lack PEFT executables");
         return;
     }
-    let rt = Runtime::cpu().unwrap();
-    let m = Manifest::load(&art()).unwrap();
-    let reg = ExeRegistry::new(m.clone());
-    let store = ParamStore::load_init(&rt, &m).unwrap();
+    let backend = open();
+    let m = backend.manifest().clone();
+    let units = tunable(&backend);
     let peft_host = lezo::peft::init_peft_units(PeftMode::Lora, m.n_layers, m.d_model, 0);
-    let peft_bufs: Vec<xla::PjRtBuffer> =
-        peft_host.iter().map(|u| rt.vec_f32(u).unwrap()).collect();
+    let peft_bufs: Vec<_> = peft_host.iter().map(|u| backend.upload(u).unwrap()).collect();
+    let prepared = lm_prepared(&backend, 16);
 
-    let seqs: Vec<Vec<u32>> = (0..m.train_batch)
-        .map(|r| (0..16u32).map(|i| 30 + (r as u32 * 3 + i) % 80).collect())
-        .collect();
-    let batch = Batch::lm_batch(&seqs, m.train_batch, 16).unwrap();
-    let tok = rt.mat_i32(&batch.tokens, batch.rows, batch.seq).unwrap();
-    let tgt = rt.mat_i32(&batch.targets, batch.rows, batch.seq).unwrap();
-    let msk = rt.mat_f32(&batch.mask, batch.rows, batch.seq).unwrap();
-
-    let base_exe = reg.get(&rt, Family::ForwardLoss, 16).unwrap();
-    let mut base_args: Vec<&xla::PjRtBuffer> = store.unit_refs();
-    base_args.push(&tok);
-    base_args.push(&tgt);
-    base_args.push(&msk);
-    let base_loss = rt.read_scalar_f32(&run1(&base_exe, &base_args).unwrap()).unwrap();
-
-    let lora_exe = reg.get(&rt, Family::ForwardLossLora, 16).unwrap();
-    let mut args: Vec<&xla::PjRtBuffer> = store.unit_refs();
+    let base_loss =
+        backend.forward_loss(PeftMode::Full, &units.unit_refs(), &prepared).unwrap();
+    let mut args = units.unit_refs();
     args.extend(peft_bufs.iter());
-    args.push(&tok);
-    args.push(&tgt);
-    args.push(&msk);
-    let lora_loss = rt.read_scalar_f32(&run1(&lora_exe, &args).unwrap()).unwrap();
+    let lora_loss = backend.forward_loss(PeftMode::Lora, &args, &prepared).unwrap();
     assert!(
         (base_loss - lora_loss).abs() < 1e-4,
         "zero-init LoRA must be a no-op: {base_loss} vs {lora_loss}"
@@ -268,6 +233,7 @@ fn lora_zero_init_matches_base_loss() {
 
 #[test]
 fn peft_training_runs_and_moves_loss() {
+    require_artifacts!();
     if !have_peft() {
         return;
     }
@@ -294,9 +260,7 @@ fn peft_training_runs_and_moves_loss() {
 
 #[test]
 fn selector_covers_all_blocks_on_real_manifest() {
-    if !have() {
-        return;
-    }
+    require_artifacts!();
     let m = Manifest::load(&art()).unwrap();
     let sel = LayerSelector::new(
         m.block_unit_indices(),
@@ -316,9 +280,7 @@ fn selector_covers_all_blocks_on_real_manifest() {
 
 #[test]
 fn zero_shot_and_icl_run_end_to_end() {
-    if !have() {
-        return;
-    }
+    require_artifacts!();
     for method in [Method::ZeroShot, Method::Icl] {
         let mut cfg = micro_cfg();
         cfg.method = method;
@@ -332,9 +294,7 @@ fn zero_shot_and_icl_run_end_to_end() {
 fn ft_beats_zo_in_few_steps() {
     // FO with Adam must make visible progress in 30 steps where ZO cannot —
     // the paper's accuracy-vs-memory trade
-    if !have() {
-        return;
-    }
+    require_artifacts!();
     let mut cfg = micro_cfg();
     cfg.method = Method::Ft;
     cfg.steps = 30;
@@ -351,12 +311,10 @@ fn ft_beats_zo_in_few_steps() {
 fn smezo_step_slower_but_converging_path_runs() {
     // Sparse-MeZO baseline: runs, restores correctly, and its step is NOT
     // cheaper than MeZO's (the paper's criticism, as an executable assert)
-    if !have() {
-        return;
-    }
+    require_artifacts!();
     let m = Manifest::load(&art()).unwrap();
     if !m.files.contains_key(&format!("zo_axpy_masked_{}", m.unit_lens[0])) {
-        eprintln!("skipping: artifacts lack masked kernels");
+        eprintln!("SKIPPED: artifacts lack masked kernels");
         return;
     }
     let mut mezo = micro_cfg();
@@ -381,9 +339,7 @@ fn smezo_step_slower_but_converging_path_runs() {
 
 #[test]
 fn selection_policies_all_train() {
-    if !have() {
-        return;
-    }
+    require_artifacts!();
     for policy in ["uniform", "round-robin", "stratified", "weighted"] {
         let mut cfg = micro_cfg();
         cfg.method = Method::Lezo;
@@ -395,5 +351,25 @@ fn selection_policies_all_train() {
         let r = Trainer::new(cfg).run().unwrap();
         assert_eq!(r.losses.len(), 6, "{policy}");
         assert!(r.losses.iter().all(|l| l.is_finite()), "{policy}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-backend agreement: PJRT vs the native reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_and_pjrt_zo_axpy_agree() {
+    require_artifacts!();
+    let pjrt = open();
+    let native = lezo::runtime::NativeBackend::preset("opt-micro").unwrap();
+    let n = pjrt.spec().unit_lens()[1];
+    let host: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
+    let pb = pjrt.upload(&host).unwrap();
+    let nb = native.upload(&host).unwrap();
+    let a = pjrt.download(&pjrt.zo_axpy(&pb, n, 77, 0.5).unwrap()).unwrap();
+    let b = native.download(&native.zo_axpy(&nb, n, 77, 0.5).unwrap()).unwrap();
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!((x - y).abs() < 3e-5, "idx {i}: pjrt {x} vs native {y}");
     }
 }

@@ -1,0 +1,269 @@
+//! Hermetic end-to-end tests over the pure-Rust native backend.
+//!
+//! Everything here runs with ZERO external artifacts — no PJRT plugin, no
+//! AOT HLO, no Python. This is the suite that makes the LeZO algorithm
+//! testable on any machine: the full perturb -> forward -> flip -> forward
+//! -> restore -> update loop, the layer selector, Sparse-MeZO, evaluation,
+//! and trainer-level reproducibility. The PJRT twin of these invariants
+//! lives in rust/tests/integration.rs (feature `pjrt` + artifacts).
+//!
+//! Hyperparameters of the convergence smoke test were calibrated against a
+//! Python simulation of the identical algorithm (same Philox stream, same
+//! SplitMix64 seed derivation, same model math): at lr=1e-2, mu=1e-3 the
+//! fixed-batch loss drops ~0.15 nats in 30 steps across seeds, so the
+//! asserted 0.05 margin has >= 3x headroom.
+
+use lezo::config::{Method, RunConfig};
+use lezo::coordinator::metrics::StageTimes;
+use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
+use lezo::coordinator::Trainer;
+use lezo::data::batch::Batch;
+use lezo::peft::PeftMode;
+use lezo::runtime::backend::{Backend, BackendKind};
+use lezo::runtime::NativeBackend;
+
+fn nano_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "opt-nano".into();
+    cfg.backend = BackendKind::Native;
+    cfg.steps = 4;
+    cfg.eval_every = 4;
+    cfg.eval_examples = 8;
+    cfg.train_examples = 16;
+    cfg.mean_len = 10;
+    cfg.lr = 1e-4;
+    cfg
+}
+
+/// Fixed overfit batch shared by the convergence tests (mirrors the
+/// calibration simulation exactly).
+fn fixed_batch(rows: usize, seq: usize) -> Batch {
+    let seqs: Vec<Vec<u32>> = (0..rows)
+        .map(|r| (0..seq as u32).map(|s| 20 + ((r as u32 * 7 + s * 3) % 200)).collect())
+        .collect();
+    Batch::lm_batch(&seqs, rows, seq).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level invariants (the acceptance criterion: a full ZO training
+// step — perturb/forward/flip/forward/restore/update — with no artifacts)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn e2e_convergence_zo_overfits_a_fixed_batch() {
+    let backend = NativeBackend::preset("opt-nano").unwrap();
+    let host = backend.initial_params("").unwrap().0;
+    let mut units = TunableUnits::from_host(&backend, &host).unwrap();
+    let engine = SpsaEngine::new(&backend, 1e-3, 7).unwrap();
+    let active: Vec<usize> = (0..units.n_units()).collect();
+    let batch = fixed_batch(4, 16);
+    let prepared = backend.prepare_batch(&batch).unwrap();
+    let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+        backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+    };
+    let mut times = StageTimes::default();
+    let mut losses = Vec::new();
+    for step in 0..30u64 {
+        let zs = engine
+            .zo_step(step, &mut units, &active, 1e-2, &mut loss_fn, &mut times)
+            .unwrap();
+        assert!(zs.loss().is_finite(), "step {step}: loss diverged");
+        losses.push(zs.loss());
+    }
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first - 0.05,
+        "ZO must overfit the fixed batch: first-5 mean {first:.4}, last-5 mean {last:.4}"
+    );
+    assert_eq!(times.steps, 30);
+    assert!(times.forward_secs > 0.0 && times.perturb_secs > 0.0);
+}
+
+#[test]
+fn e2e_perturb_flip_restore_round_trips_parameters() {
+    let backend = NativeBackend::preset("opt-nano").unwrap();
+    let host = backend.initial_params("").unwrap().0;
+    let mut units = TunableUnits::from_host(&backend, &host).unwrap();
+    let engine = SpsaEngine::new(&backend, 1e-3, 3).unwrap();
+    let active: Vec<usize> = (0..units.n_units()).collect();
+    let batch = fixed_batch(2, 16);
+    let prepared = backend.prepare_batch(&batch).unwrap();
+    let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+        backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+    };
+    // lr = 0: the step reduces to perturb -> flip -> restore, an identity
+    let mut times = StageTimes::default();
+    engine.zo_step(0, &mut units, &active, 0.0, &mut loss_fn, &mut times).unwrap();
+    let after = units.to_host(&backend).unwrap();
+    for (k, (a, o)) in after.iter().zip(&host).enumerate() {
+        for (x, y) in a.iter().zip(o) {
+            assert!((x - y).abs() < 1e-5, "unit {k}: {x} vs {y} (restore drift)");
+        }
+    }
+}
+
+#[test]
+fn e2e_identical_run_seed_identical_step_trajectory() {
+    let mut trajectories = Vec::new();
+    for _ in 0..2 {
+        let backend = NativeBackend::preset("opt-nano").unwrap();
+        let host = backend.initial_params("").unwrap().0;
+        let mut units = TunableUnits::from_host(&backend, &host).unwrap();
+        let engine = SpsaEngine::new(&backend, 1e-3, 42).unwrap();
+        let active: Vec<usize> = (0..units.n_units()).collect();
+        let batch = fixed_batch(2, 16);
+        let prepared = backend.prepare_batch(&batch).unwrap();
+        let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+            backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+        };
+        let mut times = StageTimes::default();
+        let mut losses = Vec::new();
+        for step in 0..5u64 {
+            losses.push(
+                engine
+                    .zo_step(step, &mut units, &active, 1e-3, &mut loss_fn, &mut times)
+                    .unwrap()
+                    .loss(),
+            );
+        }
+        trajectories.push((losses, units.to_host(&backend).unwrap()));
+    }
+    assert_eq!(trajectories[0].0, trajectories[1].0, "losses must be bit-identical");
+    assert_eq!(trajectories[0].1, trajectories[1].1, "parameters must be bit-identical");
+}
+
+// ---------------------------------------------------------------------------
+// Trainer-level runs (data sampling, selector, eval — the whole loop)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trainer_mezo_equals_lezo_with_zero_drop() {
+    // MeZO is the drop=0 special case: identical trajectories, bit-for-bit.
+    let mut a = nano_cfg();
+    a.method = Method::Mezo;
+    a.drop_layers = 0;
+    let mut b = a.clone();
+    b.method = Method::Lezo;
+    let ra = Trainer::new(a).run().unwrap();
+    let rb = Trainer::new(b).run().unwrap();
+    assert_eq!(ra.losses, rb.losses, "loss trajectories must match exactly");
+    assert_eq!(ra.final_metric, rb.final_metric);
+    assert_eq!(ra.backend, "native");
+}
+
+#[test]
+fn trainer_runs_are_reproducible_and_seed_sensitive() {
+    let mut cfg = nano_cfg();
+    cfg.method = Method::Lezo;
+    cfg.drop_layers = 1;
+    let r1 = Trainer::new(cfg.clone()).run().unwrap();
+    let r2 = Trainer::new(cfg.clone()).run().unwrap();
+    assert_eq!(r1.losses, r2.losses);
+    assert_eq!(r1.final_metric, r2.final_metric);
+    cfg.seed = 99;
+    let r3 = Trainer::new(cfg).run().unwrap();
+    assert_ne!(r1.losses, r3.losses, "different seeds must differ");
+}
+
+#[test]
+fn trainer_lezo_drops_cut_active_params() {
+    let mut mezo = nano_cfg();
+    mezo.method = Method::Mezo;
+    let mut lezo = nano_cfg();
+    lezo.method = Method::Lezo;
+    lezo.drop_layers = 1; // of opt-nano's 2 blocks
+    let rm = Trainer::new(mezo).run().unwrap();
+    let rl = Trainer::new(lezo).run().unwrap();
+    assert!((rm.active_param_fraction - 1.0).abs() < 1e-9, "MeZO touches everything");
+    assert!(
+        rl.active_param_fraction < rm.active_param_fraction,
+        "LeZO must touch fewer parameters per step: {} vs {}",
+        rl.active_param_fraction,
+        rm.active_param_fraction
+    );
+    assert!(rl.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn trainer_smezo_baseline_runs_natively() {
+    let mut cfg = nano_cfg();
+    cfg.method = Method::Smezo;
+    cfg.steps = 3;
+    cfg.eval_every = 3;
+    let r = Trainer::new(cfg).run().unwrap();
+    assert_eq!(r.losses.len(), 3);
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    assert!(r.stage_times.other_secs >= 0.0, "ranking time is accounted");
+}
+
+#[test]
+fn trainer_zero_shot_and_icl_run_natively() {
+    for method in [Method::ZeroShot, Method::Icl] {
+        let mut cfg = nano_cfg();
+        cfg.method = method;
+        let r = Trainer::new(cfg).run().unwrap();
+        assert!((0.0..=1.0).contains(&r.final_metric), "{method}");
+        assert_eq!(r.stage_times.steps, 0, "no training steps for {method}");
+    }
+}
+
+#[test]
+fn trainer_all_selection_policies_run_natively() {
+    for policy in ["uniform", "round-robin", "stratified", "weighted"] {
+        let mut cfg = nano_cfg();
+        cfg.method = Method::Lezo;
+        cfg.drop_layers = 1;
+        cfg.steps = 3;
+        cfg.eval_every = 3;
+        cfg.set("policy", policy).unwrap();
+        let r = Trainer::new(cfg).run().unwrap();
+        assert_eq!(r.losses.len(), 3, "{policy}");
+        assert!(r.losses.iter().all(|l| l.is_finite()), "{policy}");
+    }
+}
+
+#[test]
+fn trainer_all_task_kinds_run_natively() {
+    for task in ["sst2", "copa", "squad"] {
+        let mut cfg = nano_cfg();
+        cfg.task = task.into();
+        cfg.method = Method::Lezo;
+        cfg.steps = 2;
+        cfg.eval_every = 2;
+        let r = Trainer::new(cfg).run().unwrap();
+        assert!((0.0..=1.0).contains(&r.final_metric), "{task}");
+        assert_eq!(r.losses.len(), 2, "{task}");
+    }
+}
+
+#[test]
+fn requesting_pjrt_without_support_fails_loudly() {
+    // backend=pjrt in a build without the feature (or without artifacts)
+    // must error, not silently fall back to native.
+    let mut cfg = nano_cfg();
+    cfg.backend = BackendKind::Pjrt;
+    let result = Trainer::new(cfg).run();
+    if !cfg!(feature = "pjrt") {
+        let err = result.unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    } else if let Ok(r) = result {
+        assert_eq!(r.backend, "pjrt");
+    }
+}
+
+#[test]
+fn auto_backend_falls_back_to_native_without_artifacts() {
+    // opt-nano never has artifacts, so `auto` must resolve to native.
+    // LEZO_BACKEND steers `auto`, so the fallback is only observable in a
+    // clean environment — skip (visibly) otherwise.
+    if std::env::var("LEZO_BACKEND").map(|s| !s.is_empty()).unwrap_or(false) {
+        eprintln!("SKIPPED auto_backend_falls_back_to_native_without_artifacts: LEZO_BACKEND set");
+        return;
+    }
+    let mut cfg = nano_cfg();
+    cfg.backend = BackendKind::Auto;
+    cfg.method = Method::ZeroShot;
+    let r = Trainer::new(cfg).run().unwrap();
+    assert_eq!(r.backend, "native");
+}
