@@ -1,22 +1,31 @@
 //! `cargo bench` — microbenchmarks of the ZO hot path (hand-rolled harness;
 //! criterion is not vendored in this offline image).
 //!
-//! Covers: per-unit zo_axpy latency, forward-pass latency per bucket, and a
-//! full MeZO-vs-LeZO step comparison — the raw numbers behind Figs. 2 and 4.
-//! Backend-generic: the native backend runs with zero artifacts on any
-//! machine; with `--features pjrt` and exported artifacts the same harness
-//! times the PJRT runtime. For the full table/figure regeneration use
-//! `lezo bench <id>`.
+//! Covers: per-unit zo_axpy latency (allocating and in-place), forward-pass
+//! latency per bucket, and a full MeZO-vs-LeZO step comparison — the raw
+//! numbers behind Figs. 2 and 4. Backend-generic: the native backend runs
+//! with zero artifacts on any machine; with `--features pjrt` and exported
+//! artifacts the same harness times the PJRT runtime. For the full
+//! table/figure regeneration use `lezo bench <id>`.
+//!
+//! Besides the stdout table, every run writes a machine-readable report to
+//! `BENCH_native.json` (override with `LEZO_BENCH_JSON=<path>`) so the perf
+//! trajectory is tracked across PRs: per-kernel ms + effective GB/s,
+//! MeZO-vs-LeZO step times, and the perturb/forward/update stage split from
+//! `StageTimes`. CI smoke-checks that the file is produced and well-formed.
 //!
 //! Usage: `cargo bench -- [native:MODEL|pjrt:MODEL ...]`
 //! (default: `native:opt-micro`, plus every pjrt model with artifacts).
+//! Env: `LEZO_BENCH_ITERS` (default 15), `LEZO_THREADS`, `LEZO_BENCH_JSON`.
 
 use lezo::coordinator::metrics::StageTimes;
 use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
 use lezo::data::batch::Batch;
 use lezo::peft::PeftMode;
 use lezo::runtime::backend::Backend;
+use lezo::runtime::native::parallel;
 use lezo::runtime::NativeBackend;
+use std::fmt::Write as _;
 use std::time::Instant;
 
 fn time_ms<F: FnMut()>(iters: usize, mut f: F) -> f64 {
@@ -36,19 +45,143 @@ fn lm_batch(spec: &lezo::model::ModelSpec, seq: usize) -> Batch {
     Batch::lm_batch(&seqs, spec.train_batch, seq).unwrap()
 }
 
-fn bench_backend<B: Backend>(backend: &B, iters: usize) {
+// ---------------------------------------------------------------------------
+// Machine-readable report (hand-rolled writer; serde is not vendored)
+// ---------------------------------------------------------------------------
+
+struct KernelStat {
+    kernel: &'static str,
+    len: usize,
+    ms: f64,
+    gbs: f64,
+}
+
+struct ForwardStat {
+    seq: usize,
+    batch: usize,
+    ms: f64,
+}
+
+struct StepStat {
+    name: &'static str,
+    ms_per_step: f64,
+    perturb_ms: f64,
+    forward_ms: f64,
+    update_ms: f64,
+    non_forward_fraction: f64,
+}
+
+struct TargetReport {
+    backend: &'static str,
+    model: String,
+    params: usize,
+    blocks: usize,
+    kernels: Vec<KernelStat>,
+    forward: Vec<ForwardStat>,
+    steps: Vec<StepStat>,
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn report_json(iters: usize, targets: &[TargetReport]) -> String {
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "{{\n  \"version\": 1,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
+        parallel::effective_threads()
+    );
+    for (ti, t) in targets.iter().enumerate() {
+        if ti > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "\n    {{\n      \"backend\": \"{}\",\n      \"model\": \"{}\",\n      \
+             \"params\": {},\n      \"blocks\": {},\n      \"zo_axpy\": [",
+            t.backend, t.model, t.params, t.blocks
+        );
+        for (i, k) in t.kernels.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n        {{\"kernel\": \"{}\", \"len\": {}, \"ms\": {}, \"gbs\": {}}}",
+                k.kernel,
+                k.len,
+                json_num(k.ms),
+                json_num(k.gbs)
+            );
+        }
+        s.push_str("\n      ],\n      \"forward_loss\": [");
+        for (i, f) in t.forward.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n        {{\"seq\": {}, \"batch\": {}, \"ms\": {}}}",
+                f.seq,
+                f.batch,
+                json_num(f.ms)
+            );
+        }
+        s.push_str("\n      ],\n      \"steps\": [");
+        for (i, st) in t.steps.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n        {{\"name\": \"{}\", \"ms_per_step\": {}, \"perturb_ms\": {}, \
+                 \"forward_ms\": {}, \"update_ms\": {}, \"non_forward_fraction\": {}}}",
+                st.name,
+                json_num(st.ms_per_step),
+                json_num(st.perturb_ms),
+                json_num(st.forward_ms),
+                json_num(st.update_ms),
+                json_num(st.non_forward_fraction)
+            );
+        }
+        s.push_str("\n      ]\n    }");
+    }
+    s.push_str("\n  ]\n}\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Benchmarks
+// ---------------------------------------------------------------------------
+
+fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
     let spec = backend.spec().clone();
     println!(
-        "\n== {} [{}] ({} params, {} blocks) ==",
+        "\n== {} [{}] ({} params, {} blocks, {} threads) ==",
         spec.name,
         backend.name(),
         spec.param_count(),
-        spec.n_layers
+        spec.n_layers,
+        parallel::effective_threads()
     );
     backend.warm_zo().unwrap();
     let host = backend.initial_params("").unwrap().0;
+    let mut report = TargetReport {
+        backend: backend.name(),
+        model: spec.name.clone(),
+        params: spec.param_count(),
+        blocks: spec.n_layers,
+        kernels: vec![],
+        forward: vec![],
+        steps: vec![],
+    };
 
-    // --- zo_axpy per unit length ---
+    // --- zo_axpy per unit length: allocating and in-place ---
     let mut seen = std::collections::BTreeSet::new();
     for &n in spec.unit_lens().iter().filter(|&&n| seen.insert(n)) {
         let p = backend.upload(&vec![0.1f32; n]).unwrap();
@@ -56,7 +189,16 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) {
             let _ = backend.zo_axpy(&p, n, 1, 1e-3).unwrap();
         });
         let gbs = (8.0 * n as f64) / (ms / 1e3) / 1e9; // 1 load + 1 store, f32
-        println!("  zo_axpy[{n:>9}] {ms:>8.3} ms  ({gbs:.2} GB/s effective)");
+        println!("  zo_axpy        [{n:>9}] {ms:>8.3} ms  ({gbs:.2} GB/s effective)");
+        report.kernels.push(KernelStat { kernel: "zo_axpy", len: n, ms, gbs });
+
+        let mut q = backend.upload(&vec![0.1f32; n]).unwrap();
+        let ms = time_ms(iters, || {
+            backend.zo_axpy_inplace(&mut q, n, 1, 1e-3).unwrap();
+        });
+        let gbs = (8.0 * n as f64) / (ms / 1e3) / 1e9;
+        println!("  zo_axpy_inplace[{n:>9}] {ms:>8.3} ms  ({gbs:.2} GB/s effective)");
+        report.kernels.push(KernelStat { kernel: "zo_axpy_inplace", len: n, ms, gbs });
     }
 
     // --- forward per bucket ---
@@ -69,6 +211,7 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) {
             let _ = backend.forward_loss(PeftMode::Full, &refs, &prepared).unwrap();
         });
         println!("  forward_loss[s{s:>3}] {ms:>7.2} ms (batch {})", spec.train_batch);
+        report.forward.push(ForwardStat { seq: s, batch: spec.train_batch, ms });
     }
 
     // --- full ZO step: MeZO vs LeZO(75%) ---
@@ -76,11 +219,8 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) {
     let prepared = backend.prepare_batch(&batch).unwrap();
     let drop = (3 * spec.n_layers) / 4;
     for (name, active) in [
-        ("MeZO step      ", (0..spec.n_units()).collect::<Vec<_>>()),
-        (
-            "LeZO step (75%)",
-            (0..spec.n_units()).filter(|&k| k == 0 || k > drop).collect::<Vec<_>>(),
-        ),
+        ("mezo", (0..spec.n_units()).collect::<Vec<_>>()),
+        ("lezo75", (0..spec.n_units()).filter(|&k| k == 0 || k > drop).collect::<Vec<_>>()),
     ] {
         let eng = SpsaEngine::new(backend, 1e-3, 1).unwrap();
         let mut tun = TunableUnits::<B>::from_host(backend, &host).unwrap();
@@ -95,17 +235,29 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) {
         let ms = 1e3 * t.elapsed().as_secs_f64() / iters as f64;
         let (p, f, u, _) = times.per_step_ms();
         println!(
-            "  {name} {ms:>7.1} ms/step (perturb {p:.1} + forward {f:.1} + update {u:.1}), non-forward {:.0}%",
+            "  {name:<15} {ms:>7.1} ms/step (perturb {p:.1} + forward {f:.1} + update {u:.1}), non-forward {:.0}%",
             100.0 * times.non_forward_fraction()
         );
+        report.steps.push(StepStat {
+            name,
+            ms_per_step: ms,
+            perturb_ms: p,
+            forward_ms: f,
+            update_ms: u,
+            non_forward_fraction: times.non_forward_fraction(),
+        });
     }
+    report
 }
 
-fn run_target(target: &str, iters: usize) {
+fn run_target(target: &str, iters: usize) -> Option<TargetReport> {
     match target.split_once(':') {
         Some(("native", model)) => match NativeBackend::preset(model) {
-            Ok(b) => bench_backend(&b, iters),
-            Err(e) => eprintln!("[skip] {target}: {e}"),
+            Ok(b) => Some(bench_backend(&b, iters)),
+            Err(e) => {
+                eprintln!("[skip] {target}: {e}");
+                None
+            }
         },
         Some(("pjrt", model)) => {
             #[cfg(feature = "pjrt")]
@@ -113,20 +265,27 @@ fn run_target(target: &str, iters: usize) {
                 let dir = lezo::runtime::backend::default_artifact_dir(model);
                 if !lezo::runtime::backend::artifacts_available(&dir) {
                     eprintln!("[skip] {target}: no artifacts");
-                    return;
+                    return None;
                 }
                 match lezo::runtime::PjrtBackend::open(&dir) {
-                    Ok(b) => bench_backend(&b, iters),
-                    Err(e) => eprintln!("[skip] {target}: {e}"),
+                    Ok(b) => Some(bench_backend(&b, iters)),
+                    Err(e) => {
+                        eprintln!("[skip] {target}: {e}");
+                        None
+                    }
                 }
             }
             #[cfg(not(feature = "pjrt"))]
             {
                 let _ = model;
                 eprintln!("[skip] {target}: built without the pjrt feature");
+                None
             }
         }
-        _ => eprintln!("[skip] {target}: use native:MODEL or pjrt:MODEL"),
+        _ => {
+            eprintln!("[skip] {target}: use native:MODEL or pjrt:MODEL");
+            None
+        }
     }
 }
 
@@ -147,7 +306,12 @@ fn main() {
     let iters: usize =
         std::env::var("LEZO_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
     println!("ZO hot-path microbenchmarks");
-    for t in &targets {
-        run_target(t, iters);
+    let reports: Vec<TargetReport> = targets.iter().filter_map(|t| run_target(t, iters)).collect();
+
+    let path =
+        std::env::var("LEZO_BENCH_JSON").unwrap_or_else(|_| "BENCH_native.json".to_string());
+    match std::fs::write(&path, report_json(iters, &reports)) {
+        Ok(()) => println!("\nwrote {path} ({} targets)", reports.len()),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
     }
 }

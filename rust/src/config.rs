@@ -106,6 +106,11 @@ pub struct RunConfig {
     /// Sparse-MeZO: fraction of each unit's smallest-|w| elements that stay
     /// tunable (the magnitude mask).
     pub smezo_keep: f64,
+    /// Native-backend worker threads (0 = auto / available parallelism).
+    /// The `LEZO_THREADS` env var overrides this at kernel-entry time.
+    /// Results are bit-identical at any setting — the native kernels use
+    /// fixed chunk partitioning (see `runtime/native/parallel.rs`).
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -134,6 +139,7 @@ impl Default for RunConfig {
             blocks_only: true,
             policy: Policy::Uniform,
             smezo_keep: 0.5,
+            threads: 0,
         }
     }
 }
@@ -171,6 +177,7 @@ impl RunConfig {
             "blocks_only" => self.blocks_only = parse!(),
             "policy" => self.policy = parse!(),
             "smezo_keep" => self.smezo_keep = parse!(),
+            "threads" => self.threads = parse!(),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -284,6 +291,15 @@ mod tests {
         assert!(c.apply_overrides(&["lr".into()]).is_err());
         assert!(c.apply_overrides(&["method=sgd".into()]).is_err());
         assert!(c.apply_overrides(&["backend=gpu".into()]).is_err());
+    }
+
+    #[test]
+    fn threads_key_parses() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.threads, 0, "default is auto");
+        c.apply_overrides(&["threads=4".into()]).unwrap();
+        assert_eq!(c.threads, 4);
+        assert!(c.apply_overrides(&["threads=many".into()]).is_err());
     }
 
     #[test]

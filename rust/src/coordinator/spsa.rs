@@ -94,10 +94,12 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
         Ok(SpsaEngine { backend, mu, run_seed })
     }
 
-    /// `unit <- unit + c * z(seed)` for one flat unit (in-place replace).
+    /// `unit <- unit + c * z(seed)` for one flat unit. Routed through the
+    /// backend's in-place kernel: on the native backend the four sweeps of
+    /// a step allocate nothing; device backends fall back to the trait's
+    /// allocate-and-swap default.
     fn axpy(&self, units: &mut TunableUnits<B>, k: usize, seed: i32, c: f32) -> Result<()> {
-        units.bufs[k] = self.backend.zo_axpy(&units.bufs[k], units.lens[k], seed, c)?;
-        Ok(())
+        self.backend.zo_axpy_inplace(&mut units.bufs[k], units.lens[k], seed, c)
     }
 
     /// Apply `c * z` to every active unit.
@@ -172,8 +174,8 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
     ) -> Result<()> {
         for k in 0..units.n_units() {
             let seed = zo_seed(self.run_seed, step, k);
-            units.bufs[k] = self.backend.zo_axpy_masked(
-                &units.bufs[k],
+            self.backend.zo_axpy_masked_inplace(
+                &mut units.bufs[k],
                 &pref[k],
                 taus[k],
                 units.lens[k],
@@ -202,10 +204,11 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
         anyhow::ensure!(taus.len() == units.n_units(), "one tau per unit");
         let mut t = StageTimer::start();
 
-        // snapshot: buffers are replaced (never mutated in place), so the
-        // pre-step handles ARE the reference; the first perturb replaces
-        // them in `units` while we keep them alive here (Sparse-MeZO's
-        // extra state, held one step).
+        // snapshot: the first perturb goes through the *allocating* masked
+        // kernel, so the pre-step handles ARE the reference — we keep them
+        // alive here (Sparse-MeZO's extra state, held one step) while the
+        // fresh buffers replace them in `units`. The later sweeps mutate
+        // `units` in place against this stable snapshot.
         let mut pref: Vec<B::Buffer> = Vec::with_capacity(units.n_units());
         for k in 0..units.n_units() {
             let seed = zo_seed(self.run_seed, step, k);

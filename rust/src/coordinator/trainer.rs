@@ -160,11 +160,18 @@ impl Trainer {
 
     /// Execute the configured run end to end on the resolved backend.
     pub fn run(&self) -> Result<TrainReport> {
-        match resolve_backend(&self.cfg)? {
-            ResolvedBackend::Native(b) => self.run_with(&b),
-            #[cfg(feature = "pjrt")]
-            ResolvedBackend::Pjrt(b) => self.run_with(&b),
-        }
+        // `threads` config key -> native kernel worker count (0 = auto),
+        // scoped to this run via a thread-local override so concurrent
+        // runs in one process cannot clobber each other; LEZO_THREADS
+        // still wins at kernel entry. Library users driving `run_with`
+        // directly use `parallel::with_threads` / `parallel::set_threads`.
+        crate::runtime::native::parallel::with_threads(self.cfg.threads, || {
+            match resolve_backend(&self.cfg)? {
+                ResolvedBackend::Native(b) => self.run_with(&b),
+                #[cfg(feature = "pjrt")]
+                ResolvedBackend::Pjrt(b) => self.run_with(&b),
+            }
+        })
     }
 
     /// Execute the configured run on a caller-supplied backend.

@@ -26,8 +26,10 @@
 //!   ([`coordinator::trainer`]), evaluation ([`eval`]) and the bench harness
 //!   ([`bench`]) — all generic over the [`runtime::Backend`] trait.
 //! - **Runtime**: [`runtime::native`] is a pure-Rust CPU backend (Philox
-//!   Gaussian regeneration bit-compatible with the Pallas kernel, native
-//!   (masked) zo_axpy, a reference transformer forward). [`runtime::pjrt`]
+//!   Gaussian regeneration bit-compatible with the Pallas kernel, in-place
+//!   allocation-free (masked) zo_axpy sweeps, blocked thread-parallel
+//!   transformer kernels with a fused streaming LM head, plus the naive
+//!   dense reference they are tested against). [`runtime::pjrt`]
 //!   (feature `pjrt`) executes the AOT HLO artifacts instead.
 //! - **L2/L1** live in `python/compile/` and never run on the request path.
 //!

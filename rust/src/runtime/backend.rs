@@ -1,5 +1,6 @@
 //! The pluggable `Backend` abstraction: tensor storage, host transfer, and
-//! the executable families (`ZoAxpy`, `ZoAxpyMasked`, `ForwardLoss`,
+//! the executable families (`ZoAxpy`, `ZoAxpyMasked` — each with an
+//! in-place variant the SPSA sweeps route through — `ForwardLoss`,
 //! `ExampleLosses`, `Predict`, `ForwardBackward`) behind one trait.
 //!
 //! Two implementations ship in-tree:
@@ -60,6 +61,41 @@ pub trait Backend {
         seed: i32,
         coeff: f32,
     ) -> Result<Self::Buffer>;
+
+    /// In-place `unit[i] += coeff * z(seed, i)` — what the four
+    /// full-parameter sweeps of a ZO step (perturb / flip / restore /
+    /// update) actually need. Host-resident backends override this to
+    /// mutate with zero allocations; the default routes through the
+    /// allocating [`Backend::zo_axpy`] and swaps the buffer, so device
+    /// backends (PJRT) keep their executable path unchanged. Results must
+    /// match the allocating path bit for bit.
+    fn zo_axpy_inplace(
+        &self,
+        unit: &mut Self::Buffer,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<()> {
+        let out = self.zo_axpy(unit, len, seed, coeff)?;
+        *unit = out;
+        Ok(())
+    }
+
+    /// In-place twin of [`Backend::zo_axpy_masked`], same default-fallback
+    /// contract as [`Backend::zo_axpy_inplace`].
+    fn zo_axpy_masked_inplace(
+        &self,
+        unit: &mut Self::Buffer,
+        pref: &Self::Buffer,
+        tau: f32,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<()> {
+        let out = self.zo_axpy_masked(unit, pref, tau, len, seed, coeff)?;
+        *unit = out;
+        Ok(())
+    }
 
     // ---- model executables -------------------------------------------------
 

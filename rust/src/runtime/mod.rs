@@ -14,8 +14,12 @@
 //!
 //! - [`backend`] — the `Backend` trait + backend selection helpers.
 //! - [`philox`] — counter-based Philox-4x32 Gaussian stream (native twin of
-//!   the Pallas kernel; pinned to it by known-answer tests).
+//!   the Pallas kernel; pinned to it by known-answer tests), including the
+//!   multi-lane `fill_gauss` bulk fill the native sweeps stream through.
 //! - [`native`] — pure-Rust CPU backend: zero artifacts, zero plugins.
+//!   Hot path: scoped worker threads with fixed deterministic chunking
+//!   (`native::parallel`), blocked kernels + fused streaming LM head
+//!   (`native::kernels`), dense reference (`native::forward`).
 //! - [`client`] / [`exes`] / [`pjrt`] (feature `pjrt`) — the PJRT client,
 //!   the lazily compiled executable registry, and the PJRT backend.
 

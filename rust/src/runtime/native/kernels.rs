@@ -1,0 +1,720 @@
+//! Blocked, thread-parallel, allocation-free CPU kernels for the native
+//! hot path — the fast twin of the naive reference in [`super::forward`].
+//!
+//! Everything here is built on [`super::parallel`]'s fixed-chunk scoped
+//! threads, so results are bit-identical at any thread count:
+//!
+//! - [`axpy_gauss_inplace`] / [`axpy_gauss_masked_inplace`] — in-place ZO
+//!   perturb/update sweeps streaming the multi-lane Philox fill
+//!   ([`crate::runtime::philox::fill_gauss`]); zero allocations per sweep.
+//! - [`matmul_bias_into`] — cache-blocked over the `din` axis (each weight
+//!   panel is reused across every row of a chunk), row-parallel.
+//! - [`layernorm_into`] / [`gelu_inplace`] — row-/element-parallel with the
+//!   reference f64 reductions.
+//! - [`attention_into`] — causal multi-head attention parallel over
+//!   (row, head) tasks, each writing a disjoint `[seq, d_head]` column
+//!   slice of the context buffer.
+//! - [`forward_hidden`] — the full transformer forward into a reusable
+//!   [`ForwardScratch`] arena (buffers allocated once, reused across
+//!   matmuls, blocks, and forward calls).
+//! - [`fused_masked_xent`] / [`fused_argmax`] — the streaming LM head: a
+//!   per-position logsumexp + gold-logit (or argmax) over vocab tiles that
+//!   never materializes the `rows*seq*vocab` logits tensor, the dominant
+//!   memory + bandwidth cost at real vocab sizes. The dense tensor remains
+//!   available from [`super::forward::forward_logits`] as the slow
+//!   reference the fused paths are tested against (≤ 1e-4).
+
+use super::parallel::{par_ranges, par_row_chunks, SendPtr};
+use crate::model::spec::ModelSpec;
+use crate::runtime::philox::fill_gauss;
+use anyhow::{ensure, Result};
+
+pub(crate) const LN_EPS: f32 = 1e-5;
+
+/// Stack buffer for streamed Gaussian blocks (8 cache lines).
+const ZBUF: usize = 256;
+/// Vocab tile width of the streaming LM head (stack-resident logits).
+const VOCAB_TILE: usize = 64;
+/// `din`-axis block of the matmul: one `MM_IBLOCK x dout` weight panel
+/// stays cache-hot across every row of a chunk.
+const MM_IBLOCK: usize = 64;
+
+/// Minimum items per chunk so one chunk is worth a thread dispatch:
+/// `target_ops / per_item_ops`, floored at 1.
+fn grain_for(per_item_ops: usize, target_ops: usize) -> usize {
+    (target_ops / per_item_ops.max(1)).max(1)
+}
+
+// ---------------------------------------------------------------------------
+// ZO sweeps (perturb / flip / restore / update)
+// ---------------------------------------------------------------------------
+
+/// In-place `p[i] += coeff * z(seed, i)` — the allocation-free fast path of
+/// the four full-parameter sweeps of a ZO step. Chunk-parallel; each
+/// element's arithmetic is independent, so any thread count produces the
+/// same bits as the allocating reference (`out[i] = p[i] + coeff * z`).
+pub fn axpy_gauss_inplace(p: &mut [f32], seed: u32, coeff: f32) {
+    let ptr = SendPtr(p.as_mut_ptr());
+    let grain = grain_for(160, 500_000); // ~160 ops per Philox+Box-Muller draw
+    par_ranges(p.len(), grain, |r| {
+        // SAFETY: par_ranges chunks are disjoint element ranges of `p`.
+        let chunk = unsafe { ptr.slice_mut(r.start, r.end - r.start) };
+        axpy_chunk(chunk, r.start as u32, seed, coeff);
+    });
+}
+
+fn axpy_chunk(p: &mut [f32], start_idx: u32, seed: u32, coeff: f32) {
+    let mut z = [0.0f32; ZBUF];
+    let mut done = 0usize;
+    while done < p.len() {
+        let m = (p.len() - done).min(ZBUF);
+        fill_gauss(seed, start_idx.wrapping_add(done as u32), &mut z[..m]);
+        for (pv, &zv) in p[done..done + m].iter_mut().zip(&z[..m]) {
+            *pv += coeff * zv;
+        }
+        done += m;
+    }
+}
+
+/// In-place Sparse-MeZO sweep: `p[i] += coeff * z(seed, i)` where
+/// `|pref[i]| <= tau`, else untouched. Same chunking as the dense sweep.
+pub fn axpy_gauss_masked_inplace(p: &mut [f32], pref: &[f32], tau: f32, seed: u32, coeff: f32) {
+    debug_assert_eq!(p.len(), pref.len());
+    let ptr = SendPtr(p.as_mut_ptr());
+    let grain = grain_for(160, 500_000);
+    par_ranges(p.len(), grain, |r| {
+        // SAFETY: par_ranges chunks are disjoint element ranges of `p`.
+        let chunk = unsafe { ptr.slice_mut(r.start, r.end - r.start) };
+        masked_axpy_chunk(chunk, &pref[r.start..r.end], tau, r.start as u32, seed, coeff);
+    });
+}
+
+fn masked_axpy_chunk(
+    p: &mut [f32],
+    pref: &[f32],
+    tau: f32,
+    start_idx: u32,
+    seed: u32,
+    coeff: f32,
+) {
+    let mut z = [0.0f32; ZBUF];
+    let mut done = 0usize;
+    while done < p.len() {
+        let m = (p.len() - done).min(ZBUF);
+        fill_gauss(seed, start_idx.wrapping_add(done as u32), &mut z[..m]);
+        let zs = &z[..m];
+        for ((pv, &q), &zv) in p[done..done + m].iter_mut().zip(&pref[done..done + m]).zip(zs) {
+            if q.abs() <= tau {
+                *pv += coeff * zv;
+            }
+        }
+        done += m;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense linear algebra
+// ---------------------------------------------------------------------------
+
+/// `out[r, o] = b[o] + sum_i x[r, i] * w[i, o]` (`w` row-major
+/// `(din, dout)`), cache-blocked and row-parallel. Accumulation order over
+/// `i` is ascending regardless of blocking or chunking, so every output
+/// element is a pure function of its inputs.
+pub fn matmul_bias_into(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n_rows: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(x.len(), n_rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(b.len(), dout);
+    debug_assert_eq!(out.len(), n_rows * dout);
+    let grain = grain_for(din * dout, 250_000); // rows per chunk
+    par_row_chunks(out, dout, grain, |r0, orows| {
+        for orow in orows.chunks_exact_mut(dout) {
+            orow.copy_from_slice(b);
+        }
+        let mut i0 = 0;
+        while i0 < din {
+            let i1 = (i0 + MM_IBLOCK).min(din);
+            let wpanel = &w[i0 * dout..i1 * dout];
+            for (rr, orow) in orows.chunks_exact_mut(dout).enumerate() {
+                let xrow = &x[(r0 + rr) * din + i0..(r0 + rr) * din + i1];
+                for (&xi, wrow) in xrow.iter().zip(wpanel.chunks_exact(dout)) {
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += xi * wv;
+                    }
+                }
+            }
+            i0 = i1;
+        }
+    });
+}
+
+/// `h += m`, elementwise.
+pub fn add_inplace(h: &mut [f32], m: &[f32]) {
+    debug_assert_eq!(h.len(), m.len());
+    for (hv, &mv) in h.iter_mut().zip(m) {
+        *hv += mv;
+    }
+}
+
+/// Row-parallel LayerNorm with the reference f64 mean/variance reductions
+/// (eps matches kernels/layernorm.py).
+pub fn layernorm_into(x: &[f32], gamma: &[f32], beta: &[f32], out: &mut [f32], d: usize) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert!(gamma.len() == d && beta.len() == d);
+    let grain = grain_for(4 * d, 65_536);
+    par_row_chunks(out, d, grain, |r0, orows| {
+        for (rr, orow) in orows.chunks_exact_mut(d).enumerate() {
+            let row = &x[(r0 + rr) * d..(r0 + rr + 1) * d];
+            let mean = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+            let var = row.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>()
+                / d as f64;
+            let inv = 1.0 / (var as f32 + LN_EPS).sqrt();
+            let mean = mean as f32;
+            for ((o, &v), (&g, &bv)) in orow.iter_mut().zip(row).zip(gamma.iter().zip(beta)) {
+                *o = (v - mean) * inv * g + bv;
+            }
+        }
+    });
+}
+
+pub(crate) fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Elementwise tanh-GELU, chunk-parallel.
+pub fn gelu_inplace(a: &mut [f32]) {
+    let ptr = SendPtr(a.as_mut_ptr());
+    par_ranges(a.len(), grain_for(24, 250_000), |r| {
+        // SAFETY: par_ranges chunks are disjoint element ranges of `a`.
+        let chunk = unsafe { ptr.slice_mut(r.start, r.end - r.start) };
+        for v in chunk.iter_mut() {
+            *v = gelu(*v);
+        }
+    });
+}
+
+/// Dot product with four independent accumulators so the reduction
+/// vectorizes. The accumulation pattern is fixed per (a, b) pair — it never
+/// depends on threads or chunking.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() - a.len() % 4;
+    let mut acc = [0.0f32; 4];
+    for (pa, pb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
+        acc[0] += pa[0] * pb[0];
+        acc[1] += pa[1] * pb[1];
+        acc[2] += pa[2] * pb[2];
+        acc[3] += pa[3] * pb[3];
+    }
+    let mut tail = 0.0f32;
+    for (&xv, &yv) in a[n4..].iter().zip(&b[n4..]) {
+        tail += xv * yv;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+// ---------------------------------------------------------------------------
+// Transformer forward
+// ---------------------------------------------------------------------------
+
+/// Named views into one flat block unit (layout documented in
+/// [`crate::model::spec::ModelSpec`]).
+pub(crate) struct BlockParams<'a> {
+    pub ln1_g: &'a [f32],
+    pub ln1_b: &'a [f32],
+    pub wq: &'a [f32],
+    pub bq: &'a [f32],
+    pub wk: &'a [f32],
+    pub bk: &'a [f32],
+    pub wv: &'a [f32],
+    pub bv: &'a [f32],
+    pub wo: &'a [f32],
+    pub bo: &'a [f32],
+    pub ln2_g: &'a [f32],
+    pub ln2_b: &'a [f32],
+    pub w1: &'a [f32],
+    pub b1: &'a [f32],
+    pub w2: &'a [f32],
+    pub b2: &'a [f32],
+}
+
+pub(crate) fn split_block<'a>(spec: &ModelSpec, mut p: &'a [f32]) -> BlockParams<'a> {
+    let d = spec.d_model;
+    let f = spec.d_ff();
+    let mut take = |n: usize| -> &'a [f32] {
+        let (head, rest) = p.split_at(n);
+        p = rest;
+        head
+    };
+    BlockParams {
+        ln1_g: take(d),
+        ln1_b: take(d),
+        wq: take(d * d),
+        bq: take(d),
+        wk: take(d * d),
+        bk: take(d),
+        wv: take(d * d),
+        bv: take(d),
+        wo: take(d * d),
+        bo: take(d),
+        ln2_g: take(d),
+        ln2_b: take(d),
+        w1: take(d * f),
+        b1: take(f),
+        w2: take(f * d),
+        b2: take(d),
+    }
+}
+
+/// Shared argument validation of every forward family (fast and reference).
+pub(crate) fn validate_forward_args(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+) -> Result<()> {
+    ensure!(
+        units.len() == spec.n_units(),
+        "expected {} units, got {}",
+        spec.n_units(),
+        units.len()
+    );
+    for (k, (u, len)) in units.iter().zip(spec.unit_lens()).enumerate() {
+        ensure!(u.len() == len, "unit {k}: expected {len} elements, got {}", u.len());
+    }
+    ensure!(tokens.len() == rows * seq, "tokens shape mismatch");
+    ensure!(seq <= spec.max_seq, "seq {seq} exceeds max_seq {}", spec.max_seq);
+    ensure!(
+        tokens.iter().all(|&t| t >= 0 && (t as usize) < spec.vocab),
+        "token id out of vocab range"
+    );
+    Ok(())
+}
+
+/// Loss-target validation: an in-mask target must be a valid vocab id (a
+/// hard error otherwise — a silently clamped gold index scores the wrong
+/// token); out-of-mask positions may hold anything (padding) because they
+/// never reach the gold-logit lookup.
+pub(crate) fn validate_targets(
+    targets: &[i32],
+    mask: &[f32],
+    n: usize,
+    vocab: usize,
+) -> Result<()> {
+    ensure!(targets.len() == n && mask.len() == n, "targets/mask shape mismatch");
+    for (p, (&t, &m)) in targets.iter().zip(mask).enumerate() {
+        if m > 0.0 {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "target {t} at loss-masked position {p} is outside the vocab (0..{vocab})"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Reusable forward arena: the per-block q/k/v/ctx/ffn buffers plus the
+/// residual stream, allocated once and reused across matmuls, blocks, and
+/// forward calls (`ensure` only grows them). The final-LN hidden states
+/// land in `x`; `xent` holds per-position losses for the fused head.
+#[derive(Default)]
+pub struct ForwardScratch {
+    pub h: Vec<f32>,
+    pub x: Vec<f32>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub ctx: Vec<f32>,
+    pub ffn: Vec<f32>,
+    pub xent: Vec<f32>,
+}
+
+impl ForwardScratch {
+    pub fn new() -> ForwardScratch {
+        ForwardScratch::default()
+    }
+
+    fn ensure(&mut self, n: usize, d: usize, f: usize) {
+        for buf in [&mut self.h, &mut self.x, &mut self.q, &mut self.k, &mut self.v, &mut self.ctx]
+        {
+            if buf.len() < n * d {
+                buf.resize(n * d, 0.0);
+            }
+        }
+        if self.ffn.len() < n * f {
+            self.ffn.resize(n * f, 0.0);
+        }
+        if self.xent.len() < n {
+            self.xent.resize(n, 0.0);
+        }
+    }
+}
+
+/// Causal multi-head attention + output projection added into `h`.
+/// Parallel over (row, head) tasks; task `(r, head)` writes only the
+/// `[seq, d_head]` column slice of `ctx` at head offset `head * d_head`
+/// within batch row `r` — disjoint across tasks. `q` is reused as the
+/// projection buffer afterwards.
+#[allow(clippy::too_many_arguments)]
+fn attention_into(
+    h: &mut [f32],
+    x: &[f32],
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &mut [f32],
+    ctx: &mut [f32],
+    p: &BlockParams<'_>,
+    d: usize,
+    nh: usize,
+    rows: usize,
+    seq: usize,
+) {
+    let n = rows * seq;
+    let dh = d / nh;
+    matmul_bias_into(x, p.wq, p.bq, q, n, d, d);
+    matmul_bias_into(x, p.wk, p.bk, k, n, d, d);
+    matmul_bias_into(x, p.wv, p.bv, v, n, d, d);
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let ctx_ptr = SendPtr(ctx.as_mut_ptr());
+    let (q_ro, k_ro, v_ro) = (&*q, &*k, &*v);
+    let grain = grain_for(seq * seq * dh, 100_000);
+    par_ranges(rows * nh, grain, |tasks| {
+        let mut scores = vec![0.0f32; seq];
+        for t in tasks {
+            let (r, head) = (t / nh, t % nh);
+            let hoff = head * dh;
+            for s1 in 0..seq {
+                let qrow = &q_ro[(r * seq + s1) * d + hoff..][..dh];
+                // causal scores over s2 <= s1
+                let mut max = f32::NEG_INFINITY;
+                for (s2, sv) in scores[..=s1].iter_mut().enumerate() {
+                    let krow = &k_ro[(r * seq + s2) * d + hoff..][..dh];
+                    let s = dot(qrow, krow) * scale;
+                    *sv = s;
+                    max = max.max(s);
+                }
+                let mut denom = 0.0f32;
+                for sv in scores[..=s1].iter_mut() {
+                    *sv = (*sv - max).exp();
+                    denom += *sv;
+                }
+                // SAFETY: (r, head) tasks own disjoint (row, head-column)
+                // slices of ctx; s1 iterates rows within the task.
+                let orow = unsafe { ctx_ptr.slice_mut((r * seq + s1) * d + hoff, dh) };
+                orow.fill(0.0);
+                for (s2, &sv) in scores[..=s1].iter().enumerate() {
+                    let w = sv / denom;
+                    let vrow = &v_ro[(r * seq + s2) * d + hoff..][..dh];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+    });
+
+    matmul_bias_into(ctx, p.wo, p.bo, q, n, d, d);
+    add_inplace(h, q);
+}
+
+/// Full transformer forward. On success the final-LN hidden states (the LM
+/// head input) are in `scratch.x[..rows*seq*d_model]`.
+pub fn forward_hidden(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+    scratch: &mut ForwardScratch,
+) -> Result<()> {
+    validate_forward_args(spec, units, tokens, rows, seq)?;
+    let d = spec.d_model;
+    let f = spec.d_ff();
+    let n = rows * seq;
+    scratch.ensure(n, d, f);
+    let ForwardScratch { h, x, q, k, v, ctx, ffn, .. } = scratch;
+    let h = &mut h[..n * d];
+    let x = &mut x[..n * d];
+    let q = &mut q[..n * d];
+    let k = &mut k[..n * d];
+    let v = &mut v[..n * d];
+    let ctx = &mut ctx[..n * d];
+    let ffn = &mut ffn[..n * f];
+
+    // embed
+    let emb = units[0];
+    let tok_emb = &emb[..spec.vocab * d];
+    let pos_emb = &emb[spec.vocab * d..];
+    for r in 0..rows {
+        for s in 0..seq {
+            let t = tokens[r * seq + s] as usize;
+            let hrow = &mut h[(r * seq + s) * d..(r * seq + s + 1) * d];
+            let te = &tok_emb[t * d..(t + 1) * d];
+            let pe = &pos_emb[s * d..(s + 1) * d];
+            for ((hv, &tv), &pv) in hrow.iter_mut().zip(te).zip(pe) {
+                *hv = tv + pv;
+            }
+        }
+    }
+
+    // blocks
+    for l in 0..spec.n_layers {
+        let p = split_block(spec, units[1 + l]);
+        layernorm_into(h, p.ln1_g, p.ln1_b, x, d);
+        attention_into(h, x, q, k, v, ctx, &p, d, spec.n_heads, rows, seq);
+        layernorm_into(h, p.ln2_g, p.ln2_b, x, d);
+        matmul_bias_into(x, p.w1, p.b1, ffn, n, d, f);
+        gelu_inplace(ffn);
+        matmul_bias_into(ffn, p.w2, p.b2, q, n, f, d);
+        add_inplace(h, q);
+    }
+
+    // final LN (the tied LM head consumes scratch.x)
+    let fin = units[spec.n_units() - 1];
+    layernorm_into(h, &fin[..d], &fin[d..], x, d);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Streaming (fused) LM head
+// ---------------------------------------------------------------------------
+
+/// Per-position masked cross-entropy via a streaming logsumexp + gold-logit
+/// over vocab tiles — the `n * vocab` logits tensor is never materialized.
+/// `xent[p] = 0` where `mask[p] == 0` (those positions are skipped
+/// entirely). Targets must already be validated by [`validate_targets`].
+/// Position-parallel; each position's reduction order is fixed (ascending
+/// vocab tiles), so results are thread-count invariant.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_masked_xent(
+    hf: &[f32],
+    tok_emb: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    n: usize,
+    vocab: usize,
+    d: usize,
+    xent: &mut [f32],
+) {
+    debug_assert!(hf.len() == n * d && tok_emb.len() == vocab * d);
+    debug_assert!(targets.len() == n && mask.len() == n && xent.len() == n);
+    let ptr = SendPtr(xent.as_mut_ptr());
+    let grain = grain_for(2 * vocab * d, 2_000_000);
+    par_ranges(n, grain, |range| {
+        // SAFETY: par_ranges chunks are disjoint position ranges of `xent`.
+        let out = unsafe { ptr.slice_mut(range.start, range.end - range.start) };
+        for (o, p) in out.iter_mut().zip(range) {
+            if mask[p] <= 0.0 {
+                *o = 0.0;
+                continue;
+            }
+            let hrow = &hf[p * d..(p + 1) * d];
+            let gold_t = targets[p] as usize; // validated in-range
+            let mut running_max = f32::NEG_INFINITY;
+            let mut sum = 0.0f64;
+            let mut gold = 0.0f32;
+            let mut tile = [0.0f32; VOCAB_TILE];
+            let mut t0 = 0;
+            while t0 < vocab {
+                let t1 = (t0 + VOCAB_TILE).min(vocab);
+                let tile = &mut tile[..t1 - t0];
+                for (lv, erow) in tile.iter_mut().zip(tok_emb[t0 * d..t1 * d].chunks_exact(d)) {
+                    *lv = dot(hrow, erow);
+                }
+                let tile_max = tile.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                if tile_max > running_max {
+                    sum *= ((running_max - tile_max) as f64).exp();
+                    running_max = tile_max;
+                }
+                for &l in tile.iter() {
+                    sum += ((l - running_max) as f64).exp();
+                }
+                if gold_t >= t0 && gold_t < t1 {
+                    gold = tile[gold_t - t0];
+                }
+                t0 = t1;
+            }
+            let logz = running_max as f64 + sum.ln();
+            *o = (logz - gold as f64) as f32;
+        }
+    });
+}
+
+/// Streaming greedy argmax over vocab tiles (ties resolve to the lowest
+/// token id via strict `>` in ascending order, like the dense reference).
+pub fn fused_argmax(
+    hf: &[f32],
+    tok_emb: &[f32],
+    n: usize,
+    vocab: usize,
+    d: usize,
+    preds: &mut [i32],
+) {
+    debug_assert!(hf.len() == n * d && tok_emb.len() == vocab * d && preds.len() == n);
+    let ptr = SendPtr(preds.as_mut_ptr());
+    let grain = grain_for(2 * vocab * d, 2_000_000);
+    par_ranges(n, grain, |range| {
+        // SAFETY: par_ranges chunks are disjoint position ranges of `preds`.
+        let out = unsafe { ptr.slice_mut(range.start, range.end - range.start) };
+        for (o, p) in out.iter_mut().zip(range) {
+            let hrow = &hf[p * d..(p + 1) * d];
+            let mut best = 0usize;
+            let mut best_val = f32::NEG_INFINITY;
+            for (t, erow) in tok_emb.chunks_exact(d).enumerate() {
+                let l = dot(hrow, erow);
+                if l > best_val {
+                    best_val = l;
+                    best = t;
+                }
+            }
+            *o = best as i32;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32 * 0.5).collect()
+    }
+
+    /// Naive row-major reference matmul (same as the dense forward path).
+    fn matmul_ref(x: &[f32], w: &[f32], b: &[f32], n: usize, din: usize, dout: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * dout];
+        for r in 0..n {
+            let orow = &mut out[r * dout..(r + 1) * dout];
+            orow.copy_from_slice(b);
+            for (i, &xi) in x[r * din..(r + 1) * din].iter().enumerate() {
+                for (o, &wv) in orow.iter_mut().zip(&w[i * dout..(i + 1) * dout]) {
+                    *o += xi * wv;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_reference_bitwise() {
+        let mut rng = Rng::new(1);
+        for (n, din, dout) in [(1usize, 3usize, 5usize), (7, 16, 9), (13, 65, 130), (64, 64, 256)]
+        {
+            let x = randv(&mut rng, n * din);
+            let w = randv(&mut rng, din * dout);
+            let b = randv(&mut rng, dout);
+            let want = matmul_ref(&x, &w, &b, n, din, dout);
+            let mut got = vec![0.0f32; n * dout];
+            matmul_bias_into(&x, &w, &b, &mut got, n, din, dout);
+            // ascending-i accumulation order is preserved by the blocking,
+            // so the result is bit-identical, not just close
+            assert_eq!(got, want, "n={n} din={din} dout={dout}");
+        }
+    }
+
+    #[test]
+    fn layernorm_matches_reference() {
+        let mut rng = Rng::new(2);
+        let (n, d) = (9, 33);
+        let x = randv(&mut rng, n * d);
+        let g = randv(&mut rng, d);
+        let b = randv(&mut rng, d);
+        let mut got = vec![0.0f32; n * d];
+        layernorm_into(&x, &g, &b, &mut got, d);
+        for r in 0..n {
+            let row = &x[r * d..(r + 1) * d];
+            let mean = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+            let var = row.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>()
+                / d as f64;
+            let inv = 1.0 / (var as f32 + LN_EPS).sqrt();
+            for j in 0..d {
+                let want = (row[j] - mean as f32) * inv * g[j] + b[j];
+                assert_eq!(got[r * d + j], want, "r={r} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn inplace_axpy_matches_allocating_formula() {
+        let mut rng = Rng::new(3);
+        let n = 10_000;
+        let p0 = randv(&mut rng, n);
+        let mut p = p0.clone();
+        axpy_gauss_inplace(&mut p, 42, 1e-2);
+        for (i, (&got, &orig)) in p.iter().zip(&p0).enumerate() {
+            let want = orig + 1e-2 * crate::runtime::philox::gauss_from_index(i as u32, 42);
+            assert_eq!(got.to_bits(), want.to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn inplace_masked_axpy_respects_mask_and_matches_dense_at_inf_tau() {
+        let mut rng = Rng::new(4);
+        let n = 4_097;
+        let p0 = randv(&mut rng, n);
+        let pref = randv(&mut rng, n);
+
+        let mut dense = p0.clone();
+        axpy_gauss_inplace(&mut dense, 9, 0.5);
+        let mut masked_inf = p0.clone();
+        axpy_gauss_masked_inplace(&mut masked_inf, &pref, f32::INFINITY, 9, 0.5);
+        assert_eq!(dense, masked_inf);
+
+        let tau = 0.3f32;
+        let mut masked = p0.clone();
+        axpy_gauss_masked_inplace(&mut masked, &pref, tau, 9, 0.5);
+        for i in 0..n {
+            if pref[i].abs() <= tau {
+                assert_eq!(masked[i].to_bits(), dense[i].to_bits(), "i={i} in-mask");
+            } else {
+                assert_eq!(masked[i].to_bits(), p0[i].to_bits(), "i={i} out-of-mask");
+            }
+        }
+    }
+
+    #[test]
+    fn target_validation_rejects_in_mask_oov_only() {
+        let targets = [3i32, 600, -1, 2];
+        // oov targets are fine while masked out...
+        assert!(validate_targets(&targets, &[1.0, 0.0, 0.0, 1.0], 4, 512).is_ok());
+        // ...and hard errors once the mask includes them
+        let err = validate_targets(&targets, &[1.0, 1.0, 0.0, 1.0], 4, 512).unwrap_err();
+        assert!(err.to_string().contains("position 1"), "{err}");
+        let err = validate_targets(&targets, &[1.0, 0.0, 1.0, 1.0], 4, 512).unwrap_err();
+        assert!(err.to_string().contains("position 2"), "{err}");
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_results_identical() {
+        let spec = ModelSpec::preset("opt-nano").unwrap();
+        let host = spec.init_units(5);
+        let units: Vec<&[f32]> = host.iter().map(|u| u.as_slice()).collect();
+        let (rows, seq) = (2usize, 8usize);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| 20 + (i % 90) as i32).collect();
+        let n = rows * seq;
+        let d = spec.d_model;
+
+        let mut fresh = ForwardScratch::new();
+        forward_hidden(&spec, &units, &tokens, rows, seq, &mut fresh).unwrap();
+        let want = fresh.x[..n * d].to_vec();
+
+        // a scratch polluted by a *larger* forward must give the same bits
+        let mut reused = ForwardScratch::new();
+        let big_tokens: Vec<i32> = (0..4 * 16).map(|i| (i % 100) as i32).collect();
+        forward_hidden(&spec, &units, &big_tokens, 4, 16, &mut reused).unwrap();
+        forward_hidden(&spec, &units, &tokens, rows, seq, &mut reused).unwrap();
+        assert_eq!(&reused.x[..n * d], &want[..]);
+    }
+}

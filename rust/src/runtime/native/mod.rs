@@ -3,20 +3,33 @@
 //! Buffers are host `Vec<f32>`; the ZO kernels regenerate the perturbation
 //! stream with the in-crate Philox port ([`crate::runtime::philox`],
 //! bit-compatible with the Pallas kernel's integer stream); the forward
-//! families run the reference transformer in [`forward`]. Everything is
-//! derived from a [`ModelSpec`] preset — no AOT artifacts, no PJRT plugin,
-//! no Python. This is the substrate the hermetic test suite and the
-//! no-artifacts bench path run on, and the reference semantics future
-//! GPU/sharded backends are checked against.
+//! families run the blocked, thread-parallel kernels in [`kernels`] with a
+//! streaming (fused) LM head, against the naive dense reference kept in
+//! [`forward`]. Everything is derived from a [`ModelSpec`] preset — no AOT
+//! artifacts, no PJRT plugin, no Python.
+//!
+//! Hot-path structure (this is the substrate the bench harness measures):
+//!
+//! - [`parallel`] — scoped worker threads with *fixed* chunk partitioning;
+//!   results are bit-identical at any `threads` / `LEZO_THREADS` setting.
+//! - [`kernels`] — in-place ZO sweeps over the multi-lane Philox fill,
+//!   cache-blocked matmuls, (row, head)-parallel attention, the reusable
+//!   [`kernels::ForwardScratch`] arena, and the fused LM head that never
+//!   materializes the `rows*seq*vocab` logits tensor.
+//! - [`forward`] — the forward families plus the dense reference
+//!   (`forward_logits` / `position_xent`) the fused paths are tested
+//!   against.
 
 pub mod forward;
+pub mod kernels;
+pub mod parallel;
 
 use crate::data::batch::Batch;
 use crate::model::spec::ModelSpec;
 use crate::peft::PeftMode;
 use crate::runtime::backend::Backend;
-use crate::runtime::philox::gauss_from_index;
 use anyhow::{ensure, Context, Result};
+use std::cell::RefCell;
 
 /// Seed for the deterministic native initialization (runs start identical
 /// across machines; override with the `checkpoint` config key).
@@ -29,12 +42,19 @@ pub struct NativeBackend {
     /// backend) instead of the synthetic native init — so results don't
     /// silently diverge between build flavors.
     manifest: Option<crate::model::Manifest>,
+    /// Reusable forward arena: q/k/v/ctx/ffn and the residual stream are
+    /// allocated once and reused across every forward this backend runs.
+    scratch: RefCell<kernels::ForwardScratch>,
 }
 
 impl NativeBackend {
     pub fn new(spec: ModelSpec) -> Result<NativeBackend> {
         spec.validate()?;
-        Ok(NativeBackend { spec, manifest: None })
+        Ok(NativeBackend {
+            spec,
+            manifest: None,
+            scratch: RefCell::new(kernels::ForwardScratch::new()),
+        })
     }
 
     pub fn preset(name: &str) -> Result<NativeBackend> {
@@ -98,13 +118,8 @@ impl Backend for NativeBackend {
 
     fn zo_axpy(&self, unit: &Vec<f32>, len: usize, seed: i32, coeff: f32) -> Result<Vec<f32>> {
         ensure!(unit.len() == len, "zo_axpy: unit has {} elements, expected {len}", unit.len());
-        let seed = seed as u32;
-        let mut out = Vec::with_capacity(len);
-        out.extend(
-            unit.iter()
-                .enumerate()
-                .map(|(i, &p)| p + coeff * gauss_from_index(i as u32, seed)),
-        );
+        let mut out = unit.clone();
+        kernels::axpy_gauss_inplace(&mut out, seed as u32, coeff);
         Ok(out)
     }
 
@@ -118,16 +133,42 @@ impl Backend for NativeBackend {
         coeff: f32,
     ) -> Result<Vec<f32>> {
         ensure!(unit.len() == len && pref.len() == len, "zo_axpy_masked: shape mismatch");
-        let seed = seed as u32;
-        let mut out = Vec::with_capacity(len);
-        out.extend(unit.iter().zip(pref).enumerate().map(|(i, (&p, &q))| {
-            if q.abs() <= tau {
-                p + coeff * gauss_from_index(i as u32, seed)
-            } else {
-                p
-            }
-        }));
+        let mut out = unit.clone();
+        kernels::axpy_gauss_masked_inplace(&mut out, pref, tau, seed as u32, coeff);
         Ok(out)
+    }
+
+    fn zo_axpy_inplace(
+        &self,
+        unit: &mut Vec<f32>,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<()> {
+        ensure!(
+            unit.len() == len,
+            "zo_axpy_inplace: unit has {} elements, expected {len}",
+            unit.len()
+        );
+        kernels::axpy_gauss_inplace(unit, seed as u32, coeff);
+        Ok(())
+    }
+
+    fn zo_axpy_masked_inplace(
+        &self,
+        unit: &mut Vec<f32>,
+        pref: &Vec<f32>,
+        tau: f32,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<()> {
+        ensure!(
+            unit.len() == len && pref.len() == len,
+            "zo_axpy_masked_inplace: shape mismatch"
+        );
+        kernels::axpy_gauss_masked_inplace(unit, pref, tau, seed as u32, coeff);
+        Ok(())
     }
 
     fn prepare_batch(&self, batch: &Batch) -> Result<Batch> {
@@ -150,6 +191,7 @@ impl Backend for NativeBackend {
             &batch.mask,
             batch.rows,
             batch.seq,
+            &mut self.scratch.borrow_mut(),
         )
     }
 
@@ -169,13 +211,21 @@ impl Backend for NativeBackend {
             &batch.mask,
             batch.rows,
             batch.seq,
+            &mut self.scratch.borrow_mut(),
         )
     }
 
     fn predict(&self, peft: PeftMode, units: &[&Vec<f32>], batch: &Batch) -> Result<Vec<i32>> {
         self.check_peft(peft)?;
         let slices = self.unit_slices(units)?;
-        forward::predict(&self.spec, &slices, &batch.tokens, batch.rows, batch.seq)
+        forward::predict(
+            &self.spec,
+            &slices,
+            &batch.tokens,
+            batch.rows,
+            batch.seq,
+            &mut self.scratch.borrow_mut(),
+        )
     }
 
     fn initial_params(&self, explicit_checkpoint: &str) -> Result<(Vec<Vec<f32>>, String)> {
@@ -218,6 +268,23 @@ mod tests {
         let var: f32 = za.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
         assert!(mean.abs() < 0.1, "mean={mean}");
         assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn inplace_axpy_is_bitwise_equal_to_allocating_axpy() {
+        let b = backend();
+        let n = 5000;
+        let p: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        let alloc = b.zo_axpy(&p, n, 13, 2.5e-3).unwrap();
+        let mut inplace = p.clone();
+        b.zo_axpy_inplace(&mut inplace, n, 13, 2.5e-3).unwrap();
+        assert_eq!(alloc, inplace);
+
+        let pref: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.07).cos()).collect();
+        let alloc_m = b.zo_axpy_masked(&p, &pref, 0.5, n, 13, 2.5e-3).unwrap();
+        let mut inplace_m = p.clone();
+        b.zo_axpy_masked_inplace(&mut inplace_m, &pref, 0.5, n, 13, 2.5e-3).unwrap();
+        assert_eq!(alloc_m, inplace_m);
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Scoped worker threads for the native hot path — zero new dependencies
+//! (the offline image vendors everything; `std::thread::scope` is enough).
+//!
+//! Design rules, in priority order:
+//!
+//! 1. **Determinism.** Work is split into *fixed* chunks whose boundaries
+//!    depend only on the item count (never on the thread count), and every
+//!    kernel routed through here writes disjoint elements with no
+//!    cross-chunk reductions. Results are therefore bit-identical at any
+//!    `LEZO_THREADS` setting — pinned by the thread-invariance test in
+//!    `rust/tests/native_backend.rs`.
+//! 2. **No overhead for tiny work.** Callers pass a `grain` (minimum items
+//!    per chunk, sized so one chunk is worth a dispatch); when the whole
+//!    range fits one chunk the closure runs inline on the caller's thread,
+//!    so opt-nano tests never pay a spawn.
+//! 3. **Simplicity.** Threads are scoped per parallel region
+//!    (`std::thread::scope`) and pull chunks from an atomic counter; there
+//!    is no persistent pool to shut down or poison.
+//!
+//! Thread count resolution (highest precedence first): the `LEZO_THREADS`
+//! env var, a scoped this-thread override ([`with_threads`], what the
+//! `threads` config key uses for the duration of a run), the global
+//! default ([`set_threads`]), then `std::thread::available_parallelism()`.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Upper bound on the number of fixed chunks a parallel region is split
+/// into. Chunk boundaries derive from this constant and the item count
+/// alone, so partitioning is identical at any thread count.
+pub const MAX_PARTS: usize = 64;
+
+/// Process-wide default; 0 = auto (available parallelism).
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Scoped per-thread override (0 = none). Parallel regions are always
+    /// entered from the caller's thread, so this cleanly scopes a worker
+    /// count to one run without touching process-global state.
+    static TL_THREADS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Set the process-wide default worker-thread count (0 restores auto).
+/// `LEZO_THREADS` and [`with_threads`] both take precedence.
+pub fn set_threads(n: usize) {
+    CONFIGURED.store(n, Ordering::Relaxed);
+}
+
+/// Run `f` with a worker-count override scoped to the current thread
+/// (restored on exit, including on panic; 0 = no override). This is how
+/// the `threads` config key is applied per run — concurrent runs in one
+/// process cannot clobber each other's setting.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            TL_THREADS.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(TL_THREADS.with(|c| c.replace(n)));
+    f()
+}
+
+/// `LEZO_THREADS`, parsed once per process (region entry is on the hot
+/// path; an env read takes a lock and allocates).
+fn env_threads() -> Option<usize> {
+    static ENV: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("LEZO_THREADS").ok().and_then(|v| v.parse().ok()).filter(|&n| n > 0)
+    })
+}
+
+/// The worker-thread count a parallel region entered from this thread
+/// will use right now.
+pub fn effective_threads() -> usize {
+    if let Some(n) = env_threads() {
+        return n;
+    }
+    let scoped = TL_THREADS.with(Cell::get);
+    if scoped > 0 {
+        return scoped;
+    }
+    match CONFIGURED.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
+/// Fixed chunk length for `n_items` at minimum-`grain` granularity —
+/// a pure function of the two arguments (never of the thread count).
+pub fn chunk_len(n_items: usize, grain: usize) -> usize {
+    n_items.div_ceil(MAX_PARTS).max(grain).max(1)
+}
+
+/// Run `f` over `0..n_items` split into fixed chunks. `f(range)` must be
+/// safe to call concurrently for disjoint ranges and must not depend on
+/// which chunk an item lands in (elementwise work, per-item reductions).
+/// Runs inline when one chunk covers everything or only one thread is
+/// configured.
+pub fn par_ranges<F>(n_items: usize, grain: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    if n_items == 0 {
+        return;
+    }
+    let chunk = chunk_len(n_items, grain);
+    let n_parts = n_items.div_ceil(chunk);
+    let threads = effective_threads().min(n_parts);
+    if threads <= 1 {
+        f(0..n_items);
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let work = || loop {
+        let p = next.fetch_add(1, Ordering::Relaxed);
+        if p >= n_parts {
+            break;
+        }
+        let start = p * chunk;
+        f(start..(start + chunk).min(n_items));
+    };
+    std::thread::scope(|s| {
+        // the caller is worker 0 — spawn only the extra threads
+        for _ in 1..threads {
+            s.spawn(&work);
+        }
+        work();
+    });
+}
+
+/// Raw-pointer wrapper so kernels can hand disjoint `&mut` sub-slices of
+/// one output buffer to concurrent chunks. Every use site documents the
+/// disjoint write pattern that makes it sound.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// # Safety
+    /// `start..start + len` must be in bounds of the original allocation
+    /// and must not alias any slice handed to another thread.
+    pub(crate) unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+/// Parallel loop over disjoint row-chunks of a row-major `out` buffer
+/// (`width` elements per row): `f(first_row, rows_slice)`.
+pub fn par_row_chunks<F>(out: &mut [f32], width: usize, grain_rows: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert!(width > 0 && out.len() % width == 0);
+    let n_rows = out.len() / width;
+    let ptr = SendPtr(out.as_mut_ptr());
+    par_ranges(n_rows, grain_rows, |r| {
+        // SAFETY: par_ranges chunks are disjoint row ranges of `out`.
+        let rows = unsafe { ptr.slice_mut(r.start * width, (r.end - r.start) * width) };
+        f(r.start, rows);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn chunking_is_fixed_and_covers_everything() {
+        for n in [1usize, 7, 64, 65, 1000, 12345] {
+            for grain in [1usize, 8, 4096] {
+                let c = chunk_len(n, grain);
+                assert!(c >= 1);
+                assert!(n.div_ceil(c) <= MAX_PARTS.max(1));
+                // chunk_len is a pure function of (n, grain)
+                assert_eq!(c, chunk_len(n, grain));
+            }
+        }
+    }
+
+    #[test]
+    fn par_ranges_visits_each_index_exactly_once() {
+        let n = 1537;
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        par_ranges(n, 16, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_row_chunks_writes_disjoint_rows() {
+        let (rows, width) = (37, 5);
+        let mut out = vec![0.0f32; rows * width];
+        par_row_chunks(&mut out, width, 1, |r0, chunk| {
+            for (rr, row) in chunk.chunks_exact_mut(width).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (r0 + rr) as f32;
+                }
+            }
+        });
+        for (r, row) in out.chunks_exact(width).enumerate() {
+            assert!(row.iter().all(|&v| v == r as f32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn empty_range_is_a_noop() {
+        par_ranges(0, 8, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn effective_threads_is_positive() {
+        assert!(effective_threads() >= 1);
+    }
+
+    #[test]
+    fn with_threads_scopes_and_restores_including_on_panic() {
+        if std::env::var("LEZO_THREADS").map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED with_threads_scopes_and_restores: LEZO_THREADS wins");
+            return;
+        }
+        let outer = effective_threads();
+        let inner = with_threads(3, || {
+            // nesting: innermost scope wins, then restores
+            assert_eq!(with_threads(2, effective_threads), 2);
+            effective_threads()
+        });
+        assert_eq!(inner, 3);
+        assert_eq!(effective_threads(), outer, "override must be restored");
+        let caught = std::panic::catch_unwind(|| with_threads(5, || panic!("boom")));
+        assert!(caught.is_err());
+        assert_eq!(effective_threads(), outer, "restored even on panic");
+    }
+}

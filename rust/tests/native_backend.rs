@@ -104,6 +104,53 @@ fn e2e_perturb_flip_restore_round_trips_parameters() {
 }
 
 #[test]
+fn e2e_thread_count_invariance_bit_identical_runs() {
+    // The native kernels use fixed chunk partitioning and no cross-chunk
+    // reductions, so a 5-step training run must produce bit-identical
+    // losses and updated parameters at any worker-thread count.
+    use lezo::runtime::native::parallel;
+    if std::env::var("LEZO_THREADS").map(|s| !s.is_empty()).unwrap_or(false) {
+        eprintln!(
+            "SKIPPED e2e_thread_count_invariance_bit_identical_runs: LEZO_THREADS overrides \
+             the scoped thread setting"
+        );
+        return;
+    }
+    let mut runs = Vec::new();
+    for threads in [1usize, 8] {
+        // scoped override: the setting is local to this thread for the
+        // duration of the run, so concurrently running tests (which go
+        // through Trainer::run's own scoped override) cannot clobber it
+        let run = parallel::with_threads(threads, || {
+            let backend = NativeBackend::preset("opt-nano").unwrap();
+            let host = backend.initial_params("").unwrap().0;
+            let mut units = TunableUnits::from_host(&backend, &host).unwrap();
+            let engine = SpsaEngine::new(&backend, 1e-3, 21).unwrap();
+            let active: Vec<usize> = (0..units.n_units()).collect();
+            let batch = fixed_batch(4, 16);
+            let prepared = backend.prepare_batch(&batch).unwrap();
+            let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+                backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+            };
+            let mut times = StageTimes::default();
+            let mut losses = Vec::new();
+            for step in 0..5u64 {
+                losses.push(
+                    engine
+                        .zo_step(step, &mut units, &active, 1e-3, &mut loss_fn, &mut times)
+                        .unwrap()
+                        .loss(),
+                );
+            }
+            (losses, units.to_host(&backend).unwrap())
+        });
+        runs.push(run);
+    }
+    assert_eq!(runs[0].0, runs[1].0, "losses must be bit-identical across thread counts");
+    assert_eq!(runs[0].1, runs[1].1, "params must be bit-identical across thread counts");
+}
+
+#[test]
 fn e2e_identical_run_seed_identical_step_trajectory() {
     let mut trajectories = Vec::new();
     for _ in 0..2 {
