@@ -5,9 +5,13 @@
 //! coordinator) compose on a real workload.
 //!
 //! ```bash
-//! cd python && python -m compile.aot --sizes opt-base   # once (~minutes)
+//! cd python && python -m compile.aot --sizes opt-base   # optional (pjrt path)
 //! cargo run --release --example e2e_train [pretrain_steps] [zo_steps]
 //! ```
+//!
+//! With AOT artifacts present the run executes on the PJRT backend; without
+//! them it runs entirely on the native backend (including pretraining, via
+//! the native backward pass) — same pipeline, zero artifacts.
 //!
 //! Defaults (300 pretrain + 300 ZO steps) take tens of minutes on CPU; the
 //! recorded run lives in EXPERIMENTS.md §E2E.
@@ -22,22 +26,23 @@ fn main() -> Result<()> {
     let pretrain_steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(300);
     let zo_steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(300);
     let dir = Path::new("artifacts/opt-base");
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "opt-base artifacts missing: cd python && python -m compile.aot --sizes opt-base"
-    );
 
     // --- Phase 1: pretraining (~100M params, FO-Adam, synthetic corpus) ----
-    let m = lezo::model::Manifest::load(dir)?;
+    let (spec, manifest) = lezo::runtime::backend::resolve_model("opt-base", dir)?;
     println!(
-        "opt-base: {} params, {} layers, d_model {}",
-        m.param_count, m.n_layers, m.d_model
+        "opt-base: {} params, {} layers, d_model {} ({})",
+        spec.param_count(),
+        spec.n_layers,
+        spec.d_model,
+        if manifest.is_some() { "AOT artifacts" } else { "native backend, no artifacts" }
     );
+    let mut pcfg = RunConfig::default();
+    pcfg.model = "opt-base".into();
     if dir.join("pretrained.ckpt").exists() {
         println!("pretrained.ckpt exists — skipping phase 1");
     } else {
         println!("\n== phase 1: pretraining for {pretrain_steps} steps ==");
-        let (first, last) = trainer::pretrain(dir, pretrain_steps, 6e-4, 0, 20)
+        let (first, last) = trainer::pretrain(&pcfg, pretrain_steps, 6e-4, 0, 20)
             .context("pretraining opt-base")?;
         println!("LM loss: {first:.3} -> {last:.3}");
         anyhow::ensure!(last < first, "pretraining must reduce LM loss");

@@ -6,6 +6,8 @@
 
 use super::{agg_pct, bench_config, fmt_pm, lezo_lr, model_spec_for, paper_drop, run_seeds};
 use crate::config::{grids, Method, RunConfig};
+use crate::coordinator::metrics::MemoryModel;
+use crate::model::ModelSpec;
 use crate::peft::PeftMode;
 use crate::tasks::{ALL_TASKS, TABLE1_TASKS};
 use crate::util::render_table;
@@ -58,6 +60,16 @@ fn method_cfg(base: &RunConfig, method: Method, n_layers: usize) -> RunConfig {
     cfg
 }
 
+/// Per-method step cost aggregated across a grid's runs — feeds the FT
+/// cost-profile footer of Table 1.
+#[derive(Default)]
+struct MethodCost {
+    ms_per_step: Vec<f64>,
+    non_forward: Vec<f64>,
+    /// Max measured optimizer state across runs (`FoOptimizer::state_bytes`).
+    fo_state_bytes: usize,
+}
+
 fn method_grid(
     tasks: &[&str],
     methods: &[Method],
@@ -72,12 +84,20 @@ fn method_grid(
     let mut rows = Vec::new();
     // column averages, paper's AVG. row
     let mut sums = vec![0.0f64; methods.len()];
+    let mut costs: Vec<MethodCost> = methods.iter().map(|_| MethodCost::default()).collect();
     for &task in tasks {
         let mut row = vec![task.to_string()];
         for (mi, &method) in methods.iter().enumerate() {
             let mut cfg = method_cfg(base, method, n_layers);
             cfg.task = task.into();
             let reports = run_seeds(&cfg, seeds)?;
+            for r in &reports {
+                if r.stage_times.steps > 0 {
+                    costs[mi].ms_per_step.push(r.per_step_ms());
+                    costs[mi].non_forward.push(r.stage_times.non_forward_fraction());
+                }
+                costs[mi].fo_state_bytes = costs[mi].fo_state_bytes.max(r.fo_state_bytes);
+            }
             let (m, s) = agg_pct(&reports);
             sums[mi] += m;
             row.push(fmt_pm(m, s));
@@ -101,6 +121,56 @@ fn method_grid(
         base.steps
     )?;
     out.push_str(&render_table(&header, &rows));
+    if methods.contains(&Method::Ft) {
+        out.push('\n');
+        out.push_str(&ft_cost_profile(&model_spec_for(base)?, methods, &costs)?);
+    }
+    Ok(out)
+}
+
+/// The cost half of Table 1's "FT (12x memory)" annotation: measured step
+/// time + stage attribution per training method, the measured Adam state,
+/// and the analytic [`MemoryModel`] multiple. Emitted whenever the grid
+/// includes the FT column (runs on any FO-capable backend, incl. native).
+fn ft_cost_profile(spec: &ModelSpec, methods: &[Method], costs: &[MethodCost]) -> Result<String> {
+    let header = ["Method", "ms/step", "non-forward", "opt state"];
+    let mut rows = Vec::new();
+    let mut ft_state = 0usize;
+    for (&method, cost) in methods.iter().zip(costs) {
+        if cost.ms_per_step.is_empty() {
+            continue; // zero-shot / ICL: no training steps
+        }
+        if method == Method::Ft {
+            ft_state = cost.fo_state_bytes;
+        }
+        rows.push(vec![
+            method.to_string(),
+            format!("{:.1}", crate::stats::mean(&cost.ms_per_step)),
+            format!("{:.0}%", 100.0 * crate::stats::mean(&cost.non_forward)),
+            if cost.fo_state_bytes > 0 {
+                format!("{:.1} MB", cost.fo_state_bytes as f64 / 1e6)
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    let mem = MemoryModel {
+        params: spec.param_count(),
+        batch: spec.train_batch,
+        seq: *spec.seq_buckets.iter().max().unwrap(),
+        d_model: spec.d_model,
+        n_layers: spec.n_layers,
+    };
+    let mut out = String::from("Step cost & memory (paper: \"FT = 12x memory\")\n");
+    out.push_str(&render_table(&header, &rows));
+    writeln!(
+        out,
+        "\nMemoryModel: ZO {:.1} MB vs FO-Adam {:.1} MB ({:.1}x); measured Adam state {:.1} MB",
+        mem.zo_bytes() as f64 / 1e6,
+        mem.adam_bytes() as f64 / 1e6,
+        mem.ft_over_zo(),
+        ft_state as f64 / 1e6,
+    )?;
     Ok(out)
 }
 
@@ -230,6 +300,31 @@ mod tests {
         for k in ["lezo", "mezo-lora", "ft"] {
             assert!(t.contains(k), "{k} missing");
         }
+    }
+
+    #[test]
+    fn ft_cost_profile_renders_and_skips_no_step_methods() {
+        let spec = ModelSpec::preset("opt-nano").unwrap();
+        let methods = [Method::ZeroShot, Method::Ft, Method::Mezo];
+        let costs = vec![
+            MethodCost::default(),
+            MethodCost {
+                ms_per_step: vec![10.0, 14.0],
+                non_forward: vec![0.35, 0.45],
+                fo_state_bytes: 1_500_000,
+            },
+            MethodCost {
+                ms_per_step: vec![2.0],
+                non_forward: vec![0.6],
+                fo_state_bytes: 0,
+            },
+        ];
+        let t = ft_cost_profile(&spec, &methods, &costs).unwrap();
+        assert!(t.contains("ft"), "{t}");
+        assert!(t.contains("12.0"), "mean ms/step: {t}");
+        assert!(t.contains("1.5 MB"), "measured Adam state: {t}");
+        assert!(t.contains("MemoryModel"), "{t}");
+        assert!(!t.contains("zero-shot"), "no-step methods are skipped: {t}");
     }
 
     #[test]

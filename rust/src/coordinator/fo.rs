@@ -5,9 +5,11 @@
 //! Unlike the ZO hot loop, FO deliberately round-trips gradients through the
 //! host: Adam moments live in Rust, mirroring the paper's point that FO
 //! fine-tuning pays for gradients + optimizer state + activations while ZO
-//! pays for parameters only (`metrics::MemoryModel`). Backends without
-//! autodiff (the native backend) report `supports_fo() == false` and the
-//! trainer refuses `method=ft` up front.
+//! pays for parameters only (`metrics::MemoryModel`). Both in-tree backends
+//! are FO-capable: the native backend via its reference backward pass
+//! (`runtime/native/backward.rs`, zero artifacts) and PJRT via the AOT'd
+//! `forward_backward` executables. A backend without autodiff would report
+//! `supports_fo() == false` and the trainer refuses `method=ft` up front.
 
 use crate::data::batch::Batch;
 use crate::runtime::backend::Backend;
@@ -146,13 +148,73 @@ mod tests {
     }
 
     #[test]
-    fn native_backend_rejects_fo() {
+    fn adam_first_step_matches_closed_form() {
+        // After one update from zero state: m = (1-b1)g, v = (1-b2)g^2, so
+        // mhat = g, vhat = g^2 and the step is exactly lr * g/(|g| + eps) —
+        // a sign step scaled by lr, independent of gradient magnitude.
+        let (b1, b2, eps, lr) = (0.9, 0.999, 1e-8, 0.05);
+        let mut opt = FoOptimizer::adam(b1, b2, eps);
+        let p0 = vec![1.0f32, -2.0, 0.5, 3.0];
+        let g = vec![0.3f32, -1.7, 0.0, 4.2e-3];
+        let mut p = vec![p0.clone()];
+        opt.update(&mut p, &[g.clone()], lr);
+        for ((&pv, &p0v), &gv) in p[0].iter().zip(&p0).zip(&g) {
+            let want = p0v as f64 - lr * gv as f64 / ((gv as f64).abs() + eps);
+            assert!(
+                (pv as f64 - want).abs() < 1e-6,
+                "{pv} vs closed form {want} (g={gv})"
+            );
+        }
+        // zero gradient: exactly no movement (0 / (0 + eps) = 0)
+        assert_eq!(p[0][2], p0[2]);
+        assert_eq!(opt.state_bytes(), 2 * 8 * p0.len());
+    }
+
+    #[test]
+    fn lr_zero_fo_step_is_an_exact_noop() {
+        // The FO twin of `lr_zero_step_is_an_exact_restore_of_every_unit`:
+        // a full forward_backward + Adam update at lr=0 must leave every
+        // unit bit-identical (moments update, parameters do not).
+        use crate::runtime::backend::Backend as _;
         use crate::runtime::NativeBackend;
         let b = NativeBackend::preset("opt-nano").unwrap();
         let eng = FoEngine::new(&b);
-        let batch = Batch::lm_batch(&[vec![1, 2, 3]], 1, 8).unwrap();
-        let params = vec![vec![0.0f32; 4]];
-        assert!(eng.loss_and_grads(&params, &batch).is_err());
+        let mut params = b.initial_params("").unwrap().0;
+        let orig = params.clone();
+        let seqs: Vec<Vec<u32>> =
+            (0..2u32).map(|r| (0..12u32).map(|i| 20 + r + i).collect()).collect();
+        let batch = Batch::lm_batch(&seqs, 2, 16).unwrap();
+        let mut opt = FoOptimizer::adam(0.9, 0.999, 1e-8);
+        let loss = eng.fo_step(&mut params, &batch, &mut opt, 0.0).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(params, orig, "lr=0 must be an exact no-op on every unit");
+        assert!(opt.state_bytes() > 0, "moments still accumulate");
+    }
+
+    #[test]
+    fn native_backend_supports_fo() {
+        use crate::runtime::backend::Backend as _;
+        use crate::runtime::NativeBackend;
+        let b = NativeBackend::preset("opt-nano").unwrap();
+        assert!(b.supports_fo());
+        let eng = FoEngine::new(&b);
+        let mut params = b.initial_params("").unwrap().0;
+        let seqs: Vec<Vec<u32>> =
+            (0..2u32).map(|r| (0..12u32).map(|i| 20 + r + i).collect()).collect();
+        let batch = Batch::lm_batch(&seqs, 2, 16).unwrap();
+        let (l0, grads) = eng.loss_and_grads(&params, &batch).unwrap();
+        assert!(l0.is_finite() && l0 > 0.0);
+        assert_eq!(grads.len(), params.len());
+        // a few SGD steps on a fixed batch must reduce the loss
+        let mut opt = FoOptimizer::sgd();
+        for _ in 0..5 {
+            eng.fo_step(&mut params, &batch, &mut opt, 0.5).unwrap();
+        }
+        let (l1, _) = eng.loss_and_grads(&params, &batch).unwrap();
+        assert!(l1 < l0, "loss must decrease: {l0} -> {l1}");
+        // mis-shaped host params stay a clear error
+        let bad = vec![vec![0.0f32; 4]];
+        assert!(eng.loss_and_grads(&bad, &batch).is_err());
     }
 
     #[cfg(feature = "pjrt")]

@@ -4,9 +4,10 @@
 //!   updated each step; MeZO is the `n_drop = 0` special case).
 //! - [`spsa`]: the ZO engine — seeded perturbation via the AOT'd `zo_axpy`
 //!   kernel, two forward passes, projected-gradient update (Algorithm 1).
-//! - [`fo`]: the first-order substrate (SGD / Adam over the AOT'd
-//!   `forward_backward` executable) — the paper's "FT" baseline and the
-//!   in-repo pretraining path.
+//! - [`fo`]: the first-order substrate (SGD / Adam over the backend's
+//!   `forward_backward` — the native reference backward pass, or the AOT'd
+//!   executable under PJRT) — the paper's "FT" baseline and the in-repo
+//!   pretraining path.
 //! - [`trainer`]: the training loop gluing data, engine, eval and
 //!   checkpointing together.
 //! - [`metrics`]: per-stage wall-time accounting (Figs. 2/4/5/6) and the

@@ -7,11 +7,14 @@
 //! picks PJRT when artifacts exist in a pjrt-enabled build, else the native
 //! pure-Rust backend) and hands it to [`Trainer::run_with`], so the full
 //! perturb -> forward -> flip -> forward -> restore -> update loop runs
-//! end-to-end on any machine with zero external artifacts.
+//! end-to-end on any machine with zero external artifacts. The same is
+//! true of the first-order paths since the native backward pass landed:
+//! `method=ft` (the paper's FT baseline) and [`pretrain`] run hermetically
+//! on any FO-capable backend (`Backend::supports_fo`).
 
 use crate::config::{Method, RunConfig};
 use crate::coordinator::fo::{FoEngine, FoOptimizer};
-use crate::coordinator::metrics::StageTimes;
+use crate::coordinator::metrics::{StageTimer, StageTimes};
 use crate::coordinator::policy::PolicySelector;
 use crate::coordinator::spsa::{SpsaEngine, TunableUnits};
 use crate::data::batch::{bucket_for_instances, Batch};
@@ -54,6 +57,11 @@ pub struct TrainReport {
     pub active_param_fraction: f64,
     /// Mean prompt token length of the training batches (Fig. 6 axis).
     pub mean_input_len: f64,
+    /// Bytes of optimizer state held at the end of the run
+    /// ([`FoOptimizer::state_bytes`]); 0 for ZO runs — the measured side of
+    /// the paper's "FT costs 12x memory" comparison
+    /// (`metrics::MemoryModel`).
+    pub fo_state_bytes: usize,
 }
 
 impl TrainReport {
@@ -117,6 +125,10 @@ pub fn resolve_backend(cfg: &RunConfig) -> Result<ResolvedBackend> {
         let mut backend = NativeBackend::new(spec)?;
         if let Some(manifest) = manifest {
             backend = backend.with_artifacts(manifest)?;
+        } else {
+            // manifest-less dirs may still hold a pretrained.ckpt written
+            // by the hermetic `lezo pretrain` path — adopt it
+            backend = backend.with_checkpoint_dir(&dir);
         }
         Ok(ResolvedBackend::Native(backend))
     };
@@ -236,6 +248,7 @@ impl Trainer {
             mean_input_len: crate::stats::mean(
                 &examples.iter().map(|e| e.prompt.len() as f64).collect::<Vec<_>>(),
             ),
+            fo_state_bytes: 0,
         })
     }
 
@@ -394,6 +407,7 @@ impl Trainer {
             train_secs,
             active_param_fraction: frac_acc / cfg.steps.max(1) as f64,
             mean_input_len: len_acc / cfg.steps.max(1) as f64,
+            fo_state_bytes: 0,
         })
     }
 
@@ -480,8 +494,8 @@ impl Trainer {
         let cfg = &self.cfg;
         ensure!(
             backend.supports_fo(),
-            "method=ft needs a first-order-capable backend (pjrt with forward_backward \
-             artifacts); the {} backend has no autodiff",
+            "method=ft needs a first-order-capable backend (native, or pjrt with \
+             forward_backward artifacts); the {} backend has no autodiff",
             backend.name()
         );
         let engine = FoEngine::new(backend);
@@ -492,31 +506,52 @@ impl Trainer {
         let mut history = Vec::new();
         let mut losses = Vec::with_capacity(cfg.steps);
         let mut train_secs = 0.0f64;
-        let mut best = f64::MIN;
         let mut len_acc = 0.0f64;
         let mut times = StageTimes::default();
 
+        let eval_now = |params: &[Vec<f32>]| -> Result<EvalMetric> {
+            let units = TunableUnits::from_host(backend, params)?;
+            evaluator.evaluate(task.kind(), &units.unit_refs(), evals)
+        };
+
+        // step-0 eval: the FT convergence curve gets its origin point, like
+        // run_zo — and `best`/`final` fall back to it, never to 0.0/f64::MIN
+        let m0 = eval_now(&host_params)?;
+        let mut best = m0.value;
+        history.push(EvalPoint { step: 0, train_secs: 0.0, metric: m0.value, train_loss: 0.0 });
+
         for step in 0..cfg.steps as u64 {
-            let sw = crate::util::Stopwatch::start();
+            // one StageTimer, each boundary read exactly once: train_secs is
+            // the sum of the same laps that feed stage_times, so the two
+            // can never disagree
+            let mut t = StageTimer::start();
             let (batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, spec)?;
             len_acc += mean_prompt;
-            let loss = engine.fo_step(&mut host_params, &batch, &mut opt, cfg.lr)?;
-            losses.push(loss);
-            times.forward_secs += sw.secs(); // FO has no perturb/update split
+            let sample_secs = t.lap();
+            let (loss, grads) = engine.loss_and_grads(&host_params, &batch)?;
+            let grad_secs = t.lap();
+            opt.update(&mut host_params, &grads, cfg.lr);
+            let update_secs = t.lap();
+            // batch sampling is bookkeeping, not model compute — it lands in
+            // `other` so non_forward_fraction() is comparable to ZO reports;
+            // the fused forward+backward is FO's "forward" stage
+            times.other_secs += sample_secs;
+            times.forward_secs += grad_secs;
+            times.update_secs += update_secs;
             times.steps += 1;
-            train_secs += sw.secs();
+            train_secs += sample_secs + grad_secs + update_secs;
+            losses.push(loss);
 
             let s1 = step + 1;
             if s1 % cfg.eval_every as u64 == 0 || s1 == cfg.steps as u64 {
-                let units = TunableUnits::from_host(backend, &host_params)?;
-                let m = evaluator.evaluate(task.kind(), &units.unit_refs(), evals)?;
+                let m = eval_now(&host_params)?;
                 best = best.max(m.value);
                 history.push(EvalPoint { step: s1, train_secs, metric: m.value, train_loss: loss });
                 crate::info!("FT step {s1}: loss={loss:.4} {}={:.1}%", m.kind, m.pct());
             }
         }
 
-        let final_metric = history.last().map(|p| p.metric).unwrap_or(0.0);
+        let final_metric = history.last().map(|p| p.metric).unwrap_or(m0.value);
         Ok(TrainReport {
             task: cfg.task.clone(),
             method: cfg.method,
@@ -530,6 +565,7 @@ impl Trainer {
             train_secs,
             active_param_fraction: 1.0,
             mean_input_len: len_acc / cfg.steps.max(1) as f64,
+            fo_state_bytes: opt.state_bytes(),
         })
     }
 }
@@ -539,29 +575,46 @@ impl Trainer {
 // ---------------------------------------------------------------------------
 
 /// Pretrain a model on the synthetic corpus with FO-Adam and write
-/// `<artifact_dir>/pretrained.ckpt`. All fine-tuning runs then start from
-/// this checkpoint (checkpoint::resolve_initial picks it up automatically).
-/// FO needs the forward_backward artifacts, so this is a PJRT-only path;
-/// builds without the `pjrt` feature fail at run time with a clear error.
-#[cfg(not(feature = "pjrt"))]
+/// `<cfg.artifact_dir()>/pretrained.ckpt`. All fine-tuning runs then start
+/// from this checkpoint (`checkpoint::resolve_initial` picks it up under an
+/// artifact manifest; the native backend's checkpoint-dir adoption picks it
+/// up on fully hermetic, manifest-less runs). Runs on any FO-capable
+/// backend: the native reference backward pass with zero artifacts, or the
+/// PJRT `forward_backward` executables when artifacts exist.
 pub fn pretrain(
-    artifact_dir: &std::path::Path,
+    cfg: &RunConfig,
     steps: usize,
     lr: f64,
     seed: u64,
     log_every: usize,
 ) -> Result<(f32, f32)> {
-    let _ = (artifact_dir, steps, lr, seed, log_every);
-    bail!(
-        "pretrain drives the FO substrate over forward_backward artifacts, which needs the \
-         pjrt backend; rebuild with `cargo build --features pjrt`"
-    )
+    let dir = std::path::PathBuf::from(cfg.artifact_dir());
+    crate::runtime::native::parallel::with_threads(cfg.threads, || {
+        match resolve_backend(cfg)? {
+            ResolvedBackend::Native(b) => {
+                // start from the same init a fresh fine-tune would use —
+                // never from an existing pretrained.ckpt (that would make
+                // re-pretraining silently resume from its own output)
+                let init = match b.manifest() {
+                    Some(m) => m.read_init_params()?,
+                    None => b.spec().init_units(crate::runtime::native::NATIVE_INIT_SEED),
+                };
+                pretrain_with(&b, &dir, init, steps, lr, seed, log_every)
+            }
+            #[cfg(feature = "pjrt")]
+            ResolvedBackend::Pjrt(b) => {
+                let init = b.manifest().read_init_params()?;
+                pretrain_with(&b, &dir, init, steps, lr, seed, log_every)
+            }
+        }
+    })
 }
 
-/// See the `not(feature = "pjrt")` twin for the rationale.
-#[cfg(feature = "pjrt")]
-pub fn pretrain(
+/// The backend-generic pretraining loop behind [`pretrain`].
+fn pretrain_with<B: Backend>(
+    backend: &B,
     artifact_dir: &std::path::Path,
+    mut params: Vec<Vec<f32>>,
     steps: usize,
     lr: f64,
     seed: u64,
@@ -570,25 +623,28 @@ pub fn pretrain(
     use crate::data::corpus::CorpusGen;
     use crate::model::checkpoint;
 
-    let backend = crate::runtime::PjrtBackend::open(artifact_dir)?;
-    let manifest = backend.manifest().clone();
-    let engine = FoEngine::new(&backend);
-    let mut params = manifest.read_init_params()?;
+    ensure!(
+        backend.supports_fo(),
+        "pretrain needs a first-order-capable backend; the {} backend has no autodiff",
+        backend.name()
+    );
+    let spec = backend.spec();
+    let engine = FoEngine::new(backend);
     let mut opt = FoOptimizer::adam(0.9, 0.999, 1e-8);
-    let corpus = CorpusGen::new(manifest.vocab, manifest.max_seq);
+    let corpus = CorpusGen::new(spec.vocab, spec.max_seq);
     let mut rng = Rng::new(derive(seed, purpose::DATA, 0xC0));
-    let seq = *manifest.seq_buckets.iter().max().unwrap();
+    let seq = *spec.seq_buckets.iter().max().unwrap();
     let mut first_loss = 0.0f32;
     let mut last_loss = 0.0f32;
     for step in 0..steps {
-        let docs: Vec<Vec<u32>> = (0..manifest.train_batch)
+        let docs: Vec<Vec<u32>> = (0..spec.train_batch)
             .map(|_| {
                 let mut d = corpus.doc(&mut rng);
                 d.truncate(seq);
                 d
             })
             .collect();
-        let batch = Batch::lm_batch(&docs, manifest.train_batch, seq)?;
+        let batch = Batch::lm_batch(&docs, spec.train_batch, seq)?;
         let loss = engine.fo_step(&mut params, &batch, &mut opt, lr)?;
         if step == 0 {
             first_loss = loss;
@@ -600,8 +656,9 @@ pub fn pretrain(
     }
     checkpoint::save(&artifact_dir.join("pretrained.ckpt"), steps as u64, &params)?;
     crate::info!(
-        "pretrained {} for {steps} steps: loss {first_loss:.3} -> {last_loss:.3}",
-        manifest.name
+        "pretrained {} on the {} backend for {steps} steps: loss {first_loss:.3} -> {last_loss:.3}",
+        spec.name,
+        backend.name()
     );
     Ok((first_loss, last_loss))
 }
@@ -626,6 +683,7 @@ mod tests {
             train_secs: 20.0,
             active_param_fraction: 0.5,
             mean_input_len: 20.0,
+            fo_state_bytes: 0,
         };
         assert_eq!(r.time_to_metric(0.8), Some(10.0));
         assert_eq!(r.steps_to_metric(0.9), Some(200));
@@ -643,14 +701,35 @@ mod tests {
     }
 
     #[test]
-    fn ft_on_native_backend_is_a_clear_error() {
+    fn ft_runs_on_native_backend() {
+        // Until the native backward pass existed this was a hard error;
+        // now the FT baseline runs hermetically, with a step-0 eval point
+        // and stage times whose total matches train_secs by construction.
         let mut cfg = RunConfig::default();
         cfg.model = "opt-nano".into();
         cfg.backend = BackendKind::Native;
         cfg.method = Method::Ft;
-        cfg.steps = 1;
-        let err = Trainer::new(cfg).run().unwrap_err();
-        assert!(err.to_string().contains("first-order"), "{err}");
+        cfg.steps = 2;
+        cfg.eval_every = 2;
+        cfg.eval_examples = 4;
+        cfg.train_examples = 8;
+        cfg.mean_len = 8;
+        cfg.lr = 1e-3;
+        let r = Trainer::new(cfg).run().unwrap();
+        assert_eq!(r.backend, "native");
+        assert_eq!(r.losses.len(), 2);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert_eq!(r.history.first().map(|p| p.step), Some(0), "FT curve needs its origin");
+        assert!(r.best_metric >= r.history[0].metric);
+        assert!(r.best_metric > f64::MIN && (0.0..=1.0).contains(&r.final_metric));
+        assert!(r.fo_state_bytes > 0, "Adam state must be accounted");
+        assert_eq!(r.stage_times.steps, 2);
+        assert!(
+            (r.stage_times.total() - r.train_secs).abs() < 1e-9,
+            "stage total {} vs train {}",
+            r.stage_times.total(),
+            r.train_secs
+        );
     }
 
     #[test]

@@ -29,8 +29,10 @@
 //!   Gaussian regeneration bit-compatible with the Pallas kernel, in-place
 //!   allocation-free (masked) zo_axpy sweeps, blocked thread-parallel
 //!   transformer kernels with a fused streaming LM head, plus the naive
-//!   dense reference they are tested against). [`runtime::pjrt`]
-//!   (feature `pjrt`) executes the AOT HLO artifacts instead.
+//!   dense reference they are tested against — and a reference backward
+//!   pass, so the FT baseline and pretraining are hermetic too).
+//!   [`runtime::pjrt`] (feature `pjrt`) executes the AOT HLO artifacts
+//!   instead.
 //! - **L2/L1** live in `python/compile/` and never run on the request path.
 //!
 //! ## Selecting a backend

@@ -20,7 +20,7 @@ fn usage() -> ! {
     eprintln!(
         "lezo — layer-wise sparse zeroth-order fine-tuning\n\n\
          USAGE:\n  lezo train   [--config FILE] [key=value ...]\n  \
-         lezo pretrain model=<size> [steps=N] [lr=X] [seed=S]\n  \
+         lezo pretrain model=<size> [backend=auto|native|pjrt] [steps=N] [lr=X] [seed=S]\n  \
          lezo bench   <id|all> [key=value ...]    ids: {}\n  \
          lezo info    [model=<size>]\n  lezo render  task=<name> [n=K] [seed=S]\n\n\
          Common keys: model backend task method peft drop_layers lr mu steps\n\
@@ -86,8 +86,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
 fn cmd_pretrain(args: &[String]) -> Result<()> {
     use lezo::coordinator::trainer;
     let (overrides, _) = split_flags(args);
-    let mut model = "opt-micro".to_string();
-    let mut root = "artifacts".to_string();
+    let mut cfg = RunConfig::default();
     let mut steps = 300usize;
     let mut lr = 1e-3f64;
     let mut seed = 0u64;
@@ -95,8 +94,9 @@ fn cmd_pretrain(args: &[String]) -> Result<()> {
     for ov in &overrides {
         let (k, v) = ov.split_once('=').with_context(|| format!("'{ov}' is not key=value"))?;
         match k {
-            "model" => model = v.into(),
-            "artifacts" | "artifacts_root" => root = v.into(),
+            "model" | "artifacts" | "artifacts_root" | "backend" | "threads" => {
+                cfg.set(k, v)?
+            }
             "steps" => steps = v.parse()?,
             "lr" => lr = v.parse()?,
             "seed" => seed = v.parse()?,
@@ -104,9 +104,9 @@ fn cmd_pretrain(args: &[String]) -> Result<()> {
             _ => bail!("unknown pretrain key '{k}'"),
         }
     }
-    let dir = std::path::PathBuf::from(root).join(&model);
-    let (first, last) = trainer::pretrain(&dir, steps, lr, seed, log_every)?;
-    println!("pretrained {model}: LM loss {first:.3} -> {last:.3} over {steps} steps");
+    let dir = std::path::PathBuf::from(cfg.artifact_dir());
+    let (first, last) = trainer::pretrain(&cfg, steps, lr, seed, log_every)?;
+    println!("pretrained {}: LM loss {first:.3} -> {last:.3} over {steps} steps", cfg.model);
     println!("checkpoint: {}", dir.join("pretrained.ckpt").display());
     Ok(())
 }

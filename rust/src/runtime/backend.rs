@@ -7,8 +7,9 @@
 //!
 //! - [`crate::runtime::native::NativeBackend`] — pure Rust: Philox-seeded
 //!   Gaussian regeneration ([`crate::runtime::philox`]), native (masked)
-//!   zo_axpy, and a reference transformer forward. Zero external artifacts;
-//!   this is what the hermetic test suite runs on.
+//!   zo_axpy, and a reference transformer forward *and backward* (so the
+//!   FT baseline and pretraining run hermetically too). Zero external
+//!   artifacts; this is what the hermetic test suite runs on.
 //! - `PjrtBackend` (feature `pjrt`) — the PJRT runtime executing AOT HLO
 //!   artifacts exported by `python/compile/aot.py`.
 //!
@@ -127,7 +128,10 @@ pub trait Backend {
     ) -> Result<Vec<i32>>;
 
     /// First-order substrate: (loss, per-unit grads) for the FT baseline and
-    /// pretraining. Backends without autodiff leave the default.
+    /// pretraining. Both in-tree backends implement it (native: the
+    /// reference backward pass in `runtime/native/backward.rs`; PJRT: the
+    /// AOT'd executable); a backend without autodiff leaves the default
+    /// and reports [`Backend::supports_fo`] `== false`.
     fn forward_backward(
         &self,
         host_units: &[Vec<f32>],

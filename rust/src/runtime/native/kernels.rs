@@ -205,7 +205,7 @@ pub fn gelu_inplace(a: &mut [f32]) {
 /// vectorizes. The accumulation pattern is fixed per (a, b) pair — it never
 /// depends on threads or chunking.
 #[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n4 = a.len() - a.len() % 4;
     let mut acc = [0.0f32; 4];
@@ -360,34 +360,25 @@ impl ForwardScratch {
     }
 }
 
-/// Causal multi-head attention + output projection added into `h`.
-/// Parallel over (row, head) tasks; task `(r, head)` writes only the
-/// `[seq, d_head]` column slice of `ctx` at head offset `head * d_head`
-/// within batch row `r` — disjoint across tasks. `q` is reused as the
-/// projection buffer afterwards.
-#[allow(clippy::too_many_arguments)]
-fn attention_into(
-    h: &mut [f32],
-    x: &[f32],
-    q: &mut [f32],
-    k: &mut [f32],
-    v: &mut [f32],
+/// Causal softmax attention context from projected q/k/v: the per-(row,
+/// head) weighted sum of values, written into `ctx`. Parallel over (row,
+/// head) tasks; task `(r, head)` writes only the `[seq, d_head]` column
+/// slice of `ctx` at head offset `head * d_head` within batch row `r` —
+/// disjoint across tasks. Shared by the forward fast path and the FO
+/// backward pass (which records `ctx` for the Wo gradient).
+pub(crate) fn attention_ctx(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
     ctx: &mut [f32],
-    p: &BlockParams<'_>,
     d: usize,
     nh: usize,
     rows: usize,
     seq: usize,
 ) {
-    let n = rows * seq;
     let dh = d / nh;
-    matmul_bias_into(x, p.wq, p.bq, q, n, d, d);
-    matmul_bias_into(x, p.wk, p.bk, k, n, d, d);
-    matmul_bias_into(x, p.wv, p.bv, v, n, d, d);
     let scale = 1.0 / (dh as f32).sqrt();
-
     let ctx_ptr = SendPtr(ctx.as_mut_ptr());
-    let (q_ro, k_ro, v_ro) = (&*q, &*k, &*v);
     let grain = grain_for(seq * seq * dh, 100_000);
     par_ranges(rows * nh, grain, |tasks| {
         let mut scores = vec![0.0f32; seq];
@@ -395,11 +386,11 @@ fn attention_into(
             let (r, head) = (t / nh, t % nh);
             let hoff = head * dh;
             for s1 in 0..seq {
-                let qrow = &q_ro[(r * seq + s1) * d + hoff..][..dh];
+                let qrow = &q[(r * seq + s1) * d + hoff..][..dh];
                 // causal scores over s2 <= s1
                 let mut max = f32::NEG_INFINITY;
                 for (s2, sv) in scores[..=s1].iter_mut().enumerate() {
-                    let krow = &k_ro[(r * seq + s2) * d + hoff..][..dh];
+                    let krow = &k[(r * seq + s2) * d + hoff..][..dh];
                     let s = dot(qrow, krow) * scale;
                     *sv = s;
                     max = max.max(s);
@@ -415,7 +406,7 @@ fn attention_into(
                 orow.fill(0.0);
                 for (s2, &sv) in scores[..=s1].iter().enumerate() {
                     let w = sv / denom;
-                    let vrow = &v_ro[(r * seq + s2) * d + hoff..][..dh];
+                    let vrow = &v[(r * seq + s2) * d + hoff..][..dh];
                     for (o, &vv) in orow.iter_mut().zip(vrow) {
                         *o += w * vv;
                     }
@@ -423,7 +414,29 @@ fn attention_into(
             }
         }
     });
+}
 
+/// Causal multi-head attention + output projection added into `h`.
+/// `q` is reused as the projection buffer afterwards.
+#[allow(clippy::too_many_arguments)]
+fn attention_into(
+    h: &mut [f32],
+    x: &[f32],
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &mut [f32],
+    ctx: &mut [f32],
+    p: &BlockParams<'_>,
+    d: usize,
+    nh: usize,
+    rows: usize,
+    seq: usize,
+) {
+    let n = rows * seq;
+    matmul_bias_into(x, p.wq, p.bq, q, n, d, d);
+    matmul_bias_into(x, p.wk, p.bk, k, n, d, d);
+    matmul_bias_into(x, p.wv, p.bv, v, n, d, d);
+    attention_ctx(q, k, v, ctx, d, nh, rows, seq);
     matmul_bias_into(ctx, p.wo, p.bo, q, n, d, d);
     add_inplace(h, q);
 }

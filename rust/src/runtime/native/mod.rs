@@ -5,8 +5,10 @@
 //! bit-compatible with the Pallas kernel's integer stream); the forward
 //! families run the blocked, thread-parallel kernels in [`kernels`] with a
 //! streaming (fused) LM head, against the naive dense reference kept in
-//! [`forward`]. Everything is derived from a [`ModelSpec`] preset — no AOT
-//! artifacts, no PJRT plugin, no Python.
+//! [`forward`]; and the first-order substrate (`method=ft`, `pretrain`)
+//! runs on the reference backward pass in [`backward`], so
+//! `supports_fo() == true` with zero artifacts. Everything is derived from
+//! a [`ModelSpec`] preset — no AOT artifacts, no PJRT plugin, no Python.
 //!
 //! Hot-path structure (this is the substrate the bench harness measures):
 //!
@@ -19,7 +21,11 @@
 //! - [`forward`] — the forward families plus the dense reference
 //!   (`forward_logits` / `position_xent`) the fused paths are tested
 //!   against.
+//! - [`backward`] — the recording forward + full backward for FO-Adam,
+//!   gradient-checked against `forward_loss` by central finite differences
+//!   (and cross-checked against the Python twin's `jax.value_and_grad`).
 
+pub mod backward;
 pub mod forward;
 pub mod kernels;
 pub mod parallel;
@@ -42,6 +48,11 @@ pub struct NativeBackend {
     /// backend) instead of the synthetic native init — so results don't
     /// silently diverge between build flavors.
     manifest: Option<crate::model::Manifest>,
+    /// Optional checkpoint directory for manifest-less (fully hermetic)
+    /// runs: when `<ckpt_dir>/pretrained.ckpt` exists — written by the
+    /// native `pretrain` path — runs start from it, mirroring
+    /// `checkpoint::resolve_initial`'s rule for artifact dirs.
+    ckpt_dir: Option<std::path::PathBuf>,
     /// Reusable forward arena: q/k/v/ctx/ffn and the residual stream are
     /// allocated once and reused across every forward this backend runs.
     scratch: RefCell<kernels::ForwardScratch>,
@@ -53,6 +64,7 @@ impl NativeBackend {
         Ok(NativeBackend {
             spec,
             manifest: None,
+            ckpt_dir: None,
             scratch: RefCell::new(kernels::ForwardScratch::new()),
         })
     }
@@ -73,6 +85,36 @@ impl NativeBackend {
         );
         self.manifest = Some(manifest);
         Ok(self)
+    }
+
+    /// Adopt a checkpoint directory (no manifest needed): runs start from
+    /// `<dir>/pretrained.ckpt` when it exists — this is how a hermetic
+    /// `lezo pretrain` -> `lezo train` pipeline hands over weights. A
+    /// checkpoint that does not match the spec's layout is a hard error.
+    pub fn with_checkpoint_dir(mut self, dir: &std::path::Path) -> NativeBackend {
+        self.ckpt_dir = Some(dir.to_path_buf());
+        self
+    }
+
+    /// The adopted artifact manifest, if any (pretraining starts from its
+    /// params_init.bin instead of the synthetic native init).
+    pub fn manifest(&self) -> Option<&crate::model::Manifest> {
+        self.manifest.as_ref()
+    }
+
+    /// Load a checkpoint and validate it against this spec's unit layout —
+    /// a mismatch is a hard error, never a silent fallback.
+    fn load_checked(&self, path: &std::path::Path) -> Result<Vec<Vec<f32>>> {
+        let ck = crate::model::checkpoint::load(path)?;
+        let lens = self.spec.unit_lens();
+        ensure!(
+            ck.units.len() == lens.len()
+                && ck.units.iter().zip(&lens).all(|(u, &l)| u.len() == l),
+            "checkpoint {} does not match model {}",
+            path.display(),
+            self.spec.name
+        );
+        Ok(ck.units)
     }
 
     fn unit_slices<'a>(&self, units: &[&'a Vec<f32>]) -> Result<Vec<&'a [f32]>> {
@@ -230,21 +272,44 @@ impl Backend for NativeBackend {
 
     fn initial_params(&self, explicit_checkpoint: &str) -> Result<(Vec<Vec<f32>>, String)> {
         if !explicit_checkpoint.is_empty() {
-            let ck = crate::model::checkpoint::load(std::path::Path::new(explicit_checkpoint))
+            let units = self
+                .load_checked(std::path::Path::new(explicit_checkpoint))
                 .with_context(|| format!("loading checkpoint {explicit_checkpoint}"))?;
-            let lens = self.spec.unit_lens();
-            ensure!(
-                ck.units.len() == lens.len()
-                    && ck.units.iter().zip(&lens).all(|(u, &l)| u.len() == l),
-                "checkpoint {explicit_checkpoint} does not match model {}",
-                self.spec.name
-            );
-            return Ok((ck.units, explicit_checkpoint.to_string()));
+            return Ok((units, explicit_checkpoint.to_string()));
         }
         if let Some(manifest) = &self.manifest {
             return crate::model::checkpoint::resolve_initial(manifest, "");
         }
+        if let Some(dir) = &self.ckpt_dir {
+            let pretrained = dir.join("pretrained.ckpt");
+            if pretrained.exists() {
+                let units = self.load_checked(&pretrained)?;
+                return Ok((units, pretrained.display().to_string()));
+            }
+        }
         Ok((self.spec.init_units(NATIVE_INIT_SEED), "native-init".to_string()))
+    }
+
+    /// First-order substrate: the reference backward pass in [`backward`].
+    fn forward_backward(
+        &self,
+        host_units: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let slices: Vec<&[f32]> = host_units.iter().map(|u| u.as_slice()).collect();
+        backward::forward_backward(
+            &self.spec,
+            &slices,
+            &batch.tokens,
+            &batch.targets,
+            &batch.mask,
+            batch.rows,
+            batch.seq,
+        )
+    }
+
+    fn supports_fo(&self) -> bool {
+        true
     }
 }
 
@@ -341,7 +406,7 @@ mod tests {
     }
 
     #[test]
-    fn peft_and_fo_are_rejected_clearly() {
+    fn peft_is_rejected_clearly_and_fo_is_supported() {
         let b = backend();
         let host = b.initial_params("").unwrap().0;
         let units: Vec<&Vec<f32>> = host.iter().collect();
@@ -349,10 +414,38 @@ mod tests {
         let prepared = b.prepare_batch(&batch).unwrap();
         let err = b.forward_loss(PeftMode::Lora, &units, &prepared).unwrap_err();
         assert!(err.to_string().contains("native"), "{err}");
-        assert!(!b.supports_fo());
         assert!(b.supports_peft(PeftMode::Full));
         assert!(!b.supports_peft(PeftMode::Lora));
-        assert!(b.forward_backward(&host, &batch).is_err());
+        // the native backend has a reference backward pass since PR 3
+        assert!(b.supports_fo());
+        let (loss, grads) = b.forward_backward(&host, &batch).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(grads.len(), host.len());
+        for (g, u) in grads.iter().zip(&host) {
+            assert_eq!(g.len(), u.len());
+        }
+        // mismatched host units are still a shape error
+        assert!(b.forward_backward(&host[..2], &batch).is_err());
+    }
+
+    #[test]
+    fn checkpoint_dir_adoption_picks_up_pretrained_ckpt() {
+        let b = backend();
+        let dir = std::env::temp_dir().join(format!("lezo_ckpt_dir_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // no pretrained.ckpt yet: native init
+        let b2 = NativeBackend::preset("opt-nano").unwrap().with_checkpoint_dir(&dir);
+        assert_eq!(b2.initial_params("").unwrap().1, "native-init");
+        // write one and it becomes the initial state
+        let units = b.initial_params("").unwrap().0;
+        crate::model::checkpoint::save(&dir.join("pretrained.ckpt"), 7, &units).unwrap();
+        let (loaded, source) = b2.initial_params("").unwrap();
+        assert_eq!(loaded, units);
+        assert!(source.contains("pretrained.ckpt"), "{source}");
+        // a mismatched checkpoint is a hard error, not a fallback
+        let other = NativeBackend::preset("opt-micro").unwrap().with_checkpoint_dir(&dir);
+        assert!(other.initial_params("").is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
