@@ -2,6 +2,10 @@
 //! KV positions with the ZO optimizer, with LeZO's layer-wise sparsity over
 //! the per-block adapter units.
 //!
+//! Hermetic: with no artifacts exported this runs on the native backend's
+//! adapter kernels; with an artifact set present (and a pjrt build) the
+//! same code drives the AOT executables.
+//!
 //! ```bash
 //! cargo run --release --example peft_finetune [lora|prefix] [steps]
 //! ```
@@ -9,8 +13,8 @@
 use anyhow::Result;
 use lezo::config::{Method, RunConfig};
 use lezo::coordinator::Trainer;
-use lezo::model::Manifest;
 use lezo::peft::PeftMode;
+use lezo::runtime::backend::{default_artifact_dir, resolve_model};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -18,19 +22,23 @@ fn main() -> Result<()> {
     let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(600);
 
     let model = "opt-micro";
-    let manifest = Manifest::load(std::path::Path::new(&format!("artifacts/{model}")))?;
+    // manifest when artifacts exist, in-crate preset otherwise — the same
+    // fallback rule the trainer uses, so this example needs no artifacts
+    let (spec, manifest) = resolve_model(model, &default_artifact_dir(model))?;
     let unit = match mode {
-        PeftMode::Lora => manifest.lora_unit_len.expect("re-run make artifacts for PEFT"),
-        PeftMode::Prefix => manifest.prefix_unit_len.expect("re-run make artifacts for PEFT"),
+        PeftMode::Lora => lezo::peft::lora_unit_len(spec.d_model),
+        PeftMode::Prefix => lezo::peft::prefix_unit_len(spec.d_model),
         PeftMode::Full => unreachable!(),
     };
     println!(
-        "{model} + {mode}: {} tunable params ({} per block x {} blocks) vs {} total — {:.2}% of the model",
-        unit * manifest.n_layers,
+        "{model} + {mode} ({}): {} tunable params ({} per block x {} blocks) vs {} total — \
+         {:.2}% of the model",
+        if manifest.is_some() { "AOT artifacts" } else { "native preset" },
+        unit * spec.n_layers,
         unit,
-        manifest.n_layers,
-        manifest.param_count,
-        100.0 * (unit * manifest.n_layers) as f64 / manifest.param_count as f64
+        spec.n_layers,
+        spec.param_count(),
+        100.0 * (unit * spec.n_layers) as f64 / spec.param_count() as f64
     );
 
     let mut cfg = RunConfig::default();
@@ -54,9 +62,13 @@ fn main() -> Result<()> {
 
     let mut lezo = cfg.clone();
     lezo.method = Method::Lezo;
-    lezo.drop_layers = manifest.n_layers / 2; // Table 4: 50% for LoRA
+    // Table-4 captions: LeZO drops 50% of blocks under LoRA, 75% under prefix
+    lezo.drop_layers = match mode {
+        PeftMode::Prefix => lezo::bench::paper_drop(spec.n_layers),
+        _ => spec.n_layers / 2,
+    };
     lezo.lr = cfg.lr * 2.0;
-    println!("\n== LeZO ({mode}, drop {}/{}) ==", lezo.drop_layers, manifest.n_layers);
+    println!("\n== LeZO ({mode}, drop {}/{}) ==", lezo.drop_layers, spec.n_layers);
     let rl = Trainer::new(lezo).run()?;
 
     println!("\n{:<22}{:>10}{:>12}", "", "best acc", "ms/step");
@@ -66,7 +78,7 @@ fn main() -> Result<()> {
     println!(
         "\nZO memory = base params + adapters only; adapters are {:.2}% of the model,\n\
          so perturb/update cost is negligible and the forward pass dominates.",
-        100.0 * (unit * manifest.n_layers) as f64 / manifest.param_count as f64
+        100.0 * (unit * spec.n_layers) as f64 / spec.param_count() as f64
     );
     Ok(())
 }

@@ -2,8 +2,11 @@
 //! criterion is not vendored in this offline image).
 //!
 //! Covers: per-unit zo_axpy latency (allocating and in-place), forward-pass
-//! latency per bucket, and a full MeZO-vs-LeZO step comparison — the raw
-//! numbers behind Figs. 2 and 4. Backend-generic: the native backend runs
+//! latency per bucket, a full MeZO-vs-LeZO step comparison — the raw
+//! numbers behind Figs. 2 and 4 — and the four Table-4 PEFT step variants
+//! (`mezo-lora`, `lezo-lora`, `mezo-prefix`, `lezo-prefix`: adapter units
+//! tunable over a frozen base, with their tunable-parameter counts in the
+//! `steps[].tunable_params` JSON field). Backend-generic: the native backend runs
 //! with zero artifacts on any machine; with `--features pjrt` and exported
 //! artifacts the same harness times the PJRT runtime. For the full
 //! table/figure regeneration use `lezo bench <id>`.
@@ -69,6 +72,9 @@ struct StepStat {
     forward_ms: f64,
     update_ms: f64,
     non_forward_fraction: f64,
+    /// Size of the ZO-tunable parameter space: the full model for
+    /// `mezo`/`lezo75`, the per-block adapter units for the PEFT variants.
+    tunable_params: usize,
 }
 
 struct TargetReport {
@@ -140,13 +146,15 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
             let _ = write!(
                 s,
                 "\n        {{\"name\": \"{}\", \"ms_per_step\": {}, \"perturb_ms\": {}, \
-                 \"forward_ms\": {}, \"update_ms\": {}, \"non_forward_fraction\": {}}}",
+                 \"forward_ms\": {}, \"update_ms\": {}, \"non_forward_fraction\": {}, \
+                 \"tunable_params\": {}}}",
                 st.name,
                 json_num(st.ms_per_step),
                 json_num(st.perturb_ms),
                 json_num(st.forward_ms),
                 json_num(st.update_ms),
-                json_num(st.non_forward_fraction)
+                json_num(st.non_forward_fraction),
+                st.tunable_params
             );
         }
         s.push_str("\n      ]\n    }");
@@ -217,37 +225,88 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
     // --- full ZO step: MeZO vs LeZO(75%) ---
     let batch = lm_batch(&spec, 32);
     let prepared = backend.prepare_batch(&batch).unwrap();
-    let drop = (3 * spec.n_layers) / 4;
+    let drop = lezo::bench::paper_drop(spec.n_layers);
     for (name, active) in [
         ("mezo", (0..spec.n_units()).collect::<Vec<_>>()),
         ("lezo75", (0..spec.n_units()).filter(|&k| k == 0 || k > drop).collect::<Vec<_>>()),
     ] {
-        let eng = SpsaEngine::new(backend, 1e-3, 1).unwrap();
         let mut tun = TunableUnits::<B>::from_host(backend, &host).unwrap();
-        let mut times = StageTimes::default();
         let mut loss = |u: &TunableUnits<B>| -> anyhow::Result<f32> {
             backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
         };
-        let t = Instant::now();
-        for step in 0..iters as u64 {
-            eng.zo_step(step, &mut tun, &active, 1e-5, &mut loss, &mut times).unwrap();
-        }
-        let ms = 1e3 * t.elapsed().as_secs_f64() / iters as f64;
-        let (p, f, u, _) = times.per_step_ms();
+        let st = time_zo_steps(name, backend, &mut tun, &active, iters, 1e-3, 1e-5, &mut loss);
         println!(
-            "  {name:<15} {ms:>7.1} ms/step (perturb {p:.1} + forward {f:.1} + update {u:.1}), non-forward {:.0}%",
-            100.0 * times.non_forward_fraction()
+            "  {name:<15} {:>7.1} ms/step (perturb {:.1} + forward {:.1} + update {:.1}), non-forward {:.0}%",
+            st.ms_per_step, st.perturb_ms, st.forward_ms, st.update_ms,
+            100.0 * st.non_forward_fraction
         );
-        report.steps.push(StepStat {
-            name,
-            ms_per_step: ms,
-            perturb_ms: p,
-            forward_ms: f,
-            update_ms: u,
-            non_forward_fraction: times.non_forward_fraction(),
-        });
+        report.steps.push(st);
+    }
+
+    // --- PEFT ZO steps (Table 4): adapter units tunable, base frozen ---
+    // one shared frozen-base upload for all four variants
+    let base_bufs: Vec<B::Buffer> = host.iter().map(|u| backend.upload(u).unwrap()).collect();
+    for (name, mode, drop) in [
+        ("mezo-lora", PeftMode::Lora, 0usize),
+        ("lezo-lora", PeftMode::Lora, spec.n_layers / 2),
+        ("mezo-prefix", PeftMode::Prefix, 0),
+        ("lezo-prefix", PeftMode::Prefix, lezo::bench::paper_drop(spec.n_layers)),
+    ] {
+        if !backend.supports_peft(mode) {
+            eprintln!("  [skip] {name}: backend lacks the {mode} executables");
+            continue;
+        }
+        let peft_host = lezo::peft::init_peft_units(mode, spec.n_layers, spec.d_model, 0);
+        let mut tun = TunableUnits::<B>::from_host(backend, &peft_host).unwrap();
+        // LeZO over PEFT: drop whole adapter units (paper Table 4 captions)
+        let active: Vec<usize> = (drop..spec.n_layers).collect();
+        let mut loss = |u: &TunableUnits<B>| -> anyhow::Result<f32> {
+            let mut args: Vec<&B::Buffer> = base_bufs.iter().collect();
+            args.extend(u.bufs.iter());
+            backend.forward_loss(mode, &args, &prepared)
+        };
+        let st = time_zo_steps(name, backend, &mut tun, &active, iters, 1e-2, 1e-3, &mut loss);
+        println!(
+            "  {name:<15} {:>7.1} ms/step (perturb {:.1} + forward {:.1} + update {:.1}), \
+             {} tunable params",
+            st.ms_per_step, st.perturb_ms, st.forward_ms, st.update_ms, st.tunable_params
+        );
+        report.steps.push(st);
     }
     report
+}
+
+/// Shared step-timing tail of the full-model and PEFT step benches: run
+/// `iters` ZO steps and fold the timings into one [`StepStat`], so the
+/// timing protocol and the `BENCH_native.json` row shape exist once.
+#[allow(clippy::too_many_arguments)]
+fn time_zo_steps<B: Backend>(
+    name: &'static str,
+    backend: &B,
+    tun: &mut TunableUnits<B>,
+    active: &[usize],
+    iters: usize,
+    mu: f32,
+    lr: f32,
+    loss: &mut dyn FnMut(&TunableUnits<B>) -> anyhow::Result<f32>,
+) -> StepStat {
+    let eng = SpsaEngine::new(backend, mu, 1).unwrap();
+    let mut times = StageTimes::default();
+    let t = Instant::now();
+    for step in 0..iters as u64 {
+        eng.zo_step(step, tun, active, lr, loss, &mut times).unwrap();
+    }
+    let ms = 1e3 * t.elapsed().as_secs_f64() / iters as f64;
+    let (p, f, u, _) = times.per_step_ms();
+    StepStat {
+        name,
+        ms_per_step: ms,
+        perturb_ms: p,
+        forward_ms: f,
+        update_ms: u,
+        non_forward_fraction: times.non_forward_fraction(),
+        tunable_params: tun.param_count(),
+    }
 }
 
 fn run_target(target: &str, iters: usize) -> Option<TargetReport> {

@@ -231,11 +231,18 @@ pub fn table3(overrides: &[String]) -> Result<String> {
 
 /// Table 4: ZO + PEFT — {MeZO, LeZO} × {LoRA, prefix} × 5 tasks.
 /// LeZO(LoRA) sparsifies 50% of blocks, LeZO(prefix) 75% (paper caption).
+///
+/// Hermetic since the native PEFT forwards landed: every cell runs with
+/// zero artifacts. Besides the accuracy grid, the output carries a
+/// step-cost footer (per-method ms/step, non-forward fraction, and the
+/// tunable-parameter count of the adapter space vs the full model) —
+/// the measured side of "PEFT shrinks the ZO-perturbed space".
 pub fn table4(overrides: &[String]) -> Result<String> {
     let seeds = seeds_from(overrides);
     let overrides = strip_meta(overrides);
     let base = bench_config(&overrides)?;
-    let n_layers = n_layers_of(&base)?;
+    let spec = model_spec_for(&base)?;
+    let n_layers = spec.n_layers;
     let tasks = ["sst2", "cb", "boolq", "copa", "squad"];
     let g = grids();
     let variants: Vec<(String, Method, PeftMode, usize, f64, f64)> = vec![
@@ -248,7 +255,8 @@ pub fn table4(overrides: &[String]) -> Result<String> {
     let mut header: Vec<&str> = vec!["Method"];
     header.extend(tasks.iter());
     let mut rows = Vec::new();
-    for (label, method, peft, drop, lr, mu) in &variants {
+    let mut costs: Vec<MethodCost> = variants.iter().map(|_| MethodCost::default()).collect();
+    for (vi, (label, method, peft, drop, lr, mu)) in variants.iter().enumerate() {
         let mut row = vec![label.clone()];
         for &task in &tasks {
             let mut cfg = base.clone();
@@ -259,6 +267,12 @@ pub fn table4(overrides: &[String]) -> Result<String> {
             cfg.lr = *lr;
             cfg.mu = *mu;
             let reports = run_seeds(&cfg, &seeds)?;
+            for r in &reports {
+                if r.stage_times.steps > 0 {
+                    costs[vi].ms_per_step.push(r.per_step_ms());
+                    costs[vi].non_forward.push(r.stage_times.non_forward_fraction());
+                }
+            }
             let (m, s) = agg_pct(&reports);
             row.push(fmt_pm(m, s));
         }
@@ -272,6 +286,43 @@ pub fn table4(overrides: &[String]) -> Result<String> {
         n_layers / 2,
         paper_drop(n_layers)
     )?;
+    out.push_str(&render_table(&header, &rows));
+    out.push('\n');
+    out.push_str(&peft_cost_profile(&spec, &variants, &costs)?);
+    Ok(out)
+}
+
+/// The Table-4 step-cost footer: measured ms/step and stage attribution
+/// per PEFT variant plus the tunable-parameter count — adapter units are
+/// the ZO-perturbed space, so the count also lands in `BENCH_native.json`
+/// (the `steps[].tunable_params` field written by `cargo bench`).
+fn peft_cost_profile(
+    spec: &ModelSpec,
+    variants: &[(String, Method, PeftMode, usize, f64, f64)],
+    costs: &[MethodCost],
+) -> Result<String> {
+    let header = ["Method", "ms/step", "non-forward", "tunable params"];
+    let total = spec.param_count();
+    let mut rows = Vec::new();
+    for ((label, _, peft, ..), cost) in variants.iter().zip(costs) {
+        if cost.ms_per_step.is_empty() {
+            continue;
+        }
+        let unit = match peft {
+            PeftMode::Full => 0,
+            PeftMode::Lora => crate::peft::lora_unit_len(spec.d_model),
+            PeftMode::Prefix => crate::peft::prefix_unit_len(spec.d_model),
+        };
+        let tunable = spec.n_layers * unit;
+        rows.push(vec![
+            label.clone(),
+            format!("{:.1}", crate::stats::mean(&cost.ms_per_step)),
+            format!("{:.0}%", 100.0 * crate::stats::mean(&cost.non_forward)),
+            format!("{tunable} ({:.2}% of {total})", 100.0 * tunable as f64 / total as f64),
+        ]);
+    }
+    let mut out =
+        String::from("PEFT step cost (adapter units are the whole ZO-perturbed space)\n");
     out.push_str(&render_table(&header, &rows));
     Ok(out)
 }
@@ -325,6 +376,26 @@ mod tests {
         assert!(t.contains("1.5 MB"), "measured Adam state: {t}");
         assert!(t.contains("MemoryModel"), "{t}");
         assert!(!t.contains("zero-shot"), "no-step methods are skipped: {t}");
+    }
+
+    #[test]
+    fn peft_cost_profile_lists_tunable_param_counts() {
+        let spec = ModelSpec::preset("opt-nano").unwrap();
+        let variants: Vec<(String, Method, PeftMode, usize, f64, f64)> = vec![
+            ("MeZO (LoRA)".into(), Method::Mezo, PeftMode::Lora, 0, 1e-3, 1e-2),
+            ("MeZO (prefix)".into(), Method::Mezo, PeftMode::Prefix, 0, 1e-3, 1e-1),
+        ];
+        let costs = vec![
+            MethodCost { ms_per_step: vec![3.0], non_forward: vec![0.2], fo_state_bytes: 0 },
+            MethodCost { ms_per_step: vec![4.0], non_forward: vec![0.3], fo_state_bytes: 0 },
+        ];
+        let t = peft_cost_profile(&spec, &variants, &costs).unwrap();
+        let lora = spec.n_layers * crate::peft::lora_unit_len(spec.d_model);
+        let prefix = spec.n_layers * crate::peft::prefix_unit_len(spec.d_model);
+        assert!(t.contains(&lora.to_string()), "{t}");
+        assert!(t.contains(&prefix.to_string()), "{t}");
+        assert!(t.contains("MeZO (LoRA)"), "{t}");
+        assert!(t.contains("non-forward"), "{t}");
     }
 
     #[test]

@@ -61,6 +61,26 @@ impl fmt::Display for Method {
     }
 }
 
+/// `mezo-lora` / `lezo-prefix`-style aliases: one token naming the ZO
+/// method plus its PEFT space — the paper's Table-4 row names and the
+/// [`grids()`] keys. Accepted by the `method=` config key, which sets both
+/// `method` and `peft`. Only `mezo`/`lezo` compose with a PEFT suffix
+/// (Sparse-MeZO is full-parameter by construction).
+pub fn method_peft_alias(s: &str) -> Option<(Method, PeftMode)> {
+    let (m, p) = s.rsplit_once('-')?;
+    let peft = match p {
+        "lora" => PeftMode::Lora,
+        "prefix" => PeftMode::Prefix,
+        _ => return None,
+    };
+    let method = match m {
+        "mezo" => Method::Mezo,
+        "lezo" => Method::Lezo,
+        _ => return None,
+    };
+    Some((method, peft))
+}
+
 /// Full description of one run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -161,7 +181,13 @@ impl RunConfig {
             "artifacts" | "artifacts_root" => self.artifacts_root = value.to_string(),
             "backend" => self.backend = parse!(),
             "task" => self.task = value.to_string(),
-            "method" => self.method = parse!(),
+            "method" => match method_peft_alias(value) {
+                Some((m, p)) => {
+                    self.method = m;
+                    self.peft = p;
+                }
+                None => self.method = parse!(),
+            },
             "peft" => self.peft = parse!(),
             "drop_layers" | "n" => self.drop_layers = parse!(),
             "lr" => self.lr = parse!(),
@@ -345,6 +371,32 @@ mod tests {
             let parsed: Method = m.parse().unwrap();
             assert_eq!(parsed.to_string(), m);
         }
+    }
+
+    #[test]
+    fn method_peft_aliases_set_both_keys() {
+        for (alias, method, peft) in [
+            ("mezo-lora", Method::Mezo, PeftMode::Lora),
+            ("lezo-lora", Method::Lezo, PeftMode::Lora),
+            ("mezo-prefix", Method::Mezo, PeftMode::Prefix),
+            ("lezo-prefix", Method::Lezo, PeftMode::Prefix),
+        ] {
+            let mut c = RunConfig::default();
+            c.set("method", alias).unwrap();
+            assert_eq!(c.method, method, "{alias}");
+            assert_eq!(c.peft, peft, "{alias}");
+            // every alias is also a Table-5 grid key
+            assert!(grids().contains_key(alias), "{alias}");
+        }
+        // non-alias methods leave peft alone and still parse
+        let mut c = RunConfig::default();
+        c.set("peft", "lora").unwrap();
+        c.set("method", "sparse-mezo").unwrap();
+        assert_eq!(c.method, Method::Smezo);
+        assert_eq!(c.peft, PeftMode::Lora, "plain method must not reset peft");
+        // a PEFT suffix on a non-composable method is an error, not silence
+        assert!(c.set("method", "smezo-lora").is_err());
+        assert!(c.set("method", "ft-lora").is_err());
     }
 
     #[test]

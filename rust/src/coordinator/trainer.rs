@@ -8,9 +8,12 @@
 //! pure-Rust backend) and hands it to [`Trainer::run_with`], so the full
 //! perturb -> forward -> flip -> forward -> restore -> update loop runs
 //! end-to-end on any machine with zero external artifacts. The same is
-//! true of the first-order paths since the native backward pass landed:
-//! `method=ft` (the paper's FT baseline) and [`pretrain`] run hermetically
-//! on any FO-capable backend (`Backend::supports_fo`).
+//! true of the first-order paths since the native backward pass landed
+//! (`method=ft` and [`pretrain`] run on any FO-capable backend,
+//! `Backend::supports_fo`) and of the PEFT spaces since the native
+//! adapter forwards landed: `peft=lora|prefix` (or the `mezo-lora` /
+//! `lezo-prefix` method aliases) tunes per-block adapter units over the
+//! frozen base on any backend whose `Backend::supports_peft` says yes.
 
 use crate::config::{Method, RunConfig};
 use crate::coordinator::fo::{FoEngine, FoOptimizer};
@@ -224,6 +227,15 @@ impl Trainer {
         host_init: &[Vec<f32>],
         use_icl: bool,
     ) -> Result<TrainReport> {
+        // same "error, not silence" rule as the `ft-lora` alias rejection:
+        // the no-training baselines score the base model only
+        ensure!(
+            self.cfg.peft == PeftMode::Full,
+            "method={} evaluates the base model and cannot compose with peft={} \
+             (zero-init adapters would be scored as if they mattered)",
+            self.cfg.method,
+            self.cfg.peft
+        );
         let units = TunableUnits::from_host(backend, host_init)?;
         let ev = Evaluator::new(backend);
         let examples = if use_icl {
@@ -426,8 +438,9 @@ impl Trainer {
             mode => {
                 ensure!(
                     backend.supports_peft(mode),
-                    "the {} backend cannot run peft={mode} for this model \
-                     (PJRT needs artifacts exported with `aot --peft`)",
+                    "the {} backend cannot run peft={mode} for this model (the pjrt backend \
+                     needs adapter executables: re-export with `python -m compile.aot` — \
+                     without `--no-peft`; the native backend runs every mode)",
                     backend.name()
                 );
                 // backend-authoritative: PJRT cross-checks the manifest's
@@ -492,6 +505,13 @@ impl Trainer {
         mut host_params: Vec<Vec<f32>>,
     ) -> Result<TrainReport> {
         let cfg = &self.cfg;
+        ensure!(
+            cfg.peft == PeftMode::Full,
+            "method=ft is full-parameter fine-tuning and cannot compose with peft={} — \
+             there is no adapter backward pass yet (ROADMAP: 'PEFT backward'); it would \
+             silently FO-tune the whole model under a PEFT label",
+            cfg.peft
+        );
         ensure!(
             backend.supports_fo(),
             "method=ft needs a first-order-capable backend (native, or pjrt with \
@@ -733,15 +753,52 @@ mod tests {
     }
 
     #[test]
-    fn peft_on_native_backend_is_a_clear_error() {
-        let mut cfg = RunConfig::default();
-        cfg.model = "opt-nano".into();
-        cfg.backend = BackendKind::Native;
-        cfg.method = Method::Lezo;
-        cfg.peft = PeftMode::Lora;
-        cfg.steps = 1;
-        let err = Trainer::new(cfg).run().unwrap_err();
-        assert!(err.to_string().contains("peft"), "{err}");
+    fn peft_runs_on_native_backend() {
+        // Until the native PEFT forwards existed this was a hard error;
+        // now every Table-4 cell runs hermetically. The adapter units are
+        // the tunable set (a tiny fraction of the model) and the frozen
+        // base stays a forward argument.
+        for peft in [PeftMode::Lora, PeftMode::Prefix] {
+            let mut cfg = RunConfig::default();
+            cfg.model = "opt-nano".into();
+            cfg.backend = BackendKind::Native;
+            cfg.method = Method::Lezo;
+            cfg.peft = peft;
+            cfg.drop_layers = 1;
+            cfg.steps = 2;
+            cfg.eval_every = 2;
+            cfg.eval_examples = 4;
+            cfg.train_examples = 8;
+            cfg.mean_len = 8;
+            cfg.lr = 1e-3;
+            cfg.mu = 1e-2;
+            let r = Trainer::new(cfg).run().unwrap();
+            assert_eq!(r.backend, "native", "{peft}");
+            assert_eq!(r.losses.len(), 2, "{peft}");
+            assert!(r.losses.iter().all(|l| l.is_finite()), "{peft}");
+            // LeZO over PEFT units: strictly fewer tunable params per step
+            assert!(
+                r.active_param_fraction < 1.0,
+                "{peft}: dropped adapter units must shrink the active set"
+            );
+        }
+    }
+
+    #[test]
+    fn ft_and_no_train_methods_reject_peft() {
+        // the two-token spelling (`method=ft peft=lora`) must be as hard an
+        // error as the `ft-lora` alias: no silent full-model run under a
+        // PEFT label
+        for method in [Method::Ft, Method::ZeroShot, Method::Icl] {
+            let mut cfg = RunConfig::default();
+            cfg.model = "opt-nano".into();
+            cfg.backend = BackendKind::Native;
+            cfg.method = method;
+            cfg.peft = PeftMode::Lora;
+            cfg.steps = 1;
+            let err = Trainer::new(cfg).run().unwrap_err();
+            assert!(err.to_string().contains("peft"), "{method}: {err}");
+        }
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! *"Simultaneous Computation and Memory Efficient Zeroth-Order Optimizer for
 //! Fine-Tuning Large Language Models"* (Wang et al., 2024).
 //!
+//! The repo-level `ARCHITECTURE.md` is the map: the L1/L2/L3 layering,
+//! the full [`runtime::Backend`] contract (executable families, in-place
+//! axpy semantics, what a new GPU/sharded backend must implement), the
+//! Philox seed-regeneration invariant, and the PEFT unit memory layout
+//! shared with `python/compile/peft.py`.
+//!
 //! ## Layering
 //!
 //! ```text
@@ -28,9 +34,10 @@
 //! - **Runtime**: [`runtime::native`] is a pure-Rust CPU backend (Philox
 //!   Gaussian regeneration bit-compatible with the Pallas kernel, in-place
 //!   allocation-free (masked) zo_axpy sweeps, blocked thread-parallel
-//!   transformer kernels with a fused streaming LM head, plus the naive
-//!   dense reference they are tested against — and a reference backward
-//!   pass, so the FT baseline and pretraining are hermetic too).
+//!   transformer kernels with a fused streaming LM head and native PEFT
+//!   adapter forwards, plus the naive dense reference they are tested
+//!   against — and a reference backward pass, so the FT baseline,
+//!   pretraining, and every Table-4 PEFT cell are hermetic too).
 //!   [`runtime::pjrt`] (feature `pjrt`) executes the AOT HLO artifacts
 //!   instead.
 //! - **L2/L1** live in `python/compile/` and never run on the request path.
@@ -71,8 +78,15 @@ pub mod util;
 ///
 /// Replaces the ad-hoc `if !have() { return }` early-outs: every
 /// artifact-dependent test calls this first, so `cargo test -q` passes
-/// hermetically and skipped tests announce themselves on stderr.
+/// hermetically and skipped tests announce themselves on stderr — and the
+/// skip line names the exact `python -m compile.aot` invocation that
+/// produces the missing artifact set, so it is directly actionable.
+///
 /// Default model is `opt-micro`; pass a model name to require another set.
+/// `require_artifacts!("opt-micro", peft)` additionally requires the
+/// adapter executables (a manifest with `lora_unit_len`): artifacts
+/// exported with `--no-peft` skip those suites visibly instead of failing
+/// inside an executable lookup.
 #[macro_export]
 macro_rules! require_artifacts {
     ($model:expr) => {
@@ -80,9 +94,29 @@ macro_rules! require_artifacts {
             &$crate::runtime::backend::default_artifact_dir($model),
         ) {
             eprintln!(
-                "SKIPPED {}: requires AOT artifacts for '{}' (run `make artifacts` in python/, \
-                 or point LEZO_ARTIFACTS at an artifact root)",
+                "SKIPPED {}: requires AOT artifacts for '{}' — run \
+                 `cd python && python -m compile.aot --sizes {}`, or point LEZO_ARTIFACTS \
+                 at an artifact root",
                 module_path!(),
+                $model,
+                $model
+            );
+            return;
+        }
+    };
+    ($model:expr, peft) => {
+        $crate::require_artifacts!($model);
+        if !$crate::model::Manifest::load(&$crate::runtime::backend::default_artifact_dir(
+            $model,
+        ))
+        .map(|m| m.lora_unit_len.is_some() && m.prefix_unit_len.is_some())
+        .unwrap_or(false)
+        {
+            eprintln!(
+                "SKIPPED {}: requires PEFT-enabled AOT artifacts for '{}' — re-export with \
+                 `cd python && python -m compile.aot --sizes {}` (without --no-peft)",
+                module_path!(),
+                $model,
                 $model
             );
             return;

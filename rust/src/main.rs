@@ -26,6 +26,9 @@ fn usage() -> ! {
          Common keys: model backend task method peft drop_layers lr mu steps\n\
          eval_every eval_examples train_examples seed icl_shots mean_len checkpoint\n\
          (backend: auto|native|pjrt — native needs no artifacts)\n\
+         (method:  zero-shot|icl|ft|mezo|lezo|smezo, or a Table-4 alias\n\
+          mezo-lora|lezo-lora|mezo-prefix|lezo-prefix that also sets peft)\n\
+         (peft:    full|lora|prefix — adapter tuning runs on any backend)\n\
          Flags: -q quiet, -v verbose",
         bench::ALL_BENCHES.join(" ")
     );

@@ -5,9 +5,20 @@
 //! arguments. LeZO's layer-wise sparsity then drops whole per-block PEFT
 //! units, mirroring the paper's LeZO(LoRA)/LeZO(prefix) rows.
 //!
-//! The PEFT forward executables (forward_loss_lora_s*, ...) are exported by
-//! `python -m compile.aot --peft`; their argument order is
-//! [base units..., peft units (one per block)..., tokens, targets, mask].
+//! Both backends consume the same flat per-block adapter layout (kept in
+//! sync with `python/compile/peft.py`; see ARCHITECTURE.md):
+//!
+//! ```text
+//!   LoRA unit   = [A_q (D,R) | B_q (R,D) | A_v (D,R) | B_v (R,D)]  (4*D*R)
+//!   prefix unit = [K_pre (P,D) | V_pre (P,D)]                      (2*P*D)
+//! ```
+//!
+//! and the same forward-argument order: [base units..., peft units (one
+//! per block)..., tokens, targets, mask]. On PJRT the adapter families
+//! (`forward_loss_lora_s*`, ...) are AOT-exported by
+//! `python -m compile.aot`; on the native backend the adapters fold into
+//! the blocked attention kernels (`runtime/native/kernels.rs`) — the dense
+//! `W + (alpha/r) B·A` delta is never materialized on either path.
 
 use anyhow::{bail, Result};
 use std::fmt;
@@ -63,6 +74,22 @@ pub fn prefix_unit_len(d_model: usize) -> usize {
     2 * PREFIX_TOKENS * d_model
 }
 
+/// Split one flat LoRA unit into its four row-major matrices
+/// `(A_q (D,R), B_q (R,D), A_v (D,R), B_v (R,D))` — the layout the aot
+/// exporter writes and the native kernels consume.
+pub fn split_lora(unit: &[f32], d_model: usize) -> (&[f32], &[f32], &[f32], &[f32]) {
+    debug_assert_eq!(unit.len(), lora_unit_len(d_model));
+    let q = d_model * LORA_RANK;
+    (&unit[..q], &unit[q..2 * q], &unit[2 * q..3 * q], &unit[3 * q..])
+}
+
+/// Split one flat prefix unit into `(K_pre (P,D), V_pre (P,D))`.
+pub fn split_prefix(unit: &[f32], d_model: usize) -> (&[f32], &[f32]) {
+    debug_assert_eq!(unit.len(), prefix_unit_len(d_model));
+    let half = PREFIX_TOKENS * d_model;
+    (&unit[..half], &unit[half..])
+}
+
 /// Host-side init of PEFT units (mirrors aot.py's peft_init): LoRA A is
 /// N(0, 0.02), B zero (so the initial delta is exactly zero); prefixes are
 /// N(0, 0.02).
@@ -102,6 +129,35 @@ pub fn init_peft_units(
     }
 }
 
+/// [`init_peft_units`] with the LoRA B blocks re-randomized to N(0, 0.05)
+/// instead of zero. Test support: the standard init zeroes B so step 0 is
+/// exactly the base model — which also makes the delta path dead, so tests
+/// that pin the LoRA math (fused-vs-dense, FD checks) start from this
+/// non-degenerate variant. Prefix units are unchanged (their init is
+/// already non-zero).
+pub fn init_peft_units_nonzero_b(
+    mode: PeftMode,
+    n_layers: usize,
+    d_model: usize,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let mut units = init_peft_units(mode, n_layers, d_model, seed);
+    if mode == PeftMode::Lora {
+        let mut rng =
+            crate::rng::Rng::new(crate::rng::derive(seed, crate::rng::purpose::INIT, 78));
+        let q = d_model * LORA_RANK;
+        for u in units.iter_mut() {
+            for x in u[q..2 * q].iter_mut() {
+                *x = (rng.gaussian() * 0.05) as f32;
+            }
+            for x in u[3 * q..4 * q].iter_mut() {
+                *x = (rng.gaussian() * 0.05) as f32;
+            }
+        }
+    }
+    units
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +175,51 @@ mod tests {
     fn unit_lens_match_exporter_contract() {
         assert_eq!(lora_unit_len(64), 4 * 64 * 8);
         assert_eq!(prefix_unit_len(64), 2 * 5 * 64);
+    }
+
+    #[test]
+    fn unit_lens_match_backend_cross_check_for_every_preset() {
+        // Property over all ModelSpec presets: the formula here, the
+        // Backend::peft_unit_len cross-check path, and the init'd unit
+        // shapes all agree — the same numbers the PJRT backend validates
+        // against its manifest's lora_unit_len/prefix_unit_len.
+        use crate::runtime::backend::Backend;
+        for name in ["opt-nano", "opt-micro", "opt-tiny", "opt-small", "opt-base"] {
+            let b = crate::runtime::NativeBackend::preset(name).unwrap();
+            let spec = b.spec().clone();
+            for (mode, want) in [
+                (PeftMode::Full, 0),
+                (PeftMode::Lora, 4 * spec.d_model * LORA_RANK),
+                (PeftMode::Prefix, 2 * PREFIX_TOKENS * spec.d_model),
+            ] {
+                assert_eq!(b.peft_unit_len(mode).unwrap(), want, "{name} {mode}");
+                let units = init_peft_units(mode, spec.n_layers, spec.d_model, 1);
+                let n_units = if mode == PeftMode::Full { 0 } else { spec.n_layers };
+                assert_eq!(units.len(), n_units, "{name} {mode}");
+                for u in &units {
+                    assert_eq!(u.len(), want, "{name} {mode}");
+                }
+                assert!(b.supports_peft(mode), "{name} {mode}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_helpers_partition_the_flat_unit() {
+        let d = 32;
+        let unit: Vec<f32> = (0..lora_unit_len(d)).map(|i| i as f32).collect();
+        let (a_q, b_q, a_v, b_v) = split_lora(&unit, d);
+        let q = d * LORA_RANK;
+        assert_eq!((a_q.len(), b_q.len(), a_v.len(), b_v.len()), (q, q, q, q));
+        assert_eq!(a_q[0], 0.0);
+        assert_eq!(b_q[0], q as f32);
+        assert_eq!(b_v[q - 1], (4 * q - 1) as f32);
+
+        let unit: Vec<f32> = (0..prefix_unit_len(d)).map(|i| i as f32).collect();
+        let (k_pre, v_pre) = split_prefix(&unit, d);
+        assert_eq!(k_pre.len(), PREFIX_TOKENS * d);
+        assert_eq!(v_pre.len(), PREFIX_TOKENS * d);
+        assert_eq!(v_pre[0], (PREFIX_TOKENS * d) as f32);
     }
 
     #[test]

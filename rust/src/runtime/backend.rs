@@ -7,9 +7,11 @@
 //!
 //! - [`crate::runtime::native::NativeBackend`] — pure Rust: Philox-seeded
 //!   Gaussian regeneration ([`crate::runtime::philox`]), native (masked)
-//!   zo_axpy, and a reference transformer forward *and backward* (so the
-//!   FT baseline and pretraining run hermetically too). Zero external
-//!   artifacts; this is what the hermetic test suite runs on.
+//!   zo_axpy, a reference transformer forward *and backward* (so the FT
+//!   baseline and pretraining run hermetically too), and native PEFT
+//!   forwards (LoRA / prefix adapters folded into the blocked kernels).
+//!   Zero external artifacts; this is what the hermetic test suite runs
+//!   on.
 //! - `PjrtBackend` (feature `pjrt`) — the PJRT runtime executing AOT HLO
 //!   artifacts exported by `python/compile/aot.py`.
 //!
@@ -99,6 +101,15 @@ pub trait Backend {
     }
 
     // ---- model executables -------------------------------------------------
+    //
+    // The three forward families are PEFT-aware: `units` is always the full
+    // argument prefix — the frozen model units, then (under
+    // `peft=lora|prefix`) one flat adapter unit per transformer block, in
+    // block order. The adapter layout is defined once in [`crate::peft`]
+    // (synced with `python/compile/peft.py`); both in-tree backends consume
+    // it — natively the adapters fold into the blocked kernels, on PJRT
+    // they are extra executable arguments. A backend reports which modes it
+    // executes via [`Backend::supports_peft`].
 
     fn prepare_batch(&self, batch: &Batch) -> Result<Self::PreparedBatch>;
 
@@ -147,6 +158,9 @@ pub trait Backend {
     /// `explicit_checkpoint` (config key `checkpoint`) overrides defaults.
     fn initial_params(&self, explicit_checkpoint: &str) -> Result<(Vec<Vec<f32>>, String)>;
 
+    /// Which PEFT modes this backend can execute. The conservative default
+    /// is full-parameter only; the native backend runs every mode with
+    /// zero artifacts, PJRT needs the adapter executables in its manifest.
     fn supports_peft(&self, mode: PeftMode) -> bool {
         mode == PeftMode::Full
     }

@@ -396,7 +396,7 @@ pub fn forward_backward(
         kernels::matmul_bias_into(&x1, p.wk, p.bk, &mut k, n, d, d);
         kernels::matmul_bias_into(&x1, p.wv, p.bv, &mut vv, n, d, d);
         let mut ctx = vec![0.0f32; n * d];
-        attention_ctx(&q, &k, &vv, &mut ctx, d, nh, rows, seq);
+        attention_ctx(&q, &k, &vv, None, &mut ctx, d, nh, rows, seq);
         kernels::matmul_bias_into(&ctx, p.wo, p.bo, &mut proj, n, d, d);
         kernels::add_inplace(&mut h, &proj);
         let h_mid = h.clone();

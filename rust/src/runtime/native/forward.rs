@@ -12,16 +12,25 @@
 //!
 //! Two implementations of the same math live side by side:
 //!
-//! - **Fast path** ([`mean_loss`], [`example_losses`], [`predict`]): the
-//!   blocked, thread-parallel kernels in [`super::kernels`] drive the
-//!   transformer into a reusable [`ForwardScratch`] arena, and the LM head
-//!   is *fused* — a streaming per-position logsumexp/argmax over vocab
-//!   tiles that never materializes the `rows*seq*vocab` logits tensor.
-//! - **Dense reference** ([`forward_logits`] + [`position_xent`]): the
-//!   original scalar loops, kept deliberately naive. It is the public
-//!   dense-logits API and the ground truth the fused paths are tested
-//!   against (agreement ≤ 1e-4; see the tests below and
-//!   `rust/tests/native_backend.rs`).
+//! - **Fast path** ([`mean_loss`], [`example_losses`], [`predict`] and
+//!   their `_peft` twins): the blocked, thread-parallel kernels in
+//!   [`super::kernels`] drive the transformer into a reusable
+//!   [`ForwardScratch`] arena, and the LM head is *fused* — a streaming
+//!   per-position logsumexp/argmax over vocab tiles that never
+//!   materializes the `rows*seq*vocab` logits tensor.
+//! - **Dense reference** ([`forward_logits`] / [`forward_logits_peft`] +
+//!   [`position_xent`]): the original scalar loops, kept deliberately
+//!   naive. It is the public dense-logits API and the ground truth the
+//!   fused paths are tested against (agreement ≤ 1e-4; see the tests
+//!   below and `rust/tests/native_backend.rs`).
+//!
+//! PEFT (the paper's Table 4): under `peft=lora|prefix` the forward takes
+//! the frozen base units plus one flat adapter unit per block
+//! ([`crate::peft`] documents the layout). LoRA adds
+//! `(alpha/r) * (x A) B` to the q/v projections as two skinny matmuls;
+//! prefix tuning prepends 5 learned KV positions per block, visible to
+//! every query (the causal window applies to real positions only). Both
+//! run on the same scratch arena and fused LM head as the base path.
 //!
 //! Same math as the Pallas/jnp path: pre-LN blocks, causal softmax
 //! attention scaled by 1/sqrt(d_head), tanh-approximated GELU, LN eps 1e-5,
@@ -31,10 +40,11 @@
 //! MeZO == LeZO at drop 0, thread-count invariance) is exact.
 
 use super::kernels::{
-    self, fused_argmax, fused_masked_xent, gelu, split_block, validate_forward_args,
-    validate_targets, ForwardScratch, LN_EPS,
+    self, fused_argmax, fused_masked_xent, gelu, peft_block, split_block,
+    validate_forward_args, validate_targets, ForwardScratch, PeftBlock, LN_EPS,
 };
 use crate::model::spec::ModelSpec;
+use crate::peft::PeftMode;
 use anyhow::Result;
 
 // ---------------------------------------------------------------------------
@@ -75,12 +85,38 @@ fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], n_rows: usize, din: usize, dout:
     out
 }
 
-/// Causal multi-head attention + output projection, added into `h` —
-/// reference.
+/// Reference LoRA delta: `out += (alpha/r) * (x @ A) @ B`, naive scalar
+/// loops (A row-major `(d, r)`, B row-major `(r, d)`).
+fn lora_delta_into(out: &mut [f32], x: &[f32], a: &[f32], b: &[f32], n: usize, d: usize) {
+    let r = crate::peft::LORA_RANK;
+    let scale = (crate::peft::LORA_ALPHA / r as f64) as f32;
+    for row in 0..n {
+        let xrow = &x[row * d..(row + 1) * d];
+        let mut t = vec![0.0f32; r];
+        for (i, &xi) in xrow.iter().enumerate() {
+            for (j, tv) in t.iter_mut().enumerate() {
+                *tv += xi * a[i * r + j];
+            }
+        }
+        let orow = &mut out[row * d..(row + 1) * d];
+        for (o, ov) in orow.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (j, &tj) in t.iter().enumerate() {
+                acc += tj * b[j * d + o];
+            }
+            *ov += scale * acc;
+        }
+    }
+}
+
+/// Causal multi-head attention + output projection, added into `h`, with
+/// the block's PEFT adapter (LoRA q/v deltas; prefix KV positions always
+/// visible, before the causal window) — reference.
 fn attention_into(
     h: &mut [f32],
     x: &[f32],
     p: &kernels::BlockParams<'_>,
+    peft: &PeftBlock<'_>,
     spec: &ModelSpec,
     rows: usize,
     seq: usize,
@@ -88,35 +124,64 @@ fn attention_into(
     let d = spec.d_model;
     let (nh, dh) = (spec.n_heads, spec.d_head());
     let n = rows * seq;
-    let q = matmul_bias(x, p.wq, p.bq, n, d, d);
+    let mut q = matmul_bias(x, p.wq, p.bq, n, d, d);
     let k = matmul_bias(x, p.wk, p.bk, n, d, d);
-    let v = matmul_bias(x, p.wv, p.bv, n, d, d);
+    let mut v = matmul_bias(x, p.wv, p.bv, n, d, d);
+    let (mut k_pre, mut v_pre): (&[f32], &[f32]) = (&[], &[]);
+    match peft {
+        PeftBlock::None => {}
+        PeftBlock::Lora { a_q, b_q, a_v, b_v } => {
+            lora_delta_into(&mut q, x, a_q, b_q, n, d);
+            lora_delta_into(&mut v, x, a_v, b_v, n, d);
+        }
+        PeftBlock::Prefix { k_pre: kp, v_pre: vp } => {
+            k_pre = *kp;
+            v_pre = *vp;
+        }
+    }
+    let n_pre = k_pre.len() / d;
     let scale = 1.0 / (dh as f32).sqrt();
 
     let mut ctx = vec![0.0f32; n * d]; // concatenated head outputs
-    let mut scores = vec![0.0f32; seq];
+    let mut scores = vec![0.0f32; n_pre + seq];
     for r in 0..rows {
         for head in 0..nh {
             let hoff = head * dh;
             for s1 in 0..seq {
                 let qrow = &q[(r * seq + s1) * d + hoff..(r * seq + s1) * d + hoff + dh];
-                // causal scores over s2 <= s1
+                let visible = n_pre + s1 + 1;
                 let mut max = f32::NEG_INFINITY;
+                // prefix scores (every query sees all prefix positions)
+                for p2 in 0..n_pre {
+                    let krow = &k_pre[p2 * d + hoff..p2 * d + hoff + dh];
+                    let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                    let s = dot * scale;
+                    scores[p2] = s;
+                    max = max.max(s);
+                }
+                // causal scores over real positions s2 <= s1
                 for s2 in 0..=s1 {
                     let krow = &k[(r * seq + s2) * d + hoff..(r * seq + s2) * d + hoff + dh];
                     let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
                     let s = dot * scale;
-                    scores[s2] = s;
+                    scores[n_pre + s2] = s;
                     max = max.max(s);
                 }
                 let mut denom = 0.0f32;
-                for s2 in 0..=s1 {
-                    scores[s2] = (scores[s2] - max).exp();
-                    denom += scores[s2];
+                for sv in scores[..visible].iter_mut() {
+                    *sv = (*sv - max).exp();
+                    denom += *sv;
                 }
                 let orow = &mut ctx[(r * seq + s1) * d + hoff..(r * seq + s1) * d + hoff + dh];
+                for p2 in 0..n_pre {
+                    let w = scores[p2] / denom;
+                    let vrow = &v_pre[p2 * d + hoff..p2 * d + hoff + dh];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
                 for s2 in 0..=s1 {
-                    let w = scores[s2] / denom;
+                    let w = scores[n_pre + s2] / denom;
                     let vrow = &v[(r * seq + s2) * d + hoff..(r * seq + s2) * d + hoff + dh];
                     for (o, &vv) in orow.iter_mut().zip(vrow) {
                         *o += w * vv;
@@ -142,7 +207,23 @@ pub fn forward_logits(
     rows: usize,
     seq: usize,
 ) -> Result<Vec<f32>> {
+    forward_logits_peft(spec, units, PeftMode::Full, &[], tokens, rows, seq)
+}
+
+/// Dense reference logits with per-block PEFT adapters — the ground truth
+/// the fused PEFT paths are tested against (and an independent scalar
+/// implementation of the same math as `python/compile/peft.py`).
+pub fn forward_logits_peft(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+) -> Result<Vec<f32>> {
     validate_forward_args(spec, units, tokens, rows, seq)?;
+    kernels::validate_peft_args(spec, peft, peft_units)?;
     let d = spec.d_model;
     let v = spec.vocab;
     let n = rows * seq;
@@ -168,8 +249,12 @@ pub fn forward_logits(
     // blocks
     for l in 0..spec.n_layers {
         let p = split_block(spec, units[1 + l]);
+        let pb = match peft {
+            PeftMode::Full => PeftBlock::None,
+            _ => peft_block(peft, peft_units[l], d),
+        };
         let x = layernorm(&h, p.ln1_g, p.ln1_b, n, d);
-        attention_into(&mut h, &x, &p, spec, rows, seq);
+        attention_into(&mut h, &x, &p, &pb, spec, rows, seq);
         let hm = layernorm(&h, p.ln2_g, p.ln2_b, n, d);
         let mut a = matmul_bias(&hm, p.w1, p.b1, n, d, spec.d_ff());
         for av in a.iter_mut() {
@@ -242,9 +327,28 @@ pub fn mean_loss(
     seq: usize,
     scratch: &mut ForwardScratch,
 ) -> Result<f32> {
+    mean_loss_peft(spec, units, PeftMode::Full, &[], tokens, targets, mask, rows, seq, scratch)
+}
+
+/// [`mean_loss`] with per-block PEFT adapters (Table 4's objective): the
+/// adapter-aware [`kernels::forward_hidden_peft`] plus the same fused
+/// streaming LM head.
+#[allow(clippy::too_many_arguments)]
+pub fn mean_loss_peft(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &[f32],
+    rows: usize,
+    seq: usize,
+    scratch: &mut ForwardScratch,
+) -> Result<f32> {
     let n = rows * seq;
     validate_targets(targets, mask, n, spec.vocab)?;
-    kernels::forward_hidden(spec, units, tokens, rows, seq, scratch)?;
+    kernels::forward_hidden_peft(spec, units, peft, peft_units, tokens, rows, seq, scratch)?;
     let d = spec.d_model;
     let tok_emb = &units[0][..spec.vocab * d];
     let ForwardScratch { x, xent, .. } = scratch;
@@ -268,9 +372,37 @@ pub fn example_losses(
     seq: usize,
     scratch: &mut ForwardScratch,
 ) -> Result<Vec<f32>> {
+    example_losses_peft(
+        spec,
+        units,
+        PeftMode::Full,
+        &[],
+        tokens,
+        targets,
+        mask,
+        rows,
+        seq,
+        scratch,
+    )
+}
+
+/// [`example_losses`] with per-block PEFT adapters.
+#[allow(clippy::too_many_arguments)]
+pub fn example_losses_peft(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &[f32],
+    rows: usize,
+    seq: usize,
+    scratch: &mut ForwardScratch,
+) -> Result<Vec<f32>> {
     let n = rows * seq;
     validate_targets(targets, mask, n, spec.vocab)?;
-    kernels::forward_hidden(spec, units, tokens, rows, seq, scratch)?;
+    kernels::forward_hidden_peft(spec, units, peft, peft_units, tokens, rows, seq, scratch)?;
     let d = spec.d_model;
     let tok_emb = &units[0][..spec.vocab * d];
     let ForwardScratch { x, xent, .. } = scratch;
@@ -298,8 +430,23 @@ pub fn predict(
     seq: usize,
     scratch: &mut ForwardScratch,
 ) -> Result<Vec<i32>> {
+    predict_peft(spec, units, PeftMode::Full, &[], tokens, rows, seq, scratch)
+}
+
+/// [`predict`] with per-block PEFT adapters.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_peft(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+    scratch: &mut ForwardScratch,
+) -> Result<Vec<i32>> {
     let n = rows * seq;
-    kernels::forward_hidden(spec, units, tokens, rows, seq, scratch)?;
+    kernels::forward_hidden_peft(spec, units, peft, peft_units, tokens, rows, seq, scratch)?;
     let d = spec.d_model;
     let tok_emb = &units[0][..spec.vocab * d];
     let mut preds = vec![0i32; n];
@@ -479,6 +626,187 @@ mod tests {
             let best = preds[r] as usize;
             assert!(row.iter().all(|&l| l <= row[best] + 1e-4));
         }
+    }
+
+    /// Non-degenerate adapter units: LoRA B blocks are re-randomized (the
+    /// unit init zeroes them so step 0 is the base model — useless for
+    /// pinning the delta math).
+    fn peft_units_nonzero(s: &ModelSpec, mode: crate::peft::PeftMode) -> Vec<Vec<f32>> {
+        crate::peft::init_peft_units_nonzero_b(mode, s.n_layers, s.d_model, 9)
+    }
+
+    #[test]
+    fn fused_peft_losses_match_dense_peft_reference() {
+        let s = spec();
+        let host = s.init_units(1);
+        let (rows, seq) = (2, 8);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| 20 + (i % 64) as i32).collect();
+        let targets: Vec<i32> = tokens.iter().map(|&t| (t + 3) % 512).collect();
+        let mut mask = vec![0.0f32; rows * seq];
+        for (r, &count) in [7usize, 3].iter().enumerate() {
+            for s2 in 0..count {
+                mask[r * seq + s2] = 1.0;
+            }
+        }
+        for mode in [PeftMode::Lora, PeftMode::Prefix] {
+            let peft_host = peft_units_nonzero(&s, mode);
+            let peft_refs: Vec<&[f32]> = peft_host.iter().map(|u| u.as_slice()).collect();
+            let logits =
+                forward_logits_peft(&s, &refs(&host), mode, &peft_refs, &tokens, rows, seq)
+                    .unwrap();
+            let xent = position_xent(&logits, &targets, &mask, rows * seq, s.vocab).unwrap();
+            let num: f64 = xent.iter().zip(&mask).map(|(&x, &m)| x as f64 * m as f64).sum();
+            let den: f64 = mask.iter().map(|&m| m as f64).sum();
+            let want = (num / den) as f32;
+
+            let mut scratch = ForwardScratch::new();
+            let got = mean_loss_peft(
+                &s, &refs(&host), mode, &peft_refs, &tokens, &targets, &mask, rows, seq,
+                &mut scratch,
+            )
+            .unwrap();
+            assert!((got - want).abs() <= 1e-4, "{mode}: fused {got} vs dense {want}");
+
+            // the adapter must actually change the objective vs the base
+            let base =
+                mean_loss(&s, &refs(&host), &tokens, &targets, &mask, rows, seq, &mut scratch)
+                    .unwrap();
+            assert!((got - base).abs() > 1e-6, "{mode}: adapter had no effect ({got} == {base})");
+
+            // per-example fused vs dense, and predict vs dense argmax
+            let per = example_losses_peft(
+                &s, &refs(&host), mode, &peft_refs, &tokens, &targets, &mask, rows, seq,
+                &mut scratch,
+            )
+            .unwrap();
+            for r in 0..rows {
+                let mut num = 0.0f64;
+                let mut den = 0.0f64;
+                for s2 in 0..seq {
+                    num += xent[r * seq + s2] as f64 * mask[r * seq + s2] as f64;
+                    den += mask[r * seq + s2] as f64;
+                }
+                let want = (num / den.max(1.0)) as f32;
+                assert!((per[r] - want).abs() <= 1e-4, "{mode} row {r}: {} vs {want}", per[r]);
+            }
+            let preds = predict_peft(
+                &s, &refs(&host), mode, &peft_refs, &tokens, rows, seq, &mut scratch,
+            )
+            .unwrap();
+            for p in 0..rows * seq {
+                let row = &logits[p * s.vocab..(p + 1) * s.vocab];
+                let best = preds[p] as usize;
+                assert!(row.iter().all(|&l| l <= row[best] + 1e-4), "{mode} pos {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_init_lora_forward_is_bitwise_equal_to_base() {
+        // B = 0 at init: every LoRA delta is an exact +0.0, so the adapter
+        // forward must reproduce the base hidden states bit for bit.
+        let s = spec();
+        let host = s.init_units(2);
+        let (rows, seq) = (2, 8);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| 10 + (i % 90) as i32).collect();
+        let targets: Vec<i32> = tokens.iter().map(|&t| (t + 1) % 512).collect();
+        let mask = vec![1.0f32; rows * seq];
+        let peft_host =
+            crate::peft::init_peft_units(crate::peft::PeftMode::Lora, s.n_layers, s.d_model, 0);
+        let peft_refs: Vec<&[f32]> = peft_host.iter().map(|u| u.as_slice()).collect();
+
+        let mut scratch = ForwardScratch::new();
+        let base =
+            mean_loss(&s, &refs(&host), &tokens, &targets, &mask, rows, seq, &mut scratch)
+                .unwrap();
+        let lora = mean_loss_peft(
+            &s,
+            &refs(&host),
+            PeftMode::Lora,
+            &peft_refs,
+            &tokens,
+            &targets,
+            &mask,
+            rows,
+            seq,
+            &mut scratch,
+        )
+        .unwrap();
+        assert_eq!(base.to_bits(), lora.to_bits(), "zero-adapter LoRA must be the base model");
+
+        // and the dense reference agrees bit for bit too
+        let a = forward_logits(&s, &refs(&host), &tokens, rows, seq).unwrap();
+        let b = forward_logits_peft(
+            &s, &refs(&host), PeftMode::Lora, &peft_refs, &tokens, rows, seq,
+        )
+        .unwrap();
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn prefix_positions_are_visible_to_every_query() {
+        // The prefix changes the logits at position 0 (a purely causal
+        // extra position could not), yet real positions stay causal: a
+        // future-token edit must not leak into past logits.
+        let s = spec();
+        let host = s.init_units(3);
+        let (rows, seq) = (1, 8);
+        let tokens: Vec<i32> = (0..seq as i32).map(|i| 30 + i).collect();
+        let peft_host = peft_units_nonzero(&s, PeftMode::Prefix);
+        let peft_refs: Vec<&[f32]> = peft_host.iter().map(|u| u.as_slice()).collect();
+
+        let base = forward_logits(&s, &refs(&host), &tokens, rows, seq).unwrap();
+        let with_pre = forward_logits_peft(
+            &s, &refs(&host), PeftMode::Prefix, &peft_refs, &tokens, rows, seq,
+        )
+        .unwrap();
+        assert_ne!(
+            &base[..s.vocab],
+            &with_pre[..s.vocab],
+            "prefix must be visible at position 0"
+        );
+
+        let mut tokens2 = tokens.clone();
+        tokens2[7] = 400;
+        let with_pre2 = forward_logits_peft(
+            &s, &refs(&host), PeftMode::Prefix, &peft_refs, &tokens2, rows, seq,
+        )
+        .unwrap();
+        assert_eq!(
+            &with_pre[..7 * s.vocab],
+            &with_pre2[..7 * s.vocab],
+            "real positions must stay causal under prefix tuning"
+        );
+    }
+
+    #[test]
+    fn peft_shape_errors_are_rejected() {
+        let s = spec();
+        let host = s.init_units(0);
+        let mut scratch = ForwardScratch::new();
+        let tokens = vec![1, 2, 3, 4];
+        let targets = vec![2, 3, 4, 5];
+        let mask = vec![1.0f32; 4];
+        // wrong unit count (one per block is required)
+        let one = vec![0.0f32; crate::peft::lora_unit_len(s.d_model)];
+        let bad_count: Vec<&[f32]> = vec![one.as_slice()];
+        assert!(mean_loss_peft(
+            &s, &refs(&host), PeftMode::Lora, &bad_count, &tokens, &targets, &mask, 1, 4,
+            &mut scratch
+        )
+        .is_err());
+        // wrong unit length
+        let short = vec![0.0f32; 3];
+        let bad_len: Vec<&[f32]> = (0..s.n_layers).map(|_| short.as_slice()).collect();
+        assert!(mean_loss_peft(
+            &s, &refs(&host), PeftMode::Prefix, &bad_len, &tokens, &targets, &mask, 1, 4,
+            &mut scratch
+        )
+        .is_err());
+        // adapters under peft=full
+        let full_extra: Vec<&[f32]> = vec![one.as_slice()];
+        assert!(forward_logits_peft(&s, &refs(&host), PeftMode::Full, &full_extra, &tokens, 1, 4)
+            .is_err());
     }
 
     #[test]

@@ -14,9 +14,14 @@
 //! - [`attention_into`] — causal multi-head attention parallel over
 //!   (row, head) tasks, each writing a disjoint `[seq, d_head]` column
 //!   slice of the context buffer.
-//! - [`forward_hidden`] — the full transformer forward into a reusable
-//!   [`ForwardScratch`] arena (buffers allocated once, reused across
-//!   matmuls, blocks, and forward calls).
+//! - [`forward_hidden`] / [`forward_hidden_peft`] — the full transformer
+//!   forward into a reusable [`ForwardScratch`] arena (buffers allocated
+//!   once, reused across matmuls, blocks, and forward calls). The PEFT
+//!   variant folds per-block LoRA deltas into the q/v projections as two
+//!   skinny matmuls ([`matmul_scaled_acc_into`] — the dense `B·A` delta is
+//!   never materialized) and prepends prefix-tuning KV positions inside
+//!   [`attention_ctx`] (always visible; the causal window applies to real
+//!   positions only).
 //! - [`fused_masked_xent`] / [`fused_argmax`] — the streaming LM head: a
 //!   per-position logsumexp + gold-logit (or argmax) over vocab tiles that
 //!   never materializes the `rows*seq*vocab` logits tensor, the dominant
@@ -26,6 +31,7 @@
 
 use super::parallel::{par_ranges, par_row_chunks, SendPtr};
 use crate::model::spec::ModelSpec;
+use crate::peft::PeftMode;
 use crate::runtime::philox::fill_gauss;
 use anyhow::{ensure, Result};
 
@@ -155,6 +161,42 @@ pub fn matmul_bias_into(
     });
 }
 
+/// `out[r, o] += scale * sum_i x[r, i] * w[i, o]` (`w` row-major
+/// `(din, dout)`), row-parallel — the accumulate-into twin of
+/// [`matmul_bias_into`], used to fold the skinny LoRA delta
+/// `scale * (x A) B` into an already-projected q/v buffer without ever
+/// materializing the dense `B·A` matrix. Each output element's inner
+/// product over `i` is summed in full (ascending) *before* scaling and
+/// adding, so a zero `w` contributes an exact `+0.0` and the destination
+/// bits are unchanged — that is what makes a zero-init (B = 0) LoRA
+/// forward bitwise-equal to the base forward.
+pub fn matmul_scaled_acc_into(
+    x: &[f32],
+    w: &[f32],
+    scale: f32,
+    out: &mut [f32],
+    n_rows: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(x.len(), n_rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(out.len(), n_rows * dout);
+    let grain = grain_for(2 * din * dout, 250_000); // rows per chunk
+    par_row_chunks(out, dout, grain, |r0, orows| {
+        for (rr, orow) in orows.chunks_exact_mut(dout).enumerate() {
+            let xrow = &x[(r0 + rr) * din..(r0 + rr + 1) * din];
+            for (o, ov) in orow.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (i, &xi) in xrow.iter().enumerate() {
+                    acc += xi * w[i * dout + o];
+                }
+                *ov += scale * acc;
+            }
+        }
+    });
+}
+
 /// `h += m`, elementwise.
 pub fn add_inplace(h: &mut [f32], m: &[f32]) {
     debug_assert_eq!(h.len(), m.len());
@@ -275,6 +317,61 @@ pub(crate) fn split_block<'a>(spec: &ModelSpec, mut p: &'a [f32]) -> BlockParams
     }
 }
 
+/// Per-block adapter views for the PEFT forward (flat layout defined in
+/// [`crate::peft`], synced with `python/compile/peft.py`).
+pub(crate) enum PeftBlock<'a> {
+    None,
+    Lora { a_q: &'a [f32], b_q: &'a [f32], a_v: &'a [f32], b_v: &'a [f32] },
+    Prefix { k_pre: &'a [f32], v_pre: &'a [f32] },
+}
+
+/// View one flat adapter unit as its per-block matrices.
+pub(crate) fn peft_block<'a>(mode: PeftMode, unit: &'a [f32], d: usize) -> PeftBlock<'a> {
+    match mode {
+        PeftMode::Full => PeftBlock::None,
+        PeftMode::Lora => {
+            let (a_q, b_q, a_v, b_v) = crate::peft::split_lora(unit, d);
+            PeftBlock::Lora { a_q, b_q, a_v, b_v }
+        }
+        PeftMode::Prefix => {
+            let (k_pre, v_pre) = crate::peft::split_prefix(unit, d);
+            PeftBlock::Prefix { k_pre, v_pre }
+        }
+    }
+}
+
+/// Adapter-argument validation shared by the fast and reference PEFT
+/// forwards: one unit per transformer block, each with the exact flat
+/// length of [`crate::peft::lora_unit_len`] / [`crate::peft::prefix_unit_len`].
+pub(crate) fn validate_peft_args(
+    spec: &ModelSpec,
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+) -> Result<()> {
+    let want = match peft {
+        PeftMode::Full => {
+            ensure!(peft_units.is_empty(), "peft=full takes no adapter units");
+            return Ok(());
+        }
+        PeftMode::Lora => crate::peft::lora_unit_len(spec.d_model),
+        PeftMode::Prefix => crate::peft::prefix_unit_len(spec.d_model),
+    };
+    ensure!(
+        peft_units.len() == spec.n_layers,
+        "peft={peft}: expected {} adapter units (one per block), got {}",
+        spec.n_layers,
+        peft_units.len()
+    );
+    for (l, u) in peft_units.iter().enumerate() {
+        ensure!(
+            u.len() == want,
+            "peft={peft}: adapter unit {l} has {} elements, expected {want}",
+            u.len()
+        );
+    }
+    Ok(())
+}
+
 /// Shared argument validation of every forward family (fast and reference).
 pub(crate) fn validate_forward_args(
     spec: &ModelSpec,
@@ -366,10 +463,20 @@ impl ForwardScratch {
 /// slice of `ctx` at head offset `head * d_head` within batch row `r` —
 /// disjoint across tasks. Shared by the forward fast path and the FO
 /// backward pass (which records `ctx` for the Wo gradient).
+///
+/// `prefix` is prefix tuning's `(K_pre, V_pre)` pair of learned virtual KV
+/// positions, each row-major `[n_pre, d]` and shared across batch rows.
+/// Prefix positions sit *before* the real positions in the score layout
+/// (matching the python twin's concatenation order) and are visible to
+/// every query — the causal window applies to real positions only. With
+/// `None` the score loop degenerates to the plain causal case and the
+/// emitted bits are identical to the pre-PEFT kernel.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn attention_ctx(
     q: &[f32],
     k: &[f32],
     v: &[f32],
+    prefix: Option<(&[f32], &[f32])>,
     ctx: &mut [f32],
     d: usize,
     nh: usize,
@@ -378,25 +485,38 @@ pub(crate) fn attention_ctx(
 ) {
     let dh = d / nh;
     let scale = 1.0 / (dh as f32).sqrt();
+    let n_pre = prefix.map_or(0, |(k_pre, _)| k_pre.len() / d);
+    debug_assert!(prefix
+        .map_or(true, |(kp, vp)| kp.len() == n_pre * d && vp.len() == n_pre * d));
     let ctx_ptr = SendPtr(ctx.as_mut_ptr());
-    let grain = grain_for(seq * seq * dh, 100_000);
+    let grain = grain_for(seq * (n_pre + seq) * dh, 100_000);
     par_ranges(rows * nh, grain, |tasks| {
-        let mut scores = vec![0.0f32; seq];
+        let mut scores = vec![0.0f32; n_pre + seq];
         for t in tasks {
             let (r, head) = (t / nh, t % nh);
             let hoff = head * dh;
             for s1 in 0..seq {
                 let qrow = &q[(r * seq + s1) * d + hoff..][..dh];
-                // causal scores over s2 <= s1
+                let visible = n_pre + s1 + 1;
                 let mut max = f32::NEG_INFINITY;
-                for (s2, sv) in scores[..=s1].iter_mut().enumerate() {
+                // prefix keys: always visible, before the causal window
+                if let Some((k_pre, _)) = prefix {
+                    for (p, sv) in scores[..n_pre].iter_mut().enumerate() {
+                        let krow = &k_pre[p * d + hoff..][..dh];
+                        let s = dot(qrow, krow) * scale;
+                        *sv = s;
+                        max = max.max(s);
+                    }
+                }
+                // causal scores over real positions s2 <= s1
+                for (s2, sv) in scores[n_pre..visible].iter_mut().enumerate() {
                     let krow = &k[(r * seq + s2) * d + hoff..][..dh];
                     let s = dot(qrow, krow) * scale;
                     *sv = s;
                     max = max.max(s);
                 }
                 let mut denom = 0.0f32;
-                for sv in scores[..=s1].iter_mut() {
+                for sv in scores[..visible].iter_mut() {
                     *sv = (*sv - max).exp();
                     denom += *sv;
                 }
@@ -404,7 +524,16 @@ pub(crate) fn attention_ctx(
                 // slices of ctx; s1 iterates rows within the task.
                 let orow = unsafe { ctx_ptr.slice_mut((r * seq + s1) * d + hoff, dh) };
                 orow.fill(0.0);
-                for (s2, &sv) in scores[..=s1].iter().enumerate() {
+                if let Some((_, v_pre)) = prefix {
+                    for (p, &sv) in scores[..n_pre].iter().enumerate() {
+                        let w = sv / denom;
+                        let vrow = &v_pre[p * d + hoff..][..dh];
+                        for (o, &vv) in orow.iter_mut().zip(vrow) {
+                            *o += w * vv;
+                        }
+                    }
+                }
+                for (s2, &sv) in scores[n_pre..visible].iter().enumerate() {
                     let w = sv / denom;
                     let vrow = &v[(r * seq + s2) * d + hoff..][..dh];
                     for (o, &vv) in orow.iter_mut().zip(vrow) {
@@ -416,8 +545,12 @@ pub(crate) fn attention_ctx(
     });
 }
 
-/// Causal multi-head attention + output projection added into `h`.
-/// `q` is reused as the projection buffer afterwards.
+/// Causal multi-head attention + output projection added into `h`, with
+/// the block's PEFT adapter folded in. LoRA deltas run as two skinny
+/// matmuls through `lora_tmp` (`[n, LORA_RANK]`, borrowed from the free
+/// ffn arena — attention never touches it); prefix KV positions are handed
+/// straight to [`attention_ctx`]. `q` is reused as the projection buffer
+/// afterwards.
 #[allow(clippy::too_many_arguments)]
 fn attention_into(
     h: &mut [f32],
@@ -427,22 +560,40 @@ fn attention_into(
     v: &mut [f32],
     ctx: &mut [f32],
     p: &BlockParams<'_>,
+    peft: &PeftBlock<'_>,
     d: usize,
     nh: usize,
     rows: usize,
     seq: usize,
+    lora_tmp: &mut [f32],
 ) {
+    const LORA_ZERO_BIAS: [f32; crate::peft::LORA_RANK] = [0.0; crate::peft::LORA_RANK];
     let n = rows * seq;
     matmul_bias_into(x, p.wq, p.bq, q, n, d, d);
     matmul_bias_into(x, p.wk, p.bk, k, n, d, d);
     matmul_bias_into(x, p.wv, p.bv, v, n, d, d);
-    attention_ctx(q, k, v, ctx, d, nh, rows, seq);
+    let mut prefix = None;
+    match peft {
+        PeftBlock::None => {}
+        PeftBlock::Lora { a_q, b_q, a_v, b_v } => {
+            let r = crate::peft::LORA_RANK;
+            let scale = (crate::peft::LORA_ALPHA / r as f64) as f32;
+            let tmp = &mut lora_tmp[..n * r];
+            matmul_bias_into(x, a_q, &LORA_ZERO_BIAS, tmp, n, d, r);
+            matmul_scaled_acc_into(tmp, b_q, scale, q, n, r, d);
+            matmul_bias_into(x, a_v, &LORA_ZERO_BIAS, tmp, n, d, r);
+            matmul_scaled_acc_into(tmp, b_v, scale, v, n, r, d);
+        }
+        PeftBlock::Prefix { k_pre, v_pre } => prefix = Some((*k_pre, *v_pre)),
+    }
+    attention_ctx(q, k, v, prefix, ctx, d, nh, rows, seq);
     matmul_bias_into(ctx, p.wo, p.bo, q, n, d, d);
     add_inplace(h, q);
 }
 
 /// Full transformer forward. On success the final-LN hidden states (the LM
-/// head input) are in `scratch.x[..rows*seq*d_model]`.
+/// head input) are in `scratch.x[..rows*seq*d_model]`. Delegates to
+/// [`forward_hidden_peft`] with no adapters.
 pub fn forward_hidden(
     spec: &ModelSpec,
     units: &[&[f32]],
@@ -451,7 +602,29 @@ pub fn forward_hidden(
     seq: usize,
     scratch: &mut ForwardScratch,
 ) -> Result<()> {
+    forward_hidden_peft(spec, units, PeftMode::Full, &[], tokens, rows, seq, scratch)
+}
+
+/// Full transformer forward with optional per-block PEFT adapters
+/// (`peft_units`: one flat unit per transformer block, layout from
+/// [`crate::peft`]). LoRA folds `(alpha/r) * (x A) B` into the q/v
+/// projections; prefix tuning prepends its learned KV positions inside
+/// [`attention_ctx`]. Runs entirely in the reusable scratch arena — PEFT
+/// forwards stay allocation-free like the base path (the LoRA temporary
+/// borrows the ffn buffer, which is idle during attention).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_hidden_peft(
+    spec: &ModelSpec,
+    units: &[&[f32]],
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+    scratch: &mut ForwardScratch,
+) -> Result<()> {
     validate_forward_args(spec, units, tokens, rows, seq)?;
+    validate_peft_args(spec, peft, peft_units)?;
     let d = spec.d_model;
     let f = spec.d_ff();
     let n = rows * seq;
@@ -484,8 +657,12 @@ pub fn forward_hidden(
     // blocks
     for l in 0..spec.n_layers {
         let p = split_block(spec, units[1 + l]);
+        let pb = match peft {
+            PeftMode::Full => PeftBlock::None,
+            _ => peft_block(peft, peft_units[l], d),
+        };
         layernorm_into(h, p.ln1_g, p.ln1_b, x, d);
-        attention_into(h, x, q, k, v, ctx, &p, d, spec.n_heads, rows, seq);
+        attention_into(h, x, q, k, v, ctx, &p, &pb, d, spec.n_heads, rows, seq, ffn);
         layernorm_into(h, p.ln2_g, p.ln2_b, x, d);
         matmul_bias_into(x, p.w1, p.b1, ffn, n, d, f);
         gelu_inplace(ffn);
@@ -695,6 +872,50 @@ mod tests {
                 assert_eq!(masked[i].to_bits(), p0[i].to_bits(), "i={i} out-of-mask");
             }
         }
+    }
+
+    #[test]
+    fn scaled_acc_matmul_matches_reference_and_zero_w_is_bitwise_noop() {
+        let mut rng = Rng::new(5);
+        let (n, din, dout) = (9usize, 8usize, 33usize);
+        let x = randv(&mut rng, n * din);
+        let w = randv(&mut rng, din * dout);
+        let out0 = randv(&mut rng, n * dout);
+        let mut got = out0.clone();
+        matmul_scaled_acc_into(&x, &w, 2.0, &mut got, n, din, dout);
+        for r in 0..n {
+            for o in 0..dout {
+                let mut acc = 0.0f32;
+                for i in 0..din {
+                    acc += x[r * din + i] * w[i * dout + o];
+                }
+                let want = out0[r * dout + o] + 2.0 * acc;
+                assert_eq!(got[r * dout + o], want, "r={r} o={o}");
+            }
+        }
+        // w = 0: a zero-init LoRA B must leave the projection bits untouched
+        let zeros = vec![0.0f32; din * dout];
+        let mut same = out0.clone();
+        matmul_scaled_acc_into(&x, &zeros, 2.0, &mut same, n, din, dout);
+        assert!(
+            same.iter().zip(&out0).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "zero-w scaled-acc must be a bitwise no-op"
+        );
+    }
+
+    #[test]
+    fn attention_ctx_empty_prefix_matches_none_bitwise() {
+        // Some((empty, empty)) must take the exact same code path as None.
+        let mut rng = Rng::new(6);
+        let (rows, seq, d, nh) = (2usize, 8usize, 16usize, 2usize);
+        let q = randv(&mut rng, rows * seq * d);
+        let k = randv(&mut rng, rows * seq * d);
+        let v = randv(&mut rng, rows * seq * d);
+        let mut a = vec![0.0f32; rows * seq * d];
+        let mut b = vec![0.0f32; rows * seq * d];
+        attention_ctx(&q, &k, &v, None, &mut a, d, nh, rows, seq);
+        attention_ctx(&q, &k, &v, Some((&[], &[])), &mut b, d, nh, rows, seq);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -5,10 +5,13 @@
 //! bit-compatible with the Pallas kernel's integer stream); the forward
 //! families run the blocked, thread-parallel kernels in [`kernels`] with a
 //! streaming (fused) LM head, against the naive dense reference kept in
-//! [`forward`]; and the first-order substrate (`method=ft`, `pretrain`)
-//! runs on the reference backward pass in [`backward`], so
-//! `supports_fo() == true` with zero artifacts. Everything is derived from
-//! a [`ModelSpec`] preset — no AOT artifacts, no PJRT plugin, no Python.
+//! [`forward`]; the PEFT families (LoRA / prefix, the paper's Table 4)
+//! fold per-block adapter units into the same kernels, so
+//! `supports_peft() == true` for every mode; and the first-order substrate
+//! (`method=ft`, `pretrain`) runs on the reference backward pass in
+//! [`backward`], so `supports_fo() == true` with zero artifacts.
+//! Everything is derived from a [`ModelSpec`] preset — no AOT artifacts,
+//! no PJRT plugin, no Python.
 //!
 //! Hot-path structure (this is the substrate the bench harness measures):
 //!
@@ -117,24 +120,32 @@ impl NativeBackend {
         Ok(ck.units)
     }
 
-    fn unit_slices<'a>(&self, units: &[&'a Vec<f32>]) -> Result<Vec<&'a [f32]>> {
+    /// Split the forward-argument prefix into (base units, adapter units):
+    /// `n_units()` model units, then — under PEFT — one adapter unit per
+    /// transformer block, the same order the AOT'd PJRT executables take.
+    /// Per-unit lengths are validated inside the kernels.
+    #[allow(clippy::type_complexity)]
+    fn split_units<'a>(
+        &self,
+        peft: PeftMode,
+        units: &[&'a Vec<f32>],
+    ) -> Result<(Vec<&'a [f32]>, Vec<&'a [f32]>)> {
+        let n_base = self.spec.n_units();
+        let n_adapters = match peft {
+            PeftMode::Full => 0,
+            _ => self.spec.n_layers,
+        };
         ensure!(
-            units.len() == self.spec.n_units(),
-            "native forward takes {} model units, got {} (PEFT adapters are a PJRT-only \
-             argument layout)",
-            self.spec.n_units(),
+            units.len() == n_base + n_adapters,
+            "peft={peft}: native forward takes {} units ({n_base} model units + {n_adapters} \
+             adapter units), got {}",
+            n_base + n_adapters,
             units.len()
         );
-        Ok(units.iter().map(|u| u.as_slice()).collect())
-    }
-
-    fn check_peft(&self, peft: PeftMode) -> Result<()> {
-        ensure!(
-            peft == PeftMode::Full,
-            "the native backend supports full-parameter tuning only (peft={peft}); \
-             use the pjrt backend with PEFT artifacts"
-        );
-        Ok(())
+        Ok((
+            units[..n_base].iter().map(|u| u.as_slice()).collect(),
+            units[n_base..].iter().map(|u| u.as_slice()).collect(),
+        ))
     }
 }
 
@@ -223,11 +234,12 @@ impl Backend for NativeBackend {
         units: &[&Vec<f32>],
         batch: &Batch,
     ) -> Result<f32> {
-        self.check_peft(peft)?;
-        let slices = self.unit_slices(units)?;
-        forward::mean_loss(
+        let (base, adapters) = self.split_units(peft, units)?;
+        forward::mean_loss_peft(
             &self.spec,
-            &slices,
+            &base,
+            peft,
+            &adapters,
             &batch.tokens,
             &batch.targets,
             &batch.mask,
@@ -243,11 +255,12 @@ impl Backend for NativeBackend {
         units: &[&Vec<f32>],
         batch: &Batch,
     ) -> Result<Vec<f32>> {
-        self.check_peft(peft)?;
-        let slices = self.unit_slices(units)?;
-        forward::example_losses(
+        let (base, adapters) = self.split_units(peft, units)?;
+        forward::example_losses_peft(
             &self.spec,
-            &slices,
+            &base,
+            peft,
+            &adapters,
             &batch.tokens,
             &batch.targets,
             &batch.mask,
@@ -258,11 +271,12 @@ impl Backend for NativeBackend {
     }
 
     fn predict(&self, peft: PeftMode, units: &[&Vec<f32>], batch: &Batch) -> Result<Vec<i32>> {
-        self.check_peft(peft)?;
-        let slices = self.unit_slices(units)?;
-        forward::predict(
+        let (base, adapters) = self.split_units(peft, units)?;
+        forward::predict_peft(
             &self.spec,
-            &slices,
+            &base,
+            peft,
+            &adapters,
             &batch.tokens,
             batch.rows,
             batch.seq,
@@ -306,6 +320,12 @@ impl Backend for NativeBackend {
             batch.rows,
             batch.seq,
         )
+    }
+
+    /// All PEFT modes run natively: the adapter forwards fold into the
+    /// blocked kernels ([`kernels`]) with zero artifacts.
+    fn supports_peft(&self, _mode: PeftMode) -> bool {
+        true
     }
 
     fn supports_fo(&self) -> bool {
@@ -406,16 +426,34 @@ mod tests {
     }
 
     #[test]
-    fn peft_is_rejected_clearly_and_fo_is_supported() {
+    fn peft_runs_natively_and_fo_is_supported() {
         let b = backend();
         let host = b.initial_params("").unwrap().0;
         let units: Vec<&Vec<f32>> = host.iter().collect();
         let batch = Batch::lm_batch(&[vec![1, 2, 3]], 1, 16).unwrap();
         let prepared = b.prepare_batch(&batch).unwrap();
-        let err = b.forward_loss(PeftMode::Lora, &units, &prepared).unwrap_err();
-        assert!(err.to_string().contains("native"), "{err}");
+        // every PEFT mode is native now; base units alone are a shape error
+        for mode in [PeftMode::Lora, PeftMode::Prefix] {
+            assert!(b.supports_peft(mode), "{mode}");
+            let err = b.forward_loss(mode, &units, &prepared).unwrap_err();
+            assert!(err.to_string().contains("adapter"), "{err}");
+            let spec = b.spec();
+            let adapters =
+                crate::peft::init_peft_units(mode, spec.n_layers, spec.d_model, 0);
+            let mut args = units.clone();
+            args.extend(adapters.iter());
+            let loss = b.forward_loss(mode, &args, &prepared).unwrap();
+            assert!(loss.is_finite() && loss > 0.0, "{mode}");
+            let per = b.example_losses(mode, &args, &prepared).unwrap();
+            assert_eq!(per.len(), 1, "{mode}");
+            let preds = b.predict(mode, &args, &prepared).unwrap();
+            assert_eq!(preds.len(), 16, "{mode}");
+        }
         assert!(b.supports_peft(PeftMode::Full));
-        assert!(!b.supports_peft(PeftMode::Lora));
+        assert_eq!(
+            b.peft_unit_len(PeftMode::Lora).unwrap(),
+            crate::peft::lora_unit_len(b.spec().d_model)
+        );
         // the native backend has a reference backward pass since PR 3
         assert!(b.supports_fo());
         let (loss, grads) = b.forward_backward(&host, &batch).unwrap();

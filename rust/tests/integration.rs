@@ -198,21 +198,10 @@ fn untrained_model_scores_near_chance() {
 // PEFT path (needs the peft executables; skipped on older artifacts)
 // ---------------------------------------------------------------------------
 
-fn have_peft() -> bool {
-    let ok = Manifest::load(&art()).map(|m| m.lora_unit_len.is_some()).unwrap_or(false);
-    if !ok {
-        eprintln!("SKIPPED: artifacts lack PEFT executables");
-    }
-    ok
-}
-
 #[test]
 fn lora_zero_init_matches_base_loss() {
     // LoRA B=0 at init: the adapter forward must equal the base forward.
-    require_artifacts!();
-    if !have_peft() {
-        return;
-    }
+    require_artifacts!("opt-micro", peft);
     let backend = open();
     let m = backend.manifest().clone();
     let units = tunable(&backend);
@@ -233,10 +222,7 @@ fn lora_zero_init_matches_base_loss() {
 
 #[test]
 fn peft_training_runs_and_moves_loss() {
-    require_artifacts!();
-    if !have_peft() {
-        return;
-    }
+    require_artifacts!("opt-micro", peft);
     for peft in [PeftMode::Lora, PeftMode::Prefix] {
         let mut cfg = micro_cfg();
         cfg.method = Method::Lezo;

@@ -182,6 +182,224 @@ fn e2e_identical_run_seed_identical_step_trajectory() {
 }
 
 // ---------------------------------------------------------------------------
+// PEFT (native adapter forwards — the paper's Table 4, hermetic since they
+// landed; before that `peft=lora|prefix` was a hard "use pjrt" error)
+// ---------------------------------------------------------------------------
+
+/// A briefly FO-pretrained base: a random-init model is nearly flat along
+/// the adapter directions (adapters only steer attention, and attention
+/// over near-uniform logits barely moves the loss), so the convergence and
+/// FD tests first take a few native-backward Adam steps on the fixed
+/// batch — exactly what the calibration sim does.
+fn pretrained_base(backend: &NativeBackend, batch: &Batch, steps: usize) -> Vec<Vec<f32>> {
+    let mut params = backend.initial_params("").unwrap().0;
+    let eng = FoEngine::new(backend);
+    let mut opt = FoOptimizer::adam(0.9, 0.999, 1e-8);
+    for _ in 0..steps {
+        eng.fo_step(&mut params, batch, &mut opt, 1e-2).unwrap();
+    }
+    params
+}
+
+/// Adapter units with LoRA B re-randomized (init has B = 0 — the delta
+/// path would be dead) — matches the calibration sim's setup.
+fn nonzero_peft_units(backend: &NativeBackend, mode: PeftMode, seed: u64) -> Vec<Vec<f32>> {
+    let spec = backend.spec();
+    lezo::peft::init_peft_units_nonzero_b(mode, spec.n_layers, spec.d_model, seed)
+}
+
+/// Shared ZO-over-adapters loop: returns the per-step losses.
+#[allow(clippy::too_many_arguments)]
+fn run_peft_zo(
+    backend: &NativeBackend,
+    base: &[Vec<f32>],
+    peft_host: &[Vec<f32>],
+    mode: PeftMode,
+    batch: &Batch,
+    steps: u64,
+    lr: f32,
+    mu: f32,
+) -> Vec<f32> {
+    let base_bufs: Vec<Vec<f32>> =
+        base.iter().map(|u| backend.upload(u).unwrap()).collect();
+    let mut units = TunableUnits::from_host(backend, peft_host).unwrap();
+    let engine = SpsaEngine::new(backend, mu, 7).unwrap();
+    let active: Vec<usize> = (0..units.n_units()).collect();
+    let prepared = backend.prepare_batch(batch).unwrap();
+    let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+        let mut args: Vec<&Vec<f32>> = base_bufs.iter().collect();
+        args.extend(u.bufs.iter());
+        backend.forward_loss(mode, &args, &prepared)
+    };
+    let mut times = StageTimes::default();
+    let mut losses = Vec::new();
+    for step in 0..steps {
+        let zs = engine
+            .zo_step(step, &mut units, &active, lr, &mut loss_fn, &mut times)
+            .unwrap();
+        assert!(zs.loss().is_finite(), "{mode} step {step}: loss diverged");
+        losses.push(zs.loss());
+    }
+    losses
+}
+
+#[test]
+fn e2e_convergence_zo_over_lora_adapters() {
+    // Calibrated against a jax sim of the identical algorithm (5 FO-Adam
+    // pretrain steps, then 150 SPSA steps over the adapter units at
+    // lr=0.05, mu=1e-2): min loss drop across 10 seeds was 0.0064, so the
+    // asserted 0.002 margin has >= 3x headroom.
+    let backend = NativeBackend::preset("opt-nano").unwrap();
+    let batch = fixed_batch(4, 16);
+    let base = pretrained_base(&backend, &batch, 5);
+    let spec = backend.spec();
+    let peft_host =
+        lezo::peft::init_peft_units(PeftMode::Lora, spec.n_layers, spec.d_model, 0);
+    let losses = run_peft_zo(&backend, &base, &peft_host, PeftMode::Lora, &batch, 150, 0.05, 1e-2);
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[145..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first - 0.002,
+        "ZO over LoRA adapters must reduce the fixed-batch loss: \
+         first-5 mean {first:.4}, last-5 mean {last:.4}"
+    );
+}
+
+#[test]
+fn e2e_convergence_zo_over_prefix_adapters() {
+    // Same calibration protocol (10 FO pretrain steps, 100 SPSA steps at
+    // lr=1.0, mu=1e-2): min drop across 10 sim seeds was 0.0035 vs the
+    // asserted 0.001 — >= 3x headroom.
+    let backend = NativeBackend::preset("opt-nano").unwrap();
+    let batch = fixed_batch(4, 16);
+    let base = pretrained_base(&backend, &batch, 10);
+    let spec = backend.spec();
+    let peft_host =
+        lezo::peft::init_peft_units(PeftMode::Prefix, spec.n_layers, spec.d_model, 0);
+    let losses =
+        run_peft_zo(&backend, &base, &peft_host, PeftMode::Prefix, &batch, 100, 1.0, 1e-2);
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[95..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first - 0.001,
+        "ZO over prefix adapters must reduce the fixed-batch loss: \
+         first-5 mean {first:.4}, last-5 mean {last:.4}"
+    );
+}
+
+#[test]
+fn e2e_peft_round_trip_restores_adapters_and_never_touches_base() {
+    // lr = 0 reduces a ZO step to perturb -> flip -> restore over the
+    // adapter units; the frozen base must stay bit-identical through the
+    // whole step (it is only ever a forward argument).
+    for mode in [PeftMode::Lora, PeftMode::Prefix] {
+        let backend = NativeBackend::preset("opt-nano").unwrap();
+        let spec = backend.spec().clone();
+        let base_host = backend.initial_params("").unwrap().0;
+        let base_bufs: Vec<Vec<f32>> =
+            base_host.iter().map(|u| backend.upload(u).unwrap()).collect();
+        let peft_host = lezo::peft::init_peft_units(mode, spec.n_layers, spec.d_model, 3);
+        let mut units = TunableUnits::from_host(&backend, &peft_host).unwrap();
+        let engine = SpsaEngine::new(&backend, 1e-2, 5).unwrap();
+        let active: Vec<usize> = (0..units.n_units()).collect();
+        let batch = fixed_batch(2, 16);
+        let prepared = backend.prepare_batch(&batch).unwrap();
+        let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+            let mut args: Vec<&Vec<f32>> = base_bufs.iter().collect();
+            args.extend(u.bufs.iter());
+            backend.forward_loss(mode, &args, &prepared)
+        };
+        let mut times = StageTimes::default();
+        engine.zo_step(0, &mut units, &active, 0.0, &mut loss_fn, &mut times).unwrap();
+        let after = units.to_host(&backend).unwrap();
+        for (k, (a, o)) in after.iter().zip(&peft_host).enumerate() {
+            for (x, y) in a.iter().zip(o) {
+                assert!((x - y).abs() < 1e-5, "{mode} adapter {k}: {x} vs {y} (restore drift)");
+            }
+        }
+        for (k, (b, o)) in base_bufs.iter().zip(&base_host).enumerate() {
+            assert!(
+                b.iter().zip(o).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{mode}: base unit {k} must stay bit-unchanged through a ZO step"
+            );
+        }
+    }
+}
+
+#[test]
+fn peft_adapter_fd_directional_derivative_is_consistent() {
+    // Central-difference SPSA gradients along the regenerated Philox
+    // direction at eps and 2*eps must agree to O(eps^2) — the adapter
+    // paths are a smooth, correctly wired function of the adapter units.
+    // Tolerances calibrated on a 10-seed jax sim: worst |g1 - g2| stayed
+    // under 0.1 * max|g| + 3e-3 with >= 2x headroom, and every |g|
+    // exceeded 1e-3 (asserted floor 3e-4).
+    for mode in [PeftMode::Lora, PeftMode::Prefix] {
+        let backend = NativeBackend::preset("opt-nano").unwrap();
+        let batch = fixed_batch(4, 16);
+        let base = pretrained_base(&backend, &batch, 5);
+        let base_bufs: Vec<Vec<f32>> =
+            base.iter().map(|u| backend.upload(u).unwrap()).collect();
+        let peft_host = nonzero_peft_units(&backend, mode, 1);
+        let mut units = TunableUnits::from_host(&backend, &peft_host).unwrap();
+        let engine = SpsaEngine::new(&backend, 1e-2, 11).unwrap();
+        let active: Vec<usize> = (0..units.n_units()).collect();
+        let prepared = backend.prepare_batch(&batch).unwrap();
+        let loss = |u: &TunableUnits<NativeBackend>| -> f32 {
+            let mut args: Vec<&Vec<f32>> = base_bufs.iter().collect();
+            args.extend(u.bufs.iter());
+            backend.forward_loss(mode, &args, &prepared).unwrap()
+        };
+        let mut g_at = |eps: f32| -> f32 {
+            engine.apply(0, &mut units, &active, eps).unwrap();
+            let lp = loss(&units);
+            engine.apply(0, &mut units, &active, -2.0 * eps).unwrap();
+            let lm = loss(&units);
+            engine.apply(0, &mut units, &active, eps).unwrap();
+            (lp - lm) / (2.0 * eps)
+        };
+        let g1 = g_at(1e-2);
+        let g2 = g_at(2e-2);
+        let mag = g1.abs().max(g2.abs());
+        assert!(mag > 3e-4, "{mode}: vacuous FD check (|g| = {mag})");
+        assert!(
+            (g1 - g2).abs() <= 0.1 * mag + 3e-3,
+            "{mode}: FD gradients disagree: g(1e-2) = {g1}, g(2e-2) = {g2}"
+        );
+    }
+}
+
+#[test]
+fn trainer_peft_runs_hermetically_via_method_aliases() {
+    // `method=lezo-lora` / `lezo-prefix` (one token setting method+peft)
+    // drive the full trainer loop — sampling, selector over adapter
+    // units, eval option scoring — natively with zero artifacts.
+    for (alias, expect_peft) in
+        [("lezo-lora", PeftMode::Lora), ("lezo-prefix", PeftMode::Prefix)]
+    {
+        let mut cfg = nano_cfg();
+        cfg.set("method", alias).unwrap();
+        cfg.drop_layers = 1;
+        cfg.steps = 3;
+        cfg.eval_every = 3;
+        cfg.lr = 1e-3;
+        cfg.mu = 1e-2;
+        assert_eq!(cfg.method, Method::Lezo, "{alias}");
+        assert_eq!(cfg.peft, expect_peft, "{alias}");
+        let r = Trainer::new(cfg).run().unwrap();
+        assert_eq!(r.backend, "native", "{alias}");
+        assert_eq!(r.losses.len(), 3, "{alias}");
+        assert!(r.losses.iter().all(|l| l.is_finite()), "{alias}");
+        assert!((0.0..=1.0).contains(&r.final_metric), "{alias}");
+        assert!(
+            r.active_param_fraction < 1.0,
+            "{alias}: LeZO must drop adapter units ({})",
+            r.active_param_fraction
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
 // FO substrate (the paper's FT baseline, hermetic since the native backward)
 // ---------------------------------------------------------------------------
 
