@@ -6,10 +6,24 @@
 //! numbers behind Figs. 2 and 4 — and the four Table-4 PEFT step variants
 //! (`mezo-lora`, `lezo-lora`, `mezo-prefix`, `lezo-prefix`: adapter units
 //! tunable over a frozen base, with their tunable-parameter counts in the
-//! `steps[].tunable_params` JSON field). Backend-generic: the native backend runs
-//! with zero artifacts on any machine; with `--features pjrt` and exported
-//! artifacts the same harness times the PJRT runtime. For the full
+//! `steps[].tunable_params` JSON field). Backend-generic: the native backend
+//! runs with zero artifacts on any machine; with `--features pjrt` and
+//! exported artifacts the same harness times the PJRT runtime. For the full
 //! table/figure regeneration use `lezo bench <id>`.
+//!
+//! **Precision axis:** every native target is benchmarked twice — once per
+//! forward precision (`f32`, `bf16`) — and every JSON entry carries a
+//! `"precision"` field, so the f32-vs-bf16 ms and GB/s deltas are
+//! machine-readable across PRs. Forward entries additionally carry a
+//! modeled `"bytes"` field (`elsize * (params + rows*seq*vocab*d_model)`:
+//! each parameter streamed once plus the fused LM head's tok_emb stream
+//! per position — the two dominant terms) and the GB/s derived from it;
+//! by construction bf16 moves half the f32 bytes, and the measured ms
+//! shows how much of that lands as wall-clock. The zo_axpy rows keep the
+//! 8-bytes-per-element f32 model in both precisions: the sweeps always
+//! mutate the f32 masters (shadow invalidation is a flag store), so their
+//! bf16 rows measure that the reduced-precision mode does NOT regress the
+//! perturb/update path.
 //!
 //! Besides the stdout table, every run writes a machine-readable report to
 //! `BENCH_native.json` (override with `LEZO_BENCH_JSON=<path>`) so the perf
@@ -25,7 +39,7 @@ use lezo::coordinator::metrics::StageTimes;
 use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
 use lezo::data::batch::Batch;
 use lezo::peft::PeftMode;
-use lezo::runtime::backend::Backend;
+use lezo::runtime::backend::{Backend, Precision};
 use lezo::runtime::native::parallel;
 use lezo::runtime::NativeBackend;
 use std::fmt::Write as _;
@@ -48,30 +62,60 @@ fn lm_batch(spec: &lezo::model::ModelSpec, seq: usize) -> Batch {
     Batch::lm_batch(&seqs, spec.train_batch, seq).unwrap()
 }
 
+fn precision_tag<B: Backend>(backend: &B) -> &'static str {
+    match backend.precision() {
+        Precision::F32 => "f32",
+        Precision::Bf16 => "bf16",
+    }
+}
+
+/// Modeled bytes of one fused forward at `elsize` bytes per stored scalar:
+/// every parameter streamed once plus the fused LM head's tok_emb stream
+/// per position (the bandwidth-dominant terms; activations are lower
+/// order). The bf16/f32 ratio of this model is exactly 0.5 — the measured
+/// ms tells how much of it the hardware realizes.
+fn forward_bytes_model(
+    spec: &lezo::model::ModelSpec,
+    rows: usize,
+    seq: usize,
+    elsize: usize,
+) -> f64 {
+    (elsize * (spec.param_count() + rows * seq * spec.vocab * spec.d_model)) as f64
+}
+
 // ---------------------------------------------------------------------------
 // Machine-readable report (hand-rolled writer; serde is not vendored)
 // ---------------------------------------------------------------------------
 
 struct KernelStat {
     kernel: &'static str,
+    precision: &'static str,
     len: usize,
     ms: f64,
     gbs: f64,
 }
 
 struct ForwardStat {
+    precision: &'static str,
     seq: usize,
     batch: usize,
     ms: f64,
+    /// Modeled traffic of one forward (see [`forward_bytes_model`]).
+    bytes: f64,
+    /// `bytes / ms`-derived effective bandwidth.
+    gbs: f64,
 }
 
 struct StepStat {
     name: &'static str,
+    precision: &'static str,
     ms_per_step: f64,
     perturb_ms: f64,
     forward_ms: f64,
     update_ms: f64,
     non_forward_fraction: f64,
+    /// Modeled forward traffic per step (two probes).
+    forward_bytes: f64,
     /// Size of the ZO-tunable parameter space: the full model for
     /// `mezo`/`lezo75`, the per-block adapter units for the PEFT variants.
     tunable_params: usize,
@@ -87,6 +131,22 @@ struct TargetReport {
     steps: Vec<StepStat>,
 }
 
+impl TargetReport {
+    /// Empty report for one (backend, model) target; `bench_into` appends
+    /// one set of rows per precision pass.
+    fn new(backend: &'static str, spec: &lezo::model::ModelSpec) -> TargetReport {
+        TargetReport {
+            backend,
+            model: spec.name.clone(),
+            params: spec.param_count(),
+            blocks: spec.n_layers,
+            kernels: vec![],
+            forward: vec![],
+            steps: vec![],
+        }
+    }
+}
+
 fn json_num(x: f64) -> String {
     if x.is_finite() {
         format!("{x:.6}")
@@ -99,7 +159,7 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
     let mut s = String::new();
     let _ = write!(
         s,
-        "{{\n  \"version\": 1,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
+        "{{\n  \"version\": 2,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
         parallel::effective_threads()
     );
     for (ti, t) in targets.iter().enumerate() {
@@ -118,8 +178,10 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
             }
             let _ = write!(
                 s,
-                "\n        {{\"kernel\": \"{}\", \"len\": {}, \"ms\": {}, \"gbs\": {}}}",
+                "\n        {{\"kernel\": \"{}\", \"precision\": \"{}\", \"len\": {}, \
+                 \"ms\": {}, \"gbs\": {}}}",
                 k.kernel,
+                k.precision,
                 k.len,
                 json_num(k.ms),
                 json_num(k.gbs)
@@ -132,10 +194,14 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
             }
             let _ = write!(
                 s,
-                "\n        {{\"seq\": {}, \"batch\": {}, \"ms\": {}}}",
+                "\n        {{\"precision\": \"{}\", \"seq\": {}, \"batch\": {}, \"ms\": {}, \
+                 \"bytes\": {}, \"gbs\": {}}}",
+                f.precision,
                 f.seq,
                 f.batch,
-                json_num(f.ms)
+                json_num(f.ms),
+                json_num(f.bytes),
+                json_num(f.gbs)
             );
         }
         s.push_str("\n      ],\n      \"steps\": [");
@@ -145,15 +211,17 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
             }
             let _ = write!(
                 s,
-                "\n        {{\"name\": \"{}\", \"ms_per_step\": {}, \"perturb_ms\": {}, \
-                 \"forward_ms\": {}, \"update_ms\": {}, \"non_forward_fraction\": {}, \
-                 \"tunable_params\": {}}}",
+                "\n        {{\"name\": \"{}\", \"precision\": \"{}\", \"ms_per_step\": {}, \
+                 \"perturb_ms\": {}, \"forward_ms\": {}, \"update_ms\": {}, \
+                 \"non_forward_fraction\": {}, \"forward_bytes\": {}, \"tunable_params\": {}}}",
                 st.name,
+                st.precision,
                 json_num(st.ms_per_step),
                 json_num(st.perturb_ms),
                 json_num(st.forward_ms),
                 json_num(st.update_ms),
                 json_num(st.non_forward_fraction),
+                json_num(st.forward_bytes),
                 st.tunable_params
             );
         }
@@ -167,10 +235,17 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
 // Benchmarks
 // ---------------------------------------------------------------------------
 
-fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
+/// Bench one backend instance (one precision) and append its rows to
+/// `report` — native targets call this twice, once per precision.
+fn bench_into<B: Backend>(backend: &B, iters: usize, report: &mut TargetReport) {
     let spec = backend.spec().clone();
+    let prec = precision_tag(backend);
+    let elsize = match backend.precision() {
+        Precision::F32 => 4usize,
+        Precision::Bf16 => 2,
+    };
     println!(
-        "\n== {} [{}] ({} params, {} blocks, {} threads) ==",
+        "\n== {} [{} {prec}] ({} params, {} blocks, {} threads) ==",
         spec.name,
         backend.name(),
         spec.param_count(),
@@ -179,17 +254,10 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
     );
     backend.warm_zo().unwrap();
     let host = backend.initial_params("").unwrap().0;
-    let mut report = TargetReport {
-        backend: backend.name(),
-        model: spec.name.clone(),
-        params: spec.param_count(),
-        blocks: spec.n_layers,
-        kernels: vec![],
-        forward: vec![],
-        steps: vec![],
-    };
 
     // --- zo_axpy per unit length: allocating and in-place ---
+    // (always f32 master traffic — the bf16 rows pin that the reduced
+    // precision mode does not regress the sweeps)
     let mut seen = std::collections::BTreeSet::new();
     for &n in spec.unit_lens().iter().filter(|&&n| seen.insert(n)) {
         let p = backend.upload(&vec![0.1f32; n]).unwrap();
@@ -198,7 +266,7 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
         });
         let gbs = (8.0 * n as f64) / (ms / 1e3) / 1e9; // 1 load + 1 store, f32
         println!("  zo_axpy        [{n:>9}] {ms:>8.3} ms  ({gbs:.2} GB/s effective)");
-        report.kernels.push(KernelStat { kernel: "zo_axpy", len: n, ms, gbs });
+        report.kernels.push(KernelStat { kernel: "zo_axpy", precision: prec, len: n, ms, gbs });
 
         let mut q = backend.upload(&vec![0.1f32; n]).unwrap();
         let ms = time_ms(iters, || {
@@ -206,7 +274,9 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
         });
         let gbs = (8.0 * n as f64) / (ms / 1e3) / 1e9;
         println!("  zo_axpy_inplace[{n:>9}] {ms:>8.3} ms  ({gbs:.2} GB/s effective)");
-        report.kernels.push(KernelStat { kernel: "zo_axpy_inplace", len: n, ms, gbs });
+        report
+            .kernels
+            .push(KernelStat { kernel: "zo_axpy_inplace", precision: prec, len: n, ms, gbs });
     }
 
     // --- forward per bucket ---
@@ -218,13 +288,26 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
         let ms = time_ms((iters + 1) / 2, || {
             let _ = backend.forward_loss(PeftMode::Full, &refs, &prepared).unwrap();
         });
-        println!("  forward_loss[s{s:>3}] {ms:>7.2} ms (batch {})", spec.train_batch);
-        report.forward.push(ForwardStat { seq: s, batch: spec.train_batch, ms });
+        let bytes = forward_bytes_model(&spec, spec.train_batch, s, elsize);
+        let gbs = bytes / (ms / 1e3) / 1e9;
+        println!(
+            "  forward_loss[s{s:>3}] {ms:>7.2} ms (batch {}, {gbs:.2} GB/s modeled)",
+            spec.train_batch
+        );
+        report.forward.push(ForwardStat {
+            precision: prec,
+            seq: s,
+            batch: spec.train_batch,
+            ms,
+            bytes,
+            gbs,
+        });
     }
 
     // --- full ZO step: MeZO vs LeZO(75%) ---
     let batch = lm_batch(&spec, 32);
     let prepared = backend.prepare_batch(&batch).unwrap();
+    let step_fwd_bytes = 2.0 * forward_bytes_model(&spec, spec.train_batch, 32, elsize);
     let drop = lezo::bench::paper_drop(spec.n_layers);
     for (name, active) in [
         ("mezo", (0..spec.n_units()).collect::<Vec<_>>()),
@@ -234,7 +317,18 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
         let mut loss = |u: &TunableUnits<B>| -> anyhow::Result<f32> {
             backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
         };
-        let st = time_zo_steps(name, backend, &mut tun, &active, iters, 1e-3, 1e-5, &mut loss);
+        let st = time_zo_steps(
+            name,
+            prec,
+            step_fwd_bytes,
+            backend,
+            &mut tun,
+            &active,
+            iters,
+            1e-3,
+            1e-5,
+            &mut loss,
+        );
         println!(
             "  {name:<15} {:>7.1} ms/step (perturb {:.1} + forward {:.1} + update {:.1}), non-forward {:.0}%",
             st.ms_per_step, st.perturb_ms, st.forward_ms, st.update_ms,
@@ -265,7 +359,18 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
             args.extend(u.bufs.iter());
             backend.forward_loss(mode, &args, &prepared)
         };
-        let st = time_zo_steps(name, backend, &mut tun, &active, iters, 1e-2, 1e-3, &mut loss);
+        let st = time_zo_steps(
+            name,
+            prec,
+            step_fwd_bytes,
+            backend,
+            &mut tun,
+            &active,
+            iters,
+            1e-2,
+            1e-3,
+            &mut loss,
+        );
         println!(
             "  {name:<15} {:>7.1} ms/step (perturb {:.1} + forward {:.1} + update {:.1}), \
              {} tunable params",
@@ -273,7 +378,6 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
         );
         report.steps.push(st);
     }
-    report
 }
 
 /// Shared step-timing tail of the full-model and PEFT step benches: run
@@ -282,6 +386,8 @@ fn bench_backend<B: Backend>(backend: &B, iters: usize) -> TargetReport {
 #[allow(clippy::too_many_arguments)]
 fn time_zo_steps<B: Backend>(
     name: &'static str,
+    precision: &'static str,
+    forward_bytes: f64,
     backend: &B,
     tun: &mut TunableUnits<B>,
     active: &[usize],
@@ -300,11 +406,13 @@ fn time_zo_steps<B: Backend>(
     let (p, f, u, _) = times.per_step_ms();
     StepStat {
         name,
+        precision,
         ms_per_step: ms,
         perturb_ms: p,
         forward_ms: f,
         update_ms: u,
         non_forward_fraction: times.non_forward_fraction(),
+        forward_bytes,
         tunable_params: tun.param_count(),
     }
 }
@@ -312,7 +420,16 @@ fn time_zo_steps<B: Backend>(
 fn run_target(target: &str, iters: usize) -> Option<TargetReport> {
     match target.split_once(':') {
         Some(("native", model)) => match NativeBackend::preset(model) {
-            Ok(b) => Some(bench_backend(&b, iters)),
+            Ok(b32) => {
+                let mut report = TargetReport::new(b32.name(), b32.spec());
+                bench_into(&b32, iters, &mut report);
+                // the reduced-precision twin of every row (native targets
+                // are benchmarked once per precision)
+                let b16 =
+                    NativeBackend::preset(model).unwrap().with_precision(Precision::Bf16);
+                bench_into(&b16, iters, &mut report);
+                Some(report)
+            }
             Err(e) => {
                 eprintln!("[skip] {target}: {e}");
                 None
@@ -327,7 +444,11 @@ fn run_target(target: &str, iters: usize) -> Option<TargetReport> {
                     return None;
                 }
                 match lezo::runtime::PjrtBackend::open(&dir) {
-                    Ok(b) => Some(bench_backend(&b, iters)),
+                    Ok(b) => {
+                        let mut report = TargetReport::new(b.name(), b.spec());
+                        bench_into(&b, iters, &mut report);
+                        Some(report)
+                    }
                     Err(e) => {
                         eprintln!("[skip] {target}: {e}");
                         None
@@ -349,6 +470,17 @@ fn run_target(target: &str, iters: usize) -> Option<TargetReport> {
 }
 
 fn main() {
+    // the strict-env rule: an unparseable LEZO_THREADS or LEZO_PRECISION
+    // is a hard error naming the bad value, even here (the bench times
+    // both precisions itself, but a typo'd env must not pass silently)
+    if let Err(e) = parallel::check_env() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+    if let Err(e) = lezo::runtime::backend::env_precision() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
     // honor `cargo bench -- <backend:model>`
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     let targets: Vec<String> = if args.is_empty() {

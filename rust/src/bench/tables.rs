@@ -113,8 +113,11 @@ fn method_grid(
     writeln!(out, "{title}")?;
     writeln!(
         out,
-        "model={} drop(lezo)={} of {} blocks, seeds={:?}, {} steps\n",
+        "model={} precision={} drop(lezo)={} of {} blocks, seeds={:?}, {} steps\n",
         base.model,
+        // the precision the runs actually execute (LEZO_PRECISION wins
+        // over the config key), not the raw config value
+        crate::runtime::backend::resolve_precision(base.precision)?,
         paper_drop(n_layers),
         n_layers,
         seeds,
@@ -281,8 +284,9 @@ pub fn table4(overrides: &[String]) -> Result<String> {
     let mut out = String::new();
     writeln!(
         out,
-        "Table 4 — ZO + PEFT on {} (LeZO(LoRA) drops {} blocks, LeZO(prefix) drops {})\n",
+        "Table 4 — ZO + PEFT on {} [{}] (LeZO(LoRA) drops {} blocks, LeZO(prefix) drops {})\n",
         base.model,
+        crate::runtime::backend::resolve_precision(base.precision)?,
         n_layers / 2,
         paper_drop(n_layers)
     )?;

@@ -7,7 +7,7 @@
 
 use crate::coordinator::policy::Policy;
 use crate::peft::PeftMode;
-use crate::runtime::backend::BackendKind;
+use crate::runtime::backend::{BackendKind, Precision};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::fmt;
@@ -131,6 +131,12 @@ pub struct RunConfig {
     /// Results are bit-identical at any setting — the native kernels use
     /// fixed chunk partitioning (see `runtime/native/parallel.rs`).
     pub threads: usize,
+    /// Forward-path numeric precision (`f32` default, `bf16` halves the
+    /// streamed parameter/activation bytes of the forward families on the
+    /// native backend). The `LEZO_PRECISION` env var overrides this,
+    /// mirroring `threads`/`LEZO_THREADS`. ZO perturb/update state stays
+    /// f32 either way (see `runtime/native/mod.rs`, "Precision").
+    pub precision: Precision,
 }
 
 impl Default for RunConfig {
@@ -160,6 +166,7 @@ impl Default for RunConfig {
             policy: Policy::Uniform,
             smezo_keep: 0.5,
             threads: 0,
+            precision: Precision::F32,
         }
     }
 }
@@ -204,6 +211,7 @@ impl RunConfig {
             "policy" => self.policy = parse!(),
             "smezo_keep" => self.smezo_keep = parse!(),
             "threads" => self.threads = parse!(),
+            "precision" => self.precision = parse!(),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -326,6 +334,17 @@ mod tests {
         c.apply_overrides(&["threads=4".into()]).unwrap();
         assert_eq!(c.threads, 4);
         assert!(c.apply_overrides(&["threads=many".into()]).is_err());
+    }
+
+    #[test]
+    fn precision_key_parses() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.precision, Precision::F32, "default is f32");
+        c.apply_overrides(&["precision=bf16".into()]).unwrap();
+        assert_eq!(c.precision, Precision::Bf16);
+        c.apply_overrides(&["precision=f32".into()]).unwrap();
+        assert_eq!(c.precision, Precision::F32);
+        assert!(c.apply_overrides(&["precision=fp8".into()]).is_err());
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::eval::{icl, EvalMetric, Evaluator};
 use crate::model::spec::ModelSpec;
 use crate::peft::PeftMode;
 use crate::rng::{derive, purpose, Rng};
-use crate::runtime::backend::{Backend, BackendKind};
+use crate::runtime::backend::{Backend, BackendKind, Precision};
 use crate::runtime::NativeBackend;
 use crate::tasks::{eval_set, make_task, Example, TaskKind};
 use anyhow::{bail, ensure, Result};
@@ -47,6 +47,9 @@ pub struct TrainReport {
     pub method: Method,
     /// Which backend executed the run ("native" / "pjrt").
     pub backend: &'static str,
+    /// Forward-path precision the backend executed
+    /// ([`Backend::precision`]; f32 masters stay authoritative either way).
+    pub precision: Precision,
     pub metric_kind: &'static str,
     /// Final-checkpoint metric (paper: best-validation checkpoint; we keep
     /// both final and best).
@@ -119,13 +122,17 @@ pub fn requested_backend_kind(cfg: &RunConfig) -> Result<BackendKind> {
 /// native pure-Rust backend (preset looked up by `cfg.model`).
 pub fn resolve_backend(cfg: &RunConfig) -> Result<ResolvedBackend> {
     let artifact_dir = std::path::PathBuf::from(cfg.artifact_dir());
+    // precision: LEZO_PRECISION env wins over the config key (mirroring
+    // threads/LEZO_THREADS); an unparseable env value is a hard error
+    let precision = crate::runtime::backend::resolve_precision(cfg.precision)?;
     // native runs adopt the artifact dir when it exists: the spec comes
     // from its manifest (so exported sizes outside the preset list still
     // run natively) and initial params from params_init.bin /
     // pretrained.ckpt — results match across build flavors
     let native = |dir: std::path::PathBuf| -> Result<ResolvedBackend> {
         let (spec, manifest) = crate::runtime::backend::resolve_model(&cfg.model, &dir)?;
-        let mut backend = NativeBackend::new(spec)?;
+        let mut backend = NativeBackend::new(spec)?.with_precision(precision);
+        ensure_precision(&backend, precision)?;
         if let Some(manifest) = manifest {
             backend = backend.with_artifacts(manifest)?;
         } else {
@@ -135,12 +142,30 @@ pub fn resolve_backend(cfg: &RunConfig) -> Result<ResolvedBackend> {
         }
         Ok(ResolvedBackend::Native(backend))
     };
+    // a reduced-precision request must never silently run in f32: any
+    // backend that cannot execute it is a hard error. PJRT is gated before
+    // it is even opened (its artifact set has only f32 executables, and
+    // under `--no-default-features` there is no instance to ask); every
+    // *constructed* backend is additionally checked through the
+    // capability-driven [`ensure_precision`], which is what a future
+    // backend inherits by construction.
+    let check_pjrt_precision = || -> Result<()> {
+        ensure!(
+            precision == Precision::F32,
+            "backend=pjrt has no {precision} executables (precision is a native-backend \
+             capability); use backend=native or precision=f32"
+        );
+        Ok(())
+    };
     match requested_backend_kind(cfg)? {
         BackendKind::Native => native(artifact_dir),
         BackendKind::Pjrt => {
+            check_pjrt_precision()?;
             #[cfg(feature = "pjrt")]
             {
-                Ok(ResolvedBackend::Pjrt(crate::runtime::PjrtBackend::open(&artifact_dir)?))
+                let backend = crate::runtime::PjrtBackend::open(&artifact_dir)?;
+                ensure_precision(&backend, precision)?;
+                Ok(ResolvedBackend::Pjrt(backend))
             }
             #[cfg(not(feature = "pjrt"))]
             {
@@ -152,15 +177,38 @@ pub fn resolve_backend(cfg: &RunConfig) -> Result<ResolvedBackend> {
             }
         }
         BackendKind::Auto => {
+            // auto is capability-driven: prefer PJRT when artifacts exist,
+            // unless the requested precision is something only the native
+            // backend executes — then fall back to native instead of
+            // erroring about a backend the user never asked for
             #[cfg(feature = "pjrt")]
             if crate::runtime::backend::artifacts_available(&artifact_dir) {
-                return Ok(ResolvedBackend::Pjrt(crate::runtime::PjrtBackend::open(
-                    &artifact_dir,
-                )?));
+                if precision == Precision::F32 {
+                    let backend = crate::runtime::PjrtBackend::open(&artifact_dir)?;
+                    ensure_precision(&backend, precision)?;
+                    return Ok(ResolvedBackend::Pjrt(backend));
+                }
+                crate::info!(
+                    "backend=auto: artifacts present, but precision={precision} runs on the \
+                     native backend only — using native"
+                );
             }
             native(artifact_dir)
         }
     }
+}
+
+/// Capability gate shared by every resolved backend: requesting a
+/// precision the backend cannot execute ([`Backend::supports_precision`])
+/// is a hard error, never a silent f32 run.
+fn ensure_precision<B: Backend>(backend: &B, precision: Precision) -> Result<()> {
+    ensure!(
+        backend.supports_precision(precision),
+        "the {} backend cannot execute precision={precision} \
+         (Backend::supports_precision); use backend=native or precision=f32",
+        backend.name()
+    );
+    Ok(())
 }
 
 /// Trainer: configured once, `run()` executes the whole fine-tuning run.
@@ -175,6 +223,9 @@ impl Trainer {
 
     /// Execute the configured run end to end on the resolved backend.
     pub fn run(&self) -> Result<TrainReport> {
+        // surface a bad LEZO_THREADS as a clean CLI error up front (the
+        // kernel-entry check would only panic mid-run)
+        crate::runtime::native::parallel::check_env()?;
         // `threads` config key -> native kernel worker count (0 = auto),
         // scoped to this run via a thread-local override so concurrent
         // runs in one process cannot clobber each other; LEZO_THREADS
@@ -249,6 +300,7 @@ impl Trainer {
             task: self.cfg.task.clone(),
             method: self.cfg.method,
             backend: backend.name(),
+            precision: backend.precision(),
             metric_kind: metric.kind,
             final_metric: metric.value,
             best_metric: metric.value,
@@ -410,6 +462,7 @@ impl Trainer {
             task: cfg.task.clone(),
             method: cfg.method,
             backend: backend.name(),
+            precision: backend.precision(),
             metric_kind: if task.kind() == TaskKind::Generation { "f1" } else { "acc" },
             final_metric,
             best_metric: best,
@@ -576,6 +629,7 @@ impl Trainer {
             task: cfg.task.clone(),
             method: cfg.method,
             backend: backend.name(),
+            precision: backend.precision(),
             metric_kind: if task.kind() == TaskKind::Generation { "f1" } else { "acc" },
             final_metric,
             best_metric: best,
@@ -609,6 +663,7 @@ pub fn pretrain(
     log_every: usize,
 ) -> Result<(f32, f32)> {
     let dir = std::path::PathBuf::from(cfg.artifact_dir());
+    crate::runtime::native::parallel::check_env()?;
     crate::runtime::native::parallel::with_threads(cfg.threads, || {
         match resolve_backend(cfg)? {
             ResolvedBackend::Native(b) => {
@@ -694,6 +749,7 @@ mod tests {
             task: "sst2".into(),
             method: Method::Lezo,
             backend: "native",
+            precision: Precision::F32,
             metric_kind: "acc",
             final_metric: 0.9,
             best_metric: 0.92,
@@ -782,6 +838,49 @@ mod tests {
                 "{peft}: dropped adapter units must shrink the active set"
             );
         }
+    }
+
+    #[test]
+    fn bf16_zo_runs_on_native_backend() {
+        if std::env::var("LEZO_PRECISION").map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED bf16_zo_runs_on_native_backend: LEZO_PRECISION wins");
+            return;
+        }
+        // both the dense (mezo) and sparse (lezo) sweeps: the lezo run
+        // exercises the partial shadow re-cast path end to end
+        for (method, drop) in [(Method::Mezo, 0usize), (Method::Lezo, 1)] {
+            let mut cfg = RunConfig::default();
+            cfg.model = "opt-nano".into();
+            cfg.backend = BackendKind::Native;
+            cfg.method = method;
+            cfg.drop_layers = drop;
+            cfg.precision = Precision::Bf16;
+            cfg.steps = 2;
+            cfg.eval_every = 2;
+            cfg.eval_examples = 4;
+            cfg.train_examples = 8;
+            cfg.mean_len = 8;
+            cfg.lr = 1e-4;
+            let r = Trainer::new(cfg).run().unwrap();
+            assert_eq!(r.backend, "native", "{method}");
+            assert_eq!(r.precision, Precision::Bf16, "{method}");
+            assert_eq!(r.losses.len(), 2, "{method}");
+            assert!(r.losses.iter().all(|l| l.is_finite()), "{method}");
+        }
+    }
+
+    #[test]
+    fn pjrt_with_bf16_is_a_hard_error_not_a_silent_f32_run() {
+        if std::env::var("LEZO_PRECISION").map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED pjrt_with_bf16_is_a_hard_error: LEZO_PRECISION wins");
+            return;
+        }
+        let mut cfg = RunConfig::default();
+        cfg.model = "opt-nano".into();
+        cfg.backend = BackendKind::Pjrt;
+        cfg.precision = Precision::Bf16;
+        let err = Trainer::new(cfg).run().unwrap_err();
+        assert!(err.to_string().contains("precision"), "{err}");
     }
 
     #[test]

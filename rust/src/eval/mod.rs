@@ -231,8 +231,8 @@ mod tests {
         use crate::tasks::{eval_set, make_task};
         let b = NativeBackend::preset("opt-nano").unwrap();
         let host = b.initial_params("").unwrap().0;
-        let bufs: Vec<Vec<f32>> = host;
-        let units: Vec<&Vec<f32>> = bufs.iter().collect();
+        let bufs: Vec<_> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+        let units: Vec<_> = bufs.iter().collect();
         let ev = Evaluator::new(&b);
         for task_name in ["sst2", "copa", "squad"] {
             let task = make_task(task_name).unwrap();
@@ -252,8 +252,9 @@ mod tests {
         use crate::runtime::{Backend, NativeBackend};
         use crate::tasks::{eval_set, make_task};
         let b = NativeBackend::preset("opt-nano").unwrap();
-        let bufs = b.initial_params("").unwrap().0;
-        let units: Vec<&Vec<f32>> = bufs.iter().collect();
+        let host = b.initial_params("").unwrap().0;
+        let bufs: Vec<_> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+        let units: Vec<_> = bufs.iter().collect();
         let ev = Evaluator::new(&b);
         let task = make_task("sst2").unwrap();
         let examples = eval_set(task.as_ref(), 123, 60, 10);

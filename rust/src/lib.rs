@@ -37,7 +37,10 @@
 //!   transformer kernels with a fused streaming LM head and native PEFT
 //!   adapter forwards, plus the naive dense reference they are tested
 //!   against — and a reference backward pass, so the FT baseline,
-//!   pretraining, and every Table-4 PEFT cell are hermetic too).
+//!   pretraining, and every Table-4 PEFT cell are hermetic too). A
+//!   software-bf16 twin of the forward path (`precision=bf16`, env
+//!   `LEZO_PRECISION`) halves the streamed bytes while the trainable f32
+//!   masters stay authoritative ([`runtime::native`], "Precision").
 //!   [`runtime::pjrt`] (feature `pjrt`) executes the AOT HLO artifacts
 //!   instead.
 //! - **L2/L1** live in `python/compile/` and never run on the request path.

@@ -25,10 +25,14 @@ fn usage() -> ! {
          lezo info    [model=<size>]\n  lezo render  task=<name> [n=K] [seed=S]\n\n\
          Common keys: model backend task method peft drop_layers lr mu steps\n\
          eval_every eval_examples train_examples seed icl_shots mean_len checkpoint\n\
-         (backend: auto|native|pjrt — native needs no artifacts)\n\
-         (method:  zero-shot|icl|ft|mezo|lezo|smezo, or a Table-4 alias\n\
+         precision threads\n\
+         (backend:   auto|native|pjrt — native needs no artifacts)\n\
+         (method:    zero-shot|icl|ft|mezo|lezo|smezo, or a Table-4 alias\n\
           mezo-lora|lezo-lora|mezo-prefix|lezo-prefix that also sets peft)\n\
-         (peft:    full|lora|prefix — adapter tuning runs on any backend)\n\
+         (peft:      full|lora|prefix — adapter tuning runs on any backend)\n\
+         (precision: f32|bf16 — bf16 runs the native forward over half-width\n\
+          shadows (half the streamed bytes); f32 masters stay authoritative.\n\
+          Env LEZO_PRECISION overrides, like LEZO_THREADS for threads)\n\
          Flags: -q quiet, -v verbose",
         bench::ALL_BENCHES.join(" ")
     );
@@ -67,6 +71,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     println!("task           : {}", report.task);
     println!("method         : {}", report.method);
     println!("backend        : {}", report.backend);
+    println!("precision      : {}", report.precision);
     println!("final {:>3}      : {:.1}%", report.metric_kind, 100.0 * report.final_metric);
     println!("best  {:>3}      : {:.1}%", report.metric_kind, 100.0 * report.best_metric);
     println!("train time     : {:.1}s", report.train_secs);

@@ -28,9 +28,10 @@ use std::path::{Path, PathBuf};
 use std::str::FromStr;
 
 /// One tensor/executable substrate. `Buffer` is the device-resident flat
-/// f32 tensor handle (a plain `Vec<f32>` natively, a `PjRtBuffer` under
-/// PJRT); `PreparedBatch` is an uploaded (tokens, targets, mask) triple so
-/// the two forward probes of a ZO step share one upload.
+/// f32 tensor handle (natively a `NativeBuf` — an f32 master plus an
+/// optional bf16 shadow; a `PjRtBuffer` under PJRT); `PreparedBatch` is an
+/// uploaded (tokens, targets, mask) triple so the two forward probes of a
+/// ZO step share one upload.
 pub trait Backend {
     type Buffer;
     type PreparedBatch;
@@ -181,6 +182,21 @@ pub trait Backend {
         false
     }
 
+    /// The numeric precision this backend instance executes the forward
+    /// families in. Perturbation/update state is f32 on every backend —
+    /// precision is a forward-path property (see the native backend's
+    /// bf16 shadow design in `runtime/native/mod.rs`).
+    fn precision(&self) -> Precision {
+        Precision::F32
+    }
+
+    /// Which precisions this backend can execute. The conservative default
+    /// is f32 only; the native backend runs bf16 too (software bf16
+    /// kernels), PJRT would need reduced-precision executables.
+    fn supports_precision(&self, precision: Precision) -> bool {
+        precision == Precision::F32
+    }
+
     /// Pre-warm whatever a ZO run needs (e.g. compile executables) so step
     /// timing excludes one-time setup.
     fn warm_zo(&self) -> Result<()> {
@@ -219,6 +235,64 @@ impl std::fmt::Display for BackendKind {
             BackendKind::Pjrt => "pjrt",
         })
     }
+}
+
+/// Forward-path numeric precision (config key `precision`, env
+/// `LEZO_PRECISION` — env wins, mirroring `threads`/`LEZO_THREADS`).
+///
+/// `bf16` halves the bytes the forward families *stream* (parameters and
+/// activations are read as 2-byte bf16) on backends that support it. The
+/// ZO-trainable f32 masters stay resident either way — natively the
+/// shadows *add* ~0.5x parameter memory in exchange for the halved
+/// traffic — and every algorithmic invariant (Philox regeneration,
+/// perturb/flip/restore round-trip, thread-count invariance) is
+/// precision-independent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl FromStr for Precision {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" | "fp32" | "float32" => Precision::F32,
+            "bf16" | "bfloat16" => Precision::Bf16,
+            _ => anyhow::bail!("unknown precision '{s}' (f32|bf16)"),
+        })
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        })
+    }
+}
+
+/// `LEZO_PRECISION`: unset/empty means "no override"; anything else must
+/// parse as a precision — an unparseable value is a hard error naming the
+/// bad value (the same strictness rule as `LEZO_THREADS`), never a silent
+/// fall-through to the default.
+pub fn env_precision() -> Result<Option<Precision>> {
+    match std::env::var("LEZO_PRECISION") {
+        Err(_) => Ok(None),
+        Ok(v) if v.is_empty() => Ok(None),
+        Ok(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("LEZO_PRECISION='{v}' is not a precision (f32|bf16)")),
+    }
+}
+
+/// Resolve the precision for a run: the `LEZO_PRECISION` env override wins
+/// (mirroring `LEZO_THREADS`), else the config key's value.
+pub fn resolve_precision(requested: Precision) -> Result<Precision> {
+    Ok(env_precision()?.unwrap_or(requested))
 }
 
 /// Does `dir` hold an AOT artifact set (manifest.json)?
@@ -263,6 +337,18 @@ mod tests {
         assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
         assert!("gpu".parse::<BackendKind>().is_err());
         assert_eq!(BackendKind::default(), BackendKind::Auto);
+    }
+
+    #[test]
+    fn precision_parse_display_round_trip() {
+        for s in ["f32", "bf16"] {
+            let p: Precision = s.parse().unwrap();
+            assert_eq!(p.to_string(), s);
+        }
+        assert_eq!("bfloat16".parse::<Precision>().unwrap(), Precision::Bf16);
+        assert_eq!("fp32".parse::<Precision>().unwrap(), Precision::F32);
+        assert!("fp8".parse::<Precision>().is_err());
+        assert_eq!(Precision::default(), Precision::F32);
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub mod pjrt;
 
 #[cfg(feature = "pjrt")]
 pub use client::{run, run1, Runtime};
-pub use backend::{Backend, BackendKind};
-pub use native::NativeBackend;
+pub use backend::{Backend, BackendKind, Precision};
+pub use native::{NativeBackend, NativeBuf};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;

@@ -1,0 +1,236 @@
+//! Software bfloat16 for the native reduced-precision path — no new deps.
+//!
+//! Storage is a plain `u16` holding the top half of the IEEE-754 binary32
+//! layout (1 sign, 8 exponent, 7 mantissa bits): widening back to f32 is an
+//! exact bit shift, and narrowing rounds the low 16 bits to nearest, ties
+//! to even — the same rule `ml_dtypes.bfloat16` (the numpy/jax reference)
+//! applies, verified in-container against it over an exhaustive sweep of
+//! every 16-bit high half times adversarial low halves plus 200k random
+//! finite floats (0 mismatches). The conversion KATs below pin that
+//! agreement in-tree.
+//!
+//! Semantics worth naming:
+//!
+//! - **Round to nearest, ties to even** on the discarded 16 bits
+//!   (`0x3F808000` — exactly halfway between 1.0 and the next bf16 —
+//!   rounds *down* to even `0x3F80`; `0x3F818000` rounds *up* to even
+//!   `0x3F82`).
+//! - **Subnormals are kept, not flushed**: bf16 shares f32's exponent
+//!   range, so every f32 subnormal rounds onto the bf16 subnormal grid by
+//!   the same integer arithmetic (no special case); f32 values below half
+//!   the smallest bf16 subnormal round to (signed) zero.
+//! - **NaN stays NaN**: rounding arithmetic could carry a NaN mantissa up
+//!   into the infinity encoding, so NaNs are truncated instead, with a
+//!   quiet bit forced only when the payload lived entirely in the
+//!   discarded half. Infinities and signed zeros pass through exactly.
+//! - **`bf16 -> f32 -> bf16` is the identity for all 65536 bit patterns**
+//!   (widening is exact and exactly-representable values round to
+//!   themselves; NaN truncation preserves an already-16-bit payload) —
+//!   pinned exhaustively below.
+//!
+//! The hot-path kernels ([`super::kernels`]) never round intermediates:
+//! they widen operands on the fly, accumulate in f32 (f64 where the f32
+//! twin does), and round once on store. [`cast_into`] is the bulk
+//! f32 -> bf16 shadow re-cast, chunk-parallel through the same fixed
+//! partitioning as every other native kernel.
+
+use super::parallel::{par_ranges, SendPtr};
+
+/// Round an f32 to bf16 storage bits (round to nearest, ties to even).
+#[inline(always)]
+pub fn to_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // truncate the payload; force a quiet bit only if truncation would
+        // otherwise produce an infinity encoding
+        let mut r = (bits >> 16) as u16;
+        if r & 0x7F == 0 {
+            r |= 0x40;
+        }
+        return r;
+    }
+    // round-half-even: add 0x7FFF plus the parity of the kept LSB, so an
+    // exact tie (low half == 0x8000) carries only when the kept half is odd
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// Widen bf16 storage bits to f32 — exact (a pure bit shift).
+#[inline(always)]
+pub fn to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Bulk f32 -> bf16 cast (the shadow re-cast of a touched unit).
+/// Chunk-parallel with fixed partitioning; elementwise, so results are
+/// identical at any thread count.
+pub fn cast_into(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let ptr = SendPtr(dst.as_mut_ptr());
+    par_ranges(src.len(), 64 * 1024, |r| {
+        // SAFETY: par_ranges chunks are disjoint element ranges of `dst`.
+        let out = unsafe { ptr.slice_mut(r.start, r.end - r.start) };
+        for (o, &x) in out.iter_mut().zip(&src[r.start..r.end]) {
+            *o = to_bits(x);
+        }
+    });
+}
+
+/// Bulk bf16 -> f32 widening (tests and the dense bf16 reference).
+pub fn widen_into(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (o, &b) in dst.iter_mut().zip(src) {
+        *o = to_f32(b);
+    }
+}
+
+/// Convenience: widen a bf16 slice into a fresh Vec (tests, references).
+pub fn widen(src: &[u16]) -> Vec<f32> {
+    src.iter().map(|&b| to_f32(b)).collect()
+}
+
+/// Convenience: round an f32 slice onto the bf16 grid (tests, references).
+pub fn cast(src: &[f32]) -> Vec<u16> {
+    src.iter().map(|&x| to_bits(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Known-answer pairs generated with `ml_dtypes.bfloat16` (numpy), the
+    /// reference rounding both jax and XLA use: (f32 bits, bf16 bits).
+    /// Covers signed zeros, exact values, round-half-even ties in both
+    /// directions, inf/overflow-to-inf, normals at the subnormal boundary,
+    /// subnormal keep/flush-to-zero, and repeating-fraction rounding.
+    const KAT: &[(u32, u16)] = &[
+        (0x00000000, 0x0000), // 0.0
+        (0x80000000, 0x8000), // -0.0
+        (0x3F800000, 0x3F80), // 1.0
+        (0xBF800000, 0xBF80), // -1.0
+        (0x40000000, 0x4000), // 2.0
+        (0x3F000000, 0x3F00), // 0.5
+        (0x3F808000, 0x3F80), // 1 + 2^-8: tie, rounds down to even
+        (0x3F818000, 0x3F82), // 1 + 3*2^-8: tie, rounds up to even
+        (0x40490FDB, 0x4049), // pi
+        (0xC0490FDB, 0xC049), // -pi
+        (0x477FE000, 0x4780), // 65504.0 (fp16 max) rounds up
+        (0x7F7F0000, 0x7F7F), // largest bf16 normal, exact
+        (0x7F7FFFFF, 0x7F80), // f32::MAX rounds to +inf
+        (0x7F800000, 0x7F80), // +inf
+        (0xFF800000, 0xFF80), // -inf
+        (0x006CE3EE, 0x006D), // 1e-38 (f32 subnormal regime boundary area)
+        (0x00800000, 0x0080), // smallest f32 normal
+        (0x000116C2, 0x0001), // 1e-40: subnormal, kept (not flushed)
+        (0x00010000, 0x0001), // smallest bf16 subnormal, exact
+        (0x00000001, 0x0000), // below half the smallest subnormal -> +0
+        (0x00400000, 0x0040), // 2^-127 subnormal, exact
+        (0x3E200000, 0x3E20), // 0.15625, exact in bf16
+        (0x3DCCCCCD, 0x3DCD), // 0.1 rounds up
+        (0x3E4CCCCD, 0x3E4D), // 0.2 rounds up
+        (0x3E99999A, 0x3E9A), // 0.3 rounds up
+        (0x3EAAAAAB, 0x3EAB), // 1/3 rounds up
+    ];
+
+    #[test]
+    fn conversion_known_answers_match_ml_dtypes() {
+        for &(f32_bits, want) in KAT {
+            let x = f32::from_bits(f32_bits);
+            let got = to_bits(x);
+            assert_eq!(
+                got, want,
+                "f32 0x{f32_bits:08X} ({x}): got 0x{got:04X}, want 0x{want:04X}"
+            );
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_are_preserved() {
+        assert!(to_f32(to_bits(f32::NAN)).is_nan());
+        assert_eq!(to_f32(to_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(to_f32(to_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        // a NaN whose payload lives entirely in the discarded low half must
+        // not truncate into an infinity encoding
+        let low_payload_nan = f32::from_bits(0x7F80_0001);
+        assert!(low_payload_nan.is_nan());
+        let b = to_bits(low_payload_nan);
+        assert!(to_f32(b).is_nan(), "0x{b:04X} decoded as non-NaN");
+        // sign of NaN survives
+        let neg = f32::from_bits(0xFF80_0001);
+        assert_eq!(to_bits(neg) >> 15, 1);
+    }
+
+    #[test]
+    fn round_half_even_tie_cases() {
+        // halfway values: kept-LSB even -> down, odd -> up
+        for (f32_bits, want) in [
+            (0x3F80_8000u32, 0x3F80u16), // 1.0 + half ulp -> stays 1.0 (even)
+            (0x3F81_8000, 0x3F82),       // next: rounds up to even
+            (0x4000_8000, 0x4000),       // 2.0 + half ulp -> stays (even)
+            (0x4001_8000, 0x4002),       // odd kept half rounds up
+            (0xBF80_8000, 0xBF80),       // same, negative sign
+            (0xBF81_8000, 0xBF82),
+        ] {
+            assert_eq!(to_bits(f32::from_bits(f32_bits)), want, "0x{f32_bits:08X}");
+        }
+        // just above / below the tie break the tie normally
+        assert_eq!(to_bits(f32::from_bits(0x3F80_8001)), 0x3F81);
+        assert_eq!(to_bits(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+    }
+
+    #[test]
+    fn subnormals_round_onto_the_bf16_grid_not_flushed() {
+        // bf16 shares f32's exponent range: subnormal f32 values stay
+        // subnormal bf16 values under the same integer rounding
+        let smallest_bf16_sub = f32::from_bits(0x0001_0000);
+        assert_eq!(to_f32(to_bits(smallest_bf16_sub)), smallest_bf16_sub);
+        // half of it (a tie against zero with even kept half) rounds to +0
+        assert_eq!(to_bits(f32::from_bits(0x0000_8000)), 0x0000);
+        // just above half rounds up to the smallest subnormal
+        assert_eq!(to_bits(f32::from_bits(0x0000_8001)), 0x0001);
+        // negative side keeps the sign
+        assert_eq!(to_bits(f32::from_bits(0x8000_8000)), 0x8000);
+        assert_eq!(to_bits(f32::from_bits(0x8001_0000)), 0x8001);
+    }
+
+    #[test]
+    fn round_trip_is_identity_for_all_65536_patterns() {
+        for b in 0..=u16::MAX {
+            let widened = to_f32(b);
+            let back = to_bits(widened);
+            assert_eq!(
+                back, b,
+                "bf16 0x{b:04X} -> f32 {widened} -> 0x{back:04X} is not the identity"
+            );
+        }
+    }
+
+    #[test]
+    fn widening_is_exact_and_monotone_on_normals() {
+        // widening is a bit shift: the produced f32 re-narrows exactly, and
+        // relative error of narrowing a finite normal is bounded by 2^-8
+        for i in 0..10_000u32 {
+            let x = (i as f32 - 5_000.0) * 0.37 + 0.001;
+            let r = to_f32(to_bits(x));
+            let rel = ((r - x) / x).abs();
+            assert!(rel <= 1.0 / 256.0, "x={x} r={r} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn bulk_casts_match_scalar_and_round_trip() {
+        let src: Vec<f32> = (0..10_000).map(|i| ((i as f32) * 0.731).sin() * 3.0).collect();
+        let mut bits = vec![0u16; src.len()];
+        cast_into(&src, &mut bits);
+        for (i, (&b, &x)) in bits.iter().zip(&src).enumerate() {
+            assert_eq!(b, to_bits(x), "i={i}");
+        }
+        let mut wide = vec![0.0f32; src.len()];
+        widen_into(&bits, &mut wide);
+        let mut again = vec![0u16; src.len()];
+        cast_into(&wide, &mut again);
+        assert_eq!(bits, again, "cast -> widen -> cast must be stable");
+        assert_eq!(cast(&src), bits);
+        assert_eq!(widen(&bits), wide);
+    }
+}

@@ -28,7 +28,20 @@
 //!   memory + bandwidth cost at real vocab sizes. The dense tensor remains
 //!   available from [`super::forward::forward_logits`] as the slow
 //!   reference the fused paths are tested against (≤ 1e-4).
+//! - **bf16 twins** (`*_bf16`, the `precision=bf16` forward path): the
+//!   bandwidth-bound kernels above re-implemented over [`super::bf16`]
+//!   storage — parameters *and* activations held as `u16` bf16 bits,
+//!   widened on the fly, accumulated in f32 (f64 exactly where the f32
+//!   twin uses f64), rounded once on store. Accumulation order mirrors the
+//!   f32 twin element for element, so each bf16 kernel's output equals the
+//!   **bitwise** bf16 rounding of its f32 twin run on the widened inputs
+//!   (pinned by the `bf16_*` tests below), and results stay bit-identical
+//!   at any thread count. PEFT adapters are skinny and stay f32
+//!   ([`attention_ctx_bf16`] takes the prefix KV pair as f32;
+//!   [`matmul_scaled_acc_into_bf16`] folds the f32 LoRA delta into a bf16
+//!   projection, keeping the zero-init-LoRA == base bitwise property).
 
+use super::bf16;
 use super::parallel::{par_ranges, par_row_chunks, SendPtr};
 use crate::model::spec::ModelSpec;
 use crate::peft::PeftMode;
@@ -269,30 +282,32 @@ pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
 // ---------------------------------------------------------------------------
 
 /// Named views into one flat block unit (layout documented in
-/// [`crate::model::spec::ModelSpec`]).
-pub(crate) struct BlockParams<'a> {
-    pub ln1_g: &'a [f32],
-    pub ln1_b: &'a [f32],
-    pub wq: &'a [f32],
-    pub bq: &'a [f32],
-    pub wk: &'a [f32],
-    pub bk: &'a [f32],
-    pub wv: &'a [f32],
-    pub bv: &'a [f32],
-    pub wo: &'a [f32],
-    pub bo: &'a [f32],
-    pub ln2_g: &'a [f32],
-    pub ln2_b: &'a [f32],
-    pub w1: &'a [f32],
-    pub b1: &'a [f32],
-    pub w2: &'a [f32],
-    pub b2: &'a [f32],
+/// [`crate::model::spec::ModelSpec`]). Generic over the storage element so
+/// the f32 path (`T = f32`, the default) and the bf16 path (`T = u16` bf16
+/// bits) split the identical flat layout.
+pub(crate) struct BlockParams<'a, T = f32> {
+    pub ln1_g: &'a [T],
+    pub ln1_b: &'a [T],
+    pub wq: &'a [T],
+    pub bq: &'a [T],
+    pub wk: &'a [T],
+    pub bk: &'a [T],
+    pub wv: &'a [T],
+    pub bv: &'a [T],
+    pub wo: &'a [T],
+    pub bo: &'a [T],
+    pub ln2_g: &'a [T],
+    pub ln2_b: &'a [T],
+    pub w1: &'a [T],
+    pub b1: &'a [T],
+    pub w2: &'a [T],
+    pub b2: &'a [T],
 }
 
-pub(crate) fn split_block<'a>(spec: &ModelSpec, mut p: &'a [f32]) -> BlockParams<'a> {
+pub(crate) fn split_block<'a, T>(spec: &ModelSpec, mut p: &'a [T]) -> BlockParams<'a, T> {
     let d = spec.d_model;
     let f = spec.d_ff();
-    let mut take = |n: usize| -> &'a [f32] {
+    let mut take = |n: usize| -> &'a [T] {
         let (head, rest) = p.split_at(n);
         p = rest;
         head
@@ -372,10 +387,12 @@ pub(crate) fn validate_peft_args(
     Ok(())
 }
 
-/// Shared argument validation of every forward family (fast and reference).
-pub(crate) fn validate_forward_args(
+/// Shared argument validation of every forward family (fast, reference,
+/// and the bf16 twins — generic over the unit storage element, it only
+/// checks lengths).
+pub(crate) fn validate_forward_args<T>(
     spec: &ModelSpec,
-    units: &[&[f32]],
+    units: &[&[T]],
     tokens: &[i32],
     rows: usize,
     seq: usize,
@@ -424,6 +441,15 @@ pub(crate) fn validate_targets(
 /// residual stream, allocated once and reused across matmuls, blocks, and
 /// forward calls (`ensure` only grows them). The final-LN hidden states
 /// land in `x`; `xent` holds per-position losses for the fused head.
+///
+/// The bf16 path has its own half of the arena (`*b` buffers, `u16` bf16
+/// bits — the final-LN hidden states land in `xb`): a bf16 forward streams
+/// half the activation bytes of an f32 one, and the two precision paths
+/// never alias each other's buffers. `lora_tmp` is the skinny f32 LoRA
+/// projection temporary of the bf16 path (the f32 path borrows the idle
+/// `ffn` buffer instead). The bf16 path keeps exactly one f32
+/// activation-sized buffer: `ffn` doubles as the bf16 matmuls' f32
+/// accumulation arena, so they stay allocation-free.
 #[derive(Default)]
 pub struct ForwardScratch {
     pub h: Vec<f32>,
@@ -434,6 +460,14 @@ pub struct ForwardScratch {
     pub ctx: Vec<f32>,
     pub ffn: Vec<f32>,
     pub xent: Vec<f32>,
+    pub hb: Vec<u16>,
+    pub xb: Vec<u16>,
+    pub qb: Vec<u16>,
+    pub kb: Vec<u16>,
+    pub vb: Vec<u16>,
+    pub ctxb: Vec<u16>,
+    pub ffnb: Vec<u16>,
+    pub lora_tmp: Vec<f32>,
 }
 
 impl ForwardScratch {
@@ -453,6 +487,31 @@ impl ForwardScratch {
         }
         if self.xent.len() < n {
             self.xent.resize(n, 0.0);
+        }
+    }
+
+    fn ensure_bf16(&mut self, n: usize, d: usize, f: usize) {
+        for buf in
+            [&mut self.hb, &mut self.xb, &mut self.qb, &mut self.kb, &mut self.vb, &mut self.ctxb]
+        {
+            if buf.len() < n * d {
+                buf.resize(n * d, 0);
+            }
+        }
+        if self.ffnb.len() < n * f {
+            self.ffnb.resize(n * f, 0);
+        }
+        // the one f32 activation-sized buffer the bf16 path keeps: `ffn`
+        // doubles as the matmul f32 accumulation arena (`f >= d` covers
+        // every projection), so bf16 matmuls allocate nothing per call
+        if self.ffn.len() < n * f {
+            self.ffn.resize(n * f, 0.0);
+        }
+        if self.xent.len() < n {
+            self.xent.resize(n, 0.0);
+        }
+        if self.lora_tmp.len() < n * crate::peft::LORA_RANK {
+            self.lora_tmp.resize(n * crate::peft::LORA_RANK, 0.0);
         }
     }
 }
@@ -773,6 +832,511 @@ pub fn fused_argmax(
     });
 }
 
+// ---------------------------------------------------------------------------
+// bf16 twins: reduced-precision storage, f32 accumulation
+// ---------------------------------------------------------------------------
+//
+// Every kernel below mirrors its f32 twin's accumulation order element for
+// element — operands are widened on the fly, summed in f32 (f64 where the
+// twin uses f64), and rounded to bf16 exactly once on store. The payoff is
+// a strong invariant the tests pin bitwise: `twin_bf16(inputs) ==
+// bf16(twin_f32(widen(inputs)))`. It also inherits the determinism rule
+// for free: fixed chunking + per-element fixed reduction order means
+// results are bit-identical at any thread count.
+
+/// [`dot`] over bf16 operands: widen on the fly, same 4-accumulator
+/// pattern, so the f32 result equals `dot(widen(a), widen(b))` bitwise.
+#[inline]
+pub(crate) fn dot_bf16(a: &[u16], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() - a.len() % 4;
+    let mut acc = [0.0f32; 4];
+    for (pa, pb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
+        acc[0] += bf16::to_f32(pa[0]) * bf16::to_f32(pb[0]);
+        acc[1] += bf16::to_f32(pa[1]) * bf16::to_f32(pb[1]);
+        acc[2] += bf16::to_f32(pa[2]) * bf16::to_f32(pb[2]);
+        acc[3] += bf16::to_f32(pa[3]) * bf16::to_f32(pb[3]);
+    }
+    let mut tail = 0.0f32;
+    for (&xv, &yv) in a[n4..].iter().zip(&b[n4..]) {
+        tail += bf16::to_f32(xv) * bf16::to_f32(yv);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// Mixed dot: bf16 activations against f32 parameters (the prefix-tuning
+/// KV pairs, which stay f32 — adapters are skinny).
+#[inline]
+fn dot_bf16_f32(a: &[u16], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() - a.len() % 4;
+    let mut acc = [0.0f32; 4];
+    for (pa, pb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
+        acc[0] += bf16::to_f32(pa[0]) * pb[0];
+        acc[1] += bf16::to_f32(pa[1]) * pb[1];
+        acc[2] += bf16::to_f32(pa[2]) * pb[2];
+        acc[3] += bf16::to_f32(pa[3]) * pb[3];
+    }
+    let mut tail = 0.0f32;
+    for (&xv, &yv) in a[n4..].iter().zip(&b[n4..]) {
+        tail += bf16::to_f32(xv) * yv;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// bf16 twin of [`matmul_bias_into`]: bf16 x/w/b and output, cache-blocked
+/// with the identical `MM_IBLOCK` / ascending-`i` accumulation in the
+/// caller-provided f32 panel `acc` (`>= n_rows * dout`; the forward passes
+/// the idle f32 `ffn` arena, so the hot path stays allocation-free),
+/// rounded once on store. Chunks write disjoint row ranges of both `out`
+/// and `acc`.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias_into_bf16(
+    x: &[u16],
+    w: &[u16],
+    b: &[u16],
+    out: &mut [u16],
+    acc: &mut [f32],
+    n_rows: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(x.len(), n_rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(b.len(), dout);
+    debug_assert_eq!(out.len(), n_rows * dout);
+    debug_assert!(acc.len() >= n_rows * dout);
+    let acc_ptr = SendPtr(acc.as_mut_ptr());
+    let grain = grain_for(din * dout, 250_000); // rows per chunk
+    par_row_chunks(out, dout, grain, |r0, orows| {
+        // SAFETY: chunks are disjoint row ranges, so the acc panel slices
+        // are disjoint exactly like the `out` slices.
+        let acc = unsafe { acc_ptr.slice_mut(r0 * dout, orows.len()) };
+        for arow in acc.chunks_exact_mut(dout) {
+            for (a, &bv) in arow.iter_mut().zip(b) {
+                *a = bf16::to_f32(bv);
+            }
+        }
+        let mut i0 = 0;
+        while i0 < din {
+            let i1 = (i0 + MM_IBLOCK).min(din);
+            let wpanel = &w[i0 * dout..i1 * dout];
+            for (rr, arow) in acc.chunks_exact_mut(dout).enumerate() {
+                let xrow = &x[(r0 + rr) * din + i0..(r0 + rr) * din + i1];
+                for (&xi, wrow) in xrow.iter().zip(wpanel.chunks_exact(dout)) {
+                    let xf = bf16::to_f32(xi);
+                    for (a, &wv) in arow.iter_mut().zip(wrow) {
+                        *a += xf * bf16::to_f32(wv);
+                    }
+                }
+            }
+            i0 = i1;
+        }
+        for (o, &a) in orows.iter_mut().zip(acc.iter()) {
+            *o = bf16::to_bits(a);
+        }
+    });
+}
+
+/// The LoRA `tmp = x @ A` projection of the bf16 path: bf16 activations
+/// against the f32 adapter matrix into an f32 temporary (skinny — `dout`
+/// is the LoRA rank), mirroring [`matmul_bias_into`]'s zero-bias blocked
+/// accumulation.
+pub fn lora_a_proj_bf16(
+    x: &[u16],
+    a: &[f32],
+    out: &mut [f32],
+    n_rows: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(x.len(), n_rows * din);
+    debug_assert_eq!(a.len(), din * dout);
+    debug_assert_eq!(out.len(), n_rows * dout);
+    let grain = grain_for(din * dout, 250_000);
+    par_row_chunks(out, dout, grain, |r0, orows| {
+        for orow in orows.chunks_exact_mut(dout) {
+            orow.fill(0.0);
+        }
+        let mut i0 = 0;
+        while i0 < din {
+            let i1 = (i0 + MM_IBLOCK).min(din);
+            let wpanel = &a[i0 * dout..i1 * dout];
+            for (rr, orow) in orows.chunks_exact_mut(dout).enumerate() {
+                let xrow = &x[(r0 + rr) * din + i0..(r0 + rr) * din + i1];
+                for (&xi, wrow) in xrow.iter().zip(wpanel.chunks_exact(dout)) {
+                    let xf = bf16::to_f32(xi);
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += xf * wv;
+                    }
+                }
+            }
+            i0 = i1;
+        }
+    });
+}
+
+/// bf16 twin of [`matmul_scaled_acc_into`]: fold `scale * (tmp @ B)` (both
+/// f32 — the skinny LoRA delta) into a bf16 projection. The inner product
+/// is summed in full before scaling and adding to the *widened*
+/// destination, then rounded — so a zero `w` adds an exact `+0.0` to an
+/// exactly-representable value and the destination bits are unchanged:
+/// zero-init LoRA stays bitwise-equal to the base forward in bf16 too.
+pub fn matmul_scaled_acc_into_bf16(
+    x: &[f32],
+    w: &[f32],
+    scale: f32,
+    out: &mut [u16],
+    n_rows: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(x.len(), n_rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(out.len(), n_rows * dout);
+    let grain = grain_for(2 * din * dout, 250_000);
+    par_row_chunks(out, dout, grain, |r0, orows| {
+        for (rr, orow) in orows.chunks_exact_mut(dout).enumerate() {
+            let xrow = &x[(r0 + rr) * din..(r0 + rr + 1) * din];
+            for (o, ov) in orow.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (i, &xi) in xrow.iter().enumerate() {
+                    acc += xi * w[i * dout + o];
+                }
+                *ov = bf16::to_bits(bf16::to_f32(*ov) + scale * acc);
+            }
+        }
+    });
+}
+
+/// bf16 residual add: `h = bf16(widen(h) + widen(m))`, elementwise.
+pub fn add_inplace_bf16(h: &mut [u16], m: &[u16]) {
+    debug_assert_eq!(h.len(), m.len());
+    for (hv, &mv) in h.iter_mut().zip(m) {
+        *hv = bf16::to_bits(bf16::to_f32(*hv) + bf16::to_f32(mv));
+    }
+}
+
+/// bf16 twin of [`layernorm_into`]: identical f64 mean/variance reductions
+/// over the widened row, normalized output rounded on store.
+pub fn layernorm_into_bf16(x: &[u16], gamma: &[u16], beta: &[u16], out: &mut [u16], d: usize) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert!(gamma.len() == d && beta.len() == d);
+    let grain = grain_for(4 * d, 65_536);
+    par_row_chunks(out, d, grain, |r0, orows| {
+        for (rr, orow) in orows.chunks_exact_mut(d).enumerate() {
+            let row = &x[(r0 + rr) * d..(r0 + rr + 1) * d];
+            let mean = row.iter().map(|&v| bf16::to_f32(v) as f64).sum::<f64>() / d as f64;
+            let var = row
+                .iter()
+                .map(|&v| (bf16::to_f32(v) as f64 - mean) * (bf16::to_f32(v) as f64 - mean))
+                .sum::<f64>()
+                / d as f64;
+            let inv = 1.0 / (var as f32 + LN_EPS).sqrt();
+            let mean = mean as f32;
+            for ((o, &v), (&g, &bv)) in orow.iter_mut().zip(row).zip(gamma.iter().zip(beta)) {
+                *o = bf16::to_bits(
+                    (bf16::to_f32(v) - mean) * inv * bf16::to_f32(g) + bf16::to_f32(bv),
+                );
+            }
+        }
+    });
+}
+
+/// bf16 elementwise tanh-GELU, chunk-parallel.
+pub fn gelu_inplace_bf16(a: &mut [u16]) {
+    let ptr = SendPtr(a.as_mut_ptr());
+    par_ranges(a.len(), grain_for(24, 250_000), |r| {
+        // SAFETY: par_ranges chunks are disjoint element ranges of `a`.
+        let chunk = unsafe { ptr.slice_mut(r.start, r.end - r.start) };
+        for v in chunk.iter_mut() {
+            *v = bf16::to_bits(gelu(bf16::to_f32(*v)));
+        }
+    });
+}
+
+/// bf16 twin of [`attention_ctx`]: bf16 q/k/v and context, f32 scores and
+/// softmax, per-(row, head) f32 context accumulator rounded on store. The
+/// prefix KV pair stays f32 (prefix tuning's adapters are skinny); its
+/// score/value loops mirror the f32 kernel with the widened query.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_ctx_bf16(
+    q: &[u16],
+    k: &[u16],
+    v: &[u16],
+    prefix: Option<(&[f32], &[f32])>,
+    ctx: &mut [u16],
+    d: usize,
+    nh: usize,
+    rows: usize,
+    seq: usize,
+) {
+    let dh = d / nh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let n_pre = prefix.map_or(0, |(k_pre, _)| k_pre.len() / d);
+    debug_assert!(prefix.map_or(true, |(kp, vp)| kp.len() == n_pre * d && vp.len() == n_pre * d));
+    let ctx_ptr = SendPtr(ctx.as_mut_ptr());
+    let grain = grain_for(seq * (n_pre + seq) * dh, 100_000);
+    par_ranges(rows * nh, grain, |tasks| {
+        let mut scores = vec![0.0f32; n_pre + seq];
+        let mut acc = vec![0.0f32; dh];
+        for t in tasks {
+            let (r, head) = (t / nh, t % nh);
+            let hoff = head * dh;
+            for s1 in 0..seq {
+                let qrow = &q[(r * seq + s1) * d + hoff..][..dh];
+                let visible = n_pre + s1 + 1;
+                let mut max = f32::NEG_INFINITY;
+                if let Some((k_pre, _)) = prefix {
+                    for (p, sv) in scores[..n_pre].iter_mut().enumerate() {
+                        let krow = &k_pre[p * d + hoff..][..dh];
+                        let s = dot_bf16_f32(qrow, krow) * scale;
+                        *sv = s;
+                        max = max.max(s);
+                    }
+                }
+                for (s2, sv) in scores[n_pre..visible].iter_mut().enumerate() {
+                    let krow = &k[(r * seq + s2) * d + hoff..][..dh];
+                    let s = dot_bf16(qrow, krow) * scale;
+                    *sv = s;
+                    max = max.max(s);
+                }
+                let mut denom = 0.0f32;
+                for sv in scores[..visible].iter_mut() {
+                    *sv = (*sv - max).exp();
+                    denom += *sv;
+                }
+                acc.fill(0.0);
+                if let Some((_, v_pre)) = prefix {
+                    for (p, &sv) in scores[..n_pre].iter().enumerate() {
+                        let w = sv / denom;
+                        let vrow = &v_pre[p * d + hoff..][..dh];
+                        for (o, &vv) in acc.iter_mut().zip(vrow) {
+                            *o += w * vv;
+                        }
+                    }
+                }
+                for (s2, &sv) in scores[n_pre..visible].iter().enumerate() {
+                    let w = sv / denom;
+                    let vrow = &v[(r * seq + s2) * d + hoff..][..dh];
+                    for (o, &vv) in acc.iter_mut().zip(vrow) {
+                        *o += w * bf16::to_f32(vv);
+                    }
+                }
+                // SAFETY: (r, head) tasks own disjoint (row, head-column)
+                // slices of ctx; s1 iterates rows within the task.
+                let orow = unsafe { ctx_ptr.slice_mut((r * seq + s1) * d + hoff, dh) };
+                for (o, &a) in orow.iter_mut().zip(&acc) {
+                    *o = bf16::to_bits(a);
+                }
+            }
+        }
+    });
+}
+
+/// bf16 twin of the private f32 `attention_into`: projections, adapter
+/// fold, context, output projection, residual add — all on bf16 buffers
+/// with f32 adapters. `q` is reused as the projection buffer afterwards;
+/// `acc` is the shared f32 matmul accumulation arena.
+#[allow(clippy::too_many_arguments)]
+fn attention_into_bf16(
+    h: &mut [u16],
+    x: &[u16],
+    q: &mut [u16],
+    k: &mut [u16],
+    v: &mut [u16],
+    ctx: &mut [u16],
+    p: &BlockParams<'_, u16>,
+    peft: &PeftBlock<'_>,
+    d: usize,
+    nh: usize,
+    rows: usize,
+    seq: usize,
+    lora_tmp: &mut [f32],
+    acc: &mut [f32],
+) {
+    let n = rows * seq;
+    matmul_bias_into_bf16(x, p.wq, p.bq, q, acc, n, d, d);
+    matmul_bias_into_bf16(x, p.wk, p.bk, k, acc, n, d, d);
+    matmul_bias_into_bf16(x, p.wv, p.bv, v, acc, n, d, d);
+    let mut prefix = None;
+    match peft {
+        PeftBlock::None => {}
+        PeftBlock::Lora { a_q, b_q, a_v, b_v } => {
+            let r = crate::peft::LORA_RANK;
+            let scale = (crate::peft::LORA_ALPHA / r as f64) as f32;
+            let tmp = &mut lora_tmp[..n * r];
+            lora_a_proj_bf16(x, a_q, tmp, n, d, r);
+            matmul_scaled_acc_into_bf16(tmp, b_q, scale, q, n, r, d);
+            lora_a_proj_bf16(x, a_v, tmp, n, d, r);
+            matmul_scaled_acc_into_bf16(tmp, b_v, scale, v, n, r, d);
+        }
+        PeftBlock::Prefix { k_pre, v_pre } => prefix = Some((*k_pre, *v_pre)),
+    }
+    attention_ctx_bf16(q, k, v, prefix, ctx, d, nh, rows, seq);
+    matmul_bias_into_bf16(ctx, p.wo, p.bo, q, acc, n, d, d);
+    add_inplace_bf16(h, q);
+}
+
+/// bf16 twin of [`forward_hidden_peft`]: the full transformer forward over
+/// bf16 unit shadows and bf16 activations (f32 adapters under PEFT). On
+/// success the final-LN hidden states are in `scratch.xb[..rows*seq*d]`.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_hidden_bf16_peft(
+    spec: &ModelSpec,
+    units: &[&[u16]],
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+    scratch: &mut ForwardScratch,
+) -> Result<()> {
+    validate_forward_args(spec, units, tokens, rows, seq)?;
+    validate_peft_args(spec, peft, peft_units)?;
+    let d = spec.d_model;
+    let f = spec.d_ff();
+    let n = rows * seq;
+    scratch.ensure_bf16(n, d, f);
+    let ForwardScratch { hb, xb, qb, kb, vb, ctxb, ffnb, lora_tmp, ffn: acc, .. } = scratch;
+    let h = &mut hb[..n * d];
+    let x = &mut xb[..n * d];
+    let q = &mut qb[..n * d];
+    let k = &mut kb[..n * d];
+    let v = &mut vb[..n * d];
+    let ctx = &mut ctxb[..n * d];
+    let ffn = &mut ffnb[..n * f];
+    let acc = &mut acc[..n * f]; // shared f32 matmul accumulation arena
+
+    // embed
+    let emb = units[0];
+    let tok_emb = &emb[..spec.vocab * d];
+    let pos_emb = &emb[spec.vocab * d..];
+    for r in 0..rows {
+        for s in 0..seq {
+            let t = tokens[r * seq + s] as usize;
+            let hrow = &mut h[(r * seq + s) * d..(r * seq + s + 1) * d];
+            let te = &tok_emb[t * d..(t + 1) * d];
+            let pe = &pos_emb[s * d..(s + 1) * d];
+            for ((hv, &tv), &pv) in hrow.iter_mut().zip(te).zip(pe) {
+                *hv = bf16::to_bits(bf16::to_f32(tv) + bf16::to_f32(pv));
+            }
+        }
+    }
+
+    // blocks
+    for l in 0..spec.n_layers {
+        let p = split_block(spec, units[1 + l]);
+        let pb = match peft {
+            PeftMode::Full => PeftBlock::None,
+            _ => peft_block(peft, peft_units[l], d),
+        };
+        layernorm_into_bf16(h, p.ln1_g, p.ln1_b, x, d);
+        attention_into_bf16(
+            h, x, q, k, v, ctx, &p, &pb, d, spec.n_heads, rows, seq, lora_tmp, acc,
+        );
+        layernorm_into_bf16(h, p.ln2_g, p.ln2_b, x, d);
+        matmul_bias_into_bf16(x, p.w1, p.b1, ffn, acc, n, d, f);
+        gelu_inplace_bf16(ffn);
+        matmul_bias_into_bf16(ffn, p.w2, p.b2, q, acc, n, f, d);
+        add_inplace_bf16(h, q);
+    }
+
+    // final LN (the tied bf16 LM head consumes scratch.xb)
+    let fin = units[spec.n_units() - 1];
+    layernorm_into_bf16(h, &fin[..d], &fin[d..], x, d);
+    Ok(())
+}
+
+/// bf16 twin of [`fused_masked_xent`]: streaming logsumexp + gold logit
+/// over bf16 hidden states and bf16 tok_emb, f32 logits / f64 sums — the
+/// per-position xent output stays f32 (it feeds an f64 mean).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_masked_xent_bf16(
+    hf: &[u16],
+    tok_emb: &[u16],
+    targets: &[i32],
+    mask: &[f32],
+    n: usize,
+    vocab: usize,
+    d: usize,
+    xent: &mut [f32],
+) {
+    debug_assert!(hf.len() == n * d && tok_emb.len() == vocab * d);
+    debug_assert!(targets.len() == n && mask.len() == n && xent.len() == n);
+    let ptr = SendPtr(xent.as_mut_ptr());
+    let grain = grain_for(2 * vocab * d, 2_000_000);
+    par_ranges(n, grain, |range| {
+        // SAFETY: par_ranges chunks are disjoint position ranges of `xent`.
+        let out = unsafe { ptr.slice_mut(range.start, range.end - range.start) };
+        for (o, p) in out.iter_mut().zip(range) {
+            if mask[p] <= 0.0 {
+                *o = 0.0;
+                continue;
+            }
+            let hrow = &hf[p * d..(p + 1) * d];
+            let gold_t = targets[p] as usize; // validated in-range
+            let mut running_max = f32::NEG_INFINITY;
+            let mut sum = 0.0f64;
+            let mut gold = 0.0f32;
+            let mut tile = [0.0f32; VOCAB_TILE];
+            let mut t0 = 0;
+            while t0 < vocab {
+                let t1 = (t0 + VOCAB_TILE).min(vocab);
+                let tile = &mut tile[..t1 - t0];
+                for (lv, erow) in tile.iter_mut().zip(tok_emb[t0 * d..t1 * d].chunks_exact(d)) {
+                    *lv = dot_bf16(hrow, erow);
+                }
+                let tile_max = tile.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                if tile_max > running_max {
+                    sum *= ((running_max - tile_max) as f64).exp();
+                    running_max = tile_max;
+                }
+                for &l in tile.iter() {
+                    sum += ((l - running_max) as f64).exp();
+                }
+                if gold_t >= t0 && gold_t < t1 {
+                    gold = tile[gold_t - t0];
+                }
+                t0 = t1;
+            }
+            let logz = running_max as f64 + sum.ln();
+            *o = (logz - gold as f64) as f32;
+        }
+    });
+}
+
+/// bf16 twin of [`fused_argmax`] (ties resolve to the lowest token id).
+pub fn fused_argmax_bf16(
+    hf: &[u16],
+    tok_emb: &[u16],
+    n: usize,
+    vocab: usize,
+    d: usize,
+    preds: &mut [i32],
+) {
+    debug_assert!(hf.len() == n * d && tok_emb.len() == vocab * d && preds.len() == n);
+    let ptr = SendPtr(preds.as_mut_ptr());
+    let grain = grain_for(2 * vocab * d, 2_000_000);
+    par_ranges(n, grain, |range| {
+        // SAFETY: par_ranges chunks are disjoint position ranges of `preds`.
+        let out = unsafe { ptr.slice_mut(range.start, range.end - range.start) };
+        for (o, p) in out.iter_mut().zip(range) {
+            let hrow = &hf[p * d..(p + 1) * d];
+            let mut best = 0usize;
+            let mut best_val = f32::NEG_INFINITY;
+            for (t, erow) in tok_emb.chunks_exact(d).enumerate() {
+                let l = dot_bf16(hrow, erow);
+                if l > best_val {
+                    best_val = l;
+                    best = t;
+                }
+            }
+            *o = best as i32;
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -950,5 +1514,193 @@ mod tests {
         forward_hidden(&spec, &units, &big_tokens, 4, 16, &mut reused).unwrap();
         forward_hidden(&spec, &units, &tokens, rows, seq, &mut reused).unwrap();
         assert_eq!(&reused.x[..n * d], &want[..]);
+    }
+
+    // -- bf16 twins: each kernel is pinned BITWISE to the bf16 rounding of
+    // -- its f32 twin run on the widened inputs (accumulation order mirrors
+    // -- the f32 kernel element for element, so the only difference is the
+    // -- single rounding on store).
+
+    fn randb(rng: &mut Rng, n: usize) -> Vec<u16> {
+        use crate::runtime::native::bf16;
+        bf16::cast(&randv(rng, n))
+    }
+
+    #[test]
+    fn bf16_dot_matches_f32_dot_on_widened_operands_bitwise() {
+        use crate::runtime::native::bf16;
+        let mut rng = Rng::new(10);
+        for n in [1usize, 3, 4, 7, 64, 257] {
+            let a = randb(&mut rng, n);
+            let b = randb(&mut rng, n);
+            let got = dot_bf16(&a, &b);
+            let want = dot(&bf16::widen(&a), &bf16::widen(&b));
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn bf16_matmul_is_bitwise_rounding_of_f32_twin() {
+        use crate::runtime::native::bf16;
+        let mut rng = Rng::new(11);
+        for (n, din, dout) in [(1usize, 3usize, 5usize), (7, 16, 9), (13, 65, 130), (64, 64, 256)]
+        {
+            let x = randb(&mut rng, n * din);
+            let w = randb(&mut rng, din * dout);
+            let b = randb(&mut rng, dout);
+            let mut got = vec![0u16; n * dout];
+            let mut acc = vec![0.0f32; n * dout];
+            matmul_bias_into_bf16(&x, &w, &b, &mut got, &mut acc, n, din, dout);
+            let mut f32_out = vec![0.0f32; n * dout];
+            let (xw, ww, bw) = (bf16::widen(&x), bf16::widen(&w), bf16::widen(&b));
+            matmul_bias_into(&xw, &ww, &bw, &mut f32_out, n, din, dout);
+            assert_eq!(got, bf16::cast(&f32_out), "n={n} din={din} dout={dout}");
+        }
+    }
+
+    #[test]
+    fn bf16_layernorm_gelu_add_are_bitwise_roundings_of_f32_twins() {
+        use crate::runtime::native::bf16;
+        let mut rng = Rng::new(12);
+        let (n, d) = (9, 33);
+        let x = randb(&mut rng, n * d);
+        let g = randb(&mut rng, d);
+        let b = randb(&mut rng, d);
+        let mut got = vec![0u16; n * d];
+        layernorm_into_bf16(&x, &g, &b, &mut got, d);
+        let mut f32_out = vec![0.0f32; n * d];
+        layernorm_into(&bf16::widen(&x), &bf16::widen(&g), &bf16::widen(&b), &mut f32_out, d);
+        assert_eq!(got, bf16::cast(&f32_out), "layernorm");
+
+        let mut gb = x.clone();
+        gelu_inplace_bf16(&mut gb);
+        let mut gf = bf16::widen(&x);
+        gelu_inplace(&mut gf);
+        assert_eq!(gb, bf16::cast(&gf), "gelu");
+
+        let m = randb(&mut rng, n * d);
+        let mut hb = x.clone();
+        add_inplace_bf16(&mut hb, &m);
+        let mut hf = bf16::widen(&x);
+        add_inplace(&mut hf, &bf16::widen(&m));
+        assert_eq!(hb, bf16::cast(&hf), "residual add");
+    }
+
+    #[test]
+    fn bf16_attention_ctx_is_bitwise_rounding_of_f32_twin() {
+        use crate::runtime::native::bf16;
+        let mut rng = Rng::new(13);
+        let (rows, seq, d, nh) = (2usize, 8usize, 16usize, 2usize);
+        let q = randb(&mut rng, rows * seq * d);
+        let k = randb(&mut rng, rows * seq * d);
+        let v = randb(&mut rng, rows * seq * d);
+        // plain causal
+        let mut got = vec![0u16; rows * seq * d];
+        attention_ctx_bf16(&q, &k, &v, None, &mut got, d, nh, rows, seq);
+        let mut f32_out = vec![0.0f32; rows * seq * d];
+        let (qw, kw, vw) = (bf16::widen(&q), bf16::widen(&k), bf16::widen(&v));
+        attention_ctx(&qw, &kw, &vw, None, &mut f32_out, d, nh, rows, seq);
+        assert_eq!(got, bf16::cast(&f32_out), "no prefix");
+        // empty prefix degenerates to None
+        let mut got_e = vec![0u16; rows * seq * d];
+        attention_ctx_bf16(&q, &k, &v, Some((&[], &[])), &mut got_e, d, nh, rows, seq);
+        assert_eq!(got, got_e, "empty prefix must equal None");
+        // f32 prefix KV (adapters stay f32 in the bf16 path)
+        let n_pre = crate::peft::PREFIX_TOKENS;
+        let k_pre = randv(&mut rng, n_pre * d);
+        let v_pre = randv(&mut rng, n_pre * d);
+        let mut got_p = vec![0u16; rows * seq * d];
+        attention_ctx_bf16(&q, &k, &v, Some((&k_pre, &v_pre)), &mut got_p, d, nh, rows, seq);
+        let mut f32_p = vec![0.0f32; rows * seq * d];
+        attention_ctx(&qw, &kw, &vw, Some((&k_pre, &v_pre)), &mut f32_p, d, nh, rows, seq);
+        assert_eq!(got_p, bf16::cast(&f32_p), "f32 prefix");
+        assert_ne!(got_p, got, "prefix must change the context");
+    }
+
+    #[test]
+    fn bf16_fused_head_matches_f32_twin_on_widened_inputs() {
+        use crate::runtime::native::bf16;
+        let mut rng = Rng::new(14);
+        let (n, vocab, d) = (10usize, 130usize, 16usize);
+        let hf = randb(&mut rng, n * d);
+        let emb = randb(&mut rng, vocab * d);
+        let targets: Vec<i32> = (0..n).map(|i| (i * 13 % vocab) as i32).collect();
+        let mut mask = vec![1.0f32; n];
+        mask[3] = 0.0;
+        mask[7] = 0.0;
+        let mut got = vec![0.0f32; n];
+        fused_masked_xent_bf16(&hf, &emb, &targets, &mask, n, vocab, d, &mut got);
+        let mut want = vec![0.0f32; n];
+        let (hw, ew) = (bf16::widen(&hf), bf16::widen(&emb));
+        fused_masked_xent(&hw, &ew, &targets, &mask, n, vocab, d, &mut want);
+        // xent output is f32 in both paths; the streams are op-identical
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "xent position {i}");
+        }
+        let mut pb = vec![0i32; n];
+        fused_argmax_bf16(&hf, &emb, n, vocab, d, &mut pb);
+        let mut pf = vec![0i32; n];
+        fused_argmax(&hw, &ew, n, vocab, d, &mut pf);
+        assert_eq!(pb, pf, "argmax");
+    }
+
+    #[test]
+    fn bf16_scaled_acc_zero_w_is_bitwise_noop() {
+        use crate::runtime::native::bf16;
+        let mut rng = Rng::new(15);
+        let (n, din, dout) = (9usize, 8usize, 33usize);
+        let x = randv(&mut rng, n * din);
+        let w = randv(&mut rng, din * dout);
+        let out0 = randb(&mut rng, n * dout);
+        let mut got = out0.clone();
+        matmul_scaled_acc_into_bf16(&x, &w, 2.0, &mut got, n, din, dout);
+        // matches the reference formula, rounded once
+        for r in 0..n {
+            for o in 0..dout {
+                let mut acc = 0.0f32;
+                for i in 0..din {
+                    acc += x[r * din + i] * w[i * dout + o];
+                }
+                let want = bf16::to_bits(bf16::to_f32(out0[r * dout + o]) + 2.0 * acc);
+                assert_eq!(got[r * dout + o], want, "r={r} o={o}");
+            }
+        }
+        // w = 0: a zero-init LoRA B must leave the bf16 projection untouched
+        let zeros = vec![0.0f32; din * dout];
+        let mut same = out0.clone();
+        matmul_scaled_acc_into_bf16(&x, &zeros, 2.0, &mut same, n, din, dout);
+        assert_eq!(same, out0, "zero-w bf16 scaled-acc must be a bitwise no-op");
+    }
+
+    #[test]
+    fn bf16_scratch_reuse_keeps_results_identical() {
+        use crate::runtime::native::bf16;
+        let spec = ModelSpec::preset("opt-nano").unwrap();
+        let host = spec.init_units(5);
+        let shadows: Vec<Vec<u16>> = host.iter().map(|u| bf16::cast(u)).collect();
+        let units: Vec<&[u16]> = shadows.iter().map(|u| u.as_slice()).collect();
+        let (rows, seq) = (2usize, 8usize);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| 20 + (i % 90) as i32).collect();
+        let n = rows * seq;
+        let d = spec.d_model;
+
+        let mut fresh = ForwardScratch::new();
+        forward_hidden_bf16_peft(
+            &spec, &units, PeftMode::Full, &[], &tokens, rows, seq, &mut fresh,
+        )
+        .unwrap();
+        let want = fresh.xb[..n * d].to_vec();
+
+        let mut reused = ForwardScratch::new();
+        let big_tokens: Vec<i32> = (0..4 * 16).map(|i| (i % 100) as i32).collect();
+        forward_hidden_bf16_peft(
+            &spec, &units, PeftMode::Full, &[], &big_tokens, 4, 16, &mut reused,
+        )
+        .unwrap();
+        forward_hidden_bf16_peft(
+            &spec, &units, PeftMode::Full, &[], &tokens, rows, seq, &mut reused,
+        )
+        .unwrap();
+        assert_eq!(&reused.xb[..n * d], &want[..]);
     }
 }

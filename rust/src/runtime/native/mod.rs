@@ -1,6 +1,7 @@
 //! NativeBackend: the pure-Rust CPU implementation of [`Backend`].
 //!
-//! Buffers are host `Vec<f32>`; the ZO kernels regenerate the perturbation
+//! Buffers are host [`NativeBuf`]s — an authoritative f32 master plus an
+//! optional cached bf16 shadow; the ZO kernels regenerate the perturbation
 //! stream with the in-crate Philox port ([`crate::runtime::philox`],
 //! bit-compatible with the Pallas kernel's integer stream); the forward
 //! families run the blocked, thread-parallel kernels in [`kernels`] with a
@@ -20,15 +21,37 @@
 //! - [`kernels`] — in-place ZO sweeps over the multi-lane Philox fill,
 //!   cache-blocked matmuls, (row, head)-parallel attention, the reusable
 //!   [`kernels::ForwardScratch`] arena, and the fused LM head that never
-//!   materializes the `rows*seq*vocab` logits tensor.
-//! - [`forward`] — the forward families plus the dense reference
-//!   (`forward_logits` / `position_xent`) the fused paths are tested
-//!   against.
+//!   materializes the `rows*seq*vocab` logits tensor — each with a bf16
+//!   twin for the reduced-precision path.
+//! - [`bf16`] — software bfloat16 (u16 storage, round-to-nearest-even
+//!   narrowing, exact widening) behind the `precision=bf16` forward path.
+//! - [`forward`] — the forward families (f32 and bf16) plus the dense
+//!   reference (`forward_logits` / `position_xent`) the fused paths are
+//!   tested against.
 //! - [`backward`] — the recording forward + full backward for FO-Adam,
 //!   gradient-checked against `forward_loss` by central finite differences
 //!   (and cross-checked against the Python twin's `jax.value_and_grad`).
+//!
+//! # Precision (`precision = f32 | bf16`, env `LEZO_PRECISION`)
+//!
+//! Under [`Precision::Bf16`] the forward families execute over bf16
+//! *shadows* of the unit buffers — half the *streamed* bytes in every
+//! bandwidth-bound kernel (the regime the ZO literature measures at 13B+
+//! scale); the shadows cost ~0.5x extra resident parameter memory next to
+//! the f32 masters, which is the price of keeping the trainable state
+//! exact. The f32 masters stay
+//! authoritative: every ZO sweep mutates f32 exactly as in f32 mode, so
+//! the Philox regeneration invariant and the perturb/flip/restore bitwise
+//! round-trip are untouched, and the trainable state is bit-identical
+//! between precision modes given identical update coefficients. The
+//! in-place axpy kernels *invalidate* the shadow of the unit they touch (a
+//! flag store); the next forward re-casts stale shadows only — under
+//! LeZO's layer-wise sparsity the per-step re-quantization cost is
+//! proportional to the active layer set, compounding the structural
+//! saving. PEFT adapter units are skinny and stay f32 end to end.
 
 pub mod backward;
+pub mod bf16;
 pub mod forward;
 pub mod kernels;
 pub mod parallel;
@@ -36,16 +59,118 @@ pub mod parallel;
 use crate::data::batch::Batch;
 use crate::model::spec::ModelSpec;
 use crate::peft::PeftMode;
-use crate::runtime::backend::Backend;
+use crate::runtime::backend::{Backend, Precision};
 use anyhow::{ensure, Context, Result};
-use std::cell::RefCell;
+use std::cell::{Ref, RefCell};
 
 /// Seed for the deterministic native initialization (runs start identical
 /// across machines; override with the `checkpoint` config key).
 pub const NATIVE_INIT_SEED: u64 = 0;
 
+/// One native unit buffer: the authoritative f32 master plus an optional
+/// cached bf16 *shadow* used by the `precision=bf16` forward path.
+///
+/// The master is what the ZO sweeps mutate — perturb/flip/restore/update
+/// are f32 bit-for-bit regardless of the forward precision. The shadow is
+/// a lazily (re-)cast bf16 copy: mutation through [`NativeBuf::make_mut`]
+/// only marks it stale, and the next bf16 forward re-casts exactly the
+/// stale units. Reads go through [`std::ops::Deref`] (`&buf[..]` is the
+/// master).
+pub struct NativeBuf {
+    data: Vec<f32>,
+    shadow: RefCell<Option<Bf16Shadow>>,
+}
+
+struct Bf16Shadow {
+    bits: Vec<u16>,
+    fresh: bool,
+}
+
+impl NativeBuf {
+    fn new(data: Vec<f32>) -> NativeBuf {
+        NativeBuf { data, shadow: RefCell::new(None) }
+    }
+
+    /// The f32 master.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable access to the master. Conservatively marks the shadow stale
+    /// (a flag store — the re-cast happens lazily at the next bf16
+    /// forward, and only for units that were actually touched).
+    pub fn make_mut(&mut self) -> &mut [f32] {
+        if let Some(s) = self.shadow.get_mut() {
+            s.fresh = false;
+        }
+        &mut self.data
+    }
+
+    /// Cast (or re-cast) the shadow if it is missing or stale.
+    fn refresh_shadow(&self) {
+        let mut guard = self.shadow.borrow_mut();
+        let sh = guard
+            .get_or_insert_with(|| Bf16Shadow { bits: vec![0; self.data.len()], fresh: false });
+        if sh.bits.len() != self.data.len() {
+            sh.bits.resize(self.data.len(), 0);
+            sh.fresh = false;
+        }
+        if !sh.fresh {
+            bf16::cast_into(&self.data, &mut sh.bits);
+            sh.fresh = true;
+        }
+    }
+
+    /// Borrow the bf16 shadow, refreshing it first if stale.
+    fn shadow(&self) -> Ref<'_, [u16]> {
+        self.refresh_shadow();
+        Ref::map(self.shadow.borrow(), |s| s.as_ref().unwrap().bits.as_slice())
+    }
+
+    /// A copy of the (refreshed) shadow bits — introspection for the
+    /// shadow-invalidation tests.
+    pub fn shadow_bits(&self) -> Vec<u16> {
+        self.shadow().to_vec()
+    }
+
+    /// Whether the cached shadow is fresh w.r.t. the master (i.e. the next
+    /// bf16 forward would *not* re-cast this unit). A missing shadow
+    /// counts as stale.
+    pub fn shadow_is_fresh(&self) -> bool {
+        self.shadow.borrow().as_ref().map_or(false, |s| s.fresh)
+    }
+}
+
+impl From<Vec<f32>> for NativeBuf {
+    fn from(data: Vec<f32>) -> NativeBuf {
+        NativeBuf::new(data)
+    }
+}
+
+impl std::ops::Deref for NativeBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl PartialEq for NativeBuf {
+    fn eq(&self, other: &NativeBuf) -> bool {
+        self.data == other.data
+    }
+}
+
+impl std::fmt::Debug for NativeBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "NativeBuf(len {}, shadow fresh: {})", self.data.len(), self.shadow_is_fresh())
+    }
+}
+
 pub struct NativeBackend {
     spec: ModelSpec,
+    /// Forward-path precision ([`Precision::F32`] default; see the module
+    /// docs for the bf16 shadow lifecycle).
+    precision: Precision,
     /// Optional adopted artifact manifest: runs then start from its
     /// params_init.bin / pretrained.ckpt (same initial state as the PJRT
     /// backend) instead of the synthetic native init — so results don't
@@ -56,8 +181,9 @@ pub struct NativeBackend {
     /// native `pretrain` path — runs start from it, mirroring
     /// `checkpoint::resolve_initial`'s rule for artifact dirs.
     ckpt_dir: Option<std::path::PathBuf>,
-    /// Reusable forward arena: q/k/v/ctx/ffn and the residual stream are
-    /// allocated once and reused across every forward this backend runs.
+    /// Reusable forward arena: q/k/v/ctx/ffn (f32 and bf16 halves) and the
+    /// residual stream are allocated once and reused across every forward
+    /// this backend runs.
     scratch: RefCell<kernels::ForwardScratch>,
 }
 
@@ -66,6 +192,7 @@ impl NativeBackend {
         spec.validate()?;
         Ok(NativeBackend {
             spec,
+            precision: Precision::F32,
             manifest: None,
             ckpt_dir: None,
             scratch: RefCell::new(kernels::ForwardScratch::new()),
@@ -74,6 +201,12 @@ impl NativeBackend {
 
     pub fn preset(name: &str) -> Result<NativeBackend> {
         NativeBackend::new(ModelSpec::preset(name)?)
+    }
+
+    /// Select the forward-path precision (builder style; default f32).
+    pub fn with_precision(mut self, precision: Precision) -> NativeBackend {
+        self.precision = precision;
+        self
     }
 
     /// Adopt exported initial parameters via an already-loaded manifest
@@ -120,37 +253,59 @@ impl NativeBackend {
         Ok(ck.units)
     }
 
-    /// Split the forward-argument prefix into (base units, adapter units):
-    /// `n_units()` model units, then — under PEFT — one adapter unit per
-    /// transformer block, the same order the AOT'd PJRT executables take.
-    /// Per-unit lengths are validated inside the kernels.
-    #[allow(clippy::type_complexity)]
-    fn split_units<'a>(
-        &self,
-        peft: PeftMode,
-        units: &[&'a Vec<f32>],
-    ) -> Result<(Vec<&'a [f32]>, Vec<&'a [f32]>)> {
+    /// Validate the forward-argument count for `peft` and return the base
+    /// unit count: `n_units()` model units, then — under PEFT — one
+    /// adapter unit per transformer block, the same order the AOT'd PJRT
+    /// executables take. Per-unit lengths are validated in the kernels.
+    fn base_unit_count(&self, peft: PeftMode, n_given: usize) -> Result<usize> {
         let n_base = self.spec.n_units();
         let n_adapters = match peft {
             PeftMode::Full => 0,
             _ => self.spec.n_layers,
         };
         ensure!(
-            units.len() == n_base + n_adapters,
+            n_given == n_base + n_adapters,
             "peft={peft}: native forward takes {} units ({n_base} model units + {n_adapters} \
-             adapter units), got {}",
+             adapter units), got {n_given}",
             n_base + n_adapters,
-            units.len()
         );
+        Ok(n_base)
+    }
+
+    /// Split the forward-argument prefix into (base units, adapter units)
+    /// as f32 master slices — the f32 forward path.
+    #[allow(clippy::type_complexity)]
+    fn split_units<'a>(
+        &self,
+        peft: PeftMode,
+        units: &[&'a NativeBuf],
+    ) -> Result<(Vec<&'a [f32]>, Vec<&'a [f32]>)> {
+        let n_base = self.base_unit_count(peft, units.len())?;
         Ok((
-            units[..n_base].iter().map(|u| u.as_slice()).collect(),
-            units[n_base..].iter().map(|u| u.as_slice()).collect(),
+            units[..n_base].iter().map(|u| u.data()).collect(),
+            units[n_base..].iter().map(|u| u.data()).collect(),
+        ))
+    }
+
+    /// bf16 twin of [`NativeBackend::split_units`]: base units as
+    /// (refreshed) bf16 shadow borrows, adapter units as f32 masters —
+    /// the one place the shadow-borrow protocol of a forward call lives.
+    #[allow(clippy::type_complexity)]
+    fn split_units_bf16<'a>(
+        &self,
+        peft: PeftMode,
+        units: &[&'a NativeBuf],
+    ) -> Result<(Vec<Ref<'a, [u16]>>, Vec<&'a [f32]>)> {
+        let n_base = self.base_unit_count(peft, units.len())?;
+        Ok((
+            units[..n_base].iter().map(|u| u.shadow()).collect(),
+            units[n_base..].iter().map(|u| u.data()).collect(),
         ))
     }
 }
 
 impl Backend for NativeBackend {
-    type Buffer = Vec<f32>;
+    type Buffer = NativeBuf;
     type PreparedBatch = Batch;
 
     fn name(&self) -> &'static str {
@@ -161,39 +316,39 @@ impl Backend for NativeBackend {
         &self.spec
     }
 
-    fn upload(&self, data: &[f32]) -> Result<Vec<f32>> {
-        Ok(data.to_vec())
+    fn upload(&self, data: &[f32]) -> Result<NativeBuf> {
+        Ok(NativeBuf::from(data.to_vec()))
     }
 
-    fn download(&self, buf: &Vec<f32>) -> Result<Vec<f32>> {
-        Ok(buf.clone())
+    fn download(&self, buf: &NativeBuf) -> Result<Vec<f32>> {
+        Ok(buf.data().to_vec())
     }
 
-    fn zo_axpy(&self, unit: &Vec<f32>, len: usize, seed: i32, coeff: f32) -> Result<Vec<f32>> {
+    fn zo_axpy(&self, unit: &NativeBuf, len: usize, seed: i32, coeff: f32) -> Result<NativeBuf> {
         ensure!(unit.len() == len, "zo_axpy: unit has {} elements, expected {len}", unit.len());
-        let mut out = unit.clone();
+        let mut out = unit.data().to_vec();
         kernels::axpy_gauss_inplace(&mut out, seed as u32, coeff);
-        Ok(out)
+        Ok(NativeBuf::from(out))
     }
 
     fn zo_axpy_masked(
         &self,
-        unit: &Vec<f32>,
-        pref: &Vec<f32>,
+        unit: &NativeBuf,
+        pref: &NativeBuf,
         tau: f32,
         len: usize,
         seed: i32,
         coeff: f32,
-    ) -> Result<Vec<f32>> {
+    ) -> Result<NativeBuf> {
         ensure!(unit.len() == len && pref.len() == len, "zo_axpy_masked: shape mismatch");
-        let mut out = unit.clone();
-        kernels::axpy_gauss_masked_inplace(&mut out, pref, tau, seed as u32, coeff);
-        Ok(out)
+        let mut out = unit.data().to_vec();
+        kernels::axpy_gauss_masked_inplace(&mut out, pref.data(), tau, seed as u32, coeff);
+        Ok(NativeBuf::from(out))
     }
 
     fn zo_axpy_inplace(
         &self,
-        unit: &mut Vec<f32>,
+        unit: &mut NativeBuf,
         len: usize,
         seed: i32,
         coeff: f32,
@@ -203,14 +358,16 @@ impl Backend for NativeBackend {
             "zo_axpy_inplace: unit has {} elements, expected {len}",
             unit.len()
         );
-        kernels::axpy_gauss_inplace(unit, seed as u32, coeff);
+        // make_mut marks this unit's bf16 shadow stale — the only shadows
+        // re-cast later are the units a sweep actually touched
+        kernels::axpy_gauss_inplace(unit.make_mut(), seed as u32, coeff);
         Ok(())
     }
 
     fn zo_axpy_masked_inplace(
         &self,
-        unit: &mut Vec<f32>,
-        pref: &Vec<f32>,
+        unit: &mut NativeBuf,
+        pref: &NativeBuf,
         tau: f32,
         len: usize,
         seed: i32,
@@ -220,7 +377,7 @@ impl Backend for NativeBackend {
             unit.len() == len && pref.len() == len,
             "zo_axpy_masked_inplace: shape mismatch"
         );
-        kernels::axpy_gauss_masked_inplace(unit, pref, tau, seed as u32, coeff);
+        kernels::axpy_gauss_masked_inplace(unit.make_mut(), pref.data(), tau, seed as u32, coeff);
         Ok(())
     }
 
@@ -228,60 +385,113 @@ impl Backend for NativeBackend {
         Ok(batch.clone())
     }
 
-    fn forward_loss(
-        &self,
-        peft: PeftMode,
-        units: &[&Vec<f32>],
-        batch: &Batch,
-    ) -> Result<f32> {
-        let (base, adapters) = self.split_units(peft, units)?;
-        forward::mean_loss_peft(
-            &self.spec,
-            &base,
-            peft,
-            &adapters,
-            &batch.tokens,
-            &batch.targets,
-            &batch.mask,
-            batch.rows,
-            batch.seq,
-            &mut self.scratch.borrow_mut(),
-        )
+    fn forward_loss(&self, peft: PeftMode, units: &[&NativeBuf], batch: &Batch) -> Result<f32> {
+        match self.precision {
+            Precision::F32 => {
+                let (base, adapters) = self.split_units(peft, units)?;
+                forward::mean_loss_peft(
+                    &self.spec,
+                    &base,
+                    peft,
+                    &adapters,
+                    &batch.tokens,
+                    &batch.targets,
+                    &batch.mask,
+                    batch.rows,
+                    batch.seq,
+                    &mut self.scratch.borrow_mut(),
+                )
+            }
+            Precision::Bf16 => {
+                let (shadows, adapters) = self.split_units_bf16(peft, units)?;
+                let base: Vec<&[u16]> = shadows.iter().map(|g| &**g).collect();
+                forward::mean_loss_bf16_peft(
+                    &self.spec,
+                    &base,
+                    peft,
+                    &adapters,
+                    &batch.tokens,
+                    &batch.targets,
+                    &batch.mask,
+                    batch.rows,
+                    batch.seq,
+                    &mut self.scratch.borrow_mut(),
+                )
+            }
+        }
     }
 
     fn example_losses(
         &self,
         peft: PeftMode,
-        units: &[&Vec<f32>],
+        units: &[&NativeBuf],
         batch: &Batch,
     ) -> Result<Vec<f32>> {
-        let (base, adapters) = self.split_units(peft, units)?;
-        forward::example_losses_peft(
-            &self.spec,
-            &base,
-            peft,
-            &adapters,
-            &batch.tokens,
-            &batch.targets,
-            &batch.mask,
-            batch.rows,
-            batch.seq,
-            &mut self.scratch.borrow_mut(),
-        )
+        match self.precision {
+            Precision::F32 => {
+                let (base, adapters) = self.split_units(peft, units)?;
+                forward::example_losses_peft(
+                    &self.spec,
+                    &base,
+                    peft,
+                    &adapters,
+                    &batch.tokens,
+                    &batch.targets,
+                    &batch.mask,
+                    batch.rows,
+                    batch.seq,
+                    &mut self.scratch.borrow_mut(),
+                )
+            }
+            Precision::Bf16 => {
+                let (shadows, adapters) = self.split_units_bf16(peft, units)?;
+                let base: Vec<&[u16]> = shadows.iter().map(|g| &**g).collect();
+                forward::example_losses_bf16_peft(
+                    &self.spec,
+                    &base,
+                    peft,
+                    &adapters,
+                    &batch.tokens,
+                    &batch.targets,
+                    &batch.mask,
+                    batch.rows,
+                    batch.seq,
+                    &mut self.scratch.borrow_mut(),
+                )
+            }
+        }
     }
 
-    fn predict(&self, peft: PeftMode, units: &[&Vec<f32>], batch: &Batch) -> Result<Vec<i32>> {
-        let (base, adapters) = self.split_units(peft, units)?;
-        forward::predict_peft(
-            &self.spec,
-            &base,
-            peft,
-            &adapters,
-            &batch.tokens,
-            batch.rows,
-            batch.seq,
-            &mut self.scratch.borrow_mut(),
-        )
+    fn predict(&self, peft: PeftMode, units: &[&NativeBuf], batch: &Batch) -> Result<Vec<i32>> {
+        match self.precision {
+            Precision::F32 => {
+                let (base, adapters) = self.split_units(peft, units)?;
+                forward::predict_peft(
+                    &self.spec,
+                    &base,
+                    peft,
+                    &adapters,
+                    &batch.tokens,
+                    batch.rows,
+                    batch.seq,
+                    &mut self.scratch.borrow_mut(),
+                )
+            }
+            Precision::Bf16 => {
+                let (shadows, adapters) = self.split_units_bf16(peft, units)?;
+                let base: Vec<&[u16]> = shadows.iter().map(|g| &**g).collect();
+                forward::predict_bf16_peft(
+                    &self.spec,
+                    &base,
+                    peft,
+                    &adapters,
+                    &batch.tokens,
+                    batch.rows,
+                    batch.seq,
+                    &mut self.scratch.borrow_mut(),
+                )
+            }
+        }
     }
 
     fn initial_params(&self, explicit_checkpoint: &str) -> Result<(Vec<Vec<f32>>, String)> {
@@ -305,6 +515,8 @@ impl Backend for NativeBackend {
     }
 
     /// First-order substrate: the reference backward pass in [`backward`].
+    /// Always f32 — gradients feed the f32 Adam state; `precision` only
+    /// affects the (forward-only) ZO objective and evaluation.
     fn forward_backward(
         &self,
         host_units: &[Vec<f32>],
@@ -331,6 +543,15 @@ impl Backend for NativeBackend {
     fn supports_fo(&self) -> bool {
         true
     }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Both precisions run natively (f32 kernels and their bf16 twins).
+    fn supports_precision(&self, _precision: Precision) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]
@@ -341,11 +562,15 @@ mod tests {
         NativeBackend::preset("opt-nano").unwrap()
     }
 
+    fn bf16_backend() -> NativeBackend {
+        NativeBackend::preset("opt-nano").unwrap().with_precision(Precision::Bf16)
+    }
+
     #[test]
     fn axpy_is_deterministic_and_standard_normal() {
         let b = backend();
         let n = 4096;
-        let p = vec![0.0f32; n];
+        let p = b.upload(&vec![0.0f32; n]).unwrap();
         let za = b.zo_axpy(&p, n, 42, 1.0).unwrap();
         let zb = b.zo_axpy(&p, n, 42, 1.0).unwrap();
         assert_eq!(za, zb, "same seed must regenerate the same z");
@@ -359,15 +584,17 @@ mod tests {
     fn inplace_axpy_is_bitwise_equal_to_allocating_axpy() {
         let b = backend();
         let n = 5000;
-        let p: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        let host: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        let p = b.upload(&host).unwrap();
         let alloc = b.zo_axpy(&p, n, 13, 2.5e-3).unwrap();
-        let mut inplace = p.clone();
+        let mut inplace = b.upload(&host).unwrap();
         b.zo_axpy_inplace(&mut inplace, n, 13, 2.5e-3).unwrap();
         assert_eq!(alloc, inplace);
 
-        let pref: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.07).cos()).collect();
+        let pref_host: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.07).cos()).collect();
+        let pref = b.upload(&pref_host).unwrap();
         let alloc_m = b.zo_axpy_masked(&p, &pref, 0.5, n, 13, 2.5e-3).unwrap();
-        let mut inplace_m = p.clone();
+        let mut inplace_m = b.upload(&host).unwrap();
         b.zo_axpy_masked_inplace(&mut inplace_m, &pref, 0.5, n, 13, 2.5e-3).unwrap();
         assert_eq!(alloc_m, inplace_m);
     }
@@ -378,7 +605,8 @@ mod tests {
         let n = 1000;
         let orig: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
         let mu = 1e-3f32;
-        let p1 = b.zo_axpy(&orig, n, 7, mu).unwrap();
+        let p0 = b.upload(&orig).unwrap();
+        let p1 = b.zo_axpy(&p0, n, 7, mu).unwrap();
         let p2 = b.zo_axpy(&p1, n, 7, -2.0 * mu).unwrap();
         let p3 = b.zo_axpy(&p2, n, 7, mu).unwrap();
         for (a, o) in p3.iter().zip(&orig) {
@@ -389,8 +617,8 @@ mod tests {
     #[test]
     fn masked_axpy_touches_only_small_magnitudes() {
         let b = backend();
-        let pref = vec![0.0f32, 10.0, 0.1, 5.0];
-        let p = vec![1.0f32; 4];
+        let pref = b.upload(&[0.0f32, 10.0, 0.1, 5.0]).unwrap();
+        let p = b.upload(&[1.0f32; 4]).unwrap();
         let out = b.zo_axpy_masked(&p, &pref, 0.5, 4, 3, 1.0).unwrap();
         assert_ne!(out[0], 1.0, "|0.0| <= tau must be perturbed");
         assert_eq!(out[1], 1.0, "|10| > tau must be untouched");
@@ -401,22 +629,28 @@ mod tests {
     #[test]
     fn masked_matches_dense_at_infinite_tau() {
         let b = backend();
-        let p: Vec<f32> = (0..256).map(|i| i as f32 * 0.1).collect();
+        let host: Vec<f32> = (0..256).map(|i| i as f32 * 0.1).collect();
+        let p = b.upload(&host).unwrap();
         let dense = b.zo_axpy(&p, 256, 11, 0.5).unwrap();
         let masked = b.zo_axpy_masked(&p, &p, f32::INFINITY, 256, 11, 0.5).unwrap();
         assert_eq!(dense, masked);
+    }
+
+    fn lm_prepared(b: &NativeBackend, seq: usize) -> Batch {
+        let seqs: Vec<Vec<u32>> = (0..b.spec().train_batch)
+            .map(|r| (0..12u32).map(|i| 20 + ((r as u32 + i) % 50)).collect())
+            .collect();
+        let batch = Batch::lm_batch(&seqs, b.spec().train_batch, seq).unwrap();
+        b.prepare_batch(&batch).unwrap()
     }
 
     #[test]
     fn forward_loss_runs_without_artifacts() {
         let b = backend();
         let host = b.initial_params("").unwrap().0;
-        let units: Vec<&Vec<f32>> = host.iter().collect();
-        let seqs: Vec<Vec<u32>> = (0..b.spec().train_batch)
-            .map(|r| (0..12u32).map(|i| 20 + ((r as u32 + i) % 50)).collect())
-            .collect();
-        let batch = Batch::lm_batch(&seqs, b.spec().train_batch, 16).unwrap();
-        let prepared = b.prepare_batch(&batch).unwrap();
+        let bufs: Vec<NativeBuf> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+        let units: Vec<&NativeBuf> = bufs.iter().collect();
+        let prepared = lm_prepared(&b, 16);
         let loss = b.forward_loss(PeftMode::Full, &units, &prepared).unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         let per = b.example_losses(PeftMode::Full, &units, &prepared).unwrap();
@@ -426,10 +660,88 @@ mod tests {
     }
 
     #[test]
+    fn bf16_forward_families_run_and_track_f32() {
+        // dispatch sanity for all three bf16 families + the calibrated loss
+        // tolerance at the backend level (the kernel/forward suites pin the
+        // numerics in detail; observed rel err ~1e-4, asserted 1e-2)
+        let f = backend();
+        let b = bf16_backend();
+        assert_eq!(b.precision(), Precision::Bf16);
+        let host = b.initial_params("").unwrap().0;
+        let bufs: Vec<NativeBuf> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+        let units: Vec<&NativeBuf> = bufs.iter().collect();
+        let prepared = lm_prepared(&b, 16);
+        let loss_b = b.forward_loss(PeftMode::Full, &units, &prepared).unwrap();
+        let loss_f = f.forward_loss(PeftMode::Full, &units, &prepared).unwrap();
+        let rel = (loss_b - loss_f).abs() / loss_f.abs().max(1e-6);
+        assert!(rel <= 1e-2, "bf16 {loss_b} vs f32 {loss_f} (rel {rel})");
+        let per = b.example_losses(PeftMode::Full, &units, &prepared).unwrap();
+        assert_eq!(per.len(), b.spec().train_batch);
+        assert!(per.iter().all(|l| l.is_finite()));
+        let preds = b.predict(PeftMode::Full, &units, &prepared).unwrap();
+        assert_eq!(preds.len(), b.spec().train_batch * 16);
+    }
+
+    #[test]
+    fn bf16_shadow_invalidation_tracks_touched_units_only() {
+        let b = bf16_backend();
+        let host = b.initial_params("").unwrap().0;
+        let mut bufs: Vec<NativeBuf> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+        // a forward materializes every base unit's shadow
+        let prepared = lm_prepared(&b, 16);
+        let units: Vec<&NativeBuf> = bufs.iter().collect();
+        b.forward_loss(PeftMode::Full, &units, &prepared).unwrap();
+        assert!(bufs.iter().all(|u| u.shadow_is_fresh()), "forward must cast all shadows");
+        let before: Vec<Vec<u16>> = bufs.iter().map(|u| u.shadow_bits()).collect();
+
+        // touch only unit 1 (in-place sweep): its shadow goes stale, every
+        // other unit's shadow must stay bit-unchanged without a re-cast
+        let len = bufs[1].len();
+        b.zo_axpy_inplace(&mut bufs[1], len, 9, 1e-2).unwrap();
+        assert!(!bufs[1].shadow_is_fresh(), "touched unit must be invalidated");
+        for (k, u) in bufs.iter().enumerate() {
+            if k != 1 {
+                assert!(u.shadow_is_fresh(), "unit {k} must stay fresh");
+            }
+        }
+        // the refreshed shadow equals a fresh full re-cast of the master
+        let recast = bufs[1].shadow_bits();
+        assert_eq!(recast, crate::runtime::native::bf16::cast(bufs[1].data()));
+        assert_ne!(recast, before[1], "perturbation must change the shadow");
+        for (k, u) in bufs.iter().enumerate() {
+            if k != 1 {
+                assert_eq!(u.shadow_bits(), before[k], "unit {k} shadow must be bit-unchanged");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_shadow_invalidation_after_masked_axpy() {
+        let b = bf16_backend();
+        let host = b.initial_params("").unwrap().0;
+        let mut bufs: Vec<NativeBuf> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+        for u in &bufs {
+            u.shadow_bits(); // materialize
+        }
+        let before: Vec<Vec<u16>> = bufs.iter().map(|u| u.shadow_bits()).collect();
+        let len = bufs[2].len();
+        let pref = b.upload(bufs[2].data()).unwrap();
+        b.zo_axpy_masked_inplace(&mut bufs[2], &pref, f32::INFINITY, len, 5, 0.5).unwrap();
+        // touched: equals a fresh full re-cast; untouched: bit-unchanged
+        assert_eq!(bufs[2].shadow_bits(), crate::runtime::native::bf16::cast(bufs[2].data()));
+        for (k, u) in bufs.iter().enumerate() {
+            if k != 2 {
+                assert_eq!(u.shadow_bits(), before[k], "unit {k}");
+            }
+        }
+    }
+
+    #[test]
     fn peft_runs_natively_and_fo_is_supported() {
         let b = backend();
         let host = b.initial_params("").unwrap().0;
-        let units: Vec<&Vec<f32>> = host.iter().collect();
+        let bufs: Vec<NativeBuf> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+        let units: Vec<&NativeBuf> = bufs.iter().collect();
         let batch = Batch::lm_batch(&[vec![1, 2, 3]], 1, 16).unwrap();
         let prepared = b.prepare_batch(&batch).unwrap();
         // every PEFT mode is native now; base units alone are a shape error
@@ -440,8 +752,10 @@ mod tests {
             let spec = b.spec();
             let adapters =
                 crate::peft::init_peft_units(mode, spec.n_layers, spec.d_model, 0);
+            let adapter_bufs: Vec<NativeBuf> =
+                adapters.iter().map(|u| b.upload(u).unwrap()).collect();
             let mut args = units.clone();
-            args.extend(adapters.iter());
+            args.extend(adapter_bufs.iter());
             let loss = b.forward_loss(mode, &args, &prepared).unwrap();
             assert!(loss.is_finite() && loss > 0.0, "{mode}");
             let per = b.example_losses(mode, &args, &prepared).unwrap();
@@ -464,6 +778,38 @@ mod tests {
         }
         // mismatched host units are still a shape error
         assert!(b.forward_backward(&host[..2], &batch).is_err());
+    }
+
+    #[test]
+    fn bf16_peft_forward_runs_with_f32_adapters() {
+        let b = bf16_backend();
+        let host = b.initial_params("").unwrap().0;
+        let bufs: Vec<NativeBuf> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+        let batch = Batch::lm_batch(&[vec![1, 2, 3]], 1, 16).unwrap();
+        let prepared = b.prepare_batch(&batch).unwrap();
+        for mode in [PeftMode::Lora, PeftMode::Prefix] {
+            let spec = b.spec();
+            let adapters = crate::peft::init_peft_units_nonzero_b(
+                mode,
+                spec.n_layers,
+                spec.d_model,
+                3,
+            );
+            let adapter_bufs: Vec<NativeBuf> =
+                adapters.iter().map(|u| b.upload(u).unwrap()).collect();
+            let mut args: Vec<&NativeBuf> = bufs.iter().collect();
+            args.extend(adapter_bufs.iter());
+            let loss = b.forward_loss(mode, &args, &prepared).unwrap();
+            assert!(loss.is_finite() && loss > 0.0, "{mode}");
+        }
+    }
+
+    #[test]
+    fn precision_capability_and_default() {
+        let b = backend();
+        assert_eq!(b.precision(), Precision::F32);
+        assert!(b.supports_precision(Precision::F32));
+        assert!(b.supports_precision(Precision::Bf16));
     }
 
     #[test]

@@ -62,13 +62,40 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+/// Parse a `LEZO_THREADS` value: empty/unset means "no override", anything
+/// else must be a positive integer — an unparseable or zero value is a hard
+/// error naming the bad value, never a silent fall-through to the default.
+fn parse_env_threads(v: &str) -> Result<Option<usize>, String> {
+    if v.is_empty() {
+        return Ok(None);
+    }
+    match v.parse::<usize>() {
+        Ok(n) if n > 0 => Ok(Some(n)),
+        _ => Err(format!(
+            "LEZO_THREADS='{v}' is not a positive worker-thread count (unset it for auto)"
+        )),
+    }
+}
+
 /// `LEZO_THREADS`, parsed once per process (region entry is on the hot
-/// path; an env read takes a lock and allocates).
+/// path; an env read takes a lock and allocates). A bad value panics here
+/// as a backstop; [`check_env`] surfaces the same error cleanly up front.
 fn env_threads() -> Option<usize> {
-    static ENV: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
-    *ENV.get_or_init(|| {
-        std::env::var("LEZO_THREADS").ok().and_then(|v| v.parse().ok()).filter(|&n| n > 0)
-    })
+    static ENV: std::sync::OnceLock<Result<Option<usize>, String>> = std::sync::OnceLock::new();
+    match ENV.get_or_init(|| parse_env_threads(&std::env::var("LEZO_THREADS").unwrap_or_default()))
+    {
+        Ok(n) => *n,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Validate `LEZO_THREADS` as a `Result` so entry points (trainer, bench
+/// harness) can report a bad value as a normal CLI error instead of the
+/// kernel-entry panic backstop.
+pub fn check_env() -> anyhow::Result<()> {
+    parse_env_threads(&std::env::var("LEZO_THREADS").unwrap_or_default())
+        .map(|_| ())
+        .map_err(anyhow::Error::msg)
 }
 
 /// The worker-thread count a parallel region entered from this thread
@@ -149,10 +176,11 @@ impl<T> SendPtr<T> {
 }
 
 /// Parallel loop over disjoint row-chunks of a row-major `out` buffer
-/// (`width` elements per row): `f(first_row, rows_slice)`.
-pub fn par_row_chunks<F>(out: &mut [f32], width: usize, grain_rows: usize, f: F)
+/// (`width` elements per row): `f(first_row, rows_slice)`. Generic over the
+/// element type so the f32 kernels and their bf16 twins share one chunker.
+pub fn par_row_chunks<T: Send, F>(out: &mut [T], width: usize, grain_rows: usize, f: F)
 where
-    F: Fn(usize, &mut [f32]) + Sync,
+    F: Fn(usize, &mut [T]) + Sync,
 {
     debug_assert!(width > 0 && out.len() % width == 0);
     let n_rows = out.len() / width;
@@ -218,6 +246,21 @@ mod tests {
     #[test]
     fn effective_threads_is_positive() {
         assert!(effective_threads() >= 1);
+    }
+
+    #[test]
+    fn env_threads_parse_is_strict() {
+        // unset / empty: no override
+        assert_eq!(parse_env_threads(""), Ok(None));
+        // positive integers are accepted
+        assert_eq!(parse_env_threads("1"), Ok(Some(1)));
+        assert_eq!(parse_env_threads("16"), Ok(Some(16)));
+        // unparseable or zero values are hard errors naming the bad value
+        for bad in ["abc", "0", "-3", "1.5", " 4"] {
+            let err = parse_env_threads(bad).unwrap_err();
+            assert!(err.contains(bad), "'{bad}': {err}");
+            assert!(err.contains("LEZO_THREADS"), "'{bad}': {err}");
+        }
     }
 
     #[test]

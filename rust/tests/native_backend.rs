@@ -21,7 +21,7 @@ use lezo::coordinator::{trainer, Trainer};
 use lezo::data::batch::Batch;
 use lezo::peft::PeftMode;
 use lezo::runtime::backend::{Backend, BackendKind};
-use lezo::runtime::NativeBackend;
+use lezo::runtime::{NativeBackend, NativeBuf, Precision};
 
 fn nano_cfg() -> RunConfig {
     let mut cfg = RunConfig::default();
@@ -182,6 +182,214 @@ fn e2e_identical_run_seed_identical_step_trajectory() {
 }
 
 // ---------------------------------------------------------------------------
+// Reduced precision (precision=bf16): the forward runs over bf16 shadows,
+// the f32 masters stay the only trainable state
+// ---------------------------------------------------------------------------
+
+fn bf16_backend() -> NativeBackend {
+    NativeBackend::preset("opt-nano").unwrap().with_precision(Precision::Bf16)
+}
+
+#[test]
+fn e2e_convergence_zo_overfits_a_fixed_batch_in_bf16() {
+    // Same protocol as the f32 convergence smoke above, with the loss
+    // probes executed by the bf16 forward. Calibrated against the
+    // numpy/ml_dtypes twin of the identical bf16 rounding schedule: at
+    // run_seed 7 the fixed-batch loss drops 0.137 nats over 30 steps
+    // (0.035..0.17 across 5 seeds), so the asserted 0.04 margin has >3x
+    // headroom at this seed.
+    let backend = bf16_backend();
+    let host = backend.initial_params("").unwrap().0;
+    let mut units = TunableUnits::from_host(&backend, &host).unwrap();
+    let engine = SpsaEngine::new(&backend, 1e-3, 7).unwrap();
+    let active: Vec<usize> = (0..units.n_units()).collect();
+    let batch = fixed_batch(4, 16);
+    let prepared = backend.prepare_batch(&batch).unwrap();
+    let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+        backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+    };
+    let mut times = StageTimes::default();
+    let mut losses = Vec::new();
+    for step in 0..30u64 {
+        let zs = engine
+            .zo_step(step, &mut units, &active, 1e-2, &mut loss_fn, &mut times)
+            .unwrap();
+        assert!(zs.loss().is_finite(), "step {step}: bf16 loss diverged");
+        losses.push(zs.loss());
+    }
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first - 0.04,
+        "bf16 ZO must overfit the fixed batch: first-5 mean {first:.4}, last-5 mean {last:.4}"
+    );
+}
+
+#[test]
+fn e2e_bf16_masters_bit_identical_to_f32_mode_under_identical_coefficients() {
+    // The sweeps mutate the f32 masters through the identical kernels in
+    // both precision modes; only the loss *values* (and hence the update
+    // coefficient) can differ. Scripting the loss pins the coefficients,
+    // so three full perturb/forward/flip/forward/restore/update steps must
+    // leave the masters bit-identical across modes.
+    let mut finals = Vec::new();
+    for precision in [Precision::F32, Precision::Bf16] {
+        let backend =
+            NativeBackend::preset("opt-nano").unwrap().with_precision(precision);
+        let host = backend.initial_params("").unwrap().0;
+        let mut units = TunableUnits::from_host(&backend, &host).unwrap();
+        let engine = SpsaEngine::new(&backend, 1e-3, 11).unwrap();
+        let active: Vec<usize> = (0..units.n_units()).collect();
+        let mut times = StageTimes::default();
+        let mut calls = 0u32;
+        // alternating constants: projected grad 0.25/(2 mu) != 0, so the
+        // update sweep really moves the masters
+        let mut loss_fn = |_: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+            calls += 1;
+            Ok(if calls % 2 == 1 { 1.0 } else { 0.75 })
+        };
+        for step in 0..3u64 {
+            engine.zo_step(step, &mut units, &active, 1e-3, &mut loss_fn, &mut times).unwrap();
+        }
+        finals.push(units.to_host(&backend).unwrap());
+    }
+    for (k, (a, b)) in finals[0].iter().zip(&finals[1]).enumerate() {
+        assert!(
+            a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "unit {k}: masters must be bit-identical across precision modes"
+        );
+    }
+}
+
+#[test]
+fn e2e_bf16_perturb_flip_restore_round_trips_like_f32_mode() {
+    // lr = 0 with the real bf16 forward: the step is perturb -> flip ->
+    // restore over the f32 masters. The masters must land bit-identical
+    // to the f32-mode run of the same step (the update coefficient is
+    // -0.0 * g in both modes — an exact no-op on the restored masters).
+    let mut finals = Vec::new();
+    for precision in [Precision::F32, Precision::Bf16] {
+        let backend =
+            NativeBackend::preset("opt-nano").unwrap().with_precision(precision);
+        let host = backend.initial_params("").unwrap().0;
+        let mut units = TunableUnits::from_host(&backend, &host).unwrap();
+        let engine = SpsaEngine::new(&backend, 1e-3, 3).unwrap();
+        let active: Vec<usize> = (0..units.n_units()).collect();
+        let batch = fixed_batch(2, 16);
+        let prepared = backend.prepare_batch(&batch).unwrap();
+        let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+            backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+        };
+        let mut times = StageTimes::default();
+        for step in 0..2u64 {
+            engine.zo_step(step, &mut units, &active, 0.0, &mut loss_fn, &mut times).unwrap();
+        }
+        // restore drift vs the initial state stays within fp tolerance
+        let after = units.to_host(&backend).unwrap();
+        for (k, (a, o)) in after.iter().zip(&host).enumerate() {
+            for (x, y) in a.iter().zip(o) {
+                assert!((x - y).abs() < 1e-5, "{precision:?} unit {k}: {x} vs {y}");
+            }
+        }
+        finals.push(after);
+    }
+    for (k, (a, b)) in finals[0].iter().zip(&finals[1]).enumerate() {
+        assert!(
+            a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "unit {k}: lr=0 masters must match f32 mode bit for bit"
+        );
+    }
+}
+
+#[test]
+fn e2e_bf16_thread_count_invariance_bit_identical_runs() {
+    // The bf16 kernels inherit the fixed-chunk determinism rule: a 5-step
+    // bf16 training run must be bit-identical at any worker-thread count.
+    use lezo::runtime::native::parallel;
+    if std::env::var("LEZO_THREADS").map(|s| !s.is_empty()).unwrap_or(false) {
+        eprintln!(
+            "SKIPPED e2e_bf16_thread_count_invariance_bit_identical_runs: LEZO_THREADS wins"
+        );
+        return;
+    }
+    let mut runs = Vec::new();
+    for threads in [1usize, 8] {
+        let run = parallel::with_threads(threads, || {
+            let backend = bf16_backend();
+            let host = backend.initial_params("").unwrap().0;
+            let mut units = TunableUnits::from_host(&backend, &host).unwrap();
+            let engine = SpsaEngine::new(&backend, 1e-3, 21).unwrap();
+            let active: Vec<usize> = (0..units.n_units()).collect();
+            let batch = fixed_batch(4, 16);
+            let prepared = backend.prepare_batch(&batch).unwrap();
+            let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+                backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+            };
+            let mut times = StageTimes::default();
+            let mut losses = Vec::new();
+            for step in 0..5u64 {
+                losses.push(
+                    engine
+                        .zo_step(step, &mut units, &active, 1e-3, &mut loss_fn, &mut times)
+                        .unwrap()
+                        .loss(),
+                );
+            }
+            (losses, units.to_host(&backend).unwrap())
+        });
+        runs.push(run);
+    }
+    assert_eq!(runs[0].0, runs[1].0, "bf16 losses must be bit-identical across thread counts");
+    assert_eq!(runs[0].1, runs[1].1, "params must be bit-identical across thread counts");
+}
+
+#[test]
+fn e2e_bf16_sparse_step_recasts_only_active_units() {
+    // The LeZO + bf16 composition the PR is about: a sparse step leaves
+    // dropped units' shadows fresh (no re-quantization traffic), and the
+    // next forward re-casts exactly the touched ones.
+    let backend = bf16_backend();
+    let host = backend.initial_params("").unwrap().0;
+    let mut units = TunableUnits::from_host(&backend, &host).unwrap();
+    let engine = SpsaEngine::new(&backend, 1e-3, 9).unwrap();
+    let batch = fixed_batch(2, 16);
+    let prepared = backend.prepare_batch(&batch).unwrap();
+    // materialize all shadows with one forward
+    let refs = units.unit_refs();
+    backend.forward_loss(PeftMode::Full, &refs, &prepared).unwrap();
+    let dropped = 2usize; // a block unit LeZO skips this step
+    let shadow_before = units.bufs[dropped].shadow_bits();
+    let active: Vec<usize> = (0..units.n_units()).filter(|&k| k != dropped).collect();
+    let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+        backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+    };
+    let mut times = StageTimes::default();
+    engine.zo_step(0, &mut units, &active, 1e-3, &mut loss_fn, &mut times).unwrap();
+    assert!(
+        units.bufs[dropped].shadow_is_fresh(),
+        "dropped unit's shadow must stay fresh through the whole step"
+    );
+    assert_eq!(
+        units.bufs[dropped].shadow_bits(),
+        shadow_before,
+        "dropped unit's shadow must be bit-unchanged"
+    );
+    for &k in &active {
+        // the restore + update sweeps ran after the last forward, so the
+        // active shadows must be stale (invalidation really tracked them)
+        assert!(
+            !units.bufs[k].shadow_is_fresh(),
+            "active unit {k}'s shadow must be stale after restore/update"
+        );
+        assert_eq!(
+            units.bufs[k].shadow_bits(),
+            lezo::runtime::native::bf16::cast(units.bufs[k].data()),
+            "active unit {k}'s refreshed shadow must equal a fresh full re-cast"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
 // PEFT (native adapter forwards — the paper's Table 4, hermetic since they
 // landed; before that `peft=lora|prefix` was a hard "use pjrt" error)
 // ---------------------------------------------------------------------------
@@ -220,14 +428,14 @@ fn run_peft_zo(
     lr: f32,
     mu: f32,
 ) -> Vec<f32> {
-    let base_bufs: Vec<Vec<f32>> =
+    let base_bufs: Vec<NativeBuf> =
         base.iter().map(|u| backend.upload(u).unwrap()).collect();
     let mut units = TunableUnits::from_host(backend, peft_host).unwrap();
     let engine = SpsaEngine::new(backend, mu, 7).unwrap();
     let active: Vec<usize> = (0..units.n_units()).collect();
     let prepared = backend.prepare_batch(batch).unwrap();
     let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
-        let mut args: Vec<&Vec<f32>> = base_bufs.iter().collect();
+        let mut args: Vec<&NativeBuf> = base_bufs.iter().collect();
         args.extend(u.bufs.iter());
         backend.forward_loss(mode, &args, &prepared)
     };
@@ -296,7 +504,7 @@ fn e2e_peft_round_trip_restores_adapters_and_never_touches_base() {
         let backend = NativeBackend::preset("opt-nano").unwrap();
         let spec = backend.spec().clone();
         let base_host = backend.initial_params("").unwrap().0;
-        let base_bufs: Vec<Vec<f32>> =
+        let base_bufs: Vec<NativeBuf> =
             base_host.iter().map(|u| backend.upload(u).unwrap()).collect();
         let peft_host = lezo::peft::init_peft_units(mode, spec.n_layers, spec.d_model, 3);
         let mut units = TunableUnits::from_host(&backend, &peft_host).unwrap();
@@ -305,7 +513,7 @@ fn e2e_peft_round_trip_restores_adapters_and_never_touches_base() {
         let batch = fixed_batch(2, 16);
         let prepared = backend.prepare_batch(&batch).unwrap();
         let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
-            let mut args: Vec<&Vec<f32>> = base_bufs.iter().collect();
+            let mut args: Vec<&NativeBuf> = base_bufs.iter().collect();
             args.extend(u.bufs.iter());
             backend.forward_loss(mode, &args, &prepared)
         };
@@ -338,7 +546,7 @@ fn peft_adapter_fd_directional_derivative_is_consistent() {
         let backend = NativeBackend::preset("opt-nano").unwrap();
         let batch = fixed_batch(4, 16);
         let base = pretrained_base(&backend, &batch, 5);
-        let base_bufs: Vec<Vec<f32>> =
+        let base_bufs: Vec<NativeBuf> =
             base.iter().map(|u| backend.upload(u).unwrap()).collect();
         let peft_host = nonzero_peft_units(&backend, mode, 1);
         let mut units = TunableUnits::from_host(&backend, &peft_host).unwrap();
@@ -346,7 +554,7 @@ fn peft_adapter_fd_directional_derivative_is_consistent() {
         let active: Vec<usize> = (0..units.n_units()).collect();
         let prepared = backend.prepare_batch(&batch).unwrap();
         let loss = |u: &TunableUnits<NativeBackend>| -> f32 {
-            let mut args: Vec<&Vec<f32>> = base_bufs.iter().collect();
+            let mut args: Vec<&NativeBuf> = base_bufs.iter().collect();
             args.extend(u.bufs.iter());
             backend.forward_loss(mode, &args, &prepared).unwrap()
         };
