@@ -3,10 +3,12 @@
 //!
 //! Covers: per-unit zo_axpy latency (allocating and in-place), forward-pass
 //! latency per bucket, a full MeZO-vs-LeZO step comparison — the raw
-//! numbers behind Figs. 2 and 4 — and the four Table-4 PEFT step variants
-//! (`mezo-lora`, `lezo-lora`, `mezo-prefix`, `lezo-prefix`: adapter units
-//! tunable over a frozen base, with their tunable-parameter counts in the
-//! `steps[].tunable_params` JSON field). Backend-generic: the native backend
+//! numbers behind Figs. 2 and 4 — the optimizer-zoo step variants
+//! (`zo-sgd-momentum`, `zo-adam`, `zo-sign-sgd`, `fzoo`: the per-rule
+//! update/schedule overhead on the dense full-model step), and the four
+//! Table-4 PEFT step variants (`mezo-lora`, `lezo-lora`, `mezo-prefix`,
+//! `lezo-prefix`: adapter units tunable over a frozen base, with their
+//! tunable-parameter counts in the `steps[].tunable_params` JSON field). Backend-generic: the native backend
 //! runs with zero artifacts on any machine; with `--features pjrt` and
 //! exported artifacts the same harness times the PJRT runtime. For the full
 //! table/figure regeneration use `lezo bench <id>`.
@@ -36,6 +38,7 @@
 //! Env: `LEZO_BENCH_ITERS` (default 15), `LEZO_THREADS`, `LEZO_BENCH_JSON`.
 
 use lezo::coordinator::metrics::StageTimes;
+use lezo::coordinator::optim::{make_optimizer, ZoOptKind, ZoOptimizer, ZoSgd, FZOO_PROBES};
 use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
 use lezo::data::batch::Batch;
 use lezo::peft::PeftMode;
@@ -159,7 +162,7 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
     let mut s = String::new();
     let _ = write!(
         s,
-        "{{\n  \"version\": 2,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
+        "{{\n  \"version\": 3,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
         parallel::effective_threads()
     );
     for (ti, t) in targets.iter().enumerate() {
@@ -327,6 +330,49 @@ fn bench_into<B: Backend>(backend: &B, iters: usize, report: &mut TargetReport) 
             iters,
             1e-3,
             1e-5,
+            &mut ZoSgd,
+            &mut loss,
+        );
+        println!(
+            "  {name:<15} {:>7.1} ms/step (perturb {:.1} + forward {:.1} + update {:.1}), non-forward {:.0}%",
+            st.ms_per_step, st.perturb_ms, st.forward_ms, st.update_ms,
+            100.0 * st.non_forward_fraction
+        );
+        report.steps.push(st);
+    }
+
+    // --- optimizer-zoo step variants (dense full-model schedule) ---
+    // what each update rule costs on top of the classic step: the replay
+    // sweeps of momentum/adam, and fzoo's one-sided batched forwards
+    for (name, kind) in [
+        ("zo-sgd-momentum", ZoOptKind::Momentum),
+        ("zo-adam", ZoOptKind::Adam),
+        ("zo-sign-sgd", ZoOptKind::SignSgd),
+        ("fzoo", ZoOptKind::Fzoo),
+    ] {
+        let mut tun = TunableUnits::<B>::from_host(backend, &host).unwrap();
+        let mut opt = make_optimizer(kind);
+        let active: Vec<usize> = (0..spec.n_units()).collect();
+        let fwd_bytes = if kind == ZoOptKind::Fzoo {
+            // one-sided batched: FZOO_PROBES + 1 forwards per step, vs 2
+            (FZOO_PROBES as f64 + 1.0) / 2.0 * step_fwd_bytes
+        } else {
+            step_fwd_bytes
+        };
+        let mut loss = |u: &TunableUnits<B>| -> anyhow::Result<f32> {
+            backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+        };
+        let st = time_zo_steps(
+            name,
+            prec,
+            fwd_bytes,
+            backend,
+            &mut tun,
+            &active,
+            iters,
+            1e-3,
+            1e-5,
+            opt.as_mut(),
             &mut loss,
         );
         println!(
@@ -369,6 +415,7 @@ fn bench_into<B: Backend>(backend: &B, iters: usize, report: &mut TargetReport) 
             iters,
             1e-2,
             1e-3,
+            &mut ZoSgd,
             &mut loss,
         );
         println!(
@@ -394,13 +441,14 @@ fn time_zo_steps<B: Backend>(
     iters: usize,
     mu: f32,
     lr: f32,
+    opt: &mut dyn ZoOptimizer,
     loss: &mut dyn FnMut(&TunableUnits<B>) -> anyhow::Result<f32>,
 ) -> StepStat {
     let eng = SpsaEngine::new(backend, mu, 1).unwrap();
     let mut times = StageTimes::default();
     let t = Instant::now();
     for step in 0..iters as u64 {
-        eng.zo_step(step, tun, active, lr, loss, &mut times).unwrap();
+        eng.zo_step_opt(step, tun, active, lr, opt, loss, &mut times).unwrap();
     }
     let ms = 1e3 * t.elapsed().as_secs_f64() / iters as f64;
     let (p, f, u, _) = times.per_step_ms();
@@ -478,6 +526,10 @@ fn main() {
         std::process::exit(2);
     }
     if let Err(e) = lezo::runtime::backend::env_precision() {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+    if let Err(e) = lezo::coordinator::optim::env_zo_opt() {
         eprintln!("error: {e}");
         std::process::exit(2);
     }

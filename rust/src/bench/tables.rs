@@ -7,6 +7,8 @@
 use super::{agg_pct, bench_config, fmt_pm, lezo_lr, model_spec_for, paper_drop, run_seeds};
 use crate::config::{grids, Method, RunConfig};
 use crate::coordinator::metrics::MemoryModel;
+use crate::coordinator::optim::ZoOptKind;
+use crate::coordinator::TrainReport;
 use crate::model::ModelSpec;
 use crate::peft::PeftMode;
 use crate::tasks::{ALL_TASKS, TABLE1_TASKS};
@@ -183,13 +185,81 @@ pub fn table1(overrides: &[String]) -> Result<String> {
     let seeds = seeds_from(overrides);
     let overrides = strip_meta(overrides);
     let base = bench_config(&overrides)?;
-    method_grid(
+    let mut out = method_grid(
         &TABLE1_TASKS,
         &[Method::ZeroShot, Method::Icl, Method::Ft, Method::Mezo, Method::Lezo],
         &base,
         &seeds,
         "Table 1 — opt-small (↔ OPT-13B), LeZO sparsifies 75% of blocks",
-    )
+    )?;
+    out.push('\n');
+    out.push_str(&zo_variant_profile(&base, &seeds)?);
+    Ok(out)
+}
+
+/// The optimizer-zoo footer of Table 1: every ZO update rule under the
+/// dense (MeZO) schedule on sst2 — accuracy, steps-to-accuracy-target,
+/// step cost, and the seed-replay optimizer state. The target is 90% of
+/// the best variant's mean final metric, so the column compares raw
+/// convergence speed across rules at the same hyper-parameters.
+fn zo_variant_profile(base: &RunConfig, seeds: &[u64]) -> Result<String> {
+    let kinds = [
+        ZoOptKind::Sgd,
+        ZoOptKind::Momentum,
+        ZoOptKind::Adam,
+        ZoOptKind::SignSgd,
+        ZoOptKind::Fzoo,
+    ];
+    let mut results = Vec::new();
+    for &kind in &kinds {
+        let mut cfg = base.clone();
+        cfg.task = "sst2".into();
+        cfg.method = Method::Mezo;
+        cfg.drop_layers = 0;
+        cfg.zo_opt = kind;
+        results.push((kind, run_seeds(&cfg, seeds)?));
+    }
+    render_zo_variants(&results)
+}
+
+fn render_zo_variants(results: &[(ZoOptKind, Vec<TrainReport>)]) -> Result<String> {
+    let mean_final = |rs: &[TrainReport]| {
+        crate::stats::mean(&rs.iter().map(|r| r.final_metric).collect::<Vec<_>>())
+    };
+    let best = results.iter().map(|(_, rs)| mean_final(rs)).fold(f64::MIN, f64::max);
+    let target = 0.9 * best;
+    let header = ["zo_opt", "final", "steps-to-target", "ms/step", "zo state"];
+    let mut rows = Vec::new();
+    for (kind, rs) in results {
+        let (m, s) = agg_pct(rs);
+        let reached: Vec<f64> = rs
+            .iter()
+            .filter_map(|r| r.steps_to_metric(target))
+            .map(|n| n as f64)
+            .collect();
+        let steps_col = if reached.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{:.0} ({}/{})", crate::stats::mean(&reached), reached.len(), rs.len())
+        };
+        let ms: Vec<f64> = rs.iter().map(|r| r.per_step_ms()).collect();
+        let state = rs.iter().map(|r| r.zo_state_bytes).max().unwrap_or(0);
+        rows.push(vec![
+            kind.to_string(),
+            fmt_pm(m, s),
+            steps_col,
+            format!("{:.1}", crate::stats::mean(&ms)),
+            if state > 0 { format!("{state} B") } else { "-".to_string() },
+        ]);
+    }
+    let mut out = String::new();
+    writeln!(
+        out,
+        "ZO optimizer zoo (MeZO schedule, sst2; target = {:.1}% = 90% of best final)",
+        100.0 * target
+    )?;
+    out.push_str(&render_table(&header, &rows));
+    Ok(out)
 }
 
 /// Table 2: opt-tiny (↔ OPT-1.3B) × all 11 tasks × {zero-shot, ICL, MeZO, LeZO}.
@@ -400,6 +470,56 @@ mod tests {
         assert!(t.contains(&prefix.to_string()), "{t}");
         assert!(t.contains("MeZO (LoRA)"), "{t}");
         assert!(t.contains("non-forward"), "{t}");
+    }
+
+    #[test]
+    fn zo_variant_rows_render_targets_and_state() {
+        use crate::coordinator::metrics::StageTimes;
+        use crate::coordinator::trainer::EvalPoint;
+        use crate::runtime::backend::Precision;
+        let report = |final_metric: f64, reach_step: Option<u64>, zo_state_bytes: usize| {
+            let mut history =
+                vec![EvalPoint { step: 0, train_secs: 0.0, metric: 0.5, train_loss: 0.0 }];
+            if let Some(s) = reach_step {
+                history.push(EvalPoint {
+                    step: s,
+                    train_secs: 1.0,
+                    metric: final_metric,
+                    train_loss: 0.0,
+                });
+            }
+            TrainReport {
+                task: "sst2".into(),
+                method: Method::Mezo,
+                backend: "native",
+                precision: Precision::F32,
+                metric_kind: "acc",
+                final_metric,
+                best_metric: final_metric,
+                history,
+                losses: vec![],
+                stage_times: StageTimes::default(),
+                train_secs: 1.0,
+                active_param_fraction: 1.0,
+                mean_input_len: 20.0,
+                fo_state_bytes: 0,
+                zo_state_bytes,
+                zo_opt: ZoOptKind::Sgd,
+            }
+        };
+        let results = vec![
+            (ZoOptKind::Sgd, vec![report(0.8, Some(900), 0)]),
+            // best variant: target = 0.9 * 0.9 = 0.81, reached at step 400
+            (ZoOptKind::Adam, vec![report(0.9, Some(400), 1234)]),
+            (ZoOptKind::SignSgd, vec![report(0.6, None, 0)]),
+        ];
+        let t = render_zo_variants(&results).unwrap();
+        assert!(t.contains("zo-adam"), "{t}");
+        assert!(t.contains("400 (1/1)"), "adam reaches the target: {t}");
+        assert!(t.contains("1234 B"), "replay state is shown: {t}");
+        assert!(t.contains("81.0%"), "target is 90% of best final: {t}");
+        // sgd's final 0.8 < 0.81 target, sign never reaches it
+        assert!(t.contains('-'), "{t}");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! can be round-tripped through a simple `key = value` config-file format
 //! (no serde offline; the format is intentionally trivial).
 
+use crate::coordinator::optim::ZoOptKind;
 use crate::coordinator::policy::Policy;
 use crate::peft::PeftMode;
 use crate::runtime::backend::{BackendKind, Precision};
@@ -137,6 +138,11 @@ pub struct RunConfig {
     /// mirroring `threads`/`LEZO_THREADS`. ZO perturb/update state stays
     /// f32 either way (see `runtime/native/mod.rs`, "Precision").
     pub precision: Precision,
+    /// ZO update rule (the optimizer zoo; `coordinator/optim.rs`). The
+    /// `LEZO_ZO_OPT` env var overrides this, mirroring
+    /// `precision`/`LEZO_PRECISION`. Only meaningful for ZO methods;
+    /// `zo-sgd` is the classic (and bit-pinned) default.
+    pub zo_opt: ZoOptKind,
 }
 
 impl Default for RunConfig {
@@ -167,6 +173,7 @@ impl Default for RunConfig {
             smezo_keep: 0.5,
             threads: 0,
             precision: Precision::F32,
+            zo_opt: ZoOptKind::Sgd,
         }
     }
 }
@@ -209,9 +216,16 @@ impl RunConfig {
             "checkpoint" => self.checkpoint = value.to_string(),
             "blocks_only" => self.blocks_only = parse!(),
             "policy" => self.policy = parse!(),
-            "smezo_keep" => self.smezo_keep = parse!(),
+            "smezo_keep" => {
+                let keep: f64 = parse!();
+                if !(0.0..=1.0).contains(&keep) {
+                    bail!("smezo_keep must be in [0, 1], got {keep}");
+                }
+                self.smezo_keep = keep;
+            }
             "threads" => self.threads = parse!(),
             "precision" => self.precision = parse!(),
+            "zo_opt" => self.zo_opt = parse!(),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -250,11 +264,29 @@ impl RunConfig {
         format!(
             "model = {}\ntask = {}\nmethod = {}\npeft = {}\ndrop_layers = {}\nlr = {}\n\
              mu = {}\nsteps = {}\neval_every = {}\neval_examples = {}\ntrain_examples = {}\n\
-             seed = {}\nicl_shots = {}\nmean_len = {}\nblocks_only = {}\n",
+             seed = {}\nicl_shots = {}\nmean_len = {}\nblocks_only = {}\nzo_opt = {}\n",
             self.model, self.task, self.method, self.peft, self.drop_layers, self.lr,
             self.mu, self.steps, self.eval_every, self.eval_examples, self.train_examples,
-            self.seed, self.icl_shots, self.mean_len, self.blocks_only,
+            self.seed, self.icl_shots, self.mean_len, self.blocks_only, self.zo_opt,
         )
+    }
+
+    /// Cross-key sanity checks, run once at the top of every training/eval
+    /// entry (`Trainer::run_with`). Per-key range checks live in [`Self::set`];
+    /// this catches the combinations that would otherwise panic mid-run
+    /// (modulo-by-zero eval cadence, an empty training pool).
+    pub fn validate(&self) -> Result<()> {
+        if self.eval_every == 0 {
+            bail!("eval_every must be >= 1 (got 0; evaluation cadence is a modulus)");
+        }
+        let trains = matches!(self.method, Method::Ft | Method::Mezo | Method::Lezo | Method::Smezo);
+        if trains && self.steps == 0 {
+            bail!("steps must be >= 1 for training method '{}'", self.method);
+        }
+        if !(0.0..=1.0).contains(&self.smezo_keep) {
+            bail!("smezo_keep must be in [0, 1], got {}", self.smezo_keep);
+        }
+        Ok(())
     }
 }
 
@@ -345,6 +377,74 @@ mod tests {
         c.apply_overrides(&["precision=f32".into()]).unwrap();
         assert_eq!(c.precision, Precision::F32);
         assert!(c.apply_overrides(&["precision=fp8".into()]).is_err());
+    }
+
+    #[test]
+    fn zo_opt_key_parses() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.zo_opt, ZoOptKind::Sgd, "default is the classic rule");
+        c.apply_overrides(&["zo_opt=zo-adam".into()]).unwrap();
+        assert_eq!(c.zo_opt, ZoOptKind::Adam);
+        c.apply_overrides(&["zo_opt=sign".into()]).unwrap();
+        assert_eq!(c.zo_opt, ZoOptKind::SignSgd);
+        c.apply_overrides(&["zo_opt=fzoo".into()]).unwrap();
+        assert_eq!(c.zo_opt, ZoOptKind::Fzoo);
+        // unknown value: error names the valid set
+        let err = c.apply_overrides(&["zo_opt=turbo".into()]).unwrap_err().to_string();
+        assert!(err.contains("zo-sgd-momentum"), "{err}");
+        assert!(err.contains("fzoo"), "{err}");
+    }
+
+    #[test]
+    fn zo_opt_round_trips_through_file_format() {
+        let mut c0 = RunConfig::default();
+        c0.set("zo_opt", "zo-sgd-momentum").unwrap();
+        assert!(c0.to_file_format().contains("zo_opt = zo-sgd-momentum"));
+        let path = std::env::temp_dir().join("lezo_cfg_test_zoopt.conf");
+        std::fs::write(&path, c0.to_file_format()).unwrap();
+        let c1 = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c1.zo_opt, ZoOptKind::Momentum);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn smezo_keep_range_checked_at_parse_time() {
+        let mut c = RunConfig::default();
+        c.set("smezo_keep", "0.25").unwrap();
+        assert_eq!(c.smezo_keep, 0.25);
+        c.set("smezo_keep", "0").unwrap();
+        c.set("smezo_keep", "1").unwrap();
+        for bad in ["-0.1", "1.5", "NaN"] {
+            let err = c.set("smezo_keep", bad).unwrap_err().to_string();
+            assert!(err.contains("[0, 1]"), "{bad}: {err}");
+        }
+        assert_eq!(c.smezo_keep, 1.0, "failed sets must not clobber");
+    }
+
+    #[test]
+    fn validate_rejects_panicky_configs() {
+        let ok = RunConfig::default();
+        ok.validate().unwrap();
+
+        let mut c = RunConfig::default();
+        c.eval_every = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("eval_every"), "{err}");
+
+        let mut c = RunConfig::default();
+        c.method = Method::Mezo;
+        c.steps = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("steps"), "{err}");
+        assert!(err.contains("mezo"), "error names the method: {err}");
+        // zero steps is fine for no-train methods
+        c.method = Method::ZeroShot;
+        c.validate().unwrap();
+
+        let mut c = RunConfig::default();
+        c.smezo_keep = f64::NAN; // set via field to bypass the parse check
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("smezo_keep"), "{err}");
     }
 
     #[test]

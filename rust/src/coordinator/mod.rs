@@ -2,8 +2,11 @@
 //!
 //! - [`selector`]: dynamic layer-wise sparsity (which units are perturbed +
 //!   updated each step; MeZO is the `n_drop = 0` special case).
-//! - [`spsa`]: the ZO engine — seeded perturbation via the AOT'd `zo_axpy`
-//!   kernel, two forward passes, projected-gradient update (Algorithm 1).
+//! - [`spsa`]: the ZO probe schedule — seeded perturbation via the AOT'd
+//!   `zo_axpy` kernel, forward probes, coefficient application (Algorithm 1).
+//! - [`optim`]: the pluggable ZO update rules (zo-sgd, momentum, adam,
+//!   sign-sgd, fzoo) mapping projected gradients to per-unit coefficients,
+//!   with seed-replay optimizer state instead of moment buffers.
 //! - [`fo`]: the first-order substrate (SGD / Adam over the backend's
 //!   `forward_backward` — the native reference backward pass, or the AOT'd
 //!   executable under PJRT) — the paper's "FT" baseline and the in-repo
@@ -15,11 +18,13 @@
 
 pub mod fo;
 pub mod metrics;
+pub mod optim;
 pub mod policy;
 pub mod selector;
 pub mod spsa;
 pub mod trainer;
 
+pub use optim::{make_optimizer, ZoOptKind, ZoOptimizer};
 pub use policy::{Policy, PolicySelector};
 pub use selector::LayerSelector;
 pub use spsa::SpsaEngine;

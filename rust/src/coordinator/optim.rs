@@ -1,0 +1,574 @@
+//! The pluggable ZO optimizer zoo: update rules over the SPSA projected
+//! gradient, decoupled from the probe schedule in [`crate::coordinator::spsa`].
+//!
+//! The split: `SpsaEngine` owns *perturbation* (which seeds, which sweeps,
+//! how the probes are scheduled — two-sided classic or one-sided batched)
+//! and a [`ZoOptimizer`] owns the *update rule* — it maps the step's
+//! projected gradient(s) to a list of [`Coeff`]s, each "add `c * z(seed)`
+//! to unit `k`", which the engine applies through the backend's
+//! `zo_axpy_inplace`. Because an update is nothing but seeded axpys, every
+//! rule runs on every backend and composes with LeZO's layer-wise active
+//! set for free (the selector stays orthogonal: it picks which units a
+//! step perturbs; the rule decides how hard to push along each stored
+//! direction).
+//!
+//! ## Seed-replay optimizer state (the memory story)
+//!
+//! MeZO's trick stores no perturbation; the same idea extends to momentum
+//! and Adam. A first moment over SPSA steps is a sum of rank-1 directions,
+//! `m_t = sum_s w(t-s) * g_s * z_s`, and `z_s` is regenerated from
+//! `(run_seed, step s, unit)` on demand — so the optimizer state is the
+//! scalar history `(step, g_s, active set)`, **not** a parameter-sized
+//! moment buffer. The replay window is truncated where the decay weight
+//! drops below [`REPLAY_TOL`] (the dropped tail contributes less than
+//! `REPLAY_TOL * sum |g|` of the momentum norm). [`ZoOptimizer::state_bytes`]
+//! reports the measured bytes of that history — the number that lands in
+//! `TrainReport::zo_state_bytes` next to the FO baseline's parameter-sized
+//! `fo_state_bytes`.
+//!
+//! Adam's second moment is the one thing a per-unit coefficient *cannot*
+//! express element-wise (it would need a stored per-element `v`, exactly
+//! the buffer this design refuses to materialize), so [`ZoAdam`] keeps a
+//! **scalar** second moment over the projected gradient: since
+//! `E[(g z_i)^2] = g^2`, the scalar `v_t` tracks the per-element second
+//! moment in expectation, preserving Adam's step-size normalization
+//! without the memory.
+
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::fmt;
+use std::str::FromStr;
+
+/// Replay weights below this are truncated from the momentum window.
+pub const REPLAY_TOL: f64 = 1e-4;
+
+/// Default momentum decay for `zo-sgd-momentum`.
+pub const MOMENTUM_BETA: f32 = 0.9;
+
+/// Default probe count of the one-sided batched (FZOO-style) schedule.
+pub const FZOO_PROBES: usize = 4;
+
+/// Which ZO update rule drives a run (config key `zo_opt`, env
+/// `LEZO_ZO_OPT` — env wins, mirroring `precision`/`LEZO_PRECISION`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ZoOptKind {
+    /// Today's rule: `theta -= lr * g * z` (bit-identical, test-pinned).
+    #[default]
+    Sgd,
+    /// Heavy-ball momentum over seed-replayed directions.
+    Momentum,
+    /// Adam with a replayed first moment and a scalar second moment.
+    Adam,
+    /// `theta -= lr * sign(g) * z` — magnitude-free steps.
+    SignSgd,
+    /// FZOO-style one-sided batched perturbations with a
+    /// variance-normalized step size.
+    Fzoo,
+}
+
+pub const ZO_OPT_NAMES: &str = "zo-sgd|zo-sgd-momentum|zo-adam|zo-sign-sgd|fzoo";
+
+impl FromStr for ZoOptKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "zo-sgd" | "sgd" => ZoOptKind::Sgd,
+            "zo-sgd-momentum" | "zo-momentum" | "momentum" => ZoOptKind::Momentum,
+            "zo-adam" | "adam" => ZoOptKind::Adam,
+            "zo-sign-sgd" | "sign-sgd" | "sign" => ZoOptKind::SignSgd,
+            "fzoo" | "zo-fzoo" => ZoOptKind::Fzoo,
+            _ => anyhow::bail!("unknown zo optimizer '{s}' ({ZO_OPT_NAMES})"),
+        })
+    }
+}
+
+impl fmt::Display for ZoOptKind {
+    /// Canonical names: what reports print and what the bench JSON rows
+    /// are keyed by.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ZoOptKind::Sgd => "zo-sgd",
+            ZoOptKind::Momentum => "zo-sgd-momentum",
+            ZoOptKind::Adam => "zo-adam",
+            ZoOptKind::SignSgd => "zo-sign-sgd",
+            ZoOptKind::Fzoo => "fzoo",
+        })
+    }
+}
+
+/// `LEZO_ZO_OPT`: unset/empty means "no override"; anything else must
+/// parse as an optimizer — an unparseable value is a hard error naming the
+/// bad value (the same strictness rule as `LEZO_THREADS` /
+/// `LEZO_PRECISION`), never a silent fall-through to the default.
+pub fn env_zo_opt() -> Result<Option<ZoOptKind>> {
+    match std::env::var("LEZO_ZO_OPT") {
+        Err(_) => Ok(None),
+        Ok(v) if v.is_empty() => Ok(None),
+        Ok(v) => v.parse().map(Some).map_err(|_| {
+            anyhow::anyhow!("LEZO_ZO_OPT='{v}' is not a zo optimizer ({ZO_OPT_NAMES})")
+        }),
+    }
+}
+
+/// Resolve the update rule for a run: the `LEZO_ZO_OPT` env override wins
+/// (mirroring `LEZO_PRECISION`), else the config key's value.
+pub fn resolve_zo_opt(requested: ZoOptKind) -> Result<ZoOptKind> {
+    Ok(env_zo_opt()?.unwrap_or(requested))
+}
+
+/// How the engine probes the loss for one step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeSchedule {
+    /// Classic SPSA: perturb `+mu`, flip to `-mu`, restore — two forwards,
+    /// one direction (probe 0).
+    TwoSided,
+    /// One-sided batched: one baseline forward, then `probes` independent
+    /// directions each perturbed `+mu` and restored — `probes + 1`
+    /// forwards, `probes` projected gradients.
+    OneSided { probes: usize },
+}
+
+/// One seeded axpy of an update: `unit += c * z(run_seed, step, probe, unit)`
+/// (seed via [`crate::rng::zo_probe_seed`]; probe 0 is the classic stream).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Coeff {
+    pub step: u64,
+    pub probe: u64,
+    pub unit: usize,
+    pub c: f32,
+}
+
+/// A ZO update rule. Stateful across steps (replay history); the engine
+/// calls [`Self::coeffs`] exactly once per step, in step order.
+pub trait ZoOptimizer {
+    fn kind(&self) -> ZoOptKind;
+
+    /// The probe schedule this rule needs. The engine consults it once per
+    /// step; `gs` handed to [`Self::coeffs`] has one entry per probe
+    /// (length 1 under [`ProbeSchedule::TwoSided`]).
+    fn schedule(&self) -> ProbeSchedule {
+        ProbeSchedule::TwoSided
+    }
+
+    /// Map this step's projected gradient(s) to update coefficients.
+    /// `active` is the step's LeZO active set (the units that were
+    /// perturbed); returned coefficients may also reference *past* steps'
+    /// units (seed replay) — never a probe/step pair that was not
+    /// perturbed under that seed.
+    fn coeffs(&mut self, step: u64, gs: &[f32], active: &[usize], lr: f32) -> Vec<Coeff>;
+
+    /// Measured bytes of optimizer state currently held (the ZO side of
+    /// the paper's memory comparison; 0 for stateless rules).
+    fn state_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Build the default-hyperparameter optimizer for `kind`. The trainer
+/// special-cases [`ZoAdam`] to reuse the `adam_*` config keys.
+pub fn make_optimizer(kind: ZoOptKind) -> Box<dyn ZoOptimizer> {
+    match kind {
+        ZoOptKind::Sgd => Box::new(ZoSgd),
+        ZoOptKind::Momentum => Box::new(ZoMomentum::new(MOMENTUM_BETA)),
+        ZoOptKind::Adam => Box::new(ZoAdam::new(0.9, 0.999, 1e-8)),
+        ZoOptKind::SignSgd => Box::new(ZoSignSgd),
+        ZoOptKind::Fzoo => Box::new(ZoFzoo::new(FZOO_PROBES)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// zo-sgd (the bit-identity anchor)
+// ---------------------------------------------------------------------------
+
+/// Plain ZO-SGD: one coefficient `-lr * g` per active unit, in active-set
+/// order — the exact axpy sequence (same seeds, same `f32` product) the
+/// pre-zoo engine issued, so `zo_opt=zo-sgd` is bit-identical to the old
+/// trajectory (pinned in `spsa::tests`).
+pub struct ZoSgd;
+
+impl ZoOptimizer for ZoSgd {
+    fn kind(&self) -> ZoOptKind {
+        ZoOptKind::Sgd
+    }
+
+    fn coeffs(&mut self, step: u64, gs: &[f32], active: &[usize], lr: f32) -> Vec<Coeff> {
+        debug_assert_eq!(gs.len(), 1);
+        let c = -lr * gs[0];
+        active.iter().map(|&unit| Coeff { step, probe: 0, unit, c }).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seed-replay history shared by momentum and Adam
+// ---------------------------------------------------------------------------
+
+struct Hist {
+    step: u64,
+    g: f32,
+    active: Vec<usize>,
+}
+
+fn replay_bytes(hist: &VecDeque<Hist>) -> usize {
+    // step (8) + g (4) + one usize per stored active unit — the honest
+    // size of what replay actually keeps, vs. 4 bytes/param for a dense
+    // moment buffer
+    hist.iter().map(|h| 8 + 4 + 8 * h.active.len()).sum()
+}
+
+/// Decay window: ages with `beta^age < REPLAY_TOL` are truncated.
+fn replay_window(beta: f32) -> usize {
+    debug_assert!((0.0..1.0).contains(&beta));
+    (REPLAY_TOL.ln() / (beta as f64).ln()).ceil() as usize
+}
+
+// ---------------------------------------------------------------------------
+// zo-sgd-momentum
+// ---------------------------------------------------------------------------
+
+/// Heavy-ball momentum, seed-replayed: `m_t = sum_s beta^(t-s) g_s z_s`
+/// and the step applies `-lr * m_t` — i.e. coefficient
+/// `-lr * beta^age * g_s` on every unit that was active at step `s`.
+pub struct ZoMomentum {
+    beta: f32,
+    window: usize,
+    hist: VecDeque<Hist>,
+}
+
+impl ZoMomentum {
+    pub fn new(beta: f32) -> ZoMomentum {
+        ZoMomentum { beta, window: replay_window(beta), hist: VecDeque::new() }
+    }
+}
+
+impl ZoOptimizer for ZoMomentum {
+    fn kind(&self) -> ZoOptKind {
+        ZoOptKind::Momentum
+    }
+
+    fn coeffs(&mut self, step: u64, gs: &[f32], active: &[usize], lr: f32) -> Vec<Coeff> {
+        debug_assert_eq!(gs.len(), 1);
+        self.hist.push_back(Hist { step, g: gs[0], active: active.to_vec() });
+        if self.hist.len() > self.window {
+            self.hist.pop_front();
+        }
+        let newest = self.hist.len() - 1;
+        let mut out = Vec::new();
+        for (i, h) in self.hist.iter().enumerate() {
+            let w = self.beta.powi((newest - i) as i32);
+            let c = -lr * w * h.g;
+            out.extend(h.active.iter().map(|&unit| Coeff { step: h.step, probe: 0, unit, c }));
+        }
+        out
+    }
+
+    fn state_bytes(&self) -> usize {
+        replay_bytes(&self.hist)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// zo-adam
+// ---------------------------------------------------------------------------
+
+/// Adam over seed-replayed directions: bias-corrected first moment
+/// `m_t = sum_s (1-b1) b1^(t-s) g_s z_s`, **scalar** second moment
+/// `v_t = b2 v_{t-1} + (1-b2) g_t^2` (see module docs for why element-wise
+/// `v` is out of reach for a coefficient-based update, and why the scalar
+/// matches it in expectation). Per-entry coefficient:
+/// `-lr * (1-b1) * b1^age * g_s / bc1 / (sqrt(v_t/bc2) + eps)`.
+pub struct ZoAdam {
+    beta1: f32,
+    beta2: f64,
+    eps: f64,
+    window: usize,
+    t: u64,
+    v: f64,
+    hist: VecDeque<Hist>,
+}
+
+impl ZoAdam {
+    pub fn new(beta1: f64, beta2: f64, eps: f64) -> ZoAdam {
+        ZoAdam {
+            beta1: beta1 as f32,
+            beta2,
+            eps,
+            window: replay_window(beta1 as f32),
+            t: 0,
+            v: 0.0,
+            hist: VecDeque::new(),
+        }
+    }
+}
+
+impl ZoOptimizer for ZoAdam {
+    fn kind(&self) -> ZoOptKind {
+        ZoOptKind::Adam
+    }
+
+    fn coeffs(&mut self, step: u64, gs: &[f32], active: &[usize], lr: f32) -> Vec<Coeff> {
+        debug_assert_eq!(gs.len(), 1);
+        let g = gs[0];
+        self.t += 1;
+        self.v = self.beta2 * self.v + (1.0 - self.beta2) * (g as f64) * (g as f64);
+        let bc1 = 1.0 - (self.beta1 as f64).powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let denom = (self.v / bc2).sqrt() + self.eps;
+        let scale = (lr as f64 * (1.0 - self.beta1 as f64) / (bc1 * denom)) as f32;
+
+        self.hist.push_back(Hist { step, g, active: active.to_vec() });
+        if self.hist.len() > self.window {
+            self.hist.pop_front();
+        }
+        let newest = self.hist.len() - 1;
+        let mut out = Vec::new();
+        for (i, h) in self.hist.iter().enumerate() {
+            let w = self.beta1.powi((newest - i) as i32);
+            let c = -scale * w * h.g;
+            out.extend(h.active.iter().map(|&unit| Coeff { step: h.step, probe: 0, unit, c }));
+        }
+        out
+    }
+
+    fn state_bytes(&self) -> usize {
+        // the scalar moment + step counter ride along with the history
+        16 + replay_bytes(&self.hist)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// zo-sign-sgd
+// ---------------------------------------------------------------------------
+
+/// Sign-SGD over the projected gradient: `-lr * sign(g) * z`. The sign is
+/// of the *scalar* `g` (an element-wise `sign(g * z_i)` would need a
+/// dedicated kernel; over the rank-1 SPSA direction the scalar sign is
+/// the natural analogue and keeps the update a plain seeded axpy).
+pub struct ZoSignSgd;
+
+impl ZoOptimizer for ZoSignSgd {
+    fn kind(&self) -> ZoOptKind {
+        ZoOptKind::SignSgd
+    }
+
+    fn coeffs(&mut self, step: u64, gs: &[f32], active: &[usize], lr: f32) -> Vec<Coeff> {
+        debug_assert_eq!(gs.len(), 1);
+        // f32::signum(0.0) is 1.0 — a zero projected gradient must mean
+        // "no step", not a full-size one
+        let s = if gs[0] > 0.0 {
+            1.0
+        } else if gs[0] < 0.0 {
+            -1.0
+        } else {
+            0.0
+        };
+        let c = -lr * s;
+        active.iter().map(|&unit| Coeff { step, probe: 0, unit, c }).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fzoo (one-sided batched)
+// ---------------------------------------------------------------------------
+
+/// FZOO-style rule: `probes` one-sided projected gradients per step
+/// (`g_b = (L(theta + mu z_b) - L(theta)) / mu`), averaged into the
+/// descent direction `(1/B) sum_b g_b z_b`, with the step size normalized
+/// by the batch's gradient spread: `lr_eff = lr / (std(g) + eps)`. Low
+/// spread = consistent signal = a confident (larger) step — the Adam-like
+/// adaptivity FZOO gets without any moment state.
+pub struct ZoFzoo {
+    probes: usize,
+    eps: f64,
+}
+
+impl ZoFzoo {
+    pub fn new(probes: usize) -> ZoFzoo {
+        assert!(probes >= 2, "variance normalization needs >= 2 probes");
+        ZoFzoo { probes, eps: 1e-8 }
+    }
+}
+
+impl ZoOptimizer for ZoFzoo {
+    fn kind(&self) -> ZoOptKind {
+        ZoOptKind::Fzoo
+    }
+
+    fn schedule(&self) -> ProbeSchedule {
+        ProbeSchedule::OneSided { probes: self.probes }
+    }
+
+    fn coeffs(&mut self, step: u64, gs: &[f32], active: &[usize], lr: f32) -> Vec<Coeff> {
+        debug_assert_eq!(gs.len(), self.probes);
+        let n = gs.len() as f64;
+        let mean = gs.iter().map(|&g| g as f64).sum::<f64>() / n;
+        let var = gs.iter().map(|&g| (g as f64 - mean).powi(2)).sum::<f64>() / n;
+        let lr_eff = lr as f64 / (var.sqrt() + self.eps);
+        let mut out = Vec::with_capacity(gs.len() * active.len());
+        for (b, &g) in gs.iter().enumerate() {
+            let c = (-lr_eff * g as f64 / n) as f32;
+            out.extend(
+                active.iter().map(|&unit| Coeff { step, probe: b as u64, unit, c }),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_display_round_trip() {
+        for name in ["zo-sgd", "zo-sgd-momentum", "zo-adam", "zo-sign-sgd", "fzoo"] {
+            let k: ZoOptKind = name.parse().unwrap();
+            assert_eq!(k.to_string(), name);
+        }
+    }
+
+    #[test]
+    fn kind_aliases_parse() {
+        assert_eq!("sign".parse::<ZoOptKind>().unwrap(), ZoOptKind::SignSgd);
+        assert_eq!("momentum".parse::<ZoOptKind>().unwrap(), ZoOptKind::Momentum);
+        assert_eq!("adam".parse::<ZoOptKind>().unwrap(), ZoOptKind::Adam);
+        assert_eq!("sgd".parse::<ZoOptKind>().unwrap(), ZoOptKind::Sgd);
+    }
+
+    #[test]
+    fn bad_kind_error_names_the_valid_set() {
+        let err = "turbo".parse::<ZoOptKind>().unwrap_err().to_string();
+        assert!(err.contains("turbo"), "{err}");
+        for name in ["zo-sgd", "zo-adam", "fzoo"] {
+            assert!(err.contains(name), "{err} must list {name}");
+        }
+    }
+
+    #[test]
+    fn resolve_passes_through_without_env() {
+        if std::env::var("LEZO_ZO_OPT").map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED resolve_passes_through_without_env: LEZO_ZO_OPT wins");
+            return;
+        }
+        assert_eq!(resolve_zo_opt(ZoOptKind::Adam).unwrap(), ZoOptKind::Adam);
+        assert_eq!(resolve_zo_opt(ZoOptKind::Sgd).unwrap(), ZoOptKind::Sgd);
+    }
+
+    #[test]
+    fn sgd_coeffs_are_the_classic_rule() {
+        let mut opt = ZoSgd;
+        let cs = opt.coeffs(7, &[2.0], &[0, 2, 3], 0.5);
+        assert_eq!(cs.len(), 3);
+        for (c, unit) in cs.iter().zip([0usize, 2, 3]) {
+            assert_eq!((c.step, c.probe, c.unit), (7, 0, unit));
+            assert_eq!(c.c, -0.5 * 2.0);
+        }
+        assert_eq!(opt.state_bytes(), 0);
+        assert_eq!(opt.schedule(), ProbeSchedule::TwoSided);
+    }
+
+    #[test]
+    fn momentum_replays_decayed_history() {
+        // 3 steps with g = 1, 10, 100 on shifting active sets: step 2's
+        // coefficients must be -lr * beta^age * g_s on each step's own set
+        let beta = 0.5f32;
+        let lr = 0.1f32;
+        let mut opt = ZoMomentum::new(beta);
+        opt.coeffs(0, &[1.0], &[0, 1], lr);
+        opt.coeffs(1, &[10.0], &[1], lr);
+        let cs = opt.coeffs(2, &[100.0], &[0, 2], lr);
+        // expected: step0 (age 2, units 0,1), step1 (age 1, unit 1),
+        // step2 (age 0, units 0,2)
+        assert_eq!(cs.len(), 5);
+        let find = |step: u64, unit: usize| {
+            cs.iter().find(|c| c.step == step && c.unit == unit).unwrap().c
+        };
+        assert!((find(0, 0) - (-lr * 0.25 * 1.0)).abs() < 1e-7);
+        assert!((find(0, 1) - (-lr * 0.25 * 1.0)).abs() < 1e-7);
+        assert!((find(1, 1) - (-lr * 0.5 * 10.0)).abs() < 1e-7);
+        assert!((find(2, 0) - (-lr * 1.0 * 100.0)).abs() < 1e-7);
+        assert!((find(2, 2) - (-lr * 1.0 * 100.0)).abs() < 1e-7);
+        assert!(cs.iter().all(|c| c.probe == 0), "replay stays on the classic stream");
+        assert!(opt.state_bytes() > 0, "history is accounted");
+    }
+
+    #[test]
+    fn momentum_window_truncates_history() {
+        let mut opt = ZoMomentum::new(0.5);
+        let window = replay_window(0.5); // ~14 at beta=0.5
+        for step in 0..(window as u64 + 20) {
+            opt.coeffs(step, &[1.0], &[0], 1e-3);
+        }
+        assert_eq!(opt.hist.len(), window, "window must bound the history");
+        let bytes = opt.state_bytes();
+        opt.coeffs(10_000, &[1.0], &[0], 1e-3);
+        assert_eq!(opt.state_bytes(), bytes, "steady-state bytes are flat");
+    }
+
+    #[test]
+    fn adam_first_step_is_a_sign_step() {
+        // t=1 closed form (mirrors fo::adam_first_step_matches_closed_form):
+        // mhat = g, vhat = g^2 -> coefficient = -lr * g / (|g| + eps)
+        let (lr, eps) = (0.05f32, 1e-8);
+        for g in [0.3f32, -1.7, 4.2e-3] {
+            let mut opt = ZoAdam::new(0.9, 0.999, eps);
+            let cs = opt.coeffs(0, &[g], &[1], lr);
+            assert_eq!(cs.len(), 1);
+            let want = -(lr as f64) * g as f64 / (g.abs() as f64 + eps);
+            assert!(
+                (cs[0].c as f64 - want).abs() < 1e-7,
+                "g={g}: {} vs closed form {want}",
+                cs[0].c
+            );
+        }
+        // zero gradient: exactly no movement
+        let mut opt = ZoAdam::new(0.9, 0.999, eps);
+        let cs = opt.coeffs(0, &[0.0], &[1], lr);
+        assert_eq!(cs[0].c, 0.0);
+    }
+
+    #[test]
+    fn adam_replays_history_and_accounts_state() {
+        let mut opt = ZoAdam::new(0.9, 0.999, 1e-8);
+        opt.coeffs(0, &[1.0], &[0, 1], 1e-3);
+        let cs = opt.coeffs(1, &[2.0], &[1, 2], 1e-3);
+        // both steps' directions contribute
+        assert!(cs.iter().any(|c| c.step == 0 && c.unit == 0));
+        assert!(cs.iter().any(|c| c.step == 1 && c.unit == 2));
+        assert!(opt.state_bytes() > 16, "history + scalar moment accounted");
+    }
+
+    #[test]
+    fn sign_sgd_is_magnitude_free_and_zero_safe() {
+        let mut opt = ZoSignSgd;
+        assert_eq!(opt.coeffs(0, &[123.4], &[0], 0.1)[0].c, -0.1);
+        assert_eq!(opt.coeffs(0, &[-0.001], &[0], 0.1)[0].c, 0.1);
+        assert_eq!(opt.coeffs(0, &[0.0], &[0], 0.1)[0].c, 0.0, "sign(0) must be 0");
+        assert_eq!(opt.state_bytes(), 0);
+    }
+
+    #[test]
+    fn fzoo_normalizes_by_gradient_spread() {
+        let mut opt = ZoFzoo::new(4);
+        assert_eq!(opt.schedule(), ProbeSchedule::OneSided { probes: 4 });
+        let gs = [1.0f32, 3.0, 5.0, 7.0]; // mean 4, pop std sqrt(5)
+        let cs = opt.coeffs(0, &gs, &[0, 1], 0.1);
+        assert_eq!(cs.len(), 8, "one coefficient per (probe, unit)");
+        let lr_eff = 0.1 / (5.0f64.sqrt() + 1e-8);
+        for c in &cs {
+            let want = -(lr_eff * gs[c.probe as usize] as f64 / 4.0) as f32;
+            assert!((c.c - want).abs() < 1e-9, "{c:?} vs {want}");
+        }
+        // probes are distinct streams, units within a probe share c
+        assert_eq!(cs.iter().filter(|c| c.probe == 2).count(), 2);
+        assert_eq!(opt.state_bytes(), 0);
+    }
+
+    #[test]
+    fn make_optimizer_matches_kind() {
+        for kind in
+            [ZoOptKind::Sgd, ZoOptKind::Momentum, ZoOptKind::Adam, ZoOptKind::SignSgd, ZoOptKind::Fzoo]
+        {
+            assert_eq!(make_optimizer(kind).kind(), kind);
+        }
+    }
+}

@@ -1,7 +1,10 @@
-//! The ZO engine: layer-wise sparse SPSA + ZO-SGD (Algorithm 1 of the paper),
-//! generic over the runtime [`Backend`].
+//! The ZO engine: the SPSA *probe schedule* (Algorithm 1 of the paper),
+//! generic over the runtime [`Backend`]. The *update rule* is pluggable —
+//! a [`ZoOptimizer`] from [`crate::coordinator::optim`] maps the step's
+//! projected gradient(s) to per-unit [`Coeff`]s which this engine applies
+//! as seeded axpys.
 //!
-//! One optimization step is
+//! The classic two-sided step is
 //! ```text
 //!   perturb   P[l] += mu * z_l        for l in active      (zo_axpy, c=+mu)
 //!   forward   l+ = L(P)
@@ -9,21 +12,29 @@
 //!   forward   l- = L(P)
 //!   restore   P[l] += mu * z_l        for l in active      (zo_axpy, c=+mu)
 //!   g = (l+ - l-) / (2 mu)
-//!   update    P[l] -= lr * g * z_l    for l in active      (zo_axpy, c=-lr*g)
+//!   update    P[l] += c_l * z_l       per optimizer Coeff  (zo_axpy)
 //! ```
+//! and the one-sided batched schedule ([`ProbeSchedule::OneSided`], used
+//! by the FZOO-style rule) probes `B` independent directions against one
+//! baseline forward, yielding `B` projected gradients per step.
+//!
 //! The perturbation `z_l` is *regenerated* inside the backend's zo_axpy
 //! kernel from `(seed, element index)` — MeZO's memory trick, made
-//! structural: the same `(step, unit)` seed re-derives the identical
-//! Gaussian stream in all four phases, so `z` is never materialized.
+//! structural: the same `(step, probe, unit)` seed re-derives the
+//! identical Gaussian stream in every phase, so `z` is never materialized.
+//! A [`Coeff`] may reference a *past* step's `(step, unit)` pair — that is
+//! the seed-replay trick the momentum/Adam rules use for their first
+//! moment (see `optim` module docs).
 //!
 //! LeZO's computation saving is the `active` set: dropped units are skipped
-//! in all four axpy phases (but never in the forward pass). MeZO is the
+//! in all axpy phases (but never in the forward pass). MeZO is the
 //! `active = all units` special case. The engine itself never touches
 //! PJRT or host floats — it only routes unit handles through the backend,
 //! so the identical code path runs natively and on-device.
 
 use crate::coordinator::metrics::{StageTimer, StageTimes};
-use crate::rng::zo_seed;
+use crate::coordinator::optim::{Coeff, ProbeSchedule, ZoOptimizer, ZoSgd};
+use crate::rng::{zo_probe_seed, zo_seed};
 use crate::runtime::backend::Backend;
 use anyhow::Result;
 
@@ -102,7 +113,8 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
         self.backend.zo_axpy_inplace(&mut units.bufs[k], units.lens[k], seed, c)
     }
 
-    /// Apply `c * z` to every active unit.
+    /// Apply `c * z` to every active unit along probe-0 (the classic
+    /// SPSA direction).
     fn sweep(
         &self,
         units: &mut TunableUnits<B>,
@@ -110,17 +122,43 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
         step: u64,
         c: f32,
     ) -> Result<()> {
+        self.probe_sweep(units, active, step, 0, c)
+    }
+
+    /// Apply `c * z` to every active unit along probe `probe`. Probe 0 uses
+    /// the pre-zoo seed derivation bit-for-bit (see [`zo_probe_seed`]).
+    fn probe_sweep(
+        &self,
+        units: &mut TunableUnits<B>,
+        active: &[usize],
+        step: u64,
+        probe: u64,
+        c: f32,
+    ) -> Result<()> {
         for &k in active {
-            let seed = zo_seed(self.run_seed, step, k);
+            let seed = zo_probe_seed(self.run_seed, step, probe, k);
             self.axpy(units, k, seed, c)?;
         }
         Ok(())
     }
 
-    /// One full Algorithm-1 step. `loss` is called twice with the current
-    /// unit buffers; it captures whatever else the forward pass needs
-    /// (frozen base units, the uploaded batch). Stage wall-times accumulate
-    /// into `times` (Fig. 2 instrumentation).
+    /// Apply an optimizer's update coefficients: `unit += c * z(step, probe)`
+    /// per [`Coeff`]. Coefficients may replay past steps' directions — the
+    /// Philox invariant guarantees the regenerated stream is the one that
+    /// step perturbed with.
+    fn apply_coeffs(&self, units: &mut TunableUnits<B>, coeffs: &[Coeff]) -> Result<()> {
+        for c in coeffs {
+            debug_assert!(c.unit < units.n_units());
+            let seed = zo_probe_seed(self.run_seed, c.step, c.probe, c.unit);
+            self.axpy(units, c.unit, seed, c.c)?;
+        }
+        Ok(())
+    }
+
+    /// One full Algorithm-1 step under the classic ZO-SGD rule. Delegates
+    /// to [`Self::zo_step_opt`] with a throwaway [`ZoSgd`] so there is
+    /// exactly ONE step code path — `zo_opt=zo-sgd` being bit-identical to
+    /// the pre-zoo trajectory is structural, not an accident of testing.
     pub fn zo_step(
         &self,
         step: u64,
@@ -130,33 +168,90 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
         loss: &mut dyn FnMut(&TunableUnits<B>) -> Result<f32>,
         times: &mut StageTimes,
     ) -> Result<ZoStep> {
+        self.zo_step_opt(step, units, active, lr, &mut ZoSgd, loss, times)
+    }
+
+    /// One ZO step under a pluggable update rule. The optimizer picks the
+    /// probe schedule (two-sided classic, or one-sided batched) and maps
+    /// the projected gradient(s) to update coefficients; the engine owns
+    /// perturbation, forwards, and coefficient application. `loss` captures
+    /// whatever else the forward pass needs (frozen base units, the
+    /// uploaded batch). Stage wall-times accumulate into `times` (Fig. 2
+    /// instrumentation).
+    pub fn zo_step_opt(
+        &self,
+        step: u64,
+        units: &mut TunableUnits<B>,
+        active: &[usize],
+        lr: f32,
+        opt: &mut dyn ZoOptimizer,
+        loss: &mut dyn FnMut(&TunableUnits<B>) -> Result<f32>,
+        times: &mut StageTimes,
+    ) -> Result<ZoStep> {
         debug_assert!(active.iter().all(|&k| k < units.n_units()));
+        let active_params = active.iter().map(|&k| units.lens[k]).sum();
         let mut t = StageTimer::start();
 
-        // perturb +mu
-        self.sweep(units, active, step, self.mu)?;
-        times.perturb_secs += t.lap();
-        let loss_plus = loss(units)?;
-        times.forward_secs += t.lap();
+        match opt.schedule() {
+            ProbeSchedule::TwoSided => {
+                // perturb +mu
+                self.sweep(units, active, step, self.mu)?;
+                times.perturb_secs += t.lap();
+                let loss_plus = loss(units)?;
+                times.forward_secs += t.lap();
 
-        // flip to -mu
-        self.sweep(units, active, step, -2.0 * self.mu)?;
-        times.perturb_secs += t.lap();
-        let loss_minus = loss(units)?;
-        times.forward_secs += t.lap();
+                // flip to -mu
+                self.sweep(units, active, step, -2.0 * self.mu)?;
+                times.perturb_secs += t.lap();
+                let loss_minus = loss(units)?;
+                times.forward_secs += t.lap();
 
-        // restore to theta
-        self.sweep(units, active, step, self.mu)?;
-        times.perturb_secs += t.lap();
+                // restore to theta
+                self.sweep(units, active, step, self.mu)?;
+                times.perturb_secs += t.lap();
 
-        // ZO-SGD update with the regenerated stream
-        let projected_grad = (loss_plus - loss_minus) / (2.0 * self.mu);
-        self.sweep(units, active, step, -lr * projected_grad)?;
-        times.update_secs += t.lap();
-        times.steps += 1;
+                // update along the optimizer's coefficients
+                let projected_grad = (loss_plus - loss_minus) / (2.0 * self.mu);
+                let coeffs = opt.coeffs(step, &[projected_grad], active, lr);
+                self.apply_coeffs(units, &coeffs)?;
+                times.update_secs += t.lap();
+                times.steps += 1;
 
-        let active_params = active.iter().map(|&k| units.lens[k]).sum();
-        Ok(ZoStep { loss_plus, loss_minus, projected_grad, active_params })
+                Ok(ZoStep { loss_plus, loss_minus, projected_grad, active_params })
+            }
+            ProbeSchedule::OneSided { probes } => {
+                anyhow::ensure!(probes >= 1, "one-sided schedule needs >= 1 probe");
+                // one baseline forward, shared by every probe
+                let l0 = loss(units)?;
+                times.forward_secs += t.lap();
+
+                let mut gs = Vec::with_capacity(probes);
+                for p in 0..probes as u64 {
+                    self.probe_sweep(units, active, step, p, self.mu)?;
+                    times.perturb_secs += t.lap();
+                    let lp = loss(units)?;
+                    times.forward_secs += t.lap();
+                    self.probe_sweep(units, active, step, p, -self.mu)?;
+                    times.perturb_secs += t.lap();
+                    gs.push((lp - l0) / self.mu);
+                }
+
+                let coeffs = opt.coeffs(step, &gs, active, lr);
+                self.apply_coeffs(units, &coeffs)?;
+                times.update_secs += t.lap();
+                times.steps += 1;
+
+                // one-sided probes share the baseline: report it as both
+                // endpoints so loss() is the unperturbed training loss
+                let g_mean = gs.iter().sum::<f32>() / gs.len() as f32;
+                Ok(ZoStep {
+                    loss_plus: l0,
+                    loss_minus: l0,
+                    projected_grad: g_mean,
+                    active_params,
+                })
+            }
+        }
     }
 
     // ---- Sparse-MeZO (element-wise magnitude mask) -------------------------
@@ -364,6 +459,88 @@ mod tests {
     }
 
     #[test]
+    fn zo_step_opt_sgd_is_bit_identical_to_zo_step() {
+        // the zoo's anchor invariant: routing the classic rule through the
+        // ZoOptimizer plumbing must reproduce the exact same trajectory —
+        // same seeds, same axpy order, same f32 coefficients
+        use crate::coordinator::optim::ZoSgd;
+        let (b, spec) = setup();
+        let eng = SpsaEngine::new(&b, 1e-3, 42).unwrap();
+        let mut classic = tunable(&b, &spec);
+        let mut via_opt = tunable(&b, &spec);
+        let active: Vec<usize> = (0..classic.n_units()).filter(|&k| k != 1).collect();
+        let mut times = StageTimes::default();
+        let mut loss = |u: &TunableUnits<NativeBackend>| -> Result<f32> {
+            let v = b.download(&u.bufs[0])?;
+            Ok(v.iter().take(100).sum::<f32>())
+        };
+        let mut opt = ZoSgd;
+        for t in 0..3 {
+            let a = eng.zo_step(t, &mut classic, &active, 1e-3, &mut loss, &mut times).unwrap();
+            let c = eng
+                .zo_step_opt(t, &mut via_opt, &active, 1e-3, &mut opt, &mut loss, &mut times)
+                .unwrap();
+            assert_eq!(a.loss_plus, c.loss_plus);
+            assert_eq!(a.projected_grad, c.projected_grad);
+        }
+        assert_eq!(
+            classic.to_host(&b).unwrap(),
+            via_opt.to_host(&b).unwrap(),
+            "zo-sgd through the optimizer plumbing must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn one_sided_lr_zero_step_restores_every_unit() {
+        use crate::coordinator::optim::ZoFzoo;
+        let (b, spec) = setup();
+        let eng = SpsaEngine::new(&b, 1e-3, 13).unwrap();
+        let mut units = tunable(&b, &spec);
+        let orig = units.to_host(&b).unwrap();
+        let active: Vec<usize> = (0..units.n_units()).collect();
+        let mut times = StageTimes::default();
+        let mut opt = ZoFzoo::new(4);
+        let mut loss = |_: &TunableUnits<NativeBackend>| -> Result<f32> { Ok(1.0) };
+        let zs = eng
+            .zo_step_opt(0, &mut units, &active, 0.0, &mut opt, &mut loss, &mut times)
+            .unwrap();
+        assert_eq!(zs.loss(), 1.0, "one-sided loss is the baseline forward");
+        // 5 forwards: baseline + one per probe
+        let after = units.to_host(&b).unwrap();
+        for (k, (a, o)) in after.iter().zip(&orig).enumerate() {
+            for (x, y) in a.iter().zip(o) {
+                assert!((x - y).abs() < 1e-4, "unit {k}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn momentum_replay_never_touches_dropped_units() {
+        // a unit outside every step's active set must be bit-untouched even
+        // though the optimizer replays history across steps
+        use crate::coordinator::optim::ZoMomentum;
+        let (b, spec) = setup();
+        let eng = SpsaEngine::new(&b, 1e-2, 21).unwrap();
+        let mut units = tunable(&b, &spec);
+        let orig = units.to_host(&b).unwrap();
+        let active: Vec<usize> = (0..units.n_units()).filter(|&k| k != 2).collect();
+        let mut times = StageTimes::default();
+        let mut opt = ZoMomentum::new(0.9);
+        let mut loss = |u: &TunableUnits<NativeBackend>| -> Result<f32> {
+            let v = b.download(&u.bufs[1])?;
+            Ok(v.iter().map(|x| x * x).sum::<f32>())
+        };
+        for t in 0..4 {
+            eng.zo_step_opt(t, &mut units, &active, 1e-3, &mut opt, &mut loss, &mut times)
+                .unwrap();
+        }
+        let after = units.to_host(&b).unwrap();
+        assert_eq!(after[2], orig[2], "dropped unit must be untouched by replay");
+        assert_ne!(after[1], orig[1], "active unit must move");
+        assert!(opt.state_bytes() > 0);
+    }
+
+    #[test]
     fn masked_step_with_lr_zero_restores_exactly() {
         let (b, spec) = setup();
         let eng = SpsaEngine::new(&b, 1e-3, 9).unwrap();
@@ -374,7 +551,7 @@ mod tests {
             .iter()
             .map(|u| {
                 let mut mags: Vec<f32> = u.iter().map(|x| x.abs()).collect();
-                mags.sort_by(|a, c| a.partial_cmp(c).unwrap());
+                mags.sort_by(f32::total_cmp);
                 mags[mags.len() / 2]
             })
             .collect();

@@ -18,6 +18,7 @@
 use crate::config::{Method, RunConfig};
 use crate::coordinator::fo::{FoEngine, FoOptimizer};
 use crate::coordinator::metrics::{StageTimer, StageTimes};
+use crate::coordinator::optim::{make_optimizer, resolve_zo_opt, ZoAdam, ZoOptKind, ZoOptimizer};
 use crate::coordinator::policy::PolicySelector;
 use crate::coordinator::spsa::{SpsaEngine, TunableUnits};
 use crate::data::batch::{bucket_for_instances, Batch};
@@ -68,6 +69,14 @@ pub struct TrainReport {
     /// the paper's "FT costs 12x memory" comparison
     /// (`metrics::MemoryModel`).
     pub fo_state_bytes: usize,
+    /// Bytes of ZO optimizer state ([`ZoOptimizer::state_bytes`]): the
+    /// seed-replay history of the momentum/Adam rules — scalars, not
+    /// parameter-sized moment buffers. 0 for stateless rules and FO runs;
+    /// compare against `fo_state_bytes`.
+    pub zo_state_bytes: usize,
+    /// The ZO update rule the run executed (after the `LEZO_ZO_OPT`
+    /// override); [`ZoOptKind::Sgd`] for non-ZO runs.
+    pub zo_opt: ZoOptKind,
 }
 
 impl TrainReport {
@@ -243,6 +252,11 @@ impl Trainer {
     /// Execute the configured run on a caller-supplied backend.
     pub fn run_with<B: Backend>(&self, backend: &B) -> Result<TrainReport> {
         let cfg = &self.cfg;
+        cfg.validate()?;
+        // a bad LEZO_ZO_OPT is a hard error for every method (same
+        // strictness as LEZO_THREADS / LEZO_PRECISION), even when the run
+        // would never consult it
+        crate::coordinator::optim::env_zo_opt()?;
         let spec = backend.spec().clone();
         let task = make_task(&cfg.task)?;
         let evals = eval_set(task.as_ref(), cfg.seed, cfg.eval_examples, cfg.mean_len);
@@ -313,6 +327,8 @@ impl Trainer {
                 &examples.iter().map(|e| e.prompt.len() as f64).collect::<Vec<_>>(),
             ),
             fo_state_bytes: 0,
+            zo_state_bytes: 0,
+            zo_opt: ZoOptKind::Sgd,
         })
     }
 
@@ -356,10 +372,22 @@ impl Trainer {
         if cfg.method == Method::Mezo && cfg.drop_layers != 0 {
             bail!("MeZO is LeZO with drop_layers=0; got drop_layers={}", cfg.drop_layers);
         }
+        // the update rule: LEZO_ZO_OPT env wins over the config key
+        let zo_kind = resolve_zo_opt(cfg.zo_opt)?;
         if cfg.method == Method::Smezo {
             ensure!(cfg.drop_layers == 0, "Sparse-MeZO masks elements, not layers");
             ensure!(cfg.peft == PeftMode::Full, "Sparse-MeZO baseline is full-parameter");
+            ensure!(
+                zo_kind == ZoOptKind::Sgd,
+                "Sparse-MeZO runs the masked classic rule only and cannot compose with \
+                 zo_opt={zo_kind} (the element-wise mask bypasses the optimizer zoo)"
+            );
         }
+        let mut optimizer: Box<dyn ZoOptimizer> = match zo_kind {
+            // reuse the FT baseline's adam_* config keys
+            ZoOptKind::Adam => Box::new(ZoAdam::new(cfg.adam_beta1, cfg.adam_beta2, cfg.adam_eps)),
+            k => make_optimizer(k),
+        };
 
         // Sparse-MeZO: per-unit magnitude thresholds (the ranking step whose
         // cost the paper criticizes — timed into `other_secs`).
@@ -370,7 +398,9 @@ impl Trainer {
                 .iter()
                 .map(|u| {
                     let mut mags: Vec<f32> = u.iter().map(|x| x.abs()).collect();
-                    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    // total_cmp: a NaN weight must not panic the ranking
+                    // (NaNs sort above every |w|, so they stay masked out)
+                    mags.sort_by(f32::total_cmp);
                     let idx = ((mags.len() as f64 - 1.0) * cfg.smezo_keep) as usize;
                     mags[idx]
                 })
@@ -393,7 +423,6 @@ impl Trainer {
         let mut data_rng = Rng::new(derive(cfg.seed, purpose::DATA, 2));
         let mut history = Vec::new();
         let mut losses = Vec::with_capacity(cfg.steps);
-        let mut train_secs = 0.0f64;
         let mut best = f64::MIN;
         let mut frac_acc = 0.0f64;
         let mut len_acc = 0.0f64;
@@ -414,13 +443,20 @@ impl Trainer {
         best = best.max(m0.value);
 
         for step in 0..cfg.steps as u64 {
-            let sw = crate::util::Stopwatch::start();
+            // batch sampling/selection is bookkeeping, not model compute —
+            // one StageTimer lap books it into `other` (exactly like
+            // run_fo), and the engine fills perturb/forward/update. All
+            // training time flows through `times`, so `train_secs` below is
+            // `times.total()` by construction and the two can never
+            // disagree — the invariant the FT baseline already pins.
+            let mut t = StageTimer::start();
             let (batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, spec)?;
             let prepared = backend.prepare_batch(&batch)?;
             let active = selector.next_active(step);
             frac_acc += active.iter().map(|&k| tunable.lens[k]).sum::<usize>() as f64
                 / tunable.param_count() as f64;
             len_acc += mean_prompt;
+            times.other_secs += t.lap();
 
             let mut loss_fn = |tun: &TunableUnits<B>| -> Result<f32> {
                 let mut args: Vec<&B::Buffer> = Vec::new();
@@ -434,11 +470,18 @@ impl Trainer {
             let zs = if cfg.method == Method::Smezo {
                 engine.zo_step_masked(step, &mut tunable, &taus, cfg.lr as f32, &mut loss_fn, &mut times)?
             } else {
-                engine.zo_step(step, &mut tunable, &active, cfg.lr as f32, &mut loss_fn, &mut times)?
+                engine.zo_step_opt(
+                    step,
+                    &mut tunable,
+                    &active,
+                    cfg.lr as f32,
+                    optimizer.as_mut(),
+                    &mut loss_fn,
+                    &mut times,
+                )?
             };
             selector.feedback(&active, zs.projected_grad);
             losses.push(zs.loss());
-            train_secs += sw.secs();
 
             let s1 = step + 1;
             if s1 % cfg.eval_every as u64 == 0 || s1 == cfg.steps as u64 {
@@ -446,13 +489,13 @@ impl Trainer {
                 best = best.max(m.value);
                 history.push(EvalPoint {
                     step: s1,
-                    train_secs,
+                    train_secs: times.total(),
                     metric: m.value,
                     train_loss: zs.loss(),
                 });
                 crate::info!(
                     "step {s1}: loss={:.4} {}={:.1}% ({:.1}s train)",
-                    zs.loss(), m.kind, m.pct(), train_secs
+                    zs.loss(), m.kind, m.pct(), times.total()
                 );
             }
         }
@@ -468,11 +511,13 @@ impl Trainer {
             best_metric: best,
             history,
             losses,
+            train_secs: times.total(),
             stage_times: times,
-            train_secs,
             active_param_fraction: frac_acc / cfg.steps.max(1) as f64,
             mean_input_len: len_acc / cfg.steps.max(1) as f64,
             fo_state_bytes: 0,
+            zo_state_bytes: optimizer.state_bytes(),
+            zo_opt: zo_kind,
         })
     }
 
@@ -640,6 +685,8 @@ impl Trainer {
             active_param_fraction: 1.0,
             mean_input_len: len_acc / cfg.steps.max(1) as f64,
             fo_state_bytes: opt.state_bytes(),
+            zo_state_bytes: 0,
+            zo_opt: ZoOptKind::Sgd,
         })
     }
 }
@@ -760,6 +807,8 @@ mod tests {
             active_param_fraction: 0.5,
             mean_input_len: 20.0,
             fo_state_bytes: 0,
+            zo_state_bytes: 0,
+            zo_opt: ZoOptKind::Sgd,
         };
         assert_eq!(r.time_to_metric(0.8), Some(10.0));
         assert_eq!(r.steps_to_metric(0.9), Some(200));
@@ -806,6 +855,107 @@ mod tests {
             r.stage_times.total(),
             r.train_secs
         );
+    }
+
+    fn zo_nano_cfg() -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.model = "opt-nano".into();
+        cfg.backend = BackendKind::Native;
+        cfg.method = Method::Mezo;
+        cfg.steps = 2;
+        cfg.eval_every = 2;
+        cfg.eval_examples = 4;
+        cfg.train_examples = 8;
+        cfg.mean_len = 8;
+        cfg.lr = 1e-4;
+        cfg
+    }
+
+    #[test]
+    fn zo_stage_times_match_train_secs() {
+        // the ZO side of the accounting invariant the FT baseline pins:
+        // sampling is booked to `other`, so the stage total IS the train
+        // time — including Sparse-MeZO's pre-loop ranking cost
+        for method in [Method::Mezo, Method::Smezo] {
+            let mut cfg = zo_nano_cfg();
+            cfg.method = method;
+            let r = Trainer::new(cfg).run().unwrap();
+            assert_eq!(r.stage_times.steps, 2, "{method}");
+            assert!(r.stage_times.other_secs > 0.0, "{method}: sampling must be booked");
+            assert!(
+                (r.stage_times.total() - r.train_secs).abs() < 1e-9,
+                "{method}: stage total {} vs train {}",
+                r.stage_times.total(),
+                r.train_secs
+            );
+            let last = r.history.last().unwrap();
+            assert!(
+                (last.train_secs - r.train_secs).abs() < 1e-9,
+                "{method}: final eval point carries the same clock"
+            );
+        }
+    }
+
+    #[test]
+    fn zo_opt_variants_run_and_report() {
+        if std::env::var("LEZO_ZO_OPT").map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED zo_opt_variants_run_and_report: LEZO_ZO_OPT wins");
+            return;
+        }
+        for kind in [
+            ZoOptKind::Sgd,
+            ZoOptKind::Momentum,
+            ZoOptKind::Adam,
+            ZoOptKind::SignSgd,
+            ZoOptKind::Fzoo,
+        ] {
+            let mut cfg = zo_nano_cfg();
+            cfg.zo_opt = kind;
+            let r = Trainer::new(cfg).run().unwrap();
+            assert_eq!(r.zo_opt, kind);
+            assert_eq!(r.losses.len(), 2, "{kind}");
+            assert!(r.losses.iter().all(|l| l.is_finite()), "{kind}");
+            assert!(
+                (r.stage_times.total() - r.train_secs).abs() < 1e-9,
+                "{kind}: accounting invariant holds for every rule"
+            );
+            match kind {
+                ZoOptKind::Momentum | ZoOptKind::Adam => assert!(
+                    r.zo_state_bytes > 0,
+                    "{kind}: replay history must be accounted"
+                ),
+                _ => assert_eq!(r.zo_state_bytes, 0, "{kind}: stateless rule"),
+            }
+        }
+    }
+
+    #[test]
+    fn smezo_rejects_non_sgd_zo_opt() {
+        if std::env::var("LEZO_ZO_OPT").map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED smezo_rejects_non_sgd_zo_opt: LEZO_ZO_OPT wins");
+            return;
+        }
+        let mut cfg = zo_nano_cfg();
+        cfg.method = Method::Smezo;
+        cfg.zo_opt = ZoOptKind::Adam;
+        let err = Trainer::new(cfg).run().unwrap_err();
+        assert!(err.to_string().contains("zo_opt"), "{err}");
+    }
+
+    #[test]
+    fn trainer_rejects_panicky_configs_up_front() {
+        // eval_every=0 used to be a modulo-by-zero panic mid-run in both
+        // run_zo and run_fo; steps=0 an empty-pool index panic
+        let mut cfg = zo_nano_cfg();
+        cfg.eval_every = 0;
+        let err = Trainer::new(cfg).run().unwrap_err();
+        assert!(err.to_string().contains("eval_every"), "{err}");
+
+        let mut cfg = zo_nano_cfg();
+        cfg.steps = 0;
+        cfg.train_examples = 0;
+        let err = Trainer::new(cfg).run().unwrap_err();
+        assert!(err.to_string().contains("steps"), "{err}");
     }
 
     #[test]

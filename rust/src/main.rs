@@ -25,7 +25,7 @@ fn usage() -> ! {
          lezo info    [model=<size>]\n  lezo render  task=<name> [n=K] [seed=S]\n\n\
          Common keys: model backend task method peft drop_layers lr mu steps\n\
          eval_every eval_examples train_examples seed icl_shots mean_len checkpoint\n\
-         precision threads\n\
+         precision threads zo_opt\n\
          (backend:   auto|native|pjrt — native needs no artifacts)\n\
          (method:    zero-shot|icl|ft|mezo|lezo|smezo, or a Table-4 alias\n\
           mezo-lora|lezo-lora|mezo-prefix|lezo-prefix that also sets peft)\n\
@@ -33,6 +33,9 @@ fn usage() -> ! {
          (precision: f32|bf16 — bf16 runs the native forward over half-width\n\
           shadows (half the streamed bytes); f32 masters stay authoritative.\n\
           Env LEZO_PRECISION overrides, like LEZO_THREADS for threads)\n\
+         (zo_opt:    zo-sgd|zo-sgd-momentum|zo-adam|zo-sign-sgd|fzoo — the ZO\n\
+          update rule; momentum/adam replay past directions from seeds.\n\
+          Env LEZO_ZO_OPT overrides, like LEZO_PRECISION)\n\
          Flags: -q quiet, -v verbose",
         bench::ALL_BENCHES.join(" ")
     );
@@ -72,6 +75,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
     println!("method         : {}", report.method);
     println!("backend        : {}", report.backend);
     println!("precision      : {}", report.precision);
+    if matches!(
+        report.method,
+        lezo::config::Method::Mezo | lezo::config::Method::Lezo | lezo::config::Method::Smezo
+    ) {
+        println!("zo opt         : {}", report.zo_opt);
+        if report.zo_state_bytes > 0 {
+            println!("zo opt state   : {} B (seed-replay history)", report.zo_state_bytes);
+        }
+    }
     println!("final {:>3}      : {:.1}%", report.metric_kind, 100.0 * report.final_metric);
     println!("best  {:>3}      : {:.1}%", report.metric_kind, 100.0 * report.best_metric);
     println!("train time     : {:.1}s", report.train_secs);

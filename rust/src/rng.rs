@@ -116,11 +116,27 @@ pub fn zo_seed(run_seed: u64, step: u64, unit: usize) -> i32 {
     (derive(run_seed, step, unit as u64) & 0x7FFF_FFFF) as i32
 }
 
+/// Seed for probe `probe` of (step, layer-unit). Probe 0 IS the classic
+/// SPSA direction — it must equal [`zo_seed`] bit-for-bit, both so
+/// `zo_opt=zo-sgd` stays bit-identical to the pre-zoo trajectory and so
+/// the seed-replay optimizers (momentum / Adam) regenerate exactly the
+/// stream a past step perturbed with. Probes >= 1 are the extra
+/// directions of the one-sided batched (FZOO-style) schedule.
+pub fn zo_probe_seed(run_seed: u64, step: u64, probe: u64, unit: usize) -> i32 {
+    if probe == 0 {
+        zo_seed(run_seed, step, unit)
+    } else {
+        zo_seed(derive(run_seed, purpose::PROBE, probe), step, unit)
+    }
+}
+
 pub mod purpose {
     pub const DATA: u64 = 0xDA7A;
     pub const SELECTOR: u64 = 0x5E1E;
     pub const EVAL: u64 = 0xE7A1;
     pub const INIT: u64 = 0x1217;
+    /// Extra perturbation directions of the one-sided batched schedule.
+    pub const PROBE: u64 = 0x9B0E;
 }
 
 #[cfg(test)]
@@ -240,6 +256,27 @@ mod tests {
         assert!(a >= 0);
         assert_ne!(zo_seed(123, 45, 6), zo_seed(123, 45, 7));
         assert_ne!(zo_seed(123, 45, 6), zo_seed(123, 46, 6));
+    }
+
+    #[test]
+    fn probe_zero_is_the_classic_zo_seed() {
+        // the bit-identity hinge of the optimizer zoo: probe 0 must be
+        // indistinguishable from the pre-zoo seed derivation
+        for (rs, step, unit) in [(0u64, 0u64, 0usize), (123, 45, 6), (7, 900, 3)] {
+            assert_eq!(zo_probe_seed(rs, step, 0, unit), zo_seed(rs, step, unit));
+        }
+    }
+
+    #[test]
+    fn probe_seeds_are_stable_distinct_and_nonnegative() {
+        let a = zo_probe_seed(123, 45, 2, 6);
+        assert_eq!(a, zo_probe_seed(123, 45, 2, 6));
+        assert!(a >= 0);
+        assert_ne!(a, zo_probe_seed(123, 45, 1, 6), "probes must differ");
+        assert_ne!(a, zo_probe_seed(123, 45, 0, 6));
+        assert_ne!(a, zo_probe_seed(123, 46, 2, 6), "steps must differ");
+        assert_ne!(a, zo_probe_seed(123, 45, 2, 7), "units must differ");
+        assert_ne!(a, zo_probe_seed(124, 45, 2, 6), "runs must differ");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use lezo::config::{Method, RunConfig};
 use lezo::coordinator::fo::{FoEngine, FoOptimizer};
+use lezo::coordinator::optim::{make_optimizer, ZoOptKind};
 use lezo::coordinator::metrics::StageTimes;
 use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
 use lezo::coordinator::{trainer, Trainer};
@@ -668,6 +669,127 @@ fn e2e_fo_adam_beats_zo_sgd_in_steps_to_loss() {
         fo_losses.last(),
         zo_losses.last()
     );
+}
+
+// ---------------------------------------------------------------------------
+// ZO optimizer zoo (coordinator/optim.rs): every update rule converges on
+// the fixed batch, momentum/adam reach a target loss in fewer steps than
+// plain ZO-SGD, and each variant is seed-pinned reproducible.
+//
+// Margins are calibrated against the Python twin (jax, python/compile/model:
+// same architecture, init distribution, batch, and update-rule recursions)
+// across 7 seeds — asserted margins sit at <= half the observed minimum.
+// ---------------------------------------------------------------------------
+
+/// One fixed-batch ZO trajectory under `kind` (engine seed 7, mu=1e-3).
+fn run_zo_variant(kind: ZoOptKind, lr: f32, steps: u64) -> Vec<f32> {
+    let backend = NativeBackend::preset("opt-nano").unwrap();
+    let host = backend.initial_params("").unwrap().0;
+    let mut units = TunableUnits::from_host(&backend, &host).unwrap();
+    let engine = SpsaEngine::new(&backend, 1e-3, 7).unwrap();
+    let active: Vec<usize> = (0..units.n_units()).collect();
+    let batch = fixed_batch(4, 16);
+    let prepared = backend.prepare_batch(&batch).unwrap();
+    let mut loss_fn = |u: &TunableUnits<NativeBackend>| -> anyhow::Result<f32> {
+        backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+    };
+    let mut opt = make_optimizer(kind);
+    let mut times = StageTimes::default();
+    let mut losses = Vec::new();
+    for step in 0..steps {
+        let zs = engine
+            .zo_step_opt(step, &mut units, &active, lr, opt.as_mut(), &mut loss_fn, &mut times)
+            .unwrap();
+        assert!(zs.loss().is_finite(), "{kind} step {step}: loss diverged");
+        losses.push(zs.loss());
+    }
+    losses
+}
+
+#[test]
+fn e2e_zo_variants_each_overfit_the_fixed_batch() {
+    // Calibrated 30-step first-5 vs last-5 drops (min over 7 sim seeds):
+    // momentum@1e-3 +0.075, adam@3e-3 +0.050, sign@3e-3 +0.052,
+    // fzoo@3e-3 +0.090 — each asserted margin has >= 1.6x headroom.
+    for (kind, lr, margin) in [
+        (ZoOptKind::Momentum, 1e-3f32, 0.04f32),
+        (ZoOptKind::Adam, 3e-3, 0.03),
+        (ZoOptKind::SignSgd, 3e-3, 0.025),
+        (ZoOptKind::Fzoo, 3e-3, 0.04),
+    ] {
+        let losses = run_zo_variant(kind, lr, 30);
+        let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let last: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+        assert!(
+            last < first - margin,
+            "{kind} must overfit the fixed batch: first-5 mean {first:.4}, last-5 mean {last:.4}"
+        );
+    }
+}
+
+#[test]
+fn e2e_zo_momentum_and_adam_beat_sgd_in_steps_to_loss() {
+    // The zoo's reason to exist: seed-replay momentum/adam reach a target
+    // loss in fewer steps than the plain rule. Trajectories are smoothed
+    // (window 5) before the crossing test because single ZO losses bounce
+    // with the probe direction. Calibration (7 sim seeds, 60 steps, target
+    // = start - 0.08 nats): sgd@1e-3 crosses at step 30..None, momentum@1e-3
+    // at 10..26, adam@3e-3 at 20..38 — the variant led by >= 6 steps at
+    // every seed, so the strict `<` below has headroom.
+    let sgd = run_zo_variant(ZoOptKind::Sgd, 1e-3, 60);
+    let momentum = run_zo_variant(ZoOptKind::Momentum, 1e-3, 60);
+    let adam = run_zo_variant(ZoOptKind::Adam, 3e-3, 60);
+
+    let smoothed = |xs: &[f32]| -> Vec<f32> {
+        xs.windows(5).map(|w| w.iter().sum::<f32>() / 5.0).collect()
+    };
+    let s_sgd = smoothed(&sgd);
+    let target = s_sgd[0] - 0.08;
+    let steps_to = |xs: &[f32]| smoothed(xs).iter().position(|&l| l <= target);
+
+    let sgd_steps = steps_to(&sgd);
+    for (name, variant) in [("zo-sgd-momentum", &momentum), ("zo-adam", &adam)] {
+        let v = steps_to(variant)
+            .unwrap_or_else(|| panic!("{name} never dropped 0.08 nats: {variant:?}"));
+        match sgd_steps {
+            None => {} // plain ZO-SGD never got there — the variant wins outright
+            Some(s) => assert!(
+                v < s,
+                "{name} must reach loss {target:.3} in fewer steps: {v} vs sgd {s}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn zo_variants_are_seed_pinned_reproducible_and_distinct() {
+    // Same seed + same rule => bit-identical trajectory; different rules
+    // diverge (momentum's step 0 equals sgd's by construction, so the
+    // comparison looks at whole 8-step trajectories, which separate once
+    // the replay history kicks in).
+    let kinds = [
+        ZoOptKind::Sgd,
+        ZoOptKind::Momentum,
+        ZoOptKind::Adam,
+        ZoOptKind::SignSgd,
+        ZoOptKind::Fzoo,
+    ];
+    let mut trajectories = Vec::new();
+    for kind in kinds {
+        let a = run_zo_variant(kind, 1e-3, 8);
+        let b = run_zo_variant(kind, 1e-3, 8);
+        assert_eq!(a, b, "{kind}: same seed must replay bit-identically");
+        trajectories.push((kind, a));
+    }
+    for i in 0..trajectories.len() {
+        for j in i + 1..trajectories.len() {
+            assert_ne!(
+                trajectories[i].1, trajectories[j].1,
+                "{} and {} must produce different trajectories",
+                trajectories[i].0, trajectories[j].0
+            );
+        }
+    }
 }
 
 #[test]
