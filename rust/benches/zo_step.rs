@@ -30,8 +30,11 @@
 //! Besides the stdout table, every run writes a machine-readable report to
 //! `BENCH_native.json` (override with `LEZO_BENCH_JSON=<path>`) so the perf
 //! trajectory is tracked across PRs: per-kernel ms + effective GB/s,
-//! MeZO-vs-LeZO step times, and the perturb/forward/update stage split from
-//! `StageTimes`. CI smoke-checks that the file is produced and well-formed.
+//! MeZO-vs-LeZO step times, the perturb/forward/update stage split from
+//! `StageTimes`, and a checkpoint-overhead row (`checkpoint[]`: atomic
+//! `save_state` wall-clock + serialized envelope bytes — the per-save cost
+//! behind `save_every`). CI smoke-checks that the file is produced and
+//! well-formed.
 //!
 //! Usage: `cargo bench -- [native:MODEL|pjrt:MODEL ...]`
 //! (default: `native:opt-micro`, plus every pjrt model with artifacts).
@@ -41,6 +44,7 @@ use lezo::coordinator::metrics::StageTimes;
 use lezo::coordinator::optim::{make_optimizer, ZoOptKind, ZoOptimizer, ZoSgd, FZOO_PROBES};
 use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
 use lezo::data::batch::Batch;
+use lezo::model::checkpoint::{self, HistPoint, TrainState};
 use lezo::peft::PeftMode;
 use lezo::runtime::backend::{Backend, Precision};
 use lezo::runtime::native::parallel;
@@ -124,6 +128,16 @@ struct StepStat {
     tunable_params: usize,
 }
 
+struct CheckpointStat {
+    precision: &'static str,
+    /// Wall-clock of one atomic `save_state` (serialize + tmp write + fsync
+    /// + rename) of a full-model TrainState to local disk.
+    save_ms: f64,
+    /// Serialized envelope size — dominated by the f32 params, so for a
+    /// given model it is precision-independent (masters stay f32).
+    bytes: usize,
+}
+
 struct TargetReport {
     backend: &'static str,
     model: String,
@@ -132,6 +146,7 @@ struct TargetReport {
     kernels: Vec<KernelStat>,
     forward: Vec<ForwardStat>,
     steps: Vec<StepStat>,
+    checkpoint: Vec<CheckpointStat>,
 }
 
 impl TargetReport {
@@ -146,6 +161,7 @@ impl TargetReport {
             kernels: vec![],
             forward: vec![],
             steps: vec![],
+            checkpoint: vec![],
         }
     }
 }
@@ -162,7 +178,7 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
     let mut s = String::new();
     let _ = write!(
         s,
-        "{{\n  \"version\": 3,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
+        "{{\n  \"version\": 4,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
         parallel::effective_threads()
     );
     for (ti, t) in targets.iter().enumerate() {
@@ -226,6 +242,19 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
                 json_num(st.non_forward_fraction),
                 json_num(st.forward_bytes),
                 st.tunable_params
+            );
+        }
+        s.push_str("\n      ],\n      \"checkpoint\": [");
+        for (i, c) in t.checkpoint.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n        {{\"precision\": \"{}\", \"save_ms\": {}, \"bytes\": {}}}",
+                c.precision,
+                json_num(c.save_ms),
+                c.bytes
             );
         }
         s.push_str("\n      ]\n    }");
@@ -425,6 +454,46 @@ fn bench_into<B: Backend>(backend: &B, iters: usize, report: &mut TargetReport) 
         );
         report.steps.push(st);
     }
+
+    // --- checkpoint overhead: one atomic save of a full-model TrainState ---
+    // the per-save cost the trainer pays every `save_every` steps (serialize
+    // + tmp write + fsync + rename); bytes is the envelope size on disk
+    let drill_steps = 64u64;
+    let st = TrainState {
+        config: format!("bench model={} precision={prec}", spec.name),
+        kind: "zo".to_string(),
+        step: drill_steps,
+        params: host.clone(),
+        losses: (0..drill_steps).map(|s| 2.0 + (s as f32) * 1e-3).collect(),
+        grads: (0..drill_steps).map(|s| (s as f32) * 1e-4 - 3e-3).collect(),
+        skipped: vec![false; drill_steps as usize],
+        history: (0..4)
+            .map(|i| HistPoint {
+                step: i * 16,
+                train_secs: i as f64,
+                metric: 0.5 + 0.01 * i as f64,
+                train_loss: 2.0,
+            })
+            .collect(),
+        stage_secs: [1.0, 2.0, 0.5, 0.1],
+        stage_steps: drill_steps,
+        ..Default::default()
+    };
+    let bytes = st.to_bytes().len();
+    let ckpt_path = std::env::temp_dir().join(format!(
+        "lezo_bench_ckpt_{}_{prec}_{}.ckpt",
+        spec.name,
+        std::process::id()
+    ));
+    let save_ms = time_ms(iters, || {
+        checkpoint::save_state(&ckpt_path, &st).unwrap();
+    });
+    std::fs::remove_file(&ckpt_path).ok();
+    println!(
+        "  checkpoint save {save_ms:>7.2} ms  ({:.2} MB atomic write+fsync)",
+        bytes as f64 / 1e6
+    );
+    report.checkpoint.push(CheckpointStat { precision: prec, save_ms, bytes });
 }
 
 /// Shared step-timing tail of the full-model and PEFT step benches: run

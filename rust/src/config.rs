@@ -5,6 +5,7 @@
 //! can be round-tripped through a simple `key = value` config-file format
 //! (no serde offline; the format is intentionally trivial).
 
+use crate::coordinator::faults::{FaultPlan, NonFinitePolicy};
 use crate::coordinator::optim::ZoOptKind;
 use crate::coordinator::policy::Policy;
 use crate::peft::PeftMode;
@@ -143,6 +144,26 @@ pub struct RunConfig {
     /// `precision`/`LEZO_PRECISION`. Only meaningful for ZO methods;
     /// `zo-sgd` is the classic (and bit-pinned) default.
     pub zo_opt: ZoOptKind,
+    /// Resume behavior: `auto` (pick up `<artifact_dir>/train_state.ckpt`
+    /// when present — resumed runs are bit-identical to uninterrupted ones),
+    /// `never`, or an explicit state-file path.
+    pub resume: String,
+    /// Write an atomic `TrainState` resume checkpoint every N steps
+    /// (0 = disabled, the default — fault-free runs are byte-for-byte
+    /// unchanged from the pre-checkpoint behavior).
+    pub save_every: usize,
+    /// Deterministic fault-injection plan (see `coordinator/faults.rs`),
+    /// e.g. `nan-loss@120,crash@250,io-err@save:2`. The `LEZO_FAULTS` env
+    /// var overrides this, mirroring `LEZO_PRECISION`. Empty = no faults.
+    pub faults: String,
+    /// What a non-finite forward loss does: `error` (default) names the
+    /// exact step/probe; `skip-step` restores the perturbation and skips
+    /// the update, recording the step as skipped.
+    pub on_nonfinite: NonFinitePolicy,
+    /// Divergence halt: abort when the smoothed recent loss exceeds this
+    /// multiple of the start loss (0 = disabled, the default; must be >= 1
+    /// when enabled).
+    pub divergence_factor: f64,
 }
 
 impl Default for RunConfig {
@@ -174,6 +195,11 @@ impl Default for RunConfig {
             threads: 0,
             precision: Precision::F32,
             zo_opt: ZoOptKind::Sgd,
+            resume: "auto".into(),
+            save_every: 0,
+            faults: String::new(),
+            on_nonfinite: NonFinitePolicy::Error,
+            divergence_factor: 0.0,
         }
     }
 }
@@ -226,6 +252,26 @@ impl RunConfig {
             "threads" => self.threads = parse!(),
             "precision" => self.precision = parse!(),
             "zo_opt" => self.zo_opt = parse!(),
+            "resume" => {
+                if value.is_empty() {
+                    bail!("resume must be auto|never|<state-file path>");
+                }
+                self.resume = value.to_string();
+            }
+            "save_every" => self.save_every = parse!(),
+            "faults" => {
+                // eager grammar check so a typo fails at the CLI, not mid-run
+                FaultPlan::parse(value).map_err(|e| anyhow!("bad value for faults: {e}"))?;
+                self.faults = value.to_string();
+            }
+            "on_nonfinite" | "on-nonfinite" => self.on_nonfinite = parse!(),
+            "divergence_factor" => {
+                let f: f64 = parse!();
+                if !f.is_finite() || (f != 0.0 && f < 1.0) {
+                    bail!("divergence_factor must be 0 (disabled) or >= 1, got {f}");
+                }
+                self.divergence_factor = f;
+            }
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -264,10 +310,12 @@ impl RunConfig {
         format!(
             "model = {}\ntask = {}\nmethod = {}\npeft = {}\ndrop_layers = {}\nlr = {}\n\
              mu = {}\nsteps = {}\neval_every = {}\neval_examples = {}\ntrain_examples = {}\n\
-             seed = {}\nicl_shots = {}\nmean_len = {}\nblocks_only = {}\nzo_opt = {}\n",
+             seed = {}\nicl_shots = {}\nmean_len = {}\nblocks_only = {}\nzo_opt = {}\n\
+             resume = {}\nsave_every = {}\non_nonfinite = {}\ndivergence_factor = {}\n",
             self.model, self.task, self.method, self.peft, self.drop_layers, self.lr,
             self.mu, self.steps, self.eval_every, self.eval_examples, self.train_examples,
             self.seed, self.icl_shots, self.mean_len, self.blocks_only, self.zo_opt,
+            self.resume, self.save_every, self.on_nonfinite, self.divergence_factor,
         )
     }
 
@@ -286,6 +334,19 @@ impl RunConfig {
         if !(0.0..=1.0).contains(&self.smezo_keep) {
             bail!("smezo_keep must be in [0, 1], got {}", self.smezo_keep);
         }
+        if !self.divergence_factor.is_finite()
+            || (self.divergence_factor != 0.0 && self.divergence_factor < 1.0)
+        {
+            bail!(
+                "divergence_factor must be 0 (disabled) or >= 1, got {}",
+                self.divergence_factor
+            );
+        }
+        if self.resume.is_empty() {
+            bail!("resume must be auto|never|<state-file path>");
+        }
+        FaultPlan::parse(&self.faults)
+            .map_err(|e| anyhow!("faults key does not parse: {e}"))?;
         Ok(())
     }
 }
@@ -404,6 +465,62 @@ mod tests {
         std::fs::write(&path, c0.to_file_format()).unwrap();
         let c1 = RunConfig::from_file(path.to_str().unwrap()).unwrap();
         assert_eq!(c1.zo_opt, ZoOptKind::Momentum);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn crash_safety_keys_parse() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.resume, "auto", "default resume mode is auto");
+        assert_eq!(c.save_every, 0, "checkpointing is off by default");
+        assert!(c.faults.is_empty());
+        assert_eq!(c.on_nonfinite, NonFinitePolicy::Error);
+        assert_eq!(c.divergence_factor, 0.0);
+
+        c.apply_overrides(&[
+            "resume=never".into(),
+            "save_every=25".into(),
+            "faults=nan-loss@120,crash@250,io-err@save:2".into(),
+            "on_nonfinite=skip-step".into(),
+            "divergence_factor=10".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.resume, "never");
+        assert_eq!(c.save_every, 25);
+        assert_eq!(c.faults, "nan-loss@120,crash@250,io-err@save:2");
+        assert_eq!(c.on_nonfinite, NonFinitePolicy::SkipStep);
+        assert_eq!(c.divergence_factor, 10.0);
+        // the hyphenated spelling from the paper issue is accepted too
+        c.set("on-nonfinite", "error").unwrap();
+        assert_eq!(c.on_nonfinite, NonFinitePolicy::Error);
+        // a path-valued resume is any other string
+        c.set("resume", "some/dir/train_state.ckpt").unwrap();
+        assert_eq!(c.resume, "some/dir/train_state.ckpt");
+
+        // bad values fail at the CLI, naming the problem
+        assert!(c.set("resume", "").is_err());
+        assert!(c.set("faults", "explode@9").is_err());
+        assert!(c.set("on_nonfinite", "ignore").is_err());
+        for bad in ["0.5", "-1", "NaN"] {
+            assert!(c.set("divergence_factor", bad).is_err(), "{bad}");
+        }
+        assert_eq!(c.divergence_factor, 10.0, "failed sets must not clobber");
+    }
+
+    #[test]
+    fn crash_safety_keys_round_trip_through_file_format() {
+        let mut c0 = RunConfig::default();
+        c0.set("save_every", "50").unwrap();
+        c0.set("on_nonfinite", "skip-step").unwrap();
+        c0.set("divergence_factor", "8").unwrap();
+        c0.set("resume", "never").unwrap();
+        let path = std::env::temp_dir().join("lezo_cfg_test_crash.conf");
+        std::fs::write(&path, c0.to_file_format()).unwrap();
+        let c1 = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c1.save_every, 50);
+        assert_eq!(c1.on_nonfinite, NonFinitePolicy::SkipStep);
+        assert_eq!(c1.divergence_factor, 8.0);
+        assert_eq!(c1.resume, "never");
         std::fs::remove_file(path).ok();
     }
 

@@ -1,0 +1,286 @@
+//! Deterministic fault injection for crash-safety tests, plus the
+//! non-finite-loss policy knob.
+//!
+//! A fault plan is a comma-separated list parsed from the `faults` config key
+//! (the `LEZO_FAULTS` env var overrides it, like `LEZO_PRECISION`; an
+//! unparseable env value is a hard error naming the variable):
+//!
+//! ```text
+//! nan-loss@K            first forward loss of step K returns NaN
+//! crash@K               injected crash after step K completes (post-save)
+//! crash@K:post-perturb  crash after step K's first perturbation sweep
+//! crash@K:post-eval     crash after step K's eval, before any save
+//! crash@K:pre-save      crash immediately before writing step K's state
+//! crash@K:mid-save      crash mid-write: leaves a torn temp file behind
+//! io-err@save:N         the N-th state save attempt fails with an io error
+//! ```
+//!
+//! Steps are the 1-based step counter the trainer logs. "Crashes" are
+//! propagated as ordinary errors carrying [`CRASH_MARKER`], so kill-and-resume
+//! tests run in-process while the on-disk state is exactly what a real crash
+//! at that boundary would leave.
+
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeSet;
+use std::fmt;
+use std::str::FromStr;
+
+/// Substring present in every injected-crash error, so tests and CI can tell
+/// an injected crash from a real failure.
+pub const CRASH_MARKER: &str = "injected crash";
+
+/// What to do when a forward probe returns a non-finite loss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NonFinitePolicy {
+    /// Hard error naming the step, probe and loss value (the default).
+    #[default]
+    Error,
+    /// Restore the perturbation, skip the update, record the step as skipped.
+    SkipStep,
+}
+
+impl FromStr for NonFinitePolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "error" => Ok(NonFinitePolicy::Error),
+            "skip-step" | "skip_step" => Ok(NonFinitePolicy::SkipStep),
+            other => bail!("unknown on_nonfinite policy '{other}' (expected error|skip-step)"),
+        }
+    }
+}
+
+impl fmt::Display for NonFinitePolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            NonFinitePolicy::Error => "error",
+            NonFinitePolicy::SkipStep => "skip-step",
+        })
+    }
+}
+
+/// Phase boundaries at which an injected crash can fire within a step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CrashPhase {
+    /// After the first perturbation sweep (the first forward of the step).
+    PostPerturb,
+    /// After the step's eval block, before any checkpoint write.
+    PostEval,
+    /// Immediately before the state write begins.
+    PreSave,
+    /// Mid-write: the temp file is half-written, then the crash fires.
+    MidSave,
+    /// After the step fully completes (including a successful save).
+    End,
+}
+
+impl CrashPhase {
+    fn parse(s: &str) -> Result<CrashPhase> {
+        Ok(match s {
+            "post-perturb" => CrashPhase::PostPerturb,
+            "post-eval" => CrashPhase::PostEval,
+            "pre-save" => CrashPhase::PreSave,
+            "mid-save" => CrashPhase::MidSave,
+            "end" => CrashPhase::End,
+            other => bail!(
+                "unknown crash phase '{other}' (expected post-perturb|post-eval|pre-save|mid-save|end)"
+            ),
+        })
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            CrashPhase::PostPerturb => "post-perturb",
+            CrashPhase::PostEval => "post-eval",
+            CrashPhase::PreSave => "pre-save",
+            CrashPhase::MidSave => "mid-save",
+            CrashPhase::End => "end",
+        }
+    }
+}
+
+/// Outcome the checkpoint writer should simulate for the current save.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SaveFault {
+    None,
+    /// This save attempt fails with an io error (training continues).
+    IoErr,
+    /// Write a torn temp file, then crash.
+    MidSave,
+}
+
+/// A parsed, deterministic fault plan. An empty plan (the default) costs a
+/// handful of set lookups per step and injects nothing.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    nan_loss: BTreeSet<u64>,
+    crashes: Vec<(u64, CrashPhase)>,
+    io_err_saves: BTreeSet<u64>,
+    save_attempts: u64,
+}
+
+impl FaultPlan {
+    /// Resolve the effective plan: `LEZO_FAULTS` wins over the config key, and
+    /// an unparseable env value is a hard error naming the variable (same
+    /// strictness rule as `LEZO_PRECISION` / `LEZO_ZO_OPT`).
+    pub fn resolve(cfg_faults: &str) -> Result<FaultPlan> {
+        match std::env::var("LEZO_FAULTS") {
+            Ok(v) if !v.trim().is_empty() => FaultPlan::parse(&v)
+                .map_err(|e| anyhow::anyhow!("invalid LEZO_FAULTS='{v}': {e}")),
+            _ => FaultPlan::parse(cfg_faults),
+        }
+    }
+
+    /// Parse the fault grammar (see module docs). Empty input is the empty plan.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let Some((kind, at)) = tok.split_once('@') else {
+                bail!("fault '{tok}' is not <kind>@<where> (e.g. nan-loss@120, crash@250, io-err@save:2)");
+            };
+            match kind {
+                "nan-loss" => {
+                    let step: u64 = at
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("nan-loss step '{at}' is not an integer"))?;
+                    ensure!(step > 0, "nan-loss step must be >= 1 (steps are 1-based)");
+                    plan.nan_loss.insert(step);
+                }
+                "crash" => {
+                    let (step_s, phase) = match at.split_once(':') {
+                        Some((k, p)) => (k, CrashPhase::parse(p)?),
+                        None => (at, CrashPhase::End),
+                    };
+                    let step: u64 = step_s
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("crash step '{step_s}' is not an integer"))?;
+                    ensure!(step > 0, "crash step must be >= 1 (steps are 1-based)");
+                    plan.crashes.push((step, phase));
+                }
+                "io-err" => {
+                    let Some(n_s) = at.strip_prefix("save:") else {
+                        bail!("io-err fault '{tok}' must be io-err@save:<N>");
+                    };
+                    let n: u64 = n_s
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("io-err save index '{n_s}' is not an integer"))?;
+                    ensure!(n > 0, "io-err save index is 1-based");
+                    plan.io_err_saves.insert(n);
+                }
+                other => bail!("unknown fault kind '{other}' (expected nan-loss|crash|io-err)"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True if the plan injects nothing (fast-path check for the hot loop).
+    pub fn is_empty(&self) -> bool {
+        self.nan_loss.is_empty() && self.crashes.is_empty() && self.io_err_saves.is_empty()
+    }
+
+    /// Should the first forward loss of 1-based step `s1` return NaN?
+    pub fn nan_loss_at(&self, s1: u64) -> bool {
+        self.nan_loss.contains(&s1)
+    }
+
+    /// Fire an injected crash if one is scheduled at `(s1, phase)`.
+    pub fn check_crash(&self, s1: u64, phase: CrashPhase) -> Result<()> {
+        if self.crashes.iter().any(|&(k, p)| k == s1 && p == phase) {
+            bail!("{CRASH_MARKER}: crash@{s1}:{} fault fired", phase.name());
+        }
+        Ok(())
+    }
+
+    /// Is a mid-save crash scheduled at step `s1`? (Checked by the state
+    /// writer so the torn temp file can be produced before the crash fires.)
+    pub fn mid_save_at(&self, s1: u64) -> bool {
+        self.crashes.iter().any(|&(k, p)| k == s1 && p == CrashPhase::MidSave)
+    }
+
+    /// Account one state-save attempt and report what it should do. The save
+    /// counter advances on every attempt, so `io-err@save:N` hits exactly the
+    /// N-th write of the run.
+    pub fn on_save_attempt(&mut self, s1: u64) -> SaveFault {
+        self.save_attempts += 1;
+        if self.mid_save_at(s1) {
+            SaveFault::MidSave
+        } else if self.io_err_saves.contains(&self.save_attempts) {
+            SaveFault::IoErr
+        } else {
+            SaveFault::None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let p = FaultPlan::parse("nan-loss@120,crash@250,io-err@save:2").unwrap();
+        assert!(p.nan_loss_at(120) && !p.nan_loss_at(121));
+        assert!(p.check_crash(250, CrashPhase::End).is_err());
+        assert!(p.check_crash(250, CrashPhase::PostEval).is_ok());
+        assert!(p.check_crash(249, CrashPhase::End).is_ok());
+        let mut p = p;
+        assert_eq!(p.on_save_attempt(1), SaveFault::None);
+        assert_eq!(p.on_save_attempt(2), SaveFault::IoErr);
+        assert_eq!(p.on_save_attempt(3), SaveFault::None);
+    }
+
+    #[test]
+    fn parses_crash_phases() {
+        for (s, phase) in [
+            ("crash@3:post-perturb", CrashPhase::PostPerturb),
+            ("crash@3:post-eval", CrashPhase::PostEval),
+            ("crash@3:pre-save", CrashPhase::PreSave),
+            ("crash@3:mid-save", CrashPhase::MidSave),
+            ("crash@3", CrashPhase::End),
+        ] {
+            let p = FaultPlan::parse(s).unwrap();
+            let err = p.check_crash(3, phase).unwrap_err().to_string();
+            assert!(err.contains(CRASH_MARKER), "{err}");
+        }
+    }
+
+    #[test]
+    fn mid_save_is_visible_to_the_writer() {
+        let mut p = FaultPlan::parse("crash@4:mid-save").unwrap();
+        assert!(p.mid_save_at(4));
+        assert_eq!(p.on_save_attempt(4), SaveFault::MidSave);
+    }
+
+    #[test]
+    fn rejects_bad_grammar() {
+        for bad in [
+            "bogus",
+            "nan-loss@x",
+            "nan-loss@0",
+            "crash@",
+            "crash@5:mid",
+            "io-err@load:1",
+            "io-err@save:0",
+            "explode@9",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(p.is_empty());
+        assert!(p.check_crash(1, CrashPhase::End).is_ok());
+        let p = FaultPlan::parse(" , ").unwrap();
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn nonfinite_policy_round_trips() {
+        for p in [NonFinitePolicy::Error, NonFinitePolicy::SkipStep] {
+            assert_eq!(p.to_string().parse::<NonFinitePolicy>().unwrap(), p);
+        }
+        assert!("explode".parse::<NonFinitePolicy>().is_err());
+    }
+}

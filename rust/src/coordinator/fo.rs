@@ -49,6 +49,21 @@ impl FoOptimizer {
             + self.v.iter().map(Vec::len).sum::<usize>())
     }
 
+    /// Borrow the full optimizer state for checkpointing: `(t, m, v)`.
+    /// Unlike the ZO rules there is no seed-replay shortcut — FO moments are
+    /// parameter-sized and must travel in the resume envelope verbatim.
+    pub fn snapshot(&self) -> (u64, &[Vec<f64>], &[Vec<f64>]) {
+        (self.t, &self.m, &self.v)
+    }
+
+    /// Restore checkpointed state (the inverse of [`Self::snapshot`]).
+    /// Empty moment buffers mean "not yet lazily initialized" and are valid.
+    pub fn restore(&mut self, t: u64, m: Vec<Vec<f64>>, v: Vec<Vec<f64>>) {
+        self.t = t;
+        self.m = m;
+        self.v = v;
+    }
+
     /// Apply one update in place: `params[k][i] -= lr * step(g)`.
     pub fn update(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f64) {
         debug_assert_eq!(params.len(), grads.len());
@@ -168,6 +183,33 @@ mod tests {
         // zero gradient: exactly no movement (0 / (0 + eps) = 0)
         assert_eq!(p[0][2], p0[2]);
         assert_eq!(opt.state_bytes(), 2 * 8 * p0.len());
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        // run 10 Adam steps; snapshot at step 6 into a fresh optimizer and
+        // finish both copies — the resumed trajectory must be bit-equal
+        let grads_for =
+            |p: &[Vec<f32>]| vec![p[0].iter().map(|&x| 2.0 * (x - 3.0)).collect::<Vec<f32>>()];
+        let mut full_opt = FoOptimizer::adam(0.9, 0.999, 1e-8);
+        let mut full_p = vec![vec![0.5f32, -1.0, 2.0]];
+        let mut resumed_opt = FoOptimizer::adam(0.9, 0.999, 1e-8);
+        let mut resumed_p = full_p.clone();
+        for s in 0..10 {
+            if s == 6 {
+                let (t, m, v) = full_opt.snapshot();
+                resumed_opt.restore(t, m.to_vec(), v.to_vec());
+                resumed_p = full_p.clone();
+            }
+            let g = grads_for(&full_p);
+            full_opt.update(&mut full_p, &g, 0.05);
+            if s >= 6 {
+                let g = grads_for(&resumed_p);
+                resumed_opt.update(&mut resumed_p, &g, 0.05);
+            }
+        }
+        assert_eq!(full_p, resumed_p, "restored Adam must continue bit-identically");
+        assert_eq!(full_opt.state_bytes(), resumed_opt.state_bytes());
     }
 
     #[test]

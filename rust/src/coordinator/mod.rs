@@ -12,10 +12,14 @@
 //!   executable under PJRT) — the paper's "FT" baseline and the in-repo
 //!   pretraining path.
 //! - [`trainer`]: the training loop gluing data, engine, eval and
-//!   checkpointing together.
+//!   checkpointing together — including atomic `TrainState` saves and
+//!   bit-identical resume.
+//! - [`faults`]: deterministic fault injection (`faults` key / `LEZO_FAULTS`)
+//!   and the non-finite-loss policy, so crash recovery is testable.
 //! - [`metrics`]: per-stage wall-time accounting (Figs. 2/4/5/6) and the
 //!   analytic memory model (the "FT = 12x memory" comparison).
 
+pub mod faults;
 pub mod fo;
 pub mod metrics;
 pub mod optim;
@@ -24,6 +28,7 @@ pub mod selector;
 pub mod spsa;
 pub mod trainer;
 
+pub use faults::{FaultPlan, NonFinitePolicy};
 pub use optim::{make_optimizer, ZoOptKind, ZoOptimizer};
 pub use policy::{Policy, PolicySelector};
 pub use selector::LayerSelector;

@@ -162,6 +162,14 @@ pub trait ZoOptimizer {
     fn state_bytes(&self) -> usize {
         0
     }
+
+    /// True if the rule carries state across steps that resume must rebuild
+    /// by replaying the stored per-step projected gradients through
+    /// [`Self::coeffs`] (the seed-replay rules: momentum, adam). Stateless
+    /// rules skip the replay — their update depends on the step alone.
+    fn stateful(&self) -> bool {
+        false
+    }
 }
 
 /// Build the default-hyperparameter optimizer for `kind`. The trainer
@@ -264,6 +272,10 @@ impl ZoOptimizer for ZoMomentum {
     fn state_bytes(&self) -> usize {
         replay_bytes(&self.hist)
     }
+
+    fn stateful(&self) -> bool {
+        true
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -332,6 +344,10 @@ impl ZoOptimizer for ZoAdam {
     fn state_bytes(&self) -> usize {
         // the scalar moment + step counter ride along with the history
         16 + replay_bytes(&self.hist)
+    }
+
+    fn stateful(&self) -> bool {
+        true
     }
 }
 
@@ -424,6 +440,34 @@ mod tests {
             let k: ZoOptKind = name.parse().unwrap();
             assert_eq!(k.to_string(), name);
         }
+    }
+
+    #[test]
+    fn seed_replay_state_rebuilds_bit_identically() {
+        // the resume contract: a fresh optimizer fed the stored per-step
+        // projected gradients must produce bit-identical coefficients on the
+        // next live step — there is no hidden state outside (step, g, active)
+        for kind in [ZoOptKind::Momentum, ZoOptKind::Adam] {
+            let gs = [0.3f32, -0.7, 0.05, 1.2, -0.01];
+            let actives: Vec<Vec<usize>> =
+                vec![vec![0, 1, 2], vec![0, 2], vec![1, 2], vec![0, 1], vec![2]];
+            let mut live = make_optimizer(kind);
+            assert!(live.stateful());
+            for (s, (&g, a)) in gs.iter().zip(&actives).enumerate() {
+                let _ = live.coeffs(s as u64, &[g], a, 1e-3);
+            }
+            let mut replayed = make_optimizer(kind);
+            for (s, (&g, a)) in gs.iter().zip(&actives).enumerate() {
+                let _ = replayed.coeffs(s as u64, &[g], a, 1e-3);
+            }
+            let next = live.coeffs(5, &[0.9], &[0, 1, 2], 1e-3);
+            let rebuilt = replayed.coeffs(5, &[0.9], &[0, 1, 2], 1e-3);
+            assert_eq!(next, rebuilt, "{kind:?} replay must be exact");
+            assert_eq!(live.state_bytes(), replayed.state_bytes());
+        }
+        assert!(!make_optimizer(ZoOptKind::Sgd).stateful());
+        assert!(!make_optimizer(ZoOptKind::SignSgd).stateful());
+        assert!(!make_optimizer(ZoOptKind::Fzoo).stateful());
     }
 
     #[test]

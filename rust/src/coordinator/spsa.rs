@@ -32,11 +32,12 @@
 //! PJRT or host floats — it only routes unit handles through the backend,
 //! so the identical code path runs natively and on-device.
 
+use crate::coordinator::faults::NonFinitePolicy;
 use crate::coordinator::metrics::{StageTimer, StageTimes};
 use crate::coordinator::optim::{Coeff, ProbeSchedule, ZoOptimizer, ZoSgd};
 use crate::rng::{zo_probe_seed, zo_seed};
 use crate::runtime::backend::Backend;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// A set of tunable flat units living on the backend. For full-parameter
 /// fine-tuning these are the model's layer units; under PEFT they are the
@@ -81,6 +82,9 @@ pub struct ZoStep {
     pub projected_grad: f32,
     /// Parameters touched this step (perturbed + updated).
     pub active_params: usize,
+    /// True when a non-finite forward loss made the engine restore the
+    /// perturbation and skip the update (`on_nonfinite=skip-step`).
+    pub skipped: bool,
 }
 
 impl ZoStep {
@@ -97,12 +101,15 @@ pub struct SpsaEngine<'b, B: Backend> {
     backend: &'b B,
     pub mu: f32,
     pub run_seed: u64,
+    /// What a non-finite forward loss does: hard error (default), or restore
+    /// the perturbation and skip the step (`on_nonfinite=skip-step`).
+    pub on_nonfinite: NonFinitePolicy,
 }
 
 impl<'b, B: Backend> SpsaEngine<'b, B> {
     pub fn new(backend: &'b B, mu: f32, run_seed: u64) -> Result<Self> {
         anyhow::ensure!(mu > 0.0, "perturbation scale mu must be positive");
-        Ok(SpsaEngine { backend, mu, run_seed })
+        Ok(SpsaEngine { backend, mu, run_seed, on_nonfinite: NonFinitePolicy::default() })
     }
 
     /// `unit <- unit + c * z(seed)` for one flat unit. Routed through the
@@ -171,6 +178,39 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
         self.zo_step_opt(step, units, active, lr, &mut ZoSgd, loss, times)
     }
 
+    /// Resolve a non-finite forward loss once the perturbation has already
+    /// been restored: error with the exact location, or mark the step
+    /// skipped. Skipped steps still count toward the stage timer so resumed
+    /// and uninterrupted runs agree on step accounting.
+    #[allow(clippy::too_many_arguments)]
+    fn nonfinite(
+        &self,
+        step: u64,
+        probe: u64,
+        l: f32,
+        active: &[usize],
+        active_params: usize,
+        times: &mut StageTimes,
+    ) -> Result<ZoStep> {
+        match self.on_nonfinite {
+            NonFinitePolicy::Error => bail!(
+                "non-finite loss {l} at step {}, probe {probe} (active units {active:?}); \
+                 set on_nonfinite=skip-step to restore the perturbation and skip instead",
+                step + 1
+            ),
+            NonFinitePolicy::SkipStep => {
+                times.steps += 1;
+                Ok(ZoStep {
+                    loss_plus: l,
+                    loss_minus: f32::NAN,
+                    projected_grad: f32::NAN,
+                    active_params,
+                    skipped: true,
+                })
+            }
+        }
+    }
+
     /// One ZO step under a pluggable update rule. The optimizer picks the
     /// probe schedule (two-sided classic, or one-sided batched) and maps
     /// the projected gradient(s) to update coefficients; the engine owns
@@ -199,12 +239,24 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
                 times.perturb_secs += t.lap();
                 let loss_plus = loss(units)?;
                 times.forward_secs += t.lap();
+                if !loss_plus.is_finite() {
+                    // restore theta from +mu before deciding the policy
+                    self.sweep(units, active, step, -self.mu)?;
+                    times.perturb_secs += t.lap();
+                    return self.nonfinite(step, 0, loss_plus, active, active_params, times);
+                }
 
                 // flip to -mu
                 self.sweep(units, active, step, -2.0 * self.mu)?;
                 times.perturb_secs += t.lap();
                 let loss_minus = loss(units)?;
                 times.forward_secs += t.lap();
+                if !loss_minus.is_finite() {
+                    // restore theta from -mu
+                    self.sweep(units, active, step, self.mu)?;
+                    times.perturb_secs += t.lap();
+                    return self.nonfinite(step, 0, loss_minus, active, active_params, times);
+                }
 
                 // restore to theta
                 self.sweep(units, active, step, self.mu)?;
@@ -217,13 +269,17 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
                 times.update_secs += t.lap();
                 times.steps += 1;
 
-                Ok(ZoStep { loss_plus, loss_minus, projected_grad, active_params })
+                Ok(ZoStep { loss_plus, loss_minus, projected_grad, active_params, skipped: false })
             }
             ProbeSchedule::OneSided { probes } => {
                 anyhow::ensure!(probes >= 1, "one-sided schedule needs >= 1 probe");
                 // one baseline forward, shared by every probe
                 let l0 = loss(units)?;
                 times.forward_secs += t.lap();
+                if !l0.is_finite() {
+                    // nothing perturbed yet — theta is already clean
+                    return self.nonfinite(step, 0, l0, active, active_params, times);
+                }
 
                 let mut gs = Vec::with_capacity(probes);
                 for p in 0..probes as u64 {
@@ -233,6 +289,9 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
                     times.forward_secs += t.lap();
                     self.probe_sweep(units, active, step, p, -self.mu)?;
                     times.perturb_secs += t.lap();
+                    if !lp.is_finite() {
+                        return self.nonfinite(step, p, lp, active, active_params, times);
+                    }
                     gs.push((lp - l0) / self.mu);
                 }
 
@@ -249,6 +308,7 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
                     loss_minus: l0,
                     projected_grad: g_mean,
                     active_params,
+                    skipped: false,
                 })
             }
         }
@@ -320,11 +380,23 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
         times.perturb_secs += t.lap();
         let loss_plus = loss(units)?;
         times.forward_secs += t.lap();
+        if !loss_plus.is_finite() {
+            self.masked_sweep(units, &pref, taus, step, -self.mu)?;
+            times.perturb_secs += t.lap();
+            let all: Vec<usize> = (0..units.n_units()).collect();
+            return self.nonfinite(step, 0, loss_plus, &all, units.param_count(), times);
+        }
 
         self.masked_sweep(units, &pref, taus, step, -2.0 * self.mu)?;
         times.perturb_secs += t.lap();
         let loss_minus = loss(units)?;
         times.forward_secs += t.lap();
+        if !loss_minus.is_finite() {
+            self.masked_sweep(units, &pref, taus, step, self.mu)?;
+            times.perturb_secs += t.lap();
+            let all: Vec<usize> = (0..units.n_units()).collect();
+            return self.nonfinite(step, 0, loss_minus, &all, units.param_count(), times);
+        }
 
         self.masked_sweep(units, &pref, taus, step, self.mu)?;
         times.perturb_secs += t.lap();
@@ -339,6 +411,7 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
             loss_minus,
             projected_grad,
             active_params: units.param_count(), // traffic-wise everything is touched
+            skipped: false,
         })
     }
 
@@ -538,6 +611,51 @@ mod tests {
         assert_eq!(after[2], orig[2], "dropped unit must be untouched by replay");
         assert_ne!(after[1], orig[1], "active unit must move");
         assert!(opt.state_bytes() > 0);
+    }
+
+    #[test]
+    fn nonfinite_loss_is_a_hard_error_by_default() {
+        let (b, spec) = setup();
+        let eng = SpsaEngine::new(&b, 1e-3, 3).unwrap();
+        let mut units = tunable(&b, &spec);
+        let active: Vec<usize> = (0..units.n_units()).collect();
+        let mut times = StageTimes::default();
+        let mut loss = |_: &TunableUnits<NativeBackend>| -> Result<f32> { Ok(f32::NAN) };
+        let err = eng
+            .zo_step(4, &mut units, &active, 1e-3, &mut loss, &mut times)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-finite loss"), "{err}");
+        assert!(err.contains("step 5") && err.contains("probe 0"), "{err}");
+        assert_eq!(times.steps, 0);
+    }
+
+    #[test]
+    fn skip_step_policy_restores_params_and_skips_update() {
+        use crate::coordinator::faults::NonFinitePolicy;
+        let (b, spec) = setup();
+        let mut eng = SpsaEngine::new(&b, 1e-3, 3).unwrap();
+        eng.on_nonfinite = NonFinitePolicy::SkipStep;
+        let mut units = tunable(&b, &spec);
+        let orig = units.to_host(&b).unwrap();
+        let active: Vec<usize> = (0..units.n_units()).collect();
+        let mut times = StageTimes::default();
+        // second forward (the -mu probe) is the non-finite one
+        let mut calls = 0u32;
+        let mut loss = |_: &TunableUnits<NativeBackend>| -> Result<f32> {
+            calls += 1;
+            Ok(if calls == 2 { f32::INFINITY } else { 1.0 })
+        };
+        let zs = eng.zo_step(0, &mut units, &active, 1e-3, &mut loss, &mut times).unwrap();
+        assert!(zs.skipped);
+        assert!(zs.loss().is_nan(), "skipped step reports the raw non-finite loss");
+        assert_eq!(times.steps, 1, "skipped steps still count in stage accounting");
+        let after = units.to_host(&b).unwrap();
+        for (k, (a, o)) in after.iter().zip(&orig).enumerate() {
+            for (x, y) in a.iter().zip(o) {
+                assert!((x - y).abs() < 1e-5, "unit {k}: {x} vs {y}");
+            }
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! frozen base on any backend whose `Backend::supports_peft` says yes.
 
 use crate::config::{Method, RunConfig};
+use crate::coordinator::faults::{CrashPhase, FaultPlan, NonFinitePolicy, SaveFault, CRASH_MARKER};
 use crate::coordinator::fo::{FoEngine, FoOptimizer};
 use crate::coordinator::metrics::{StageTimer, StageTimes};
 use crate::coordinator::optim::{make_optimizer, resolve_zo_opt, ZoAdam, ZoOptKind, ZoOptimizer};
@@ -23,6 +24,7 @@ use crate::coordinator::policy::PolicySelector;
 use crate::coordinator::spsa::{SpsaEngine, TunableUnits};
 use crate::data::batch::{bucket_for_instances, Batch};
 use crate::eval::{icl, EvalMetric, Evaluator};
+use crate::model::checkpoint::{self, HistPoint, TrainState};
 use crate::model::spec::ModelSpec;
 use crate::peft::PeftMode;
 use crate::rng::{derive, purpose, Rng};
@@ -30,6 +32,7 @@ use crate::runtime::backend::{Backend, BackendKind, Precision};
 use crate::runtime::NativeBackend;
 use crate::tasks::{eval_set, make_task, Example, TaskKind};
 use anyhow::{bail, ensure, Result};
+use std::path::{Path, PathBuf};
 
 /// One point on the convergence curve (Fig. 1): metric after `step` steps
 /// and `train_secs` of *training* wall time (eval time excluded).
@@ -77,6 +80,9 @@ pub struct TrainReport {
     /// The ZO update rule the run executed (after the `LEZO_ZO_OPT`
     /// override); [`ZoOptKind::Sgd`] for non-ZO runs.
     pub zo_opt: ZoOptKind,
+    /// `Some(k)` when the run resumed from a saved [`TrainState`] holding
+    /// `k` completed steps; `None` for fresh runs.
+    pub resumed_from: Option<u64>,
 }
 
 impl TrainReport {
@@ -220,6 +226,182 @@ fn ensure_precision<B: Backend>(backend: &B, precision: Precision) -> Result<()>
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Crash safety: resume resolution, config fingerprint, runtime guards
+// ---------------------------------------------------------------------------
+
+/// NaN-safe "is `m` a better metric than `best`?" fold. `f64::max` silently
+/// drops a NaN operand (IEEE returns the other one), which both hides a broken
+/// eval and lets a NaN `best` survive forever; here a NaN metric is reported
+/// loudly and never wins, while a NaN `best` yields to the first finite metric.
+fn better_metric(best: f64, m: f64) -> f64 {
+    if m.is_nan() {
+        crate::info!("eval metric is NaN — kept in history but excluded from best-metric selection");
+        return best;
+    }
+    if best.is_nan() || m.total_cmp(&best).is_gt() {
+        m
+    } else {
+        best
+    }
+}
+
+/// Trailing window the divergence guard averages over.
+const DIVERGENCE_WINDOW: usize = 8;
+
+/// Divergence guard: once at least [`DIVERGENCE_WINDOW`] finite losses exist,
+/// halt when their trailing mean exceeds `factor` times the first finite loss.
+/// A pure function of the loss record, so a resumed run (whose record is fully
+/// restored) halts at exactly the step the uninterrupted run would.
+fn divergence_reason(losses: &[f32], factor: f64) -> Option<String> {
+    let finite: Vec<f64> = losses.iter().filter(|l| l.is_finite()).map(|&l| l as f64).collect();
+    if finite.len() < DIVERGENCE_WINDOW {
+        return None;
+    }
+    let start = finite[0];
+    if start <= 0.0 {
+        return None; // no positive loss scale to take a multiple of
+    }
+    let tail = &finite[finite.len() - DIVERGENCE_WINDOW..];
+    let smoothed = tail.iter().sum::<f64>() / tail.len() as f64;
+    (smoothed > factor * start).then(|| {
+        format!(
+            "smoothed loss {smoothed:.4} (mean of last {DIVERGENCE_WINDOW} finite losses) \
+             exceeds divergence_factor={factor} x start loss {start:.4}"
+        )
+    })
+}
+
+/// Canonical fingerprint of everything that shapes a training trajectory.
+/// Stored verbatim in every [`TrainState`] so resuming under a different run
+/// configuration is rejected with an error naming the differing field — a
+/// hash could only say "something differs".
+fn run_config_string(
+    cfg: &RunConfig,
+    backend: &str,
+    precision: Precision,
+    zo_opt: ZoOptKind,
+) -> String {
+    format!(
+        "model={} task={} method={} peft={} backend={backend} precision={precision} \
+         zo_opt={zo_opt} drop_layers={} lr={} mu={} steps={} eval_every={} eval_examples={} \
+         train_examples={} seed={} mean_len={} blocks_only={} policy={} smezo_keep={} \
+         adam_beta1={} adam_beta2={} adam_eps={} checkpoint={}",
+        cfg.model,
+        cfg.task,
+        cfg.method,
+        cfg.peft,
+        cfg.drop_layers,
+        cfg.lr,
+        cfg.mu,
+        cfg.steps,
+        cfg.eval_every,
+        cfg.eval_examples,
+        cfg.train_examples,
+        cfg.seed,
+        cfg.mean_len,
+        cfg.blocks_only,
+        cfg.policy,
+        cfg.smezo_keep,
+        cfg.adam_beta1,
+        cfg.adam_beta2,
+        cfg.adam_eps,
+        cfg.checkpoint,
+    )
+}
+
+/// Reject resume when the stored fingerprint differs, naming the first
+/// differing `key=value` pair.
+fn ensure_same_config(stored: &str, current: &str) -> Result<()> {
+    if stored == current {
+        return Ok(());
+    }
+    for (s, c) in stored.split_whitespace().zip(current.split_whitespace()) {
+        if s != c {
+            let key = c.split('=').next().unwrap_or(c);
+            bail!(
+                "cannot resume: the checkpoint was written under a different run config \
+                 ({key}: checkpoint has '{s}', this run has '{c}'); use resume=never to \
+                 start fresh"
+            );
+        }
+    }
+    bail!("cannot resume: the checkpoint's config fingerprint has a different shape than this run's");
+}
+
+/// Resolve the `resume` mode: `never` ignores any saved state, `auto` loads
+/// the run's own `train_state.ckpt` when present, and anything else is an
+/// explicit state path — whose absence is an error, because an explicit ask
+/// must never silently start fresh.
+fn resolve_resume(resume: &str, state_path: &Path) -> Result<Option<TrainState>> {
+    match resume {
+        "never" => Ok(None),
+        "auto" => {
+            if state_path.exists() {
+                Ok(Some(checkpoint::load_state(state_path)?))
+            } else {
+                Ok(None)
+            }
+        }
+        explicit => {
+            let p = Path::new(explicit);
+            ensure!(p.exists(), "resume={explicit}: no such train-state file");
+            Ok(Some(checkpoint::load_state(p)?))
+        }
+    }
+}
+
+/// Write the train state, honoring injected save faults. An io error — real
+/// or injected — is warn-and-continue: training still holds everything in
+/// memory and the next `save_every` boundary retries. `crash@K:mid-save`
+/// instead leaves a torn temp file (never the final path) and then crashes,
+/// which is exactly what the atomic-rename protocol must survive on resume.
+fn write_state(path: &Path, st: &TrainState, faults: &mut FaultPlan, s1: u64) -> Result<()> {
+    let res = match faults.on_save_attempt(s1) {
+        SaveFault::MidSave => {
+            let bytes = st.to_bytes();
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent).ok();
+            }
+            std::fs::write(checkpoint::tmp_path(path), &bytes[..bytes.len() / 2]).ok();
+            bail!("{CRASH_MARKER}: crash@{s1}:mid-save fault fired (torn temp file left behind)");
+        }
+        SaveFault::IoErr => Err(anyhow::anyhow!("injected io error (io-err@save)")),
+        SaveFault::None => checkpoint::save_state(path, st),
+    };
+    if let Err(e) = res {
+        crate::info!(
+            "checkpoint save at step {s1} failed ({e:#}); training continues, the next \
+             save_every boundary retries"
+        );
+    }
+    Ok(())
+}
+
+fn to_hist(history: &[EvalPoint]) -> Vec<HistPoint> {
+    history
+        .iter()
+        .map(|p| HistPoint {
+            step: p.step,
+            train_secs: p.train_secs,
+            metric: p.metric,
+            train_loss: p.train_loss,
+        })
+        .collect()
+}
+
+fn from_hist(history: &[HistPoint]) -> Vec<EvalPoint> {
+    history
+        .iter()
+        .map(|h| EvalPoint {
+            step: h.step,
+            train_secs: h.train_secs,
+            metric: h.metric,
+            train_loss: h.train_loss,
+        })
+        .collect()
+}
+
 /// Trainer: configured once, `run()` executes the whole fine-tuning run.
 pub struct Trainer {
     pub cfg: RunConfig,
@@ -257,6 +439,9 @@ impl Trainer {
         // strictness as LEZO_THREADS / LEZO_PRECISION), even when the run
         // would never consult it
         crate::coordinator::optim::env_zo_opt()?;
+        // same rule for the fault plan: a bad `faults` key or LEZO_FAULTS
+        // env value fails every method up front, naming the variable
+        let faults = FaultPlan::resolve(&cfg.faults)?;
         let spec = backend.spec().clone();
         let task = make_task(&cfg.task)?;
         let evals = eval_set(task.as_ref(), cfg.seed, cfg.eval_examples, cfg.mean_len);
@@ -274,9 +459,9 @@ impl Trainer {
             Method::Icl => {
                 self.run_no_train(backend, &spec, task.as_ref(), &evals, &host_init, true)
             }
-            Method::Ft => self.run_fo(backend, &spec, task.as_ref(), &evals, host_init),
+            Method::Ft => self.run_fo(backend, &spec, task.as_ref(), &evals, host_init, faults),
             Method::Mezo | Method::Lezo | Method::Smezo => {
-                self.run_zo(backend, &spec, task.as_ref(), &evals, host_init)
+                self.run_zo(backend, &spec, task.as_ref(), &evals, host_init, faults)
             }
         }
     }
@@ -329,6 +514,7 @@ impl Trainer {
             fo_state_bytes: 0,
             zo_state_bytes: 0,
             zo_opt: ZoOptKind::Sgd,
+            resumed_from: None,
         })
     }
 
@@ -367,6 +553,7 @@ impl Trainer {
         task: &dyn crate::tasks::Task,
         evals: &[Example],
         host_init: Vec<Vec<f32>>,
+        mut faults: FaultPlan,
     ) -> Result<TrainReport> {
         let cfg = &self.cfg;
         if cfg.method == Method::Mezo && cfg.drop_layers != 0 {
@@ -416,14 +603,16 @@ impl Trainer {
         // units over frozen base units (PEFT).
         let (mut tunable, base) = self.tunable_space(backend, spec, &host_init)?;
         let mut selector = self.selector(spec, &tunable)?;
-        let engine = SpsaEngine::new(backend, cfg.mu as f32, cfg.seed)?;
+        let mut engine = SpsaEngine::new(backend, cfg.mu as f32, cfg.seed)?;
+        engine.on_nonfinite = cfg.on_nonfinite;
         let evaluator = Evaluator::with_peft(backend, cfg.peft);
 
         let pool = self.train_pool(task);
         let mut data_rng = Rng::new(derive(cfg.seed, purpose::DATA, 2));
         let mut history = Vec::new();
         let mut losses = Vec::with_capacity(cfg.steps);
-        let mut best = f64::MIN;
+        let mut grads: Vec<f32> = Vec::with_capacity(cfg.steps);
+        let mut skipped: Vec<bool> = Vec::with_capacity(cfg.steps);
         let mut frac_acc = 0.0f64;
         let mut len_acc = 0.0f64;
 
@@ -438,11 +627,88 @@ impl Trainer {
             evaluator.evaluate(task.kind(), &units, evals)
         };
 
-        let m0 = eval_now(&tunable)?;
-        history.push(EvalPoint { step: 0, train_secs: 0.0, metric: m0.value, train_loss: 0.0 });
-        best = best.max(m0.value);
+        // ---- resume: restore params + replay the scalar trajectory --------
+        // A TrainState stores no RNG and no parameter-sized optimizer state:
+        // perturbations are regenerated from (seed, step) and every consumer
+        // of history — the data RNG, the selector scores, the seed-replay
+        // optimizer windows — is rebuilt by replaying the recorded scalar
+        // projected gradients in order. That makes resume bit-identical by
+        // construction rather than by serializing every moving part.
+        let state_path = PathBuf::from(cfg.artifact_dir()).join("train_state.ckpt");
+        let conf = run_config_string(cfg, backend.name(), backend.precision(), zo_kind);
+        let start_step: u64 = match resolve_resume(&cfg.resume, &state_path)? {
+            Some(st) => {
+                ensure!(
+                    st.kind == "zo",
+                    "cannot resume: the state was written by a '{}' run, this is a ZO run",
+                    st.kind
+                );
+                ensure_same_config(&st.config, &conf)?;
+                ensure!(
+                    st.step <= cfg.steps as u64,
+                    "cannot resume: the state holds {} completed steps but steps={}",
+                    st.step,
+                    cfg.steps
+                );
+                ensure!(
+                    st.params.len() == tunable.n_units()
+                        && st.params.iter().map(Vec::len).eq(tunable.lens.iter().copied()),
+                    "cannot resume: state param shapes do not match the tunable space"
+                );
+                for (k, u) in st.params.iter().enumerate() {
+                    tunable.bufs[k] = backend.upload(u)?;
+                }
+                for s in 0..st.step {
+                    let (_batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, spec)?;
+                    let active = selector.next_active(s);
+                    frac_acc += active.iter().map(|&k| tunable.lens[k]).sum::<usize>() as f64
+                        / tunable.param_count() as f64;
+                    len_acc += mean_prompt;
+                    // skipped steps perturbed nothing and fed back nothing —
+                    // only their batch sampling and unit selection happened
+                    if !st.skipped[s as usize] {
+                        let g = st.grads[s as usize];
+                        if optimizer.stateful() {
+                            let _ = optimizer.coeffs(s, &[g], &active, cfg.lr as f32);
+                        }
+                        selector.feedback(&active, g);
+                    }
+                }
+                losses = st.losses;
+                grads = st.grads;
+                skipped = st.skipped;
+                history = from_hist(&st.history);
+                let [p, f, u, o] = st.stage_secs;
+                times = StageTimes {
+                    perturb_secs: p,
+                    forward_secs: f,
+                    update_secs: u,
+                    other_secs: o,
+                    steps: st.stage_steps,
+                };
+                crate::info!(
+                    "resumed from step {} ({} of {} steps done, state {})",
+                    st.step,
+                    st.step,
+                    cfg.steps,
+                    state_path.display()
+                );
+                st.step
+            }
+            None => 0,
+        };
 
-        for step in 0..cfg.steps as u64 {
+        if start_step == 0 {
+            let m0 = eval_now(&tunable)?;
+            history.push(EvalPoint { step: 0, train_secs: 0.0, metric: m0.value, train_loss: 0.0 });
+        }
+        let mut best = f64::NAN;
+        for p in &history {
+            best = better_metric(best, p.metric);
+        }
+
+        for step in start_step..cfg.steps as u64 {
+            let s1 = step + 1;
             // batch sampling/selection is bookkeeping, not model compute —
             // one StageTimer lap books it into `other` (exactly like
             // run_fo), and the engine fills perturb/forward/update. All
@@ -458,7 +724,19 @@ impl Trainer {
             len_acc += mean_prompt;
             times.other_secs += t.lap();
 
+            let faults_ro = &faults;
+            let mut fwd_calls = 0u32;
             let mut loss_fn = |tun: &TunableUnits<B>| -> Result<f32> {
+                fwd_calls += 1;
+                if fwd_calls == 1 {
+                    // the first forward of a step runs on the +mu-perturbed
+                    // params: the post-perturb crash boundary, and where an
+                    // injected NaN loss enters the engine
+                    faults_ro.check_crash(s1, CrashPhase::PostPerturb)?;
+                    if faults_ro.nan_loss_at(s1) {
+                        return Ok(f32::NAN);
+                    }
+                }
                 let mut args: Vec<&B::Buffer> = Vec::new();
                 if let Some(base) = &base {
                     args.extend(base.iter());
@@ -480,13 +758,29 @@ impl Trainer {
                     &mut times,
                 )?
             };
-            selector.feedback(&active, zs.projected_grad);
+            if zs.skipped {
+                crate::info!(
+                    "step {s1}: non-finite loss — perturbation restored, update skipped \
+                     (on_nonfinite=skip-step)"
+                );
+                skipped.push(true);
+                grads.push(f32::NAN);
+            } else {
+                selector.feedback(&active, zs.projected_grad);
+                skipped.push(false);
+                grads.push(zs.projected_grad);
+            }
             losses.push(zs.loss());
 
-            let s1 = step + 1;
+            if cfg.divergence_factor > 0.0 {
+                if let Some(why) = divergence_reason(&losses, cfg.divergence_factor) {
+                    bail!("divergence halt at step {s1}: {why} (lower lr or raise divergence_factor)");
+                }
+            }
+
             if s1 % cfg.eval_every as u64 == 0 || s1 == cfg.steps as u64 {
                 let m = eval_now(&tunable)?;
-                best = best.max(m.value);
+                best = better_metric(best, m.value);
                 history.push(EvalPoint {
                     step: s1,
                     train_secs: times.total(),
@@ -498,9 +792,42 @@ impl Trainer {
                     zs.loss(), m.kind, m.pct(), times.total()
                 );
             }
+            faults.check_crash(s1, CrashPhase::PostEval)?;
+
+            if cfg.save_every > 0 && s1 % cfg.save_every as u64 == 0 && s1 < cfg.steps as u64 {
+                let mut ts = StageTimer::start();
+                faults.check_crash(s1, CrashPhase::PreSave)?;
+                let st = TrainState {
+                    config: conf.clone(),
+                    kind: "zo".into(),
+                    step: s1,
+                    params: tunable.to_host(backend)?,
+                    losses: losses.clone(),
+                    grads: grads.clone(),
+                    skipped: skipped.clone(),
+                    history: to_hist(&history),
+                    stage_secs: [
+                        times.perturb_secs,
+                        times.forward_secs,
+                        times.update_secs,
+                        times.other_secs,
+                    ],
+                    stage_steps: times.steps,
+                    ..Default::default()
+                };
+                write_state(&state_path, &st, &mut faults, s1)?;
+                times.other_secs += ts.lap();
+            }
+            faults.check_crash(s1, CrashPhase::End)?;
         }
 
-        let final_metric = history.last().map(|p| p.metric).unwrap_or(m0.value);
+        if cfg.save_every > 0 || start_step > 0 {
+            // a completed run leaves no state behind: resume=auto on the next
+            // invocation starts fresh instead of resurrecting a finished run
+            std::fs::remove_file(&state_path).ok();
+        }
+
+        let final_metric = history.last().map(|p| p.metric).unwrap_or(f64::NAN);
         Ok(TrainReport {
             task: cfg.task.clone(),
             method: cfg.method,
@@ -518,6 +845,7 @@ impl Trainer {
             fo_state_bytes: 0,
             zo_state_bytes: optimizer.state_bytes(),
             zo_opt: zo_kind,
+            resumed_from: (start_step > 0).then_some(start_step),
         })
     }
 
@@ -601,6 +929,7 @@ impl Trainer {
         task: &dyn crate::tasks::Task,
         evals: &[Example],
         mut host_params: Vec<Vec<f32>>,
+        mut faults: FaultPlan,
     ) -> Result<TrainReport> {
         let cfg = &self.cfg;
         ensure!(
@@ -623,6 +952,8 @@ impl Trainer {
         let mut data_rng = Rng::new(derive(cfg.seed, purpose::DATA, 2));
         let mut history = Vec::new();
         let mut losses = Vec::with_capacity(cfg.steps);
+        let mut grads_log: Vec<f32> = Vec::with_capacity(cfg.steps);
+        let mut skipped: Vec<bool> = Vec::with_capacity(cfg.steps);
         let mut train_secs = 0.0f64;
         let mut len_acc = 0.0f64;
         let mut times = StageTimes::default();
@@ -632,13 +963,74 @@ impl Trainer {
             evaluator.evaluate(task.kind(), &units.unit_refs(), evals)
         };
 
+        // ---- resume: FO state is explicit (Adam moments), not replayed ----
+        let state_path = PathBuf::from(cfg.artifact_dir()).join("train_state.ckpt");
+        let conf = run_config_string(cfg, backend.name(), backend.precision(), ZoOptKind::Sgd);
+        let start_step: u64 = match resolve_resume(&cfg.resume, &state_path)? {
+            Some(st) => {
+                ensure!(
+                    st.kind == "fo",
+                    "cannot resume: the state was written by a '{}' run, this is an ft run",
+                    st.kind
+                );
+                ensure_same_config(&st.config, &conf)?;
+                ensure!(
+                    st.step <= cfg.steps as u64,
+                    "cannot resume: the state holds {} completed steps but steps={}",
+                    st.step,
+                    cfg.steps
+                );
+                ensure!(
+                    st.params.len() == host_params.len()
+                        && st.params.iter().map(Vec::len).eq(host_params.iter().map(Vec::len)),
+                    "cannot resume: state param shapes do not match the model"
+                );
+                host_params = st.params;
+                opt.restore(st.fo_t, st.fo_m, st.fo_v);
+                // only the data RNG needs replaying — fast-forward it by
+                // re-sampling the already-consumed batches
+                for _ in 0..st.step {
+                    let (_batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, spec)?;
+                    len_acc += mean_prompt;
+                }
+                losses = st.losses;
+                grads_log = st.grads;
+                skipped = st.skipped;
+                history = from_hist(&st.history);
+                let [p, f, u, o] = st.stage_secs;
+                times = StageTimes {
+                    perturb_secs: p,
+                    forward_secs: f,
+                    update_secs: u,
+                    other_secs: o,
+                    steps: st.stage_steps,
+                };
+                train_secs = times.total();
+                crate::info!(
+                    "resumed from step {} ({} of {} steps done, state {})",
+                    st.step,
+                    st.step,
+                    cfg.steps,
+                    state_path.display()
+                );
+                st.step
+            }
+            None => 0,
+        };
+
         // step-0 eval: the FT convergence curve gets its origin point, like
         // run_zo — and `best`/`final` fall back to it, never to 0.0/f64::MIN
-        let m0 = eval_now(&host_params)?;
-        let mut best = m0.value;
-        history.push(EvalPoint { step: 0, train_secs: 0.0, metric: m0.value, train_loss: 0.0 });
+        if start_step == 0 {
+            let m0 = eval_now(&host_params)?;
+            history.push(EvalPoint { step: 0, train_secs: 0.0, metric: m0.value, train_loss: 0.0 });
+        }
+        let mut best = f64::NAN;
+        for p in &history {
+            best = better_metric(best, p.metric);
+        }
 
-        for step in 0..cfg.steps as u64 {
+        for step in start_step..cfg.steps as u64 {
+            let s1 = step + 1;
             // one StageTimer, each boundary read exactly once: train_secs is
             // the sum of the same laps that feed stage_times, so the two
             // can never disagree
@@ -646,9 +1038,26 @@ impl Trainer {
             let (batch, mean_prompt) = self.sample_batch(&pool, &mut data_rng, spec)?;
             len_acc += mean_prompt;
             let sample_secs = t.lap();
-            let (loss, grads) = engine.loss_and_grads(&host_params, &batch)?;
+            // FO has no perturbation sweep; the post-perturb boundary maps to
+            // "after batch prep, before the fused forward+backward"
+            faults.check_crash(s1, CrashPhase::PostPerturb)?;
+            let (mut loss, grads) = engine.loss_and_grads(&host_params, &batch)?;
+            if faults.nan_loss_at(s1) {
+                loss = f32::NAN;
+            }
             let grad_secs = t.lap();
-            opt.update(&mut host_params, &grads, cfg.lr);
+            let skip = !loss.is_finite();
+            if skip && cfg.on_nonfinite == NonFinitePolicy::Error {
+                bail!(
+                    "non-finite loss {loss} at step {s1} (method=ft); set \
+                     on_nonfinite=skip-step to skip the update instead"
+                );
+            }
+            if skip {
+                crate::info!("FT step {s1}: non-finite loss — update skipped (on_nonfinite=skip-step)");
+            } else {
+                opt.update(&mut host_params, &grads, cfg.lr);
+            }
             let update_secs = t.lap();
             // batch sampling is bookkeeping, not model compute — it lands in
             // `other` so non_forward_fraction() is comparable to ZO reports;
@@ -659,17 +1068,63 @@ impl Trainer {
             times.steps += 1;
             train_secs += sample_secs + grad_secs + update_secs;
             losses.push(loss);
+            grads_log.push(if skip { f32::NAN } else { 0.0 });
+            skipped.push(skip);
 
-            let s1 = step + 1;
+            if cfg.divergence_factor > 0.0 {
+                if let Some(why) = divergence_reason(&losses, cfg.divergence_factor) {
+                    bail!("divergence halt at step {s1}: {why} (lower lr or raise divergence_factor)");
+                }
+            }
+
             if s1 % cfg.eval_every as u64 == 0 || s1 == cfg.steps as u64 {
                 let m = eval_now(&host_params)?;
-                best = best.max(m.value);
+                best = better_metric(best, m.value);
                 history.push(EvalPoint { step: s1, train_secs, metric: m.value, train_loss: loss });
                 crate::info!("FT step {s1}: loss={loss:.4} {}={:.1}%", m.kind, m.pct());
             }
+            faults.check_crash(s1, CrashPhase::PostEval)?;
+
+            if cfg.save_every > 0 && s1 % cfg.save_every as u64 == 0 && s1 < cfg.steps as u64 {
+                let mut ts = StageTimer::start();
+                faults.check_crash(s1, CrashPhase::PreSave)?;
+                let (fo_t, fo_m, fo_v) = opt.snapshot();
+                let st = TrainState {
+                    config: conf.clone(),
+                    kind: "fo".into(),
+                    step: s1,
+                    params: host_params.clone(),
+                    losses: losses.clone(),
+                    grads: grads_log.clone(),
+                    skipped: skipped.clone(),
+                    history: to_hist(&history),
+                    stage_secs: [
+                        times.perturb_secs,
+                        times.forward_secs,
+                        times.update_secs,
+                        times.other_secs,
+                    ],
+                    stage_steps: times.steps,
+                    fo_t,
+                    fo_m: fo_m.to_vec(),
+                    fo_v: fo_v.to_vec(),
+                };
+                write_state(&state_path, &st, &mut faults, s1)?;
+                // save time is training wall time: book it into both the
+                // stage total and train_secs so the pinned invariant
+                // `stage_times.total() == train_secs` survives checkpointing
+                let secs = ts.lap();
+                times.other_secs += secs;
+                train_secs += secs;
+            }
+            faults.check_crash(s1, CrashPhase::End)?;
         }
 
-        let final_metric = history.last().map(|p| p.metric).unwrap_or(m0.value);
+        if cfg.save_every > 0 || start_step > 0 {
+            std::fs::remove_file(&state_path).ok();
+        }
+
+        let final_metric = history.last().map(|p| p.metric).unwrap_or(f64::NAN);
         Ok(TrainReport {
             task: cfg.task.clone(),
             method: cfg.method,
@@ -687,6 +1142,7 @@ impl Trainer {
             fo_state_bytes: opt.state_bytes(),
             zo_state_bytes: 0,
             zo_opt: ZoOptKind::Sgd,
+            resumed_from: (start_step > 0).then_some(start_step),
         })
     }
 }
@@ -743,7 +1199,6 @@ fn pretrain_with<B: Backend>(
     log_every: usize,
 ) -> Result<(f32, f32)> {
     use crate::data::corpus::CorpusGen;
-    use crate::model::checkpoint;
 
     ensure!(
         backend.supports_fo(),
@@ -809,6 +1264,7 @@ mod tests {
             fo_state_bytes: 0,
             zo_state_bytes: 0,
             zo_opt: ZoOptKind::Sgd,
+            resumed_from: None,
         };
         assert_eq!(r.time_to_metric(0.8), Some(10.0));
         assert_eq!(r.steps_to_metric(0.9), Some(200));
@@ -1048,6 +1504,61 @@ mod tests {
             let err = Trainer::new(cfg).run().unwrap_err();
             assert!(err.to_string().contains("peft"), "{method}: {err}");
         }
+    }
+
+    #[test]
+    fn better_metric_never_lets_nan_win_or_survive() {
+        // f64::max would keep a stale f64::MIN/NaN best forever; this fold
+        // excludes NaN metrics but lets the first finite one replace a NaN
+        assert_eq!(better_metric(0.5, f64::NAN), 0.5);
+        assert_eq!(better_metric(f64::NAN, 0.5), 0.5);
+        assert!(better_metric(f64::NAN, f64::NAN).is_nan());
+        assert_eq!(better_metric(0.5, 0.7), 0.7);
+        assert_eq!(better_metric(0.7, 0.5), 0.7);
+    }
+
+    #[test]
+    fn divergence_reason_is_a_pure_function_of_the_loss_record() {
+        // under the window: never halts, even on garbage
+        assert!(divergence_reason(&[f32::NAN, 100.0], 2.0).is_none());
+        // flat losses: no halt
+        let flat = vec![2.0f32; 32];
+        assert!(divergence_reason(&flat, 3.0).is_none());
+        // losses blown up to >3x the start: halt, and the reason names both
+        let mut blown = vec![2.0f32; 16];
+        blown.extend(std::iter::repeat(9.0).take(DIVERGENCE_WINDOW));
+        let why = divergence_reason(&blown, 3.0).expect("must halt");
+        assert!(why.contains("divergence_factor=3"), "{why}");
+        // NaN losses are excluded from the smoothing, not poison
+        blown.push(f32::NAN);
+        assert!(divergence_reason(&blown, 3.0).is_some());
+        // determinism: same record, same verdict
+        assert_eq!(divergence_reason(&blown, 3.0), divergence_reason(&blown, 3.0));
+    }
+
+    #[test]
+    fn config_fingerprint_names_the_differing_field() {
+        let mut cfg = zo_nano_cfg();
+        let a = run_config_string(&cfg, "native", Precision::F32, ZoOptKind::Sgd);
+        assert!(ensure_same_config(&a, &a).is_ok());
+        cfg.lr = 5e-4;
+        let b = run_config_string(&cfg, "native", Precision::F32, ZoOptKind::Sgd);
+        let err = ensure_same_config(&a, &b).unwrap_err().to_string();
+        assert!(err.contains("lr"), "{err}");
+        let c = run_config_string(&cfg, "native", Precision::Bf16, ZoOptKind::Sgd);
+        let err = ensure_same_config(&b, &c).unwrap_err().to_string();
+        assert!(err.contains("precision"), "{err}");
+    }
+
+    #[test]
+    fn explicit_resume_path_must_exist() {
+        let err = resolve_resume("definitely/not/here.ckpt", Path::new("unused"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("definitely/not/here.ckpt"), "{err}");
+        // auto with no state: fresh start, not an error
+        assert!(resolve_resume("auto", Path::new("also/not/here.ckpt")).unwrap().is_none());
+        assert!(resolve_resume("never", Path::new("also/not/here.ckpt")).unwrap().is_none());
     }
 
     #[test]

@@ -25,7 +25,8 @@ fn usage() -> ! {
          lezo info    [model=<size>]\n  lezo render  task=<name> [n=K] [seed=S]\n\n\
          Common keys: model backend task method peft drop_layers lr mu steps\n\
          eval_every eval_examples train_examples seed icl_shots mean_len checkpoint\n\
-         precision threads zo_opt\n\
+         precision threads zo_opt save_every resume faults on_nonfinite\n\
+         divergence_factor\n\
          (backend:   auto|native|pjrt — native needs no artifacts)\n\
          (method:    zero-shot|icl|ft|mezo|lezo|smezo, or a Table-4 alias\n\
           mezo-lora|lezo-lora|mezo-prefix|lezo-prefix that also sets peft)\n\
@@ -36,6 +37,14 @@ fn usage() -> ! {
          (zo_opt:    zo-sgd|zo-sgd-momentum|zo-adam|zo-sign-sgd|fzoo — the ZO\n\
           update rule; momentum/adam replay past directions from seeds.\n\
           Env LEZO_ZO_OPT overrides, like LEZO_PRECISION)\n\
+         (save_every: N>0 writes train_state.ckpt atomically every N steps\n\
+          (0 = off); resume: auto|never|<path> — auto picks up the run's own\n\
+          state after a crash, bit-identical to the uninterrupted run)\n\
+         (faults:    deterministic fault injection for crash drills, e.g.\n\
+          nan-loss@120,crash@250,io-err@save:2; env LEZO_FAULTS overrides)\n\
+         (on_nonfinite: error|skip-step — what a NaN/inf training loss does;\n\
+          divergence_factor: halt when smoothed loss exceeds this multiple\n\
+          of the start loss, 0 = off)\n\
          Flags: -q quiet, -v verbose",
         bench::ALL_BENCHES.join(" ")
     );
@@ -75,6 +84,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     println!("method         : {}", report.method);
     println!("backend        : {}", report.backend);
     println!("precision      : {}", report.precision);
+    if let Some(k) = report.resumed_from {
+        println!("resumed from   : step {k}");
+    }
     if matches!(
         report.method,
         lezo::config::Method::Mezo | lezo::config::Method::Lezo | lezo::config::Method::Smezo

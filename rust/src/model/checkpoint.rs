@@ -1,6 +1,8 @@
 //! Checkpoint I/O: own binary format (no serde offline).
 //!
-//! Layout (little-endian):
+//! Two formats share the `LEZOCKPT` magic and differ by version:
+//!
+//! Version 1 — plain parameter checkpoint (`pretrained.ckpt`, `checkpoint=`):
 //!   magic  [8]  b"LEZOCKPT"
 //!   version u32 (= 1)
 //!   step    u64
@@ -8,13 +10,31 @@
 //!   lens    [n_units] u64
 //!   data    concat of f32 unit vectors
 //!   crc     u32 (crc32 of data bytes)
+//!
+//! Version 2 — [`TrainState`] resume envelope (`train_state.ckpt`): the full
+//! mid-run training state. Because perturbations are regenerated from
+//! `zo_probe_seed(run_seed, step, probe, unit)` and the optimizer zoo keeps
+//! seed-replay scalar history only, the envelope is RNG-free by construction:
+//! params + step + per-step scalars are enough to resume bit-identically.
+//!   magic  [8]  b"LEZOCKPT"
+//!   version u32 (= 2)
+//!   n_sections u32 (= 7)
+//!   then, per section: tag [4] | len u64 | payload | crc u32 (of payload)
+//!   sections in order: META PARM LOSS GRAD SKIP HIST FOPT
+//!
+//! All writes go through [`write_atomic`] (temp file + fsync + rename +
+//! parent-dir fsync), so a crash mid-write can never leave a torn file under
+//! the real name — at worst a stale `*.tmp` that the next save overwrites.
 
-use anyhow::{anyhow, ensure, Context, Result};
-use std::io::{Read, Write};
-use std::path::Path;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"LEZOCKPT";
 const VERSION: u32 = 1;
+/// Version tag of the [`TrainState`] resume envelope.
+pub const STATE_VERSION: u32 = 2;
+const STATE_SECTIONS: u32 = 7;
 
 /// CRC-32 (IEEE), bit-reflected, table-free (fine for checkpoint sizes).
 fn crc32(data: &[u8]) -> u32 {
@@ -29,6 +49,107 @@ fn crc32(data: &[u8]) -> u32 {
     !crc
 }
 
+/// Temp-file sibling used by [`write_atomic`] (`<name>.tmp` in the same dir,
+/// so the final `rename` never crosses a filesystem boundary). Public so the
+/// fault-injection harness can plant a torn temp file where a mid-save crash
+/// would leave one.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Crash-safe file write: temp file in the same directory, `fsync`, `rename`
+/// over the target, then `fsync` the parent directory so the rename itself is
+/// durable. Readers only ever see the old bytes or the new bytes, never a mix.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    std::fs::create_dir_all(&dir).ok();
+    let tmp = tmp_path(path);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    // Directory fsync is best-effort: opening a directory read-only works on
+    // unix; elsewhere the rename is already the strongest primitive we have.
+    if let Ok(d) = std::fs::File::open(&dir) {
+        d.sync_all().ok();
+    }
+    Ok(())
+}
+
+/// Byte cursor over a fully-read file: every short read is a clean error
+/// naming the absolute byte offset, never a panic.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+    label: String,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8], label: String) -> Self {
+        Cur { buf, off: 0, label }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let have = self.buf.len() - self.off;
+        ensure!(
+            n <= have,
+            "{}: truncated at byte offset {} (need {n} more bytes, {have} left of {})",
+            self.label,
+            self.off,
+            self.buf.len()
+        );
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Element count * width with overflow checked against the file size, so a
+    /// corrupt length field errors instead of attempting a huge allocation.
+    fn sized(&mut self, n: usize, width: usize) -> Result<&'a [u8]> {
+        let bytes = n
+            .checked_mul(width)
+            .ok_or_else(|| anyhow!("{}: implausible element count {n}", self.label))?;
+        self.take(bytes)
+    }
+}
+
+fn f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn f64s(bytes: &[u8]) -> Vec<f64> {
+    bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn u64s(bytes: &[u8]) -> Vec<u64> {
+    bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
 #[derive(Debug)]
 pub struct Checkpoint {
     pub step: u64,
@@ -36,76 +157,337 @@ pub struct Checkpoint {
 }
 
 pub fn save(path: &Path, step: u64, units: &[Vec<f32>]) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).ok();
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&step.to_le_bytes());
+    out.extend_from_slice(&(units.len() as u32).to_le_bytes());
+    for u in units {
+        out.extend_from_slice(&(u.len() as u64).to_le_bytes());
     }
-    let mut data_bytes = Vec::new();
+    let data_start = out.len();
     for u in units {
         for &x in u {
-            data_bytes.extend_from_slice(&x.to_le_bytes());
+            out.extend_from_slice(&x.to_le_bytes());
         }
     }
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&step.to_le_bytes())?;
-    f.write_all(&(units.len() as u32).to_le_bytes())?;
-    for u in units {
-        f.write_all(&(u.len() as u64).to_le_bytes())?;
-    }
-    f.write_all(&data_bytes)?;
-    f.write_all(&crc32(&data_bytes).to_le_bytes())?;
-    f.flush()?;
-    Ok(())
+    let crc = crc32(&out[data_start..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    write_atomic(path, &out)
 }
 
 pub fn load(path: &Path) -> Result<Checkpoint> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-    );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    ensure!(&magic == MAGIC, "{}: not a LeZO checkpoint", path.display());
-    let mut u32b = [0u8; 4];
-    let mut u64b = [0u8; 8];
-    f.read_exact(&mut u32b)?;
-    let version = u32::from_le_bytes(u32b);
+    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut cur = Cur::new(&bytes, path.display().to_string());
+    let magic = cur.take(8)?;
+    ensure!(magic == MAGIC, "{}: not a LeZO checkpoint", path.display());
+    let version = cur.u32()?;
     ensure!(version == VERSION, "unsupported checkpoint version {version}");
-    f.read_exact(&mut u64b)?;
-    let step = u64::from_le_bytes(u64b);
-    f.read_exact(&mut u32b)?;
-    let n_units = u32::from_le_bytes(u32b) as usize;
+    let step = cur.u64()?;
+    let n_units = cur.u32()? as usize;
     ensure!(n_units < 10_000, "implausible unit count {n_units}");
-    let mut lens = Vec::with_capacity(n_units);
-    for _ in 0..n_units {
-        f.read_exact(&mut u64b)?;
-        lens.push(u64::from_le_bytes(u64b) as usize);
-    }
-    let total: usize = lens.iter().sum();
-    let mut data_bytes = vec![0u8; total * 4];
-    f.read_exact(&mut data_bytes)?;
-    f.read_exact(&mut u32b)?;
-    let want_crc = u32::from_le_bytes(u32b);
-    let got_crc = crc32(&data_bytes);
+    let lens: Vec<usize> = u64s(cur.sized(n_units, 8)?).iter().map(|&l| l as usize).collect();
+    let total: usize = lens.iter().try_fold(0usize, |acc, &l| acc.checked_add(l)).ok_or_else(
+        || anyhow!("{}: implausible unit lengths", path.display()),
+    )?;
+    let data_bytes = cur.sized(total, 4)?;
+    let want_crc = cur.u32()?;
+    let got_crc = crc32(data_bytes);
     ensure!(
         want_crc == got_crc,
         "{}: checksum mismatch (corrupt checkpoint)",
         path.display()
     );
+    let data = f32s(data_bytes);
     let mut units = Vec::with_capacity(n_units);
     let mut off = 0usize;
     for len in lens {
-        let mut v = Vec::with_capacity(len);
-        for i in 0..len {
-            let b = &data_bytes[4 * (off + i)..4 * (off + i) + 4];
-            v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
-        }
+        units.push(data[off..off + len].to_vec());
         off += len;
-        units.push(v);
     }
     Ok(Checkpoint { step, units })
+}
+
+/// One convergence-history point inside a [`TrainState`] (mirrors the
+/// trainer's `EvalPoint` without a layering dependency on the coordinator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistPoint {
+    pub step: u64,
+    pub train_secs: f64,
+    pub metric: f64,
+    pub train_loss: f32,
+}
+
+/// The version-2 resume envelope: everything `Trainer::run_zo`/`run_fo` need
+/// to continue a run bit-identically. RNG-free by construction — perturbation
+/// noise and batch order are regenerated from `(run_seed, step)`-derived
+/// streams, and ZO optimizer state is rebuilt by replaying the stored
+/// per-step projected gradients (`grads`) through the seed-replay rules.
+#[derive(Debug, Clone, Default)]
+pub struct TrainState {
+    /// Canonical run-config fingerprint string; resume under a different
+    /// configuration is rejected by comparing this field.
+    pub config: String,
+    /// `"zo"` or `"fo"` — which trainer loop wrote the state.
+    pub kind: String,
+    /// Completed optimization steps.
+    pub step: u64,
+    /// Tunable units (full-model units, or adapter units under PEFT) as f32
+    /// masters — the authoritative precision, so bf16 resume is exact too.
+    pub params: Vec<Vec<f32>>,
+    /// Per completed step: recorded training loss (NaN for skipped steps).
+    pub losses: Vec<f32>,
+    /// Per completed step: projected gradient (ZO only; replay input for
+    /// seed-replay optimizer state and the weighted selector).
+    pub grads: Vec<f32>,
+    /// Per completed step: true if `on_nonfinite=skip-step` skipped it.
+    pub skipped: Vec<bool>,
+    /// Convergence history (eval points) accumulated so far.
+    pub history: Vec<HistPoint>,
+    /// Stage-time accounting: perturb/forward/update/other seconds.
+    pub stage_secs: [f64; 4],
+    /// Steps counted by the stage timer.
+    pub stage_steps: u64,
+    /// First-order (ft) optimizer step count; 0 for ZO runs.
+    pub fo_t: u64,
+    /// First-order Adam first-moment buffers (empty for ZO runs).
+    pub fo_m: Vec<Vec<f64>>,
+    /// First-order Adam second-moment buffers (empty for ZO runs).
+    pub fo_v: Vec<Vec<f64>>,
+}
+
+fn push_section(out: &mut Vec<u8>, tag: &[u8; 4], payload: &[u8]) {
+    out.extend_from_slice(tag);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+}
+
+fn push_f32_units(out: &mut Vec<u8>, units: &[Vec<f32>]) {
+    out.extend_from_slice(&(units.len() as u32).to_le_bytes());
+    for u in units {
+        out.extend_from_slice(&(u.len() as u64).to_le_bytes());
+    }
+    for u in units {
+        for &x in u {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+impl TrainState {
+    /// Serialize to the sectioned v2 byte layout (see module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&STATE_VERSION.to_le_bytes());
+        out.extend_from_slice(&STATE_SECTIONS.to_le_bytes());
+
+        let mut meta = Vec::new();
+        meta.extend_from_slice(&self.step.to_le_bytes());
+        for s in self.stage_secs {
+            meta.extend_from_slice(&s.to_le_bytes());
+        }
+        meta.extend_from_slice(&self.stage_steps.to_le_bytes());
+        meta.extend_from_slice(&self.fo_t.to_le_bytes());
+        meta.extend_from_slice(&(self.kind.len() as u32).to_le_bytes());
+        meta.extend_from_slice(self.kind.as_bytes());
+        meta.extend_from_slice(&(self.config.len() as u32).to_le_bytes());
+        meta.extend_from_slice(self.config.as_bytes());
+        push_section(&mut out, b"META", &meta);
+
+        let mut parm = Vec::new();
+        push_f32_units(&mut parm, &self.params);
+        push_section(&mut out, b"PARM", &parm);
+
+        let mut loss = Vec::new();
+        loss.extend_from_slice(&(self.losses.len() as u32).to_le_bytes());
+        for &l in &self.losses {
+            loss.extend_from_slice(&l.to_le_bytes());
+        }
+        push_section(&mut out, b"LOSS", &loss);
+
+        let mut grad = Vec::new();
+        grad.extend_from_slice(&(self.grads.len() as u32).to_le_bytes());
+        for &g in &self.grads {
+            grad.extend_from_slice(&g.to_le_bytes());
+        }
+        push_section(&mut out, b"GRAD", &grad);
+
+        let mut skip = Vec::new();
+        skip.extend_from_slice(&(self.skipped.len() as u32).to_le_bytes());
+        skip.extend(self.skipped.iter().map(|&s| s as u8));
+        push_section(&mut out, b"SKIP", &skip);
+
+        let mut hist = Vec::new();
+        hist.extend_from_slice(&(self.history.len() as u32).to_le_bytes());
+        for h in &self.history {
+            hist.extend_from_slice(&h.step.to_le_bytes());
+            hist.extend_from_slice(&h.train_secs.to_le_bytes());
+            hist.extend_from_slice(&h.metric.to_le_bytes());
+            hist.extend_from_slice(&h.train_loss.to_le_bytes());
+        }
+        push_section(&mut out, b"HIST", &hist);
+
+        let mut fopt = Vec::new();
+        fopt.extend_from_slice(&(self.fo_m.len() as u32).to_le_bytes());
+        fopt.extend_from_slice(&self.fo_t.to_le_bytes());
+        for m in &self.fo_m {
+            fopt.extend_from_slice(&(m.len() as u64).to_le_bytes());
+        }
+        for bufs in [&self.fo_m, &self.fo_v] {
+            for b in bufs.iter() {
+                for &x in b {
+                    fopt.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        push_section(&mut out, b"FOPT", &fopt);
+        out
+    }
+
+    fn from_bytes(bytes: &[u8], label: &str) -> Result<TrainState> {
+        let mut cur = Cur::new(bytes, label.to_string());
+        let magic = cur.take(8)?;
+        ensure!(magic == MAGIC, "{label}: not a LeZO checkpoint");
+        let version = cur.u32()?;
+        ensure!(
+            version == STATE_VERSION,
+            "{label}: unsupported train-state version {version} (expected {STATE_VERSION})"
+        );
+        let n_sections = cur.u32()?;
+        ensure!(
+            n_sections == STATE_SECTIONS,
+            "{label}: expected {STATE_SECTIONS} sections, found {n_sections}"
+        );
+        let mut st = TrainState::default();
+
+        let meta = read_section(&mut cur, b"META")?;
+        {
+            let mut m = Cur::new(meta, format!("{label} [META]"));
+            st.step = m.u64()?;
+            for s in st.stage_secs.iter_mut() {
+                *s = m.f64()?;
+            }
+            st.stage_steps = m.u64()?;
+            st.fo_t = m.u64()?;
+            let klen = m.u32()? as usize;
+            st.kind = String::from_utf8(m.take(klen)?.to_vec())
+                .map_err(|_| anyhow!("{label}: non-utf8 kind"))?;
+            let clen = m.u32()? as usize;
+            st.config = String::from_utf8(m.take(clen)?.to_vec())
+                .map_err(|_| anyhow!("{label}: non-utf8 config fingerprint"))?;
+        }
+
+        let parm = read_section(&mut cur, b"PARM")?;
+        {
+            let mut p = Cur::new(parm, format!("{label} [PARM]"));
+            let n = p.u32()? as usize;
+            ensure!(n < 10_000, "{label}: implausible unit count {n}");
+            let lens: Vec<usize> = u64s(p.sized(n, 8)?).iter().map(|&l| l as usize).collect();
+            for &len in &lens {
+                st.params.push(f32s(p.sized(len, 4)?));
+            }
+        }
+
+        let loss = read_section(&mut cur, b"LOSS")?;
+        {
+            let mut l = Cur::new(loss, format!("{label} [LOSS]"));
+            let n = l.u32()? as usize;
+            st.losses = f32s(l.sized(n, 4)?);
+        }
+
+        let grad = read_section(&mut cur, b"GRAD")?;
+        {
+            let mut g = Cur::new(grad, format!("{label} [GRAD]"));
+            let n = g.u32()? as usize;
+            st.grads = f32s(g.sized(n, 4)?);
+        }
+
+        let skip = read_section(&mut cur, b"SKIP")?;
+        {
+            let mut s = Cur::new(skip, format!("{label} [SKIP]"));
+            let n = s.u32()? as usize;
+            st.skipped = s.sized(n, 1)?.iter().map(|&b| b != 0).collect();
+        }
+
+        let hist = read_section(&mut cur, b"HIST")?;
+        {
+            let mut h = Cur::new(hist, format!("{label} [HIST]"));
+            let n = h.u32()? as usize;
+            ensure!(n < 100_000_000, "{label}: implausible history length {n}");
+            for _ in 0..n {
+                st.history.push(HistPoint {
+                    step: h.u64()?,
+                    train_secs: h.f64()?,
+                    metric: h.f64()?,
+                    train_loss: h.f32()?,
+                });
+            }
+        }
+
+        let fopt = read_section(&mut cur, b"FOPT")?;
+        {
+            let mut f = Cur::new(fopt, format!("{label} [FOPT]"));
+            let n = f.u32()? as usize;
+            ensure!(n < 10_000, "{label}: implausible fo-state unit count {n}");
+            let fo_t = f.u64()?;
+            ensure!(fo_t == st.fo_t, "{label}: META/FOPT step-count mismatch");
+            let lens: Vec<usize> = u64s(f.sized(n, 8)?).iter().map(|&l| l as usize).collect();
+            for &len in &lens {
+                st.fo_m.push(f64s(f.sized(len, 8)?));
+            }
+            for &len in &lens {
+                st.fo_v.push(f64s(f.sized(len, 8)?));
+            }
+        }
+
+        ensure!(
+            st.losses.len() == st.step as usize
+                && st.grads.len() == st.step as usize
+                && st.skipped.len() == st.step as usize,
+            "{label}: per-step record count does not match step {} (loss {}, grad {}, skip {})",
+            st.step,
+            st.losses.len(),
+            st.grads.len(),
+            st.skipped.len()
+        );
+        Ok(st)
+    }
+}
+
+fn read_section<'a>(cur: &mut Cur<'a>, tag: &[u8; 4]) -> Result<&'a [u8]> {
+    let label = cur.label.clone();
+    let at = cur.off;
+    let got = cur.take(4)?;
+    ensure!(
+        got == tag,
+        "{label}: expected section {} at byte offset {at}, found {:?}",
+        String::from_utf8_lossy(tag),
+        String::from_utf8_lossy(got)
+    );
+    let len = cur.u64()? as usize;
+    let payload = cur.take(len)?;
+    let want = cur.u32()?;
+    let got_crc = crc32(payload);
+    ensure!(
+        want == got_crc,
+        "{label}: section {} checksum mismatch (corrupt train state)",
+        String::from_utf8_lossy(tag)
+    );
+    Ok(payload)
+}
+
+/// Atomically persist a [`TrainState`] resume envelope.
+pub fn save_state(path: &Path, state: &TrainState) -> Result<()> {
+    write_atomic(path, &state.to_bytes())
+}
+
+/// Load a v2 [`TrainState`] envelope; truncation and corruption are clean
+/// errors naming the byte offset / section, never panics.
+pub fn load_state(path: &Path) -> Result<TrainState> {
+    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    TrainState::from_bytes(&bytes, &path.display().to_string())
 }
 
 /// Resolve initial parameters for a run: explicit checkpoint if configured,
@@ -157,6 +539,8 @@ mod tests {
         let ck = load(&path).unwrap();
         assert_eq!(ck.step, 42);
         assert_eq!(ck.units, units);
+        // the atomic writer must not leave its temp file behind
+        assert!(!tmp_path(&path).exists(), "stale {}", tmp_path(&path).display());
         std::fs::remove_file(&path).ok();
     }
 
@@ -194,6 +578,155 @@ mod tests {
         save(&path, 0, &[]).unwrap();
         let ck = load(&path).unwrap();
         assert!(ck.units.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Satellite: truncating a valid v1 checkpoint anywhere must yield a clean
+    /// error that names a byte offset (or an earlier structural error), never
+    /// a panic. Every header boundary plus sampled interior offsets.
+    #[test]
+    fn v1_truncation_names_offset() {
+        let units = vec![vec![1.5f32; 9], vec![-2.0f32; 33]];
+        let path = tmp("trunc1");
+        save(&path, 7, &units).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // section boundaries of the v1 layout
+        let boundaries = [0usize, 8, 12, 20, 24, 32, 40, full.len() - 4];
+        let interior: Vec<usize> = (0..full.len()).step_by(11).collect();
+        for &cut in boundaries.iter().chain(interior.iter()) {
+            if cut >= full.len() {
+                continue;
+            }
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let err = load(&path).unwrap_err().to_string();
+            assert!(
+                err.contains("byte offset") || err.contains("not a LeZO checkpoint"),
+                "cut at {cut}: unexpected error: {err}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn sample_state() -> TrainState {
+        TrainState {
+            config: "model=opt-nano seed=0 lr=0.0001".into(),
+            kind: "zo".into(),
+            step: 3,
+            params: vec![vec![0.5f32, -1.25, 2.0], vec![9.0f32; 17]],
+            losses: vec![1.0, f32::NAN, 0.5],
+            grads: vec![0.1, f32::NAN, -0.2],
+            skipped: vec![false, true, false],
+            history: vec![
+                HistPoint { step: 0, train_secs: 0.0, metric: 0.5, train_loss: 1.0 },
+                HistPoint { step: 2, train_secs: 1.5, metric: 0.75, train_loss: 0.5 },
+            ],
+            stage_secs: [0.1, 0.7, 0.05, 0.15],
+            stage_steps: 3,
+            fo_t: 0,
+            fo_m: vec![],
+            fo_v: vec![],
+        }
+    }
+
+    #[test]
+    fn state_round_trip_bitwise() {
+        let st = sample_state();
+        let path = tmp("state_rt");
+        save_state(&path, &st).unwrap();
+        let got = load_state(&path).unwrap();
+        assert_eq!(got.config, st.config);
+        assert_eq!(got.kind, st.kind);
+        assert_eq!(got.step, st.step);
+        assert_eq!(got.params, st.params);
+        // NaN-carrying vectors compare by bits
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got.losses), bits(&st.losses));
+        assert_eq!(bits(&got.grads), bits(&st.grads));
+        assert_eq!(got.skipped, st.skipped);
+        assert_eq!(got.history, st.history);
+        assert_eq!(got.stage_secs, st.stage_secs);
+        assert_eq!(got.stage_steps, st.stage_steps);
+        assert!(!tmp_path(&path).exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn state_round_trip_fo() {
+        let mut st = sample_state();
+        st.kind = "fo".into();
+        st.fo_t = 3;
+        st.fo_m = vec![vec![0.25f64, -0.5], vec![1e-9f64; 5]];
+        st.fo_v = vec![vec![0.01f64, 0.02], vec![3e-4f64; 5]];
+        let path = tmp("state_fo");
+        save_state(&path, &st).unwrap();
+        let got = load_state(&path).unwrap();
+        assert_eq!(got.fo_t, 3);
+        assert_eq!(got.fo_m, st.fo_m);
+        assert_eq!(got.fo_v, st.fo_v);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Satellite property test: truncate the v2 envelope at every section
+    /// boundary and a dense sample of interior offsets — always a clean error,
+    /// never a panic; truncation errors name the byte offset.
+    #[test]
+    fn state_truncation_names_offset() {
+        let mut st = sample_state();
+        st.fo_m = vec![vec![1.0f64; 4]];
+        st.fo_v = vec![vec![2.0f64; 4]];
+        st.fo_t = 3;
+        let full = st.to_bytes();
+        let path = tmp("state_trunc");
+        // compute section boundaries by walking the layout
+        let mut boundaries = vec![0usize, 8, 12, 16];
+        let mut off = 16usize;
+        while off < full.len() {
+            let len =
+                u64::from_le_bytes(full[off + 4..off + 12].try_into().unwrap()) as usize;
+            off += 4 + 8 + len + 4;
+            boundaries.push(off);
+        }
+        assert_eq!(off, full.len(), "boundary walk must land on the file end");
+        let interior: Vec<usize> = (0..full.len()).step_by(13).collect();
+        for &cut in boundaries.iter().chain(interior.iter()) {
+            if cut >= full.len() {
+                continue;
+            }
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let err = load_state(&path).unwrap_err().to_string();
+            assert!(
+                err.contains("byte offset") || err.contains("not a LeZO checkpoint"),
+                "cut at {cut}: unexpected error: {err}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn state_section_corruption_detected() {
+        let st = sample_state();
+        let mut bytes = st.to_bytes();
+        // flip a byte inside the PARM payload (after META)
+        let n = bytes.len();
+        bytes[n / 2] ^= 0x55;
+        let path = tmp("state_corrupt");
+        std::fs::write(&path, &bytes).unwrap();
+        // the flip may land in a payload (checksum error) or on a section
+        // header (structural error) — either way: clean error, no panic
+        let err = load_state(&path).unwrap_err().to_string();
+        assert!(!err.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn state_rejects_v1_file_and_vice_versa() {
+        let path = tmp("state_cross");
+        save(&path, 3, &[vec![1.0f32; 8]]).unwrap();
+        let err = load_state(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        save_state(&path, &sample_state()).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 }

@@ -42,6 +42,13 @@ pub trait Backend {
     fn spec(&self) -> &ModelSpec;
 
     // ---- host <-> device ---------------------------------------------------
+    //
+    // Transfers feed checkpointing (`TunableUnits::to_host` at every
+    // `save_every` boundary) and resume (re-uploading saved masters), so
+    // backends whose transfers can fail transiently should wrap them in
+    // `util::retry_with_backoff` rather than surfacing one hiccup as a dead
+    // run — the PJRT backend does; the native backend's "transfers" are
+    // plain copies and cannot fail.
 
     fn upload(&self, data: &[f32]) -> Result<Self::Buffer>;
     fn download(&self, buf: &Self::Buffer) -> Result<Vec<f32>>;

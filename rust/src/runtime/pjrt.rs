@@ -134,11 +134,16 @@ impl Backend for PjrtBackend {
     }
 
     fn upload(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
-        self.rt.vec_f32(data)
+        // host->device transfers are the one backend edge that can fail
+        // transiently on real accelerator runtimes (the CPU client never
+        // does, so the first attempt always wins there); bounded
+        // retry-with-backoff keeps a mid-run checkpoint download or a resume
+        // upload from killing hours of training on a hiccup
+        crate::util::retry_with_backoff("pjrt upload", 3, 10, || self.rt.vec_f32(data))
     }
 
     fn download(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
-        self.rt.read_vec_f32(buf)
+        crate::util::retry_with_backoff("pjrt download", 3, 10, || self.rt.read_vec_f32(buf))
     }
 
     fn zo_axpy(

@@ -50,6 +50,39 @@ impl Stopwatch {
     }
 }
 
+/// Run `f`, retrying up to `attempts` times with doubling backoff starting
+/// at `base_ms`. Used around host<->device buffer transfers (PJRT uploads /
+/// downloads), which on real accelerators can fail transiently; bounded, so a
+/// persistent fault still surfaces as an error naming the operation and every
+/// attempt's failure.
+pub fn retry_with_backoff<T>(
+    label: &str,
+    attempts: u32,
+    base_ms: u64,
+    mut f: impl FnMut() -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    debug_assert!(attempts >= 1);
+    let mut delay_ms = base_ms;
+    let mut last_err = None;
+    for attempt in 1..=attempts.max(1) {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                if attempt < attempts {
+                    crate::info!(
+                        "{label}: attempt {attempt}/{attempts} failed ({e:#}); retrying in {delay_ms}ms"
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+                    delay_ms = delay_ms.saturating_mul(2);
+                }
+                last_err = Some(e);
+            }
+        }
+    }
+    let e = last_err.expect("attempts >= 1 implies at least one error");
+    Err(e.context(format!("{label}: failed after {} attempts", attempts.max(1))))
+}
+
 /// Render an aligned text table (used by the bench harness to print the
 /// paper's tables).
 pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
@@ -92,6 +125,35 @@ mod tests {
         let sw = Stopwatch::start();
         std::thread::sleep(std::time::Duration::from_millis(5));
         assert!(sw.secs() >= 0.004);
+    }
+
+    #[test]
+    fn retry_succeeds_after_transient_failures() {
+        let mut calls = 0;
+        let v = retry_with_backoff("upload", 4, 0, || {
+            calls += 1;
+            if calls < 3 {
+                anyhow::bail!("transient")
+            }
+            Ok(42)
+        })
+        .unwrap();
+        assert_eq!(v, 42);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retry_exhaustion_names_the_operation() {
+        let mut calls = 0;
+        let err = retry_with_backoff::<()>("download buf 3", 3, 0, || {
+            calls += 1;
+            anyhow::bail!("device gone")
+        })
+        .unwrap_err();
+        assert_eq!(calls, 3);
+        let msg = format!("{err:#}");
+        assert!(msg.contains("download buf 3") && msg.contains("3 attempts"), "{msg}");
+        assert!(msg.contains("device gone"), "{msg}");
     }
 
     #[test]
