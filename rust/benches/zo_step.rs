@@ -8,7 +8,11 @@
 //! update/schedule overhead on the dense full-model step), and the four
 //! Table-4 PEFT step variants (`mezo-lora`, `lezo-lora`, `mezo-prefix`,
 //! `lezo-prefix`: adapter units tunable over a frozen base, with their
-//! tunable-parameter counts in the `steps[].tunable_params` JSON field). Backend-generic: the native backend
+//! tunable-parameter counts in the `steps[].tunable_params` JSON field),
+//! plus `mezo-sharded` rows — the dense step fanned across 1/2/4 lockstep
+//! replicas via the sharded backend, carrying a `shards` count and a
+//! `scaling` speedup-vs-1-backend column (JSON version 5).
+//! Backend-generic: the native backend
 //! runs with zero artifacts on any machine; with `--features pjrt` and
 //! exported artifacts the same harness times the PJRT runtime. For the full
 //! table/figure regeneration use `lezo bench <id>`.
@@ -48,7 +52,7 @@ use lezo::model::checkpoint::{self, HistPoint, TrainState};
 use lezo::peft::PeftMode;
 use lezo::runtime::backend::{Backend, Precision};
 use lezo::runtime::native::parallel;
-use lezo::runtime::NativeBackend;
+use lezo::runtime::{NativeBackend, ShardedBackend};
 use std::fmt::Write as _;
 use std::time::Instant;
 
@@ -126,6 +130,13 @@ struct StepStat {
     /// Size of the ZO-tunable parameter space: the full model for
     /// `mezo`/`lezo75`, the per-block adapter units for the PEFT variants.
     tunable_params: usize,
+    /// Worker replicas behind the row: 0 for single-backend (sequential)
+    /// rows, N for the `mezo-sharded` plan fan-out rows.
+    shards: usize,
+    /// Speedup of this row vs its single-backend reference at the same
+    /// precision (`mezo` ms / this row's ms); NaN (JSON null) for
+    /// sequential rows, which have no reference.
+    scaling: f64,
 }
 
 struct CheckpointStat {
@@ -178,7 +189,7 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
     let mut s = String::new();
     let _ = write!(
         s,
-        "{{\n  \"version\": 4,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
+        "{{\n  \"version\": 5,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
         parallel::effective_threads()
     );
     for (ti, t) in targets.iter().enumerate() {
@@ -232,7 +243,8 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
                 s,
                 "\n        {{\"name\": \"{}\", \"precision\": \"{}\", \"ms_per_step\": {}, \
                  \"perturb_ms\": {}, \"forward_ms\": {}, \"update_ms\": {}, \
-                 \"non_forward_fraction\": {}, \"forward_bytes\": {}, \"tunable_params\": {}}}",
+                 \"non_forward_fraction\": {}, \"forward_bytes\": {}, \"tunable_params\": {}, \
+                 \"shards\": {}, \"scaling\": {}}}",
                 st.name,
                 st.precision,
                 json_num(st.ms_per_step),
@@ -241,7 +253,9 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
                 json_num(st.update_ms),
                 json_num(st.non_forward_fraction),
                 json_num(st.forward_bytes),
-                st.tunable_params
+                st.tunable_params,
+                st.shards,
+                json_num(st.scaling)
             );
         }
         s.push_str("\n      ],\n      \"checkpoint\": [");
@@ -531,6 +545,87 @@ fn time_zo_steps<B: Backend>(
         non_forward_fraction: times.non_forward_fraction(),
         forward_bytes,
         tunable_params: tun.param_count(),
+        shards: 0,
+        scaling: f64::NAN,
+    }
+}
+
+/// Sharded plan fan-out rows: the dense classic step (`mezo` schedule,
+/// zo-sgd) re-timed through `ShardedBackend` at 1/2/4 replicas, at both
+/// precisions. The `scaling` field is the speedup vs the same-precision
+/// single-backend `mezo` row already in `report` — the headline number of
+/// the data-parallel backend (per-step losses are bit-identical to native
+/// by construction, so any scaling > 1 is free accuracy-wise).
+fn bench_sharded_into(model: &str, iters: usize, report: &mut TargetReport) {
+    for precision in [Precision::F32, Precision::Bf16] {
+        let prec = match precision {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        };
+        let base_ms = report
+            .steps
+            .iter()
+            .find(|s| s.name == "mezo" && s.precision == prec)
+            .map(|s| s.ms_per_step)
+            .unwrap_or(f64::NAN);
+        for shards in [1usize, 2, 4] {
+            let backend = match ShardedBackend::preset_with_precision(model, shards, precision) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("  [skip] mezo-sharded x{shards} [{prec}]: {e}");
+                    continue;
+                }
+            };
+            let spec = backend.spec().clone();
+            let elsize = match precision {
+                Precision::F32 => 4usize,
+                Precision::Bf16 => 2,
+            };
+            backend.warm_zo().unwrap();
+            let host = backend.initial_params("").unwrap().0;
+            let mut tun = TunableUnits::from_host(&backend, &host).unwrap();
+            let active: Vec<usize> = (0..spec.n_units()).collect();
+            let prepared = backend.prepare_batch(&lm_batch(&spec, 32)).unwrap();
+            let eng = SpsaEngine::new(&backend, 1e-3, 1).unwrap();
+            let mut opt = ZoSgd;
+            let mut times = StageTimes::default();
+            let t = Instant::now();
+            for step in 0..iters as u64 {
+                eng.zo_step_fanout(
+                    step,
+                    &mut tun,
+                    &active,
+                    1e-5,
+                    &mut opt,
+                    PeftMode::Full,
+                    None,
+                    &prepared,
+                    &mut |_| Ok(None),
+                    &mut times,
+                )
+                .unwrap();
+            }
+            let ms = 1e3 * t.elapsed().as_secs_f64() / iters as f64;
+            let (p, f, u, _) = times.per_step_ms();
+            let st = StepStat {
+                name: "mezo-sharded",
+                precision: prec,
+                ms_per_step: ms,
+                perturb_ms: p,
+                forward_ms: f,
+                update_ms: u,
+                non_forward_fraction: times.non_forward_fraction(),
+                forward_bytes: 2.0 * forward_bytes_model(&spec, spec.train_batch, 32, elsize),
+                tunable_params: tun.param_count(),
+                shards,
+                scaling: base_ms / ms,
+            };
+            println!(
+                "  mezo-sharded x{shards} [{prec}] {:>7.1} ms/step ({:.2}x vs 1-backend mezo)",
+                st.ms_per_step, st.scaling
+            );
+            report.steps.push(st);
+        }
     }
 }
 
@@ -545,6 +640,10 @@ fn run_target(target: &str, iters: usize) -> Option<TargetReport> {
                 let b16 =
                     NativeBackend::preset(model).unwrap().with_precision(Precision::Bf16);
                 bench_into(&b16, iters, &mut report);
+                // the data-parallel twin: same dense step fanned across
+                // 1/2/4 lockstep replicas, with its scaling vs the rows
+                // above (version-5 `shards`/`scaling` fields)
+                bench_sharded_into(model, iters, &mut report);
                 Some(report)
             }
             Err(e) => {

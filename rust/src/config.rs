@@ -128,6 +128,12 @@ pub struct RunConfig {
     /// Sparse-MeZO: fraction of each unit's smallest-|w| elements that stay
     /// tunable (the magnitude mask).
     pub smezo_keep: f64,
+    /// Worker replicas for `backend=sharded` (each holds a full parameter
+    /// copy; a step's forward evaluations are partitioned across them —
+    /// see `runtime/sharded.rs`). The `LEZO_SHARDS` env var overrides this,
+    /// mirroring `threads`/`LEZO_THREADS`; zero is rejected either way.
+    /// Results are bit-identical to `backend=native` at any shard count.
+    pub shards: usize,
     /// Native-backend worker threads (0 = auto / available parallelism).
     /// The `LEZO_THREADS` env var overrides this at kernel-entry time.
     /// Results are bit-identical at any setting — the native kernels use
@@ -192,6 +198,7 @@ impl Default for RunConfig {
             blocks_only: true,
             policy: Policy::Uniform,
             smezo_keep: 0.5,
+            shards: 2,
             threads: 0,
             precision: Precision::F32,
             zo_opt: ZoOptKind::Sgd,
@@ -248,6 +255,13 @@ impl RunConfig {
                     bail!("smezo_keep must be in [0, 1], got {keep}");
                 }
                 self.smezo_keep = keep;
+            }
+            "shards" => {
+                let n: usize = parse!();
+                if n == 0 {
+                    bail!("shards must be a positive replica count, got 0");
+                }
+                self.shards = n;
             }
             "threads" => self.threads = parse!(),
             "precision" => self.precision = parse!(),
@@ -311,11 +325,13 @@ impl RunConfig {
             "model = {}\ntask = {}\nmethod = {}\npeft = {}\ndrop_layers = {}\nlr = {}\n\
              mu = {}\nsteps = {}\neval_every = {}\neval_examples = {}\ntrain_examples = {}\n\
              seed = {}\nicl_shots = {}\nmean_len = {}\nblocks_only = {}\nzo_opt = {}\n\
-             resume = {}\nsave_every = {}\non_nonfinite = {}\ndivergence_factor = {}\n",
+             shards = {}\nresume = {}\nsave_every = {}\non_nonfinite = {}\n\
+             divergence_factor = {}\n",
             self.model, self.task, self.method, self.peft, self.drop_layers, self.lr,
             self.mu, self.steps, self.eval_every, self.eval_examples, self.train_examples,
             self.seed, self.icl_shots, self.mean_len, self.blocks_only, self.zo_opt,
-            self.resume, self.save_every, self.on_nonfinite, self.divergence_factor,
+            self.shards, self.resume, self.save_every, self.on_nonfinite,
+            self.divergence_factor,
         )
     }
 
@@ -344,6 +360,9 @@ impl RunConfig {
         }
         if self.resume.is_empty() {
             bail!("resume must be auto|never|<state-file path>");
+        }
+        if self.shards == 0 {
+            bail!("shards must be a positive replica count, got 0");
         }
         FaultPlan::parse(&self.faults)
             .map_err(|e| anyhow!("faults key does not parse: {e}"))?;
@@ -570,8 +589,28 @@ mod tests {
         assert_eq!(c.backend, BackendKind::Auto);
         c.apply_overrides(&["backend=native".into()]).unwrap();
         assert_eq!(c.backend, BackendKind::Native);
+        c.apply_overrides(&["backend=sharded".into()]).unwrap();
+        assert_eq!(c.backend, BackendKind::Sharded);
         c.apply_overrides(&["backend=pjrt".into()]).unwrap();
         assert_eq!(c.backend, BackendKind::Pjrt);
+    }
+
+    #[test]
+    fn shards_key_parses_and_rejects_zero() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.shards, 2, "default shard count");
+        c.apply_overrides(&["shards=4".into()]).unwrap();
+        assert_eq!(c.shards, 4);
+        let err = c.apply_overrides(&["shards=0".into()]).unwrap_err().to_string();
+        assert!(err.contains("positive"), "{err}");
+        assert!(c.apply_overrides(&["shards=lots".into()]).is_err());
+        assert_eq!(c.shards, 4, "failed sets must not clobber");
+        // the file format round-trips the key
+        assert!(c.to_file_format().contains("shards = 4"));
+        // validate catches a field-level zero too
+        c.shards = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("shards"), "{err}");
     }
 
     #[test]

@@ -35,8 +35,10 @@
 use crate::coordinator::faults::NonFinitePolicy;
 use crate::coordinator::metrics::{StageTimer, StageTimes};
 use crate::coordinator::optim::{Coeff, ProbeSchedule, ZoOptimizer, ZoSgd};
+use crate::peft::PeftMode;
 use crate::rng::{zo_probe_seed, zo_seed};
 use crate::runtime::backend::Backend;
+use crate::runtime::plan::{EvalSpec, PlanPhase, PlanResult, StepPlan, SweepOp};
 use anyhow::{bail, Result};
 
 /// A set of tunable flat units living on the backend. For full-parameter
@@ -211,91 +213,149 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
         }
     }
 
-    /// One ZO step under a pluggable update rule. The optimizer picks the
-    /// probe schedule (two-sided classic, or one-sided batched) and maps
-    /// the projected gradient(s) to update coefficients; the engine owns
-    /// perturbation, forwards, and coefficient application. `loss` captures
-    /// whatever else the forward pass needs (frozen base units, the
-    /// uploaded batch). Stage wall-times accumulate into `times` (Fig. 2
-    /// instrumentation).
-    pub fn zo_step_opt(
+    // ---- StepPlan: build / execute / consume -------------------------------
+
+    /// Apply one plan op: `unit <- unit + coeff * z(seed)`. The seed was
+    /// precomputed at plan-build time, so this is the only place an
+    /// executor touches parameters.
+    fn axpy_op(&self, units: &mut TunableUnits<B>, op: &SweepOp) -> Result<()> {
+        debug_assert_eq!(units.lens[op.unit], op.len);
+        self.backend.zo_axpy_inplace(&mut units.bufs[op.unit], op.len, op.seed, op.coeff)
+    }
+
+    /// Emit the [`StepPlan`] for one ZO step: the ordered sweep/eval phases
+    /// of the schedule, with every axpy seed precomputed. The phase order
+    /// reproduces the imperative step exactly — for `OneSided` the plan
+    /// places each probe's eval *before* its `-mu` restore sweep, with that
+    /// same restore as the eval's recovery, so finite and aborting
+    /// executions issue the identical op sequence the old code did.
+    pub fn step_plan(
         &self,
         step: u64,
+        units: &TunableUnits<B>,
+        active: &[usize],
+        schedule: ProbeSchedule,
+    ) -> Result<StepPlan> {
+        debug_assert!(active.iter().all(|&k| k < units.n_units()));
+        let ops = |probe: u64, coeff: f32| -> Vec<SweepOp> {
+            active
+                .iter()
+                .map(|&unit| SweepOp {
+                    unit,
+                    len: units.lens[unit],
+                    seed: zo_probe_seed(self.run_seed, step, probe, unit),
+                    coeff,
+                })
+                .collect()
+        };
+        Ok(match schedule {
+            ProbeSchedule::TwoSided => StepPlan {
+                step,
+                schedule,
+                phases: vec![
+                    PlanPhase::Sweep(ops(0, self.mu)),
+                    PlanPhase::Eval { idx: 0 },
+                    PlanPhase::Sweep(ops(0, -2.0 * self.mu)),
+                    PlanPhase::Eval { idx: 1 },
+                    PlanPhase::Sweep(ops(0, self.mu)),
+                ],
+                evals: vec![EvalSpec { probe: 0 }, EvalSpec { probe: 0 }],
+                recovery: vec![ops(0, -self.mu), ops(0, self.mu)],
+            },
+            ProbeSchedule::OneSided { probes } => {
+                anyhow::ensure!(probes >= 1, "one-sided schedule needs >= 1 probe");
+                let mut phases = vec![PlanPhase::Eval { idx: 0 }];
+                let mut evals = vec![EvalSpec { probe: 0 }];
+                // baseline eval: nothing perturbed yet, nothing to recover
+                let mut recovery = vec![Vec::new()];
+                for p in 0..probes as u64 {
+                    phases.push(PlanPhase::Sweep(ops(p, self.mu)));
+                    phases.push(PlanPhase::Eval { idx: evals.len() });
+                    phases.push(PlanPhase::Sweep(ops(p, -self.mu)));
+                    evals.push(EvalSpec { probe: p });
+                    // aborting at probe p's eval must still undo its +mu
+                    // sweep — the very op the finite path runs next anyway
+                    recovery.push(ops(p, -self.mu));
+                }
+                StepPlan { step, schedule, phases, evals, recovery }
+            }
+        })
+    }
+
+    /// The sequential plan executor: walk the phases in order against this
+    /// engine's backend, checking each loss as it lands. On the first
+    /// non-finite loss the eval's recovery sweep restores theta and the
+    /// remaining phases are skipped.
+    fn run_plan_seq(
+        &self,
+        plan: &StepPlan,
+        units: &mut TunableUnits<B>,
+        loss: &mut dyn FnMut(&TunableUnits<B>) -> Result<f32>,
+        times: &mut StageTimes,
+    ) -> Result<PlanResult> {
+        let mut t = StageTimer::start();
+        let mut losses = Vec::with_capacity(plan.evals.len());
+        for phase in &plan.phases {
+            match phase {
+                PlanPhase::Sweep(ops) => {
+                    for op in ops {
+                        self.axpy_op(units, op)?;
+                    }
+                    times.perturb_secs += t.lap();
+                }
+                PlanPhase::Eval { idx } => {
+                    debug_assert_eq!(*idx, losses.len());
+                    let l = loss(units)?;
+                    times.forward_secs += t.lap();
+                    losses.push(l);
+                    if !l.is_finite() {
+                        for op in &plan.recovery[*idx] {
+                            self.axpy_op(units, op)?;
+                        }
+                        times.perturb_secs += t.lap();
+                        return Ok(PlanResult { losses, aborted: Some(*idx) });
+                    }
+                }
+            }
+        }
+        Ok(PlanResult { losses, aborted: None })
+    }
+
+    /// Consume a plan's gathered `(probe, loss)` scalars: map them to
+    /// projected gradients, let the optimizer turn those into [`Coeff`]s,
+    /// and apply the update. This is the only step stage that depends on
+    /// the losses, so it runs after *any* executor — sequential or fan-out.
+    fn finish_step(
+        &self,
+        plan: &StepPlan,
+        res: PlanResult,
         units: &mut TunableUnits<B>,
         active: &[usize],
         lr: f32,
         opt: &mut dyn ZoOptimizer,
-        loss: &mut dyn FnMut(&TunableUnits<B>) -> Result<f32>,
         times: &mut StageTimes,
     ) -> Result<ZoStep> {
-        debug_assert!(active.iter().all(|&k| k < units.n_units()));
         let active_params = active.iter().map(|&k| units.lens[k]).sum();
+        if let Some(e) = res.aborted {
+            // the executor already restored theta; decide the policy
+            let probe = plan.evals[e].probe;
+            return self.nonfinite(plan.step, probe, res.losses[e], active, active_params, times);
+        }
         let mut t = StageTimer::start();
-
-        match opt.schedule() {
+        match plan.schedule {
             ProbeSchedule::TwoSided => {
-                // perturb +mu
-                self.sweep(units, active, step, self.mu)?;
-                times.perturb_secs += t.lap();
-                let loss_plus = loss(units)?;
-                times.forward_secs += t.lap();
-                if !loss_plus.is_finite() {
-                    // restore theta from +mu before deciding the policy
-                    self.sweep(units, active, step, -self.mu)?;
-                    times.perturb_secs += t.lap();
-                    return self.nonfinite(step, 0, loss_plus, active, active_params, times);
-                }
-
-                // flip to -mu
-                self.sweep(units, active, step, -2.0 * self.mu)?;
-                times.perturb_secs += t.lap();
-                let loss_minus = loss(units)?;
-                times.forward_secs += t.lap();
-                if !loss_minus.is_finite() {
-                    // restore theta from -mu
-                    self.sweep(units, active, step, self.mu)?;
-                    times.perturb_secs += t.lap();
-                    return self.nonfinite(step, 0, loss_minus, active, active_params, times);
-                }
-
-                // restore to theta
-                self.sweep(units, active, step, self.mu)?;
-                times.perturb_secs += t.lap();
-
-                // update along the optimizer's coefficients
+                let (loss_plus, loss_minus) = (res.losses[0], res.losses[1]);
                 let projected_grad = (loss_plus - loss_minus) / (2.0 * self.mu);
-                let coeffs = opt.coeffs(step, &[projected_grad], active, lr);
+                let coeffs = opt.coeffs(plan.step, &[projected_grad], active, lr);
                 self.apply_coeffs(units, &coeffs)?;
                 times.update_secs += t.lap();
                 times.steps += 1;
-
                 Ok(ZoStep { loss_plus, loss_minus, projected_grad, active_params, skipped: false })
             }
-            ProbeSchedule::OneSided { probes } => {
-                anyhow::ensure!(probes >= 1, "one-sided schedule needs >= 1 probe");
-                // one baseline forward, shared by every probe
-                let l0 = loss(units)?;
-                times.forward_secs += t.lap();
-                if !l0.is_finite() {
-                    // nothing perturbed yet — theta is already clean
-                    return self.nonfinite(step, 0, l0, active, active_params, times);
-                }
-
-                let mut gs = Vec::with_capacity(probes);
-                for p in 0..probes as u64 {
-                    self.probe_sweep(units, active, step, p, self.mu)?;
-                    times.perturb_secs += t.lap();
-                    let lp = loss(units)?;
-                    times.forward_secs += t.lap();
-                    self.probe_sweep(units, active, step, p, -self.mu)?;
-                    times.perturb_secs += t.lap();
-                    if !lp.is_finite() {
-                        return self.nonfinite(step, p, lp, active, active_params, times);
-                    }
-                    gs.push((lp - l0) / self.mu);
-                }
-
-                let coeffs = opt.coeffs(step, &gs, active, lr);
+            ProbeSchedule::OneSided { .. } => {
+                let l0 = res.losses[0];
+                let gs: Vec<f32> = res.losses[1..].iter().map(|&lp| (lp - l0) / self.mu).collect();
+                let coeffs = opt.coeffs(plan.step, &gs, active, lr);
                 self.apply_coeffs(units, &coeffs)?;
                 times.update_secs += t.lap();
                 times.steps += 1;
@@ -312,6 +372,61 @@ impl<'b, B: Backend> SpsaEngine<'b, B> {
                 })
             }
         }
+    }
+
+    /// One ZO step under a pluggable update rule. The optimizer picks the
+    /// probe schedule (two-sided classic, or one-sided batched) and maps
+    /// the projected gradient(s) to update coefficients; the engine owns
+    /// perturbation, forwards, and coefficient application. `loss` captures
+    /// whatever else the forward pass needs (frozen base units, the
+    /// uploaded batch). Stage wall-times accumulate into `times` (Fig. 2
+    /// instrumentation).
+    ///
+    /// Since PR 8 this is plan build + the sequential executor + the loss
+    /// consumer — the identical op sequence the pre-plan imperative body
+    /// issued (pinned by `plan_executor_is_bit_identical_to_zo_step`).
+    pub fn zo_step_opt(
+        &self,
+        step: u64,
+        units: &mut TunableUnits<B>,
+        active: &[usize],
+        lr: f32,
+        opt: &mut dyn ZoOptimizer,
+        loss: &mut dyn FnMut(&TunableUnits<B>) -> Result<f32>,
+        times: &mut StageTimes,
+    ) -> Result<ZoStep> {
+        debug_assert!(active.iter().all(|&k| k < units.n_units()));
+        let plan = self.step_plan(step, units, active, opt.schedule())?;
+        let res = self.run_plan_seq(&plan, units, loss, times)?;
+        self.finish_step(&plan, res, units, active, lr, opt, times)
+    }
+
+    /// One ZO step routed through the backend's plan **fan-out** executor
+    /// ([`Backend::run_zo_plan`]) instead of the sequential one — the
+    /// sharded backend distributes the plan's forward evaluations across
+    /// worker replicas and gathers only `(probe, loss)` scalars. The
+    /// optimizer update still happens here, broadcast through
+    /// `zo_axpy_inplace` like every other sweep. `inject` is the trainer's
+    /// fault hook, called once per eval index in eval order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn zo_step_fanout(
+        &self,
+        step: u64,
+        units: &mut TunableUnits<B>,
+        active: &[usize],
+        lr: f32,
+        opt: &mut dyn ZoOptimizer,
+        peft: PeftMode,
+        base: Option<&[B::Buffer]>,
+        batch: &B::PreparedBatch,
+        inject: &mut dyn FnMut(usize) -> Result<Option<f32>>,
+        times: &mut StageTimes,
+    ) -> Result<ZoStep> {
+        debug_assert!(active.iter().all(|&k| k < units.n_units()));
+        let plan = self.step_plan(step, units, active, opt.schedule())?;
+        let res =
+            self.backend.run_zo_plan(&plan, &mut units.bufs, peft, base, batch, inject, times)?;
+        self.finish_step(&plan, res, units, active, lr, opt, times)
     }
 
     // ---- Sparse-MeZO (element-wise magnitude mask) -------------------------
@@ -561,6 +676,93 @@ mod tests {
             via_opt.to_host(&b).unwrap(),
             "zo-sgd through the optimizer plumbing must be bit-identical"
         );
+    }
+
+    #[test]
+    fn plan_executor_is_bit_identical_to_zo_step() {
+        // the tentpole invariant: zo_step (now plan build + sequential
+        // executor) must reproduce the pre-plan imperative op sequence
+        // exactly — written out longhand here via the public perturb-only
+        // API, same seeds, same order, same f32 coefficients
+        let (b, spec) = setup();
+        let eng = SpsaEngine::new(&b, 1e-3, 42).unwrap();
+        let mut planned = tunable(&b, &spec);
+        let mut longhand = tunable(&b, &spec);
+        let active: Vec<usize> = (0..planned.n_units()).filter(|&k| k != 1).collect();
+        let mut times = StageTimes::default();
+        let (mu, lr) = (eng.mu, 1e-3f32);
+        let mut loss = |u: &TunableUnits<NativeBackend>| -> Result<f32> {
+            let v = b.download(&u.bufs[0])?;
+            Ok(v.iter().take(100).sum::<f32>())
+        };
+        for t in 0..3 {
+            let zs = eng.zo_step(t, &mut planned, &active, lr, &mut loss, &mut times).unwrap();
+
+            // the old imperative two-sided body, spelled out
+            eng.apply(t, &mut longhand, &active, mu).unwrap();
+            let lp = loss(&longhand).unwrap();
+            eng.apply(t, &mut longhand, &active, -2.0 * mu).unwrap();
+            let lm = loss(&longhand).unwrap();
+            eng.apply(t, &mut longhand, &active, mu).unwrap();
+            let g = (lp - lm) / (2.0 * mu);
+            // zo-sgd's coeffs are a probe-0 sweep with c = -lr * g
+            eng.apply(t, &mut longhand, &active, -lr * g).unwrap();
+
+            assert_eq!(zs.loss_plus.to_bits(), lp.to_bits(), "step {t}: loss+");
+            assert_eq!(zs.loss_minus.to_bits(), lm.to_bits(), "step {t}: loss-");
+            assert_eq!(zs.projected_grad.to_bits(), g.to_bits(), "step {t}: grad");
+        }
+        assert_eq!(
+            planned.to_host(&b).unwrap(),
+            longhand.to_host(&b).unwrap(),
+            "plan executor must be bit-identical to the imperative step"
+        );
+    }
+
+    #[test]
+    fn step_plan_shapes_match_the_schedules() {
+        use crate::runtime::plan::PlanPhase;
+        let (b, spec) = setup();
+        let eng = SpsaEngine::new(&b, 1e-3, 7).unwrap();
+        let units = tunable(&b, &spec);
+        let active = vec![0usize, 3];
+
+        let two = eng.step_plan(4, &units, &active, ProbeSchedule::TwoSided).unwrap();
+        assert_eq!(two.phases.len(), 5);
+        assert_eq!(two.evals.len(), 2);
+        assert_eq!(two.recovery.len(), 2);
+        assert_eq!(two.touched_units(), active, "only active units appear in sweeps");
+        let coeffs: Vec<f32> = two
+            .phases
+            .iter()
+            .filter_map(|p| match p {
+                PlanPhase::Sweep(ops) => Some(ops[0].coeff),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(coeffs, vec![eng.mu, -2.0 * eng.mu, eng.mu]);
+        // probe-0 plan seeds are the classic zo_seed derivation, bit-for-bit
+        match &two.phases[0] {
+            PlanPhase::Sweep(ops) => {
+                for op in ops {
+                    assert_eq!(op.seed, zo_seed(eng.run_seed, 4, op.unit));
+                    assert_eq!(op.len, units.lens[op.unit]);
+                }
+            }
+            other => panic!("expected sweep, got {other:?}"),
+        }
+
+        let one = eng
+            .step_plan(4, &units, &active, ProbeSchedule::OneSided { probes: 3 })
+            .unwrap();
+        assert_eq!(one.phases.len(), 1 + 3 * 3, "baseline eval + (sweep, eval, sweep) per probe");
+        assert_eq!(one.evals.len(), 4);
+        assert_eq!(one.evals.iter().map(|e| e.probe).collect::<Vec<_>>(), vec![0, 0, 1, 2]);
+        assert!(one.recovery[0].is_empty(), "baseline eval needs no recovery");
+        for r in &one.recovery[1..] {
+            assert!(r.iter().all(|op| op.coeff == -eng.mu));
+        }
+        assert!(eng.step_plan(4, &units, &active, ProbeSchedule::OneSided { probes: 0 }).is_err());
     }
 
     #[test]

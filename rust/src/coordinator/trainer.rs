@@ -5,9 +5,11 @@
 //! The loop is generic over the runtime [`Backend`]: `run()` resolves the
 //! configured backend (config key `backend` / env `LEZO_BACKEND`; `auto`
 //! picks PJRT when artifacts exist in a pjrt-enabled build, else the native
-//! pure-Rust backend) and hands it to [`Trainer::run_with`], so the full
-//! perturb -> forward -> flip -> forward -> restore -> update loop runs
-//! end-to-end on any machine with zero external artifacts. The same is
+//! pure-Rust backend; `sharded` builds N identically configured native
+//! replicas — `shards` key / `LEZO_SHARDS` env — whose lockstep fan-out is
+//! bit-identical to native) and hands it to [`Trainer::run_with`], so the
+//! full perturb -> forward -> flip -> forward -> restore -> update loop
+//! runs end-to-end on any machine with zero external artifacts. The same is
 //! true of the first-order paths since the native backward pass landed
 //! (`method=ft` and [`pretrain`] run on any FO-capable backend,
 //! `Backend::supports_fo`) and of the PEFT spaces since the native
@@ -29,7 +31,7 @@ use crate::model::spec::ModelSpec;
 use crate::peft::PeftMode;
 use crate::rng::{derive, purpose, Rng};
 use crate::runtime::backend::{Backend, BackendKind, Precision};
-use crate::runtime::NativeBackend;
+use crate::runtime::{NativeBackend, ShardedBackend};
 use crate::tasks::{eval_set, make_task, Example, TaskKind};
 use anyhow::{bail, ensure, Result};
 use std::path::{Path, PathBuf};
@@ -49,7 +51,7 @@ pub struct EvalPoint {
 pub struct TrainReport {
     pub task: String,
     pub method: Method,
-    /// Which backend executed the run ("native" / "pjrt").
+    /// Which backend executed the run ("native" / "sharded" / "pjrt").
     pub backend: &'static str,
     /// Forward-path precision the backend executed
     /// ([`Backend::precision`]; f32 masters stay authoritative either way).
@@ -104,6 +106,9 @@ impl TrainReport {
 /// A concrete backend instance chosen for a run.
 pub enum ResolvedBackend {
     Native(NativeBackend),
+    /// N identically configured native replicas ([`ShardedBackend`]); the
+    /// shard count comes from `cfg.shards` / `LEZO_SHARDS` (env wins).
+    Sharded(ShardedBackend),
     #[cfg(feature = "pjrt")]
     Pjrt(crate::runtime::PjrtBackend),
 }
@@ -112,6 +117,7 @@ impl ResolvedBackend {
     pub fn name(&self) -> &'static str {
         match self {
             ResolvedBackend::Native(_) => "native",
+            ResolvedBackend::Sharded(_) => "sharded",
             #[cfg(feature = "pjrt")]
             ResolvedBackend::Pjrt(_) => "pjrt",
         }
@@ -144,8 +150,8 @@ pub fn resolve_backend(cfg: &RunConfig) -> Result<ResolvedBackend> {
     // from its manifest (so exported sizes outside the preset list still
     // run natively) and initial params from params_init.bin /
     // pretrained.ckpt — results match across build flavors
-    let native = |dir: std::path::PathBuf| -> Result<ResolvedBackend> {
-        let (spec, manifest) = crate::runtime::backend::resolve_model(&cfg.model, &dir)?;
+    let native_replica = |dir: &std::path::Path| -> Result<NativeBackend> {
+        let (spec, manifest) = crate::runtime::backend::resolve_model(&cfg.model, dir)?;
         let mut backend = NativeBackend::new(spec)?.with_precision(precision);
         ensure_precision(&backend, precision)?;
         if let Some(manifest) = manifest {
@@ -153,9 +159,12 @@ pub fn resolve_backend(cfg: &RunConfig) -> Result<ResolvedBackend> {
         } else {
             // manifest-less dirs may still hold a pretrained.ckpt written
             // by the hermetic `lezo pretrain` path — adopt it
-            backend = backend.with_checkpoint_dir(&dir);
+            backend = backend.with_checkpoint_dir(dir);
         }
-        Ok(ResolvedBackend::Native(backend))
+        Ok(backend)
+    };
+    let native = |dir: std::path::PathBuf| -> Result<ResolvedBackend> {
+        Ok(ResolvedBackend::Native(native_replica(&dir)?))
     };
     // a reduced-precision request must never silently run in f32: any
     // backend that cannot execute it is a hard error. PJRT is gated before
@@ -174,6 +183,16 @@ pub fn resolve_backend(cfg: &RunConfig) -> Result<ResolvedBackend> {
     };
     match requested_backend_kind(cfg)? {
         BackendKind::Native => native(artifact_dir),
+        BackendKind::Sharded => {
+            // N identically configured replicas: each goes through the same
+            // precision/artifact adoption as a native run, so every replica
+            // starts from the same bits as the run backend=native would
+            let shards = crate::runtime::sharded::resolve_shards(cfg.shards)?;
+            let replicas = (0..shards)
+                .map(|_| native_replica(&artifact_dir))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(ResolvedBackend::Sharded(ShardedBackend::from_replicas(replicas)?))
+        }
         BackendKind::Pjrt => {
             check_pjrt_precision()?;
             #[cfg(feature = "pjrt")]
@@ -276,6 +295,13 @@ fn divergence_reason(losses: &[f32], factor: f64) -> Option<String> {
 /// Stored verbatim in every [`TrainState`] so resuming under a different run
 /// configuration is rejected with an error naming the differing field — a
 /// hash could only say "something differs".
+///
+/// Execution-geometry keys (`threads`, `shards`) are deliberately absent:
+/// the native kernels are thread-count invariant and the sharded backend is
+/// bit-identical to native at any shard count, so a run may resume under a
+/// different worker geometry and still land on the same trajectory. The
+/// backend *name* stays in (native and sharded print the same bits, but a
+/// fingerprint should say what actually executed the checkpointed steps).
 fn run_config_string(
     cfg: &RunConfig,
     backend: &str,
@@ -425,6 +451,7 @@ impl Trainer {
         crate::runtime::native::parallel::with_threads(self.cfg.threads, || {
             match resolve_backend(&self.cfg)? {
                 ResolvedBackend::Native(b) => self.run_with(&b),
+                ResolvedBackend::Sharded(b) => self.run_with(&b),
                 #[cfg(feature = "pjrt")]
                 ResolvedBackend::Pjrt(b) => self.run_with(&b),
             }
@@ -567,7 +594,10 @@ impl Trainer {
             ensure!(
                 zo_kind == ZoOptKind::Sgd,
                 "Sparse-MeZO runs the masked classic rule only and cannot compose with \
-                 zo_opt={zo_kind} (the element-wise mask bypasses the optimizer zoo)"
+                 zo_opt={zo_kind} (the element-wise mask bypasses the optimizer zoo); \
+                 set the `zo_opt` config key to zo-sgd — or unset the LEZO_ZO_OPT env \
+                 var, which overrides it — valid rules: {}",
+                crate::coordinator::optim::ZO_OPT_NAMES
             );
         }
         let mut optimizer: Box<dyn ZoOptimizer> = match zo_kind {
@@ -746,7 +776,36 @@ impl Trainer {
             };
 
             let zs = if cfg.method == Method::Smezo {
+                // Sparse-MeZO's element-wise masked sweeps stay on the
+                // sequential path on every backend (sharded broadcasts
+                // them, so lockstep holds without fan-out)
                 engine.zo_step_masked(step, &mut tunable, &taus, cfg.lr as f32, &mut loss_fn, &mut times)?
+            } else if backend.supports_plan_fanout() {
+                // plan fan-out: the backend owns the step execution and the
+                // trainer's fault hook replaces the loss_fn counter — eval 0
+                // is the step's first forward (the +mu point), exactly where
+                // the sequential path's `fwd_calls == 1` boundary sits
+                let mut inject = |e: usize| -> Result<Option<f32>> {
+                    if e == 0 {
+                        faults_ro.check_crash(s1, CrashPhase::PostPerturb)?;
+                        if faults_ro.nan_loss_at(s1) {
+                            return Ok(Some(f32::NAN));
+                        }
+                    }
+                    Ok(None)
+                };
+                engine.zo_step_fanout(
+                    step,
+                    &mut tunable,
+                    &active,
+                    cfg.lr as f32,
+                    optimizer.as_mut(),
+                    cfg.peft,
+                    base.as_deref(),
+                    &prepared,
+                    &mut inject,
+                    &mut times,
+                )?
             } else {
                 engine.zo_step_opt(
                     step,
@@ -1179,6 +1238,14 @@ pub fn pretrain(
                 };
                 pretrain_with(&b, &dir, init, steps, lr, seed, log_every)
             }
+            // sharding fans out ZO forward evaluations; FO pretraining has
+            // exactly one forward+backward per step, so N replicas buy
+            // nothing and the redirect keeps the checkpoint provenance
+            // single-sourced
+            ResolvedBackend::Sharded(_) => bail!(
+                "pretrain is first-order and gains nothing from backend=sharded \
+                 (one fused forward+backward per step); use backend=native"
+            ),
             #[cfg(feature = "pjrt")]
             ResolvedBackend::Pjrt(b) => {
                 let init = b.manifest().read_init_params()?;
@@ -1394,8 +1461,38 @@ mod tests {
         let mut cfg = zo_nano_cfg();
         cfg.method = Method::Smezo;
         cfg.zo_opt = ZoOptKind::Adam;
-        let err = Trainer::new(cfg).run().unwrap_err();
-        assert!(err.to_string().contains("zo_opt"), "{err}");
+        let err = Trainer::new(cfg).run().unwrap_err().to_string();
+        // actionable rejection: the offending rule, the valid set, and both
+        // spellings of the knob (config key + env override)
+        assert!(err.contains("zo_opt=zo-adam"), "{err}");
+        assert!(err.contains(crate::coordinator::optim::ZO_OPT_NAMES), "{err}");
+        assert!(err.contains("`zo_opt` config key"), "{err}");
+        assert!(err.contains("LEZO_ZO_OPT"), "{err}");
+    }
+
+    #[test]
+    fn sharded_trainer_run_is_bit_identical_to_native() {
+        // trainer-level smoke of the tentpole invariant (the full matrix
+        // lives in rust/tests/backend_comparison.rs): the whole run —
+        // sampling, LeZO selection, steps, evals — under backend=sharded
+        // must report the exact bits of the backend=native run
+        if std::env::var("LEZO_SHARDS").map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED sharded_trainer_run_is_bit_identical_to_native: LEZO_SHARDS wins");
+            return;
+        }
+        let mut cfg = zo_nano_cfg();
+        cfg.method = Method::Lezo;
+        cfg.drop_layers = 1;
+        let native = Trainer::new(cfg.clone()).run().unwrap();
+        cfg.backend = BackendKind::Sharded;
+        cfg.shards = 2;
+        let sharded = Trainer::new(cfg).run().unwrap();
+        assert_eq!(sharded.backend, "sharded");
+        let bits = |r: &TrainReport| r.losses.iter().map(|l| l.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&native), bits(&sharded), "per-step losses must agree to_bits");
+        assert_eq!(native.final_metric.to_bits(), sharded.final_metric.to_bits());
+        assert_eq!(native.best_metric.to_bits(), sharded.best_metric.to_bits());
+        assert_eq!(native.stage_times.steps, sharded.stage_times.steps);
     }
 
     #[test]

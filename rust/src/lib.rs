@@ -41,16 +41,21 @@
 //!   software-bf16 twin of the forward path (`precision=bf16`, env
 //!   `LEZO_PRECISION`) halves the streamed bytes while the trainable f32
 //!   masters stay authoritative ([`runtime::native`], "Precision").
+//!   [`runtime::sharded`] runs N lockstep native replicas and fans each ZO
+//!   step's forward evaluations across them — only `(probe, loss)` scalars
+//!   travel, and the trajectory is bit-identical to single-backend native.
 //!   [`runtime::pjrt`] (feature `pjrt`) executes the AOT HLO artifacts
 //!   instead.
 //! - **L2/L1** live in `python/compile/` and never run on the request path.
 //!
 //! ## Selecting a backend
 //!
-//! Config key `backend=auto|native|pjrt`; the `LEZO_BACKEND` env var
-//! steers the `auto` default (an explicit config setting always wins).
+//! Config key `backend=auto|native|sharded|pjrt`; the `LEZO_BACKEND` env
+//! var steers the `auto` default (an explicit config setting always wins).
 //! `auto` uses PJRT when `<artifacts_root>/<model>/manifest.json` exists in
 //! a pjrt-enabled build, else the native backend with the `<model>` preset.
+//! `backend=sharded` takes a replica count from the `shards` key (env
+//! `LEZO_SHARDS` wins, strict like `LEZO_THREADS`).
 //!
 //! ## Testing
 //!

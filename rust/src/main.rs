@@ -23,11 +23,15 @@ fn usage() -> ! {
          lezo pretrain model=<size> [backend=auto|native|pjrt] [steps=N] [lr=X] [seed=S]\n  \
          lezo bench   <id|all> [key=value ...]    ids: {}\n  \
          lezo info    [model=<size>]\n  lezo render  task=<name> [n=K] [seed=S]\n\n\
-         Common keys: model backend task method peft drop_layers lr mu steps\n\
+         Common keys: model backend shards task method peft drop_layers lr mu steps\n\
          eval_every eval_examples train_examples seed icl_shots mean_len checkpoint\n\
          precision threads zo_opt save_every resume faults on_nonfinite\n\
          divergence_factor\n\
-         (backend:   auto|native|pjrt — native needs no artifacts)\n\
+         (backend:   auto|native|sharded|pjrt — native needs no artifacts;\n\
+          sharded runs N native replicas in lockstep and fans each ZO step's\n\
+          forwards across them, bit-identical to native)\n\
+         (shards:    replica count for backend=sharded (default 2).\n\
+          Env LEZO_SHARDS overrides, like LEZO_THREADS for threads)\n\
          (method:    zero-shot|icl|ft|mezo|lezo|smezo, or a Table-4 alias\n\
           mezo-lora|lezo-lora|mezo-prefix|lezo-prefix that also sets peft)\n\
          (peft:      full|lora|prefix — adapter tuning runs on any backend)\n\

@@ -209,6 +209,46 @@ pub trait Backend {
     fn warm_zo(&self) -> Result<()> {
         Ok(())
     }
+
+    // ---- plan fan-out ------------------------------------------------------
+
+    /// True when this backend owns its own [`StepPlan`] executor
+    /// ([`Backend::run_zo_plan`]) that can fan a step's forward evaluations
+    /// out across workers. Single-substrate backends leave the default:
+    /// the engine then walks the plan sequentially itself — there is
+    /// deliberately no second sequential executor here to drift from.
+    fn supports_plan_fanout(&self) -> bool {
+        false
+    }
+
+    /// Execute one [`StepPlan`] (sweeps + forward evaluations, *not* the
+    /// optimizer update — the engine applies coefficients afterwards through
+    /// [`Backend::zo_axpy_inplace`]). `bufs` are the tunable units the plan's
+    /// ops index; `base` is the frozen argument prefix under PEFT. `inject`
+    /// is the coordinator's per-eval hook (fault injection): called once per
+    /// eval in eval order, `Ok(Some(l))` replaces that eval's loss before the
+    /// finiteness check, and an `Err` aborts the step (an injected crash).
+    /// On a non-finite loss the executor must leave the parameters exactly
+    /// where the sequential executor would (see `runtime/plan.rs` on
+    /// rollback-replay) and report `aborted`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_zo_plan(
+        &self,
+        plan: &crate::runtime::plan::StepPlan,
+        bufs: &mut [Self::Buffer],
+        peft: PeftMode,
+        base: Option<&[Self::Buffer]>,
+        batch: &Self::PreparedBatch,
+        inject: &mut dyn FnMut(usize) -> Result<Option<f32>>,
+        times: &mut crate::coordinator::metrics::StageTimes,
+    ) -> Result<crate::runtime::plan::PlanResult> {
+        let _ = (plan, bufs, peft, base, batch, inject, times);
+        anyhow::bail!(
+            "the {} backend has no plan fan-out executor (Backend::supports_plan_fanout \
+             is false); use the engine's sequential step path",
+            self.name()
+        )
+    }
 }
 
 /// Which backend a run asks for (config key `backend`, env `LEZO_BACKEND`).
@@ -219,6 +259,9 @@ pub enum BackendKind {
     #[default]
     Auto,
     Native,
+    /// N native worker replicas on scoped threads; a step's forward
+    /// evaluations fan out across them (`shards` key / `LEZO_SHARDS` env).
+    Sharded,
     Pjrt,
 }
 
@@ -228,8 +271,9 @@ impl FromStr for BackendKind {
         Ok(match s {
             "auto" => BackendKind::Auto,
             "native" => BackendKind::Native,
+            "sharded" => BackendKind::Sharded,
             "pjrt" | "xla" => BackendKind::Pjrt,
-            _ => anyhow::bail!("unknown backend '{s}' (auto|native|pjrt)"),
+            _ => anyhow::bail!("unknown backend '{s}' (auto|native|sharded|pjrt)"),
         })
     }
 }
@@ -239,6 +283,7 @@ impl std::fmt::Display for BackendKind {
         f.write_str(match self {
             BackendKind::Auto => "auto",
             BackendKind::Native => "native",
+            BackendKind::Sharded => "sharded",
             BackendKind::Pjrt => "pjrt",
         })
     }
@@ -337,12 +382,13 @@ mod tests {
 
     #[test]
     fn backend_kind_parse_display_round_trip() {
-        for s in ["auto", "native", "pjrt"] {
+        for s in ["auto", "native", "sharded", "pjrt"] {
             let k: BackendKind = s.parse().unwrap();
             assert_eq!(k.to_string(), s);
         }
         assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
-        assert!("gpu".parse::<BackendKind>().is_err());
+        let err = "gpu".parse::<BackendKind>().unwrap_err().to_string();
+        assert!(err.contains("auto|native|sharded|pjrt"), "{err}");
         assert_eq!(BackendKind::default(), BackendKind::Auto);
     }
 

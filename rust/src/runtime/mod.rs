@@ -20,12 +20,19 @@
 //!   Hot path: scoped worker threads with fixed deterministic chunking
 //!   (`native::parallel`), blocked kernels + fused streaming LM head
 //!   (`native::kernels`), dense reference (`native::forward`).
+//! - [`plan`] — the explicit `StepPlan`: one ZO step as ordered seeded-axpy
+//!   sweeps + forward evaluations, the unit of distribution.
+//! - [`sharded`] — `ShardedBackend`: N in-process native worker replicas on
+//!   scoped threads; a step's plan evaluations fan out across them and only
+//!   `(probe, loss)` scalars come back.
 //! - [`client`] / [`exes`] / [`pjrt`] (feature `pjrt`) — the PJRT client,
 //!   the lazily compiled executable registry, and the PJRT backend.
 
 pub mod backend;
 pub mod native;
 pub mod philox;
+pub mod plan;
+pub mod sharded;
 
 #[cfg(feature = "pjrt")]
 pub mod client;
@@ -38,5 +45,6 @@ pub mod pjrt;
 pub use client::{run, run1, Runtime};
 pub use backend::{Backend, BackendKind, Precision};
 pub use native::{NativeBackend, NativeBuf};
+pub use sharded::ShardedBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;

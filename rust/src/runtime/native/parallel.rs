@@ -281,4 +281,46 @@ mod tests {
         assert!(caught.is_err());
         assert_eq!(effective_threads(), outer, "restored even on panic");
     }
+
+    #[test]
+    fn concurrent_scoped_overrides_are_isolated_per_thread() {
+        // the sharded-backend contract: each worker thread sets its own
+        // budget via with_threads, and no worker's override may leak into a
+        // sibling's — the override is a thread-local, not process state
+        if std::env::var("LEZO_THREADS").map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED concurrent_scoped_overrides_are_isolated: LEZO_THREADS wins");
+            return;
+        }
+        use std::sync::Barrier;
+        let outer = effective_threads();
+        let barrier = Barrier::new(2);
+        let seen = std::thread::scope(|s| {
+            let spawn_worker = |budget: usize| {
+                let barrier = &barrier;
+                s.spawn(move || {
+                    // a fresh thread starts un-overridden (TL_THREADS does
+                    // not propagate to spawned threads)
+                    let before = effective_threads();
+                    let inside = with_threads(budget, || {
+                        // both workers hold their overrides at once; each
+                        // must read only its own
+                        barrier.wait();
+                        let mine = effective_threads();
+                        barrier.wait();
+                        mine
+                    });
+                    (before, inside, effective_threads())
+                })
+            };
+            let a = spawn_worker(2);
+            let b = spawn_worker(7);
+            (a.join().unwrap(), b.join().unwrap())
+        });
+        let ((a_before, a_in, a_after), (b_before, b_in, b_after)) = seen;
+        assert_eq!(a_in, 2, "worker A reads its own override");
+        assert_eq!(b_in, 7, "worker B reads its own override");
+        assert_eq!(a_after, a_before, "A restored on exit");
+        assert_eq!(b_after, b_before, "B restored on exit");
+        assert_eq!(effective_threads(), outer, "coordinator untouched");
+    }
 }

@@ -1,0 +1,104 @@
+//! The explicit **StepPlan**: a data-first description of one ZO step.
+//!
+//! The coordinator ([`crate::coordinator::spsa::SpsaEngine`]) emits a plan —
+//! the full ordered sequence of seeded axpy sweeps and forward evaluations a
+//! step performs — and an executor runs it. Because every perturbation is
+//! regenerated from its `(step, probe, unit)` seed inside the backend's
+//! zo_axpy kernel, the plan is a handful of scalars: nothing parameter-sized
+//! ever travels, which is what makes the step distributable.
+//!
+//! Two executors exist:
+//!
+//! - the **sequential** executor inside `SpsaEngine::zo_step_opt` — walks the
+//!   phases in order against one backend; this is the trivial case and is
+//!   *structurally* the pre-plan step (one code path, pinned bit-identical by
+//!   `plan_executor_is_bit_identical_to_zo_step`);
+//! - a backend-owned **fan-out** executor ([`super::backend::Backend::run_zo_plan`],
+//!   implemented by [`super::sharded::ShardedBackend`]) — every worker replica
+//!   applies the same sweeps locally and only `(probe, loss)` scalars are
+//!   gathered.
+//!
+//! ## Abort semantics (non-finite losses)
+//!
+//! The sequential executor checks each evaluation as it happens and stops at
+//! the first non-finite loss, applying that eval's `recovery` sweep so the
+//! parameters end exactly where the imperative step left them. A fan-out
+//! executor learns about the bad loss only after its workers ran the whole
+//! plan, so it must *roll back*: restore the pre-step snapshot, replay every
+//! sweep phase that precedes the failing eval in phase order, then apply the
+//! same `recovery` ops. Both roads issue the identical op sequence from the
+//! identical starting bits, so the post-abort parameters agree `to_bits`.
+
+use crate::coordinator::optim::ProbeSchedule;
+
+/// One seeded axpy: `unit += coeff * z(seed)`. The seed is precomputed at
+/// plan-build time (via [`crate::rng::zo_probe_seed`]), so executors never
+/// need the run seed or the probe index — the op is self-contained.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepOp {
+    pub unit: usize,
+    /// Element count of the unit (the axpy kernel's length argument).
+    pub len: usize,
+    pub seed: i32,
+    pub coeff: f32,
+}
+
+/// One phase of a step: a batch of sweeps applied in order, or a forward
+/// evaluation of the current parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanPhase {
+    Sweep(Vec<SweepOp>),
+    /// Evaluate the loss; `idx` indexes [`StepPlan::evals`] /
+    /// [`StepPlan::recovery`] and the gathered loss vector.
+    Eval { idx: usize },
+}
+
+/// Metadata of one forward evaluation (today just which probe it belongs
+/// to, for error messages and the `(probe, loss)` gather pairs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvalSpec {
+    pub probe: u64,
+}
+
+/// The full plan of one ZO step *up to* (not including) the optimizer
+/// update: which sweeps to apply and which forwards to run, in order.
+/// The update coefficients depend on the gathered losses, so the engine
+/// applies them after execution (broadcast through `zo_axpy_inplace`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepPlan {
+    pub step: u64,
+    pub schedule: ProbeSchedule,
+    pub phases: Vec<PlanPhase>,
+    /// One entry per `Eval` phase, indexed by its `idx`.
+    pub evals: Vec<EvalSpec>,
+    /// `recovery[e]`: sweeps to apply when aborting at eval `e`, after the
+    /// sweeps preceding that eval (see module docs on abort semantics).
+    pub recovery: Vec<Vec<SweepOp>>,
+}
+
+impl StepPlan {
+    /// Every unit any sweep (including recovery) touches — the set a
+    /// fan-out executor must snapshot for rollback.
+    pub fn touched_units(&self) -> Vec<usize> {
+        let mut seen = std::collections::BTreeSet::new();
+        for phase in &self.phases {
+            if let PlanPhase::Sweep(ops) = phase {
+                seen.extend(ops.iter().map(|op| op.unit));
+            }
+        }
+        for ops in &self.recovery {
+            seen.extend(ops.iter().map(|op| op.unit));
+        }
+        seen.into_iter().collect()
+    }
+}
+
+/// What executing a plan produced: one loss per completed evaluation, in
+/// eval order. `aborted = Some(e)` means eval `e` came back non-finite —
+/// `losses[e]` holds the offending value, later evals were discarded, and
+/// the executor has already restored the parameters to the abort state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanResult {
+    pub losses: Vec<f32>,
+    pub aborted: Option<usize>,
+}

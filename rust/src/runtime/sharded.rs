@@ -1,0 +1,727 @@
+//! ShardedBackend: N in-process native worker replicas executing one run in
+//! lockstep — the seed-parallel data path the LeZO/MeZO invariant makes
+//! possible.
+//!
+//! Because every perturbation is *regenerated* from its `(step, probe,
+//! unit)` seed inside the zo_axpy kernel, a ZO step is fully described by a
+//! [`StepPlan`]'s scalars. Each replica holds a full copy of the
+//! parameters and applies every seeded sweep of the plan locally; only the
+//! plan's forward *evaluations* are partitioned across replicas
+//! ([`shard_owner`]), and only `(eval index, loss)` f64 scalars are
+//! gathered back. Replicas never exchange parameters or gradients — they
+//! stay bit-identical by construction, which is what the differential
+//! harness (`rust/tests/backend_comparison.rs`) pins: `backend=sharded` at
+//! any shard count must agree `to_bits`-exactly with `backend=native`.
+//!
+//! ## Lockstep rules
+//!
+//! - Every parameter mutation outside a plan (`zo_axpy_inplace` from
+//!   `apply_coeffs`, the masked Sparse-MeZO sweeps, checkpoint re-uploads)
+//!   is **broadcast** to all replicas.
+//! - Inside [`Backend::run_zo_plan`] every worker applies **all** sweep
+//!   phases in plan order and evaluates only the evals it owns
+//!   (`idx % shards == worker`).
+//! - Reads (`download`, the eval/predict forwards) go to replica 0.
+//!
+//! ## Threads
+//!
+//! Workers run on scoped threads for the duration of one plan. The run's
+//! thread budget ([`crate::runtime::native::parallel::effective_threads`]
+//! on the coordinator thread) is split across workers
+//! ([`shard_thread_budget`]) via a per-worker scoped
+//! [`parallel::with_threads`] override — the per-*thread* override cannot
+//! leak between workers. A `LEZO_THREADS` env override still wins on every
+//! thread by design (it outranks scoped overrides), so setting it under
+//! `backend=sharded` oversubscribes rather than splits; results are
+//! bit-identical either way because the native kernels are thread-count
+//! invariant.
+//!
+//! ## Shard count (`shards` config key, `LEZO_SHARDS` env)
+//!
+//! The env override wins, mirroring `LEZO_THREADS`/`LEZO_PRECISION`:
+//! unset/empty means "no override", anything else must parse as a positive
+//! count — an unparseable value is a hard error naming the variable, never
+//! a silent fall-through ([`env_shards`]).
+
+use crate::coordinator::metrics::{StageTimer, StageTimes};
+use crate::data::batch::Batch;
+use crate::model::spec::ModelSpec;
+use crate::peft::PeftMode;
+use crate::runtime::backend::{Backend, Precision};
+use crate::runtime::native::{parallel, NativeBackend, NativeBuf};
+use crate::runtime::plan::{PlanPhase, PlanResult, StepPlan};
+use anyhow::{anyhow, ensure, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Which shard owns work item `item` out of `shards` total — the single
+/// partitioning rule (plan evals today; anything partitioned later must
+/// route through here so the disjoint-cover property test covers it).
+/// `shards = 0` is a hard error, not a modulo panic.
+pub fn shard_owner(item: usize, shards: usize) -> Result<usize> {
+    ensure!(shards >= 1, "shard partitioning needs >= 1 shard (got 0)");
+    Ok(item % shards)
+}
+
+/// Worker `w`'s slice of a `total` thread budget split across `shards`
+/// workers: near-equal shares, never below 1.
+pub fn shard_thread_budget(total: usize, shards: usize, w: usize) -> usize {
+    debug_assert!(shards >= 1 && w < shards);
+    (total / shards + usize::from(w < total % shards)).max(1)
+}
+
+/// Parse a `LEZO_SHARDS` value: empty/unset means "no override", anything
+/// else must be a positive integer — an unparseable or zero value is a
+/// hard error naming the variable (the `LEZO_THREADS` strictness rule).
+fn parse_shards(v: &str) -> Result<Option<usize>> {
+    if v.is_empty() {
+        return Ok(None);
+    }
+    match v.parse::<usize>() {
+        Ok(n) if n > 0 => Ok(Some(n)),
+        _ => Err(anyhow!(
+            "LEZO_SHARDS='{v}' is not a positive shard count (unset it to use the `shards` \
+             config key)"
+        )),
+    }
+}
+
+/// `LEZO_SHARDS`: the env override for the `shards` config key.
+pub fn env_shards() -> Result<Option<usize>> {
+    parse_shards(&std::env::var("LEZO_SHARDS").unwrap_or_default())
+}
+
+/// Resolve the shard count for a run: `LEZO_SHARDS` wins, else the config
+/// key's value; zero is rejected either way.
+pub fn resolve_shards(requested: usize) -> Result<usize> {
+    let n = env_shards()?.unwrap_or(requested);
+    ensure!(n >= 1, "shards must be a positive count (got {n})");
+    Ok(n)
+}
+
+/// One worker: a full native backend plus its private copies of every live
+/// buffer, keyed by the shared handle id.
+struct Replica {
+    backend: NativeBackend,
+    bufs: HashMap<u64, NativeBuf>,
+}
+
+/// The sharded buffer handle: an id naming one logical buffer whose N
+/// physical copies live inside the replicas. Dropping the handle queues
+/// the id for garbage collection on the next backend entry.
+pub struct ShardBuf {
+    id: u64,
+    len: usize,
+    freed: Arc<Mutex<Vec<u64>>>,
+}
+
+impl Drop for ShardBuf {
+    fn drop(&mut self) {
+        if let Ok(mut freed) = self.freed.lock() {
+            freed.push(self.id);
+        }
+    }
+}
+
+impl std::fmt::Debug for ShardBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ShardBuf(id {}, len {})", self.id, self.len)
+    }
+}
+
+pub struct ShardedBackend {
+    spec: ModelSpec,
+    precision: Precision,
+    replicas: RefCell<Vec<Replica>>,
+    next_id: Cell<u64>,
+    /// Ids of dropped [`ShardBuf`]s, reclaimed from every replica on the
+    /// next backend entry (handles drop on the coordinator thread while no
+    /// plan is in flight, so a lazy sweep is enough).
+    freed: Arc<Mutex<Vec<u64>>>,
+}
+
+impl ShardedBackend {
+    /// Build from pre-configured replicas (this is how the trainer applies
+    /// precision/artifact adoption uniformly: configure one native backend
+    /// per shard, hand them over). All replicas must agree on architecture
+    /// and precision — a mismatch would silently break lockstep.
+    pub fn from_replicas(replicas: Vec<NativeBackend>) -> Result<ShardedBackend> {
+        ensure!(!replicas.is_empty(), "sharded backend needs >= 1 replica");
+        let spec = replicas[0].spec().clone();
+        let precision = replicas[0].precision();
+        for r in &replicas[1..] {
+            ensure!(
+                r.spec().name == spec.name && r.precision() == precision,
+                "sharded replicas must agree on model and precision \
+                 ({}/{} vs {}/{})",
+                spec.name,
+                precision,
+                r.spec().name,
+                r.precision(),
+            );
+        }
+        Ok(ShardedBackend {
+            spec,
+            precision,
+            replicas: RefCell::new(
+                replicas
+                    .into_iter()
+                    .map(|backend| Replica { backend, bufs: HashMap::new() })
+                    .collect(),
+            ),
+            next_id: Cell::new(0),
+            freed: Arc::new(Mutex::new(Vec::new())),
+        })
+    }
+
+    /// `shards` plain replicas of an in-crate preset (tests, bench).
+    pub fn preset(name: &str, shards: usize) -> Result<ShardedBackend> {
+        ensure!(shards >= 1, "shards must be a positive count (got {shards})");
+        let replicas = (0..shards)
+            .map(|_| NativeBackend::preset(name))
+            .collect::<Result<Vec<_>>>()?;
+        ShardedBackend::from_replicas(replicas)
+    }
+
+    /// Preset replicas at a forward precision (bench's bf16 rows).
+    pub fn preset_with_precision(
+        name: &str,
+        shards: usize,
+        precision: Precision,
+    ) -> Result<ShardedBackend> {
+        ensure!(shards >= 1, "shards must be a positive count (got {shards})");
+        let replicas = (0..shards)
+            .map(|_| NativeBackend::preset(name).map(|b| b.with_precision(precision)))
+            .collect::<Result<Vec<_>>>()?;
+        ShardedBackend::from_replicas(replicas)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.replicas.borrow().len()
+    }
+
+    /// Drain the freed-id queue and drop those buffers from every replica.
+    fn gc(&self) {
+        let ids: Vec<u64> = match self.freed.lock() {
+            Ok(mut freed) => freed.drain(..).collect(),
+            Err(_) => return,
+        };
+        if ids.is_empty() {
+            return;
+        }
+        let mut replicas = self.replicas.borrow_mut();
+        for rep in replicas.iter_mut() {
+            for id in &ids {
+                rep.bufs.remove(id);
+            }
+        }
+    }
+
+    fn fresh_id(&self) -> u64 {
+        let id = self.next_id.get();
+        self.next_id.set(id + 1);
+        id
+    }
+
+    fn handle(&self, id: u64, len: usize) -> ShardBuf {
+        ShardBuf { id, len, freed: Arc::clone(&self.freed) }
+    }
+
+    /// Run `f` once per replica (broadcast mutation — the lockstep rule).
+    fn each_replica(
+        &self,
+        mut f: impl FnMut(&NativeBackend, &mut HashMap<u64, NativeBuf>) -> Result<()>,
+    ) -> Result<()> {
+        let mut replicas = self.replicas.borrow_mut();
+        for rep in replicas.iter_mut() {
+            f(&rep.backend, &mut rep.bufs)?;
+        }
+        Ok(())
+    }
+}
+
+fn resolve<'m>(bufs: &'m HashMap<u64, NativeBuf>, id: u64) -> Result<&'m NativeBuf> {
+    bufs.get(&id).ok_or_else(|| anyhow!("sharded: unknown buffer id {id} (already dropped?)"))
+}
+
+fn resolve_mut(bufs: &mut HashMap<u64, NativeBuf>, id: u64) -> Result<&mut NativeBuf> {
+    bufs.get_mut(&id).ok_or_else(|| anyhow!("sharded: unknown buffer id {id} (already dropped?)"))
+}
+
+/// Resolve the forward-argument prefix (frozen base units, then tunable
+/// units) inside one replica's buffer map.
+fn resolve_args<'m>(
+    bufs: &'m HashMap<u64, NativeBuf>,
+    base_ids: &[u64],
+    unit_ids: &[u64],
+) -> Result<Vec<&'m NativeBuf>> {
+    base_ids.iter().chain(unit_ids).map(|&id| resolve(bufs, id)).collect()
+}
+
+/// One worker's walk of the plan: apply **every** sweep phase in order
+/// (lockstep), evaluate only the owned evals, return `(eval idx, loss)`
+/// scalars — the only data that crosses the worker boundary.
+#[allow(clippy::too_many_arguments)]
+fn worker_run(
+    backend: &NativeBackend,
+    bufs: &mut HashMap<u64, NativeBuf>,
+    plan: &StepPlan,
+    unit_ids: &[u64],
+    base_ids: &[u64],
+    peft: PeftMode,
+    batch: &Batch,
+    w: usize,
+    shards: usize,
+) -> Result<Vec<(usize, f64)>> {
+    let mut gathered = Vec::new();
+    for phase in &plan.phases {
+        match phase {
+            PlanPhase::Sweep(ops) => {
+                for op in ops {
+                    let buf = resolve_mut(bufs, unit_ids[op.unit])?;
+                    backend.zo_axpy_inplace(buf, op.len, op.seed, op.coeff)?;
+                }
+            }
+            PlanPhase::Eval { idx } => {
+                if shard_owner(*idx, shards)? == w {
+                    let args = resolve_args(bufs, base_ids, unit_ids)?;
+                    let l = backend.forward_loss(peft, &args, batch)?;
+                    gathered.push((*idx, l as f64));
+                }
+            }
+        }
+    }
+    Ok(gathered)
+}
+
+impl Backend for ShardedBackend {
+    type Buffer = ShardBuf;
+    type PreparedBatch = Batch;
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn upload(&self, data: &[f32]) -> Result<ShardBuf> {
+        self.gc();
+        let id = self.fresh_id();
+        self.each_replica(|backend, bufs| {
+            bufs.insert(id, backend.upload(data)?);
+            Ok(())
+        })?;
+        Ok(self.handle(id, data.len()))
+    }
+
+    fn download(&self, buf: &ShardBuf) -> Result<Vec<f32>> {
+        let replicas = self.replicas.borrow();
+        let rep = &replicas[0];
+        rep.backend.download(resolve(&rep.bufs, buf.id)?)
+    }
+
+    fn zo_axpy(&self, unit: &ShardBuf, len: usize, seed: i32, coeff: f32) -> Result<ShardBuf> {
+        self.gc();
+        let id = self.fresh_id();
+        self.each_replica(|backend, bufs| {
+            let out = backend.zo_axpy(resolve(bufs, unit.id)?, len, seed, coeff)?;
+            bufs.insert(id, out);
+            Ok(())
+        })?;
+        Ok(self.handle(id, len))
+    }
+
+    fn zo_axpy_masked(
+        &self,
+        unit: &ShardBuf,
+        pref: &ShardBuf,
+        tau: f32,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<ShardBuf> {
+        self.gc();
+        let id = self.fresh_id();
+        self.each_replica(|backend, bufs| {
+            let (u, p) = (resolve(bufs, unit.id)?, resolve(bufs, pref.id)?);
+            let out = backend.zo_axpy_masked(u, p, tau, len, seed, coeff)?;
+            bufs.insert(id, out);
+            Ok(())
+        })?;
+        Ok(self.handle(id, len))
+    }
+
+    fn zo_axpy_inplace(
+        &self,
+        unit: &mut ShardBuf,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<()> {
+        // broadcast: every replica applies the identical seeded sweep
+        let id = unit.id;
+        self.each_replica(|backend, bufs| {
+            backend.zo_axpy_inplace(resolve_mut(bufs, id)?, len, seed, coeff)
+        })
+    }
+
+    fn zo_axpy_masked_inplace(
+        &self,
+        unit: &mut ShardBuf,
+        pref: &ShardBuf,
+        tau: f32,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<()> {
+        let (id, pid) = (unit.id, pref.id);
+        self.each_replica(|backend, bufs| {
+            // two ids into one map: pull the snapshot ref around the &mut
+            let pref_copy = resolve(bufs, pid)?.data().to_vec();
+            let pref_buf = NativeBuf::from(pref_copy);
+            backend.zo_axpy_masked_inplace(resolve_mut(bufs, id)?, &pref_buf, tau, len, seed, coeff)
+        })
+    }
+
+    fn prepare_batch(&self, batch: &Batch) -> Result<Batch> {
+        Ok(batch.clone())
+    }
+
+    fn forward_loss(&self, peft: PeftMode, units: &[&ShardBuf], batch: &Batch) -> Result<f32> {
+        let replicas = self.replicas.borrow();
+        let rep = &replicas[0];
+        let args = units.iter().map(|u| resolve(&rep.bufs, u.id)).collect::<Result<Vec<_>>>()?;
+        rep.backend.forward_loss(peft, &args, batch)
+    }
+
+    fn example_losses(
+        &self,
+        peft: PeftMode,
+        units: &[&ShardBuf],
+        batch: &Batch,
+    ) -> Result<Vec<f32>> {
+        let replicas = self.replicas.borrow();
+        let rep = &replicas[0];
+        let args = units.iter().map(|u| resolve(&rep.bufs, u.id)).collect::<Result<Vec<_>>>()?;
+        rep.backend.example_losses(peft, &args, batch)
+    }
+
+    fn predict(&self, peft: PeftMode, units: &[&ShardBuf], batch: &Batch) -> Result<Vec<i32>> {
+        let replicas = self.replicas.borrow();
+        let rep = &replicas[0];
+        let args = units.iter().map(|u| resolve(&rep.bufs, u.id)).collect::<Result<Vec<_>>>()?;
+        rep.backend.predict(peft, &args, batch)
+    }
+
+    fn initial_params(&self, explicit_checkpoint: &str) -> Result<(Vec<Vec<f32>>, String)> {
+        self.replicas.borrow()[0].backend.initial_params(explicit_checkpoint)
+    }
+
+    /// First-order training works on host vectors (no replica state), so
+    /// delegating to one replica is exact.
+    fn forward_backward(
+        &self,
+        host_units: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        self.replicas.borrow()[0].backend.forward_backward(host_units, batch)
+    }
+
+    fn supports_peft(&self, mode: PeftMode) -> bool {
+        self.replicas.borrow()[0].backend.supports_peft(mode)
+    }
+
+    fn supports_fo(&self) -> bool {
+        self.replicas.borrow()[0].backend.supports_fo()
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn supports_precision(&self, precision: Precision) -> bool {
+        self.replicas.borrow()[0].backend.supports_precision(precision)
+    }
+
+    fn supports_plan_fanout(&self) -> bool {
+        true
+    }
+
+    fn run_zo_plan(
+        &self,
+        plan: &StepPlan,
+        bufs: &mut [ShardBuf],
+        peft: PeftMode,
+        base: Option<&[ShardBuf]>,
+        batch: &Batch,
+        inject: &mut dyn FnMut(usize) -> Result<Option<f32>>,
+        times: &mut StageTimes,
+    ) -> Result<PlanResult> {
+        self.gc();
+        let unit_ids: Vec<u64> = bufs.iter().map(|b| b.id).collect();
+        let base_ids: Vec<u64> =
+            base.map(|bs| bs.iter().map(|b| b.id).collect()).unwrap_or_default();
+        let mut replicas = self.replicas.borrow_mut();
+        let shards = replicas.len();
+        let mut t = StageTimer::start();
+
+        // pre-step snapshot of every unit the plan touches (replica 0 —
+        // all replicas hold the same bits), for abort rollback
+        let touched = plan.touched_units();
+        let snapshot: Vec<(u64, Vec<f32>)> = touched
+            .iter()
+            .map(|&k| {
+                let id = unit_ids[k];
+                Ok((id, resolve(&replicas[0].bufs, id)?.data().to_vec()))
+            })
+            .collect::<Result<_>>()?;
+        times.perturb_secs += t.lap();
+
+        // fan out: one scoped thread per replica, each with its slice of
+        // the coordinator's thread budget (see module docs on LEZO_THREADS)
+        let total_threads = parallel::effective_threads();
+        let gathered: Vec<Result<Vec<(usize, f64)>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = replicas
+                .iter_mut()
+                .enumerate()
+                .map(|(w, rep)| {
+                    let budget = shard_thread_budget(total_threads, shards, w);
+                    let (unit_ids, base_ids) = (&unit_ids, &base_ids);
+                    s.spawn(move || {
+                        parallel::with_threads(budget, || {
+                            let Replica { backend, bufs } = rep;
+                            worker_run(
+                                backend, bufs, plan, unit_ids, base_ids, peft, batch, w, shards,
+                            )
+                        })
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("sharded worker panicked"))))
+                .collect()
+        });
+
+        // gather (eval idx, loss) scalars — the only cross-worker data
+        let mut losses = vec![f32::NAN; plan.evals.len()];
+        let mut filled = vec![false; plan.evals.len()];
+        for worker in gathered {
+            for (idx, l) in worker? {
+                losses[idx] = l as f32;
+                filled[idx] = true;
+            }
+        }
+        ensure!(filled.iter().all(|&f| f), "sharded gather is missing an eval result");
+        times.forward_secs += t.lap();
+
+        // fault hook + finiteness, in eval order — identical semantics to
+        // the sequential executor checking each loss as it lands
+        for e in 0..plan.evals.len() {
+            if let Some(l) = inject(e)? {
+                losses[e] = l;
+            }
+            if losses[e].is_finite() {
+                continue;
+            }
+            // rollback-replay on every replica: restore the pre-step bits,
+            // replay the sweeps preceding eval `e` in phase order, then the
+            // eval's recovery ops — the exact op sequence the sequential
+            // executor issued, from the exact same starting bits
+            for rep in replicas.iter_mut() {
+                for (id, data) in &snapshot {
+                    resolve_mut(&mut rep.bufs, *id)?.make_mut().copy_from_slice(data);
+                }
+                let Replica { backend, bufs } = rep;
+                'replay: for phase in &plan.phases {
+                    match phase {
+                        PlanPhase::Sweep(ops) => {
+                            for op in ops {
+                                let buf = resolve_mut(bufs, unit_ids[op.unit])?;
+                                backend.zo_axpy_inplace(buf, op.len, op.seed, op.coeff)?;
+                            }
+                        }
+                        PlanPhase::Eval { idx } if *idx == e => break 'replay,
+                        PlanPhase::Eval { .. } => {}
+                    }
+                }
+                for op in &plan.recovery[e] {
+                    let buf = resolve_mut(bufs, unit_ids[op.unit])?;
+                    backend.zo_axpy_inplace(buf, op.len, op.seed, op.coeff)?;
+                }
+            }
+            times.perturb_secs += t.lap();
+            losses.truncate(e + 1);
+            return Ok(PlanResult { losses, aborted: Some(e) });
+        }
+        Ok(PlanResult { losses, aborted: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::spsa::{SpsaEngine, TunableUnits};
+
+    #[test]
+    fn shard_owner_is_an_exact_disjoint_cover() {
+        // every (n, shards) — including shards > n — assigns each item to
+        // exactly one in-range shard, and the assignment is deterministic
+        for n in [0usize, 1, 2, 5, 16, 64] {
+            for shards in 1usize..=8 {
+                let mut per_shard = vec![0usize; shards];
+                for item in 0..n {
+                    let w = shard_owner(item, shards).unwrap();
+                    assert!(w < shards, "n={n} shards={shards} item={item} -> {w}");
+                    assert_eq!(w, shard_owner(item, shards).unwrap());
+                    per_shard[w] += 1;
+                }
+                assert_eq!(per_shard.iter().sum::<usize>(), n, "cover must be exact");
+                // near-even: no shard holds more than ceil(n/shards)
+                assert!(per_shard.iter().all(|&c| c <= n.div_ceil(shards)));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_shards_is_a_hard_error() {
+        let err = shard_owner(3, 0).unwrap_err().to_string();
+        assert!(err.contains(">= 1 shard"), "{err}");
+        assert!(ShardedBackend::preset("opt-nano", 0).is_err());
+        assert!(resolve_shards(0).is_err() || env_shards().unwrap().is_some());
+    }
+
+    #[test]
+    fn shards_env_parse_is_strict() {
+        assert!(parse_shards("").unwrap().is_none());
+        assert_eq!(parse_shards("1").unwrap(), Some(1));
+        assert_eq!(parse_shards("4").unwrap(), Some(4));
+        for bad in ["bogus", "0", "-2", "1.5", " 3"] {
+            let err = parse_shards(bad).unwrap_err().to_string();
+            assert!(err.contains("LEZO_SHARDS"), "'{bad}': {err}");
+            assert!(err.contains(bad), "'{bad}': {err}");
+        }
+    }
+
+    #[test]
+    fn thread_budget_splits_without_starving() {
+        for total in [1usize, 2, 3, 7, 16] {
+            for shards in 1usize..=5 {
+                let budgets: Vec<usize> =
+                    (0..shards).map(|w| shard_thread_budget(total, shards, w)).collect();
+                assert!(budgets.iter().all(|&b| b >= 1), "{total}/{shards}: {budgets:?}");
+                if total >= shards {
+                    assert_eq!(budgets.iter().sum::<usize>(), total, "{total}/{shards}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_sweeps_keep_replicas_in_lockstep() {
+        let b = ShardedBackend::preset("opt-nano", 3).unwrap();
+        let host: Vec<f32> = (0..512).map(|i| (i as f32 * 0.01).sin()).collect();
+        let mut buf = b.upload(&host).unwrap();
+        b.zo_axpy_inplace(&mut buf, 512, 17, 1e-2).unwrap();
+        let replicas = b.replicas.borrow();
+        let first = replicas[0].bufs.get(&buf.id).unwrap().data().to_vec();
+        assert_ne!(first, host, "sweep must move the params");
+        for (w, rep) in replicas.iter().enumerate() {
+            assert_eq!(rep.bufs.get(&buf.id).unwrap().data(), &first[..], "replica {w}");
+        }
+        drop(replicas);
+        assert_eq!(b.download(&buf).unwrap(), first);
+    }
+
+    #[test]
+    fn dropped_handles_are_garbage_collected_from_every_replica() {
+        let b = ShardedBackend::preset("opt-nano", 2).unwrap();
+        let id = {
+            let buf = b.upload(&[1.0, 2.0, 3.0]).unwrap();
+            buf.id
+        };
+        // drop queued; the next backend entry sweeps it
+        let _other = b.upload(&[4.0]).unwrap();
+        let replicas = b.replicas.borrow();
+        for (w, rep) in replicas.iter().enumerate() {
+            assert!(!rep.bufs.contains_key(&id), "replica {w} leaked buffer {id}");
+        }
+    }
+
+    #[test]
+    fn fanout_step_matches_sequential_bitwise_on_a_real_forward() {
+        // the in-module smoke of the tentpole invariant (the full matrix
+        // lives in rust/tests/backend_comparison.rs): one engine stepping a
+        // native backend sequentially vs one stepping a 2-shard backend
+        // through run_zo_plan must agree to_bits on losses and params
+        use crate::coordinator::metrics::StageTimes;
+        use crate::coordinator::optim::ZoSgd;
+
+        let native = NativeBackend::preset("opt-nano").unwrap();
+        let sharded = ShardedBackend::preset("opt-nano", 2).unwrap();
+        let host = native.initial_params("").unwrap().0;
+        let mut nat_units = TunableUnits::from_host(&native, &host).unwrap();
+        let mut sh_units = TunableUnits::from_host(&sharded, &host).unwrap();
+        let seqs: Vec<Vec<u32>> = (0..native.spec().train_batch)
+            .map(|r| (0..12u32).map(|i| 20 + ((r as u32 + i) % 50)).collect())
+            .collect();
+        let batch = Batch::lm_batch(&seqs, native.spec().train_batch, 16).unwrap();
+        let nat_prepared = native.prepare_batch(&batch).unwrap();
+        let sh_prepared = sharded.prepare_batch(&batch).unwrap();
+
+        let nat_eng = SpsaEngine::new(&native, 1e-3, 11).unwrap();
+        let sh_eng = SpsaEngine::new(&sharded, 1e-3, 11).unwrap();
+        let active: Vec<usize> = (0..nat_units.n_units()).filter(|&k| k != 1).collect();
+        let mut times = StageTimes::default();
+        for step in 0..2 {
+            let mut nat_loss = |u: &TunableUnits<NativeBackend>| {
+                native.forward_loss(PeftMode::Full, &u.unit_refs(), &nat_prepared)
+            };
+            let a = nat_eng
+                .zo_step_opt(
+                    step,
+                    &mut nat_units,
+                    &active,
+                    1e-3,
+                    &mut ZoSgd,
+                    &mut nat_loss,
+                    &mut times,
+                )
+                .unwrap();
+            let c = sh_eng
+                .zo_step_fanout(
+                    step,
+                    &mut sh_units,
+                    &active,
+                    1e-3,
+                    &mut ZoSgd,
+                    PeftMode::Full,
+                    None,
+                    &sh_prepared,
+                    &mut |_| Ok(None),
+                    &mut times,
+                )
+                .unwrap();
+            assert_eq!(a.loss_plus.to_bits(), c.loss_plus.to_bits(), "step {step}");
+            assert_eq!(a.loss_minus.to_bits(), c.loss_minus.to_bits(), "step {step}");
+            assert_eq!(a.projected_grad.to_bits(), c.projected_grad.to_bits(), "step {step}");
+        }
+        assert_eq!(
+            nat_units.to_host(&native).unwrap(),
+            sh_units.to_host(&sharded).unwrap(),
+            "sharded fan-out must be bit-identical to the sequential executor"
+        );
+    }
+
+    #[test]
+    fn fanout_without_executor_is_a_clear_error() {
+        // a backend that never implemented run_zo_plan reports, not panics
+        let native = NativeBackend::preset("opt-nano").unwrap();
+        assert!(!native.supports_plan_fanout());
+        let sharded = ShardedBackend::preset("opt-nano", 1).unwrap();
+        assert!(sharded.supports_plan_fanout());
+    }
+}

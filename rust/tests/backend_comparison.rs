@@ -1,0 +1,307 @@
+//! The differential harness pinning the tentpole invariant: `backend=sharded`
+//! at any shard count is `to_bits`-identical to `backend=native` — per-step
+//! losses, the eval history, and the final parameters — because replicas
+//! apply the same seeded op sequence in the same order and exchange only
+//! `(probe, loss)` scalars.
+//!
+//! Two levels:
+//! - engine-level: one `SpsaEngine` stepping a `NativeBackend` sequentially
+//!   vs one stepping a `ShardedBackend` through the plan fan-out executor,
+//!   across the optimizer zoo, both precisions, and LeZO active subsets;
+//! - trainer-level: whole `Trainer::run` reports, including a crash@K inside
+//!   a sharded run resumed under a *different* shard count (the fingerprint
+//!   deliberately excludes `shards`) against an uninterrupted native twin.
+
+use lezo::config::{Method, RunConfig};
+use lezo::coordinator::metrics::StageTimes;
+use lezo::coordinator::optim::make_optimizer;
+use lezo::coordinator::spsa::{SpsaEngine, TunableUnits, ZoStep};
+use lezo::coordinator::trainer::TrainReport;
+use lezo::coordinator::{Trainer, ZoOptKind};
+use lezo::data::batch::Batch;
+use lezo::peft::PeftMode;
+use lezo::runtime::backend::{Backend, BackendKind, Precision};
+use lezo::runtime::{NativeBackend, ShardedBackend};
+use std::path::PathBuf;
+
+const CRASH: &str = "injected crash";
+
+/// Trainer-level runs resolve env overrides; any LEZO_* override would
+/// change (or re-route) the trajectory under comparison.
+fn env_overridden() -> bool {
+    for var in ["LEZO_FAULTS", "LEZO_ZO_OPT", "LEZO_PRECISION", "LEZO_BACKEND", "LEZO_SHARDS"] {
+        if std::env::var(var).map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED: {var} is set and would override the run under test");
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// engine level
+// ---------------------------------------------------------------------------
+
+fn nano_batch(spec: &lezo::model::spec::ModelSpec) -> Batch {
+    let seqs: Vec<Vec<u32>> = (0..spec.train_batch)
+        .map(|r| (0..12u32).map(|i| 20 + ((r as u32 + i) % 50)).collect())
+        .collect();
+    Batch::lm_batch(&seqs, spec.train_batch, 16).unwrap()
+}
+
+/// Drive `steps` ZO steps of `kind` on one backend; `fanout` selects the
+/// plan fan-out executor (sharded) vs the sequential path (native).
+fn drive<B: Backend>(
+    backend: &B,
+    kind: ZoOptKind,
+    steps: u64,
+    fanout: bool,
+) -> (Vec<ZoStep>, Vec<Vec<f32>>) {
+    let host = backend.initial_params("").unwrap().0;
+    let mut units = TunableUnits::from_host(backend, &host).unwrap();
+    // a LeZO-style sparse active set: everything but unit 1
+    let active: Vec<usize> = (0..units.n_units()).filter(|&k| k != 1).collect();
+    let batch = nano_batch(backend.spec());
+    let prepared = backend.prepare_batch(&batch).unwrap();
+    let eng = SpsaEngine::new(backend, 1e-3, 11).unwrap();
+    let mut opt = make_optimizer(kind);
+    let mut times = StageTimes::default();
+    let mut zs = Vec::new();
+    for step in 0..steps {
+        let s = if fanout {
+            eng.zo_step_fanout(
+                step,
+                &mut units,
+                &active,
+                1e-3,
+                opt.as_mut(),
+                PeftMode::Full,
+                None,
+                &prepared,
+                &mut |_| Ok(None),
+                &mut times,
+            )
+            .unwrap()
+        } else {
+            let mut loss = |u: &TunableUnits<B>| {
+                backend.forward_loss(PeftMode::Full, &u.unit_refs(), &prepared)
+            };
+            eng.zo_step_opt(step, &mut units, &active, 1e-3, opt.as_mut(), &mut loss, &mut times)
+                .unwrap()
+        };
+        zs.push(s);
+    }
+    (zs, units.to_host(backend).unwrap())
+}
+
+fn assert_trajectories_bit_identical(
+    (nat_zs, nat_params): &(Vec<ZoStep>, Vec<Vec<f32>>),
+    (sh_zs, sh_params): &(Vec<ZoStep>, Vec<Vec<f32>>),
+    what: &str,
+) {
+    for (step, (a, b)) in nat_zs.iter().zip(sh_zs).enumerate() {
+        assert_eq!(a.loss_plus.to_bits(), b.loss_plus.to_bits(), "{what}: step {step} l+");
+        assert_eq!(a.loss_minus.to_bits(), b.loss_minus.to_bits(), "{what}: step {step} l-");
+        assert_eq!(
+            a.projected_grad.to_bits(),
+            b.projected_grad.to_bits(),
+            "{what}: step {step} grad"
+        );
+        assert_eq!(a.active_params, b.active_params, "{what}: step {step}");
+        assert_eq!(a.skipped, b.skipped, "{what}: step {step}");
+    }
+    assert_eq!(nat_params.len(), sh_params.len(), "{what}: unit count");
+    for (k, (ua, ub)) in nat_params.iter().zip(sh_params).enumerate() {
+        assert_eq!(ua.len(), ub.len(), "{what}: unit {k} len");
+        for (i, (x, y)) in ua.iter().zip(ub).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: unit {k} param {i}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn fanout_matches_sequential_across_zoo_shards_and_precisions() {
+    // the full engine-level matrix: every (shards, rule, precision) cell
+    // must reproduce the native sequential trajectory bit-for-bit — the
+    // zoo covers both probe schedules (fzoo is one-sided batched)
+    for &shards in &[1usize, 2, 4] {
+        for kind in [ZoOptKind::Sgd, ZoOptKind::Adam, ZoOptKind::Fzoo] {
+            for precision in [Precision::F32, Precision::Bf16] {
+                let native =
+                    NativeBackend::preset("opt-nano").unwrap().with_precision(precision);
+                let sharded =
+                    ShardedBackend::preset_with_precision("opt-nano", shards, precision).unwrap();
+                let nat = drive(&native, kind, 3, false);
+                let sh = drive(&sharded, kind, 3, true);
+                let what = format!("{shards} shards / {kind} / {precision}");
+                assert_trajectories_bit_identical(&nat, &sh, &what);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trainer level
+// ---------------------------------------------------------------------------
+
+fn fresh_root(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("lezo_cmp_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d.to_str().unwrap().to_string()
+}
+
+fn nano_cfg(tag: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "opt-nano".into();
+    cfg.backend = BackendKind::Native;
+    cfg.method = Method::Lezo;
+    cfg.drop_layers = 1;
+    cfg.steps = 4;
+    cfg.eval_every = 2;
+    cfg.eval_examples = 4;
+    cfg.train_examples = 8;
+    cfg.mean_len = 8;
+    cfg.lr = 1e-4;
+    cfg.artifacts_root = fresh_root(tag);
+    cfg
+}
+
+fn run(cfg: &RunConfig) -> anyhow::Result<TrainReport> {
+    Trainer::new(cfg.clone()).run()
+}
+
+/// Everything a sharded run must reproduce from its native twin, bitwise
+/// (wall-clock fields excluded — time is the one thing that may differ).
+fn assert_reports_bit_identical(sharded: &TrainReport, native: &TrainReport, what: &str) {
+    assert_eq!(sharded.losses.len(), native.losses.len(), "{what}: loss count");
+    for (i, (a, b)) in sharded.losses.iter().zip(&native.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: loss[{i}] {a} vs {b}");
+    }
+    assert_eq!(sharded.history.len(), native.history.len(), "{what}: history length");
+    for (a, b) in sharded.history.iter().zip(&native.history) {
+        assert_eq!(a.step, b.step, "{what}: eval step");
+        assert_eq!(a.metric.to_bits(), b.metric.to_bits(), "{what}: metric at step {}", a.step);
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "{what}: train_loss at step {}",
+            a.step
+        );
+    }
+    assert_eq!(sharded.final_metric.to_bits(), native.final_metric.to_bits(), "{what}: final");
+    assert_eq!(sharded.best_metric.to_bits(), native.best_metric.to_bits(), "{what}: best");
+    assert_eq!(sharded.stage_times.steps, native.stage_times.steps, "{what}: stage steps");
+    assert_eq!(sharded.zo_state_bytes, native.zo_state_bytes, "{what}: zo state bytes");
+}
+
+#[test]
+fn trainer_runs_match_native_at_every_shard_count() {
+    if env_overridden() {
+        return;
+    }
+    let native = run(&nano_cfg("tr_native")).unwrap();
+    assert_eq!(native.backend, "native");
+    for shards in [1usize, 2, 4] {
+        let mut cfg = nano_cfg(&format!("tr_sh{shards}"));
+        cfg.backend = BackendKind::Sharded;
+        cfg.shards = shards;
+        let sharded = run(&cfg).unwrap();
+        assert_eq!(sharded.backend, "sharded");
+        assert_reports_bit_identical(&sharded, &native, &format!("{shards} shards"));
+    }
+}
+
+#[test]
+fn sparse_mezo_runs_match_on_the_broadcast_path() {
+    // Sparse-MeZO never fans out (element-wise masked sweeps), but under
+    // backend=sharded its mutations broadcast — lockstep must still hold
+    if env_overridden() {
+        return;
+    }
+    let mut cfg = nano_cfg("smezo_native");
+    cfg.method = Method::Smezo;
+    cfg.drop_layers = 0;
+    let native = run(&cfg).unwrap();
+    let mut cfg = nano_cfg("smezo_sharded");
+    cfg.method = Method::Smezo;
+    cfg.drop_layers = 0;
+    cfg.backend = BackendKind::Sharded;
+    cfg.shards = 2;
+    let sharded = run(&cfg).unwrap();
+    assert_reports_bit_identical(&sharded, &native, "smezo");
+}
+
+#[test]
+fn bf16_trainer_runs_match_bitwise() {
+    if env_overridden() {
+        return;
+    }
+    let mut cfg = nano_cfg("bf16_native");
+    cfg.precision = Precision::Bf16;
+    let native = run(&cfg).unwrap();
+    assert_eq!(native.precision, Precision::Bf16);
+    let mut cfg = nano_cfg("bf16_sharded");
+    cfg.precision = Precision::Bf16;
+    cfg.backend = BackendKind::Sharded;
+    cfg.shards = 2;
+    let sharded = run(&cfg).unwrap();
+    assert_eq!(sharded.precision, Precision::Bf16);
+    assert_reports_bit_identical(&sharded, &native, "bf16");
+}
+
+#[test]
+fn sharded_crash_resume_reshards_and_matches_the_clean_native_run() {
+    // crash@2 inside a 2-shard run, then resume with 4 shards: the config
+    // fingerprint deliberately excludes the worker geometry, so an elastic
+    // re-shard resumes onto the exact trajectory of the uninterrupted
+    // native twin
+    if env_overridden() {
+        return;
+    }
+    let mut clean_cfg = nano_cfg("crash_clean");
+    clean_cfg.save_every = 1;
+    let clean = run(&clean_cfg).unwrap();
+
+    let mut cfg = nano_cfg("crash_sharded");
+    cfg.backend = BackendKind::Sharded;
+    cfg.shards = 2;
+    cfg.save_every = 1;
+    cfg.faults = "crash@2".into();
+    let err = run(&cfg).unwrap_err().to_string();
+    assert!(err.contains(CRASH), "{err}");
+    let state = PathBuf::from(cfg.artifact_dir()).join("train_state.ckpt");
+    assert!(state.exists(), "a resumable state must exist after the crash");
+
+    cfg.faults.clear();
+    cfg.shards = 4;
+    let resumed = run(&cfg).unwrap();
+    assert_eq!(resumed.resumed_from, Some(2));
+    assert_eq!(resumed.backend, "sharded");
+    assert_reports_bit_identical(&resumed, &clean, "crash@2 + re-shard 2->4");
+    assert!(!state.exists(), "a completed run must delete its resume state");
+}
+
+#[test]
+fn nan_loss_fault_fires_identically_under_fanout() {
+    // the injected-NaN boundary (first forward of the step) maps to eval 0
+    // of the plan; both executors must skip the same step and record the
+    // same NaN placeholder
+    if env_overridden() {
+        return;
+    }
+    let mut a = nano_cfg("nan_native");
+    a.faults = "nan-loss@2".into();
+    a.set("on_nonfinite", "skip-step").unwrap();
+    let native = run(&a).unwrap();
+    assert!(native.losses[1].is_nan(), "step 2's loss is the NaN placeholder");
+
+    let mut b = nano_cfg("nan_sharded");
+    b.backend = BackendKind::Sharded;
+    b.shards = 2;
+    b.faults = "nan-loss@2".into();
+    b.set("on_nonfinite", "skip-step").unwrap();
+    let sharded = run(&b).unwrap();
+    assert!(sharded.losses[1].is_nan());
+    assert_reports_bit_identical(&sharded, &native, "nan-loss skip-step");
+}
