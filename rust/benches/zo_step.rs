@@ -11,25 +11,27 @@
 //! tunable-parameter counts in the `steps[].tunable_params` JSON field),
 //! plus `mezo-sharded` rows — the dense step fanned across 1/2/4 lockstep
 //! replicas via the sharded backend, carrying a `shards` count and a
-//! `scaling` speedup-vs-1-backend column (JSON version 5).
+//! `scaling` speedup-vs-1-backend column (JSON version 6).
 //! Backend-generic: the native backend
 //! runs with zero artifacts on any machine; with `--features pjrt` and
 //! exported artifacts the same harness times the PJRT runtime. For the full
 //! table/figure regeneration use `lezo bench <id>`.
 //!
-//! **Precision axis:** every native target is benchmarked twice — once per
-//! forward precision (`f32`, `bf16`) — and every JSON entry carries a
-//! `"precision"` field, so the f32-vs-bf16 ms and GB/s deltas are
-//! machine-readable across PRs. Forward entries additionally carry a
+//! **Precision axis:** every native target is benchmarked once per forward
+//! precision (`f32`, `bf16`, `int8`, `int4`) — and every JSON entry
+//! carries a `"precision"` field, so the per-precision ms and GB/s deltas
+//! are machine-readable across PRs. Forward entries additionally carry a
 //! modeled `"bytes"` field (`elsize * (params + rows*seq*vocab*d_model)`:
 //! each parameter streamed once plus the fused LM head's tok_emb stream
 //! per position — the two dominant terms) and the GB/s derived from it;
-//! by construction bf16 moves half the f32 bytes, and the measured ms
-//! shows how much of that lands as wall-clock. The zo_axpy rows keep the
-//! 8-bytes-per-element f32 model in both precisions: the sweeps always
-//! mutate the f32 masters (shadow invalidation is a flag store), so their
-//! bf16 rows measure that the reduced-precision mode does NOT regress the
-//! perturb/update path.
+//! by construction bf16 moves 0.5x the f32 bytes, int8 0.265625x (one
+//! code byte plus a shared f32 scale per 64-element block), and int4
+//! 0.140625x — the measured ms shows how much of that lands as
+//! wall-clock. The zo_axpy rows keep the 8-bytes-per-element f32 model in
+//! every precision: the sweeps always mutate the f32 masters (shadow
+//! invalidation is a flag store), so their reduced-precision rows measure
+//! that those modes do NOT regress the perturb/update path (JSON
+//! version 6).
 //!
 //! Besides the stdout table, every run writes a machine-readable report to
 //! `BENCH_native.json` (override with `LEZO_BENCH_JSON=<path>`) so the perf
@@ -77,21 +79,38 @@ fn precision_tag<B: Backend>(backend: &B) -> &'static str {
     match backend.precision() {
         Precision::F32 => "f32",
         Precision::Bf16 => "bf16",
+        Precision::Int8 => "int8",
+        Precision::Int4 => "int4",
+    }
+}
+
+/// Modeled bytes per stored scalar of the streamed weights: f32 4, bf16 2,
+/// and for the block-quantized modes the code bytes plus the amortized
+/// per-64-element f32 scale (int8 `1 + 4/64 = 1.0625`, int4
+/// `0.5 + 4/64 = 0.5625`) — the same model as
+/// `quant::QuantMode::bytes_per_element`.
+fn elsize_bytes(precision: Precision) -> f64 {
+    match precision {
+        Precision::F32 => 4.0,
+        Precision::Bf16 => 2.0,
+        Precision::Int8 => 1.0625,
+        Precision::Int4 => 0.5625,
     }
 }
 
 /// Modeled bytes of one fused forward at `elsize` bytes per stored scalar:
 /// every parameter streamed once plus the fused LM head's tok_emb stream
 /// per position (the bandwidth-dominant terms; activations are lower
-/// order). The bf16/f32 ratio of this model is exactly 0.5 — the measured
-/// ms tells how much of it the hardware realizes.
+/// order). The per-precision ratios of this model vs f32 are exactly 0.5
+/// (bf16), 0.265625 (int8), and 0.140625 (int4) — the measured ms tells
+/// how much of it the hardware realizes.
 fn forward_bytes_model(
     spec: &lezo::model::ModelSpec,
     rows: usize,
     seq: usize,
-    elsize: usize,
+    elsize: f64,
 ) -> f64 {
-    (elsize * (spec.param_count() + rows * seq * spec.vocab * spec.d_model)) as f64
+    elsize * (spec.param_count() + rows * seq * spec.vocab * spec.d_model) as f64
 }
 
 // ---------------------------------------------------------------------------
@@ -189,7 +208,7 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
     let mut s = String::new();
     let _ = write!(
         s,
-        "{{\n  \"version\": 5,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
+        "{{\n  \"version\": 6,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
         parallel::effective_threads()
     );
     for (ti, t) in targets.iter().enumerate() {
@@ -286,10 +305,7 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
 fn bench_into<B: Backend>(backend: &B, iters: usize, report: &mut TargetReport) {
     let spec = backend.spec().clone();
     let prec = precision_tag(backend);
-    let elsize = match backend.precision() {
-        Precision::F32 => 4usize,
-        Precision::Bf16 => 2,
-    };
+    let elsize = elsize_bytes(backend.precision());
     println!(
         "\n== {} [{} {prec}] ({} params, {} blocks, {} threads) ==",
         spec.name,
@@ -557,10 +573,12 @@ fn time_zo_steps<B: Backend>(
 /// the data-parallel backend (per-step losses are bit-identical to native
 /// by construction, so any scaling > 1 is free accuracy-wise).
 fn bench_sharded_into(model: &str, iters: usize, report: &mut TargetReport) {
-    for precision in [Precision::F32, Precision::Bf16] {
+    for precision in [Precision::F32, Precision::Bf16, Precision::Int8, Precision::Int4] {
         let prec = match precision {
             Precision::F32 => "f32",
             Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
         };
         let base_ms = report
             .steps
@@ -577,10 +595,7 @@ fn bench_sharded_into(model: &str, iters: usize, report: &mut TargetReport) {
                 }
             };
             let spec = backend.spec().clone();
-            let elsize = match precision {
-                Precision::F32 => 4usize,
-                Precision::Bf16 => 2,
-            };
+            let elsize = elsize_bytes(precision);
             backend.warm_zo().unwrap();
             let host = backend.initial_params("").unwrap().0;
             let mut tun = TunableUnits::from_host(&backend, &host).unwrap();
@@ -635,14 +650,16 @@ fn run_target(target: &str, iters: usize) -> Option<TargetReport> {
             Ok(b32) => {
                 let mut report = TargetReport::new(b32.name(), b32.spec());
                 bench_into(&b32, iters, &mut report);
-                // the reduced-precision twin of every row (native targets
-                // are benchmarked once per precision)
-                let b16 =
-                    NativeBackend::preset(model).unwrap().with_precision(Precision::Bf16);
-                bench_into(&b16, iters, &mut report);
+                // the reduced-precision twins of every row (native targets
+                // are benchmarked once per precision: bf16 shadows, then
+                // the int8/int4 block-quantized shadows)
+                for precision in [Precision::Bf16, Precision::Int8, Precision::Int4] {
+                    let b = NativeBackend::preset(model).unwrap().with_precision(precision);
+                    bench_into(&b, iters, &mut report);
+                }
                 // the data-parallel twin: same dense step fanned across
                 // 1/2/4 lockstep replicas, with its scaling vs the rows
-                // above (version-5 `shards`/`scaling` fields)
+                // above (`shards`/`scaling` fields)
                 bench_sharded_into(model, iters, &mut report);
                 Some(report)
             }

@@ -139,11 +139,13 @@ pub struct RunConfig {
     /// Results are bit-identical at any setting — the native kernels use
     /// fixed chunk partitioning (see `runtime/native/parallel.rs`).
     pub threads: usize,
-    /// Forward-path numeric precision (`f32` default, `bf16` halves the
+    /// Forward-path numeric precision (`f32` default; `bf16` halves the
     /// streamed parameter/activation bytes of the forward families on the
-    /// native backend). The `LEZO_PRECISION` env var overrides this,
-    /// mirroring `threads`/`LEZO_THREADS`. ZO perturb/update state stays
-    /// f32 either way (see `runtime/native/mod.rs`, "Precision").
+    /// native backend; `int8`/`int4` stream absmax block-quantized weight
+    /// shadows at ~0.27x/~0.14x of the f32 bytes, activations staying
+    /// f32). The `LEZO_PRECISION` env var overrides this, mirroring
+    /// `threads`/`LEZO_THREADS`. ZO perturb/update state stays f32 either
+    /// way (see `runtime/native/mod.rs`, "Precision").
     pub precision: Precision,
     /// ZO update rule (the optimizer zoo; `coordinator/optim.rs`). The
     /// `LEZO_ZO_OPT` env var overrides this, mirroring
@@ -454,6 +456,10 @@ mod tests {
         assert_eq!(c.precision, Precision::F32, "default is f32");
         c.apply_overrides(&["precision=bf16".into()]).unwrap();
         assert_eq!(c.precision, Precision::Bf16);
+        c.apply_overrides(&["precision=int8".into()]).unwrap();
+        assert_eq!(c.precision, Precision::Int8);
+        c.apply_overrides(&["precision=int4".into()]).unwrap();
+        assert_eq!(c.precision, Precision::Int4);
         c.apply_overrides(&["precision=f32".into()]).unwrap();
         assert_eq!(c.precision, Precision::F32);
         assert!(c.apply_overrides(&["precision=fp8".into()]).is_err());

@@ -1587,6 +1587,60 @@ mod tests {
     }
 
     #[test]
+    fn quant_zo_runs_on_native_backend() {
+        if std::env::var("LEZO_PRECISION").map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED quant_zo_runs_on_native_backend: LEZO_PRECISION wins");
+            return;
+        }
+        // both quantized modes, and for int8 both the dense (mezo) and
+        // sparse (lezo) sweeps — the lezo run exercises the partial
+        // shadow re-quantization path end to end
+        for (precision, method, drop) in [
+            (Precision::Int8, Method::Mezo, 0usize),
+            (Precision::Int8, Method::Lezo, 1),
+            (Precision::Int4, Method::Mezo, 0),
+        ] {
+            let mut cfg = RunConfig::default();
+            cfg.model = "opt-nano".into();
+            cfg.backend = BackendKind::Native;
+            cfg.method = method;
+            cfg.drop_layers = drop;
+            cfg.precision = precision;
+            cfg.steps = 2;
+            cfg.eval_every = 2;
+            cfg.eval_examples = 4;
+            cfg.train_examples = 8;
+            cfg.mean_len = 8;
+            cfg.lr = 1e-4;
+            let r = Trainer::new(cfg).run().unwrap();
+            assert_eq!(r.backend, "native", "{precision}/{method}");
+            assert_eq!(r.precision, precision, "{precision}/{method}");
+            assert_eq!(r.losses.len(), 2, "{precision}/{method}");
+            assert!(r.losses.iter().all(|l| l.is_finite()), "{precision}/{method}");
+        }
+    }
+
+    #[test]
+    fn pjrt_with_quantized_precision_is_a_hard_error_too() {
+        if std::env::var("LEZO_PRECISION").map(|s| !s.is_empty()).unwrap_or(false) {
+            eprintln!("SKIPPED pjrt_with_quantized_precision_is_a_hard_error: LEZO_PRECISION wins");
+            return;
+        }
+        // same named-key error as the bf16 arm: a quantized request must
+        // never silently run pjrt's f32 executables
+        for precision in [Precision::Int8, Precision::Int4] {
+            let mut cfg = RunConfig::default();
+            cfg.model = "opt-nano".into();
+            cfg.backend = BackendKind::Pjrt;
+            cfg.precision = precision;
+            let err = Trainer::new(cfg).run().unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("precision"), "{precision}: {msg}");
+            assert!(msg.contains(&precision.to_string()), "{precision}: {msg}");
+        }
+    }
+
+    #[test]
     fn ft_and_no_train_methods_reject_peft() {
         // the two-token spelling (`method=ft peft=lora`) must be as hard an
         // error as the `ft-lora` alias: no silent full-model run under a

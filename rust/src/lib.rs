@@ -39,8 +39,11 @@
 //!   against — and a reference backward pass, so the FT baseline,
 //!   pretraining, and every Table-4 PEFT cell are hermetic too). A
 //!   software-bf16 twin of the forward path (`precision=bf16`, env
-//!   `LEZO_PRECISION`) halves the streamed bytes while the trainable f32
-//!   masters stay authoritative ([`runtime::native`], "Precision").
+//!   `LEZO_PRECISION`) halves the streamed bytes, and absmax block-quantized
+//!   int8/int4 shadows (`precision=int8|int4`, ~0.27x / ~0.14x of the f32
+//!   forward bytes, kernels pinned bitwise to their f32 twins on the
+//!   dequantized weights) cut them further — the trainable f32 masters stay
+//!   authoritative in every mode ([`runtime::native`], "Precision").
 //!   [`runtime::sharded`] runs N lockstep native replicas and fans each ZO
 //!   step's forward evaluations across them — only `(probe, loss)` scalars
 //!   travel, and the trajectory is bit-identical to single-backend native.

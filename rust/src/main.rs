@@ -35,8 +35,10 @@ fn usage() -> ! {
          (method:    zero-shot|icl|ft|mezo|lezo|smezo, or a Table-4 alias\n\
           mezo-lora|lezo-lora|mezo-prefix|lezo-prefix that also sets peft)\n\
          (peft:      full|lora|prefix — adapter tuning runs on any backend)\n\
-         (precision: f32|bf16 — bf16 runs the native forward over half-width\n\
-          shadows (half the streamed bytes); f32 masters stay authoritative.\n\
+         (precision: f32|bf16|int8|int4 — bf16 runs the native forward over\n\
+          half-width shadows (half the streamed bytes); int8/int4 stream\n\
+          absmax block-quantized weight shadows (~0.27x/~0.14x the bytes,\n\
+          activations stay f32); f32 masters stay authoritative.\n\
           Env LEZO_PRECISION overrides, like LEZO_THREADS for threads)\n\
          (zo_opt:    zo-sgd|zo-sgd-momentum|zo-adam|zo-sign-sgd|fzoo — the ZO\n\
           update rule; momentum/adam replay past directions from seeds.\n\

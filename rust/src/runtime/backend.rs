@@ -299,11 +299,26 @@ impl std::fmt::Display for BackendKind {
 /// traffic — and every algorithmic invariant (Philox regeneration,
 /// perturb/flip/restore round-trip, thread-count invariance) is
 /// precision-independent.
+///
+/// `int8`/`int4` stream block-quantized *weight* shadows instead (per-block
+/// f32 absmax scale + packed integer codes; activations stay f32 — see
+/// `runtime/native/quant.rs`): ~4x / ~7x fewer forward bytes than f32, at
+/// the cost of quantization error in the weights only.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Precision {
     #[default]
     F32,
     Bf16,
+    Int8,
+    Int4,
+}
+
+impl Precision {
+    /// Block-quantized integer modes (weight shadows carry per-block
+    /// scales; activations stay f32).
+    pub fn is_quantized(self) -> bool {
+        matches!(self, Precision::Int8 | Precision::Int4)
+    }
 }
 
 impl FromStr for Precision {
@@ -312,7 +327,9 @@ impl FromStr for Precision {
         Ok(match s {
             "f32" | "fp32" | "float32" => Precision::F32,
             "bf16" | "bfloat16" => Precision::Bf16,
-            _ => anyhow::bail!("unknown precision '{s}' (f32|bf16)"),
+            "int8" | "i8" => Precision::Int8,
+            "int4" | "i4" => Precision::Int4,
+            _ => anyhow::bail!("unknown precision '{s}' (f32|bf16|int8|int4)"),
         })
     }
 }
@@ -322,6 +339,8 @@ impl std::fmt::Display for Precision {
         f.write_str(match self {
             Precision::F32 => "f32",
             Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
         })
     }
 }
@@ -337,7 +356,9 @@ pub fn env_precision() -> Result<Option<Precision>> {
         Ok(v) => v
             .parse()
             .map(Some)
-            .map_err(|_| anyhow::anyhow!("LEZO_PRECISION='{v}' is not a precision (f32|bf16)")),
+            .map_err(|_| {
+                anyhow::anyhow!("LEZO_PRECISION='{v}' is not a precision (f32|bf16|int8|int4)")
+            }),
     }
 }
 
@@ -394,14 +415,19 @@ mod tests {
 
     #[test]
     fn precision_parse_display_round_trip() {
-        for s in ["f32", "bf16"] {
+        for s in ["f32", "bf16", "int8", "int4"] {
             let p: Precision = s.parse().unwrap();
             assert_eq!(p.to_string(), s);
         }
         assert_eq!("bfloat16".parse::<Precision>().unwrap(), Precision::Bf16);
         assert_eq!("fp32".parse::<Precision>().unwrap(), Precision::F32);
-        assert!("fp8".parse::<Precision>().is_err());
+        assert_eq!("i8".parse::<Precision>().unwrap(), Precision::Int8);
+        assert_eq!("i4".parse::<Precision>().unwrap(), Precision::Int4);
+        let err = "fp8".parse::<Precision>().unwrap_err().to_string();
+        assert!(err.contains("f32|bf16|int8|int4"), "{err}");
         assert_eq!(Precision::default(), Precision::F32);
+        assert!(Precision::Int8.is_quantized() && Precision::Int4.is_quantized());
+        assert!(!Precision::F32.is_quantized() && !Precision::Bf16.is_quantized());
     }
 
     #[test]

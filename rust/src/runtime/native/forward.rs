@@ -40,10 +40,11 @@
 //! MeZO == LeZO at drop 0, thread-count invariance) is exact.
 
 use super::kernels::{
-    self, fused_argmax, fused_argmax_bf16, fused_masked_xent, fused_masked_xent_bf16, gelu,
-    peft_block, split_block, validate_forward_args, validate_targets, ForwardScratch, PeftBlock,
-    LN_EPS,
+    self, fused_argmax, fused_argmax_bf16, fused_argmax_quant, fused_masked_xent,
+    fused_masked_xent_bf16, fused_masked_xent_quant, gelu, peft_block, split_block,
+    validate_forward_args, validate_targets, ForwardScratch, PeftBlock, LN_EPS,
 };
+use super::quant::QuantView;
 use crate::model::spec::ModelSpec;
 use crate::peft::PeftMode;
 use anyhow::Result;
@@ -548,6 +549,105 @@ pub fn predict_bf16_peft(
     let tok_emb = &units[0][..spec.vocab * d];
     let mut preds = vec![0i32; n];
     fused_argmax_bf16(&scratch.xb[..n * d], tok_emb, n, spec.vocab, d, &mut preds);
+    Ok(preds)
+}
+
+// ---------------------------------------------------------------------------
+// quant twins of the fused fast paths (precision = int8 | int4)
+// ---------------------------------------------------------------------------
+//
+// Same structure as the f32 families above, executed over block-quantized
+// unit shadows ([`super::quant`]): `units` are per-unit `QuantView`s (the
+// backend keeps the f32 masters authoritative and re-quantizes touched
+// units — see `runtime/native/mod.rs`), while activations stay f32 and
+// share the f32 scratch arena. Each quant kernel decodes weights
+// elementwise-exactly and runs the identical f32 inner loop, so every
+// family here is **bitwise** equal to its f32 twin run on the dequantized
+// units (kernels.rs tests + `rust/tests/kernel_twins.rs`); against the f32
+// masters the composed forwards carry quantization error in the weights
+// only, pinned by calibrated tolerances in `runtime/native/mod.rs` tests.
+
+/// Quant twin of [`mean_loss_peft`]: the ZO objective over quantized
+/// weight shadows (f32 activations, f32 adapters).
+#[allow(clippy::too_many_arguments)]
+pub fn mean_loss_quant_peft(
+    spec: &ModelSpec,
+    units: &[QuantView<'_>],
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &[f32],
+    rows: usize,
+    seq: usize,
+    scratch: &mut ForwardScratch,
+) -> Result<f32> {
+    let n = rows * seq;
+    validate_targets(targets, mask, n, spec.vocab)?;
+    kernels::forward_hidden_quant_peft(spec, units, peft, peft_units, tokens, rows, seq, scratch)?;
+    let d = spec.d_model;
+    let tok_emb = units[0].split_to(0, spec.vocab * d);
+    let ForwardScratch { x, xent, .. } = scratch;
+    fused_masked_xent_quant(&x[..n * d], &tok_emb, targets, mask, n, spec.vocab, d, &mut xent[..n]);
+    // fixed serial reduction: thread-count invariant
+    let num: f64 = xent[..n].iter().zip(mask).map(|(&xv, &m)| xv as f64 * m as f64).sum();
+    let den: f64 = mask.iter().map(|&m| m as f64).sum::<f64>().max(1.0);
+    Ok((num / den) as f32)
+}
+
+/// Quant twin of [`example_losses_peft`].
+#[allow(clippy::too_many_arguments)]
+pub fn example_losses_quant_peft(
+    spec: &ModelSpec,
+    units: &[QuantView<'_>],
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &[f32],
+    rows: usize,
+    seq: usize,
+    scratch: &mut ForwardScratch,
+) -> Result<Vec<f32>> {
+    let n = rows * seq;
+    validate_targets(targets, mask, n, spec.vocab)?;
+    kernels::forward_hidden_quant_peft(spec, units, peft, peft_units, tokens, rows, seq, scratch)?;
+    let d = spec.d_model;
+    let tok_emb = units[0].split_to(0, spec.vocab * d);
+    let ForwardScratch { x, xent, .. } = scratch;
+    fused_masked_xent_quant(&x[..n * d], &tok_emb, targets, mask, n, spec.vocab, d, &mut xent[..n]);
+    let mut per = vec![0.0f32; rows];
+    for (r, pv) in per.iter_mut().enumerate() {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for s in 0..seq {
+            num += xent[r * seq + s] as f64 * mask[r * seq + s] as f64;
+            den += mask[r * seq + s] as f64;
+        }
+        *pv = (num / den.max(1.0)) as f32;
+    }
+    Ok(per)
+}
+
+/// Quant twin of [`predict_peft`]: streaming argmax over the quantized
+/// tied embedding.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_quant_peft(
+    spec: &ModelSpec,
+    units: &[QuantView<'_>],
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+    scratch: &mut ForwardScratch,
+) -> Result<Vec<i32>> {
+    let n = rows * seq;
+    kernels::forward_hidden_quant_peft(spec, units, peft, peft_units, tokens, rows, seq, scratch)?;
+    let d = spec.d_model;
+    let tok_emb = units[0].split_to(0, spec.vocab * d);
+    let mut preds = vec![0i32; n];
+    fused_argmax_quant(&scratch.x[..n * d], &tok_emb, n, spec.vocab, d, &mut preds);
     Ok(preds)
 }
 
@@ -1185,5 +1285,70 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("outside the vocab"), "{err}");
+    }
+
+    // -- quant twins: each fused family must be BITWISE equal to its f32
+    // -- twin run on the dequantized units (the composed-forward tolerance
+    // -- pins against the f32 *masters* live in runtime/native/mod.rs).
+
+    #[test]
+    fn quant_families_are_bitwise_equal_to_f32_families_on_dequantized_units() {
+        use crate::runtime::native::quant::{self, QuantMode, QuantView};
+        let s = spec();
+        let host = s.init_units(3);
+        let (rows, seq) = (2usize, 8usize);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| 15 + (i % 95) as i32).collect();
+        let targets: Vec<i32> = (0..rows * seq).map(|i| 5 + (i % 100) as i32).collect();
+        let mut mask = vec![1.0f32; rows * seq];
+        mask[2] = 0.0;
+        let mut scratch = ForwardScratch::new();
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let pairs: Vec<(Vec<f32>, Vec<u8>)> =
+                host.iter().map(|u| quant::quantize(mode, u).unwrap()).collect();
+            let views: Vec<QuantView<'_>> = pairs
+                .iter()
+                .zip(&host)
+                .map(|((sc, c), u)| QuantView::new(mode, sc, c, u.len()))
+                .collect();
+            let deq: Vec<Vec<f32>> = views.iter().map(|v| v.dequant()).collect();
+            let deq_refs: Vec<&[f32]> = deq.iter().map(|u| u.as_slice()).collect();
+
+            let lq = mean_loss_quant_peft(
+                &s, &views, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq,
+                &mut scratch,
+            )
+            .unwrap();
+            let lf = mean_loss_peft(
+                &s, &deq_refs, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq,
+                &mut scratch,
+            )
+            .unwrap();
+            assert_eq!(lq.to_bits(), lf.to_bits(), "{mode} mean_loss");
+
+            let eq = example_losses_quant_peft(
+                &s, &views, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq,
+                &mut scratch,
+            )
+            .unwrap();
+            let ef = example_losses_peft(
+                &s, &deq_refs, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq,
+                &mut scratch,
+            )
+            .unwrap();
+            assert_eq!(
+                eq.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                ef.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{mode} example_losses"
+            );
+
+            let pq = predict_quant_peft(
+                &s, &views, PeftMode::Full, &[], &tokens, rows, seq, &mut scratch,
+            )
+            .unwrap();
+            let pf =
+                predict_peft(&s, &deq_refs, PeftMode::Full, &[], &tokens, rows, seq, &mut scratch)
+                    .unwrap();
+            assert_eq!(pq, pf, "{mode} predict");
+        }
     }
 }

@@ -40,9 +40,22 @@
 //!   ([`attention_ctx_bf16`] takes the prefix KV pair as f32;
 //!   [`matmul_scaled_acc_into_bf16`] folds the f32 LoRA delta into a bf16
 //!   projection, keeping the zero-init-LoRA == base bitwise property).
+//! - **quant twins** (`*_quant`, the `precision=int8|int4` forward path):
+//!   only the *weights* are block-quantized ([`super::quant`]); activations
+//!   stay f32. Each quant kernel decodes a weight panel/row into a small
+//!   per-chunk buffer (decoding is elementwise-exact) and then runs the
+//!   *identical* f32 inner loop, so `kernel_q(view, x) ==
+//!   kernel_f32(view.dequant(), x)` holds **bitwise** by construction —
+//!   while the streamed weight bytes drop ~4x (int8) / ~7x (int4).
+//! - The innermost blocked-matmul / fused-LM-head loops across *all*
+//!   precisions route through [`super::simd`]: runtime-dispatched vector
+//!   paths pinned bit-identical to their scalar references (the scalar
+//!   twins fix the accumulation lane structure, so vectorizing is legal).
 
 use super::bf16;
 use super::parallel::{par_ranges, par_row_chunks, SendPtr};
+use super::quant::QuantView;
+use super::simd;
 use crate::model::spec::ModelSpec;
 use crate::peft::PeftMode;
 use crate::runtime::philox::fill_gauss;
@@ -164,9 +177,7 @@ pub fn matmul_bias_into(
             for (rr, orow) in orows.chunks_exact_mut(dout).enumerate() {
                 let xrow = &x[(r0 + rr) * din + i0..(r0 + rr) * din + i1];
                 for (&xi, wrow) in xrow.iter().zip(wpanel.chunks_exact(dout)) {
-                    for (o, &wv) in orow.iter_mut().zip(wrow) {
-                        *o += xi * wv;
-                    }
+                    simd::axpy_row(orow, xi, wrow);
                 }
             }
             i0 = i1;
@@ -258,23 +269,11 @@ pub fn gelu_inplace(a: &mut [f32]) {
 
 /// Dot product with four independent accumulators so the reduction
 /// vectorizes. The accumulation pattern is fixed per (a, b) pair — it never
-/// depends on threads or chunking.
+/// depends on threads or chunking. Delegates to [`super::simd::dot`],
+/// whose vector path is pinned bit-identical to the scalar reference.
 #[inline]
 pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n4 = a.len() - a.len() % 4;
-    let mut acc = [0.0f32; 4];
-    for (pa, pb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
-        acc[0] += pa[0] * pb[0];
-        acc[1] += pa[1] * pb[1];
-        acc[2] += pa[2] * pb[2];
-        acc[3] += pa[3] * pb[3];
-    }
-    let mut tail = 0.0f32;
-    for (&xv, &yv) in a[n4..].iter().zip(&b[n4..]) {
-        tail += xv * yv;
-    }
-    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+    simd::dot(a, b)
 }
 
 // ---------------------------------------------------------------------------
@@ -846,22 +845,11 @@ pub fn fused_argmax(
 
 /// [`dot`] over bf16 operands: widen on the fly, same 4-accumulator
 /// pattern, so the f32 result equals `dot(widen(a), widen(b))` bitwise.
+/// Delegates to [`super::simd::dot_bf16`] (vector path pinned bit-identical
+/// to the scalar reference).
 #[inline]
 pub(crate) fn dot_bf16(a: &[u16], b: &[u16]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n4 = a.len() - a.len() % 4;
-    let mut acc = [0.0f32; 4];
-    for (pa, pb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
-        acc[0] += bf16::to_f32(pa[0]) * bf16::to_f32(pb[0]);
-        acc[1] += bf16::to_f32(pa[1]) * bf16::to_f32(pb[1]);
-        acc[2] += bf16::to_f32(pa[2]) * bf16::to_f32(pb[2]);
-        acc[3] += bf16::to_f32(pa[3]) * bf16::to_f32(pb[3]);
-    }
-    let mut tail = 0.0f32;
-    for (&xv, &yv) in a[n4..].iter().zip(&b[n4..]) {
-        tail += bf16::to_f32(xv) * bf16::to_f32(yv);
-    }
-    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+    simd::dot_bf16(a, b)
 }
 
 /// Mixed dot: bf16 activations against f32 parameters (the prefix-tuning
@@ -924,10 +912,7 @@ pub fn matmul_bias_into_bf16(
             for (rr, arow) in acc.chunks_exact_mut(dout).enumerate() {
                 let xrow = &x[(r0 + rr) * din + i0..(r0 + rr) * din + i1];
                 for (&xi, wrow) in xrow.iter().zip(wpanel.chunks_exact(dout)) {
-                    let xf = bf16::to_f32(xi);
-                    for (a, &wv) in arow.iter_mut().zip(wrow) {
-                        *a += xf * bf16::to_f32(wv);
-                    }
+                    simd::axpy_row_bf16(arow, bf16::to_f32(xi), wrow);
                 }
             }
             i0 = i1;
@@ -965,10 +950,7 @@ pub fn lora_a_proj_bf16(
             for (rr, orow) in orows.chunks_exact_mut(dout).enumerate() {
                 let xrow = &x[(r0 + rr) * din + i0..(r0 + rr) * din + i1];
                 for (&xi, wrow) in xrow.iter().zip(wpanel.chunks_exact(dout)) {
-                    let xf = bf16::to_f32(xi);
-                    for (o, &wv) in orow.iter_mut().zip(wrow) {
-                        *o += xf * wv;
-                    }
+                    simd::axpy_row(orow, bf16::to_f32(xi), wrow);
                 }
             }
             i0 = i1;
@@ -1331,6 +1313,390 @@ pub fn fused_argmax_bf16(
                     best_val = l;
                     best = t;
                 }
+            }
+            *o = best as i32;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// quant twins: block-quantized weights, f32 activations
+// ---------------------------------------------------------------------------
+//
+// `precision=int8|int4` quantizes only the *weight* shadows
+// ([`super::quant`]); activations, scratch, and adapters stay f32. Each
+// kernel below decodes the weight panel/row it is about to consume into a
+// small per-chunk buffer (decoding is elementwise-exact: one exact int→f32
+// conversion and one correctly-rounded multiply per element) and then runs
+// the *identical* f32 inner loop as its f32 twin. The pinned invariant is
+// therefore exact by construction:
+//
+//     kernel_quant(view, x) == kernel_f32(view.dequant(), x)   (bitwise)
+//
+// and thread-count invariance is inherited from the f32 kernels (fixed
+// chunking, per-element fixed reduction order). The bandwidth win is what
+// changes: a weight element streams 1.0625 bytes (int8) or 0.5625 bytes
+// (int4) instead of 4.
+
+/// Quant twin of [`matmul_bias_into`]: f32 activations against a
+/// block-quantized weight matrix and bias. Each row-chunk decodes the bias
+/// once and each `MM_IBLOCK x dout` weight panel on the fly, then runs the
+/// identical blocked ascending-`i` accumulation.
+pub fn matmul_bias_into_quant(
+    x: &[f32],
+    w: &QuantView<'_>,
+    b: &QuantView<'_>,
+    out: &mut [f32],
+    n_rows: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(x.len(), n_rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(b.len(), dout);
+    debug_assert_eq!(out.len(), n_rows * dout);
+    let grain = grain_for(din * dout, 250_000); // rows per chunk
+    par_row_chunks(out, dout, grain, |r0, orows| {
+        let mut bias = vec![0.0f32; dout];
+        b.dequant_range_into(&mut bias);
+        let mut panel = vec![0.0f32; MM_IBLOCK.min(din) * dout];
+        for orow in orows.chunks_exact_mut(dout) {
+            orow.copy_from_slice(&bias);
+        }
+        let mut i0 = 0;
+        while i0 < din {
+            let i1 = (i0 + MM_IBLOCK).min(din);
+            let wpanel = &mut panel[..(i1 - i0) * dout];
+            w.split_to(i0 * dout, i1 * dout).dequant_range_into(wpanel);
+            for (rr, orow) in orows.chunks_exact_mut(dout).enumerate() {
+                let xrow = &x[(r0 + rr) * din + i0..(r0 + rr) * din + i1];
+                for (&xi, wrow) in xrow.iter().zip(wpanel.chunks_exact(dout)) {
+                    simd::axpy_row(orow, xi, wrow);
+                }
+            }
+            i0 = i1;
+        }
+    });
+}
+
+/// Quant twin of [`layernorm_into`]: f32 rows, block-quantized gain/bias
+/// decoded once per row-chunk. Identical f64 reductions.
+pub fn layernorm_into_quant(
+    x: &[f32],
+    gamma: &QuantView<'_>,
+    beta: &QuantView<'_>,
+    out: &mut [f32],
+    d: usize,
+) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert!(gamma.len() == d && beta.len() == d);
+    let grain = grain_for(4 * d, 65_536);
+    par_row_chunks(out, d, grain, |r0, orows| {
+        let mut g = vec![0.0f32; d];
+        let mut bv = vec![0.0f32; d];
+        gamma.dequant_range_into(&mut g);
+        beta.dequant_range_into(&mut bv);
+        for (rr, orow) in orows.chunks_exact_mut(d).enumerate() {
+            let row = &x[(r0 + rr) * d..(r0 + rr + 1) * d];
+            let mean = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+            let var = row.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>()
+                / d as f64;
+            let inv = 1.0 / (var as f32 + LN_EPS).sqrt();
+            let mean = mean as f32;
+            for ((o, &v), (&gg, &bb)) in orow.iter_mut().zip(row).zip(g.iter().zip(&bv)) {
+                *o = (v - mean) * inv * gg + bb;
+            }
+        }
+    });
+}
+
+/// Named [`QuantView`] windows into one flat block unit — the quantized
+/// counterpart of [`BlockParams`], splitting the identical flat layout.
+pub(crate) struct QuantBlock<'a> {
+    pub ln1_g: QuantView<'a>,
+    pub ln1_b: QuantView<'a>,
+    pub wq: QuantView<'a>,
+    pub bq: QuantView<'a>,
+    pub wk: QuantView<'a>,
+    pub bk: QuantView<'a>,
+    pub wv: QuantView<'a>,
+    pub bv: QuantView<'a>,
+    pub wo: QuantView<'a>,
+    pub bo: QuantView<'a>,
+    pub ln2_g: QuantView<'a>,
+    pub ln2_b: QuantView<'a>,
+    pub w1: QuantView<'a>,
+    pub b1: QuantView<'a>,
+    pub w2: QuantView<'a>,
+    pub b2: QuantView<'a>,
+}
+
+pub(crate) fn split_block_quant<'a>(spec: &ModelSpec, p: &QuantView<'a>) -> QuantBlock<'a> {
+    let d = spec.d_model;
+    let f = spec.d_ff();
+    let mut off = 0usize;
+    let mut take = |n: usize| -> QuantView<'a> {
+        let v = p.split_to(off, off + n);
+        off += n;
+        v
+    };
+    QuantBlock {
+        ln1_g: take(d),
+        ln1_b: take(d),
+        wq: take(d * d),
+        bq: take(d),
+        wk: take(d * d),
+        bk: take(d),
+        wv: take(d * d),
+        bv: take(d),
+        wo: take(d * d),
+        bo: take(d),
+        ln2_g: take(d),
+        ln2_b: take(d),
+        w1: take(d * f),
+        b1: take(f),
+        w2: take(f * d),
+        b2: take(d),
+    }
+}
+
+/// [`validate_forward_args`] over quantized unit views (length checks only,
+/// identical messages).
+pub(crate) fn validate_forward_args_quant(
+    spec: &ModelSpec,
+    units: &[QuantView<'_>],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+) -> Result<()> {
+    ensure!(
+        units.len() == spec.n_units(),
+        "expected {} units, got {}",
+        spec.n_units(),
+        units.len()
+    );
+    for (k, (u, len)) in units.iter().zip(spec.unit_lens()).enumerate() {
+        ensure!(u.len() == len, "unit {k}: expected {len} elements, got {}", u.len());
+    }
+    ensure!(tokens.len() == rows * seq, "tokens shape mismatch");
+    ensure!(seq <= spec.max_seq, "seq {seq} exceeds max_seq {}", spec.max_seq);
+    ensure!(
+        tokens.iter().all(|&t| t >= 0 && (t as usize) < spec.vocab),
+        "token id out of vocab range"
+    );
+    Ok(())
+}
+
+/// Quant twin of the private f32 `attention_into`: the four projections
+/// decode quantized weights; activations, the PEFT adapter fold, and
+/// [`attention_ctx`] are the plain f32 kernels (adapters stay f32, like
+/// the bf16 path).
+#[allow(clippy::too_many_arguments)]
+fn attention_into_quant(
+    h: &mut [f32],
+    x: &[f32],
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &mut [f32],
+    ctx: &mut [f32],
+    p: &QuantBlock<'_>,
+    peft: &PeftBlock<'_>,
+    d: usize,
+    nh: usize,
+    rows: usize,
+    seq: usize,
+    lora_tmp: &mut [f32],
+) {
+    const LORA_ZERO_BIAS: [f32; crate::peft::LORA_RANK] = [0.0; crate::peft::LORA_RANK];
+    let n = rows * seq;
+    matmul_bias_into_quant(x, &p.wq, &p.bq, q, n, d, d);
+    matmul_bias_into_quant(x, &p.wk, &p.bk, k, n, d, d);
+    matmul_bias_into_quant(x, &p.wv, &p.bv, v, n, d, d);
+    let mut prefix = None;
+    match peft {
+        PeftBlock::None => {}
+        PeftBlock::Lora { a_q, b_q, a_v, b_v } => {
+            let r = crate::peft::LORA_RANK;
+            let scale = (crate::peft::LORA_ALPHA / r as f64) as f32;
+            let tmp = &mut lora_tmp[..n * r];
+            matmul_bias_into(x, a_q, &LORA_ZERO_BIAS, tmp, n, d, r);
+            matmul_scaled_acc_into(tmp, b_q, scale, q, n, r, d);
+            matmul_bias_into(x, a_v, &LORA_ZERO_BIAS, tmp, n, d, r);
+            matmul_scaled_acc_into(tmp, b_v, scale, v, n, r, d);
+        }
+        PeftBlock::Prefix { k_pre, v_pre } => prefix = Some((*k_pre, *v_pre)),
+    }
+    attention_ctx(q, k, v, prefix, ctx, d, nh, rows, seq);
+    matmul_bias_into_quant(ctx, &p.wo, &p.bo, q, n, d, d);
+    add_inplace(h, q);
+}
+
+/// Quant twin of [`forward_hidden_peft`]: the full transformer forward
+/// over block-quantized unit shadows with **f32 activations** — it shares
+/// the f32 scratch arena, and on success the final-LN hidden states are in
+/// `scratch.x[..rows*seq*d]`, exactly like the f32 path. Bitwise equal to
+/// [`forward_hidden_peft`] run on the dequantized units.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_hidden_quant_peft(
+    spec: &ModelSpec,
+    units: &[QuantView<'_>],
+    peft: PeftMode,
+    peft_units: &[&[f32]],
+    tokens: &[i32],
+    rows: usize,
+    seq: usize,
+    scratch: &mut ForwardScratch,
+) -> Result<()> {
+    validate_forward_args_quant(spec, units, tokens, rows, seq)?;
+    validate_peft_args(spec, peft, peft_units)?;
+    let d = spec.d_model;
+    let f = spec.d_ff();
+    let n = rows * seq;
+    scratch.ensure(n, d, f);
+    let ForwardScratch { h, x, q, k, v, ctx, ffn, .. } = scratch;
+    let h = &mut h[..n * d];
+    let x = &mut x[..n * d];
+    let q = &mut q[..n * d];
+    let k = &mut k[..n * d];
+    let v = &mut v[..n * d];
+    let ctx = &mut ctx[..n * d];
+    let ffn = &mut ffn[..n * f];
+
+    // embed: decode one tok_emb / pos_emb row at a time
+    let emb = &units[0];
+    let vocab_d = spec.vocab * d;
+    let mut te = vec![0.0f32; d];
+    let mut pe = vec![0.0f32; d];
+    for r in 0..rows {
+        for s in 0..seq {
+            let t = tokens[r * seq + s] as usize;
+            let hrow = &mut h[(r * seq + s) * d..(r * seq + s + 1) * d];
+            emb.split_to(t * d, (t + 1) * d).dequant_range_into(&mut te);
+            emb.split_to(vocab_d + s * d, vocab_d + (s + 1) * d).dequant_range_into(&mut pe);
+            for ((hv, &tv), &pv) in hrow.iter_mut().zip(&te).zip(&pe) {
+                *hv = tv + pv;
+            }
+        }
+    }
+
+    // blocks
+    for l in 0..spec.n_layers {
+        let p = split_block_quant(spec, &units[1 + l]);
+        let pb = match peft {
+            PeftMode::Full => PeftBlock::None,
+            _ => peft_block(peft, peft_units[l], d),
+        };
+        layernorm_into_quant(h, &p.ln1_g, &p.ln1_b, x, d);
+        attention_into_quant(h, x, q, k, v, ctx, &p, &pb, d, spec.n_heads, rows, seq, ffn);
+        layernorm_into_quant(h, &p.ln2_g, &p.ln2_b, x, d);
+        matmul_bias_into_quant(x, &p.w1, &p.b1, ffn, n, d, f);
+        gelu_inplace(ffn);
+        matmul_bias_into_quant(ffn, &p.w2, &p.b2, q, n, f, d);
+        add_inplace(h, q);
+    }
+
+    // final LN (the tied LM head consumes scratch.x, like the f32 path)
+    let fin = &units[spec.n_units() - 1];
+    layernorm_into_quant(h, &fin.split_to(0, d), &fin.split_to(d, 2 * d), x, d);
+    Ok(())
+}
+
+/// Quant twin of [`fused_masked_xent`]: f32 hidden states against the
+/// block-quantized tied embedding, decoded one vocab tile at a time into a
+/// per-chunk buffer. Streaming logsumexp / gold logit identical to the f32
+/// twin on the decoded rows.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_masked_xent_quant(
+    hf: &[f32],
+    tok_emb: &QuantView<'_>,
+    targets: &[i32],
+    mask: &[f32],
+    n: usize,
+    vocab: usize,
+    d: usize,
+    xent: &mut [f32],
+) {
+    debug_assert!(hf.len() == n * d && tok_emb.len() == vocab * d);
+    debug_assert!(targets.len() == n && mask.len() == n && xent.len() == n);
+    let ptr = SendPtr(xent.as_mut_ptr());
+    let grain = grain_for(2 * vocab * d, 2_000_000);
+    par_ranges(n, grain, |range| {
+        // SAFETY: par_ranges chunks are disjoint position ranges of `xent`.
+        let out = unsafe { ptr.slice_mut(range.start, range.end - range.start) };
+        let mut etile = vec![0.0f32; VOCAB_TILE.min(vocab) * d];
+        for (o, p) in out.iter_mut().zip(range) {
+            if mask[p] <= 0.0 {
+                *o = 0.0;
+                continue;
+            }
+            let hrow = &hf[p * d..(p + 1) * d];
+            let gold_t = targets[p] as usize; // validated in-range
+            let mut running_max = f32::NEG_INFINITY;
+            let mut sum = 0.0f64;
+            let mut gold = 0.0f32;
+            let mut tile = [0.0f32; VOCAB_TILE];
+            let mut t0 = 0;
+            while t0 < vocab {
+                let t1 = (t0 + VOCAB_TILE).min(vocab);
+                let tile = &mut tile[..t1 - t0];
+                let erows = &mut etile[..(t1 - t0) * d];
+                tok_emb.split_to(t0 * d, t1 * d).dequant_range_into(erows);
+                for (lv, erow) in tile.iter_mut().zip(erows.chunks_exact(d)) {
+                    *lv = dot(hrow, erow);
+                }
+                let tile_max = tile.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                if tile_max > running_max {
+                    sum *= ((running_max - tile_max) as f64).exp();
+                    running_max = tile_max;
+                }
+                for &l in tile.iter() {
+                    sum += ((l - running_max) as f64).exp();
+                }
+                if gold_t >= t0 && gold_t < t1 {
+                    gold = tile[gold_t - t0];
+                }
+                t0 = t1;
+            }
+            let logz = running_max as f64 + sum.ln();
+            *o = (logz - gold as f64) as f32;
+        }
+    });
+}
+
+/// Quant twin of [`fused_argmax`] (ties resolve to the lowest token id):
+/// decodes the tied embedding one vocab tile at a time.
+pub fn fused_argmax_quant(
+    hf: &[f32],
+    tok_emb: &QuantView<'_>,
+    n: usize,
+    vocab: usize,
+    d: usize,
+    preds: &mut [i32],
+) {
+    debug_assert!(hf.len() == n * d && tok_emb.len() == vocab * d && preds.len() == n);
+    let ptr = SendPtr(preds.as_mut_ptr());
+    let grain = grain_for(2 * vocab * d, 2_000_000);
+    par_ranges(n, grain, |range| {
+        // SAFETY: par_ranges chunks are disjoint position ranges of `preds`.
+        let out = unsafe { ptr.slice_mut(range.start, range.end - range.start) };
+        let mut etile = vec![0.0f32; VOCAB_TILE.min(vocab) * d];
+        for (o, p) in out.iter_mut().zip(range) {
+            let hrow = &hf[p * d..(p + 1) * d];
+            let mut best = 0usize;
+            let mut best_val = f32::NEG_INFINITY;
+            let mut t0 = 0;
+            while t0 < vocab {
+                let t1 = (t0 + VOCAB_TILE).min(vocab);
+                let erows = &mut etile[..(t1 - t0) * d];
+                tok_emb.split_to(t0 * d, t1 * d).dequant_range_into(erows);
+                for (tt, erow) in erows.chunks_exact(d).enumerate() {
+                    let l = dot(hrow, erow);
+                    if l > best_val {
+                        best_val = l;
+                        best = t0 + tt;
+                    }
+                }
+                t0 = t1;
             }
             *o = best as i32;
         }
@@ -1702,5 +2068,181 @@ mod tests {
         )
         .unwrap();
         assert_eq!(&reused.xb[..n * d], &want[..]);
+    }
+
+    // -- quant twins: weights are block-quantized, activations stay f32;
+    // -- each kernel decodes (elementwise-exact) and runs the identical
+    // -- f32 inner loop, so `kernel_q(view, x)` is pinned BITWISE to
+    // -- `kernel_f32(view.dequant(), x)`.
+
+    use crate::runtime::native::quant::{self, QuantMode};
+
+    /// Quantize an f32 buffer and hand back owned (scales, codes) pairs
+    /// the tests build `QuantView`s over.
+    fn qpair(mode: QuantMode, src: &[f32]) -> (Vec<f32>, Vec<u8>) {
+        quant::quantize(mode, src).unwrap()
+    }
+
+    #[test]
+    fn quant_matmul_is_bitwise_equal_to_f32_twin_on_dequantized_weights() {
+        let mut rng = Rng::new(20);
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            for (n, din, dout) in
+                [(1usize, 3usize, 5usize), (7, 16, 9), (13, 65, 130), (64, 64, 256)]
+            {
+                let x = randv(&mut rng, n * din);
+                let (ws, wc) = qpair(mode, &randv(&mut rng, din * dout));
+                let (bs, bc) = qpair(mode, &randv(&mut rng, dout));
+                let w = QuantView::new(mode, &ws, &wc, din * dout);
+                let b = QuantView::new(mode, &bs, &bc, dout);
+                let mut got = vec![0.0f32; n * dout];
+                matmul_bias_into_quant(&x, &w, &b, &mut got, n, din, dout);
+                let mut want = vec![0.0f32; n * dout];
+                matmul_bias_into(&x, &w.dequant(), &b.dequant(), &mut want, n, din, dout);
+                assert!(
+                    got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{mode} n={n} din={din} dout={dout}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_layernorm_is_bitwise_equal_to_f32_twin() {
+        let mut rng = Rng::new(21);
+        let (n, d) = (9, 33);
+        let x = randv(&mut rng, n * d);
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let (gs, gc) = qpair(mode, &randv(&mut rng, d));
+            let (bs, bc) = qpair(mode, &randv(&mut rng, d));
+            let g = QuantView::new(mode, &gs, &gc, d);
+            let b = QuantView::new(mode, &bs, &bc, d);
+            let mut got = vec![0.0f32; n * d];
+            layernorm_into_quant(&x, &g, &b, &mut got, d);
+            let mut want = vec![0.0f32; n * d];
+            layernorm_into(&x, &g.dequant(), &b.dequant(), &mut want, d);
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{mode}"
+            );
+        }
+    }
+
+    #[test]
+    fn quant_fused_head_matches_f32_twin_on_dequantized_emb() {
+        let mut rng = Rng::new(22);
+        let (n, vocab, d) = (10usize, 130usize, 16usize);
+        let hf = randv(&mut rng, n * d);
+        let targets: Vec<i32> = (0..n).map(|i| (i * 13 % vocab) as i32).collect();
+        let mut mask = vec![1.0f32; n];
+        mask[3] = 0.0;
+        mask[7] = 0.0;
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let (es, ec) = qpair(mode, &randv(&mut rng, vocab * d));
+            let emb = QuantView::new(mode, &es, &ec, vocab * d);
+            let mut got = vec![0.0f32; n];
+            fused_masked_xent_quant(&hf, &emb, &targets, &mask, n, vocab, d, &mut got);
+            let mut want = vec![0.0f32; n];
+            fused_masked_xent(&hf, &emb.dequant(), &targets, &mask, n, vocab, d, &mut want);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mode} xent position {i}");
+            }
+            let mut pq = vec![0i32; n];
+            fused_argmax_quant(&hf, &emb, n, vocab, d, &mut pq);
+            let mut pf = vec![0i32; n];
+            fused_argmax(&hf, &emb.dequant(), n, vocab, d, &mut pf);
+            assert_eq!(pq, pf, "{mode} argmax");
+        }
+    }
+
+    #[test]
+    fn quant_forward_is_bitwise_equal_to_f32_forward_on_dequantized_units() {
+        let spec = ModelSpec::preset("opt-nano").unwrap();
+        let host = spec.init_units(5);
+        let (rows, seq) = (2usize, 8usize);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| 20 + (i % 90) as i32).collect();
+        let n = rows * seq;
+        let d = spec.d_model;
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let pairs: Vec<(Vec<f32>, Vec<u8>)> =
+                host.iter().map(|u| qpair(mode, u)).collect();
+            let views: Vec<QuantView<'_>> = pairs
+                .iter()
+                .zip(&host)
+                .map(|((s, c), u)| QuantView::new(mode, s, c, u.len()))
+                .collect();
+            let mut qs = ForwardScratch::new();
+            forward_hidden_quant_peft(
+                &spec, &views, PeftMode::Full, &[], &tokens, rows, seq, &mut qs,
+            )
+            .unwrap();
+
+            let deq: Vec<Vec<f32>> = views.iter().map(|v| v.dequant()).collect();
+            let deq_refs: Vec<&[f32]> = deq.iter().map(|u| u.as_slice()).collect();
+            let mut fs = ForwardScratch::new();
+            forward_hidden_peft(
+                &spec, &deq_refs, PeftMode::Full, &[], &tokens, rows, seq, &mut fs,
+            )
+            .unwrap();
+            assert!(
+                qs.x[..n * d]
+                    .iter()
+                    .zip(&fs.x[..n * d])
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{mode}: quant forward must equal f32 forward on dequantized units"
+            );
+        }
+    }
+
+    #[test]
+    fn quant_forward_with_f32_adapters_matches_dequantized_twin() {
+        // LoRA and prefix adapters stay f32 in the quant path; the mixed
+        // forward must still be bitwise-equal to the dequantized f32 run.
+        let spec = ModelSpec::preset("opt-nano").unwrap();
+        let host = spec.init_units(6);
+        let (rows, seq) = (2usize, 6usize);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| 30 + (i % 80) as i32).collect();
+        let n = rows * seq;
+        let d = spec.d_model;
+        let mut rng = Rng::new(23);
+        for peft in [PeftMode::Lora, PeftMode::Prefix] {
+            let unit_len = match peft {
+                PeftMode::Lora => crate::peft::lora_unit_len(d),
+                PeftMode::Prefix => crate::peft::prefix_unit_len(d),
+                PeftMode::Full => unreachable!(),
+            };
+            let adapters: Vec<Vec<f32>> = (0..spec.n_layers)
+                .map(|_| (0..unit_len).map(|_| rng.gaussian() as f32 * 0.1).collect())
+                .collect();
+            let adapter_refs: Vec<&[f32]> = adapters.iter().map(|u| u.as_slice()).collect();
+            for mode in [QuantMode::Int8, QuantMode::Int4] {
+                let pairs: Vec<(Vec<f32>, Vec<u8>)> =
+                    host.iter().map(|u| qpair(mode, u)).collect();
+                let views: Vec<QuantView<'_>> = pairs
+                    .iter()
+                    .zip(&host)
+                    .map(|((s, c), u)| QuantView::new(mode, s, c, u.len()))
+                    .collect();
+                let mut qs = ForwardScratch::new();
+                forward_hidden_quant_peft(
+                    &spec, &views, peft, &adapter_refs, &tokens, rows, seq, &mut qs,
+                )
+                .unwrap();
+                let deq: Vec<Vec<f32>> = views.iter().map(|v| v.dequant()).collect();
+                let deq_refs: Vec<&[f32]> = deq.iter().map(|u| u.as_slice()).collect();
+                let mut fs = ForwardScratch::new();
+                forward_hidden_peft(
+                    &spec, &deq_refs, peft, &adapter_refs, &tokens, rows, seq, &mut fs,
+                )
+                .unwrap();
+                assert!(
+                    qs.x[..n * d]
+                        .iter()
+                        .zip(&fs.x[..n * d])
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{mode} peft={peft}"
+                );
+            }
+        }
     }
 }

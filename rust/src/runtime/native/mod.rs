@@ -25,36 +25,54 @@
 //!   twin for the reduced-precision path.
 //! - [`bf16`] — software bfloat16 (u16 storage, round-to-nearest-even
 //!   narrowing, exact widening) behind the `precision=bf16` forward path.
-//! - [`forward`] — the forward families (f32 and bf16) plus the dense
+//! - [`quant`] — absmax block quantization (per-block f32 scale + packed
+//!   i8/i4 codes) behind the `precision=int8|int4` forward paths; every
+//!   quantized kernel is pinned *bitwise* to its f32 twin run on the
+//!   dequantized weights.
+//! - [`simd`] — runtime-dispatched AVX2 inner loops for the blocked
+//!   matmuls, the fused LM head dot products, and the i8 decode, each
+//!   bit-identical to its public scalar fallback (no FMA, fixed lane
+//!   structure).
+//! - [`forward`] — the forward families (f32, bf16, quant) plus the dense
 //!   reference (`forward_logits` / `position_xent`) the fused paths are
 //!   tested against.
 //! - [`backward`] — the recording forward + full backward for FO-Adam,
 //!   gradient-checked against `forward_loss` by central finite differences
 //!   (and cross-checked against the Python twin's `jax.value_and_grad`).
 //!
-//! # Precision (`precision = f32 | bf16`, env `LEZO_PRECISION`)
+//! # Precision (`precision = f32 | bf16 | int8 | int4`, env `LEZO_PRECISION`)
 //!
 //! Under [`Precision::Bf16`] the forward families execute over bf16
 //! *shadows* of the unit buffers — half the *streamed* bytes in every
 //! bandwidth-bound kernel (the regime the ZO literature measures at 13B+
 //! scale); the shadows cost ~0.5x extra resident parameter memory next to
 //! the f32 masters, which is the price of keeping the trainable state
-//! exact. The f32 masters stay
+//! exact. Under [`Precision::Int8`] / [`Precision::Int4`] the shadows are
+//! instead absmax block-quantized ([`quant`]): per-64-element f32 scale
+//! plus packed integer codes, ~0.27x / ~0.14x of the f32 streamed bytes.
+//! Activations, PEFT adapters, and attention scores stay f32 in every
+//! mode. The f32 masters stay
 //! authoritative: every ZO sweep mutates f32 exactly as in f32 mode, so
 //! the Philox regeneration invariant and the perturb/flip/restore bitwise
 //! round-trip are untouched, and the trainable state is bit-identical
 //! between precision modes given identical update coefficients. The
 //! in-place axpy kernels *invalidate* the shadow of the unit they touch (a
-//! flag store); the next forward re-casts stale shadows only — under
-//! LeZO's layer-wise sparsity the per-step re-quantization cost is
-//! proportional to the active layer set, compounding the structural
-//! saving. PEFT adapter units are skinny and stay f32 end to end.
+//! flag store); the next forward re-casts (or re-quantizes) stale shadows
+//! only — under LeZO's layer-wise sparsity the per-step re-quantization
+//! cost is proportional to the active layer set, compounding the
+//! structural saving. PEFT adapter units are skinny and stay f32 end to
+//! end. Shadows never reach a checkpoint: save/resume serializes the f32
+//! masters, and the first forward after resume rebuilds the shadows. A
+//! non-finite master value is a hard error at quantization time, naming
+//! the unit and flat index.
 
 pub mod backward;
 pub mod bf16;
 pub mod forward;
 pub mod kernels;
 pub mod parallel;
+pub mod quant;
+pub mod simd;
 
 use crate::data::batch::Batch;
 use crate::model::spec::ModelSpec;
@@ -67,18 +85,20 @@ use std::cell::{Ref, RefCell};
 /// across machines; override with the `checkpoint` config key).
 pub const NATIVE_INIT_SEED: u64 = 0;
 
-/// One native unit buffer: the authoritative f32 master plus an optional
-/// cached bf16 *shadow* used by the `precision=bf16` forward path.
+/// One native unit buffer: the authoritative f32 master plus optional
+/// cached reduced-precision *shadows* — bf16 bits for `precision=bf16`,
+/// absmax block-quantized scales+codes for `precision=int8|int4`.
 ///
 /// The master is what the ZO sweeps mutate — perturb/flip/restore/update
-/// are f32 bit-for-bit regardless of the forward precision. The shadow is
-/// a lazily (re-)cast bf16 copy: mutation through [`NativeBuf::make_mut`]
-/// only marks it stale, and the next bf16 forward re-casts exactly the
-/// stale units. Reads go through [`std::ops::Deref`] (`&buf[..]` is the
-/// master).
+/// are f32 bit-for-bit regardless of the forward precision. A shadow is
+/// a lazily (re-)built reduced copy: mutation through
+/// [`NativeBuf::make_mut`] only marks it stale, and the next
+/// reduced-precision forward rebuilds exactly the stale units. Reads go
+/// through [`std::ops::Deref`] (`&buf[..]` is the master).
 pub struct NativeBuf {
     data: Vec<f32>,
     shadow: RefCell<Option<Bf16Shadow>>,
+    qshadow: RefCell<Option<QuantShadow>>,
 }
 
 struct Bf16Shadow {
@@ -86,9 +106,27 @@ struct Bf16Shadow {
     fresh: bool,
 }
 
+/// Block-quantized shadow: per-[`quant::QBLOCK`] f32 scales plus packed
+/// integer codes (one byte per code for int8, two codes per byte for
+/// int4). `fresh` mirrors the bf16 flag; a mode switch (int8 <-> int4)
+/// rebuilds from scratch.
+struct QuantShadow {
+    mode: quant::QuantMode,
+    len: usize,
+    scales: Vec<f32>,
+    codes: Vec<u8>,
+    fresh: bool,
+}
+
+impl QuantShadow {
+    fn view(&self) -> quant::QuantView<'_> {
+        quant::QuantView::new(self.mode, &self.scales, &self.codes, self.len)
+    }
+}
+
 impl NativeBuf {
     fn new(data: Vec<f32>) -> NativeBuf {
-        NativeBuf { data, shadow: RefCell::new(None) }
+        NativeBuf { data, shadow: RefCell::new(None), qshadow: RefCell::new(None) }
     }
 
     /// The f32 master.
@@ -96,12 +134,16 @@ impl NativeBuf {
         &self.data
     }
 
-    /// Mutable access to the master. Conservatively marks the shadow stale
-    /// (a flag store — the re-cast happens lazily at the next bf16
-    /// forward, and only for units that were actually touched).
+    /// Mutable access to the master. Conservatively marks every shadow
+    /// stale (a flag store — the re-cast / re-quantization happens lazily
+    /// at the next reduced-precision forward, and only for units that
+    /// were actually touched).
     pub fn make_mut(&mut self) -> &mut [f32] {
         if let Some(s) = self.shadow.get_mut() {
             s.fresh = false;
+        }
+        if let Some(q) = self.qshadow.get_mut() {
+            q.fresh = false;
         }
         &mut self.data
     }
@@ -138,6 +180,55 @@ impl NativeBuf {
     /// counts as stale.
     pub fn shadow_is_fresh(&self) -> bool {
         self.shadow.borrow().as_ref().map_or(false, |s| s.fresh)
+    }
+
+    /// Quantize (or re-quantize) the quant shadow if it is missing, stale,
+    /// or was built for a different mode. Fallible: a non-finite master
+    /// value is a hard error (the shadow stays stale).
+    fn refresh_quant_shadow(&self, mode: quant::QuantMode) -> Result<()> {
+        let n = self.data.len();
+        let mut guard = self.qshadow.borrow_mut();
+        let sh = guard.get_or_insert_with(|| QuantShadow {
+            mode,
+            len: n,
+            scales: vec![0.0; n.div_ceil(quant::QBLOCK)],
+            codes: vec![0; mode.code_bytes(n)],
+            fresh: false,
+        });
+        if sh.mode != mode || sh.len != n {
+            sh.mode = mode;
+            sh.len = n;
+            sh.scales.clear();
+            sh.scales.resize(n.div_ceil(quant::QBLOCK), 0.0);
+            sh.codes.clear();
+            sh.codes.resize(mode.code_bytes(n), 0);
+            sh.fresh = false;
+        }
+        if !sh.fresh {
+            quant::quantize_into(mode, &self.data, &mut sh.scales, &mut sh.codes)?;
+            sh.fresh = true;
+        }
+        Ok(())
+    }
+
+    /// Borrow the quant shadow for `mode`, refreshing it first if stale.
+    fn quant_shadow(&self, mode: quant::QuantMode) -> Result<Ref<'_, QuantShadow>> {
+        self.refresh_quant_shadow(mode)?;
+        Ok(Ref::map(self.qshadow.borrow(), |s| s.as_ref().unwrap()))
+    }
+
+    /// A copy of the (refreshed) quant shadow's `(scales, codes)` —
+    /// introspection for the shadow-invalidation tests.
+    pub fn quant_shadow_parts(&self, mode: quant::QuantMode) -> Result<(Vec<f32>, Vec<u8>)> {
+        let sh = self.quant_shadow(mode)?;
+        Ok((sh.scales.clone(), sh.codes.clone()))
+    }
+
+    /// Whether the cached quant shadow is fresh w.r.t. the master (i.e.
+    /// the next quantized forward would *not* re-quantize this unit). A
+    /// missing shadow counts as stale.
+    pub fn quant_shadow_is_fresh(&self) -> bool {
+        self.qshadow.borrow().as_ref().map_or(false, |s| s.fresh)
     }
 }
 
@@ -302,6 +393,28 @@ impl NativeBackend {
             units[n_base..].iter().map(|u| u.data()).collect(),
         ))
     }
+
+    /// Quantized twin of [`NativeBackend::split_units`]: base units as
+    /// (refreshed) block-quantized shadow borrows, adapter units as f32
+    /// masters. Fallible — a non-finite master is a hard error naming the
+    /// unit that failed to quantize.
+    #[allow(clippy::type_complexity)]
+    fn split_units_quant<'a>(
+        &self,
+        peft: PeftMode,
+        mode: quant::QuantMode,
+        units: &[&'a NativeBuf],
+    ) -> Result<(Vec<Ref<'a, QuantShadow>>, Vec<&'a [f32]>)> {
+        let n_base = self.base_unit_count(peft, units.len())?;
+        let mut shadows = Vec::with_capacity(n_base);
+        for (k, u) in units[..n_base].iter().enumerate() {
+            let sh = u
+                .quant_shadow(mode)
+                .with_context(|| format!("quantizing unit {k} for the {mode} forward"))?;
+            shadows.push(sh);
+        }
+        Ok((shadows, units[n_base..].iter().map(|u| u.data()).collect()))
+    }
 }
 
 impl Backend for NativeBackend {
@@ -358,8 +471,8 @@ impl Backend for NativeBackend {
             "zo_axpy_inplace: unit has {} elements, expected {len}",
             unit.len()
         );
-        // make_mut marks this unit's bf16 shadow stale — the only shadows
-        // re-cast later are the units a sweep actually touched
+        // make_mut marks this unit's shadows (bf16 and quant) stale — the
+        // only shadows rebuilt later are the units a sweep actually touched
         kernels::axpy_gauss_inplace(unit.make_mut(), seed as u32, coeff);
         Ok(())
     }
@@ -418,6 +531,24 @@ impl Backend for NativeBackend {
                     &mut self.scratch.borrow_mut(),
                 )
             }
+            Precision::Int8 | Precision::Int4 => {
+                let mode = quant::QuantMode::from_precision(self.precision).unwrap();
+                let (shadows, adapters) = self.split_units_quant(peft, mode, units)?;
+                let views: Vec<quant::QuantView<'_>> =
+                    shadows.iter().map(|g| g.view()).collect();
+                forward::mean_loss_quant_peft(
+                    &self.spec,
+                    &views,
+                    peft,
+                    &adapters,
+                    &batch.tokens,
+                    &batch.targets,
+                    &batch.mask,
+                    batch.rows,
+                    batch.seq,
+                    &mut self.scratch.borrow_mut(),
+                )
+            }
         }
     }
 
@@ -459,6 +590,24 @@ impl Backend for NativeBackend {
                     &mut self.scratch.borrow_mut(),
                 )
             }
+            Precision::Int8 | Precision::Int4 => {
+                let mode = quant::QuantMode::from_precision(self.precision).unwrap();
+                let (shadows, adapters) = self.split_units_quant(peft, mode, units)?;
+                let views: Vec<quant::QuantView<'_>> =
+                    shadows.iter().map(|g| g.view()).collect();
+                forward::example_losses_quant_peft(
+                    &self.spec,
+                    &views,
+                    peft,
+                    &adapters,
+                    &batch.tokens,
+                    &batch.targets,
+                    &batch.mask,
+                    batch.rows,
+                    batch.seq,
+                    &mut self.scratch.borrow_mut(),
+                )
+            }
         }
     }
 
@@ -483,6 +632,22 @@ impl Backend for NativeBackend {
                 forward::predict_bf16_peft(
                     &self.spec,
                     &base,
+                    peft,
+                    &adapters,
+                    &batch.tokens,
+                    batch.rows,
+                    batch.seq,
+                    &mut self.scratch.borrow_mut(),
+                )
+            }
+            Precision::Int8 | Precision::Int4 => {
+                let mode = quant::QuantMode::from_precision(self.precision).unwrap();
+                let (shadows, adapters) = self.split_units_quant(peft, mode, units)?;
+                let views: Vec<quant::QuantView<'_>> =
+                    shadows.iter().map(|g| g.view()).collect();
+                forward::predict_quant_peft(
+                    &self.spec,
+                    &views,
                     peft,
                     &adapters,
                     &batch.tokens,
@@ -548,7 +713,8 @@ impl Backend for NativeBackend {
         self.precision
     }
 
-    /// Both precisions run natively (f32 kernels and their bf16 twins).
+    /// Every precision runs natively (f32 kernels plus their bf16 and
+    /// block-quantized twins).
     fn supports_precision(&self, _precision: Precision) -> bool {
         true
     }
@@ -564,6 +730,10 @@ mod tests {
 
     fn bf16_backend() -> NativeBackend {
         NativeBackend::preset("opt-nano").unwrap().with_precision(Precision::Bf16)
+    }
+
+    fn quant_backend(precision: Precision) -> NativeBackend {
+        NativeBackend::preset("opt-nano").unwrap().with_precision(precision)
     }
 
     #[test]
@@ -810,6 +980,132 @@ mod tests {
         assert_eq!(b.precision(), Precision::F32);
         assert!(b.supports_precision(Precision::F32));
         assert!(b.supports_precision(Precision::Bf16));
+        assert!(b.supports_precision(Precision::Int8));
+        assert!(b.supports_precision(Precision::Int4));
+    }
+
+    #[test]
+    fn quant_forward_families_run_and_track_f32() {
+        // dispatch sanity for all three quant families + the calibrated
+        // loss tolerance vs the f32 masters. The *bitwise* pin (quant
+        // family == f32 family on the dequantized units) lives in the
+        // forward/kernels suites and rust/tests/kernel_twins.rs; here the
+        // bound is the quantization error itself: int8 codes carry ~11x
+        // more resolution than int4 (qmax 127 vs 7), hence the per-mode
+        // tolerances (observed rel err ~2e-4 int8 / ~2e-2 int4).
+        let f = backend();
+        for (precision, tol) in [(Precision::Int8, 1e-2f32), (Precision::Int4, 2e-1f32)] {
+            let b = quant_backend(precision);
+            assert_eq!(b.precision(), precision);
+            let host = b.initial_params("").unwrap().0;
+            let bufs: Vec<NativeBuf> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+            let units: Vec<&NativeBuf> = bufs.iter().collect();
+            let prepared = lm_prepared(&b, 16);
+            let loss_q = b.forward_loss(PeftMode::Full, &units, &prepared).unwrap();
+            let loss_f = f.forward_loss(PeftMode::Full, &units, &prepared).unwrap();
+            let rel = (loss_q - loss_f).abs() / loss_f.abs().max(1e-6);
+            assert!(rel <= tol, "{precision} {loss_q} vs f32 {loss_f} (rel {rel})");
+            let per = b.example_losses(PeftMode::Full, &units, &prepared).unwrap();
+            assert_eq!(per.len(), b.spec().train_batch);
+            assert!(per.iter().all(|l| l.is_finite()), "{precision}");
+            let preds = b.predict(PeftMode::Full, &units, &prepared).unwrap();
+            assert_eq!(preds.len(), b.spec().train_batch * 16);
+            assert!(preds.iter().all(|&p| (0..b.spec().vocab as i32).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn quant_peft_forward_runs_with_f32_adapters() {
+        for precision in [Precision::Int8, Precision::Int4] {
+            let b = quant_backend(precision);
+            let host = b.initial_params("").unwrap().0;
+            let bufs: Vec<NativeBuf> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+            let batch = Batch::lm_batch(&[vec![1, 2, 3]], 1, 16).unwrap();
+            let prepared = b.prepare_batch(&batch).unwrap();
+            for mode in [PeftMode::Lora, PeftMode::Prefix] {
+                let spec = b.spec();
+                let adapters = crate::peft::init_peft_units_nonzero_b(
+                    mode,
+                    spec.n_layers,
+                    spec.d_model,
+                    3,
+                );
+                let adapter_bufs: Vec<NativeBuf> =
+                    adapters.iter().map(|u| b.upload(u).unwrap()).collect();
+                let mut args: Vec<&NativeBuf> = bufs.iter().collect();
+                args.extend(adapter_bufs.iter());
+                let loss = b.forward_loss(mode, &args, &prepared).unwrap();
+                assert!(loss.is_finite() && loss > 0.0, "{precision}/{mode}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_shadow_invalidation_tracks_touched_units_only() {
+        let b = quant_backend(Precision::Int8);
+        let host = b.initial_params("").unwrap().0;
+        let mut bufs: Vec<NativeBuf> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+        // a forward quantizes every base unit's shadow
+        let prepared = lm_prepared(&b, 16);
+        let units: Vec<&NativeBuf> = bufs.iter().collect();
+        b.forward_loss(PeftMode::Full, &units, &prepared).unwrap();
+        assert!(
+            bufs.iter().all(|u| u.quant_shadow_is_fresh()),
+            "forward must quantize all shadows"
+        );
+        let mode = quant::QuantMode::Int8;
+        let before: Vec<(Vec<f32>, Vec<u8>)> =
+            bufs.iter().map(|u| u.quant_shadow_parts(mode).unwrap()).collect();
+
+        // touch only unit 1 (in-place sweep): its shadow goes stale, every
+        // other unit's shadow must stay bit-unchanged without a re-quant
+        let len = bufs[1].len();
+        b.zo_axpy_inplace(&mut bufs[1], len, 9, 1e-2).unwrap();
+        assert!(!bufs[1].quant_shadow_is_fresh(), "touched unit must be invalidated");
+        for (k, u) in bufs.iter().enumerate() {
+            if k != 1 {
+                assert!(u.quant_shadow_is_fresh(), "unit {k} must stay fresh");
+            }
+        }
+        // the refreshed shadow equals a fresh full re-quantization of the
+        // master; untouched units are bit-unchanged
+        let requant = bufs[1].quant_shadow_parts(mode).unwrap();
+        let (exp_scales, exp_codes) = quant::quantize(mode, bufs[1].data()).unwrap();
+        assert_eq!(
+            requant.0.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            exp_scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(requant.1, exp_codes);
+        assert_ne!(requant.1, before[1].1, "perturbation must change the codes");
+        for (k, u) in bufs.iter().enumerate() {
+            if k != 1 {
+                let now = u.quant_shadow_parts(mode).unwrap();
+                assert_eq!(now.1, before[k].1, "unit {k} codes must be bit-unchanged");
+            }
+        }
+        // a mode switch on the same buffer rebuilds rather than reuses
+        let (s4, c4) = bufs[0].quant_shadow_parts(quant::QuantMode::Int4).unwrap();
+        let (e4s, e4c) = quant::quantize(quant::QuantMode::Int4, bufs[0].data()).unwrap();
+        assert_eq!(
+            s4.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            e4s.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(c4, e4c);
+    }
+
+    #[test]
+    fn non_finite_master_is_a_hard_error_naming_the_unit() {
+        let b = quant_backend(Precision::Int4);
+        let host = b.initial_params("").unwrap().0;
+        let mut bufs: Vec<NativeBuf> = host.iter().map(|u| b.upload(u).unwrap()).collect();
+        bufs[2].make_mut()[7] = f32::NAN;
+        let units: Vec<&NativeBuf> = bufs.iter().collect();
+        let prepared = lm_prepared(&b, 16);
+        let err = b.forward_loss(PeftMode::Full, &units, &prepared).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unit 2"), "{msg}");
+        assert!(msg.contains("non-finite"), "{msg}");
+        assert!(msg.contains("flat index 7"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,625 @@
+//! Block-quantized integer weight shadows (`precision = int8 | int4`).
+//!
+//! # Layout
+//!
+//! A unit's flat f32 buffer is split into fixed blocks of [`QBLOCK`] = 64
+//! elements (the last block may be partial). Each block stores one f32
+//! **scale** (`absmax / qmax`, where `qmax` is 127 for int8 and 7 for
+//! int4) plus one signed integer **code** per element:
+//!
+//! - `int8`: one code byte per element (`i8` two's complement);
+//! - `int4`: two codes per byte — the element at an **even** flat index
+//!   occupies the **low** nibble, its odd successor the high nibble, each
+//!   a signed two's-complement nibble in `[-7, 7]`. `QBLOCK` is even, so
+//!   block boundaries are always byte-aligned (32 bytes per full block);
+//!   an odd-length buffer leaves the final high nibble zero.
+//!
+//! The decoded weight is `code as f32 * scale`. Codes are produced by
+//! `round(x / scale)` (f32 division, round half away from zero — Rust's
+//! `f32::round`) clamped to `[-qmax, qmax]`; an all-zero block stores
+//! `scale = 0` and zero codes. Non-finite inputs are a **hard error**
+//! naming the first offending flat index — the caller (the shadow
+//! lifecycle in `runtime/native/mod.rs`) attaches the unit name.
+//!
+//! Per element this streams `1 + 4/QBLOCK = 1.0625` bytes (int8) or
+//! `0.5 + 4/QBLOCK = 0.5625` bytes (int4) instead of 4 — the modeled
+//! bandwidth cut that BENCH_native.json's per-precision rows audit.
+//!
+//! # Exactness contract
+//!
+//! Decoding is deterministic and elementwise: [`QuantView::get`], the
+//! bulk [`QuantView::dequant_range_into`], and the SIMD int8 fast path
+//! ([`super::simd::decode_i8`]) all produce bitwise-identical values for
+//! a given (codes, scale). The quantized kernels in `super::kernels`
+//! decode a panel and then run the *same* f32 inner loops as the f32
+//! kernels, so `kernel_q(view, x) == kernel_f32(view.dequant(), x)`
+//! holds bitwise by construction — that is the pin `kernel_twins.rs`
+//! sweeps.
+//!
+//! Quantization itself is chunk-parallel over blocks through the same
+//! fixed partitioning as every other native kernel (bit-identical at any
+//! thread count); the property tests below were validated against a
+//! numpy twin (see the KAT table) with the achieved error margins
+//! recorded inline.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
+
+use super::parallel::{par_ranges, SendPtr};
+use super::simd;
+use crate::runtime::backend::Precision;
+
+/// Elements per quantization block. Even (so int4 blocks stay
+/// byte-aligned) and small enough that one outlier only damages 64
+/// weights' worth of resolution.
+pub const QBLOCK: usize = 64;
+
+/// Which integer grid a shadow is quantized onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    Int8,
+    Int4,
+}
+
+impl QuantMode {
+    /// The largest code magnitude on this grid.
+    #[inline]
+    pub fn qmax(self) -> f32 {
+        match self {
+            QuantMode::Int8 => 127.0,
+            QuantMode::Int4 => 7.0,
+        }
+    }
+
+    /// Packed code bytes needed for `n` elements.
+    #[inline]
+    pub fn code_bytes(self, n: usize) -> usize {
+        match self {
+            QuantMode::Int8 => n,
+            QuantMode::Int4 => n.div_ceil(2),
+        }
+    }
+
+    /// Modeled streamed bytes per weight element (codes + amortized
+    /// per-block scale) — the factor BENCH_native.json's byte model uses.
+    #[inline]
+    pub fn bytes_per_element(self) -> f64 {
+        let code_bits = match self {
+            QuantMode::Int8 => 8.0,
+            QuantMode::Int4 => 4.0,
+        };
+        code_bits / 8.0 + 4.0 / QBLOCK as f64
+    }
+
+    /// The quantized mode for a `Precision`, if it is one.
+    #[inline]
+    pub fn from_precision(p: Precision) -> Option<QuantMode> {
+        match p {
+            Precision::Int8 => Some(QuantMode::Int8),
+            Precision::Int4 => Some(QuantMode::Int4),
+            Precision::F32 | Precision::Bf16 => None,
+        }
+    }
+}
+
+impl std::fmt::Display for QuantMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            QuantMode::Int8 => "int8",
+            QuantMode::Int4 => "int4",
+        })
+    }
+}
+
+/// Sign-extend a 4-bit two's-complement nibble to i32.
+#[inline(always)]
+fn sext4(n: u8) -> i32 {
+    ((n & 0xF) as i32 ^ 8) - 8
+}
+
+/// Quantize `src` into caller-owned `scales` (`src.len().div_ceil(QBLOCK)`
+/// entries) and `codes` (`mode.code_bytes(src.len())` bytes). Chunk-
+/// parallel over blocks; bit-identical at any thread count. Errors on the
+/// first non-finite input, naming its flat index.
+pub fn quantize_into(
+    mode: QuantMode,
+    src: &[f32],
+    scales: &mut [f32],
+    codes: &mut [u8],
+) -> Result<()> {
+    let n = src.len();
+    let nb = n.div_ceil(QBLOCK);
+    assert_eq!(scales.len(), nb, "scale buffer sized for {nb} blocks");
+    assert_eq!(codes.len(), mode.code_bytes(n), "code buffer size");
+    let qmax = mode.qmax();
+    // First non-finite flat index across all parallel chunks (usize::MAX
+    // = none seen). fetch_min keeps the smallest, so the error is
+    // deterministic regardless of thread schedule.
+    let first_bad = AtomicUsize::new(usize::MAX);
+    let scales_ptr = SendPtr(scales.as_mut_ptr());
+    let codes_ptr = SendPtr(codes.as_mut_ptr());
+    par_ranges(nb, 1024, |r| {
+        // SAFETY: block ranges are disjoint; each block owns scale `b`
+        // and (because QBLOCK is even) a disjoint byte range of `codes`.
+        let out_scales = unsafe { scales_ptr.slice_mut(r.start, r.end - r.start) };
+        for (bi, b) in (r.start..r.end).enumerate() {
+            let lo = b * QBLOCK;
+            let hi = (lo + QBLOCK).min(n);
+            let blk = &src[lo..hi];
+            let mut absmax = 0.0f32;
+            let mut bad = usize::MAX;
+            for (i, &v) in blk.iter().enumerate() {
+                if !v.is_finite() {
+                    bad = bad.min(lo + i);
+                } else {
+                    absmax = absmax.max(v.abs());
+                }
+            }
+            if bad != usize::MAX {
+                first_bad.fetch_min(bad, Ordering::Relaxed);
+                continue;
+            }
+            let scale = absmax / qmax;
+            out_scales[bi] = scale;
+            match mode {
+                QuantMode::Int8 => {
+                    let out = unsafe { codes_ptr.slice_mut(lo, hi - lo) };
+                    if scale == 0.0 {
+                        out.fill(0);
+                    } else {
+                        for (o, &v) in out.iter_mut().zip(blk) {
+                            let c = (v / scale).round().clamp(-qmax, qmax) as i32;
+                            *o = c as i8 as u8;
+                        }
+                    }
+                }
+                QuantMode::Int4 => {
+                    let byte_lo = lo / 2;
+                    let byte_hi = hi.div_ceil(2);
+                    let out = unsafe { codes_ptr.slice_mut(byte_lo, byte_hi - byte_lo) };
+                    if scale == 0.0 {
+                        out.fill(0);
+                    } else {
+                        for (j, o) in out.iter_mut().enumerate() {
+                            let e = 2 * j; // even offset within the block
+                            let clo = {
+                                let v = blk[e];
+                                (v / scale).round().clamp(-qmax, qmax) as i32
+                            };
+                            let chi = if e + 1 < blk.len() {
+                                let v = blk[e + 1];
+                                (v / scale).round().clamp(-qmax, qmax) as i32
+                            } else {
+                                0
+                            };
+                            *o = ((clo as u8) & 0xF) | (((chi as u8) & 0xF) << 4);
+                        }
+                    }
+                }
+            }
+        }
+    });
+    let bad = first_bad.load(Ordering::Relaxed);
+    if bad != usize::MAX {
+        bail!(
+            "non-finite weight {} at flat index {bad} cannot be {mode}-quantized",
+            src[bad]
+        );
+    }
+    Ok(())
+}
+
+/// Convenience: quantize into freshly allocated buffers.
+pub fn quantize(mode: QuantMode, src: &[f32]) -> Result<(Vec<f32>, Vec<u8>)> {
+    let mut scales = vec![0.0f32; src.len().div_ceil(QBLOCK)];
+    let mut codes = vec![0u8; mode.code_bytes(src.len())];
+    quantize_into(mode, src, &mut scales, &mut codes)?;
+    Ok((scales, codes))
+}
+
+/// A read-only window onto a quantized unit: the unit's full per-block
+/// `scales` and packed `codes` plus an element `offset`/`len`, so kernels
+/// can split a unit into sub-tensors (weight panels, bias rows, embedding
+/// rows) without re-aligning anything — block membership is always
+/// computed from the *flat* unit index.
+#[derive(Clone, Copy)]
+pub struct QuantView<'a> {
+    mode: QuantMode,
+    offset: usize,
+    len: usize,
+    scales: &'a [f32],
+    codes: &'a [u8],
+}
+
+impl<'a> QuantView<'a> {
+    /// View over a whole unit of `len` elements.
+    pub fn new(mode: QuantMode, scales: &'a [f32], codes: &'a [u8], len: usize) -> Self {
+        debug_assert_eq!(scales.len(), len.div_ceil(QBLOCK));
+        debug_assert_eq!(codes.len(), mode.code_bytes(len));
+        QuantView { mode, offset: 0, len, scales, codes }
+    }
+
+    #[inline]
+    pub fn mode(&self) -> QuantMode {
+        self.mode
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Sub-view over elements `[start, end)` of this view (offsets are
+    /// relative, like slicing).
+    #[inline]
+    pub fn split_to(&self, start: usize, end: usize) -> QuantView<'a> {
+        debug_assert!(start <= end && end <= self.len);
+        QuantView {
+            mode: self.mode,
+            offset: self.offset + start,
+            len: end - start,
+            scales: self.scales,
+            codes: self.codes,
+        }
+    }
+
+    /// The integer code of element `i` (tests and the scalar decode).
+    #[inline]
+    pub fn code_at(&self, i: usize) -> i32 {
+        debug_assert!(i < self.len);
+        let flat = self.offset + i;
+        match self.mode {
+            QuantMode::Int8 => self.codes[flat] as i8 as i32,
+            QuantMode::Int4 => {
+                let byte = self.codes[flat / 2];
+                if flat % 2 == 0 {
+                    sext4(byte)
+                } else {
+                    sext4(byte >> 4)
+                }
+            }
+        }
+    }
+
+    /// Decode element `i`: `code * scale` (one exact int→f32 conversion,
+    /// one correctly-rounded multiply).
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        let flat = self.offset + i;
+        self.code_at(i) as f32 * self.scales[flat / QBLOCK]
+    }
+
+    /// Bulk-decode this view into `dst` (`dst.len() == self.len()`).
+    /// int8 runs the SIMD block decoder over each block-run; int4 decodes
+    /// scalar (nibble unpack dominates; documented trade-off). Bitwise
+    /// identical to calling [`get`](Self::get) per element.
+    pub fn dequant_range_into(&self, dst: &mut [f32]) {
+        debug_assert_eq!(dst.len(), self.len);
+        match self.mode {
+            QuantMode::Int8 => {
+                let mut i = 0;
+                while i < self.len {
+                    let flat = self.offset + i;
+                    let block = flat / QBLOCK;
+                    // run = elements of this view remaining in `block`
+                    let run = ((block + 1) * QBLOCK - flat).min(self.len - i);
+                    simd::decode_i8(
+                        &self.codes[flat..flat + run],
+                        self.scales[block],
+                        &mut dst[i..i + run],
+                    );
+                    i += run;
+                }
+            }
+            QuantMode::Int4 => {
+                for (i, o) in dst.iter_mut().enumerate() {
+                    *o = self.get(i);
+                }
+            }
+        }
+    }
+
+    /// Convenience: decode into a fresh Vec (tests, twin references).
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        self.dequant_range_into(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view<'a>(mode: QuantMode, scales: &'a [f32], codes: &'a [u8], n: usize) -> QuantView<'a> {
+        QuantView::new(mode, scales, codes, n)
+    }
+
+    /// Exhaustive code round-trip: with a power-of-two scale pinned by a
+    /// ±qmax element in every block, `quantize(c * s)` must recover every
+    /// code `c` exactly, and dequantization reproduces the input
+    /// **bitwise** (margin: 0.0 — every `c * s` is representable).
+    #[test]
+    fn exhaustive_i8_code_round_trip() {
+        let s = 0.125f32;
+        // interleave [c*s, 127*s] so each QBLOCK-block contains an
+        // absmax of exactly 127*s => derived scale == s in every block
+        let mut src = Vec::new();
+        let mut expect = Vec::new();
+        for c in -127i32..=127 {
+            src.push(c as f32 * s);
+            src.push(127.0 * s);
+            expect.push(c);
+            expect.push(127);
+        }
+        let (scales, codes) = quantize(QuantMode::Int8, &src).unwrap();
+        for sc in &scales {
+            assert_eq!(sc.to_bits(), s.to_bits(), "derived scale must be exact");
+        }
+        let v = view(QuantMode::Int8, &scales, &codes, src.len());
+        for (i, &c) in expect.iter().enumerate() {
+            assert_eq!(v.code_at(i), c, "code at {i}");
+        }
+        let deq = v.dequant();
+        for (i, (&d, &x)) in deq.iter().zip(&src).enumerate() {
+            assert_eq!(d.to_bits(), x.to_bits(), "round-trip at {i}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_i4_code_round_trip() {
+        let s = 0.25f32;
+        let mut src = Vec::new();
+        let mut expect = Vec::new();
+        for c in -7i32..=7 {
+            src.push(c as f32 * s);
+            src.push(7.0 * s);
+            expect.push(c);
+            expect.push(7);
+        }
+        let (scales, codes) = quantize(QuantMode::Int4, &src).unwrap();
+        for sc in &scales {
+            assert_eq!(sc.to_bits(), s.to_bits(), "derived scale must be exact");
+        }
+        let v = view(QuantMode::Int4, &scales, &codes, src.len());
+        for (i, &c) in expect.iter().enumerate() {
+            assert_eq!(v.code_at(i), c, "code at {i}");
+        }
+        let deq = v.dequant();
+        for (i, (&d, &x)) in deq.iter().zip(&src).enumerate() {
+            assert_eq!(d.to_bits(), x.to_bits(), "round-trip at {i}");
+        }
+    }
+
+    /// Partial tails, odd lengths, and views that start mid-block all
+    /// decode identically element-wise and in bulk.
+    #[test]
+    fn partial_blocks_and_offsets_decode_consistently() {
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            for n in [1usize, 2, 63, 64, 65, 127, 128, 129, 254] {
+                let src: Vec<f32> =
+                    (0..n).map(|i| ((i * 37 + 11) % 97) as f32 - 48.0).collect();
+                let (scales, codes) = quantize(mode, &src).unwrap();
+                let v = view(mode, &scales, &codes, n);
+                let bulk = v.dequant();
+                for i in 0..n {
+                    assert_eq!(bulk[i].to_bits(), v.get(i).to_bits(), "{mode} n={n} i={i}");
+                }
+                // mid-block sub-view (embedding-row shape)
+                if n > 3 {
+                    let sub = v.split_to(1, n - 1);
+                    let sub_bulk = sub.dequant();
+                    for i in 0..sub.len() {
+                        assert_eq!(sub_bulk[i].to_bits(), bulk[i + 1].to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    /// All-zero block: scale 0, codes 0, decodes to exact +0.0 — and a
+    /// zero block sandwiched between live blocks doesn't disturb them.
+    #[test]
+    fn all_zero_block_has_zero_scale_and_codes() {
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let mut src = vec![1.0f32; QBLOCK];
+            src.extend(std::iter::repeat(0.0f32).take(QBLOCK));
+            src.extend(std::iter::repeat(2.0f32).take(10));
+            let (scales, codes) = quantize(mode, &src).unwrap();
+            assert_eq!(scales.len(), 3);
+            assert_eq!(scales[1], 0.0);
+            assert!(scales[0] > 0.0 && scales[2] > 0.0);
+            let v = view(mode, &scales, &codes, src.len());
+            for i in QBLOCK..2 * QBLOCK {
+                assert_eq!(v.code_at(i), 0);
+                assert_eq!(v.get(i).to_bits(), 0.0f32.to_bits(), "exact +0.0");
+            }
+            for i in 2 * QBLOCK..src.len() {
+                assert_eq!(v.get(i), 2.0, "{mode}: live block after zero block");
+            }
+        }
+    }
+
+    /// Subnormal blocks must not error. When `absmax / qmax` underflows
+    /// to zero the whole block quantizes to zero — the error is bounded
+    /// by absmax itself (here ~1.4e-45, far below any weight that can
+    /// affect a forward), and that behavior is the documented edge.
+    #[test]
+    fn subnormal_block_quantizes_without_error() {
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        let small = f32::from_bits(300); // larger subnormal
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let src = vec![tiny, -tiny, 0.0, tiny];
+            let (scales, codes) = quantize(mode, &src).unwrap();
+            assert!(scales[0].is_finite());
+            let v = view(mode, &scales, &codes, src.len());
+            for i in 0..src.len() {
+                let d = v.get(i);
+                assert!(d.is_finite());
+                assert!((d - src[i]).abs() <= tiny, "margin bounded by absmax");
+            }
+            let src2 = vec![small, -small, small * 0.5];
+            let (scales2, codes2) = quantize(mode, &src2).unwrap();
+            let v2 = view(mode, &scales2, &codes2, src2.len());
+            for i in 0..src2.len() {
+                assert!(v2.get(i).is_finite());
+                assert!((v2.get(i) - src2[i]).abs() <= small);
+            }
+        }
+    }
+
+    /// NaN / inf hard-error naming the first offending flat index (the
+    /// backend wraps this with the unit name).
+    #[test]
+    fn non_finite_input_errors_with_flat_index() {
+        for (bad, tag) in [(f32::NAN, "NaN"), (f32::INFINITY, "inf"), (f32::NEG_INFINITY, "-inf")]
+        {
+            let mut src = vec![1.0f32; 100];
+            src[70] = bad;
+            src[90] = bad; // only the first is named
+            let err = quantize(QuantMode::Int8, &src).unwrap_err().to_string();
+            assert!(err.contains("flat index 70"), "{tag}: {err}");
+            assert!(err.contains("non-finite"), "{tag}: {err}");
+            let err4 = quantize(QuantMode::Int4, &src).unwrap_err().to_string();
+            assert!(err4.contains("flat index 70"), "{tag}: {err4}");
+        }
+    }
+
+    /// int4 nibble order is part of the format: codes [1, -2] pack to a
+    /// single byte 0xE1 (low nibble = even flat index), and an odd-length
+    /// buffer zeroes the dangling high nibble.
+    #[test]
+    fn int4_pack_nibble_order_and_odd_tail() {
+        // scale pinned to 1.0 by a 7.0 absmax element
+        let src = [1.0f32, -2.0, 7.0];
+        let (scales, codes) = quantize(QuantMode::Int4, &src).unwrap();
+        assert_eq!(scales[0], 1.0);
+        assert_eq!(codes.len(), 2);
+        assert_eq!(codes[0], 0xE1, "low nibble 1, high nibble -2 (0xE)");
+        assert_eq!(codes[1], 0x07, "odd tail: high nibble zero");
+        let v = view(QuantMode::Int4, &scales, &codes, 3);
+        assert_eq!(v.code_at(0), 1);
+        assert_eq!(v.code_at(1), -2);
+        assert_eq!(v.code_at(2), 7);
+        // sign extension across the whole nibble range
+        for n in 0..16u8 {
+            let expect = if n < 8 { n as i32 } else { n as i32 - 16 };
+            assert_eq!(sext4(n), expect);
+        }
+    }
+
+    /// Known-answer vectors generated by a numpy twin of this quantizer
+    /// (f32 arithmetic throughout; inputs screened so no code sits near a
+    /// rounding tie, making numpy's and Rust's rounding agree exactly).
+    /// Tuples: (input f32 bits, expected scale f32 bits, expected codes).
+    /// Achieved margins (recorded from the twin): int8 max |dequant - x|
+    /// = 8.71e-3 vs scale/2 = 8.88e-3; int4 2.35e-1 vs scale/2 = 2.37e-1.
+    #[test]
+    fn numpy_twin_kat() {
+        type Kat = (&'static [u32], &'static [u32], &'static [i32]);
+        const KAT_I8: &[Kat] = &[
+            (
+                &[
+                    0x3EF0E607, 0xBEAC587F, 0x3F791C77, 0x3FCECC83, 0xBF873339, 0x3F29B9EA,
+                    0xBF2B7251, 0x3E90C398, 0xBFF16078, 0xBF5B0BFA,
+                ],
+                &[0x3C734706],
+                &[32, -23, 66, 109, -71, 45, -45, 19, -127, -58],
+            ),
+            (
+                &[
+                    0xBE20DFE0, 0xBEB7D823, 0x3F8EB191, 0xBF482322, 0x3E4DE2CC, 0x3E5EB638,
+                    0xBE3801E8, 0x3D7E010D, 0xBDE92496, 0x3DFC3392, 0x3F8A3D52, 0x3BEAB06F,
+                    0x3F960F4E, 0xBE36651D, 0x3FE3CDE6, 0x3F9120A3, 0x3D8B8546, 0x3F97E385,
+                    0xBD955B0F, 0xBF5493AE, 0xBF854B8E, 0x3E306207, 0x3FD72209, 0xBF4272C4,
+                    0x3F31691A, 0xBE322C4B, 0x3F8D1F16, 0x3F94E64A, 0x3F5EA8B4, 0x3E8A408E,
+                    0x3D6779ED, 0x3FA39963, 0x400A8AB2, 0x3EDF0F01, 0xC0106B2D, 0xBE59DEA8,
+                    0x3E75652C, 0xBFBAF811, 0xBF1B13A5, 0xBF1B67B6, 0xBE359D83, 0xBF1CA5A3,
+                    0x3FA58D23, 0x3F892F62, 0xBF08DEC0, 0x3E5D2601, 0xBFB2F6F2, 0x3FD39BF0,
+                    0x3FE6880B, 0x3F9C8DC3, 0xBFEA53C2, 0x3E069E49, 0xBE921051, 0xBDDBCED8,
+                    0xBF358D5B, 0x3F6040BE, 0x3F886DA1, 0x3FA5D599, 0x3F284BB0, 0xBCAE08BD,
+                    0xBF8FCCF4, 0x3F05F798, 0xBF00B26A, 0x3E19C15B, 0xBE08AB98, 0x3F666D91,
+                    0x3E22BD75, 0xBF734854, 0x3F98513D, 0xBF792D0D,
+                ],
+                &[0x3C918E4A, 0x3C198446],
+                &[
+                    -9, -20, 63, -44, 11, 12, -10, 3, -6, 7, 61, 0, 66, -10, 100, 64, 4, 67,
+                    -4, -47, -59, 10, 95, -43, 39, -10, 62, 65, 49, 15, 3, 72, 122, 25, -127,
+                    -12, 13, -82, -34, -34, -10, -34, 73, 60, -30, 12, -79, 93, 101, 69, -103,
+                    7, -16, -6, -40, 49, 60, 73, 37, -1, -63, 29, -28, 8, -14, 96, 17, -101,
+                    127, -104,
+                ],
+            ),
+        ];
+        const KAT_I4: &[Kat] = &[
+            (
+                &[
+                    0x3D385BAD, 0x3F3D8B68, 0x3FB5B6C5, 0x3F1F878E, 0xBEAFAB63, 0x3F25ADC2,
+                    0xBF0D9090, 0x3E3F25E3, 0xBF468534, 0x3FF55A77,
+                ],
+                &[0x3E8C33B2],
+                &[0, 3, 5, 2, -1, 2, -2, 1, -3, 7],
+            ),
+            (
+                &[
+                    0xBF0B8697, 0x3F9A652E, 0x3FA54072, 0xBED12F2F, 0xBF399291, 0xBFE3B115,
+                    0xBF8FB0DA, 0xBE5198F3, 0x3FD1BECD, 0xBECAD759, 0xBF0B3363, 0x3F67A723,
+                    0x3C6BA863, 0x3DF7B514, 0xBEE4A069, 0x3F8214E3, 0x3F3562BB, 0x3DBD8FBF,
+                    0x3F725690, 0xBFB94AD8, 0xBF5854A5, 0x3EFB6AC1, 0x3E899140, 0xBD1079A0,
+                    0xBE6DFADA, 0x3EF16CF4, 0x3FB7A615, 0xBDFB04D1, 0xC0004581, 0x40540F76,
+                    0x3E6C6AB6, 0x3E620D93, 0xBF8BA274, 0x40001DA4, 0x3EB87F0D, 0xBE82F00B,
+                    0xC0146719, 0xBEE7A52F, 0xBF555107, 0x3F219F9A, 0x401C489F, 0xBFA44F8C,
+                    0x3FBBB194, 0x3FCCBAEF, 0xBE16F2D9, 0x3F8710EC, 0x3E0E8B69, 0xBECD9DE7,
+                    0x3F7F4161, 0x3F1303BE, 0xBEF9CAA6, 0xBD807F22, 0xBE5D0EB2, 0xBEED5EA8,
+                    0xBF12DBBF, 0xBFA25951, 0xBEE40A33, 0xBE00FBE8, 0xBFE2A954, 0xBE85E033,
+                    0x3F82CB67, 0x3F1142F0, 0xBF86B330, 0xBFB4349A, 0x3EFB12BA, 0xBF093603,
+                    0x3EB19562, 0x3E6C6BEA, 0x3F5CE384, 0xBFD2EAAA,
+                ],
+                &[0x3EF25AD0, 0x3E710C30],
+                &[
+                    -1, 3, 3, -1, -2, -4, -2, 0, 3, -1, -1, 2, 0, 0, -1, 2, 1, 0, 2, -3, -2,
+                    1, 1, 0, 0, 1, 3, 0, -4, 7, 0, 0, -2, 4, 1, -1, -5, -1, -2, 1, 5, -3, 3,
+                    3, 0, 2, 0, -1, 2, 1, -1, 0, 0, -1, -1, -3, -1, 0, -4, -1, 2, 1, -2, -3,
+                    2, -2, 1, 1, 4, -7,
+                ],
+            ),
+        ];
+        for (mode, kats) in [(QuantMode::Int8, KAT_I8), (QuantMode::Int4, KAT_I4)] {
+            for (k, &(src_bits, scale_bits, expect)) in kats.iter().enumerate() {
+                let src: Vec<f32> = src_bits.iter().map(|&b| f32::from_bits(b)).collect();
+                let (scales, codes) = quantize(mode, &src).unwrap();
+                let got_bits: Vec<u32> = scales.iter().map(|s| s.to_bits()).collect();
+                assert_eq!(got_bits, scale_bits, "{mode} KAT {k}: scales");
+                let v = view(mode, &scales, &codes, src.len());
+                let got: Vec<i32> = (0..src.len()).map(|i| v.code_at(i)).collect();
+                assert_eq!(got, expect, "{mode} KAT {k}: codes");
+            }
+        }
+    }
+
+    /// Quantization is chunk-parallel; results must be byte-identical at
+    /// any thread count (same fixed partitioning as every other kernel).
+    #[test]
+    fn quantize_is_thread_count_invariant() {
+        use super::super::parallel::with_threads;
+        let src: Vec<f32> = (0..5000).map(|i| ((i * 71 + 5) % 203) as f32 - 101.0).collect();
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let base = with_threads(1, || quantize(mode, &src).unwrap());
+            for t in [2usize, 4, 7] {
+                let got = with_threads(t, || quantize(mode, &src).unwrap());
+                assert_eq!(
+                    base.0.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                    got.0.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                    "{mode} scales at {t} threads"
+                );
+                assert_eq!(base.1, got.1, "{mode} codes at {t} threads");
+            }
+        }
+    }
+}

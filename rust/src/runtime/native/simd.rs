@@ -1,0 +1,430 @@
+//! Runtime-dispatched SIMD inner loops for the native kernels.
+//!
+//! Every primitive here has two implementations: a **scalar reference**
+//! (`*_scalar`, public so differential tests can call it directly) and an
+//! x86-64 vector path selected at runtime behind a single AVX2 feature
+//! check. The public entry points dispatch between them; on non-x86_64
+//! targets they compile straight down to the scalar reference.
+//!
+//! # Bit-identity contract
+//!
+//! The vector paths are required to produce **bitwise identical** results
+//! to their scalar twins, not merely close ones. That is possible because
+//! each primitive is either
+//!
+//! - purely elementwise (`axpy_row*`, `decode_i8`): each output lane is
+//!   one IEEE multiply + one IEEE add of the same operands the scalar
+//!   loop uses, and vector `mul_ps`/`add_ps` are correctly rounded exactly
+//!   like their scalar counterparts; or
+//! - a reduction whose *scalar reference already fixes the lane
+//!   structure*: `dot`/`dot_bf16` accumulate into four independent
+//!   partial sums over `chunks_exact(4)` (see `kernels::dot`), so a
+//!   128-bit accumulator vector carries exactly those four partials —
+//!   lane `i` of the vector equals `acc[i]` of the scalar loop after
+//!   every chunk — and the final reduction `(a0+a1) + (a2+a3) + tail`
+//!   is performed in the same scalar order by both paths.
+//!
+//! No FMA contraction is used anywhere (a fused multiply-add would round
+//! once where the scalar twin rounds twice, breaking the contract).
+//!
+//! `kernel_twins.rs` and the in-module tests below pin `f(x) ==
+//! f_scalar(x)` bitwise on every input they generate; on machines without
+//! AVX2 the dispatchers run the scalar path and the pin is trivial.
+
+/// True when the vector paths are eligible on this machine (x86-64 with
+/// AVX2). `std::arch::is_x86_feature_detected!` caches the CPUID probe,
+/// so calling this in inner-kernel prologues is cheap.
+pub fn active() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Widen one bf16 pattern (matches `bf16::to_f32`: bits shifted into the
+/// high half of an f32). Inlined here so the scalar tails below are
+/// self-contained.
+#[inline(always)]
+fn widen_bf16(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// axpy over a row: acc[j] += x * w[j]
+// ---------------------------------------------------------------------------
+
+/// Scalar reference: `acc[j] += x * w[j]` for every `j`.
+pub fn axpy_row_scalar(acc: &mut [f32], x: f32, w: &[f32]) {
+    debug_assert_eq!(acc.len(), w.len());
+    for (o, &wv) in acc.iter_mut().zip(w) {
+        *o += x * wv;
+    }
+}
+
+/// `acc[j] += x * w[j]`, vectorized 8-wide when AVX2 is available.
+/// Elementwise, so bit-identical to [`axpy_row_scalar`] by construction.
+#[inline]
+pub fn axpy_row(acc: &mut [f32], x: f32, w: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: `active()` verified AVX2 support at runtime.
+        unsafe { axpy_row_avx2(acc, x, w) };
+        return;
+    }
+    axpy_row_scalar(acc, x, w);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_row_avx2(acc: &mut [f32], x: f32, w: &[f32]) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(acc.len(), w.len());
+    let n = acc.len();
+    let n8 = n - n % 8;
+    let xv = _mm256_set1_ps(x);
+    let mut j = 0;
+    while j < n8 {
+        let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(j));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_add_ps(av, _mm256_mul_ps(xv, wv)));
+        j += 8;
+    }
+    for jj in n8..n {
+        *acc.get_unchecked_mut(jj) += x * *w.get_unchecked(jj);
+    }
+}
+
+/// Scalar reference for the bf16-weight axpy: widen each weight, then the
+/// same multiply-add as [`axpy_row_scalar`].
+pub fn axpy_row_bf16_scalar(acc: &mut [f32], x: f32, w: &[u16]) {
+    debug_assert_eq!(acc.len(), w.len());
+    for (o, &wb) in acc.iter_mut().zip(w) {
+        *o += x * widen_bf16(wb);
+    }
+}
+
+/// `acc[j] += x * widen(w[j])` over bf16 weight bits; the AVX2 path
+/// widens 8 lanes with a shift (exact — bf16→f32 is lossless) and then
+/// performs the identical elementwise multiply-add.
+#[inline]
+pub fn axpy_row_bf16(acc: &mut [f32], x: f32, w: &[u16]) {
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: `active()` verified AVX2 support at runtime.
+        unsafe { axpy_row_bf16_avx2(acc, x, w) };
+        return;
+    }
+    axpy_row_bf16_scalar(acc, x, w);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_row_bf16_avx2(acc: &mut [f32], x: f32, w: &[u16]) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(acc.len(), w.len());
+    let n = acc.len();
+    let n8 = n - n % 8;
+    let xv = _mm256_set1_ps(x);
+    let mut j = 0;
+    while j < n8 {
+        // 8 bf16 patterns -> zero-extend to 32 bits -> shift into the
+        // high half: exactly `widen_bf16` per lane.
+        let bits16 = _mm_loadu_si128(w.as_ptr().add(j) as *const __m128i);
+        let bits32 = _mm256_slli_epi32(_mm256_cvtepu16_epi32(bits16), 16);
+        let wv = _mm256_castsi256_ps(bits32);
+        let av = _mm256_loadu_ps(acc.as_ptr().add(j));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_add_ps(av, _mm256_mul_ps(xv, wv)));
+        j += 8;
+    }
+    for jj in n8..n {
+        *acc.get_unchecked_mut(jj) += x * widen_bf16(*w.get_unchecked(jj));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dot products (four-partial-sum reference semantics)
+// ---------------------------------------------------------------------------
+
+/// Scalar reference dot product: four independent partial sums over
+/// `chunks_exact(4)`, a scalar tail, and the reduction
+/// `(acc0 + acc1) + (acc2 + acc3) + tail`. This *is* the historical
+/// `kernels::dot` accumulation order — the vector path below mirrors its
+/// lane structure exactly.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n4 = n - n % 4;
+    let mut acc = [0.0f32; 4];
+    for (pa, pb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
+        acc[0] += pa[0] * pb[0];
+        acc[1] += pa[1] * pb[1];
+        acc[2] += pa[2] * pb[2];
+        acc[3] += pa[3] * pb[3];
+    }
+    let mut tail = 0.0f32;
+    for i in n4..n {
+        tail += a[i] * b[i];
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// Dot product with the four-partial-sum reference semantics. The vector
+/// path keeps the four partials in one 128-bit accumulator (lane `i` ==
+/// scalar `acc[i]` after every chunk) and reduces in the same order.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: `active()` verified AVX2 (superset of SSE2) support.
+        return unsafe { dot_sse(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_sse(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n4 = n - n % 4;
+    let mut accv = _mm_setzero_ps();
+    let mut i = 0;
+    while i < n4 {
+        let av = _mm_loadu_ps(a.as_ptr().add(i));
+        let bv = _mm_loadu_ps(b.as_ptr().add(i));
+        accv = _mm_add_ps(accv, _mm_mul_ps(av, bv));
+        i += 4;
+    }
+    let mut acc = [0.0f32; 4];
+    _mm_storeu_ps(acc.as_mut_ptr(), accv);
+    let mut tail = 0.0f32;
+    for j in n4..n {
+        tail += *a.get_unchecked(j) * *b.get_unchecked(j);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// Scalar reference bf16×bf16 dot: widen both operands, then the same
+/// four-partial-sum structure as [`dot_scalar`].
+pub fn dot_bf16_scalar(a: &[u16], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n4 = n - n % 4;
+    let mut acc = [0.0f32; 4];
+    for (pa, pb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
+        acc[0] += widen_bf16(pa[0]) * widen_bf16(pb[0]);
+        acc[1] += widen_bf16(pa[1]) * widen_bf16(pb[1]);
+        acc[2] += widen_bf16(pa[2]) * widen_bf16(pb[2]);
+        acc[3] += widen_bf16(pa[3]) * widen_bf16(pb[3]);
+    }
+    let mut tail = 0.0f32;
+    for i in n4..n {
+        tail += widen_bf16(a[i]) * widen_bf16(b[i]);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// bf16×bf16 dot with the four-partial-sum reference semantics; the
+/// vector path widens 4 lanes per side with shifts (lossless) and keeps
+/// the same lane/reduction structure as [`dot_bf16_scalar`].
+#[inline]
+pub fn dot_bf16(a: &[u16], b: &[u16]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: `active()` verified AVX2 (superset of SSE2) support.
+        return unsafe { dot_bf16_sse(a, b) };
+    }
+    dot_bf16_scalar(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_bf16_sse(a: &[u16], b: &[u16]) -> f32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n4 = n - n % 4;
+    let zero = _mm_setzero_si128();
+    let mut accv = _mm_setzero_ps();
+    let mut i = 0;
+    while i < n4 {
+        // 4 bf16 patterns per side (8 bytes) -> zero-extend to 32-bit
+        // lanes -> shift into the high half: `widen_bf16` per lane.
+        let ab = _mm_loadl_epi64(a.as_ptr().add(i) as *const __m128i);
+        let bb = _mm_loadl_epi64(b.as_ptr().add(i) as *const __m128i);
+        let av = _mm_castsi128_ps(_mm_slli_epi32(_mm_unpacklo_epi16(ab, zero), 16));
+        let bv = _mm_castsi128_ps(_mm_slli_epi32(_mm_unpacklo_epi16(bb, zero), 16));
+        accv = _mm_add_ps(accv, _mm_mul_ps(av, bv));
+        i += 4;
+    }
+    let mut acc = [0.0f32; 4];
+    _mm_storeu_ps(acc.as_mut_ptr(), accv);
+    let mut tail = 0.0f32;
+    for j in n4..n {
+        tail += widen_bf16(*a.get_unchecked(j)) * widen_bf16(*b.get_unchecked(j));
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+// ---------------------------------------------------------------------------
+// int8 block decode: dst[j] = (codes[j] as i8 as f32) * scale
+// ---------------------------------------------------------------------------
+
+/// Scalar reference int8 decode: sign-interpret each code byte, convert
+/// (exact for |code| <= 127), multiply by the block scale.
+pub fn decode_i8_scalar(codes: &[u8], scale: f32, dst: &mut [f32]) {
+    debug_assert_eq!(codes.len(), dst.len());
+    for (o, &c) in dst.iter_mut().zip(codes) {
+        *o = (c as i8 as f32) * scale;
+    }
+}
+
+/// int8 block decode, vectorized 8-wide when AVX2 is available.
+/// Elementwise and exact per lane (int→f32 conversion is exact for
+/// |code| ≤ 127; the scale multiply is one correctly-rounded IEEE op),
+/// so bit-identical to [`decode_i8_scalar`].
+#[inline]
+pub fn decode_i8(codes: &[u8], scale: f32, dst: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: `active()` verified AVX2 support at runtime.
+        unsafe { decode_i8_avx2(codes, scale, dst) };
+        return;
+    }
+    decode_i8_scalar(codes, scale, dst);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn decode_i8_avx2(codes: &[u8], scale: f32, dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(codes.len(), dst.len());
+    let n = dst.len();
+    let n8 = n - n % 8;
+    let sv = _mm256_set1_ps(scale);
+    let mut j = 0;
+    while j < n8 {
+        let bytes = _mm_loadl_epi64(codes.as_ptr().add(j) as *const __m128i);
+        let ints = _mm256_cvtepi8_epi32(bytes);
+        let vals = _mm256_cvtepi32_ps(ints);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_mul_ps(vals, sv));
+        j += 8;
+    }
+    for jj in n8..n {
+        *dst.get_unchecked_mut(jj) = (*codes.get_unchecked(jj) as i8 as f32) * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32 * 0.5).collect()
+    }
+
+    // Awkward lengths on purpose: exercise the vector body and the
+    // scalar tail together (n % 8 and n % 4 both nonzero in the mix).
+    const LENS: &[usize] = &[0, 1, 3, 4, 7, 8, 15, 16, 31, 64, 257];
+
+    #[test]
+    fn axpy_row_matches_scalar_bitwise() {
+        let mut rng = Rng::new(11);
+        for &n in LENS {
+            let w = randv(&mut rng, n);
+            let base = randv(&mut rng, n);
+            let x = rng.gaussian() as f32;
+            let mut a = base.clone();
+            let mut b = base.clone();
+            axpy_row(&mut a, x, &w);
+            axpy_row_scalar(&mut b, x, &w);
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "axpy_row diverged from scalar at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_row_bf16_matches_scalar_bitwise() {
+        let mut rng = Rng::new(12);
+        for &n in LENS {
+            let w = super::super::bf16::cast(&randv(&mut rng, n));
+            let base = randv(&mut rng, n);
+            let x = rng.gaussian() as f32;
+            let mut a = base.clone();
+            let mut b = base.clone();
+            axpy_row_bf16(&mut a, x, &w);
+            axpy_row_bf16_scalar(&mut b, x, &w);
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "axpy_row_bf16 diverged from scalar at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_matches_scalar_bitwise() {
+        let mut rng = Rng::new(13);
+        for &n in LENS {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_scalar(&a, &b).to_bits(),
+                "dot diverged from scalar at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_bf16_matches_scalar_bitwise() {
+        let mut rng = Rng::new(14);
+        for &n in LENS {
+            let a = super::super::bf16::cast(&randv(&mut rng, n));
+            let b = super::super::bf16::cast(&randv(&mut rng, n));
+            assert_eq!(
+                dot_bf16(&a, &b).to_bits(),
+                dot_bf16_scalar(&a, &b).to_bits(),
+                "dot_bf16 diverged from scalar at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_i8_matches_scalar_bitwise() {
+        let mut rng = Rng::new(15);
+        for &n in LENS {
+            let codes: Vec<u8> =
+                (0..n).map(|_| ((rng.gaussian() * 50.0) as i32).clamp(-127, 127) as i8 as u8).collect();
+            let scale = (rng.gaussian() as f32).abs() * 0.01;
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            decode_i8(&codes, scale, &mut a);
+            decode_i8_scalar(&codes, scale, &mut b);
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "decode_i8 diverged from scalar at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn widen_bf16_matches_bf16_module() {
+        for bits in [0u16, 1, 0x3F80, 0x8000, 0x7F80, 0xFF80, 0x7FC0, 0xABCD] {
+            assert_eq!(
+                widen_bf16(bits).to_bits(),
+                super::super::bf16::to_f32(bits).to_bits()
+            );
+        }
+    }
+}

@@ -123,10 +123,13 @@ fn assert_trajectories_bit_identical(
 fn fanout_matches_sequential_across_zoo_shards_and_precisions() {
     // the full engine-level matrix: every (shards, rule, precision) cell
     // must reproduce the native sequential trajectory bit-for-bit — the
-    // zoo covers both probe schedules (fzoo is one-sided batched)
+    // zoo covers both probe schedules (fzoo is one-sided batched), and the
+    // precision axis covers the bf16 and block-quantized shadow paths
     for &shards in &[1usize, 2, 4] {
         for kind in [ZoOptKind::Sgd, ZoOptKind::Adam, ZoOptKind::Fzoo] {
-            for precision in [Precision::F32, Precision::Bf16] {
+            for precision in
+                [Precision::F32, Precision::Bf16, Precision::Int8, Precision::Int4]
+            {
                 let native =
                     NativeBackend::preset("opt-nano").unwrap().with_precision(precision);
                 let sharded =
@@ -304,4 +307,86 @@ fn nan_loss_fault_fires_identically_under_fanout() {
     let sharded = run(&b).unwrap();
     assert!(sharded.losses[1].is_nan());
     assert_reports_bit_identical(&sharded, &native, "nan-loss skip-step");
+}
+
+#[test]
+fn quant_trainer_runs_match_bitwise() {
+    // the quantized twins of `bf16_trainer_runs_match_bitwise`: the shadow
+    // re-quantization protocol must not perturb the fanned-out trajectory
+    if env_overridden() {
+        return;
+    }
+    for precision in [Precision::Int8, Precision::Int4] {
+        let tag = format!("{precision}");
+        let mut cfg = nano_cfg(&format!("{tag}_native"));
+        cfg.precision = precision;
+        let native = run(&cfg).unwrap();
+        assert_eq!(native.precision, precision);
+        let mut cfg = nano_cfg(&format!("{tag}_sharded"));
+        cfg.precision = precision;
+        cfg.backend = BackendKind::Sharded;
+        cfg.shards = 2;
+        let sharded = run(&cfg).unwrap();
+        assert_eq!(sharded.precision, precision);
+        assert_reports_bit_identical(&sharded, &native, &tag);
+    }
+}
+
+#[test]
+fn sharded_io_err_on_save_then_crash_still_resumes_to_the_clean_run() {
+    // the missing fault-matrix row: sharded x io-err@save x resume. The
+    // first save attempt fails (warn-and-continue), the run then crashes
+    // after step 2 — the surviving step-2 save must carry a resume that
+    // lands on the clean native trajectory, bitwise
+    if env_overridden() {
+        return;
+    }
+    let mut clean_cfg = nano_cfg("shioerr_clean");
+    clean_cfg.save_every = 1;
+    let clean = run(&clean_cfg).unwrap();
+
+    let mut cfg = nano_cfg("shioerr");
+    cfg.backend = BackendKind::Sharded;
+    cfg.shards = 2;
+    cfg.save_every = 1;
+    cfg.faults = "io-err@save:1,crash@2".into();
+    let err = run(&cfg).unwrap_err().to_string();
+    assert!(err.contains(CRASH), "{err}");
+    let state = PathBuf::from(cfg.artifact_dir()).join("train_state.ckpt");
+    assert!(state.exists(), "the step-2 save must survive the failed first attempt");
+
+    cfg.faults.clear();
+    let resumed = run(&cfg).unwrap();
+    assert_eq!(resumed.resumed_from, Some(2));
+    assert_reports_bit_identical(&resumed, &clean, "sharded io-err@save + crash@2");
+}
+
+#[test]
+fn quant_crash_resume_matches_the_clean_run() {
+    // the quantized-precision x crash/resume row: shadows never reach the
+    // checkpoint (masters stay f32), so a resumed int8 run re-quantizes
+    // from the restored masters and lands on the clean trajectory, bitwise
+    if env_overridden() {
+        return;
+    }
+    for precision in [Precision::Int8, Precision::Int4] {
+        let tag = format!("qcrash_{precision}");
+        let mut clean_cfg = nano_cfg(&format!("{tag}_clean"));
+        clean_cfg.precision = precision;
+        clean_cfg.save_every = 1;
+        let clean = run(&clean_cfg).unwrap();
+
+        let mut cfg = nano_cfg(&tag);
+        cfg.precision = precision;
+        cfg.save_every = 1;
+        cfg.faults = "crash@2".into();
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(err.contains(CRASH), "{err}");
+
+        cfg.faults.clear();
+        let resumed = run(&cfg).unwrap();
+        assert_eq!(resumed.resumed_from, Some(2), "{precision}");
+        assert_eq!(resumed.precision, precision);
+        assert_reports_bit_identical(&resumed, &clean, &tag);
+    }
 }

@@ -1,0 +1,381 @@
+//! The unified scalar-twin differential harness (one registry, every
+//! reduced-precision kernel).
+//!
+//! Each registry entry is a named case `fn(seed) -> Vec<u32>`: it sweeps
+//! seeded shapes/masks inside, asserts its own twin pin, and returns a
+//! bitwise digest of everything it computed. The driver then runs every
+//! case at several worker-thread counts and requires the digests to be
+//! identical — so one test sweeps the full (shape, mask, precision,
+//! thread-count) grid and any new kernel twin is covered by adding one
+//! `TwinCase` line.
+//!
+//! The pins, by strength:
+//! - **exact**: a quantized kernel must be `to_bits`-equal to its f32 twin
+//!   run on the *dequantized* weights (`twin_q(x) == twin_f32(dequant(x))`
+//!   — the kernels share the accumulation order by construction), and
+//!   every SIMD dispatcher must be `to_bits`-equal to its public scalar
+//!   fallback.
+//! - **calibrated**: a composed reduced-precision forward vs the f32
+//!   *masters* carries real quantization error; those cases assert the
+//!   documented per-precision tolerance (bf16/int8 1e-2, int4 2e-1) on
+//!   the mean loss while still pinning the dequantized twin bitwise.
+//!
+//! `LEZO_THREADS` (set in one CI job) takes precedence over the harness's
+//! `with_threads` override; the digest comparison is then trivially
+//! against the same count, which is exactly the point — results must not
+//! depend on either knob.
+
+use lezo::model::ModelSpec;
+use lezo::peft::PeftMode;
+use lezo::rng::Rng;
+use lezo::runtime::native::bf16;
+use lezo::runtime::native::forward;
+use lezo::runtime::native::kernels::{self, ForwardScratch};
+use lezo::runtime::native::parallel::with_threads;
+use lezo::runtime::native::quant::{self, QuantMode, QuantView};
+use lezo::runtime::native::simd;
+
+struct TwinCase {
+    name: &'static str,
+    run: fn(u64) -> Vec<u32>,
+}
+
+const REGISTRY: &[TwinCase] = &[
+    TwinCase { name: "simd-dot", run: simd_dot_twin },
+    TwinCase { name: "simd-axpy-decode", run: simd_axpy_decode_twin },
+    TwinCase { name: "quantize-roundtrip-int8", run: |s| quantize_roundtrip_twin(QuantMode::Int8, s) },
+    TwinCase { name: "quantize-roundtrip-int4", run: |s| quantize_roundtrip_twin(QuantMode::Int4, s) },
+    TwinCase { name: "matmul-int8", run: |s| matmul_twin(QuantMode::Int8, s) },
+    TwinCase { name: "matmul-int4", run: |s| matmul_twin(QuantMode::Int4, s) },
+    TwinCase { name: "layernorm-int8", run: |s| layernorm_twin(QuantMode::Int8, s) },
+    TwinCase { name: "layernorm-int4", run: |s| layernorm_twin(QuantMode::Int4, s) },
+    TwinCase { name: "fused-head-int8", run: |s| fused_head_twin(QuantMode::Int8, s) },
+    TwinCase { name: "fused-head-int4", run: |s| fused_head_twin(QuantMode::Int4, s) },
+    TwinCase { name: "family-bf16", run: family_bf16_twin },
+    TwinCase { name: "family-int8", run: |s| family_quant_twin(QuantMode::Int8, 1e-2, s) },
+    TwinCase { name: "family-int4", run: |s| family_quant_twin(QuantMode::Int4, 2e-1, s) },
+];
+
+fn gen(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn qpair(mode: QuantMode, src: &[f32]) -> (Vec<f32>, Vec<u8>) {
+    quant::quantize(mode, src).unwrap()
+}
+
+// -- simd dispatchers vs their public scalar fallbacks ----------------------
+
+const LENS: &[usize] = &[0, 1, 3, 4, 7, 8, 15, 16, 31, 64, 257, 1000];
+
+fn simd_dot_twin(seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut digest = Vec::new();
+    for &n in LENS {
+        let a = gen(&mut rng, n, 1.0);
+        let b = gen(&mut rng, n, 1.0);
+        let d = simd::dot(&a, &b);
+        assert_eq!(d.to_bits(), simd::dot_scalar(&a, &b).to_bits(), "dot len {n}");
+        let ab = bf16::cast(&a);
+        let bb = bf16::cast(&b);
+        let db = simd::dot_bf16(&ab, &bb);
+        assert_eq!(db.to_bits(), simd::dot_bf16_scalar(&ab, &bb).to_bits(), "dot_bf16 len {n}");
+        digest.push(d.to_bits());
+        digest.push(db.to_bits());
+    }
+    digest
+}
+
+fn simd_axpy_decode_twin(seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut digest = Vec::new();
+    for &n in LENS {
+        let x = rng.gaussian() as f32;
+        let w = gen(&mut rng, n, 0.5);
+        let wb = bf16::cast(&w);
+        let base = gen(&mut rng, n, 1.0);
+
+        let mut acc = base.clone();
+        let mut acc_s = base.clone();
+        simd::axpy_row(&mut acc, x, &w);
+        simd::axpy_row_scalar(&mut acc_s, x, &w);
+        assert_eq!(bits(&acc), bits(&acc_s), "axpy_row len {n}");
+
+        let mut accb = base.clone();
+        let mut accb_s = base.clone();
+        simd::axpy_row_bf16(&mut accb, x, &wb);
+        simd::axpy_row_bf16_scalar(&mut accb_s, x, &wb);
+        assert_eq!(bits(&accb), bits(&accb_s), "axpy_row_bf16 len {n}");
+
+        let codes: Vec<u8> = (0..n)
+            .map(|_| ((rng.gaussian() * 40.0).clamp(-127.0, 127.0) as i32 as i8) as u8)
+            .collect();
+        let scale = 0.03125f32;
+        let mut dec = vec![0.0f32; n];
+        let mut dec_s = vec![0.0f32; n];
+        simd::decode_i8(&codes, scale, &mut dec);
+        simd::decode_i8_scalar(&codes, scale, &mut dec_s);
+        assert_eq!(bits(&dec), bits(&dec_s), "decode_i8 len {n}");
+
+        digest.extend(bits(&acc));
+        digest.extend(bits(&accb));
+        digest.extend(bits(&dec));
+    }
+    digest
+}
+
+// -- quantizer: error bound, view consistency, non-finite hard error --------
+
+fn quantize_roundtrip_twin(mode: QuantMode, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut digest = Vec::new();
+    for &n in &[1usize, 63, 64, 65, 129, 1000] {
+        let x = gen(&mut rng, n, 0.2);
+        let (scales, codes) = qpair(mode, &x);
+        let view = QuantView::new(mode, &scales, &codes, n);
+        // absmax quantization error bound: |dequant - x| <= scale/2 per
+        // element of each block (plus f32 rounding slack)
+        for (i, (&xi, yi)) in x.iter().zip(view.dequant()).enumerate() {
+            let scale = scales[i / quant::QBLOCK];
+            assert!(
+                (yi - xi).abs() <= 0.51 * scale + 1e-30,
+                "{mode} n={n} i={i}: {yi} vs {xi} (scale {scale})"
+            );
+        }
+        // sub-views decode the same bits as the bulk path
+        if n > 2 {
+            let sub = view.split_to(1, n - 1);
+            let bulk = view.dequant();
+            for (j, v) in sub.dequant().iter().enumerate() {
+                assert_eq!(v.to_bits(), bulk[1 + j].to_bits(), "{mode} n={n} sub j={j}");
+            }
+        }
+        digest.extend(scales.iter().map(|s| s.to_bits()));
+        digest.extend(codes.iter().map(|&c| c as u32));
+    }
+    // a non-finite input is a hard error naming the flat index
+    let mut bad = gen(&mut rng, 70, 0.2);
+    bad[66] = f32::NAN;
+    let err = quant::quantize(mode, &bad).unwrap_err().to_string();
+    assert!(err.contains("non-finite") && err.contains("flat index 66"), "{err}");
+    digest
+}
+
+// -- quantized kernels vs the f32 twin on dequantized weights ---------------
+
+fn matmul_twin(mode: QuantMode, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut digest = Vec::new();
+    for &(n_rows, din, dout) in
+        &[(1usize, 3usize, 5usize), (4, 16, 9), (3, 63, 64), (2, 65, 33), (5, 64, 130), (2, 130, 96)]
+    {
+        let x = gen(&mut rng, n_rows * din, 1.0);
+        let w = gen(&mut rng, din * dout, 0.1);
+        let b = gen(&mut rng, dout, 0.1);
+        let (ws, wc) = qpair(mode, &w);
+        let (bs, bc) = qpair(mode, &b);
+        let wv = QuantView::new(mode, &ws, &wc, w.len());
+        let bv = QuantView::new(mode, &bs, &bc, b.len());
+        let mut out_q = vec![0.0f32; n_rows * dout];
+        kernels::matmul_bias_into_quant(&x, &wv, &bv, &mut out_q, n_rows, din, dout);
+        let mut out_f = vec![0.0f32; n_rows * dout];
+        kernels::matmul_bias_into(&x, &wv.dequant(), &bv.dequant(), &mut out_f, n_rows, din, dout);
+        assert_eq!(bits(&out_q), bits(&out_f), "{mode} matmul {n_rows}x{din}x{dout}");
+        digest.extend(bits(&out_q));
+    }
+    digest
+}
+
+fn layernorm_twin(mode: QuantMode, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut digest = Vec::new();
+    for &(n, d) in &[(1usize, 8usize), (9, 33), (4, 64), (3, 130)] {
+        let x = gen(&mut rng, n * d, 1.0);
+        let gamma = gen(&mut rng, d, 0.3);
+        let beta = gen(&mut rng, d, 0.3);
+        let (gs, gc) = qpair(mode, &gamma);
+        let (bs, bc) = qpair(mode, &beta);
+        let gv = QuantView::new(mode, &gs, &gc, d);
+        let bv = QuantView::new(mode, &bs, &bc, d);
+        let mut out_q = vec![0.0f32; n * d];
+        kernels::layernorm_into_quant(&x, &gv, &bv, &mut out_q, d);
+        let mut out_f = vec![0.0f32; n * d];
+        kernels::layernorm_into(&x, &gv.dequant(), &bv.dequant(), &mut out_f, d);
+        assert_eq!(bits(&out_q), bits(&out_f), "{mode} layernorm {n}x{d}");
+        digest.extend(bits(&out_q));
+    }
+    digest
+}
+
+fn fused_head_twin(mode: QuantMode, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut digest = Vec::new();
+    for &(n, vocab, d) in &[(7usize, 64usize, 16usize), (10, 130, 32), (5, 127, 10), (3, 513, 8)] {
+        let hf = gen(&mut rng, n * d, 1.0);
+        let emb = gen(&mut rng, vocab * d, 0.1);
+        let targets: Vec<i32> = (0..n).map(|i| ((i * 37 + 11) % vocab) as i32).collect();
+        // seeded mask pattern with real holes (including position 0)
+        let mask: Vec<f32> =
+            (0..n).map(|_| if rng.gaussian() > 0.4 { 0.0 } else { 1.0 }).collect();
+        let (es, ec) = qpair(mode, &emb);
+        let ev = QuantView::new(mode, &es, &ec, emb.len());
+        let deq = ev.dequant();
+
+        let mut xent_q = vec![0.0f32; n];
+        kernels::fused_masked_xent_quant(&hf, &ev, &targets, &mask, n, vocab, d, &mut xent_q);
+        let mut xent_f = vec![0.0f32; n];
+        kernels::fused_masked_xent(&hf, &deq, &targets, &mask, n, vocab, d, &mut xent_f);
+        assert_eq!(bits(&xent_q), bits(&xent_f), "{mode} xent n={n} vocab={vocab}");
+
+        let mut preds_q = vec![0i32; n];
+        kernels::fused_argmax_quant(&hf, &ev, n, vocab, d, &mut preds_q);
+        let mut preds_f = vec![0i32; n];
+        kernels::fused_argmax(&hf, &deq, n, vocab, d, &mut preds_f);
+        assert_eq!(preds_q, preds_f, "{mode} argmax n={n} vocab={vocab}");
+
+        digest.extend(bits(&xent_q));
+        digest.extend(preds_q.iter().map(|&p| p as u32));
+    }
+    digest
+}
+
+// -- composed forwards: bitwise vs the dequantized twin, calibrated vs the
+// -- f32 masters -------------------------------------------------------------
+
+fn family_inputs(rng: &mut Rng, spec: &ModelSpec, rows: usize, seq: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    let n = rows * seq;
+    let tokens: Vec<i32> = (0..n).map(|i| 15 + (i % 95) as i32).collect();
+    let targets: Vec<i32> = (0..n).map(|i| ((i * 29 + 3) % spec.vocab) as i32).collect();
+    let mask: Vec<f32> = (0..n).map(|_| if rng.gaussian() > 0.8 { 0.0 } else { 1.0 }).collect();
+    (tokens, targets, mask)
+}
+
+fn family_bf16_twin(seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let s = ModelSpec::preset("opt-nano").unwrap();
+    let host = s.init_units(seed);
+    let (rows, seq) = (2usize, 8usize);
+    let (tokens, targets, mask) = family_inputs(&mut rng, &s, rows, seq);
+    let mut scratch = ForwardScratch::new();
+    let refs: Vec<&[f32]> = host.iter().map(|u| u.as_slice()).collect();
+    let lf = forward::mean_loss_peft(
+        &s, &refs, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq, &mut scratch,
+    )
+    .unwrap();
+    let shadows: Vec<Vec<u16>> = host.iter().map(|u| bf16::cast(u)).collect();
+    let brefs: Vec<&[u16]> = shadows.iter().map(|u| u.as_slice()).collect();
+    let lb = forward::mean_loss_bf16_peft(
+        &s, &brefs, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq, &mut scratch,
+    )
+    .unwrap();
+    let rel = (lb - lf).abs() / lf.abs().max(1e-6);
+    assert!(rel <= 1e-2, "bf16 {lb} vs f32 {lf} (rel {rel})");
+    vec![lb.to_bits(), lf.to_bits()]
+}
+
+fn family_quant_twin(mode: QuantMode, tol: f32, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let s = ModelSpec::preset("opt-nano").unwrap();
+    let host = s.init_units(seed);
+    let (rows, seq) = (2usize, 8usize);
+    let (tokens, targets, mask) = family_inputs(&mut rng, &s, rows, seq);
+    let mut scratch = ForwardScratch::new();
+    let refs: Vec<&[f32]> = host.iter().map(|u| u.as_slice()).collect();
+    let lf = forward::mean_loss_peft(
+        &s, &refs, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq, &mut scratch,
+    )
+    .unwrap();
+
+    let pairs: Vec<(Vec<f32>, Vec<u8>)> = host.iter().map(|u| qpair(mode, u)).collect();
+    let views: Vec<QuantView<'_>> = pairs
+        .iter()
+        .zip(&host)
+        .map(|((sc, c), u)| QuantView::new(mode, sc, c, u.len()))
+        .collect();
+    let deq: Vec<Vec<f32>> = views.iter().map(|v| v.dequant()).collect();
+    let deq_refs: Vec<&[f32]> = deq.iter().map(|u| u.as_slice()).collect();
+
+    // exact pin: quant family == f32 family on the dequantized units
+    let lq = forward::mean_loss_quant_peft(
+        &s, &views, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq, &mut scratch,
+    )
+    .unwrap();
+    let ld = forward::mean_loss_peft(
+        &s, &deq_refs, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq, &mut scratch,
+    )
+    .unwrap();
+    assert_eq!(lq.to_bits(), ld.to_bits(), "{mode} mean_loss vs dequantized twin");
+
+    let eq = forward::example_losses_quant_peft(
+        &s, &views, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq, &mut scratch,
+    )
+    .unwrap();
+    let ed = forward::example_losses_peft(
+        &s, &deq_refs, PeftMode::Full, &[], &tokens, &targets, &mask, rows, seq, &mut scratch,
+    )
+    .unwrap();
+    assert_eq!(bits(&eq), bits(&ed), "{mode} example_losses vs dequantized twin");
+
+    let pq =
+        forward::predict_quant_peft(&s, &views, PeftMode::Full, &[], &tokens, rows, seq, &mut scratch)
+            .unwrap();
+    let pd =
+        forward::predict_peft(&s, &deq_refs, PeftMode::Full, &[], &tokens, rows, seq, &mut scratch)
+            .unwrap();
+    assert_eq!(pq, pd, "{mode} predict vs dequantized twin");
+
+    // calibrated pin: the quantization error vs the f32 masters
+    let rel = (lq - lf).abs() / lf.abs().max(1e-6);
+    assert!(rel <= tol, "{mode} {lq} vs f32 {lf} (rel {rel}, tol {tol})");
+
+    let mut digest = vec![lq.to_bits(), lf.to_bits()];
+    digest.extend(bits(&eq));
+    digest.extend(pq.iter().map(|&p| p as u32));
+    digest
+}
+
+// -- driver ------------------------------------------------------------------
+
+/// FNV-1a over the case name: each case gets a stable, distinct seed.
+fn case_seed(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[test]
+fn registry_is_nonempty_and_uniquely_named() {
+    assert!(REGISTRY.len() >= 13);
+    let mut names: Vec<&str> = REGISTRY.iter().map(|c| c.name).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), REGISTRY.len(), "duplicate case names");
+}
+
+#[test]
+fn twin_registry_is_bitwise_pinned_and_thread_count_invariant() {
+    for case in REGISTRY {
+        let seed = case_seed(case.name);
+        let base = with_threads(1, || (case.run)(seed));
+        assert!(!base.is_empty(), "{}: empty digest", case.name);
+        for &t in &[2usize, 5] {
+            let d = with_threads(t, || (case.run)(seed));
+            assert_eq!(d, base, "{}: output bits changed at {t} threads", case.name);
+        }
+    }
+}
+
+#[test]
+fn simd_dispatch_is_consistent_with_runtime_detection() {
+    // `active()` is a pure capability probe: calling it twice agrees, and
+    // the dispatchers above were already pinned to the scalar twins
+    // whichever path is taken on this machine.
+    assert_eq!(simd::active(), simd::active());
+}
