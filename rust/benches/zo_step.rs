@@ -11,7 +11,13 @@
 //! tunable-parameter counts in the `steps[].tunable_params` JSON field),
 //! plus `mezo-sharded` rows — the dense step fanned across 1/2/4 lockstep
 //! replicas via the sharded backend, carrying a `shards` count and a
-//! `scaling` speedup-vs-1-backend column (JSON version 6).
+//! `scaling` speedup-vs-1-backend column — and their `mezo-sharded-socket`
+//! twins (shards 1/2/4 at f32/bf16), the same fan-out dispatched to real
+//! spawned `lezo worker` processes over the framed socket transport. Every
+//! step row carries a `transport` field (`none`/`thread`/`socket`) and the
+//! socket rows a per-step `rt_ms` round-trip-latency split — wall time
+//! inside the forward stage that was dispatch + wire + wait rather than
+//! worker compute (JSON version 7).
 //! Backend-generic: the native backend
 //! runs with zero artifacts on any machine; with `--features pjrt` and
 //! exported artifacts the same harness times the PJRT runtime. For the full
@@ -31,7 +37,7 @@
 //! every precision: the sweeps always mutate the f32 masters (shadow
 //! invalidation is a flag store), so their reduced-precision rows measure
 //! that those modes do NOT regress the perturb/update path (JSON
-//! version 6).
+//! version 7).
 //!
 //! Besides the stdout table, every run writes a machine-readable report to
 //! `BENCH_native.json` (override with `LEZO_BENCH_JSON=<path>`) so the perf
@@ -156,6 +162,14 @@ struct StepStat {
     /// precision (`mezo` ms / this row's ms); NaN (JSON null) for
     /// sequential rows, which have no reference.
     scaling: f64,
+    /// How evals were dispatched: `none` (single backend, sequential),
+    /// `thread` (in-process sharded replicas), or `socket` (spawned
+    /// `lezo worker` processes over the framed wire).
+    transport: &'static str,
+    /// Per-step socket round-trip latency (`StageTimes::rt_secs`): wall
+    /// time inside the forward stage that was dispatch + wire + wait, not
+    /// worker compute. A sub-split of `forward_ms`; zero off-socket.
+    rt_ms: f64,
 }
 
 struct CheckpointStat {
@@ -208,7 +222,7 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
     let mut s = String::new();
     let _ = write!(
         s,
-        "{{\n  \"version\": 6,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
+        "{{\n  \"version\": 7,\n  \"iters\": {iters},\n  \"threads\": {},\n  \"targets\": [",
         parallel::effective_threads()
     );
     for (ti, t) in targets.iter().enumerate() {
@@ -263,7 +277,7 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
                 "\n        {{\"name\": \"{}\", \"precision\": \"{}\", \"ms_per_step\": {}, \
                  \"perturb_ms\": {}, \"forward_ms\": {}, \"update_ms\": {}, \
                  \"non_forward_fraction\": {}, \"forward_bytes\": {}, \"tunable_params\": {}, \
-                 \"shards\": {}, \"scaling\": {}}}",
+                 \"shards\": {}, \"scaling\": {}, \"transport\": \"{}\", \"rt_ms\": {}}}",
                 st.name,
                 st.precision,
                 json_num(st.ms_per_step),
@@ -274,7 +288,9 @@ fn report_json(iters: usize, targets: &[TargetReport]) -> String {
                 json_num(st.forward_bytes),
                 st.tunable_params,
                 st.shards,
-                json_num(st.scaling)
+                json_num(st.scaling),
+                st.transport,
+                json_num(st.rt_ms)
             );
         }
         s.push_str("\n      ],\n      \"checkpoint\": [");
@@ -563,6 +579,8 @@ fn time_zo_steps<B: Backend>(
         tunable_params: tun.param_count(),
         shards: 0,
         scaling: f64::NAN,
+        transport: "none",
+        rt_ms: 0.0,
     }
 }
 
@@ -634,10 +652,162 @@ fn bench_sharded_into(model: &str, iters: usize, report: &mut TargetReport) {
                 tunable_params: tun.param_count(),
                 shards,
                 scaling: base_ms / ms,
+                transport: "thread",
+                rt_ms: times.per_step_rt_ms(),
             };
             println!(
                 "  mezo-sharded x{shards} [{prec}] {:>7.1} ms/step ({:.2}x vs 1-backend mezo)",
                 st.ms_per_step, st.scaling
+            );
+            report.steps.push(st);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// socket transport rows
+// ---------------------------------------------------------------------------
+
+/// Spawned `lezo worker --listen 127.0.0.1:0` processes; each announces
+/// its ephemeral port on stdout. Killed on drop.
+struct BenchWorkers {
+    procs: Vec<std::process::Child>,
+    addrs: Vec<String>,
+}
+
+impl BenchWorkers {
+    fn spawn(n: usize) -> anyhow::Result<BenchWorkers> {
+        use std::io::BufRead;
+        let exe = env!("CARGO_BIN_EXE_lezo");
+        let mut fleet = BenchWorkers { procs: vec![], addrs: vec![] };
+        for _ in 0..n {
+            let mut child = std::process::Command::new(exe)
+                .args(["worker", "--listen", "127.0.0.1:0"])
+                .stdout(std::process::Stdio::piped())
+                .stderr(std::process::Stdio::null())
+                .spawn()?;
+            let stdout = child.stdout.take().unwrap();
+            let mut line = String::new();
+            std::io::BufReader::new(stdout).read_line(&mut line)?;
+            let addr = line
+                .trim()
+                .strip_prefix("worker listening on ")
+                .ok_or_else(|| anyhow::anyhow!("unexpected worker banner {line:?}"))?
+                .to_string();
+            fleet.procs.push(child);
+            fleet.addrs.push(addr);
+        }
+        Ok(fleet)
+    }
+}
+
+impl Drop for BenchWorkers {
+    fn drop(&mut self) {
+        for c in &mut self.procs {
+            c.kill().ok();
+            c.wait().ok();
+        }
+    }
+}
+
+/// `mezo-sharded-socket` rows: the identical dense fan-out dispatched to
+/// real worker processes over the framed socket transport, at 1/2/4 shards
+/// and f32/bf16. Beyond `scaling` vs the single-backend `mezo` row, each
+/// row splits out `rt_ms` — the per-step wall time that was dispatch +
+/// wire + wait rather than worker compute — so the transport tax is
+/// tracked separately from the compute it hides.
+fn bench_socket_into(model: &str, iters: usize, report: &mut TargetReport) {
+    use lezo::runtime::transport::{SocketOpts, DEFAULT_NET_RETRIES, DEFAULT_NET_TIMEOUT_MS};
+    for precision in [Precision::F32, Precision::Bf16] {
+        let prec = match precision {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            _ => unreachable!(),
+        };
+        let base_ms = report
+            .steps
+            .iter()
+            .find(|s| s.name == "mezo" && s.precision == prec)
+            .map(|s| s.ms_per_step)
+            .unwrap_or(f64::NAN);
+        for shards in [1usize, 2, 4] {
+            let fleet = match BenchWorkers::spawn(shards) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("  [skip] mezo-sharded-socket x{shards} [{prec}]: {e}");
+                    continue;
+                }
+            };
+            let opts = SocketOpts {
+                workers: fleet.addrs.clone(),
+                model: model.to_string(),
+                precision,
+                artifact_dir: String::new(),
+                faults: String::new(),
+                timeout_ms: DEFAULT_NET_TIMEOUT_MS,
+                retries: DEFAULT_NET_RETRIES,
+            };
+            let replica = match NativeBackend::preset(model) {
+                Ok(b) => b.with_precision(precision),
+                Err(e) => {
+                    eprintln!("  [skip] mezo-sharded-socket x{shards} [{prec}]: {e}");
+                    continue;
+                }
+            };
+            let backend = match ShardedBackend::connect_socket(replica, &opts) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("  [skip] mezo-sharded-socket x{shards} [{prec}]: {e}");
+                    continue;
+                }
+            };
+            let spec = backend.spec().clone();
+            let elsize = elsize_bytes(precision);
+            backend.warm_zo().unwrap();
+            let host = backend.initial_params("").unwrap().0;
+            let mut tun = TunableUnits::from_host(&backend, &host).unwrap();
+            let active: Vec<usize> = (0..spec.n_units()).collect();
+            let prepared = backend.prepare_batch(&lm_batch(&spec, 32)).unwrap();
+            let eng = SpsaEngine::new(&backend, 1e-3, 1).unwrap();
+            let mut opt = ZoSgd;
+            let mut times = StageTimes::default();
+            let t = Instant::now();
+            for step in 0..iters as u64 {
+                eng.zo_step_fanout(
+                    step,
+                    &mut tun,
+                    &active,
+                    1e-5,
+                    &mut opt,
+                    PeftMode::Full,
+                    None,
+                    &prepared,
+                    &mut |_| Ok(None),
+                    &mut times,
+                )
+                .unwrap();
+            }
+            let ms = 1e3 * t.elapsed().as_secs_f64() / iters as f64;
+            let (p, f, u, _) = times.per_step_ms();
+            let st = StepStat {
+                name: "mezo-sharded-socket",
+                precision: prec,
+                ms_per_step: ms,
+                perturb_ms: p,
+                forward_ms: f,
+                update_ms: u,
+                non_forward_fraction: times.non_forward_fraction(),
+                forward_bytes: 2.0 * forward_bytes_model(&spec, spec.train_batch, 32, elsize),
+                tunable_params: tun.param_count(),
+                shards,
+                scaling: base_ms / ms,
+                transport: "socket",
+                rt_ms: times.per_step_rt_ms(),
+            };
+            println!(
+                "  mezo-sharded-socket x{shards} [{prec}] {:>7.1} ms/step \
+                 ({:.2}x vs 1-backend mezo, rt {:.2} ms/step)",
+                st.ms_per_step, st.scaling, st.rt_ms
             );
             report.steps.push(st);
         }
@@ -661,6 +831,10 @@ fn run_target(target: &str, iters: usize) -> Option<TargetReport> {
                 // 1/2/4 lockstep replicas, with its scaling vs the rows
                 // above (`shards`/`scaling` fields)
                 bench_sharded_into(model, iters, &mut report);
+                // and its multi-process twin: the identical fan-out over
+                // spawned `lezo worker` processes, with the round-trip
+                // latency split out per row (`transport`/`rt_ms` fields)
+                bench_socket_into(model, iters, &mut report);
                 Some(report)
             }
             Err(e) => {

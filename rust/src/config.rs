@@ -83,6 +83,38 @@ pub fn method_peft_alias(s: &str) -> Option<(Method, PeftMode)> {
     Some((method, peft))
 }
 
+/// Transport for `backend=sharded`: lockstep replicas in-process (scoped
+/// threads, the default) or remote `lezo worker` processes reached over the
+/// framed socket protocol (`runtime/transport.rs`). Results are bit-identical
+/// either way — the transport moves only `StepPlan`s and `(eval, loss)`
+/// scalars, never parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardTransport {
+    #[default]
+    Thread,
+    Socket,
+}
+
+impl FromStr for ShardTransport {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "thread" => ShardTransport::Thread,
+            "socket" => ShardTransport::Socket,
+            other => bail!("unknown shard_transport '{other}' (expected thread|socket)"),
+        })
+    }
+}
+
+impl fmt::Display for ShardTransport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ShardTransport::Thread => "thread",
+            ShardTransport::Socket => "socket",
+        })
+    }
+}
+
 /// Full description of one run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -134,6 +166,22 @@ pub struct RunConfig {
     /// mirroring `threads`/`LEZO_THREADS`; zero is rejected either way.
     /// Results are bit-identical to `backend=native` at any shard count.
     pub shards: usize,
+    /// How `backend=sharded` reaches its replicas: `thread` (in-process,
+    /// the default) or `socket` (remote `lezo worker` processes listed in
+    /// `workers`). Excluded from the checkpoint fingerprint like `shards` —
+    /// a run may resume under either transport.
+    pub shard_transport: ShardTransport,
+    /// Comma-separated `host:port` worker addresses for
+    /// `shard_transport=socket`, one per shard (start each with
+    /// `lezo worker --listen <addr>`). Ignored for `thread`.
+    pub workers: String,
+    /// Socket transport: per-request timeout in milliseconds (the
+    /// `LEZO_NET_TIMEOUT_MS` env var overrides; must be >= 1). Plan requests
+    /// additionally stay live while worker heartbeats arrive.
+    pub net_timeout_ms: u64,
+    /// Socket transport: bounded attempts per request before the worker is
+    /// declared dead (the `LEZO_NET_RETRIES` env var overrides; >= 1).
+    pub net_retries: u32,
     /// Native-backend worker threads (0 = auto / available parallelism).
     /// The `LEZO_THREADS` env var overrides this at kernel-entry time.
     /// Results are bit-identical at any setting — the native kernels use
@@ -201,6 +249,10 @@ impl Default for RunConfig {
             policy: Policy::Uniform,
             smezo_keep: 0.5,
             shards: 2,
+            shard_transport: ShardTransport::Thread,
+            workers: String::new(),
+            net_timeout_ms: crate::runtime::transport::DEFAULT_NET_TIMEOUT_MS,
+            net_retries: crate::runtime::transport::DEFAULT_NET_RETRIES,
             threads: 0,
             precision: Precision::F32,
             zo_opt: ZoOptKind::Sgd,
@@ -216,6 +268,16 @@ impl Default for RunConfig {
 impl RunConfig {
     pub fn artifact_dir(&self) -> String {
         format!("{}/{}", self.artifacts_root, self.model)
+    }
+
+    /// The `workers` key split into individual `host:port` addresses.
+    pub fn worker_addrs(&self) -> Vec<String> {
+        self.workers
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
     }
 
     /// Apply one `key=value` override.
@@ -264,6 +326,22 @@ impl RunConfig {
                     bail!("shards must be a positive replica count, got 0");
                 }
                 self.shards = n;
+            }
+            "shard_transport" => self.shard_transport = parse!(),
+            "workers" => self.workers = value.to_string(),
+            "net_timeout_ms" => {
+                let n: u64 = parse!();
+                if n == 0 {
+                    bail!("net_timeout_ms must be a positive number of milliseconds, got 0");
+                }
+                self.net_timeout_ms = n;
+            }
+            "net_retries" => {
+                let n: u32 = parse!();
+                if n == 0 {
+                    bail!("net_retries must be a positive attempt count, got 0");
+                }
+                self.net_retries = n;
             }
             "threads" => self.threads = parse!(),
             "precision" => self.precision = parse!(),
@@ -327,12 +405,14 @@ impl RunConfig {
             "model = {}\ntask = {}\nmethod = {}\npeft = {}\ndrop_layers = {}\nlr = {}\n\
              mu = {}\nsteps = {}\neval_every = {}\neval_examples = {}\ntrain_examples = {}\n\
              seed = {}\nicl_shots = {}\nmean_len = {}\nblocks_only = {}\nzo_opt = {}\n\
-             shards = {}\nresume = {}\nsave_every = {}\non_nonfinite = {}\n\
+             shards = {}\nshard_transport = {}\nworkers = {}\nnet_timeout_ms = {}\n\
+             net_retries = {}\nresume = {}\nsave_every = {}\non_nonfinite = {}\n\
              divergence_factor = {}\n",
             self.model, self.task, self.method, self.peft, self.drop_layers, self.lr,
             self.mu, self.steps, self.eval_every, self.eval_examples, self.train_examples,
             self.seed, self.icl_shots, self.mean_len, self.blocks_only, self.zo_opt,
-            self.shards, self.resume, self.save_every, self.on_nonfinite,
+            self.shards, self.shard_transport, self.workers, self.net_timeout_ms,
+            self.net_retries, self.resume, self.save_every, self.on_nonfinite,
             self.divergence_factor,
         )
     }
@@ -365,6 +445,38 @@ impl RunConfig {
         }
         if self.shards == 0 {
             bail!("shards must be a positive replica count, got 0");
+        }
+        if self.shard_transport == ShardTransport::Socket {
+            if self.shards < 2 {
+                bail!(
+                    "shard_transport=socket with shards=1 has no remote fan-out to tolerate \
+                     faults on; use shard_transport=thread for a single shard, or set the \
+                     `shards` config key (or LEZO_SHARDS) to >= 2 and list one worker address \
+                     per shard in `workers`"
+                );
+            }
+            let n_workers = self.worker_addrs().len();
+            if n_workers == 0 {
+                bail!(
+                    "shard_transport=socket requires the `workers` config key: a \
+                     comma-separated host:port list, one address per shard (start each \
+                     worker with `lezo worker --listen <addr>`)"
+                );
+            }
+            if n_workers != self.shards {
+                bail!(
+                    "socket transport needs one worker address per shard: the `workers` key \
+                     lists {n_workers} address(es) but shards = {} (adjust one of them, or \
+                     unset LEZO_SHARDS if it is overriding)",
+                    self.shards
+                );
+            }
+        }
+        if self.net_timeout_ms == 0 {
+            bail!("net_timeout_ms must be a positive number of milliseconds, got 0");
+        }
+        if self.net_retries == 0 {
+            bail!("net_retries must be a positive attempt count, got 0");
         }
         FaultPlan::parse(&self.faults)
             .map_err(|e| anyhow!("faults key does not parse: {e}"))?;
@@ -617,6 +729,68 @@ mod tests {
         c.shards = 0;
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("shards"), "{err}");
+    }
+
+    #[test]
+    fn shard_transport_keys_parse_and_round_trip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.shard_transport, ShardTransport::Thread, "default is in-process");
+        assert!(c.workers.is_empty());
+        assert_eq!(c.net_timeout_ms, 5_000);
+        assert_eq!(c.net_retries, 3);
+
+        c.apply_overrides(&[
+            "shard_transport=socket".into(),
+            "workers=127.0.0.1:7001, 127.0.0.1:7002".into(),
+            "net_timeout_ms=250".into(),
+            "net_retries=5".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.shard_transport, ShardTransport::Socket);
+        assert_eq!(c.worker_addrs(), vec!["127.0.0.1:7001", "127.0.0.1:7002"]);
+        assert_eq!((c.net_timeout_ms, c.net_retries), (250, 5));
+
+        // bad values fail at the CLI, naming the valid set / range
+        let err = c.set("shard_transport", "carrier-pigeon").unwrap_err().to_string();
+        assert!(err.contains("thread|socket"), "{err}");
+        assert!(c.set("net_timeout_ms", "0").is_err());
+        assert!(c.set("net_retries", "0").is_err());
+        assert!(c.set("net_timeout_ms", "soon").is_err());
+
+        // the file format round-trips every new key
+        let path = std::env::temp_dir().join("lezo_cfg_test_transport.conf");
+        std::fs::write(&path, c.to_file_format()).unwrap();
+        let c1 = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c1.shard_transport, ShardTransport::Socket);
+        assert_eq!(c1.worker_addrs(), c.worker_addrs());
+        assert_eq!((c1.net_timeout_ms, c1.net_retries), (250, 5));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_socket_configs() {
+        // socket with a single shard: actionable rejection
+        let mut c = RunConfig::default();
+        c.set("shard_transport", "socket").unwrap();
+        c.set("workers", "127.0.0.1:7001").unwrap();
+        c.shards = 1;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("shards=1") && err.contains("shard_transport=thread"), "{err}");
+
+        // socket without worker addresses
+        let mut c = RunConfig::default();
+        c.set("shard_transport", "socket").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("workers") && err.contains("lezo worker --listen"), "{err}");
+
+        // worker count must match the shard count
+        c.set("workers", "127.0.0.1:7001").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("1 address") && err.contains("shards = 2"), "{err}");
+
+        // a consistent socket config passes
+        c.set("workers", "127.0.0.1:7001,127.0.0.1:7002").unwrap();
+        c.validate().unwrap();
     }
 
     #[test]

@@ -13,15 +13,26 @@
 //! crash@K:pre-save      crash immediately before writing step K's state
 //! crash@K:mid-save      crash mid-write: leaves a torn temp file behind
 //! io-err@save:N         the N-th state save attempt fails with an io error
+//! net-drop@K            socket mode: worker drops the connection instead of
+//!                       replying to step K's plan request (fires once)
+//! net-delay@K:ms        socket mode: worker sleeps `ms` before computing
+//!                       step K's plan (drills the timeout/heartbeat path)
+//! net-corrupt@K         socket mode: worker corrupts the CRC of step K's
+//!                       reply frame, then drops the connection (fires once)
+//! worker-crash@K:shard  socket mode: the named shard's worker process exits
+//!                       hard on step K's plan request (degradation drill)
 //! ```
 //!
 //! Steps are the 1-based step counter the trainer logs. "Crashes" are
 //! propagated as ordinary errors carrying [`CRASH_MARKER`], so kill-and-resume
 //! tests run in-process while the on-disk state is exactly what a real crash
-//! at that boundary would leave.
+//! at that boundary would leave. The `net-*` / `worker-crash` faults are
+//! injected on the *worker* side of the socket transport (the coordinator
+//! forwards the effective fault string over the wire at INIT), so the
+//! coordinator's retry / degradation machinery is exercised for real.
 
 use anyhow::{bail, ensure, Result};
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::str::FromStr;
 
@@ -117,6 +128,10 @@ pub struct FaultPlan {
     crashes: Vec<(u64, CrashPhase)>,
     io_err_saves: BTreeSet<u64>,
     save_attempts: u64,
+    net_drop: BTreeSet<u64>,
+    net_delay: BTreeMap<u64, u64>,
+    net_corrupt: BTreeSet<u64>,
+    worker_crash: Vec<(u64, usize)>,
 }
 
 impl FaultPlan {
@@ -167,7 +182,49 @@ impl FaultPlan {
                     ensure!(n > 0, "io-err save index is 1-based");
                     plan.io_err_saves.insert(n);
                 }
-                other => bail!("unknown fault kind '{other}' (expected nan-loss|crash|io-err)"),
+                "net-drop" => {
+                    let step: u64 = at
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("net-drop step '{at}' is not an integer"))?;
+                    ensure!(step > 0, "net-drop step must be >= 1 (steps are 1-based)");
+                    plan.net_drop.insert(step);
+                }
+                "net-delay" => {
+                    let Some((step_s, ms_s)) = at.split_once(':') else {
+                        bail!("net-delay fault '{tok}' must be net-delay@<step>:<ms>");
+                    };
+                    let step: u64 = step_s.parse().map_err(|_| {
+                        anyhow::anyhow!("net-delay step '{step_s}' is not an integer")
+                    })?;
+                    let ms: u64 = ms_s.parse().map_err(|_| {
+                        anyhow::anyhow!("net-delay duration '{ms_s}' is not a millisecond count")
+                    })?;
+                    ensure!(step > 0, "net-delay step must be >= 1 (steps are 1-based)");
+                    plan.net_delay.insert(step, ms);
+                }
+                "net-corrupt" => {
+                    let step: u64 = at.parse().map_err(|_| {
+                        anyhow::anyhow!("net-corrupt step '{at}' is not an integer")
+                    })?;
+                    ensure!(step > 0, "net-corrupt step must be >= 1 (steps are 1-based)");
+                    plan.net_corrupt.insert(step);
+                }
+                "worker-crash" => {
+                    let Some((step_s, shard_s)) = at.split_once(':') else {
+                        bail!("worker-crash fault '{tok}' must be worker-crash@<step>:<shard>");
+                    };
+                    let step: u64 = step_s.parse().map_err(|_| {
+                        anyhow::anyhow!("worker-crash step '{step_s}' is not an integer")
+                    })?;
+                    let shard: usize = shard_s.parse().map_err(|_| {
+                        anyhow::anyhow!("worker-crash shard '{shard_s}' is not a shard index")
+                    })?;
+                    ensure!(step > 0, "worker-crash step must be >= 1 (steps are 1-based)");
+                    plan.worker_crash.push((step, shard));
+                }
+                other => bail!(
+                    "unknown fault kind '{other}' (expected nan-loss|crash|io-err|net-drop|net-delay|net-corrupt|worker-crash)"
+                ),
             }
         }
         Ok(plan)
@@ -175,7 +232,13 @@ impl FaultPlan {
 
     /// True if the plan injects nothing (fast-path check for the hot loop).
     pub fn is_empty(&self) -> bool {
-        self.nan_loss.is_empty() && self.crashes.is_empty() && self.io_err_saves.is_empty()
+        self.nan_loss.is_empty()
+            && self.crashes.is_empty()
+            && self.io_err_saves.is_empty()
+            && self.net_drop.is_empty()
+            && self.net_delay.is_empty()
+            && self.net_corrupt.is_empty()
+            && self.worker_crash.is_empty()
     }
 
     /// Should the first forward loss of 1-based step `s1` return NaN?
@@ -197,6 +260,30 @@ impl FaultPlan {
         self.crashes.iter().any(|&(k, p)| k == s1 && p == CrashPhase::MidSave)
     }
 
+    /// Socket mode (worker side): should the worker drop the connection
+    /// instead of replying to 1-based step `s1`'s plan request?
+    pub fn net_drop_at(&self, s1: u64) -> bool {
+        self.net_drop.contains(&s1)
+    }
+
+    /// Socket mode (worker side): sleep this many milliseconds before
+    /// computing 1-based step `s1`'s plan, if scheduled.
+    pub fn net_delay_at(&self, s1: u64) -> Option<u64> {
+        self.net_delay.get(&s1).copied()
+    }
+
+    /// Socket mode (worker side): should the worker corrupt the CRC of
+    /// 1-based step `s1`'s reply frame?
+    pub fn net_corrupt_at(&self, s1: u64) -> bool {
+        self.net_corrupt.contains(&s1)
+    }
+
+    /// Socket mode (worker side): should worker `shard` exit hard on
+    /// 1-based step `s1`'s plan request?
+    pub fn worker_crash_at(&self, s1: u64, shard: usize) -> bool {
+        self.worker_crash.iter().any(|&(k, s)| k == s1 && s == shard)
+    }
+
     /// Account one state-save attempt and report what it should do. The save
     /// counter advances on every attempt, so `io-err@save:N` hits exactly the
     /// N-th write of the run.
@@ -208,6 +295,22 @@ impl FaultPlan {
             SaveFault::IoErr
         } else {
             SaveFault::None
+        }
+    }
+}
+
+/// Resolve the *effective* fault string the same way [`FaultPlan::resolve`]
+/// does (env wins, strict), returning the raw string so the coordinator can
+/// forward it verbatim to socket workers at INIT. Validates by parsing.
+pub fn resolve_faults_string(cfg_faults: &str) -> Result<String> {
+    match std::env::var("LEZO_FAULTS") {
+        Ok(v) if !v.trim().is_empty() => {
+            FaultPlan::parse(&v).map_err(|e| anyhow::anyhow!("invalid LEZO_FAULTS='{v}': {e}"))?;
+            Ok(v)
+        }
+        _ => {
+            FaultPlan::parse(cfg_faults)?;
+            Ok(cfg_faults.to_string())
         }
     }
 }
@@ -262,8 +365,40 @@ mod tests {
             "io-err@load:1",
             "io-err@save:0",
             "explode@9",
+            "net-drop@x",
+            "net-drop@0",
+            "net-delay@3",
+            "net-delay@3:fast",
+            "net-corrupt@zero",
+            "worker-crash@2",
+            "worker-crash@2:one",
+            "net-bogus@1",
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        let err = FaultPlan::parse("net-bogus@1").unwrap_err().to_string();
+        assert!(err.contains("unknown fault kind 'net-bogus'"), "{err}");
+        assert!(err.contains("worker-crash"), "{err}");
+    }
+
+    #[test]
+    fn parses_net_faults() {
+        let p =
+            FaultPlan::parse("net-drop@2,net-delay@3:250,net-corrupt@4,worker-crash@5:1").unwrap();
+        assert!(!p.is_empty());
+        assert!(p.net_drop_at(2) && !p.net_drop_at(3));
+        assert_eq!(p.net_delay_at(3), Some(250));
+        assert_eq!(p.net_delay_at(2), None);
+        assert!(p.net_corrupt_at(4) && !p.net_corrupt_at(5));
+        assert!(p.worker_crash_at(5, 1));
+        assert!(!p.worker_crash_at(5, 0) && !p.worker_crash_at(4, 1));
+    }
+
+    #[test]
+    fn faults_string_resolution_validates() {
+        if std::env::var("LEZO_FAULTS").map(|v| v.trim().is_empty()).unwrap_or(true) {
+            assert_eq!(resolve_faults_string("net-drop@2").unwrap(), "net-drop@2");
+            assert!(resolve_faults_string("net-bogus@1").is_err());
         }
     }
 

@@ -10,6 +10,13 @@ pub struct StageTimes {
     pub forward_secs: f64,
     pub update_secs: f64,
     pub other_secs: f64,
+    /// Socket-transport round-trip latency: wall time inside the forward
+    /// stage that was *not* worker compute (dispatch + wire + wait). A
+    /// sub-split of `forward_secs`, so it is excluded from [`total`]; zero
+    /// for thread transport and single-backend runs.
+    ///
+    /// [`total`]: StageTimes::total
+    pub rt_secs: f64,
     pub steps: u64,
 }
 
@@ -28,6 +35,11 @@ impl StageTimes {
         )
     }
 
+    /// Per-step socket round-trip latency in ms (see [`StageTimes::rt_secs`]).
+    pub fn per_step_rt_ms(&self) -> f64 {
+        1e3 * self.rt_secs / self.steps.max(1) as f64
+    }
+
     /// Fraction of step time spent outside the forward pass — the paper's
     /// headline observation is that this exceeds 0.5 for MeZO.
     pub fn non_forward_fraction(&self) -> f64 {
@@ -44,6 +56,7 @@ impl StageTimes {
         self.forward_secs += other.forward_secs;
         self.update_secs += other.update_secs;
         self.other_secs += other.other_secs;
+        self.rt_secs += other.rt_secs;
         self.steps += other.steps;
     }
 }
@@ -110,9 +123,12 @@ mod tests {
             forward_secs: 4.0,
             update_secs: 2.0,
             other_secs: 1.0,
+            rt_secs: 0.5,
             steps: 10,
         };
+        // rt is a sub-split of forward time, not an additional stage
         assert!((s.total() - 10.0).abs() < 1e-12);
+        assert!((s.per_step_rt_ms() - 50.0).abs() < 1e-12);
         assert!((s.non_forward_fraction() - 0.6).abs() < 1e-12);
         let (p, f, u, o) = s.per_step_ms();
         assert_eq!((p, f, u, o), (300.0, 400.0, 200.0, 100.0));
@@ -121,10 +137,17 @@ mod tests {
     #[test]
     fn merge_accumulates() {
         let mut a = StageTimes { perturb_secs: 1.0, steps: 2, ..Default::default() };
-        let b = StageTimes { perturb_secs: 2.0, forward_secs: 5.0, steps: 3, ..Default::default() };
+        let b = StageTimes {
+            perturb_secs: 2.0,
+            forward_secs: 5.0,
+            rt_secs: 0.25,
+            steps: 3,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.perturb_secs, 3.0);
         assert_eq!(a.forward_secs, 5.0);
+        assert_eq!(a.rt_secs, 0.25);
         assert_eq!(a.steps, 5);
     }
 

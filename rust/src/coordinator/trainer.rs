@@ -188,10 +188,48 @@ pub fn resolve_backend(cfg: &RunConfig) -> Result<ResolvedBackend> {
             // precision/artifact adoption as a native run, so every replica
             // starts from the same bits as the run backend=native would
             let shards = crate::runtime::sharded::resolve_shards(cfg.shards)?;
-            let replicas = (0..shards)
-                .map(|_| native_replica(&artifact_dir))
-                .collect::<Result<Vec<_>>>()?;
-            Ok(ResolvedBackend::Sharded(ShardedBackend::from_replicas(replicas)?))
+            match cfg.shard_transport {
+                crate::config::ShardTransport::Thread => {
+                    let replicas = (0..shards)
+                        .map(|_| native_replica(&artifact_dir))
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok(ResolvedBackend::Sharded(ShardedBackend::from_replicas(replicas)?))
+                }
+                crate::config::ShardTransport::Socket => {
+                    // one local replica answers reads/FO; remote `lezo
+                    // worker` processes (one per shard) run the plan evals.
+                    // The effective fault string travels to the workers at
+                    // INIT so net faults are injected worker-side.
+                    let addrs = cfg.worker_addrs();
+                    ensure!(
+                        shards >= 2,
+                        "shard_transport=socket with shards=1 has no remote fan-out to \
+                         tolerate faults on; use shard_transport=thread for a single shard, \
+                         or set the `shards` config key (or LEZO_SHARDS) to >= 2"
+                    );
+                    ensure!(
+                        addrs.len() == shards,
+                        "socket transport needs one worker address per shard: the `workers` \
+                         key lists {} address(es) but the resolved shard count is {shards} \
+                         (adjust one of them, or unset LEZO_SHARDS if it is overriding)",
+                        addrs.len()
+                    );
+                    let faults =
+                        crate::coordinator::faults::resolve_faults_string(&cfg.faults)?;
+                    let opts = crate::runtime::transport::SocketOpts {
+                        workers: addrs,
+                        model: cfg.model.clone(),
+                        precision,
+                        artifact_dir: cfg.artifact_dir(),
+                        faults,
+                        timeout_ms: cfg.net_timeout_ms,
+                        retries: cfg.net_retries,
+                    };
+                    let backend =
+                        ShardedBackend::connect_socket(native_replica(&artifact_dir)?, &opts)?;
+                    Ok(ResolvedBackend::Sharded(backend))
+                }
+            }
         }
         BackendKind::Pjrt => {
             check_pjrt_precision()?;
@@ -296,10 +334,13 @@ fn divergence_reason(losses: &[f32], factor: f64) -> Option<String> {
 /// configuration is rejected with an error naming the differing field — a
 /// hash could only say "something differs".
 ///
-/// Execution-geometry keys (`threads`, `shards`) are deliberately absent:
+/// Execution-geometry keys (`threads`, `shards`, `shard_transport`,
+/// `workers`, `net_timeout_ms`, `net_retries`) are deliberately absent:
 /// the native kernels are thread-count invariant and the sharded backend is
-/// bit-identical to native at any shard count, so a run may resume under a
-/// different worker geometry and still land on the same trajectory. The
+/// bit-identical to native at any shard count and over either transport, so
+/// a run may resume under a different worker geometry — including moving
+/// between in-process and socket shards — and still land on the same
+/// trajectory. The
 /// backend *name* stays in (native and sharded print the same bits, but a
 /// fingerprint should say what actually executed the checkpointed steps).
 fn run_config_string(
@@ -714,6 +755,7 @@ impl Trainer {
                     forward_secs: f,
                     update_secs: u,
                     other_secs: o,
+                    rt_secs: 0.0, // diagnostic split, not persisted in state
                     steps: st.stage_steps,
                 };
                 crate::info!(
@@ -1062,6 +1104,7 @@ impl Trainer {
                     forward_secs: f,
                     update_secs: u,
                     other_secs: o,
+                    rt_secs: 0.0, // diagnostic split, not persisted in state
                     steps: st.stage_steps,
                 };
                 train_secs = times.total();

@@ -46,7 +46,11 @@
 //!   authoritative in every mode ([`runtime::native`], "Precision").
 //!   [`runtime::sharded`] runs N lockstep native replicas and fans each ZO
 //!   step's forward evaluations across them — only `(probe, loss)` scalars
-//!   travel, and the trajectory is bit-identical to single-backend native.
+//!   travel, and the trajectory is bit-identical to single-backend native;
+//!   with `shard_transport=socket` the replicas are separate `lezo worker`
+//!   processes behind the framed, CRC-32'd, fault-tolerant wire protocol of
+//!   [`runtime::transport`] (heartbeats, idempotent bounded retries, and
+//!   degraded continuation that stays bitwise when a worker dies).
 //!   [`runtime::pjrt`] (feature `pjrt`) executes the AOT HLO artifacts
 //!   instead.
 //! - **L2/L1** live in `python/compile/` and never run on the request path.

@@ -4,6 +4,7 @@
 //! lezo train   [--config FILE] [key=value ...]   run one fine-tuning run
 //! lezo pretrain model=<size> [steps=N lr=X seed=S]
 //! lezo bench   <id|all> [key=value ...]          regenerate a paper table/figure
+//! lezo worker  --listen <addr>                   serve as a socket-transport shard
 //! lezo info    [model=<size>]                    show artifact manifest
 //! lezo render  task=<name> [n=K seed=S]          dump synthetic examples
 //! ```
@@ -22,16 +23,24 @@ fn usage() -> ! {
          USAGE:\n  lezo train   [--config FILE] [key=value ...]\n  \
          lezo pretrain model=<size> [backend=auto|native|pjrt] [steps=N] [lr=X] [seed=S]\n  \
          lezo bench   <id|all> [key=value ...]    ids: {}\n  \
+         lezo worker  --listen <addr>             serve as a socket-transport shard\n  \
          lezo info    [model=<size>]\n  lezo render  task=<name> [n=K] [seed=S]\n\n\
-         Common keys: model backend shards task method peft drop_layers lr mu steps\n\
-         eval_every eval_examples train_examples seed icl_shots mean_len checkpoint\n\
-         precision threads zo_opt save_every resume faults on_nonfinite\n\
-         divergence_factor\n\
+         Common keys: model backend shards shard_transport workers task method peft\n\
+         drop_layers lr mu steps eval_every eval_examples train_examples seed\n\
+         icl_shots mean_len checkpoint precision threads zo_opt save_every resume\n\
+         faults on_nonfinite divergence_factor net_timeout_ms net_retries\n\
          (backend:   auto|native|sharded|pjrt — native needs no artifacts;\n\
           sharded runs N native replicas in lockstep and fans each ZO step's\n\
           forwards across them, bit-identical to native)\n\
          (shards:    replica count for backend=sharded (default 2).\n\
           Env LEZO_SHARDS overrides, like LEZO_THREADS for threads)\n\
+         (shard_transport: thread|socket — socket fans evals out to remote\n\
+          `lezo worker` processes listed in workers=host:port,... (one per\n\
+          shard), bit-identical to thread/native; workers that die mid-run\n\
+          are dropped and the run continues on the survivors)\n\
+         (net_timeout_ms / net_retries: per-request socket timeout and\n\
+          bounded attempt count; env LEZO_NET_TIMEOUT_MS / LEZO_NET_RETRIES\n\
+          override, like LEZO_THREADS for threads)\n\
          (method:    zero-shot|icl|ft|mezo|lezo|smezo, or a Table-4 alias\n\
           mezo-lora|lezo-lora|mezo-prefix|lezo-prefix that also sets peft)\n\
          (peft:      full|lora|prefix — adapter tuning runs on any backend)\n\
@@ -46,8 +55,10 @@ fn usage() -> ! {
          (save_every: N>0 writes train_state.ckpt atomically every N steps\n\
           (0 = off); resume: auto|never|<path> — auto picks up the run's own\n\
           state after a crash, bit-identical to the uninterrupted run)\n\
-         (faults:    deterministic fault injection for crash drills, e.g.\n\
-          nan-loss@120,crash@250,io-err@save:2; env LEZO_FAULTS overrides)\n\
+         (faults:    deterministic fault injection for crash + transport\n\
+          drills, e.g. nan-loss@120,crash@250,io-err@save:2 or socket-mode\n\
+          net-drop@K, net-delay@K:ms, net-corrupt@K, worker-crash@K:shard\n\
+          (injected worker-side); env LEZO_FAULTS overrides)\n\
          (on_nonfinite: error|skip-step — what a NaN/inf training loss does;\n\
           divergence_factor: halt when smoothed loss exceeds this multiple\n\
           of the start loss, 0 = off)\n\
@@ -112,6 +123,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
             p + f + u + o
         );
         println!("non-forward    : {:.0}%", 100.0 * report.stage_times.non_forward_fraction());
+        if report.stage_times.rt_secs > 0.0 {
+            println!("socket rt      : {:.1} ms/step", report.stage_times.per_step_rt_ms());
+        }
         println!("active params  : {:.0}%/step", 100.0 * report.active_param_fraction);
     }
     println!("\nconvergence (step, train_s, {}%):", report.metric_kind);
@@ -147,6 +161,27 @@ fn cmd_pretrain(args: &[String]) -> Result<()> {
     println!("pretrained {}: LM loss {first:.3} -> {last:.3} over {steps} steps", cfg.model);
     println!("checkpoint: {}", dir.join("pretrained.ckpt").display());
     Ok(())
+}
+
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let (rest, _) = split_flags(args);
+    let mut listen = None;
+    let mut it = rest.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--listen" => {
+                listen = it.next().cloned();
+                if listen.is_none() {
+                    bail!("--listen needs a host:port address (e.g. --listen 127.0.0.1:7001)");
+                }
+            }
+            other => bail!("unknown worker arg '{other}' (usage: lezo worker --listen <addr>)"),
+        }
+    }
+    let Some(addr) = listen else {
+        bail!("lezo worker needs --listen <addr> (e.g. --listen 127.0.0.1:7001, or :0 for an ephemeral port)");
+    };
+    lezo::runtime::transport::run_worker(&addr)
 }
 
 fn cmd_bench(args: &[String]) -> Result<()> {
@@ -236,6 +271,7 @@ fn main() {
         "train" => cmd_train(rest),
         "pretrain" => cmd_pretrain(rest),
         "bench" => cmd_bench(rest),
+        "worker" => cmd_worker(rest),
         "info" => cmd_info(rest),
         "render" => cmd_render(rest),
         "help" | "--help" | "-h" => usage(),

@@ -22,9 +22,15 @@
 //!   (`native::kernels`), dense reference (`native::forward`).
 //! - [`plan`] — the explicit `StepPlan`: one ZO step as ordered seeded-axpy
 //!   sweeps + forward evaluations, the unit of distribution.
-//! - [`sharded`] — `ShardedBackend`: N in-process native worker replicas on
-//!   scoped threads; a step's plan evaluations fan out across them and only
-//!   `(probe, loss)` scalars come back.
+//! - [`sharded`] — `ShardedBackend`: N lockstep native worker replicas —
+//!   in-process scoped threads (`shard_transport=thread`) or remote `lezo
+//!   worker` processes (`shard_transport=socket`); a step's plan
+//!   evaluations fan out across them and only `(probe, loss)` scalars come
+//!   back.
+//! - [`transport`] — the fault-tolerant framed socket protocol for socket
+//!   mode: CRC'd length-prefixed frames, heartbeats, bounded
+//!   retry-with-backoff, deterministic net fault injection, and
+//!   degraded-mode continuation when workers die.
 //! - [`client`] / [`exes`] / [`pjrt`] (feature `pjrt`) — the PJRT client,
 //!   the lazily compiled executable registry, and the PJRT backend.
 
@@ -33,6 +39,7 @@ pub mod native;
 pub mod philox;
 pub mod plan;
 pub mod sharded;
+pub mod transport;
 
 #[cfg(feature = "pjrt")]
 pub mod client;

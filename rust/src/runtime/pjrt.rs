@@ -19,6 +19,11 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
 
+/// Wall-clock budget for one host<->device transfer including all retries.
+/// Generous (transfers are milliseconds even for the largest units), but
+/// finite: a wedged runtime surfaces as a named error instead of a hang.
+const TRANSFER_DEADLINE: std::time::Duration = std::time::Duration::from_secs(30);
+
 pub struct PjrtBackend {
     rt: Runtime,
     reg: ExeRegistry,
@@ -138,12 +143,26 @@ impl Backend for PjrtBackend {
         // transiently on real accelerator runtimes (the CPU client never
         // does, so the first attempt always wins there); bounded
         // retry-with-backoff keeps a mid-run checkpoint download or a resume
-        // upload from killing hours of training on a hiccup
-        crate::util::retry_with_backoff("pjrt upload", 3, 10, || self.rt.vec_f32(data))
+        // upload from killing hours of training on a hiccup. The wall-clock
+        // deadline bounds the whole retry loop too, so a runtime that blocks
+        // instead of erroring cannot stall a transfer indefinitely.
+        crate::util::retry_with_backoff_deadline(
+            "pjrt upload",
+            3,
+            10,
+            Some(std::time::Instant::now() + TRANSFER_DEADLINE),
+            || self.rt.vec_f32(data),
+        )
     }
 
     fn download(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
-        crate::util::retry_with_backoff("pjrt download", 3, 10, || self.rt.read_vec_f32(buf))
+        crate::util::retry_with_backoff_deadline(
+            "pjrt download",
+            3,
+            10,
+            Some(std::time::Instant::now() + TRANSFER_DEADLINE),
+            || self.rt.read_vec_f32(buf),
+        )
     }
 
     fn zo_axpy(

@@ -42,6 +42,20 @@
 //! unset/empty means "no override", anything else must parse as a positive
 //! count — an unparseable value is a hard error naming the variable, never
 //! a silent fall-through ([`env_shards`]).
+//!
+//! ## Transport (`shard_transport=thread|socket`)
+//!
+//! `thread` (default) is the in-process mode above. `socket`
+//! ([`ShardedBackend::connect_socket`]) replaces the N in-process replicas
+//! with one **local** replica plus a pool of remote `lezo worker --listen
+//! <addr>` processes speaking the framed protocol in
+//! [`crate::runtime::transport`]: mutations are broadcast to the pool,
+//! plan evals are dispatched to the workers, and reads stay on the local
+//! replica. Worker death mid-run degrades — the remaining evals are
+//! re-partitioned over survivors via the same [`shard_owner`] rule, which
+//! keeps the trajectory bit-identical to native by construction (the
+//! partitioning only decides *where* an eval runs, never *what* it
+//! computes). See the transport module docs for the failure model.
 
 use crate::coordinator::metrics::{StageTimer, StageTimes};
 use crate::data::batch::Batch;
@@ -81,8 +95,8 @@ fn parse_shards(v: &str) -> Result<Option<usize>> {
     match v.parse::<usize>() {
         Ok(n) if n > 0 => Ok(Some(n)),
         _ => Err(anyhow!(
-            "LEZO_SHARDS='{v}' is not a positive shard count (unset it to use the `shards` \
-             config key)"
+            "LEZO_SHARDS='{v}' is not a valid shard count for the `shards` config key \
+             (expected an integer >= 1; unset LEZO_SHARDS to use the config value)"
         )),
     }
 }
@@ -96,7 +110,11 @@ pub fn env_shards() -> Result<Option<usize>> {
 /// key's value; zero is rejected either way.
 pub fn resolve_shards(requested: usize) -> Result<usize> {
     let n = env_shards()?.unwrap_or(requested);
-    ensure!(n >= 1, "shards must be a positive count (got {n})");
+    ensure!(
+        n >= 1,
+        "shards must be a positive count (got {n}; set the `shards` config key or \
+         LEZO_SHARDS to an integer >= 1)"
+    );
     Ok(n)
 }
 
@@ -139,6 +157,12 @@ pub struct ShardedBackend {
     /// next backend entry (handles drop on the coordinator thread while no
     /// plan is in flight, so a lazy sweep is enough).
     freed: Arc<Mutex<Vec<u64>>>,
+    /// `shard_transport=socket`: the pool of remote `lezo worker`
+    /// processes. When set, `replicas` holds exactly one **local** replica
+    /// (reads and FO stay on it, and it walks every sweep so coordinator
+    /// bits match native); every mutation is additionally broadcast to the
+    /// pool, and plan evals are dispatched to the workers.
+    remote: Option<RefCell<crate::runtime::transport::RemotePool>>,
 }
 
 impl ShardedBackend {
@@ -172,7 +196,43 @@ impl ShardedBackend {
             ),
             next_id: Cell::new(0),
             freed: Arc::new(Mutex::new(Vec::new())),
+            remote: None,
         })
+    }
+
+    /// Socket transport: one local replica plus a pool of remote `lezo
+    /// worker` processes (one per address in `opts.workers`), each
+    /// initialized to the identical model/precision so the whole set runs
+    /// in lockstep. Worker death mid-run degrades (see `run_zo_plan`);
+    /// failure to *initialize* a worker is a hard error.
+    pub fn connect_socket(
+        replica: NativeBackend,
+        opts: &crate::runtime::transport::SocketOpts,
+    ) -> Result<ShardedBackend> {
+        let pool = crate::runtime::transport::RemotePool::connect(opts)?;
+        let mut backend = ShardedBackend::from_replicas(vec![replica])?;
+        backend.remote = Some(RefCell::new(pool));
+        Ok(backend)
+    }
+
+    /// `"socket"` when a remote pool is attached, else `"thread"`.
+    pub fn transport(&self) -> &'static str {
+        if self.remote.is_some() {
+            "socket"
+        } else {
+            "thread"
+        }
+    }
+
+    /// Run the broadcast mirror against the remote pool, if any.
+    fn remote_mirror(
+        &self,
+        f: impl FnOnce(&mut crate::runtime::transport::RemotePool) -> Result<()>,
+    ) -> Result<()> {
+        match &self.remote {
+            Some(pool) => f(&mut pool.borrow_mut()),
+            None => Ok(()),
+        }
     }
 
     /// `shards` plain replicas of an in-crate preset (tests, bench).
@@ -197,8 +257,13 @@ impl ShardedBackend {
         ShardedBackend::from_replicas(replicas)
     }
 
+    /// The shard count evals are partitioned over: the remote worker count
+    /// in socket mode, else the in-process replica count.
     pub fn shards(&self) -> usize {
-        self.replicas.borrow().len()
+        match &self.remote {
+            Some(pool) => pool.borrow().total(),
+            None => self.replicas.borrow().len(),
+        }
     }
 
     /// Drain the freed-id queue and drop those buffers from every replica.
@@ -215,6 +280,10 @@ impl ShardedBackend {
             for id in &ids {
                 rep.bufs.remove(id);
             }
+        }
+        drop(replicas);
+        if let Some(pool) = &self.remote {
+            pool.borrow_mut().free(&ids); // best-effort
         }
     }
 
@@ -239,6 +308,115 @@ impl ShardedBackend {
         }
         Ok(())
     }
+
+    /// Socket-mode plan execution: the local replica walks every sweep
+    /// phase (evals excluded — it exists so coordinator reads stay
+    /// bit-identical to native), the remote pool runs the plan and gathers
+    /// the `(eval idx, loss)` cover, degrading over worker death (see
+    /// [`crate::runtime::transport::RemotePool::run_plan`]). Abort
+    /// semantics mirror thread mode, with one extra move: after the local
+    /// rollback-replay, the recovered bits are re-uploaded to every live
+    /// worker so the pool re-enters lockstep.
+    #[allow(clippy::too_many_arguments)]
+    fn run_zo_plan_socket(
+        &self,
+        pool: &RefCell<crate::runtime::transport::RemotePool>,
+        plan: &StepPlan,
+        bufs: &mut [ShardBuf],
+        peft: PeftMode,
+        base: Option<&[ShardBuf]>,
+        batch: &Batch,
+        inject: &mut dyn FnMut(usize) -> Result<Option<f32>>,
+        times: &mut StageTimes,
+    ) -> Result<PlanResult> {
+        let unit_ids: Vec<u64> = bufs.iter().map(|b| b.id).collect();
+        let base_ids: Vec<u64> =
+            base.map(|bs| bs.iter().map(|b| b.id).collect()).unwrap_or_default();
+        let mut replicas = self.replicas.borrow_mut();
+        let mut t = StageTimer::start();
+
+        // pre-plan snapshot of the touched units: abort rollback here, and
+        // the pre-redispatch resync of surviving workers in the pool
+        let touched = plan.touched_units();
+        let snapshot: Vec<(u64, Vec<f32>)> = touched
+            .iter()
+            .map(|&k| {
+                let id = unit_ids[k];
+                Ok((id, resolve(&replicas[0].bufs, id)?.data().to_vec()))
+            })
+            .collect::<Result<_>>()?;
+
+        // local replica: every sweep phase in plan order, no evals — the
+        // f32 perturb/restore roundtrip is not a bitwise identity, so
+        // skipping the "net-zero" sweeps would desync it from the workers
+        {
+            let Replica { backend, bufs: rb } = &mut replicas[0];
+            for phase in &plan.phases {
+                if let PlanPhase::Sweep(ops) = phase {
+                    for op in ops {
+                        let buf = resolve_mut(rb, unit_ids[op.unit])?;
+                        backend.zo_axpy_inplace(buf, op.len, op.seed, op.coeff)?;
+                    }
+                }
+            }
+        }
+        times.perturb_secs += t.lap();
+
+        let mut pool = pool.borrow_mut();
+        let gathered = pool.run_plan(plan, &unit_ids, &base_ids, peft, batch, &snapshot)?;
+        ensure!(
+            gathered.len() == plan.evals.len(),
+            "sharded gather is missing an eval result"
+        );
+        let mut losses: Vec<f32> = gathered.iter().map(|&l| l as f32).collect();
+        times.forward_secs += t.lap();
+        times.rt_secs += pool.take_rt();
+
+        // fault hook + finiteness, in eval order (same semantics as the
+        // sequential executor checking each loss as it lands)
+        for e in 0..plan.evals.len() {
+            if let Some(l) = inject(e)? {
+                losses[e] = l;
+            }
+            if losses[e].is_finite() {
+                continue;
+            }
+            // rollback-replay on the local replica — the exact op sequence
+            // the sequential executor issues, from the exact same bits
+            {
+                let rep = &mut replicas[0];
+                for (id, data) in &snapshot {
+                    resolve_mut(&mut rep.bufs, *id)?.make_mut().copy_from_slice(data);
+                }
+                let Replica { backend, bufs: rb } = rep;
+                'replay: for phase in &plan.phases {
+                    match phase {
+                        PlanPhase::Sweep(ops) => {
+                            for op in ops {
+                                let buf = resolve_mut(rb, unit_ids[op.unit])?;
+                                backend.zo_axpy_inplace(buf, op.len, op.seed, op.coeff)?;
+                            }
+                        }
+                        PlanPhase::Eval { idx } if *idx == e => break 'replay,
+                        PlanPhase::Eval { .. } => {}
+                    }
+                }
+                for op in &plan.recovery[e] {
+                    let buf = resolve_mut(rb, unit_ids[op.unit])?;
+                    backend.zo_axpy_inplace(buf, op.len, op.seed, op.coeff)?;
+                }
+            }
+            // push the recovered bits to every live worker: lockstep again
+            for (id, _) in &snapshot {
+                let data = resolve(&replicas[0].bufs, *id)?.data().to_vec();
+                pool.upload(*id, &data)?;
+            }
+            times.perturb_secs += t.lap();
+            losses.truncate(e + 1);
+            return Ok(PlanResult { losses, aborted: Some(e) });
+        }
+        Ok(PlanResult { losses, aborted: None })
+    }
 }
 
 fn resolve<'m>(bufs: &'m HashMap<u64, NativeBuf>, id: u64) -> Result<&'m NativeBuf> {
@@ -247,6 +425,19 @@ fn resolve<'m>(bufs: &'m HashMap<u64, NativeBuf>, id: u64) -> Result<&'m NativeB
 
 fn resolve_mut(bufs: &mut HashMap<u64, NativeBuf>, id: u64) -> Result<&mut NativeBuf> {
     bufs.get_mut(&id).ok_or_else(|| anyhow!("sharded: unknown buffer id {id} (already dropped?)"))
+}
+
+// the socket worker (`runtime/transport.rs`) keeps the same id->buffer map
+// shape and error wording as an in-process replica
+pub(crate) fn resolve_shared<'m>(bufs: &'m HashMap<u64, NativeBuf>, id: u64) -> Result<&'m NativeBuf> {
+    resolve(bufs, id)
+}
+
+pub(crate) fn resolve_shared_mut(
+    bufs: &mut HashMap<u64, NativeBuf>,
+    id: u64,
+) -> Result<&mut NativeBuf> {
+    resolve_mut(bufs, id)
 }
 
 /// Resolve the forward-argument prefix (frozen base units, then tunable
@@ -259,9 +450,46 @@ fn resolve_args<'m>(
     base_ids.iter().chain(unit_ids).map(|&id| resolve(bufs, id)).collect()
 }
 
-/// One worker's walk of the plan: apply **every** sweep phase in order
-/// (lockstep), evaluate only the owned evals, return `(eval idx, loss)`
-/// scalars — the only data that crosses the worker boundary.
+/// One replica's walk of the plan: apply **every** sweep phase in order
+/// (lockstep), evaluate exactly the evals in `owned`, return `(eval idx,
+/// loss)` scalars — the only data that crosses the worker boundary. Shared
+/// by the in-process thread workers (which derive `owned` from
+/// [`shard_owner`]) and by `lezo worker` processes
+/// (`runtime/transport.rs`), which receive `owned` explicitly on the wire.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_plan_on_replica(
+    backend: &NativeBackend,
+    bufs: &mut HashMap<u64, NativeBuf>,
+    plan: &StepPlan,
+    unit_ids: &[u64],
+    base_ids: &[u64],
+    peft: PeftMode,
+    batch: &Batch,
+    owned: &std::collections::BTreeSet<usize>,
+) -> Result<Vec<(usize, f64)>> {
+    let mut gathered = Vec::new();
+    for phase in &plan.phases {
+        match phase {
+            PlanPhase::Sweep(ops) => {
+                for op in ops {
+                    let buf = resolve_mut(bufs, unit_ids[op.unit])?;
+                    backend.zo_axpy_inplace(buf, op.len, op.seed, op.coeff)?;
+                }
+            }
+            PlanPhase::Eval { idx } => {
+                if owned.contains(idx) {
+                    let args = resolve_args(bufs, base_ids, unit_ids)?;
+                    let l = backend.forward_loss(peft, &args, batch)?;
+                    gathered.push((*idx, l as f64));
+                }
+            }
+        }
+    }
+    Ok(gathered)
+}
+
+/// The thread-mode worker body: derive the owned eval set from the
+/// round-robin cover, then walk the plan.
 #[allow(clippy::too_many_arguments)]
 fn worker_run(
     backend: &NativeBackend,
@@ -274,25 +502,13 @@ fn worker_run(
     w: usize,
     shards: usize,
 ) -> Result<Vec<(usize, f64)>> {
-    let mut gathered = Vec::new();
-    for phase in &plan.phases {
-        match phase {
-            PlanPhase::Sweep(ops) => {
-                for op in ops {
-                    let buf = resolve_mut(bufs, unit_ids[op.unit])?;
-                    backend.zo_axpy_inplace(buf, op.len, op.seed, op.coeff)?;
-                }
-            }
-            PlanPhase::Eval { idx } => {
-                if shard_owner(*idx, shards)? == w {
-                    let args = resolve_args(bufs, base_ids, unit_ids)?;
-                    let l = backend.forward_loss(peft, &args, batch)?;
-                    gathered.push((*idx, l as f64));
-                }
-            }
+    let mut owned = std::collections::BTreeSet::new();
+    for idx in 0..plan.evals.len() {
+        if shard_owner(idx, shards)? == w {
+            owned.insert(idx);
         }
     }
-    Ok(gathered)
+    run_plan_on_replica(backend, bufs, plan, unit_ids, base_ids, peft, batch, &owned)
 }
 
 impl Backend for ShardedBackend {
@@ -314,6 +530,7 @@ impl Backend for ShardedBackend {
             bufs.insert(id, backend.upload(data)?);
             Ok(())
         })?;
+        self.remote_mirror(|pool| pool.upload(id, data))?;
         Ok(self.handle(id, data.len()))
     }
 
@@ -331,6 +548,7 @@ impl Backend for ShardedBackend {
             bufs.insert(id, out);
             Ok(())
         })?;
+        self.remote_mirror(|pool| pool.axpy_alloc(unit.id, id, len, seed, coeff))?;
         Ok(self.handle(id, len))
     }
 
@@ -351,6 +569,7 @@ impl Backend for ShardedBackend {
             bufs.insert(id, out);
             Ok(())
         })?;
+        self.remote_mirror(|pool| pool.axpy_masked_alloc(unit.id, pref.id, id, tau, len, seed, coeff))?;
         Ok(self.handle(id, len))
     }
 
@@ -365,7 +584,8 @@ impl Backend for ShardedBackend {
         let id = unit.id;
         self.each_replica(|backend, bufs| {
             backend.zo_axpy_inplace(resolve_mut(bufs, id)?, len, seed, coeff)
-        })
+        })?;
+        self.remote_mirror(|pool| pool.axpy_inplace(id, len, seed, coeff))
     }
 
     fn zo_axpy_masked_inplace(
@@ -383,7 +603,8 @@ impl Backend for ShardedBackend {
             let pref_copy = resolve(bufs, pid)?.data().to_vec();
             let pref_buf = NativeBuf::from(pref_copy);
             backend.zo_axpy_masked_inplace(resolve_mut(bufs, id)?, &pref_buf, tau, len, seed, coeff)
-        })
+        })?;
+        self.remote_mirror(|pool| pool.axpy_masked_inplace(id, pid, tau, len, seed, coeff))
     }
 
     fn prepare_batch(&self, batch: &Batch) -> Result<Batch> {
@@ -461,6 +682,9 @@ impl Backend for ShardedBackend {
         times: &mut StageTimes,
     ) -> Result<PlanResult> {
         self.gc();
+        if let Some(pool) = &self.remote {
+            return self.run_zo_plan_socket(pool, plan, bufs, peft, base, batch, inject, times);
+        }
         let unit_ids: Vec<u64> = bufs.iter().map(|b| b.id).collect();
         let base_ids: Vec<u64> =
             base.map(|bs| bs.iter().map(|b| b.id).collect()).unwrap_or_default();

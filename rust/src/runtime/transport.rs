@@ -1,0 +1,1584 @@
+//! Fault-tolerant framed socket transport for the sharded backend
+//! (`shard_transport=socket`): the coordinator talks to `lezo worker
+//! --listen <addr>` processes over length-prefixed, versioned, CRC-32'd
+//! frames carrying the existing [`StepPlan`] scalars out and `(eval idx,
+//! f64 loss)` scalars back.
+//!
+//! ## Why scalars are enough
+//!
+//! The MeZO/LeZO seed-regeneration invariant means a ZO step is fully
+//! described by its [`StepPlan`]: every perturbation is regenerated from a
+//! `(step, probe, unit)` seed inside the worker's own zo_axpy kernel.
+//! Workers hold a full lockstep copy of the parameters (built once at
+//! `INIT`, mutated only by broadcast sweeps and uploads), so the per-step
+//! wire traffic is a few hundred bytes of plan scalars each way — never
+//! parameters, never gradients.
+//!
+//! ## Frame layout (mirrors the `model/checkpoint.rs` section envelope)
+//!
+//! ```text
+//!   handshake, both directions, unframed:
+//!       b"LEZOWIRE" | version u32 LE
+//!   frame:
+//!       tag [u8;4] | len u64 LE | payload [len bytes] | crc32(payload) u32 LE
+//! ```
+//!
+//! Every request payload begins with a `req_id u64`; every reply echoes
+//! it. The worker keeps its last `(req_id, reply)` pair, so a retried
+//! request (after a timeout, a dropped connection, or a CRC-rejected
+//! reply) is served from that cache and **never executed twice** — retries
+//! are idempotent by construction, which is what makes "reconnect and
+//! resend" a safe universal recovery policy.
+//!
+//! ## Liveness and failure policy
+//!
+//! - Every socket operation (connect, read, write) runs under an explicit
+//!   timeout — there are no unbounded waits anywhere in this module.
+//! - During plan execution the worker emits `HBEA` heartbeat frames every
+//!   ~200ms from a side thread; the coordinator's reply reader skips them,
+//!   and each one refreshes the read timeout, so a long forward never looks
+//!   like a dead peer while an actually-dead peer is detected within one
+//!   timeout window.
+//! - Transport errors (timeout, EOF, CRC mismatch, connect failure) are
+//!   retried with bounded backoff ([`crate::util::retry_with_backoff_deadline`]).
+//!   When retries are exhausted the worker is declared **dead** and the
+//!   coordinator degrades: remaining evals are re-partitioned over the
+//!   survivors (see `RemotePool::run_plan`) and the run continues — or
+//!   halts with a named error if no workers remain.
+//! - `FAIL` replies are application errors (the worker executed and
+//!   failed); they are **not** retried and surface as named hard errors.
+//!
+//! ## Deterministic transport faults (`faults` grammar, worker-side)
+//!
+//! `net-drop@K` (execute, cache the reply, close without replying once),
+//! `net-delay@K:ms` (stall before compute, before heartbeats start),
+//! `net-corrupt@K` (send the reply with a corrupted CRC once — the
+//! coordinator must reject and re-fetch, never consume it), and
+//! `worker-crash@K:shard` (the matching worker exits at plan receipt).
+//! All are keyed on the 1-based step (`plan.step + 1`) and injected by the
+//! worker, so runs are reproducible byte-for-byte.
+
+use crate::data::batch::Batch;
+use crate::peft::PeftMode;
+use crate::runtime::backend::{Backend, Precision};
+use crate::runtime::native::{NativeBackend, NativeBuf};
+use crate::runtime::plan::{EvalSpec, PlanPhase, StepPlan, SweepOp};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Magic prefix of the unframed handshake both peers send on connect.
+pub const WIRE_MAGIC: &[u8; 8] = b"LEZOWIRE";
+/// Wire protocol version; a mismatch is rejected at handshake.
+pub const WIRE_VERSION: u32 = 1;
+/// Hard cap on a single frame payload (a corrupted length field must not
+/// trigger a giant allocation).
+pub const MAX_FRAME: u64 = 1 << 30;
+
+/// Default per-request socket timeout (`net_timeout_ms` config key).
+pub const DEFAULT_NET_TIMEOUT_MS: u64 = 5_000;
+/// Default bounded retry count per request (`net_retries` config key).
+pub const DEFAULT_NET_RETRIES: u32 = 3;
+
+const HEARTBEAT_TICK_MS: u64 = 50;
+const HEARTBEAT_EVERY_TICKS: u32 = 4; // one HBEA per ~200ms of compute
+
+// request tags (coordinator -> worker)
+pub const T_INIT: [u8; 4] = *b"INIT";
+pub const T_UPLD: [u8; 4] = *b"UPLD";
+pub const T_FREE: [u8; 4] = *b"FREE";
+pub const T_AXPY: [u8; 4] = *b"AXPY"; // in-place seeded sweep
+pub const T_AXPM: [u8; 4] = *b"AXPM"; // in-place masked sweep
+pub const T_AXPN: [u8; 4] = *b"AXPN"; // allocating sweep into a new id
+pub const T_AXMN: [u8; 4] = *b"AXMN"; // allocating masked sweep
+pub const T_PLAN: [u8; 4] = *b"PLAN";
+pub const T_PING: [u8; 4] = *b"PING";
+pub const T_SHUT: [u8; 4] = *b"SHUT";
+// reply tags (worker -> coordinator)
+pub const T_OKAY: [u8; 4] = *b"OKAY";
+pub const T_LOSS: [u8; 4] = *b"LOSS";
+pub const T_PONG: [u8; 4] = *b"PONG";
+pub const T_FAIL: [u8; 4] = *b"FAIL";
+pub const T_HBEA: [u8; 4] = *b"HBEA";
+
+fn tag_name(tag: &[u8; 4]) -> String {
+    String::from_utf8_lossy(tag).into_owned()
+}
+
+/// IEEE CRC-32 (poly 0xEDB8_8320) — byte-identical to the checkpoint
+/// envelope's checksum, table-free on purpose (cold path, tiny frames).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------------
+// byte cursor (the checkpoint.rs named-offset-error discipline)
+// ---------------------------------------------------------------------------
+
+/// Byte cursor over a frame payload: every under-run is a hard error naming
+/// the decode context and the exact byte offset, never a panic.
+pub struct Cur<'a> {
+    data: &'a [u8],
+    off: usize,
+    label: String,
+}
+
+impl<'a> Cur<'a> {
+    pub fn new(data: &'a [u8], label: impl Into<String>) -> Cur<'a> {
+        Cur { data, off: 0, label: label.into() }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.off
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let have = self.remaining();
+        ensure!(
+            n <= have,
+            "{}: truncated at byte offset {} (need {} more bytes, {} left of {})",
+            self.label,
+            self.off,
+            n,
+            have,
+            self.data.len()
+        );
+        let out = &self.data[self.off..self.off + n];
+        self.off += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed UTF-8 string (`len u64 | bytes`).
+    pub fn str_(&mut self) -> Result<String> {
+        let n = self.len_prefix(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow!("{}: string at byte offset {} is not UTF-8", self.label, self.off))
+    }
+
+    /// A `len u64` whose implied byte size must still fit in the payload —
+    /// rejects implausible lengths before any allocation.
+    fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        let need = n.checked_mul(elem_bytes).ok_or_else(|| {
+            anyhow!("{}: implausible array length {} at byte offset {}", self.label, n, self.off)
+        })?;
+        ensure!(
+            need <= self.remaining(),
+            "{}: truncated at byte offset {} (need {} more bytes, {} left of {})",
+            self.label,
+            self.off,
+            need,
+            self.remaining(),
+            self.data.len()
+        );
+        Ok(n)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix(4)?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.len_prefix(4)?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.len_prefix(8)?;
+        let bytes = self.take(n * 8)?;
+        Ok(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Assert the payload is fully consumed — trailing bytes mean a codec
+    /// mismatch, which must be loud, not silently ignored.
+    pub fn finish(self) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "{}: {} trailing bytes after decode (codec mismatch?)",
+            self.label,
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+// little-endian encode helpers (the write-side mirror of `Cur`)
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+pub fn put_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        put_f32(out, x);
+    }
+}
+pub fn put_i32s(out: &mut Vec<u8>, xs: &[i32]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        put_i32(out, x);
+    }
+}
+pub fn put_u64s(out: &mut Vec<u8>, xs: &[u64]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        put_u64(out, x);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frames
+// ---------------------------------------------------------------------------
+
+/// Serialize one frame: `tag | len u64 | payload | crc32(payload)`.
+pub fn frame_bytes(tag: &[u8; 4], payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + payload.len());
+    out.extend_from_slice(tag);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out
+}
+
+/// Write one frame as a single `write_all` (so a concurrent heartbeat
+/// thread can never interleave bytes inside a frame).
+pub fn write_frame(w: &mut impl Write, tag: &[u8; 4], payload: &[u8]) -> Result<()> {
+    w.write_all(&frame_bytes(tag, payload))
+        .with_context(|| format!("writing '{}' frame failed or timed out", tag_name(tag)))?;
+    Ok(())
+}
+
+/// Decode one frame from a byte slice (pure, for tests and buffers):
+/// truncation at any byte boundary and any CRC mismatch are named errors.
+pub fn decode_frame(bytes: &[u8], label: &str) -> Result<([u8; 4], Vec<u8>)> {
+    let mut cur = Cur::new(bytes, label);
+    let tag: [u8; 4] = cur.take(4)?.try_into().unwrap();
+    let len = cur.u64()?;
+    ensure!(
+        len <= MAX_FRAME,
+        "{label}: frame '{}' length {len} exceeds the {MAX_FRAME}-byte cap",
+        tag_name(&tag)
+    );
+    let payload = cur.take(len as usize)?.to_vec();
+    let stored = cur.u32()?;
+    let computed = crc32(&payload);
+    ensure!(
+        stored == computed,
+        "{label}: frame '{}' payload CRC mismatch (stored {stored:#010x}, computed {computed:#010x})",
+        tag_name(&tag)
+    );
+    Ok((tag, payload))
+}
+
+/// Read one frame from a stream. `Ok(None)` is a clean close at a frame
+/// boundary; EOF mid-frame, a read timeout, an oversized length, or a CRC
+/// mismatch are errors (a CRC-rejected frame is never returned to the
+/// caller — the connection is abandoned and the request retried).
+pub fn read_frame_opt(r: &mut impl Read, label: &str) -> Result<Option<([u8; 4], Vec<u8>)>> {
+    let mut head = [0u8; 12];
+    match r.read(&mut head[..1]) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) => return Err(anyhow!(e).context(format!("{label}: socket read failed or timed out"))),
+    }
+    r.read_exact(&mut head[1..])
+        .with_context(|| format!("{label}: connection lost mid-frame header"))?;
+    let tag: [u8; 4] = head[..4].try_into().unwrap();
+    let len = u64::from_le_bytes(head[4..12].try_into().unwrap());
+    ensure!(
+        len <= MAX_FRAME,
+        "{label}: frame '{}' length {len} exceeds the {MAX_FRAME}-byte cap",
+        tag_name(&tag)
+    );
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("{label}: connection lost mid-payload of '{}'", tag_name(&tag)))?;
+    let mut crc = [0u8; 4];
+    r.read_exact(&mut crc)
+        .with_context(|| format!("{label}: connection lost before CRC of '{}'", tag_name(&tag)))?;
+    let stored = u32::from_le_bytes(crc);
+    let computed = crc32(&payload);
+    ensure!(
+        stored == computed,
+        "{label}: frame '{}' payload CRC mismatch (stored {stored:#010x}, computed {computed:#010x})",
+        tag_name(&tag)
+    );
+    Ok(Some((tag, payload)))
+}
+
+/// Like [`read_frame_opt`] but a clean close is also an error (the caller
+/// was waiting for a reply).
+pub fn read_frame(r: &mut impl Read, label: &str) -> Result<([u8; 4], Vec<u8>)> {
+    read_frame_opt(r, label)?.ok_or_else(|| anyhow!("{label}: connection closed by peer"))
+}
+
+/// Send our side of the handshake (`LEZOWIRE` + version, unframed).
+pub fn write_hello(w: &mut impl Write) -> Result<()> {
+    let mut buf = Vec::with_capacity(12);
+    buf.extend_from_slice(WIRE_MAGIC);
+    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    w.write_all(&buf).context("handshake write failed or timed out")?;
+    Ok(())
+}
+
+/// Read and verify the peer's handshake: wrong magic and version mismatch
+/// are distinct named errors.
+pub fn expect_hello(r: &mut impl Read, label: &str) -> Result<()> {
+    let mut buf = [0u8; 12];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("{label}: connection closed during handshake"))?;
+    ensure!(
+        &buf[..8] == WIRE_MAGIC,
+        "{label}: peer is not a lezo wire endpoint (bad magic {:02x?})",
+        &buf[..8]
+    );
+    let v = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    ensure!(
+        v == WIRE_VERSION,
+        "{label}: wire version mismatch — peer speaks v{v}, this build speaks v{WIRE_VERSION}"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// StepPlan / Batch codecs
+// ---------------------------------------------------------------------------
+
+fn put_ops(out: &mut Vec<u8>, ops: &[SweepOp]) {
+    put_u64(out, ops.len() as u64);
+    for op in ops {
+        put_u64(out, op.unit as u64);
+        put_u64(out, op.len as u64);
+        put_i32(out, op.seed);
+        put_f32(out, op.coeff);
+    }
+}
+
+fn ops_from(cur: &mut Cur) -> Result<Vec<SweepOp>> {
+    let n = cur.u64()? as usize;
+    ensure!(n <= 1 << 24, "implausible sweep-op count {n}");
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        ops.push(SweepOp {
+            unit: cur.u64()? as usize,
+            len: cur.u64()? as usize,
+            seed: cur.i32()?,
+            coeff: cur.f32()?,
+        });
+    }
+    Ok(ops)
+}
+
+/// Serialize a [`StepPlan`] — scalars only, deterministic byte-for-byte
+/// (f32 coefficients travel as their exact bit patterns).
+pub fn encode_plan(plan: &StepPlan) -> Vec<u8> {
+    use crate::coordinator::optim::ProbeSchedule;
+    let mut out = Vec::new();
+    put_u64(&mut out, plan.step);
+    match plan.schedule {
+        ProbeSchedule::TwoSided => out.push(0),
+        ProbeSchedule::OneSided { probes } => {
+            out.push(1);
+            put_u64(&mut out, probes as u64);
+        }
+    }
+    put_u64(&mut out, plan.phases.len() as u64);
+    for phase in &plan.phases {
+        match phase {
+            PlanPhase::Sweep(ops) => {
+                out.push(0);
+                put_ops(&mut out, ops);
+            }
+            PlanPhase::Eval { idx } => {
+                out.push(1);
+                put_u64(&mut out, *idx as u64);
+            }
+        }
+    }
+    put_u64(&mut out, plan.evals.len() as u64);
+    for e in &plan.evals {
+        put_u64(&mut out, e.probe);
+    }
+    put_u64(&mut out, plan.recovery.len() as u64);
+    for ops in &plan.recovery {
+        put_ops(&mut out, ops);
+    }
+    out
+}
+
+/// Decode a [`StepPlan`] (consumes exactly what [`encode_plan`] wrote).
+pub fn decode_plan(cur: &mut Cur) -> Result<StepPlan> {
+    use crate::coordinator::optim::ProbeSchedule;
+    let step = cur.u64()?;
+    let schedule = match cur.u8()? {
+        0 => ProbeSchedule::TwoSided,
+        1 => ProbeSchedule::OneSided { probes: cur.u64()? as usize },
+        t => bail!("unknown probe-schedule tag {t} in plan"),
+    };
+    let n_phases = cur.u64()? as usize;
+    ensure!(n_phases <= 1 << 24, "implausible phase count {n_phases}");
+    let mut phases = Vec::with_capacity(n_phases);
+    for _ in 0..n_phases {
+        phases.push(match cur.u8()? {
+            0 => PlanPhase::Sweep(ops_from(cur)?),
+            1 => PlanPhase::Eval { idx: cur.u64()? as usize },
+            t => bail!("unknown plan-phase tag {t}"),
+        });
+    }
+    let n_evals = cur.u64()? as usize;
+    ensure!(n_evals <= 1 << 24, "implausible eval count {n_evals}");
+    let mut evals = Vec::with_capacity(n_evals);
+    for _ in 0..n_evals {
+        evals.push(EvalSpec { probe: cur.u64()? });
+    }
+    let n_rec = cur.u64()? as usize;
+    ensure!(n_rec <= 1 << 24, "implausible recovery count {n_rec}");
+    let mut recovery = Vec::with_capacity(n_rec);
+    for _ in 0..n_rec {
+        recovery.push(ops_from(cur)?);
+    }
+    Ok(StepPlan { step, schedule, phases, evals, recovery })
+}
+
+/// Serialize a [`Batch`] (`rows | seq | tokens | targets | mask`).
+pub fn encode_batch_into(out: &mut Vec<u8>, batch: &Batch) {
+    put_u64(out, batch.rows as u64);
+    put_u64(out, batch.seq as u64);
+    put_i32s(out, &batch.tokens);
+    put_i32s(out, &batch.targets);
+    put_f32s(out, &batch.mask);
+}
+
+/// Decode a [`Batch`] with shape plausibility checks.
+pub fn decode_batch(cur: &mut Cur) -> Result<Batch> {
+    let rows = cur.u64()? as usize;
+    let seq = cur.u64()? as usize;
+    let tokens = cur.i32s()?;
+    let targets = cur.i32s()?;
+    let mask = cur.f32s()?;
+    let n = rows
+        .checked_mul(seq)
+        .ok_or_else(|| anyhow!("implausible batch shape {rows}x{seq}"))?;
+    ensure!(
+        tokens.len() == n && targets.len() == n && mask.len() == n,
+        "batch shape {rows}x{seq} does not match its arrays ({}/{}/{})",
+        tokens.len(),
+        targets.len(),
+        mask.len()
+    );
+    Ok(Batch { tokens, targets, mask, rows, seq })
+}
+
+// ---------------------------------------------------------------------------
+// env knobs (LEZO_THREADS strictness rule: unset/empty = no override,
+// unparseable = hard error naming the variable)
+// ---------------------------------------------------------------------------
+
+/// `LEZO_NET_TIMEOUT_MS`: env override for the `net_timeout_ms` config key.
+pub fn env_net_timeout_ms() -> Result<Option<u64>> {
+    let v = std::env::var("LEZO_NET_TIMEOUT_MS").unwrap_or_default();
+    if v.is_empty() {
+        return Ok(None);
+    }
+    match v.parse::<u64>() {
+        Ok(n) if n > 0 => Ok(Some(n)),
+        _ => Err(anyhow!(
+            "LEZO_NET_TIMEOUT_MS='{v}' is not a positive per-request timeout in milliseconds \
+             (unset it to use the `net_timeout_ms` config key)"
+        )),
+    }
+}
+
+/// Resolve the per-request socket timeout: env wins over the config key.
+pub fn resolve_net_timeout_ms(requested: u64) -> Result<u64> {
+    let n = env_net_timeout_ms()?.unwrap_or(requested);
+    ensure!(
+        n > 0,
+        "net_timeout_ms must be a positive number of milliseconds (got {n}; set the \
+         `net_timeout_ms` config key or LEZO_NET_TIMEOUT_MS to an integer >= 1)"
+    );
+    Ok(n)
+}
+
+/// `LEZO_NET_RETRIES`: env override for the `net_retries` config key.
+pub fn env_net_retries() -> Result<Option<u32>> {
+    let v = std::env::var("LEZO_NET_RETRIES").unwrap_or_default();
+    if v.is_empty() {
+        return Ok(None);
+    }
+    match v.parse::<u32>() {
+        Ok(n) if n > 0 => Ok(Some(n)),
+        _ => Err(anyhow!(
+            "LEZO_NET_RETRIES='{v}' is not a positive request attempt count \
+             (unset it to use the `net_retries` config key)"
+        )),
+    }
+}
+
+/// Resolve the bounded per-request attempt count: env wins over config.
+pub fn resolve_net_retries(requested: u32) -> Result<u32> {
+    let n = env_net_retries()?.unwrap_or(requested);
+    ensure!(
+        n > 0,
+        "net_retries must be a positive attempt count (got {n}; set the `net_retries` \
+         config key or LEZO_NET_RETRIES to an integer >= 1)"
+    );
+    Ok(n)
+}
+
+// ---------------------------------------------------------------------------
+// coordinator side: WorkerClient + RemotePool
+// ---------------------------------------------------------------------------
+
+/// Everything the coordinator needs to stand up a socket-mode pool.
+#[derive(Debug, Clone)]
+pub struct SocketOpts {
+    /// Worker addresses, one per shard (`workers` config key).
+    pub workers: Vec<String>,
+    /// Model name sent in `INIT` (each worker rebuilds the same replica).
+    pub model: String,
+    pub precision: Precision,
+    /// Artifact dir for spec resolution; empty = in-crate preset.
+    pub artifact_dir: String,
+    /// The run's effective faults string (workers act on the net-* kinds).
+    pub faults: String,
+    pub timeout_ms: u64,
+    pub retries: u32,
+}
+
+enum PlanOutcome {
+    /// `(eval idx, loss)` pairs, worker compute seconds, request round-trip
+    /// seconds as seen by this client.
+    Loss(Vec<(u64, f64)>, f64, f64),
+    /// The worker executed and reported an application error — not
+    /// retryable, surfaces as a named hard error.
+    AppError(String),
+}
+
+/// One coordinator-side connection to a `lezo worker` process.
+pub struct WorkerClient {
+    addr: String,
+    shard: usize,
+    timeout: Duration,
+    retries: u32,
+    stream: Option<TcpStream>,
+    alive: bool,
+}
+
+fn connect_stream(addr: &str, timeout: Duration, label: &str) -> Result<TcpStream> {
+    let sock = addr
+        .to_socket_addrs()
+        .with_context(|| format!("{label}: cannot resolve worker address '{addr}'"))?
+        .next()
+        .ok_or_else(|| anyhow!("{label}: worker address '{addr}' resolves to nothing"))?;
+    let stream = TcpStream::connect_timeout(&sock, timeout).with_context(|| {
+        format!("{label}: cannot connect within {}ms", timeout.as_millis())
+    })?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    Ok(stream)
+}
+
+impl WorkerClient {
+    fn new(addr: &str, shard: usize, timeout_ms: u64, retries: u32) -> WorkerClient {
+        WorkerClient {
+            addr: addr.trim().to_string(),
+            shard,
+            timeout: Duration::from_millis(timeout_ms),
+            retries,
+            stream: None,
+            alive: true,
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("shard {} worker at {}", self.shard, self.addr)
+    }
+
+    /// One request/reply exchange under bounded reconnect-and-resend
+    /// retries. Safe to retry because the worker serves a repeated `req_id`
+    /// from its reply cache without re-executing. `HBEA` frames refresh the
+    /// read deadline and are skipped. The reply's echoed `req_id` is
+    /// verified and stripped.
+    fn request(
+        &mut self,
+        tag: [u8; 4],
+        req_id: u64,
+        payload: &[u8],
+        deadline: Option<Instant>,
+    ) -> Result<([u8; 4], Vec<u8>)> {
+        let label = self.label();
+        let attempts = self.retries.max(1);
+        crate::util::retry_with_backoff_deadline(&label, attempts, 10, deadline, || {
+            let mut stream = match self.stream.take() {
+                Some(s) => s,
+                None => {
+                    let mut s = connect_stream(&self.addr, self.timeout, &label)?;
+                    write_hello(&mut s)?;
+                    expect_hello(&mut s, &label)?;
+                    s
+                }
+            };
+            let r = (|| -> Result<([u8; 4], Vec<u8>)> {
+                write_frame(&mut stream, &tag, payload)?;
+                loop {
+                    let (rtag, rbody) = read_frame(&mut stream, &label)?;
+                    if rtag == T_HBEA {
+                        continue;
+                    }
+                    let mut cur = Cur::new(&rbody, format!("{label}: '{}' reply", tag_name(&rtag)));
+                    let got = cur.u64()?;
+                    ensure!(
+                        got == req_id,
+                        "{label}: reply req id {got} does not match request {req_id} (stale frame)"
+                    );
+                    return Ok((rtag, rbody[8..].to_vec()));
+                }
+            })();
+            match r {
+                Ok(v) => {
+                    self.stream = Some(stream);
+                    Ok(v)
+                }
+                // drop the (possibly desynced) stream; the retry reconnects
+                Err(e) => Err(e),
+            }
+        })
+    }
+
+    /// Total-deadline for control-plane requests (uploads, sweeps, pings):
+    /// enough for every attempt to run its full socket timeout plus backoff.
+    fn control_deadline(&self) -> Option<Instant> {
+        let budget = self.timeout.saturating_mul(self.retries.max(1) + 1);
+        Some(Instant::now() + budget + Duration::from_millis(500))
+    }
+
+    /// Send a request whose only success reply is `OKAY`.
+    fn call_ok(&mut self, tag: [u8; 4], req_id: u64, payload: &[u8]) -> Result<()> {
+        let (rtag, body) = self.request(tag, req_id, payload, self.control_deadline())?;
+        if rtag == T_FAIL {
+            bail!("{}: {}", self.label(), decode_fail_body(&body, &self.label())?);
+        }
+        ensure!(
+            rtag == T_OKAY,
+            "{}: unexpected reply '{}' to '{}'",
+            self.label(),
+            tag_name(&rtag),
+            tag_name(&tag)
+        );
+        Ok(())
+    }
+
+    /// Dispatch a plan. No total deadline: each read is bounded by the
+    /// socket timeout and kept alive by worker heartbeats, and attempts are
+    /// bounded by `retries` — so this cannot hang, but a long forward under
+    /// a healthy heartbeat is allowed to take as long as it takes.
+    fn plan_request(&mut self, req_id: u64, payload: Vec<u8>) -> Result<PlanOutcome> {
+        let t0 = Instant::now();
+        let (rtag, body) = self.request(T_PLAN, req_id, &payload, None)?;
+        let wall = t0.elapsed().as_secs_f64();
+        if rtag == T_FAIL {
+            return Ok(PlanOutcome::AppError(decode_fail_body(&body, &self.label())?));
+        }
+        ensure!(
+            rtag == T_LOSS,
+            "{}: unexpected reply '{}' to 'PLAN'",
+            self.label(),
+            tag_name(&rtag)
+        );
+        let mut cur = Cur::new(&body, format!("{}: LOSS reply", self.label()));
+        let compute = cur.f64()?;
+        let n = cur.u64()? as usize;
+        ensure!(n <= 1 << 24, "{}: implausible loss count {n}", self.label());
+        let mut pairs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let idx = cur.u64()?;
+            let loss = cur.f64()?;
+            pairs.push((idx, loss));
+        }
+        cur.finish()?;
+        Ok(PlanOutcome::Loss(pairs, compute, (wall - compute).max(0.0)))
+    }
+}
+
+fn decode_fail_body(body: &[u8], label: &str) -> Result<String> {
+    let mut cur = Cur::new(body, format!("{label}: FAIL reply"));
+    let msg = cur.str_()?;
+    cur.finish()?;
+    Ok(msg)
+}
+
+/// The coordinator's set of remote workers: broadcast mutations, plan
+/// fan-out with degraded-mode re-partitioning, liveness bookkeeping, and
+/// round-trip-latency accounting.
+pub struct RemotePool {
+    workers: Vec<WorkerClient>,
+    next_req: u64,
+    rt_secs: f64,
+}
+
+impl RemotePool {
+    /// Connect to and `INIT` every worker. Startup is strict — a worker
+    /// that cannot be initialized is a named hard error, not a degraded
+    /// start (degradation is for failures *mid-run*).
+    pub fn connect(opts: &SocketOpts) -> Result<RemotePool> {
+        ensure!(
+            !opts.workers.is_empty(),
+            "socket transport needs at least one worker address (set the `workers` config \
+             key to a comma-separated list of host:port)"
+        );
+        let timeout_ms = resolve_net_timeout_ms(opts.timeout_ms)?;
+        let retries = resolve_net_retries(opts.retries)?;
+        let mut pool = RemotePool { workers: Vec::new(), next_req: 1, rt_secs: 0.0 };
+        let n = opts.workers.len();
+        for (i, addr) in opts.workers.iter().enumerate() {
+            let mut w = WorkerClient::new(addr, i, timeout_ms, retries);
+            let req = pool.fresh_req();
+            let mut p = Vec::new();
+            put_u64(&mut p, req);
+            put_str(&mut p, &opts.model);
+            put_str(&mut p, &opts.precision.to_string());
+            put_str(&mut p, &opts.artifact_dir);
+            put_str(&mut p, &opts.faults);
+            put_u32(&mut p, i as u32);
+            put_u32(&mut p, n as u32);
+            w.call_ok(T_INIT, req, &p)
+                .with_context(|| format!("initializing shard {i} worker at '{addr}'"))?;
+            pool.workers.push(w);
+        }
+        Ok(pool)
+    }
+
+    fn fresh_req(&mut self) -> u64 {
+        let r = self.next_req;
+        self.next_req += 1;
+        r
+    }
+
+    /// Workers configured at startup (the pool's shard count).
+    pub fn total(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Workers still considered alive.
+    pub fn live(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// Drain the accumulated transport round-trip time (seconds).
+    pub fn take_rt(&mut self) -> f64 {
+        std::mem::take(&mut self.rt_secs)
+    }
+
+    fn mark_dead(&mut self, i: usize, why: &str) {
+        if !self.workers[i].alive {
+            return;
+        }
+        self.workers[i].alive = false;
+        self.workers[i].stream = None;
+        let live = self.live();
+        // the degradation marker CI greps for — keep the wording stable
+        crate::info!(
+            "shard {} lost, continuing with {} shards ({})",
+            self.workers[i].shard,
+            live,
+            why
+        );
+    }
+
+    fn ensure_some_alive(&self, what: &str) -> Result<()> {
+        ensure!(
+            self.live() > 0,
+            "all {} socket shard workers are dead ({what} cannot proceed); restart the \
+             workers and resume from the last checkpoint",
+            self.workers.len()
+        );
+        Ok(())
+    }
+
+    /// Broadcast one mutation to every live worker. A worker that fails
+    /// after bounded retries is declared dead (it lost lockstep and can
+    /// never rejoin this run); losing the *last* worker is a hard error.
+    fn broadcast(&mut self, what: &str, tag: [u8; 4], body: &[u8]) -> Result<()> {
+        for i in 0..self.workers.len() {
+            if !self.workers[i].alive {
+                continue;
+            }
+            let req = self.fresh_req();
+            let mut p = Vec::with_capacity(8 + body.len());
+            put_u64(&mut p, req);
+            p.extend_from_slice(body);
+            if let Err(e) = self.workers[i].call_ok(tag, req, &p) {
+                self.mark_dead(i, &format!("{what} failed: {e:#}"));
+            }
+        }
+        self.ensure_some_alive(what)
+    }
+
+    pub fn upload(&mut self, id: u64, data: &[f32]) -> Result<()> {
+        let mut body = Vec::with_capacity(16 + data.len() * 4);
+        put_u64(&mut body, id);
+        put_f32s(&mut body, data);
+        self.broadcast("parameter upload", T_UPLD, &body)
+    }
+
+    /// Best-effort free (never marks a worker dead over garbage collection).
+    pub fn free(&mut self, ids: &[u64]) {
+        for i in 0..self.workers.len() {
+            if !self.workers[i].alive {
+                continue;
+            }
+            let req = self.fresh_req();
+            let mut p = Vec::new();
+            put_u64(&mut p, req);
+            put_u64s(&mut p, ids);
+            if let Err(e) = self.workers[i].call_ok(T_FREE, req, &p) {
+                self.mark_dead(i, &format!("buffer free failed: {e:#}"));
+            }
+        }
+    }
+
+    pub fn axpy_inplace(&mut self, id: u64, len: usize, seed: i32, coeff: f32) -> Result<()> {
+        let mut body = Vec::new();
+        put_u64(&mut body, id);
+        put_u64(&mut body, len as u64);
+        put_i32(&mut body, seed);
+        put_f32(&mut body, coeff);
+        self.broadcast("broadcast sweep", T_AXPY, &body)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn axpy_masked_inplace(
+        &mut self,
+        id: u64,
+        pref_id: u64,
+        tau: f32,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<()> {
+        let mut body = Vec::new();
+        put_u64(&mut body, id);
+        put_u64(&mut body, pref_id);
+        put_f32(&mut body, tau);
+        put_u64(&mut body, len as u64);
+        put_i32(&mut body, seed);
+        put_f32(&mut body, coeff);
+        self.broadcast("broadcast masked sweep", T_AXPM, &body)
+    }
+
+    pub fn axpy_alloc(&mut self, src: u64, dst: u64, len: usize, seed: i32, coeff: f32) -> Result<()> {
+        let mut body = Vec::new();
+        put_u64(&mut body, src);
+        put_u64(&mut body, dst);
+        put_u64(&mut body, len as u64);
+        put_i32(&mut body, seed);
+        put_f32(&mut body, coeff);
+        self.broadcast("allocating sweep", T_AXPN, &body)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn axpy_masked_alloc(
+        &mut self,
+        src: u64,
+        pref: u64,
+        dst: u64,
+        tau: f32,
+        len: usize,
+        seed: i32,
+        coeff: f32,
+    ) -> Result<()> {
+        let mut body = Vec::new();
+        put_u64(&mut body, src);
+        put_u64(&mut body, pref);
+        put_u64(&mut body, dst);
+        put_f32(&mut body, tau);
+        put_u64(&mut body, len as u64);
+        put_i32(&mut body, seed);
+        put_f32(&mut body, coeff);
+        self.broadcast("allocating masked sweep", T_AXMN, &body)
+    }
+
+    /// Explicit liveness probe of every worker (tests; also a cheap way to
+    /// fail fast before dispatching a plan into a dead pool).
+    pub fn ping_all(&mut self) -> Result<()> {
+        for i in 0..self.workers.len() {
+            if !self.workers[i].alive {
+                continue;
+            }
+            let req = self.fresh_req();
+            let mut p = Vec::new();
+            put_u64(&mut p, req);
+            let deadline = self.workers[i].control_deadline();
+            match self.workers[i].request(T_PING, req, &p, deadline) {
+                Ok((t, _)) if t == T_PONG => {}
+                Ok((t, _)) => bail!(
+                    "{}: unexpected reply '{}' to 'PING'",
+                    self.workers[i].label(),
+                    tag_name(&t)
+                ),
+                Err(e) => self.mark_dead(i, &format!("ping failed: {e:#}")),
+            }
+        }
+        self.ensure_some_alive("heartbeat ping")
+    }
+
+    /// Ask every worker to exit (tests / orderly teardown). Never fails —
+    /// a worker that is already gone is the desired end state.
+    pub fn shutdown(&mut self) {
+        for i in 0..self.workers.len() {
+            if !self.workers[i].alive {
+                continue;
+            }
+            let req = self.fresh_req();
+            let mut p = Vec::new();
+            put_u64(&mut p, req);
+            let _ = self.workers[i].call_ok(T_SHUT, req, &p);
+            self.workers[i].alive = false;
+            self.workers[i].stream = None;
+        }
+    }
+
+    /// Fan one plan out to the live workers and gather a complete
+    /// `(eval idx -> loss)` cover, degrading on worker death.
+    ///
+    /// Round 1 sends the plan to **every** live worker (workers with no
+    /// owned evals still walk the sweeps — that is what keeps them in
+    /// lockstep). If workers die, the still-missing evals are re-partitioned
+    /// over the survivors with the same [`crate::runtime::sharded::shard_owner`]
+    /// round-robin rule, each chosen survivor is first **resynced** to the
+    /// coordinator's pre-plan `snapshot` of the touched units (a survivor
+    /// has already walked the plan once and sits at the post-plan bits; the
+    /// f32 perturb/restore roundtrip is not a bitwise identity, so replaying
+    /// from the snapshot is what makes the re-run reproduce every eval
+    /// bit-exactly), and the plan is re-sent with only the missing evals.
+    /// The loop continues until the cover is complete or no workers remain.
+    pub fn run_plan(
+        &mut self,
+        plan: &StepPlan,
+        unit_ids: &[u64],
+        base_ids: &[u64],
+        peft: PeftMode,
+        batch: &Batch,
+        snapshot: &[(u64, Vec<f32>)],
+    ) -> Result<Vec<f64>> {
+        let n_evals = plan.evals.len();
+        // shared request body: everything between req_id and the eval list
+        let mut mid = Vec::new();
+        put_str(&mut mid, &peft.to_string());
+        put_u64s(&mut mid, unit_ids);
+        put_u64s(&mut mid, base_ids);
+        encode_batch_into(&mut mid, batch);
+        mid.extend_from_slice(&encode_plan(plan));
+
+        let mut got: Vec<Option<f64>> = vec![None; n_evals];
+        let mut first_round = true;
+        loop {
+            let live_idx: Vec<usize> = self
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.alive)
+                .map(|(i, _)| i)
+                .collect();
+            ensure!(
+                !live_idx.is_empty(),
+                "all {} socket shard workers are dead at step {} — restart the workers and \
+                 resume from the last checkpoint",
+                self.workers.len(),
+                plan.step + 1
+            );
+            // assign every still-missing eval round-robin over the live
+            // ranks — the same shard_owner rule as thread mode applied to
+            // the surviving set, so degradation is elastic re-sharding
+            let mut assign: Vec<Vec<usize>> = vec![Vec::new(); self.workers.len()];
+            for e in 0..n_evals {
+                if got[e].is_some() {
+                    continue;
+                }
+                let rank = crate::runtime::sharded::shard_owner(e, live_idx.len())?;
+                assign[live_idx[rank]].push(e);
+            }
+            let participants: Vec<usize> = if first_round {
+                live_idx.clone()
+            } else {
+                live_idx.iter().copied().filter(|&i| !assign[i].is_empty()).collect()
+            };
+            if !first_round {
+                for &i in &participants {
+                    for (id, data) in snapshot {
+                        let req = self.fresh_req();
+                        let mut p = Vec::with_capacity(24 + data.len() * 4);
+                        put_u64(&mut p, req);
+                        put_u64(&mut p, *id);
+                        put_f32s(&mut p, data);
+                        if let Err(e) = self.workers[i].call_ok(T_UPLD, req, &p) {
+                            self.mark_dead(i, &format!("pre-redispatch resync failed: {e:#}"));
+                            break;
+                        }
+                    }
+                }
+            }
+            // preassigned req ids + payloads, then parallel dispatch: each
+            // scoped thread owns a disjoint &mut WorkerClient
+            let mut jobs: HashMap<usize, (u64, Vec<u8>)> = HashMap::new();
+            for &i in &participants {
+                if !self.workers[i].alive {
+                    continue;
+                }
+                let req = self.fresh_req();
+                let mut p = Vec::with_capacity(16 + mid.len() + assign[i].len() * 8);
+                put_u64(&mut p, req);
+                p.extend_from_slice(&mid);
+                put_u64(&mut p, assign[i].len() as u64);
+                for &e in &assign[i] {
+                    put_u64(&mut p, e as u64);
+                }
+                jobs.insert(i, (req, p));
+            }
+            let results: Vec<(usize, Result<PlanOutcome>)> = std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .workers
+                    .iter_mut()
+                    .enumerate()
+                    .filter_map(|(i, w)| {
+                        jobs.remove(&i).map(|(req, p)| s.spawn(move || (i, w.plan_request(req, p))))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join()
+                            .unwrap_or_else(|_| (usize::MAX, Err(anyhow!("plan dispatch thread panicked"))))
+                    })
+                    .collect()
+            });
+
+            let mut round_rt: f64 = 0.0;
+            let mut any_dead = false;
+            for (i, r) in results {
+                ensure!(i != usize::MAX, "plan dispatch thread panicked");
+                match r {
+                    Ok(PlanOutcome::Loss(pairs, _compute, rt)) => {
+                        round_rt = round_rt.max(rt);
+                        for (idx, loss) in pairs {
+                            let idx = idx as usize;
+                            ensure!(
+                                idx < n_evals,
+                                "{}: returned out-of-range eval index {idx}",
+                                self.workers[i].label()
+                            );
+                            got[idx] = Some(loss);
+                        }
+                    }
+                    Ok(PlanOutcome::AppError(msg)) => {
+                        bail!("{}: {msg}", self.workers[i].label())
+                    }
+                    Err(e) => {
+                        self.mark_dead(i, &format!("plan dispatch failed: {e:#}"));
+                        any_dead = true;
+                    }
+                }
+            }
+            self.rt_secs += round_rt;
+            if got.iter().all(|g| g.is_some()) {
+                return Ok(got.into_iter().map(|g| g.unwrap()).collect());
+            }
+            // a live worker silently skipping an owned eval is a protocol
+            // bug, not a fault to degrade around
+            ensure!(any_dead, "sharded socket gather is missing an eval result");
+            first_round = false;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker side: `lezo worker --listen <addr>`
+// ---------------------------------------------------------------------------
+
+enum NetAction {
+    Send,
+    /// net-drop: the reply is cached but never sent; close the connection.
+    DropConn,
+    /// net-corrupt: send the reply with a flipped CRC byte, then close.
+    CorruptCrc,
+}
+
+struct WorkerState {
+    shard: usize,
+    shards: usize,
+    backend: Option<NativeBackend>,
+    bufs: HashMap<u64, NativeBuf>,
+    faults: crate::coordinator::faults::FaultPlan,
+    /// Once-only latches for injected faults (kind, 1-based step).
+    fired: HashSet<(&'static str, u64)>,
+    /// The idempotency cache: last `(req_id, reply tag, reply payload)`.
+    /// A retried request with the same id is served from here — executed
+    /// work is never executed twice.
+    last_reply: Option<(u64, [u8; 4], Vec<u8>)>,
+}
+
+fn parse_disp<T: std::str::FromStr>(s: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    s.parse::<T>().map_err(|e| anyhow!("{e}"))
+}
+
+fn build_worker_backend(model: &str, precision: Precision, artifact_dir: &str) -> Result<NativeBackend> {
+    let backend = if artifact_dir.is_empty() {
+        NativeBackend::preset(model)?.with_precision(precision)
+    } else {
+        // mirror the trainer's native replica construction so worker bits
+        // match the coordinator's local replica exactly
+        let dir = std::path::Path::new(artifact_dir);
+        let (spec, manifest) = crate::runtime::backend::resolve_model(model, dir)?;
+        let b = NativeBackend::new(spec)?.with_precision(precision);
+        match manifest {
+            Some(m) => b.with_artifacts(m)?,
+            None => b.with_checkpoint_dir(dir),
+        }
+    };
+    ensure!(
+        backend.supports_precision(precision),
+        "worker backend does not support precision {precision}"
+    );
+    Ok(backend)
+}
+
+/// Run a worker process: bind, announce the bound address on stdout
+/// (`worker listening on <addr>` — spawners parse this line), then serve
+/// coordinator connections one at a time until `SHUT` or the process is
+/// killed. State (replica, buffers, fault latches) lives in the process
+/// and survives reconnects; a fresh `INIT` resets it, so one worker can
+/// serve several runs in sequence (e.g. crash-then-resume tests).
+pub fn run_worker(listen: &str) -> Result<()> {
+    let listener = TcpListener::bind(listen)
+        .with_context(|| format!("worker cannot listen on '{listen}'"))?;
+    let addr = listener.local_addr()?;
+    println!("worker listening on {addr}");
+    std::io::stdout().flush().ok();
+    let mut state = WorkerState {
+        shard: 0,
+        shards: 0,
+        backend: None,
+        bufs: HashMap::new(),
+        faults: crate::coordinator::faults::FaultPlan::parse("")?,
+        fired: HashSet::new(),
+        last_reply: None,
+    };
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(v) => v,
+            Err(e) => {
+                crate::info!("worker at {addr}: accept failed: {e}");
+                continue;
+            }
+        };
+        match serve_conn(stream, &mut state) {
+            Ok(true) => {
+                crate::info!("worker at {addr}: shutdown requested");
+                return Ok(());
+            }
+            Ok(false) => {}
+            Err(e) => crate::info!("worker at {addr}: connection from {peer} ended: {e:#}"),
+        }
+    }
+}
+
+/// Serve one coordinator connection; `Ok(true)` means `SHUT` was received.
+fn serve_conn(mut stream: TcpStream, state: &mut WorkerState) -> Result<bool> {
+    stream.set_nodelay(true).ok();
+    // generous: a coordinator that goes silent this long is gone, and the
+    // worker must fall back to accept() rather than block forever
+    stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    write_hello(&mut stream)?;
+    expect_hello(&mut stream, "worker handshake")?;
+    loop {
+        let (tag, payload) = match read_frame_opt(&mut stream, "worker rx")? {
+            Some(f) => f,
+            None => return Ok(false), // coordinator closed cleanly
+        };
+        let mut cur = Cur::new(&payload, format!("worker rx '{}'", tag_name(&tag)));
+        let req_id = cur.u64()?;
+        if let Some((cached_id, rtag, rbody)) = &state.last_reply {
+            if *cached_id == req_id {
+                // a retried request: the original already executed — serve
+                // the cached reply, never execute twice
+                let (rtag, rbody) = (*rtag, rbody.clone());
+                write_frame(&mut stream, &rtag, &rbody)?;
+                continue;
+            }
+        }
+        if tag == T_SHUT {
+            let mut body = Vec::new();
+            put_u64(&mut body, req_id);
+            write_frame(&mut stream, &T_OKAY, &body)?;
+            return Ok(true);
+        }
+        let (rtag, rbody, action) = match handle_request(state, &tag, &mut cur, req_id, &stream) {
+            Ok(v) => v,
+            Err(e) => {
+                let mut body = Vec::new();
+                put_u64(&mut body, req_id);
+                put_str(&mut body, &format!("{e:#}"));
+                (T_FAIL, body, NetAction::Send)
+            }
+        };
+        // cache the CLEAN reply before any injected reply-path fault, so
+        // the coordinator's retry always recovers the true result
+        state.last_reply = Some((req_id, rtag, rbody.clone()));
+        match action {
+            NetAction::Send => write_frame(&mut stream, &rtag, &rbody)?,
+            NetAction::DropConn => {
+                crate::info!("worker shard {}: injected net-drop — closing without reply", state.shard);
+                return Ok(false);
+            }
+            NetAction::CorruptCrc => {
+                crate::info!("worker shard {}: injected net-corrupt — sending a torn frame", state.shard);
+                let mut frame = frame_bytes(&rtag, &rbody);
+                let n = frame.len();
+                frame[n - 1] ^= 0xFF; // flip a CRC byte: the receiver must reject
+                stream.write_all(&frame).ok();
+                return Ok(false);
+            }
+        }
+    }
+}
+
+fn handle_request(
+    state: &mut WorkerState,
+    tag: &[u8; 4],
+    cur: &mut Cur,
+    req_id: u64,
+    stream: &TcpStream,
+) -> Result<([u8; 4], Vec<u8>, NetAction)> {
+    use crate::runtime::sharded::{resolve_shared, resolve_shared_mut};
+    let mut ok = Vec::new();
+    put_u64(&mut ok, req_id);
+    match *tag {
+        T_PING => Ok((T_PONG, ok, NetAction::Send)),
+        T_INIT => {
+            let model = cur.str_()?;
+            let precision: Precision = parse_disp(&cur.str_()?)?;
+            let artifact_dir = cur.str_()?;
+            let faults = cur.str_()?;
+            let shard = cur.u32()? as usize;
+            let shards = cur.u32()? as usize;
+            let backend = build_worker_backend(&model, precision, &artifact_dir)?;
+            state.backend = Some(backend);
+            state.bufs.clear();
+            state.faults = crate::coordinator::faults::FaultPlan::parse(&faults)?;
+            state.fired.clear();
+            state.last_reply = None;
+            state.shard = shard;
+            state.shards = shards;
+            crate::info!("worker: initialized as shard {shard}/{shards} for model '{model}' ({precision})");
+            Ok((T_OKAY, ok, NetAction::Send))
+        }
+        T_UPLD => {
+            let id = cur.u64()?;
+            let data = cur.f32s()?;
+            let backend =
+                state.backend.as_ref().ok_or_else(|| anyhow!("worker received UPLD before INIT"))?;
+            let buf = backend.upload(&data)?;
+            state.bufs.insert(id, buf);
+            Ok((T_OKAY, ok, NetAction::Send))
+        }
+        T_FREE => {
+            for id in cur.u64s()? {
+                state.bufs.remove(&id);
+            }
+            Ok((T_OKAY, ok, NetAction::Send))
+        }
+        T_AXPY => {
+            let id = cur.u64()?;
+            let len = cur.u64()? as usize;
+            let seed = cur.i32()?;
+            let coeff = cur.f32()?;
+            let WorkerState { backend, bufs, .. } = state;
+            let backend = backend.as_ref().ok_or_else(|| anyhow!("worker received AXPY before INIT"))?;
+            backend.zo_axpy_inplace(resolve_shared_mut(bufs, id)?, len, seed, coeff)?;
+            Ok((T_OKAY, ok, NetAction::Send))
+        }
+        T_AXPM => {
+            let id = cur.u64()?;
+            let pid = cur.u64()?;
+            let tau = cur.f32()?;
+            let len = cur.u64()? as usize;
+            let seed = cur.i32()?;
+            let coeff = cur.f32()?;
+            let WorkerState { backend, bufs, .. } = state;
+            let backend = backend.as_ref().ok_or_else(|| anyhow!("worker received AXPM before INIT"))?;
+            // two ids into one map: copy the preference buffer around the &mut
+            let pref_copy = resolve_shared(bufs, pid)?.data().to_vec();
+            let pref_buf = NativeBuf::from(pref_copy);
+            backend.zo_axpy_masked_inplace(resolve_shared_mut(bufs, id)?, &pref_buf, tau, len, seed, coeff)?;
+            Ok((T_OKAY, ok, NetAction::Send))
+        }
+        T_AXPN => {
+            let src = cur.u64()?;
+            let dst = cur.u64()?;
+            let len = cur.u64()? as usize;
+            let seed = cur.i32()?;
+            let coeff = cur.f32()?;
+            let WorkerState { backend, bufs, .. } = state;
+            let backend = backend.as_ref().ok_or_else(|| anyhow!("worker received AXPN before INIT"))?;
+            let out = backend.zo_axpy(resolve_shared(bufs, src)?, len, seed, coeff)?;
+            bufs.insert(dst, out);
+            Ok((T_OKAY, ok, NetAction::Send))
+        }
+        T_AXMN => {
+            let src = cur.u64()?;
+            let pref = cur.u64()?;
+            let dst = cur.u64()?;
+            let tau = cur.f32()?;
+            let len = cur.u64()? as usize;
+            let seed = cur.i32()?;
+            let coeff = cur.f32()?;
+            let WorkerState { backend, bufs, .. } = state;
+            let backend = backend.as_ref().ok_or_else(|| anyhow!("worker received AXMN before INIT"))?;
+            let (u, p) = (resolve_shared(bufs, src)?, resolve_shared(bufs, pref)?);
+            let out = backend.zo_axpy_masked(u, p, tau, len, seed, coeff)?;
+            bufs.insert(dst, out);
+            Ok((T_OKAY, ok, NetAction::Send))
+        }
+        T_PLAN => handle_plan(state, cur, req_id, stream),
+        _ => bail!("unknown request tag '{}'", tag_name(tag)),
+    }
+}
+
+fn handle_plan(
+    state: &mut WorkerState,
+    cur: &mut Cur,
+    req_id: u64,
+    stream: &TcpStream,
+) -> Result<([u8; 4], Vec<u8>, NetAction)> {
+    let peft: PeftMode = parse_disp(&cur.str_()?)?;
+    let unit_ids = cur.u64s()?;
+    let base_ids = cur.u64s()?;
+    let batch = decode_batch(cur)?;
+    let plan = decode_plan(cur)?;
+    let n = cur.u64()? as usize;
+    ensure!(n <= 1 << 24, "implausible owned-eval count {n}");
+    let mut owned = BTreeSet::new();
+    for _ in 0..n {
+        owned.insert(cur.u64()? as usize);
+    }
+    let s1 = plan.step + 1; // the faults grammar is 1-based
+
+    // worker-crash@K:shard — die at plan receipt, before any work
+    if state.faults.worker_crash_at(s1, state.shard) && state.fired.insert(("worker-crash", s1)) {
+        eprintln!("[lezo] worker shard {}: injected worker-crash at step {s1} — exiting", state.shard);
+        std::process::exit(3);
+    }
+    // net-delay@K:ms — stall before compute and before heartbeats start,
+    // so a delay longer than the coordinator timeout looks like a dead peer
+    if let Some(ms) = state.faults.net_delay_at(s1) {
+        if state.fired.insert(("net-delay", s1)) {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+
+    let WorkerState { backend, bufs, .. } = state;
+    let backend = backend.as_ref().ok_or_else(|| anyhow!("worker received PLAN before INIT"))?;
+
+    // compute under a heartbeat: HBEA frames every ~200ms keep the
+    // coordinator's read timeout from declaring us dead during long evals
+    let sw = crate::util::Stopwatch::start();
+    let done = AtomicBool::new(false);
+    let hb_stream = stream.try_clone().ok();
+    let gathered = std::thread::scope(|s| {
+        if let Some(mut hb) = hb_stream {
+            let done = &done;
+            s.spawn(move || loop {
+                for _ in 0..HEARTBEAT_EVERY_TICKS {
+                    if done.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(HEARTBEAT_TICK_MS));
+                }
+                if write_frame(&mut hb, &T_HBEA, &[]).is_err() {
+                    return;
+                }
+            });
+        }
+        let r = crate::runtime::sharded::run_plan_on_replica(
+            backend, bufs, &plan, &unit_ids, &base_ids, peft, &batch, &owned,
+        );
+        done.store(true, Ordering::Relaxed);
+        r
+    });
+    let gathered = gathered?;
+
+    let mut body = Vec::with_capacity(24 + gathered.len() * 16);
+    put_u64(&mut body, req_id);
+    put_f64(&mut body, sw.secs());
+    put_u64(&mut body, gathered.len() as u64);
+    for (idx, loss) in &gathered {
+        put_u64(&mut body, *idx as u64);
+        put_f64(&mut body, *loss);
+    }
+    // reply-path faults, each injected exactly once
+    let action = if state.faults.net_drop_at(s1) && state.fired.insert(("net-drop", s1)) {
+        NetAction::DropConn
+    } else if state.faults.net_corrupt_at(s1) && state.fired.insert(("net-corrupt", s1)) {
+        NetAction::CorruptCrc
+    } else {
+        NetAction::Send
+    };
+    Ok((T_LOSS, body, action))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optim::ProbeSchedule;
+
+    fn sample_plan() -> StepPlan {
+        StepPlan {
+            step: 41,
+            schedule: ProbeSchedule::TwoSided,
+            phases: vec![
+                PlanPhase::Sweep(vec![
+                    SweepOp { unit: 0, len: 8, seed: 123, coeff: 1.0e-3 },
+                    SweepOp { unit: 2, len: 16, seed: -7, coeff: -2.0e-3 },
+                ]),
+                PlanPhase::Eval { idx: 0 },
+                PlanPhase::Sweep(vec![SweepOp { unit: 0, len: 8, seed: 123, coeff: -2.0e-3 }]),
+                PlanPhase::Eval { idx: 1 },
+            ],
+            evals: vec![EvalSpec { probe: 0 }, EvalSpec { probe: 1 }],
+            recovery: vec![
+                vec![SweepOp { unit: 0, len: 8, seed: 123, coeff: -1.0e-3 }],
+                vec![],
+            ],
+        }
+    }
+
+    #[test]
+    fn crc32_matches_known_answers() {
+        // the IEEE check value, same as the checkpoint envelope's CRC
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_round_trips() {
+        let payload = b"hello transport".to_vec();
+        let bytes = frame_bytes(&T_PLAN, &payload);
+        let (tag, got) = decode_frame(&bytes, "test").unwrap();
+        assert_eq!(tag, T_PLAN);
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn plan_codec_round_trips() {
+        let plan = sample_plan();
+        let bytes = encode_plan(&plan);
+        let mut cur = Cur::new(&bytes, "plan");
+        let got = decode_plan(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(got, plan);
+        // and the encoding is deterministic
+        assert_eq!(encode_plan(&got), bytes);
+    }
+
+    #[test]
+    fn batch_codec_round_trips() {
+        let seqs: Vec<Vec<u32>> = (0..3).map(|r| (0..6u32).map(|i| 10 + r + i).collect()).collect();
+        let batch = Batch::lm_batch(&seqs, 3, 8).unwrap();
+        let mut bytes = Vec::new();
+        encode_batch_into(&mut bytes, &batch);
+        let mut cur = Cur::new(&bytes, "batch");
+        let got = decode_batch(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(got, batch);
+    }
+
+    #[test]
+    fn cursor_truncation_names_the_offset() {
+        let bytes = [1u8, 2, 3];
+        let mut cur = Cur::new(&bytes, "toy");
+        cur.take(2).unwrap();
+        let err = cur.u64().unwrap_err().to_string();
+        assert!(err.contains("toy") && err.contains("byte offset 2"), "{err}");
+    }
+
+    #[test]
+    fn net_env_knobs_are_strict() {
+        // zero is rejected whichever side it comes from; skip quietly if an
+        // ambient env override is present (it would win over the argument)
+        if std::env::var("LEZO_NET_TIMEOUT_MS").unwrap_or_default().is_empty() {
+            let e = resolve_net_timeout_ms(0).unwrap_err().to_string();
+            assert!(e.contains("net_timeout_ms") && e.contains("LEZO_NET_TIMEOUT_MS"), "{e}");
+        }
+        if std::env::var("LEZO_NET_RETRIES").unwrap_or_default().is_empty() {
+            let e = resolve_net_retries(0).unwrap_err().to_string();
+            assert!(e.contains("net_retries") && e.contains("LEZO_NET_RETRIES"), "{e}");
+        }
+    }
+
+    #[test]
+    fn fail_body_round_trips() {
+        let mut body = Vec::new();
+        put_str(&mut body, "backend exploded");
+        assert_eq!(decode_fail_body(&body, "t").unwrap(), "backend exploded");
+    }
+}

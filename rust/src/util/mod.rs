@@ -59,28 +59,61 @@ pub fn retry_with_backoff<T>(
     label: &str,
     attempts: u32,
     base_ms: u64,
+    f: impl FnMut() -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    retry_with_backoff_deadline(label, attempts, base_ms, None, f)
+}
+
+/// [`retry_with_backoff`] with an overall deadline: retries stop once
+/// `deadline` passes, even if attempts remain, and a backoff sleep never
+/// overshoots it. `None` behaves exactly like the plain variant (attempt
+/// count is the only bound). Used by the socket transport so a wedged worker
+/// cannot stall the coordinator beyond its per-request budget, and by PJRT
+/// transfers so transient-retry loops are wall-clock bounded too.
+pub fn retry_with_backoff_deadline<T>(
+    label: &str,
+    attempts: u32,
+    base_ms: u64,
+    deadline: Option<Instant>,
     mut f: impl FnMut() -> anyhow::Result<T>,
 ) -> anyhow::Result<T> {
     debug_assert!(attempts >= 1);
     let mut delay_ms = base_ms;
     let mut last_err = None;
+    let mut tried = 0u32;
     for attempt in 1..=attempts.max(1) {
+        tried = attempt;
         match f() {
             Ok(v) => return Ok(v),
             Err(e) => {
-                if attempt < attempts {
+                let out_of_time = deadline.is_some_and(|d| Instant::now() >= d);
+                if attempt < attempts && !out_of_time {
+                    let mut sleep_ms = delay_ms;
+                    if let Some(d) = deadline {
+                        let left = d.saturating_duration_since(Instant::now()).as_millis() as u64;
+                        sleep_ms = sleep_ms.min(left);
+                    }
                     crate::info!(
-                        "{label}: attempt {attempt}/{attempts} failed ({e:#}); retrying in {delay_ms}ms"
+                        "{label}: attempt {attempt}/{attempts} failed ({e:#}); retrying in {sleep_ms}ms"
                     );
-                    std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+                    std::thread::sleep(std::time::Duration::from_millis(sleep_ms));
                     delay_ms = delay_ms.saturating_mul(2);
+                    last_err = Some(e);
+                } else {
+                    last_err = Some(if out_of_time && attempt < attempts {
+                        e.context(format!("{label}: deadline exceeded after {attempt} attempts"))
+                    } else {
+                        e
+                    });
+                    if out_of_time {
+                        break;
+                    }
                 }
-                last_err = Some(e);
             }
         }
     }
     let e = last_err.expect("attempts >= 1 implies at least one error");
-    Err(e.context(format!("{label}: failed after {} attempts", attempts.max(1))))
+    Err(e.context(format!("{label}: failed after {tried} attempts")))
 }
 
 /// Render an aligned text table (used by the bench harness to print the
@@ -154,6 +187,52 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("download buf 3") && msg.contains("3 attempts"), "{msg}");
         assert!(msg.contains("device gone"), "{msg}");
+    }
+
+    #[test]
+    fn retry_deadline_stops_early() {
+        let mut calls = 0;
+        let deadline = Some(Instant::now()); // already expired
+        let err = retry_with_backoff_deadline::<()>("poke worker", 10, 1000, deadline, || {
+            calls += 1;
+            anyhow::bail!("no route")
+        })
+        .unwrap_err();
+        // One attempt runs, then the deadline check halts the loop without
+        // sleeping through the remaining 9 backoffs.
+        assert_eq!(calls, 1);
+        let msg = format!("{err:#}");
+        assert!(msg.contains("poke worker") && msg.contains("deadline exceeded"), "{msg}");
+        assert!(msg.contains("no route"), "{msg}");
+    }
+
+    #[test]
+    fn retry_deadline_none_matches_plain_variant() {
+        let mut calls = 0;
+        let v = retry_with_backoff_deadline("upload", 4, 0, None, || {
+            calls += 1;
+            if calls < 2 {
+                anyhow::bail!("transient")
+            }
+            Ok(7)
+        })
+        .unwrap();
+        assert_eq!((v, calls), (7, 2));
+    }
+
+    #[test]
+    fn retry_deadline_caps_backoff_sleep() {
+        let deadline = Some(Instant::now() + std::time::Duration::from_millis(30));
+        let sw = Stopwatch::start();
+        let mut calls = 0;
+        let _ = retry_with_backoff_deadline::<()>("slow op", 3, 10_000, deadline, || {
+            calls += 1;
+            anyhow::bail!("still down")
+        });
+        // Without the cap the first backoff alone would sleep 10s; with it
+        // the whole loop must finish shortly after the 30ms deadline.
+        assert!(sw.secs() < 5.0, "took {}s", sw.secs());
+        assert!(calls >= 1);
     }
 
     #[test]

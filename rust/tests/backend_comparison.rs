@@ -10,9 +10,14 @@
 //!   across the optimizer zoo, both precisions, and LeZO active subsets;
 //! - trainer-level: whole `Trainer::run` reports, including a crash@K inside
 //!   a sharded run resumed under a *different* shard count (the fingerprint
-//!   deliberately excludes `shards`) against an uninterrupted native twin.
+//!   deliberately excludes `shards`) against an uninterrupted native twin;
+//! - process-level: `shard_transport=socket` against REAL `lezo worker`
+//!   processes spawned from the built binary — the socket trajectory must
+//!   match the thread and native ones bitwise, including under injected
+//!   transport faults, a worker killed mid-run (degraded continuation),
+//!   and a coordinator crash@K resumed onto the same workers.
 
-use lezo::config::{Method, RunConfig};
+use lezo::config::{Method, RunConfig, ShardTransport};
 use lezo::coordinator::metrics::StageTimes;
 use lezo::coordinator::optim::make_optimizer;
 use lezo::coordinator::spsa::{SpsaEngine, TunableUnits, ZoStep};
@@ -29,7 +34,15 @@ const CRASH: &str = "injected crash";
 /// Trainer-level runs resolve env overrides; any LEZO_* override would
 /// change (or re-route) the trajectory under comparison.
 fn env_overridden() -> bool {
-    for var in ["LEZO_FAULTS", "LEZO_ZO_OPT", "LEZO_PRECISION", "LEZO_BACKEND", "LEZO_SHARDS"] {
+    for var in [
+        "LEZO_FAULTS",
+        "LEZO_ZO_OPT",
+        "LEZO_PRECISION",
+        "LEZO_BACKEND",
+        "LEZO_SHARDS",
+        "LEZO_NET_TIMEOUT_MS",
+        "LEZO_NET_RETRIES",
+    ] {
         if std::env::var(var).map(|s| !s.is_empty()).unwrap_or(false) {
             eprintln!("SKIPPED: {var} is set and would override the run under test");
             return true;
@@ -359,6 +372,204 @@ fn sharded_io_err_on_save_then_crash_still_resumes_to_the_clean_run() {
     let resumed = run(&cfg).unwrap();
     assert_eq!(resumed.resumed_from, Some(2));
     assert_reports_bit_identical(&resumed, &clean, "sharded io-err@save + crash@2");
+}
+
+// ---------------------------------------------------------------------------
+// process level: shard_transport=socket against real spawned workers
+// ---------------------------------------------------------------------------
+
+/// A fleet of real `lezo worker --listen 127.0.0.1:0` processes spawned
+/// from the built binary. Each worker announces its ephemeral port on
+/// stdout; the guard kills whatever is still alive on drop. Workers are
+/// long-lived services: one fleet serves many runs in sequence, because
+/// every run's `INIT` resets worker state.
+struct WorkerFleet {
+    procs: Vec<std::process::Child>,
+    addrs: Vec<String>,
+}
+
+impl WorkerFleet {
+    fn spawn(n: usize) -> WorkerFleet {
+        use std::io::BufRead;
+        let exe = env!("CARGO_BIN_EXE_lezo");
+        let mut procs = Vec::new();
+        let mut addrs = Vec::new();
+        for _ in 0..n {
+            let mut child = std::process::Command::new(exe)
+                .args(["worker", "--listen", "127.0.0.1:0"])
+                .stdout(std::process::Stdio::piped())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .expect("spawning `lezo worker` from the built binary");
+            let stdout = child.stdout.take().unwrap();
+            let mut line = String::new();
+            std::io::BufReader::new(stdout).read_line(&mut line).unwrap();
+            let addr = line
+                .trim()
+                .strip_prefix("worker listening on ")
+                .unwrap_or_else(|| panic!("unexpected worker banner {line:?}"))
+                .to_string();
+            procs.push(child);
+            addrs.push(addr);
+        }
+        WorkerFleet { procs, addrs }
+    }
+
+    /// The comma-joined value for the `workers` config key.
+    fn workers_key(&self) -> String {
+        self.addrs.join(",")
+    }
+}
+
+impl Drop for WorkerFleet {
+    fn drop(&mut self) {
+        for c in &mut self.procs {
+            c.kill().ok();
+            c.wait().ok();
+        }
+    }
+}
+
+/// `nano_cfg` wired for socket transport against `fleet`.
+fn socket_cfg(tag: &str, fleet: &WorkerFleet) -> RunConfig {
+    let mut cfg = nano_cfg(tag);
+    cfg.backend = BackendKind::Sharded;
+    cfg.shards = fleet.addrs.len();
+    cfg.shard_transport = ShardTransport::Socket;
+    cfg.workers = fleet.workers_key();
+    cfg
+}
+
+#[test]
+fn socket_trainer_matches_thread_and_native_across_zoo_and_precisions() {
+    // the tentpole acceptance matrix: {zo-sgd, zo-adam, fzoo} x {f32, bf16}
+    // under LeZO sparsity (nano_cfg is method=lezo, drop_layers=1), each
+    // cell run three ways — native, in-process thread shards, and socket
+    // shards over real worker processes — all three bitwise identical
+    if env_overridden() {
+        return;
+    }
+    let fleet = WorkerFleet::spawn(2);
+    for kind in [ZoOptKind::Sgd, ZoOptKind::Adam, ZoOptKind::Fzoo] {
+        for precision in [Precision::F32, Precision::Bf16] {
+            let cell = format!("{kind}/{precision}");
+            let tag = cell.replace(['-', '/'], "_");
+            let mut cfg = nano_cfg(&format!("skt_nat_{tag}"));
+            cfg.zo_opt = kind;
+            cfg.precision = precision;
+            let native = run(&cfg).unwrap();
+
+            let mut cfg = nano_cfg(&format!("skt_thr_{tag}"));
+            cfg.zo_opt = kind;
+            cfg.precision = precision;
+            cfg.backend = BackendKind::Sharded;
+            cfg.shards = 2;
+            let thread = run(&cfg).unwrap();
+            assert_reports_bit_identical(&thread, &native, &format!("{cell} thread"));
+
+            let mut cfg = socket_cfg(&format!("skt_skt_{tag}"), &fleet);
+            cfg.zo_opt = kind;
+            cfg.precision = precision;
+            let socket = run(&cfg).unwrap();
+            assert_eq!(socket.backend, "sharded");
+            assert_reports_bit_identical(&socket, &native, &format!("{cell} socket"));
+        }
+    }
+}
+
+#[test]
+fn socket_worker_killed_mid_run_degrades_and_still_matches_native() {
+    // worker-crash@2:1 kills the shard-1 process at step 2's plan receipt.
+    // The coordinator must detect the death within its bounded retries,
+    // re-partition the remaining evals over the survivor, and finish on
+    // the EXACT native trajectory — degradation is a latency event, never
+    // a numerics event
+    if env_overridden() {
+        return;
+    }
+    let native = run(&nano_cfg("skt_kill_native")).unwrap();
+
+    let fleet = WorkerFleet::spawn(2);
+    let mut cfg = socket_cfg("skt_kill", &fleet);
+    cfg.faults = "worker-crash@2:1".into();
+    cfg.net_timeout_ms = 2_000;
+    let degraded = run(&cfg).unwrap();
+    assert_reports_bit_identical(&degraded, &native, "worker killed at step 2");
+
+    // the shard-1 process really died with the injected exit code
+    let mut fleet = fleet;
+    let status = fleet.procs[1]
+        .wait()
+        .expect("shard 1 must have exited after the injected worker-crash");
+    assert_eq!(status.code(), Some(3), "worker-crash exits with code 3");
+}
+
+#[test]
+fn socket_transport_faults_recover_within_retries_bitwise() {
+    // one run absorbing all three wire faults: a swallowed reply at step 2,
+    // a stalled (but in-budget) reply at step 3, and a CRC-corrupted reply
+    // at step 4. Every recovery is an idempotent resend served from the
+    // worker's reply cache, so the trajectory is untouched
+    if env_overridden() {
+        return;
+    }
+    let native = run(&nano_cfg("skt_net_native")).unwrap();
+
+    let fleet = WorkerFleet::spawn(2);
+    let mut cfg = socket_cfg("skt_net", &fleet);
+    cfg.faults = "net-drop@2,net-delay@3:100,net-corrupt@4".into();
+    let recovered = run(&cfg).unwrap();
+    assert_reports_bit_identical(&recovered, &native, "net-drop + net-delay + net-corrupt");
+}
+
+#[test]
+fn socket_delay_beyond_timeout_still_lands_on_the_native_trajectory() {
+    // a stall longer than net_timeout_ms looks exactly like a dead peer.
+    // Whether the coordinator's retries reach the worker's cached reply or
+    // exhaust and degrade to the survivor, the answer must be the same
+    // bits — that invariance is what makes the timeout knob safe to tune
+    if env_overridden() {
+        return;
+    }
+    let native = run(&nano_cfg("skt_slow_native")).unwrap();
+
+    let fleet = WorkerFleet::spawn(2);
+    let mut cfg = socket_cfg("skt_slow", &fleet);
+    cfg.faults = "net-delay@2:600".into();
+    cfg.net_timeout_ms = 250;
+    cfg.net_retries = 6;
+    let slow = run(&cfg).unwrap();
+    assert_reports_bit_identical(&slow, &native, "delay beyond timeout");
+}
+
+#[test]
+fn socket_crash_resume_composes_and_reuses_the_same_workers() {
+    // robustness features compose: a coordinator crash@2 under socket
+    // transport leaves a resumable state; the resumed run re-INITs the
+    // SAME still-running worker processes and completes on the clean
+    // native trajectory. Also proves a worker fleet survives its
+    // coordinator dying mid-run
+    if env_overridden() {
+        return;
+    }
+    let mut clean_cfg = nano_cfg("skt_crash_clean");
+    clean_cfg.save_every = 1;
+    let clean = run(&clean_cfg).unwrap();
+
+    let fleet = WorkerFleet::spawn(2);
+    let mut cfg = socket_cfg("skt_crash", &fleet);
+    cfg.save_every = 1;
+    cfg.faults = "crash@2".into();
+    let err = run(&cfg).unwrap_err().to_string();
+    assert!(err.contains(CRASH), "{err}");
+    let state = PathBuf::from(cfg.artifact_dir()).join("train_state.ckpt");
+    assert!(state.exists(), "a resumable state must exist after the crash");
+
+    cfg.faults.clear();
+    let resumed = run(&cfg).unwrap();
+    assert_eq!(resumed.resumed_from, Some(2));
+    assert_reports_bit_identical(&resumed, &clean, "socket crash@2 + resume");
+    assert!(!state.exists(), "a completed run must delete its resume state");
 }
 
 #[test]

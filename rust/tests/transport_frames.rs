@@ -1,0 +1,280 @@
+//! Wire-protocol conformance tests for the socket shard transport
+//! (`runtime/transport.rs`): the frame envelope, the handshake, and the
+//! StepPlan/Batch codecs.
+//!
+//! The failure-policy contract under test is "no silent wrong answers":
+//! a frame truncated at ANY byte boundary and a frame corrupted at ANY
+//! payload or CRC byte must surface as a named error — never as a
+//! successfully decoded frame. The serialization determinism test is the
+//! kernel-twin analogue for the wire: the encoded bytes of a [`StepPlan`]
+//! must not depend on the worker-thread count, because socket-mode
+//! bitwise identity rests on every replica receiving identical plans.
+//!
+//! [`StepPlan`]: lezo::runtime::plan::StepPlan
+
+use lezo::coordinator::optim::ProbeSchedule;
+use lezo::coordinator::spsa::{SpsaEngine, TunableUnits};
+use lezo::data::batch::Batch;
+use lezo::runtime::backend::Backend;
+use lezo::runtime::native::parallel::with_threads;
+use lezo::runtime::plan::{PlanPhase, StepPlan};
+use lezo::runtime::transport::{
+    crc32, decode_batch, decode_frame, decode_plan, encode_batch_into, encode_plan, expect_hello,
+    frame_bytes, read_frame, read_frame_opt, write_frame, write_hello, Cur, MAX_FRAME, T_HBEA,
+    T_LOSS, T_PLAN, WIRE_MAGIC, WIRE_VERSION,
+};
+use lezo::runtime::NativeBackend;
+use std::io::Cursor;
+
+/// Deterministic junk payload (no RNG needed — the envelope is agnostic
+/// to payload content, only length and bytes matter).
+fn payload(n: usize) -> Vec<u8> {
+    (0..n).map(|i| (i as u32).wrapping_mul(2_654_435_761) as u8).collect()
+}
+
+// ---------------------------------------------------------------------------
+// envelope: round-trip property over sizes and tags
+// ---------------------------------------------------------------------------
+
+#[test]
+fn frame_round_trips_across_sizes_and_tags() {
+    for &n in &[0usize, 1, 3, 4, 7, 8, 12, 255, 256, 1024, 65_537] {
+        for tag in [T_PLAN, T_LOSS, T_HBEA] {
+            let p = payload(n);
+            let bytes = frame_bytes(&tag, &p);
+            assert_eq!(bytes.len(), 4 + 8 + n + 4, "envelope overhead is fixed");
+
+            // pure slice decode
+            let (got_tag, got) = decode_frame(&bytes, "rt").unwrap();
+            assert_eq!(got_tag, tag);
+            assert_eq!(got, p);
+
+            // stream write -> stream read
+            let mut wire = Vec::new();
+            write_frame(&mut wire, &tag, &p).unwrap();
+            assert_eq!(wire, bytes, "write_frame emits exactly frame_bytes");
+            let mut r = Cursor::new(&wire);
+            let (got_tag, got) = read_frame(&mut r, "rt").unwrap();
+            assert_eq!((got_tag, got), (tag, p));
+        }
+    }
+}
+
+#[test]
+fn back_to_back_frames_read_cleanly_then_eof_is_none() {
+    let mut wire = Vec::new();
+    write_frame(&mut wire, &T_PLAN, &payload(9)).unwrap();
+    write_frame(&mut wire, &T_LOSS, &payload(0)).unwrap();
+    let mut r = Cursor::new(&wire);
+    assert_eq!(read_frame_opt(&mut r, "seq").unwrap().unwrap().0, T_PLAN);
+    assert_eq!(read_frame_opt(&mut r, "seq").unwrap().unwrap().0, T_LOSS);
+    // a close at a frame boundary is clean (Ok(None)), not an error
+    assert!(read_frame_opt(&mut r, "seq").unwrap().is_none());
+    // but a caller awaiting a reply treats it as a named error
+    let mut r = Cursor::new(&wire[wire.len()..]);
+    let e = read_frame(&mut r, "reply wait").unwrap_err().to_string();
+    assert!(e.contains("reply wait") && e.contains("closed by peer"), "{e}");
+}
+
+// ---------------------------------------------------------------------------
+// truncation: EVERY strict prefix of a valid frame must be rejected
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncation_at_every_byte_boundary_is_a_named_error() {
+    let frame = frame_bytes(&T_PLAN, &payload(21)); // 37 bytes total
+    for cut in 0..frame.len() {
+        let err = decode_frame(&frame[..cut], "trunc")
+            .expect_err(&format!("a {cut}-byte prefix of a {}-byte frame decoded", frame.len()));
+        let msg = err.to_string();
+        assert!(msg.contains("trunc"), "error must carry the caller label: {msg}");
+        assert!(
+            msg.contains("truncated at byte offset"),
+            "truncation at cut {cut} must name the offset: {msg}"
+        );
+    }
+    // and the stream reader distinguishes the three loss sites by name
+    let header_cut = &frame[..7]; // mid-header
+    let e = read_frame_opt(&mut Cursor::new(header_cut), "rx").unwrap_err().to_string();
+    assert!(e.contains("mid-frame header"), "{e}");
+    let payload_cut = &frame[..12 + 10]; // mid-payload
+    let e = read_frame_opt(&mut Cursor::new(payload_cut), "rx").unwrap_err().to_string();
+    assert!(e.contains("mid-payload"), "{e}");
+    let crc_cut = &frame[..frame.len() - 2]; // mid-CRC
+    let e = read_frame_opt(&mut Cursor::new(crc_cut), "rx").unwrap_err().to_string();
+    assert!(e.contains("before CRC"), "{e}");
+}
+
+// ---------------------------------------------------------------------------
+// corruption: a flipped byte in payload or CRC must fail the checksum
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corruption_at_every_payload_and_crc_byte_is_rejected() {
+    let p = payload(33);
+    let frame = frame_bytes(&T_LOSS, &p);
+    let payload_start = 12;
+    // every payload byte and every stored-CRC byte, every single-bit flip
+    // of the byte would do — 0xFF flips all eight, the strongest smoke
+    for i in payload_start..frame.len() {
+        let mut bad = frame.clone();
+        bad[i] ^= 0xFF;
+        let err = decode_frame(&bad, "crc").expect_err(&format!("flip at byte {i} decoded"));
+        let msg = err.to_string();
+        assert!(msg.contains("CRC mismatch"), "flip at byte {i}: {msg}");
+        assert!(msg.contains("LOSS"), "error names the frame tag: {msg}");
+        // the stream reader agrees byte-for-byte with the slice decoder
+        let e = read_frame(&mut Cursor::new(&bad), "crc").unwrap_err().to_string();
+        assert!(e.contains("CRC mismatch"), "stream flip at byte {i}: {e}");
+    }
+}
+
+#[test]
+fn hostile_length_fields_are_capped_or_truncation_errors() {
+    let mut frame = frame_bytes(&T_PLAN, &payload(8));
+    // length far beyond the cap: rejected before any allocation
+    frame[4..12].copy_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+    let e = decode_frame(&frame, "cap").unwrap_err().to_string();
+    assert!(e.contains("exceeds") && e.contains("cap"), "{e}");
+    // length one past the available bytes: a truncation error, not a read
+    // past the end
+    let mut frame = frame_bytes(&T_PLAN, &payload(8));
+    frame[4..12].copy_from_slice(&9u64.to_le_bytes());
+    let e = decode_frame(&frame, "cap").unwrap_err().to_string();
+    assert!(e.contains("truncated at byte offset"), "{e}");
+}
+
+// ---------------------------------------------------------------------------
+// handshake: bad magic and version skew are distinct named rejections
+// ---------------------------------------------------------------------------
+
+#[test]
+fn handshake_rejects_version_mismatch_and_bad_magic() {
+    // our own hello is accepted
+    let mut hello = Vec::new();
+    write_hello(&mut hello).unwrap();
+    assert_eq!(&hello[..8], WIRE_MAGIC);
+    expect_hello(&mut Cursor::new(&hello), "self").unwrap();
+
+    // same magic, future version: the error names both versions
+    let mut skew = WIRE_MAGIC.to_vec();
+    skew.extend_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+    let e = expect_hello(&mut Cursor::new(&skew), "peer").unwrap_err().to_string();
+    assert!(
+        e.contains("wire version mismatch")
+            && e.contains(&format!("v{}", WIRE_VERSION + 1))
+            && e.contains(&format!("v{WIRE_VERSION}")),
+        "{e}"
+    );
+
+    // wrong magic: an http client, not an old lezo
+    let mut junk = b"GET / HT".to_vec();
+    junk.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    let e = expect_hello(&mut Cursor::new(&junk), "peer").unwrap_err().to_string();
+    assert!(e.contains("not a lezo wire endpoint"), "{e}");
+
+    // a short hello is a named close, not a hang or a panic
+    let e = expect_hello(&mut Cursor::new(&hello[..5]), "peer").unwrap_err().to_string();
+    assert!(e.contains("closed during handshake"), "{e}");
+}
+
+#[test]
+fn crc_is_the_checkpoint_ieee_polynomial() {
+    // pinned so the wire and the checkpoint envelope can never drift apart
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    assert_eq!(crc32(b""), 0);
+}
+
+// ---------------------------------------------------------------------------
+// codecs: plan/batch round-trips consume every byte
+// ---------------------------------------------------------------------------
+
+fn build_plans(schedule: ProbeSchedule) -> Vec<StepPlan> {
+    let backend = NativeBackend::preset("opt-nano").unwrap();
+    let host = backend.initial_params("").unwrap().0;
+    let units = TunableUnits::from_host(&backend, &host).unwrap();
+    let engine = SpsaEngine::new(&backend, 1e-3, 7).unwrap();
+    let active: Vec<usize> = (0..units.n_units()).collect();
+    (0..4u64).map(|step| engine.step_plan(step, &units, &active, schedule).unwrap()).collect()
+}
+
+#[test]
+fn real_step_plans_round_trip_bitwise() {
+    for schedule in [ProbeSchedule::TwoSided, ProbeSchedule::OneSided { probes: 3 }] {
+        for plan in build_plans(schedule) {
+            let bytes = encode_plan(&plan);
+            let mut cur = Cur::new(&bytes, "plan");
+            let got = decode_plan(&mut cur).unwrap();
+            cur.finish().unwrap(); // no trailing bytes allowed
+            assert_eq!(got, plan);
+            assert_eq!(encode_plan(&got), bytes, "re-encoding is byte-stable");
+        }
+    }
+}
+
+#[test]
+fn truncated_plan_bytes_never_decode() {
+    let plan = &build_plans(ProbeSchedule::TwoSided)[0];
+    let bytes = encode_plan(plan);
+    for cut in 0..bytes.len() {
+        let mut cur = Cur::new(&bytes[..cut], "plan");
+        let ok = decode_plan(&mut cur).is_ok() && cur.finish().is_ok();
+        assert!(!ok, "a {cut}-byte prefix of a {}-byte plan decoded cleanly", bytes.len());
+    }
+}
+
+#[test]
+fn batch_round_trips_bitwise() {
+    let seqs: Vec<Vec<u32>> =
+        (0..5).map(|r| (0..12u32).map(|s| 20 + (r * 7 + s * 3) % 200).collect()).collect();
+    let batch = Batch::lm_batch(&seqs, 5, 16).unwrap();
+    let mut bytes = Vec::new();
+    encode_batch_into(&mut bytes, &batch);
+    let mut cur = Cur::new(&bytes, "batch");
+    let got = decode_batch(&mut cur).unwrap();
+    cur.finish().unwrap();
+    assert_eq!(got, batch);
+}
+
+// ---------------------------------------------------------------------------
+// determinism twin: plan bytes are identical across worker-thread counts
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over the encoded plan bytes — same digest idiom as
+/// `kernel_twins.rs`, so a mismatch prints one number, not two dumps.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[test]
+fn plan_serialization_is_thread_count_invariant() {
+    let digest_at = |threads: usize| -> Vec<u64> {
+        with_threads(threads, || {
+            let mut out = Vec::new();
+            for schedule in [ProbeSchedule::TwoSided, ProbeSchedule::OneSided { probes: 2 }] {
+                for plan in build_plans(schedule) {
+                    // sanity: the plan actually has sweep work in it
+                    assert!(plan
+                        .phases
+                        .iter()
+                        .any(|p| matches!(p, PlanPhase::Sweep(ops) if !ops.is_empty())));
+                    out.push(fnv1a(&encode_plan(&plan)));
+                }
+            }
+            out
+        })
+    };
+    let one = digest_at(1);
+    for threads in [2, 5] {
+        assert_eq!(
+            digest_at(threads),
+            one,
+            "encoded StepPlan bytes differ between 1 and {threads} worker threads"
+        );
+    }
+}
